@@ -1,0 +1,77 @@
+//! GNS cache tuning: sweep cache size × update period × policy and print
+//! accuracy, cache coverage, and transfer savings — the operational guide
+//! for deploying GNS (extends the paper's Table 6 with the policy axis).
+//!
+//!   cargo run --release --offline --example cache_sweep -- \
+//!       [--dataset products-s] [--scale 0.3] [--epochs 4]
+
+use gns::experiments::harness::{run_method, ExpOptions, Method};
+use gns::sampling::gns::{CachePolicy, GnsConfig};
+use gns::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let dataset = args.str_or("dataset", "products-s").to_string();
+    let opts = ExpOptions {
+        scale: args.f64_or("scale", 0.3),
+        epochs: args.usize_or("epochs", 4),
+        seed: args.u64_or("seed", 9),
+        ..Default::default()
+    };
+    println!(
+        "GNS cache sweep on {dataset} (x{}, {} epochs)\n",
+        opts.scale, opts.epochs
+    );
+    println!(
+        "{:<12} {:>7} {:>8} {:>8} {:>14} {:>14}",
+        "policy", "cache%", "period", "F1", "cached/batch", "saved/epoch"
+    );
+    for policy in [
+        CachePolicy::Degree,
+        CachePolicy::RandomWalk { fanouts: vec![5, 10, 15] },
+        CachePolicy::Uniform,
+    ] {
+        for &frac in &[0.01, 0.001] {
+            for &period in &[1usize, 5] {
+                let m = Method::Gns(GnsConfig {
+                    cache_fraction: frac,
+                    update_period: period,
+                    policy: policy.clone(),
+                    seed: opts.seed,
+                    ..Default::default()
+                });
+                let r = run_method(&dataset, &m, &opts)?;
+                let (cached, saved) = r
+                    .reports
+                    .last()
+                    .map(|rep| {
+                        (
+                            rep.avg_cached_inputs,
+                            rep.transfer.bytes_saved_by_cache,
+                        )
+                    })
+                    .unwrap_or((f64::NAN, 0));
+                let pname = match &policy {
+                    CachePolicy::Degree => "degree",
+                    CachePolicy::RandomWalk { .. } => "random-walk",
+                    CachePolicy::Uniform => "uniform",
+                };
+                println!(
+                    "{:<12} {:>7.2} {:>8} {:>8.4} {:>14.0} {:>14}",
+                    pname,
+                    100.0 * frac,
+                    period,
+                    r.test_f1,
+                    cached,
+                    gns::util::fmt_bytes(saved)
+                );
+            }
+        }
+    }
+    println!(
+        "\nReading: degree policy should dominate uniform; random-walk wins\n\
+         when the train split is small. Larger caches + shorter periods give\n\
+         more cached inputs; accuracy should be flat at 1% (paper Table 6)."
+    );
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Memory-regression check: RSS must stay flat across train steps.
+//!
+//! This caught a real bug: the xla crate's `execute(&[Literal])` leaks
+//! every input device buffer (see runtime/mod.rs). Run both modes:
+//!
+//!   cargo run --release --example memcheck lit    # literal create/drop
+//!   cargo run --release --example memcheck step   # train-step loop
+//!
+//! RSS is printed every 15 iterations; growth ⇒ regression.
+use gns::sampling::Sampler;
+fn main() -> anyhow::Result<()> {
+    let mode = std::env::args().nth(1).unwrap_or("lit".into());
+    let rss = || {
+        let s = std::fs::read_to_string("/proc/self/status").unwrap();
+        s.lines().find(|l| l.starts_with("VmRSS")).unwrap().to_string()
+    };
+    if mode == "lit" {
+        // literal create/drop loop: 200 x 5MB
+        for i in 0..200 {
+            let v = vec![0.5f32; 20000 * 64];
+            let lit = xla::Literal::vec1(&v).reshape(&[20000, 64])?;
+            std::hint::black_box(&lit);
+            if i % 50 == 0 { println!("{i}: {}", rss()); }
+        }
+        println!("end: {}", rss());
+    } else {
+        let rt = gns::runtime::Runtime::load_by_name("yelp")?;
+        let ds = gns::features::build_dataset("yelp-s", 0.4, 1);
+        let shapes = rt.meta.block_shapes();
+        let mut ns = gns::sampling::neighbor::NeighborSampler::new(std::sync::Arc::new(ds.graph.clone()), shapes, 1);
+        let mut state = rt.init_state(1);
+        let mut x0 = vec![0f32; rt.meta.level_sizes[0]*rt.meta.feature_dim];
+        let mb = ns.sample_batch(&ds.train[..256], &ds.labels)?;
+        let dim = ds.features.dim();
+        ds.features.slice_into(&mb.input_nodes, &mut x0[..mb.input_nodes.len()*dim]);
+        for i in 0..60 {
+            rt.train_step(&mut state, &mb, &x0, 3e-3)?;
+            if i % 15 == 0 { println!("{i}: {}", rss()); }
+        }
+        println!("end: {}", rss());
+    }
+    Ok(())
+}

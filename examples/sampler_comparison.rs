@@ -1,0 +1,65 @@
+//! Sampler zoo comparison: run all four methods on one dataset and print a
+//! side-by-side of accuracy, epoch time (both frames), mini-batch shape
+//! statistics, and failure modes.
+//!
+//!   cargo run --release --offline --example sampler_comparison -- \
+//!       [--dataset products-s] [--scale 0.4] [--epochs 3]
+
+use gns::experiments::harness::{run_method, ExpOptions, Method};
+use gns::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let dataset = args.str_or("dataset", "products-s").to_string();
+    let opts = ExpOptions {
+        scale: args.f64_or("scale", 0.4),
+        epochs: args.usize_or("epochs", 3),
+        seed: args.u64_or("seed", 5),
+        ..Default::default()
+    };
+    let methods = vec![
+        Method::Ns,
+        Method::Ladies(512),
+        Method::Ladies(5000),
+        Method::LazyGcn,
+        Method::gns_default(opts.seed),
+    ];
+    println!(
+        "comparing {} methods on {dataset} (x{}, {} epochs)\n",
+        methods.len(),
+        opts.scale,
+        opts.epochs
+    );
+    println!(
+        "{:<13} {:>7} {:>12} {:>10} {:>13} {:>10} {:>9}",
+        "method", "F1", "device-s/ep", "wall-s/ep", "inputs/batch", "isolated", "note"
+    );
+    for m in methods {
+        let r = run_method(&dataset, &m, &opts)?;
+        let (inputs, isolated) = r
+            .reports
+            .last()
+            .map(|rep| (rep.avg_input_nodes, rep.isolated_nodes))
+            .unwrap_or((f64::NAN, 0));
+        let note = r
+            .error
+            .as_deref()
+            .map(|e| if e.contains("OOM") { "OOM" } else { "error" })
+            .unwrap_or("");
+        println!(
+            "{:<13} {:>7.4} {:>12.3} {:>10.2} {:>13.0} {:>10} {:>9}",
+            m.label(),
+            r.test_f1,
+            r.epoch_time(),
+            r.wall_epoch_time(),
+            inputs,
+            isolated,
+            note
+        );
+    }
+    println!(
+        "\n(device-s = modeled T4 frame: copy @PCIe + compute @1.6 TFLOP/s;\n\
+         wall-s = measured on this CPU testbed. Both per epoch.)"
+    );
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! End-to-end validation driver (DESIGN.md §6): train 3-layer GraphSAGE on
+//! the OGBN-products analogue with both NS and GNS, long enough for real
+//! convergence, and report the loss/F1 curves plus the paper's headline
+//! comparisons (input-node reduction, transfer savings, epoch speedup).
+//!
+//!   cargo run --release --offline --example train_products -- \
+//!       [--scale 1.0] [--epochs 8] [--workers 1]
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use gns::experiments::harness::{run_method, ExpOptions, Method};
+use gns::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let opts = ExpOptions {
+        scale: args.f64_or("scale", 1.0),
+        epochs: args.usize_or("epochs", 8),
+        workers: args.usize_or("workers", 1),
+        seed: args.u64_or("seed", 3),
+        eval_batches: 8,
+        ..Default::default()
+    };
+    println!(
+        "=== end-to-end: products-s x{} | {} epochs | batch 256 | fanouts 5,10,15 ===\n",
+        opts.scale, opts.epochs
+    );
+
+    let mut summary: Vec<(String, f64, f64, f64)> = Vec::new();
+    for method in [Method::Ns, Method::gns_default(opts.seed)] {
+        let label = method.label();
+        println!("--- {label} ---");
+        let r = run_method("products-s", &method, &opts)?;
+        if let Some(e) = &r.error {
+            anyhow::bail!("{label} failed: {e}");
+        }
+        for rep in &r.reports {
+            println!(
+                "epoch {:>2}: loss {:.4}  train-acc {:.3}  val-F1 {:.3}  wall {:>6.2}s  device-frame {:>7.3}s  inputs {:.0} cached {:.0}",
+                rep.epoch,
+                rep.mean_loss,
+                rep.train_acc,
+                rep.val_f1,
+                rep.wall.as_secs_f64(),
+                rep.device_frame_secs(),
+                rep.avg_input_nodes,
+                rep.avg_cached_inputs,
+            );
+        }
+        println!("test F1: {:.4}", r.test_f1);
+        let last = r.reports.last().unwrap();
+        println!(
+            "transfer/epoch: h2d {}  saved-by-cache {}\n",
+            gns::util::fmt_bytes(last.transfer.h2d_bytes),
+            gns::util::fmt_bytes(last.transfer.bytes_saved_by_cache),
+        );
+        summary.push((
+            label,
+            r.test_f1,
+            r.epoch_time(),
+            last.avg_input_nodes,
+        ));
+    }
+
+    println!("=== summary (paper Table 3/4 shape) ===");
+    println!(
+        "{:<8} {:>8} {:>18} {:>14}",
+        "method", "F1", "epoch (device-s)", "inputs/batch"
+    );
+    for (label, f1, t, inputs) in &summary {
+        println!("{label:<8} {:>8.4} {:>18.3} {:>14.0}", f1, t, inputs);
+    }
+    if summary.len() == 2 {
+        let speedup = summary[0].2 / summary[1].2;
+        let reduction = summary[0].3 / summary[1].3;
+        println!(
+            "\nGNS vs NS: {speedup:.2}x faster epochs (device frame), {reduction:.1}x fewer input nodes, F1 delta {:+.4}",
+            summary[1].1 - summary[0].1
+        );
+    }
+    Ok(())
+}

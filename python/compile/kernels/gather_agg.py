@@ -1,0 +1,124 @@
+"""Layer-1 Pallas kernel: importance-weighted neighbor aggregation.
+
+This is the compute hot-spot of GNS mini-batch training: every GraphSAGE
+layer aggregates K sampled neighbors per output node, scaled by the
+importance-sampling coefficients of Section 3.4 of the paper,
+
+    out[v, :] = sum_k w[v, k] * h[idx[v, k], :].
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's bottleneck is a
+CPU->GPU feature copy followed by a sparse gather+mean on the GPU. On TPU
+the analogous schedule tiles the *output* rows into VMEM-resident blocks
+(BlockSpec over rows), streams the index/weight tiles alongside, and keeps
+the embedding table ``h`` in HBM-backed memory accessed by the gather. The
+weighted reduction over K is a small dense contraction that feeds the MXU
+matmul of the surrounding SAGE layer.
+
+The kernel MUST be run with interpret=True in this environment: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+interpret=True lowers to plain HLO, which is exactly what the AOT bridge
+(aot.py) needs.
+
+``gather_scaled_sum`` wraps the kernel in a jax.custom_vjp so the L2 model
+can be differentiated: pallas_call has no autodiff rule, so the backward
+pass is expressed against the reference semantics (a scatter-add for dh and
+a batched dot for dw — see kernels/ref.py). The forward pallas path and the
+reference are asserted allclose in python/tests/test_kernel.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Rows of the output processed per grid step. 128 aligns with the TPU
+# lane dimension; the row blocking is what bounds the VMEM working set.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _gather_agg_kernel(h_ref, idx_ref, w_ref, o_ref):
+    """One grid step: aggregate a [R, K] tile of neighbor lists.
+
+    h_ref:   [N_prev, D]  whole embedding table (HBM-resident on real HW).
+    idx_ref: [R, K]       this block's neighbor indices.
+    w_ref:   [R, K]       this block's importance coefficients.
+    o_ref:   [R, D]       output tile.
+    """
+    idx = idx_ref[...]
+    w = w_ref[...].astype(o_ref.dtype)
+    h = h_ref[...]
+    # [R, K, D] gather then weighted reduction over K. In interpret mode the
+    # gather lowers to an HLO gather; on TPU Mosaic this becomes a dynamic
+    # VMEM load per (row, k) with the reduction kept in registers.
+    g = jnp.take(h, idx, axis=0)
+    o_ref[...] = jnp.einsum("nk,nkd->nd", w, g).astype(o_ref.dtype)
+
+
+def gather_scaled_sum_pallas(h, idx, w, *, block_rows=DEFAULT_BLOCK_ROWS):
+    """Raw pallas_call wrapper (forward only, not differentiable)."""
+    n, k = idx.shape
+    d = h.shape[1]
+    rows = min(block_rows, n)
+    # Grid over row tiles; pad is unnecessary because BlockSpec index_map
+    # clamps — we require n % rows == 0 and pad at the caller otherwise.
+    if n % rows != 0:
+        pad = rows - n % rows
+        idx = jnp.pad(idx, ((0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+        out = gather_scaled_sum_pallas(h, idx, w, block_rows=rows)
+        return out[:n]
+    grid = (n // rows,)
+    return pl.pallas_call(
+        _gather_agg_kernel,
+        grid=grid,
+        in_specs=[
+            # Whole table every step: the gather indexes arbitrarily into it.
+            pl.BlockSpec(h.shape, lambda i: (0, 0)),
+            pl.BlockSpec((rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((rows, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), h.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(h, idx, w)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def gather_scaled_sum(h, idx, w):
+    """Differentiable importance-weighted aggregation (Pallas forward)."""
+    return gather_scaled_sum_pallas(h, idx, w)
+
+
+def _fwd(h, idx, w):
+    return gather_scaled_sum_pallas(h, idx, w), (h, idx, w)
+
+
+def _bwd(res, g_out):
+    h, idx, w = res
+    dh, dw = ref.gather_scaled_sum_bwd_ref(h, idx, w, g_out)
+    return dh, None, dw
+
+
+gather_scaled_sum.defvjp(_fwd, _bwd)
+
+
+def vmem_footprint_bytes(n_prev, d, k, *, block_rows=DEFAULT_BLOCK_ROWS,
+                         dtype_bytes=4, table_resident=True):
+    """Estimated VMEM working set of one grid step (EXPERIMENTS.md §Perf).
+
+    With table_resident=True the whole embedding table h is pinned in VMEM
+    alongside the row tile — valid for the padded level sizes of this
+    repo's model configs (≤ 12000×100 f32 ≈ 4.8 MiB). For giant input
+    levels the table must stay HBM-resident (table_resident=False) and the
+    gather streams rows; the tile cost is then independent of n_prev.
+    """
+    rows = min(block_rows, 1 << 30)
+    tile = rows * d * dtype_bytes          # out tile
+    tile += 2 * rows * k * dtype_bytes     # idx + w tiles
+    tile += rows * k * d * dtype_bytes     # gathered [R, K, D] intermediate
+    if table_resident:
+        tile += n_prev * d * dtype_bytes
+    return tile

@@ -1,0 +1,51 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the Pallas kernels are tested against
+(python/tests/test_kernel.py sweeps shapes/dtypes with hypothesis and
+asserts allclose). They are also used by the L2 model's custom-VJP
+backward pass where a scatter is cheaper to express in plain jnp.
+"""
+
+import jax.numpy as jnp
+
+
+def gather_scaled_sum_ref(h, idx, w):
+    """Importance-weighted neighbor aggregation (the GNS hot-spot).
+
+    out[v, :] = sum_k w[v, k] * h[idx[v, k], :]
+
+    Args:
+      h:   [N_prev, D] float  — previous-level node embeddings.
+      idx: [N, K]      int32  — neighbor indices into ``h`` (padding entries
+                                may point anywhere; they must carry w == 0).
+      w:   [N, K]      float  — importance-sampling coefficients; 0 for padding.
+
+    Returns:
+      [N, D] float — aggregated neighborhood embeddings.
+    """
+    g = jnp.take(h, idx, axis=0)  # [N, K, D]
+    return jnp.einsum("nk,nkd->nd", w.astype(h.dtype), g)
+
+
+def gather_scaled_sum_bwd_ref(h, idx, w, g_out):
+    """Reference VJP of gather_scaled_sum w.r.t. (h, w).
+
+    dh[j]   = sum_{(v,k): idx[v,k]==j} w[v,k] * g_out[v]
+    dw[v,k] = <g_out[v], h[idx[v,k]]>
+    """
+    n_prev, d = h.shape
+    contrib = w[..., None].astype(h.dtype) * g_out[:, None, :]  # [N, K, D]
+    dh = jnp.zeros((n_prev, d), h.dtype).at[idx.reshape(-1)].add(
+        contrib.reshape(-1, d)
+    )
+    gathered = jnp.take(h, idx, axis=0)  # [N, K, D]
+    dw = jnp.einsum("nkd,nd->nk", gathered, g_out).astype(w.dtype)
+    return dh, dw
+
+
+def sage_layer_ref(h_prev, self_idx, idx, w, weight, bias, relu=True):
+    """One GraphSAGE layer: concat(self, weighted-agg) -> affine -> relu."""
+    agg = gather_scaled_sum_ref(h_prev, idx, w)
+    h_self = jnp.take(h_prev, self_idx, axis=0)
+    z = jnp.concatenate([h_self, agg], axis=1) @ weight + bias
+    return jnp.maximum(z, 0.0) if relu else z

@@ -1,0 +1,264 @@
+"""Layer-2 JAX model: L-layer GraphSAGE over padded fixed-shape mini-batches.
+
+This is the compute graph the rust coordinator (L3) drives via PJRT. It is
+authored once in JAX, calls the Pallas aggregation kernel (L1) in every
+layer, and is AOT-lowered to HLO text by aot.py. Python never runs on the
+training path.
+
+Mini-batch block format (fixed shapes — the coordinator pads):
+
+  A mini-batch for an L-layer model consists of L+1 *levels* of nodes.
+  Level L holds the B target nodes; level 0 holds the input nodes whose raw
+  features are copied to the device. Level l-1 -> level l is one GraphSAGE
+  layer. For each layer l (1-based):
+
+    idx_l  [N_l, K_l] int32  — for each level-l node, K_l sampled-neighbor
+                               positions into the level-(l-1) arrays.
+                               Padding entries may point anywhere (use 0)
+                               but must carry w == 0.
+    w_l    [N_l, K_l] f32    — importance-sampling coefficients of GNS
+                               §3.4 (for plain NS: 1/k_v for real entries).
+                               The coordinator folds all normalization in,
+                               so the kernel computes a plain weighted sum.
+    self_l [N_l]      int32  — position of the node's own row in level l-1
+                               (every level-l node is also a level-(l-1)
+                               node by construction).
+
+  x0     [N_0, F] f32   — input features, assembled by L3 from the GPU
+                          cache (device-resident) + host slices.
+  labels [B] int32, label_mask [B] f32 — padded targets.
+
+Parameters per layer: W [2*D_{l-1}, D_l], b [D_l] (concat(self, agg)
+aggregator of GraphSAGE). ReLU between layers, the last layer emits class
+logits directly. Optimizer (Adam) lives *inside* the train-step graph so
+the device round-trips only mini-batch data, never parameters.
+"""
+
+import dataclasses
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gather_agg import gather_scaled_sum
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape/config information for one AOT artifact."""
+
+    name: str = "default"
+    num_layers: int = 3
+    feature_dim: int = 100
+    hidden_dim: int = 256
+    num_classes: int = 47
+    batch_size: int = 1000
+    # level_sizes[0] = input-node capacity ... level_sizes[L] = batch_size.
+    level_sizes: Tuple[int, ...] = (60000, 12000, 1024, 1000)
+    # fanouts[l-1] = K_l for layer l (level l-1 -> level l).
+    fanouts: Tuple[int, ...] = (5, 10, 15)
+    use_pallas: bool = True
+
+    def __post_init__(self):
+        assert len(self.level_sizes) == self.num_layers + 1
+        assert len(self.fanouts) == self.num_layers
+        assert self.level_sizes[-1] == self.batch_size
+
+    def layer_dims(self) -> List[Tuple[int, int]]:
+        dims = [self.feature_dim] + [self.hidden_dim] * (self.num_layers - 1)
+        dims.append(self.num_classes)
+        return [(dims[i], dims[i + 1]) for i in range(self.num_layers)]
+
+    def to_meta(self) -> dict:
+        return {
+            "name": self.name,
+            "num_layers": self.num_layers,
+            "feature_dim": self.feature_dim,
+            "hidden_dim": self.hidden_dim,
+            "num_classes": self.num_classes,
+            "batch_size": self.batch_size,
+            "level_sizes": list(self.level_sizes),
+            "fanouts": list(self.fanouts),
+        }
+
+
+def init_params(cfg: ModelConfig, key) -> List[jnp.ndarray]:
+    """Glorot-ish init. Returned flat as [W1, b1, W2, b2, ...]."""
+    params = []
+    for (d_in, d_out) in cfg.layer_dims():
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / (2 * d_in + d_out)).astype(jnp.float32)
+        params.append(jax.random.normal(sub, (2 * d_in, d_out), jnp.float32) * scale)
+        params.append(jnp.zeros((d_out,), jnp.float32))
+    return params
+
+
+def _aggregate(cfg: ModelConfig, h_prev, idx, w):
+    if cfg.use_pallas:
+        return gather_scaled_sum(h_prev, idx, w)
+    return kref.gather_scaled_sum_ref(h_prev, idx, w)
+
+
+def forward(cfg: ModelConfig, params, x0, self_idx, idx, w):
+    """Run the L layers; returns logits [B, C].
+
+    self_idx/idx/w are lists of per-layer block tensors (layer 1 first).
+    """
+    h = x0
+    n_layers = cfg.num_layers
+    for l in range(n_layers):
+        weight = params[2 * l]
+        bias = params[2 * l + 1]
+        agg = _aggregate(cfg, h, idx[l], w[l])
+        h_self = jnp.take(h, self_idx[l], axis=0)
+        z = jnp.concatenate([h_self, agg], axis=1) @ weight + bias
+        h = jnp.maximum(z, 0.0) if l < n_layers - 1 else z
+    return h
+
+
+def masked_softmax_xent(logits, labels, mask):
+    """Mean masked softmax cross-entropy; also returns correct-count."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logz, labels[:, None], axis=-1)[:, 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = -(ll * mask).sum() / denom
+    pred = jnp.argmax(logits, axis=-1)
+    correct = ((pred == labels).astype(jnp.float32) * mask).sum()
+    return loss, correct
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    x0, self_idx, idx, w, labels, mask = batch
+    logits = forward(cfg, params, x0, self_idx, idx, w)
+    loss, correct = masked_softmax_xent(logits, labels, mask)
+    return loss, (logits, correct)
+
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def train_step(cfg: ModelConfig, params, m, v, t, lr,
+               x0, self_idx, idx, w, labels, mask):
+    """One SGD step with in-graph Adam.
+
+    Returns (new_params, new_m, new_v, loss, correct).
+    t is the 1-based step counter (f32 scalar) for bias correction.
+    """
+    batch = (x0, self_idx, idx, w, labels, mask)
+    (loss, (_, correct)), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch), has_aux=True
+    )(params)
+    new_params, new_m, new_v = [], [], []
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * (g * g)
+        update = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        new_params.append(p - update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_params, new_m, new_v, loss, correct
+
+
+def batch_specs(cfg: ModelConfig):
+    """ShapeDtypeStructs for the mini-batch tensors, layer-major order.
+
+    Order: x0, then per-layer (self_idx_l, idx_l, w_l), then labels, mask.
+    This order is mirrored in meta.json and consumed by the rust runtime.
+    """
+    f32, i32 = jnp.float32, jnp.int32
+    specs = [jax.ShapeDtypeStruct((cfg.level_sizes[0], cfg.feature_dim), f32)]
+    for l in range(cfg.num_layers):
+        n_l = cfg.level_sizes[l + 1]
+        k_l = cfg.fanouts[l]
+        specs.append(jax.ShapeDtypeStruct((n_l,), i32))        # self_idx
+        specs.append(jax.ShapeDtypeStruct((n_l, k_l), i32))    # idx
+        specs.append(jax.ShapeDtypeStruct((n_l, k_l), f32))    # w
+    specs.append(jax.ShapeDtypeStruct((cfg.batch_size,), i32))  # labels
+    specs.append(jax.ShapeDtypeStruct((cfg.batch_size,), f32))  # mask
+    return specs
+
+
+def param_specs(cfg: ModelConfig):
+    f32 = jnp.float32
+    specs = []
+    for (d_in, d_out) in cfg.layer_dims():
+        specs.append(jax.ShapeDtypeStruct((2 * d_in, d_out), f32))
+        specs.append(jax.ShapeDtypeStruct((d_out,), f32))
+    return specs
+
+
+def _unpack_batch(cfg: ModelConfig, flat):
+    x0 = flat[0]
+    self_idx, idx, w = [], [], []
+    pos = 1
+    for _ in range(cfg.num_layers):
+        self_idx.append(flat[pos]); idx.append(flat[pos + 1]); w.append(flat[pos + 2])
+        pos += 3
+    labels, mask = flat[pos], flat[pos + 1]
+    return x0, self_idx, idx, w, labels, mask
+
+
+def make_train_fn(cfg: ModelConfig):
+    """Flat-signature train step for AOT export.
+
+    Signature: (params..., m..., v..., t, lr, batch...) ->
+               (params..., m..., v..., loss, correct)
+    """
+    n_params = 2 * cfg.num_layers
+
+    def fn(*args):
+        params = list(args[:n_params])
+        m = list(args[n_params:2 * n_params])
+        v = list(args[2 * n_params:3 * n_params])
+        t = args[3 * n_params]
+        lr = args[3 * n_params + 1]
+        flat_batch = args[3 * n_params + 2:]
+        x0, self_idx, idx, w, labels, mask = _unpack_batch(cfg, flat_batch)
+        new_p, new_m, new_v, loss, correct = train_step(
+            cfg, params, m, v, t, lr, x0, self_idx, idx, w, labels, mask
+        )
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss, correct)
+
+    return fn
+
+
+def make_eval_fn(cfg: ModelConfig):
+    """Flat-signature forward pass: (params..., batch-sans-labels) -> (logits,).
+
+    labels/mask are intentionally NOT arguments: jax.jit DCEs unused entry
+    parameters during lowering, which would silently shift the argument
+    order the rust runtime relies on. The eval contract is therefore
+    params + x0 + per-layer (self_idx, idx, w).
+    """
+    n_params = 2 * cfg.num_layers
+
+    def fn(*args):
+        params = list(args[:n_params])
+        flat = args[n_params:]
+        x0 = flat[0]
+        self_idx, idx, w = [], [], []
+        pos = 1
+        for _ in range(cfg.num_layers):
+            self_idx.append(flat[pos]); idx.append(flat[pos + 1]); w.append(flat[pos + 2])
+            pos += 3
+        return (forward(cfg, params, x0, self_idx, idx, w),)
+
+    return fn
+
+
+def train_arg_specs(cfg: ModelConfig):
+    f32 = jnp.float32
+    ps = param_specs(cfg)
+    scalar = jax.ShapeDtypeStruct((), f32)
+    return ps + ps + ps + [scalar, scalar] + batch_specs(cfg)
+
+
+def eval_arg_specs(cfg: ModelConfig):
+    # batch specs minus trailing labels/mask (see make_eval_fn docstring)
+    return param_specs(cfg) + batch_specs(cfg)[:-2]

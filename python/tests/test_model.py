@@ -1,0 +1,184 @@
+"""L2 correctness: GraphSAGE model, loss, Adam step, and batch contracts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref as kref
+
+
+def tiny_cfg(use_pallas=True):
+    return M.ModelConfig(
+        name="t", num_layers=2, feature_dim=8, hidden_dim=8, num_classes=4,
+        batch_size=16, level_sizes=(128, 48, 16), fanouts=(3, 2),
+        use_pallas=use_pallas,
+    )
+
+
+def rand_batch(cfg, rng, learnable=False):
+    """A structurally valid random batch.
+
+    With learnable=True, features directly encode the label so a correct
+    implementation must drive the loss toward zero.
+    """
+    labels = rng.integers(0, cfg.num_classes, size=(cfg.batch_size,)).astype(np.int32)
+    x0 = rng.standard_normal((cfg.level_sizes[0], cfg.feature_dim)).astype(np.float32)
+    self_idx, idx, w = [], [], []
+    # level l nodes are the first N_l rows of level l-1 (subset invariant)
+    for l in range(cfg.num_layers):
+        n, k = cfg.level_sizes[l + 1], cfg.fanouts[l]
+        prev = cfg.level_sizes[l]
+        self_idx.append(np.arange(n, dtype=np.int32))
+        idx.append(rng.integers(0, prev, size=(n, k)).astype(np.int32))
+        w.append(np.full((n, k), 1.0 / k, np.float32))
+    if learnable:
+        # plant the label into the self-feature path of the targets
+        for b in range(cfg.batch_size):
+            x0[b] = 0.0
+            x0[b, labels[b] % cfg.feature_dim] = 3.0
+    mask = np.ones((cfg.batch_size,), np.float32)
+    return tuple(jnp.asarray(a) for a in (x0,)) + (
+        [jnp.asarray(a) for a in self_idx],
+        [jnp.asarray(a) for a in idx],
+        [jnp.asarray(a) for a in w],
+        jnp.asarray(labels),
+        jnp.asarray(mask),
+    )
+
+
+def test_forward_shapes():
+    cfg = tiny_cfg()
+    rng = np.random.default_rng(0)
+    x0, si, ix, w, labels, mask = rand_batch(cfg, rng)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    logits = M.forward(cfg, params, x0, si, ix, w)
+    assert logits.shape == (cfg.batch_size, cfg.num_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_forward_pallas_vs_ref_path():
+    """use_pallas=True and False must produce identical logits."""
+    rng = np.random.default_rng(1)
+    cfg_p, cfg_r = tiny_cfg(True), tiny_cfg(False)
+    x0, si, ix, w, labels, mask = rand_batch(cfg_p, rng)
+    params = M.init_params(cfg_p, jax.random.PRNGKey(1))
+    lp = M.forward(cfg_p, params, x0, si, ix, w)
+    lr = M.forward(cfg_r, params, x0, si, ix, w)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lr), rtol=1e-5, atol=1e-5)
+
+
+def test_masked_loss_ignores_padding():
+    cfg = tiny_cfg()
+    rng = np.random.default_rng(2)
+    x0, si, ix, w, labels, mask = rand_batch(cfg, rng)
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    logits = M.forward(cfg, params, x0, si, ix, w)
+    full, _ = M.masked_softmax_xent(logits, labels, mask)
+    # Mask half the batch and corrupt the masked labels — loss over the kept
+    # half must be unchanged by the corruption.
+    half_mask = mask.at[8:].set(0.0)
+    corrupted = labels.at[8:].set((labels[8:] + 1) % cfg.num_classes)
+    a, _ = M.masked_softmax_xent(logits, labels, half_mask)
+    b, _ = M.masked_softmax_xent(logits, corrupted, half_mask)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-6)
+
+
+def test_train_step_decreases_loss_on_learnable_batch():
+    cfg = tiny_cfg()
+    rng = np.random.default_rng(3)
+    x0, si, ix, w, labels, mask = rand_batch(cfg, rng, learnable=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    step = jax.jit(lambda p, m, v, t: M.train_step(
+        cfg, p, m, v, t, jnp.float32(0.01), x0, si, ix, w, labels, mask))
+    losses = []
+    for t in range(1, 41):
+        params, m, v, loss, correct = step(params, m, v, jnp.float32(t))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, losses[::10]
+    assert losses[-1] < 0.7
+
+
+def test_adam_bias_correction_first_step():
+    """After one step from zero moments, update ≈ lr * sign(grad)."""
+    cfg = tiny_cfg(use_pallas=False)
+    rng = np.random.default_rng(4)
+    x0, si, ix, w, labels, mask = rand_batch(cfg, rng)
+    params = M.init_params(cfg, jax.random.PRNGKey(4))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    lr = 0.01
+    batch = (x0, si, ix, w, labels, mask)
+    (_, _), grads = jax.value_and_grad(
+        lambda p: M.loss_fn(cfg, p, batch), has_aux=True)(params)
+    new_p, _, _, _, _ = M.train_step(
+        cfg, params, m, v, jnp.float32(1.0), jnp.float32(lr),
+        x0, si, ix, w, labels, mask)
+    for p, np_, g in zip(params, new_p, grads):
+        delta = np.asarray(p - np_)
+        g = np.asarray(g)
+        big = np.abs(g) > 1e-4
+        if big.any():
+            np.testing.assert_allclose(
+                delta[big], lr * np.sign(g)[big], rtol=1e-2, atol=1e-4)
+
+
+def test_flat_train_fn_round_trip():
+    """make_train_fn flat signature == structured train_step."""
+    cfg = tiny_cfg()
+    rng = np.random.default_rng(5)
+    x0, si, ix, w, labels, mask = rand_batch(cfg, rng)
+    params = M.init_params(cfg, jax.random.PRNGKey(5))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    flat_batch = [x0]
+    for l in range(cfg.num_layers):
+        flat_batch += [si[l], ix[l], w[l]]
+    flat_batch += [labels, mask]
+    fn = M.make_train_fn(cfg)
+    outs = fn(*(params + m + v + [jnp.float32(1.0), jnp.float32(1e-3)] + flat_batch))
+    sp, sm, sv, sl, sc = M.train_step(
+        cfg, params, m, v, jnp.float32(1.0), jnp.float32(1e-3),
+        x0, si, ix, w, labels, mask)
+    np.testing.assert_allclose(float(outs[-2]), float(sl), rtol=1e-6)
+    n = 2 * cfg.num_layers
+    for a, b in zip(outs[:n], sp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_eval_fn_matches_forward():
+    cfg = tiny_cfg()
+    rng = np.random.default_rng(6)
+    x0, si, ix, w, labels, mask = rand_batch(cfg, rng)
+    params = M.init_params(cfg, jax.random.PRNGKey(6))
+    flat_batch = [x0]
+    for l in range(cfg.num_layers):
+        flat_batch += [si[l], ix[l], w[l]]
+    (logits,) = M.make_eval_fn(cfg)(*(params + flat_batch))
+    want = M.forward(cfg, params, x0, si, ix, w)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want), rtol=1e-6)
+
+
+def test_batch_specs_order_and_shapes():
+    cfg = tiny_cfg()
+    specs = M.batch_specs(cfg)
+    assert specs[0].shape == (cfg.level_sizes[0], cfg.feature_dim)
+    assert specs[-2].shape == (cfg.batch_size,)
+    assert specs[-1].shape == (cfg.batch_size,)
+    assert len(specs) == 1 + 3 * cfg.num_layers + 2
+
+
+def test_sage_layer_ref_known_values():
+    """Hand-computed single layer."""
+    h = jnp.asarray([[1.0], [2.0]], jnp.float32)
+    self_idx = jnp.asarray([0], jnp.int32)
+    idx = jnp.asarray([[1, 1]], jnp.int32)
+    w = jnp.asarray([[0.5, 0.5]], jnp.float32)
+    weight = jnp.asarray([[1.0], [10.0]], jnp.float32)  # [2*1, 1]
+    bias = jnp.asarray([0.5], jnp.float32)
+    out = kref.sage_layer_ref(h, self_idx, idx, w, weight, bias, relu=False)
+    # concat(self=1, agg=2) @ [[1],[10]] + .5 = 1 + 20 + .5
+    np.testing.assert_allclose(np.asarray(out), [[21.5]], rtol=1e-6)

@@ -1,0 +1,84 @@
+"""L1/L2 structural performance checks (§Perf, DESIGN.md §8).
+
+interpret=True gives CPU-numpy timings, which are NOT a TPU proxy — so the
+perf gate on the kernel is *structural*: the VMEM working set of every
+model config's aggregation tiles must fit a TPU core's ~16 MiB VMEM, and
+the lowered HLO must stay free of accidental blowups (instruction-count
+regression guard).
+"""
+
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.kernels.gather_agg import (
+    DEFAULT_BLOCK_ROWS,
+    vmem_footprint_bytes,
+)
+
+VMEM_BUDGET = 16 << 20  # 16 MiB per TensorCore
+
+
+def _layer_dims(cfg):
+    dims = [cfg.feature_dim] + [cfg.hidden_dim] * (cfg.num_layers - 1)
+    dims.append(cfg.num_classes)
+    return dims
+
+
+@pytest.mark.parametrize("name", list(aot.CONFIGS))
+def test_vmem_footprint_within_budget(name):
+    cfg = aot.CONFIGS[name]
+    dims = _layer_dims(cfg)
+    for l in range(cfg.num_layers):
+        n_prev = cfg.level_sizes[l]
+        d = dims[l]
+        k = cfg.fanouts[l]
+        fp = vmem_footprint_bytes(n_prev, d, k, block_rows=DEFAULT_BLOCK_ROWS)
+        if fp > VMEM_BUDGET:
+            # large input tables fall back to HBM-resident streaming
+            fp_stream = vmem_footprint_bytes(
+                n_prev, d, k, block_rows=DEFAULT_BLOCK_ROWS, table_resident=False
+            )
+            assert fp_stream <= VMEM_BUDGET, (
+                f"{name} layer {l}: streaming tile {fp_stream} exceeds VMEM"
+            )
+
+
+def test_block_rows_default_is_lane_aligned():
+    assert DEFAULT_BLOCK_ROWS % 128 == 0
+
+
+def test_hlo_instruction_counts_bounded(tmp_path):
+    """Regression guard: the lowered train step must stay a few hundred
+    instructions (a pallas/interpret change that explodes into thousands of
+    scalar ops would silently wreck compile + run time)."""
+    cfg = aot.CONFIGS["tiny"]
+    out = tmp_path / "tiny_perf"
+    aot.lower_config(cfg, str(out))
+    text = (out / "train.hlo.txt").read_text()
+    n_instr = text.count("\n  ")  # instruction lines are indented
+    assert n_instr < 2500, f"train HLO blew up: {n_instr} instructions"
+    n_gather = text.count(" gather(")
+    assert n_gather >= cfg.num_layers  # one per layer at minimum
+    assert n_gather <= 8 * cfg.num_layers, f"too many gathers: {n_gather}"
+
+
+def test_gns_shapes_cut_flops_vs_ns_shapes():
+    """The per-method artifact shapes are the L2 optimization that restores
+    GNS's compute advantage under XLA's static shapes: the _gns config must
+    have ≥2x fewer matmul FLOPs than the NS-shaped config."""
+
+    def flops(cfg):
+        dims = _layer_dims(cfg)
+        total = 0
+        for l in range(cfg.num_layers):
+            rows = cfg.level_sizes[l + 1]
+            total += 2 * rows * (2 * dims[l]) * dims[l + 1]
+            total += 2 * rows * cfg.fanouts[l] * dims[l]
+        return total
+
+    ns = flops(aot.CONFIGS["products"])
+    gns = flops(aot.CONFIGS["products_gns"])
+    assert ns >= 2 * gns, f"ns={ns} gns={gns}"

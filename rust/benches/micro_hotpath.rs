@@ -1,0 +1,102 @@
+//! Micro-benchmarks of the L3 hot paths (criterion is unavailable offline;
+//! this is a self-contained harness with warmup + repeated timing).
+//!
+//! Covers the per-batch critical path: neighbor sampling (NS + GNS),
+//! cache-subgraph construction, feature slicing, x0 padding, and the
+//! bounded queue. Used by the §Perf pass — before/after numbers are
+//! recorded in EXPERIMENTS.md.
+
+use gns::features::build_dataset;
+use gns::graph::subgraph::CacheSubgraph;
+use gns::sampling::gns::{GnsConfig, GnsSampler};
+use gns::sampling::neighbor::NeighborSampler;
+use gns::sampling::{BlockShapes, Sampler};
+use gns::util::cli::Args;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    for _ in 0..iters.div_ceil(5).max(1) {
+        f(); // warmup
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed() / iters as u32;
+    println!("{name:<38} {per:>12.2?} /iter  ({iters} iters)");
+}
+
+fn main() {
+    let args = Args::parse_env();
+    let scale = args.f64_or("scale", 0.5);
+    let ds = build_dataset("products-s", scale, 1);
+    println!("workload: products-s x{scale} — {}", ds.graph.stats());
+    let graph = Arc::new(ds.graph.clone());
+    let shapes = BlockShapes::new(vec![20000, 12000, 2048, 256], vec![5, 10, 15]);
+
+    let mut ns = NeighborSampler::new(graph.clone(), shapes.clone(), 1);
+    bench("ns::sample_batch (256 targets)", 30, || {
+        let mb = ns.sample_batch(&ds.train[..256], &ds.labels).unwrap();
+        std::hint::black_box(mb.num_input_nodes());
+    });
+
+    let mut gns = GnsSampler::new(
+        graph.clone(),
+        shapes.clone(),
+        &ds.train,
+        GnsConfig { seed: 1, ..Default::default() },
+    );
+    bench("gns::sample_batch (256 targets)", 30, || {
+        let mb = gns.sample_batch(&ds.train[..256], &ds.labels).unwrap();
+        std::hint::black_box(mb.stats.cached_inputs);
+    });
+
+    let probs = ds.graph.degree_probs();
+    let table = gns::util::rng::AliasTable::new(&probs);
+    let mut rng = gns::util::rng::Pcg::new(2);
+    let cache: Vec<u32> = table
+        .sample_distinct(&mut rng, ds.graph.num_nodes() / 100)
+        .into_iter()
+        .map(|v| v as u32)
+        .collect();
+    bench("cache_subgraph::build (1% cache)", 20, || {
+        let s = CacheSubgraph::build(&ds.graph, &cache);
+        std::hint::black_box(s.num_incidences());
+    });
+
+    let mb = ns.sample_batch(&ds.train[..256], &ds.labels).unwrap();
+    let mut x0 = vec![0f32; shapes.level_sizes[0] * ds.features.dim()];
+    bench("features::slice_into (batch inputs)", 50, || {
+        let n = mb.input_nodes.len() * ds.features.dim();
+        ds.features.slice_into(&mb.input_nodes, &mut x0[..n]);
+        std::hint::black_box(x0[0]);
+    });
+    bench("x0 tail zero-fill (padded block)", 50, || {
+        let n = mb.input_nodes.len() * ds.features.dim();
+        x0[n..].fill(0.0);
+        std::hint::black_box(x0[x0.len() - 1]);
+    });
+
+    bench("queue push+pop round-trip x100", 50, || {
+        let (tx, rx) = gns::pipeline::bounded::<usize>(128);
+        for i in 0..100 {
+            tx.push(i).unwrap();
+            if i % 2 == 1 {
+                std::hint::black_box(rx.pop());
+            }
+        }
+        drop(tx);
+        while let Some(v) = rx.pop() {
+            std::hint::black_box(v);
+        }
+    });
+
+    // literal-marshalling proxy: Literal::vec1 is memcpy-bound; measure the
+    // copy of a full x0 block (what the runtime pays per step on top of
+    // slice_into).
+    bench("x0 block copy (literal proxy)", 20, || {
+        let v = x0.to_vec();
+        std::hint::black_box(v.len());
+    });
+}

@@ -1,0 +1,171 @@
+//! Device-resident feature cache: the GPU half of the GNS cache (§3.1).
+//!
+//! When the sampler publishes a new cache generation, the trainer uploads
+//! the cached rows once (one big PCIe transfer, amortized over the period's
+//! mini-batches). Per mini-batch, input-layer rows that hit the cache are
+//! served device-side (fast d2d), and only the misses cross PCIe.
+
+use super::transfer::{TransferModel, TransferStats};
+use super::{DeviceBuffer, DeviceMemory};
+use crate::graph::NodeId;
+use anyhow::Result;
+use std::collections::HashMap;
+
+pub struct DeviceFeatureCache {
+    /// generation currently resident (0 = nothing uploaded).
+    generation: u64,
+    /// node → device row for the resident generation.
+    rows: HashMap<NodeId, u32>,
+    row_bytes: u64,
+    buf: Option<DeviceBuffer>,
+    /// cumulative hit/miss counts (Table 4 telemetry).
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl DeviceFeatureCache {
+    pub fn new(row_bytes: u64) -> Self {
+        DeviceFeatureCache {
+            generation: 0,
+            rows: HashMap::new(),
+            row_bytes,
+            buf: None,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn resident_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Upload a new cache generation: frees the previous buffer, allocates
+    /// for `nodes`, accounts one bulk PCIe transfer. Returns modeled time.
+    pub fn upload(
+        &mut self,
+        nodes: &[NodeId],
+        generation: u64,
+        mem: &mut DeviceMemory,
+        model: &TransferModel,
+        stats: &mut TransferStats,
+    ) -> Result<std::time::Duration> {
+        if generation == self.generation {
+            return Ok(std::time::Duration::ZERO);
+        }
+        if let Some(buf) = self.buf.take() {
+            mem.free(buf);
+        }
+        let bytes = nodes.len() as u64 * self.row_bytes;
+        let buf = mem.alloc(bytes)?;
+        self.buf = Some(buf);
+        self.rows = nodes
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v, i as u32))
+            .collect();
+        self.generation = generation;
+        Ok(stats.h2d(model, bytes))
+    }
+
+    /// Serve one mini-batch's input rows: cached rows are d2d copies, the
+    /// rest cross PCIe. Returns (modeled copy time, missed node count).
+    pub fn serve_batch(
+        &mut self,
+        input_nodes: &[NodeId],
+        model: &TransferModel,
+        stats: &mut TransferStats,
+    ) -> (std::time::Duration, usize) {
+        let mut hit = 0u64;
+        let mut miss = 0u64;
+        for v in input_nodes {
+            if self.rows.contains_key(v) {
+                hit += 1;
+            } else {
+                miss += 1;
+            }
+        }
+        self.hits += hit;
+        self.misses += miss;
+        let mut t = stats.h2d(model, miss * self.row_bytes);
+        t += stats.d2d(model, hit * self.row_bytes);
+        stats.record_cache_savings(hit * self.row_bytes);
+        (t, miss as usize)
+    }
+
+    pub fn contains(&self, v: NodeId) -> bool {
+        self.rows.contains_key(&v)
+    }
+
+    pub fn release(&mut self, mem: &mut DeviceMemory) {
+        if let Some(buf) = self.buf.take() {
+            mem.free(buf);
+        }
+        self.rows.clear();
+        self.generation = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (DeviceFeatureCache, DeviceMemory, TransferModel, TransferStats) {
+        (
+            DeviceFeatureCache::new(400),
+            DeviceMemory::new(1 << 20),
+            TransferModel::default(),
+            TransferStats::default(),
+        )
+    }
+
+    #[test]
+    fn upload_and_serve() {
+        let (mut c, mut mem, model, mut stats) = setup();
+        c.upload(&[1, 2, 3], 1, &mut mem, &model, &mut stats).unwrap();
+        assert_eq!(c.resident_rows(), 3);
+        assert_eq!(mem.used(), 1200);
+        let (_t, missed) = c.serve_batch(&[1, 2, 9, 10], &model, &mut stats);
+        assert_eq!(missed, 2);
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.misses, 2);
+        assert_eq!(stats.bytes_saved_by_cache, 800);
+    }
+
+    #[test]
+    fn same_generation_upload_is_noop() {
+        let (mut c, mut mem, model, mut stats) = setup();
+        c.upload(&[1], 1, &mut mem, &model, &mut stats).unwrap();
+        let before = stats.h2d_bytes;
+        c.upload(&[2, 3], 1, &mut mem, &model, &mut stats).unwrap();
+        assert_eq!(stats.h2d_bytes, before);
+        assert!(c.contains(1));
+        assert!(!c.contains(2));
+    }
+
+    #[test]
+    fn new_generation_replaces_and_frees() {
+        let (mut c, mut mem, model, mut stats) = setup();
+        c.upload(&[1, 2], 1, &mut mem, &model, &mut stats).unwrap();
+        assert_eq!(mem.used(), 800);
+        c.upload(&[3, 4, 5], 2, &mut mem, &model, &mut stats).unwrap();
+        assert_eq!(mem.used(), 1200);
+        assert!(!c.contains(1));
+        assert!(c.contains(4));
+        c.release(&mut mem);
+        assert_eq!(mem.used(), 0);
+    }
+
+    #[test]
+    fn oversized_cache_ooms() {
+        let mut c = DeviceFeatureCache::new(1 << 20);
+        let mut mem = DeviceMemory::new(1 << 20);
+        let model = TransferModel::default();
+        let mut stats = TransferStats::default();
+        let nodes: Vec<NodeId> = (0..4).collect();
+        assert!(c.upload(&nodes, 1, &mut mem, &model, &mut stats).is_err());
+    }
+}

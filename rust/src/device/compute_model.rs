@@ -1,0 +1,108 @@
+//! Device compute-time model: "as-if-T4" step time from block shapes.
+//!
+//! The PJRT CPU backend executes the train step ~2–3 orders of magnitude
+//! slower than the paper's NVIDIA T4, which would invert the paper's
+//! breakdown (Fig. 1: data copy 60–80%, GPU compute the remainder). For
+//! breakdown figures and Table-3 epoch times we therefore *model* device
+//! compute from the analytic FLOP count of the padded train step at a
+//! calibrated effective throughput, and report it alongside the measured
+//! CPU numbers (both always appear in the JSON output; nothing is hidden).
+//!
+//! Effective throughput default: a T4 peaks at 8.1 TFLOP/s FP32; GNN
+//! mini-batch kernels (gather + skinny matmuls) reach ~15–25% of peak, so
+//! 1.6 TFLOP/s effective is used, with a fixed per-step launch overhead.
+
+use crate::runtime::ArtifactMeta;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    pub effective_flops: f64,
+    pub step_overhead: Duration,
+    /// backward+optimizer multiplier over forward FLOPs (standard 3x:
+    /// fwd 1x, bwd 2x; Adam update is negligible next to the matmuls).
+    pub train_multiplier: f64,
+}
+
+impl Default for ComputeModel {
+    fn default() -> Self {
+        ComputeModel {
+            effective_flops: 1.6e12,
+            step_overhead: Duration::from_micros(200),
+            train_multiplier: 3.0,
+        }
+    }
+}
+
+impl ComputeModel {
+    /// Forward FLOPs of one padded step (matmuls + weighted gather).
+    pub fn forward_flops(meta: &ArtifactMeta) -> f64 {
+        let dims = meta.layer_dims();
+        let mut flops = 0f64;
+        for (l, &(d_in, d_out)) in dims.iter().enumerate() {
+            let rows = meta.level_sizes[l + 1] as f64;
+            let k = meta.fanouts[l] as f64;
+            // gather-aggregate: rows × K × d_in multiply-adds
+            flops += 2.0 * rows * k * d_in as f64;
+            // affine: rows × 2*d_in × d_out
+            flops += 2.0 * rows * (2 * d_in) as f64 * d_out as f64;
+        }
+        flops
+    }
+
+    pub fn train_step_time(&self, meta: &ArtifactMeta) -> Duration {
+        let flops = Self::forward_flops(meta) * self.train_multiplier;
+        self.step_overhead + Duration::from_secs_f64(flops / self.effective_flops)
+    }
+
+    pub fn eval_step_time(&self, meta: &ArtifactMeta) -> Duration {
+        self.step_overhead
+            + Duration::from_secs_f64(Self::forward_flops(meta) / self.effective_flops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(levels: Vec<usize>, fanouts: Vec<usize>, f: usize, h: usize, c: usize) -> ArtifactMeta {
+        ArtifactMeta {
+            name: "m".into(),
+            num_layers: fanouts.len(),
+            feature_dim: f,
+            hidden_dim: h,
+            num_classes: c,
+            batch_size: *levels.last().unwrap(),
+            level_sizes: levels,
+            fanouts,
+            train_num_outputs: 0,
+            dir: std::path::PathBuf::new(),
+        }
+    }
+
+    #[test]
+    fn flops_scale_with_level_sizes() {
+        let small = meta(vec![4000, 3000, 2048, 256], vec![5, 10, 15], 100, 64, 47);
+        let big = meta(vec![20000, 12000, 2048, 256], vec![5, 10, 15], 100, 64, 47);
+        let fs = ComputeModel::forward_flops(&small);
+        let fb = ComputeModel::forward_flops(&big);
+        assert!(fb > 2.0 * fs, "big {fb} small {fs}");
+    }
+
+    #[test]
+    fn train_time_has_overhead_floor() {
+        let m = meta(vec![8, 4, 2], vec![2, 2], 4, 4, 2);
+        let model = ComputeModel::default();
+        assert!(model.train_step_time(&m) >= model.step_overhead);
+        assert!(model.train_step_time(&m) > model.eval_step_time(&m));
+    }
+
+    #[test]
+    fn hand_computed_single_layer() {
+        // 1 layer: rows=2, k=3, d_in=4, d_out=5
+        let m = meta(vec![10, 2], vec![3], 4, 4, 5);
+        let got = ComputeModel::forward_flops(&m);
+        let want = 2.0 * 2.0 * 3.0 * 4.0 + 2.0 * 2.0 * 8.0 * 5.0;
+        assert_eq!(got, want);
+    }
+}

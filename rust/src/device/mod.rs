@@ -1,0 +1,134 @@
+//! Simulated GPU device model (DESIGN.md §Substitutions).
+//!
+//! There is no GPU in this testbed, so the *behavioural* properties the
+//! paper's results rest on are modeled explicitly:
+//!
+//!  - **device memory ledger** with a hard capacity — LazyGCN's mega-batch
+//!    OOM and the feasibility of pinning the GNS cache both live here;
+//!  - **transfer cost model** (transfer.rs) — CPU-side slicing runs for
+//!    real (memory-bandwidth bound), while the PCIe hop is accounted in
+//!    bytes and converted to modeled seconds at a configurable bandwidth
+//!    (default: 12 GB/s effective, a T4's PCIe 3.0 x16 practical rate);
+//!  - **GPU feature cache** (cache.rs) — the device-resident copy of the
+//!    GNS cache: rows uploaded once per cache generation, hit/miss
+//!    accounting per mini-batch.
+//!
+//! All modeled time is kept separate from measured time in the metrics
+//! (util::timer) so reports never conflate the two.
+
+pub mod cache;
+pub mod compute_model;
+pub mod transfer;
+
+pub use cache::DeviceFeatureCache;
+pub use compute_model::ComputeModel;
+pub use transfer::{TransferModel, TransferStats};
+
+use anyhow::{bail, Result};
+
+/// Tracks simulated device memory. Buffers are identified by opaque ids;
+/// the ledger enforces capacity like a real allocator would.
+pub struct DeviceMemory {
+    capacity: u64,
+    used: u64,
+    next_id: u64,
+    allocs: std::collections::HashMap<u64, u64>,
+    /// high-water mark for reporting.
+    peak: u64,
+}
+
+/// Handle to a simulated device allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DeviceBuffer(u64);
+
+impl DeviceMemory {
+    pub fn new(capacity: u64) -> Self {
+        DeviceMemory {
+            capacity,
+            used: 0,
+            next_id: 1,
+            allocs: std::collections::HashMap::new(),
+            peak: 0,
+        }
+    }
+
+    /// A T4's 16 GB, the paper's testbed GPU.
+    pub fn t4() -> Self {
+        Self::new(16 * (1 << 30))
+    }
+
+    pub fn alloc(&mut self, bytes: u64) -> Result<DeviceBuffer> {
+        if self.used + bytes > self.capacity {
+            bail!(
+                "device OOM: requested {} with {} used of {}",
+                crate::util::fmt_bytes(bytes),
+                crate::util::fmt_bytes(self.used),
+                crate::util::fmt_bytes(self.capacity)
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        self.allocs.insert(id, bytes);
+        Ok(DeviceBuffer(id))
+    }
+
+    pub fn free(&mut self, buf: DeviceBuffer) {
+        if let Some(bytes) = self.allocs.remove(&buf.0) {
+            self.used -= bytes;
+        }
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity - self.used
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_balances() {
+        let mut m = DeviceMemory::new(1000);
+        let a = m.alloc(400).unwrap();
+        let b = m.alloc(500).unwrap();
+        assert_eq!(m.used(), 900);
+        assert!(m.alloc(200).is_err()); // OOM
+        m.free(a);
+        assert_eq!(m.used(), 500);
+        let _c = m.alloc(200).unwrap();
+        m.free(b);
+        assert_eq!(m.used(), 200);
+        assert_eq!(m.peak(), 900);
+    }
+
+    #[test]
+    fn double_free_is_inert() {
+        let mut m = DeviceMemory::new(100);
+        let a = m.alloc(50).unwrap();
+        m.free(a);
+        m.free(a);
+        assert_eq!(m.used(), 0);
+    }
+
+    #[test]
+    fn oom_error_mentions_sizes() {
+        let mut m = DeviceMemory::new(10);
+        let err = m.alloc(100).unwrap_err().to_string();
+        assert!(err.contains("OOM"));
+    }
+}

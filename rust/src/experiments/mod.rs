@@ -1,0 +1,38 @@
+//! Experiment registry: one entry per table/figure of the paper's
+//! evaluation (§4). Each experiment builds its workload, runs the methods
+//! through the full pipeline, prints the paper-format rows, and writes
+//! machine-readable results under `results/`.
+//!
+//! See DESIGN.md §4 for the experiment index and the expected *shape* of
+//! each reproduction (we match orderings/ratios, not absolute numbers —
+//! the substrate is a simulated-GPU CPU testbed).
+
+pub mod harness;
+pub mod report;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+pub mod figures;
+
+pub use harness::{ExpOptions, Method};
+
+/// Run an experiment by id ("table3" … "fig4").
+pub fn run(id: &str, opts: &ExpOptions) -> anyhow::Result<String> {
+    match id {
+        "table2" => harness::table2_stats(opts),
+        "table3" => table3::run(opts),
+        "table4" => table4::run(opts),
+        "table5" => table5::run(opts),
+        "table6" => table6::run(opts),
+        "fig1" => figures::fig1(opts),
+        "fig2" => figures::fig2(opts),
+        "fig3" => figures::fig3(opts),
+        "fig4" => figures::fig4(opts),
+        other => anyhow::bail!("unknown experiment {other:?} (table2-6, fig1-4)"),
+    }
+}
+
+pub const ALL_EXPERIMENTS: [&str; 9] = [
+    "table2", "table3", "table4", "table5", "table6", "fig1", "fig2", "fig3", "fig4",
+];

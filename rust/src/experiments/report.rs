@@ -1,0 +1,61 @@
+//! Result persistence: paper-format text to stdout, JSON to results/.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Write a JSON value under results/<name>.json and the printable text
+/// under results/<name>.txt; returns the text for the caller to print.
+pub fn save(results_dir: &Path, name: &str, text: &str, json: Json) -> Result<String> {
+    std::fs::create_dir_all(results_dir)
+        .with_context(|| format!("create {}", results_dir.display()))?;
+    std::fs::write(results_dir.join(format!("{name}.json")), json.to_string_pretty())?;
+    std::fs::write(results_dir.join(format!("{name}.txt")), text)?;
+    Ok(text.to_string())
+}
+
+/// Format seconds compactly.
+pub fn fmt_secs(s: f64) -> String {
+    if s.is_nan() {
+        "N/A".into()
+    } else if s < 10.0 {
+        format!("{s:.2}")
+    } else {
+        format!("{s:.1}")
+    }
+}
+
+/// Format an F1 in percent (paper convention).
+pub fn fmt_f1(f1: f64) -> String {
+    if f1.is_nan() {
+        "N/A".into()
+    } else {
+        format!("{:.2}", 100.0 * f1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj};
+
+    #[test]
+    fn save_writes_both_files() {
+        let dir = std::env::temp_dir().join("gns_report_test");
+        let text = save(&dir, "t", "hello\n", obj(vec![("x", num(1.0))])).unwrap();
+        assert_eq!(text, "hello\n");
+        assert!(dir.join("t.json").exists());
+        assert!(dir.join("t.txt").exists());
+        let parsed = Json::parse(&std::fs::read_to_string(dir.join("t.json")).unwrap()).unwrap();
+        assert_eq!(parsed.req_usize("x").unwrap(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs(f64::NAN), "N/A");
+        assert_eq!(fmt_secs(1.234), "1.23");
+        assert_eq!(fmt_f1(0.7801), "78.01");
+        assert_eq!(fmt_f1(f64::NAN), "N/A");
+    }
+}

@@ -1,0 +1,68 @@
+//! Table 5: percentage of isolated first-layer target nodes in LADIES as a
+//! function of nodes-sampled-per-layer (256 … 10000) on the products
+//! analogue. Expected shape: isolation falls monotonically (52.7% at 256
+//! down to 0% at 10000 in the paper).
+
+use super::harness::ExpOptions;
+use super::report::save;
+use crate::features::build_dataset;
+use crate::sampling::ladies::LadiesSampler;
+use crate::sampling::{BlockShapes, Sampler};
+use crate::util::json::{arr, num, obj, Json};
+use anyhow::Result;
+use std::sync::Arc;
+
+pub const SWEEP: [usize; 5] = [256, 512, 1000, 5000, 10000];
+
+pub fn isolation_fraction(s_layer: usize, opts: &ExpOptions) -> Result<f64> {
+    let ds = build_dataset("products-s", opts.scale, opts.seed);
+    // capacities sized for the largest sweep point
+    let shapes = BlockShapes::new(
+        vec![40000, 31000, 20500, 256],
+        vec![5, 10, 15],
+    );
+    let mut s = LadiesSampler::new(
+        Arc::new(ds.graph.clone()),
+        shapes,
+        s_layer,
+        opts.seed,
+    );
+    let b = 256;
+    for chunk in ds.train.chunks(b).take(8) {
+        let _ = s.sample_batch(chunk, &ds.labels)?;
+    }
+    Ok(s.isolated_first_layer as f64 / s.first_layer_nodes.max(1) as f64)
+}
+
+pub fn run(opts: &ExpOptions) -> Result<String> {
+    let mut text = String::from(
+        "Table 5: % of isolated first-layer nodes in LADIES (products-s)\n",
+    );
+    text.push_str("  #sampled/layer   % isolated\n");
+    let mut rows: Vec<Json> = Vec::new();
+    for &s_layer in &SWEEP {
+        let frac = isolation_fraction(s_layer, opts)?;
+        text.push_str(&format!("  {:>13} {:>11.1}\n", s_layer, 100.0 * frac));
+        rows.push(obj(vec![
+            ("s_layer", num(s_layer as f64)),
+            ("isolated_pct", num(100.0 * frac)),
+        ]));
+    }
+    save(&opts.results_dir, "table5", &text, obj(vec![
+        ("scale", num(opts.scale)),
+        ("rows", arr(rows)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isolation_decreases_with_layer_size() {
+        let opts = ExpOptions { scale: 0.15, ..Default::default() };
+        let small = isolation_fraction(64, &opts).unwrap();
+        let large = isolation_fraction(4000, &opts).unwrap();
+        assert!(small > large, "small={small} large={large}");
+    }
+}

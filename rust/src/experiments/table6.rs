@@ -1,0 +1,55 @@
+//! Table 6: GNS sensitivity to cache size {1%, .1%, .01%} × cache update
+//! period P ∈ {1, 2, 5, 10} on the products analogue (test F1).
+//!
+//! Expected shape: at 1% cache, accuracy is flat across P; shrinking the
+//! cache hurts, and hurts *more* at long update periods (a fresh small
+//! sample beats a stale one — the paper's closing observation).
+
+use super::harness::{run_method, ExpOptions, Method};
+use super::report::{fmt_f1, save};
+use crate::sampling::gns::GnsConfig;
+use crate::util::json::{arr, num, obj, Json};
+use anyhow::Result;
+
+pub const CACHE_FRACTIONS: [f64; 3] = [0.01, 0.001, 0.0001];
+pub const PERIODS: [usize; 4] = [1, 2, 5, 10];
+
+pub fn run(opts: &ExpOptions) -> Result<String> {
+    // sensitivity needs enough epochs for P=10 to matter; stretch the
+    // requested epoch count if it is very small
+    let mut o = opts.clone();
+    o.epochs = opts.epochs.max(PERIODS.iter().copied().max().unwrap());
+    let mut text = String::from(
+        "Table 6: GNS test F1 (%) vs cache size and update period (products-s)\n",
+    );
+    text.push_str(&format!(
+        "{:<12} {:>8} {:>8} {:>8} {:>8}\n",
+        "cache size", "P=1", "P=2", "P=5", "P=10"
+    ));
+    let mut rows: Vec<Json> = Vec::new();
+    for &frac in &CACHE_FRACTIONS {
+        let mut line = format!("{:<12}", format!("|V|x{}%", frac * 100.0));
+        for &p in &PERIODS {
+            let method = Method::Gns(GnsConfig {
+                cache_fraction: frac,
+                update_period: p,
+                seed: o.seed,
+                ..Default::default()
+            });
+            let r = run_method("products-s", &method, &o)?;
+            line.push_str(&format!(" {:>8}", fmt_f1(r.final_f1())));
+            rows.push(obj(vec![
+                ("cache_fraction", num(frac)),
+                ("period", num(p as f64)),
+                ("f1", num(r.final_f1())),
+            ]));
+        }
+        line.push('\n');
+        text.push_str(&line);
+    }
+    save(&o.results_dir, "table6", &text, obj(vec![
+        ("scale", num(o.scale)),
+        ("epochs", num(o.epochs as f64)),
+        ("rows", arr(rows)),
+    ]))
+}

@@ -1,0 +1,263 @@
+//! CPU-side feature & label store (the data that must be sliced + copied
+//! to the device every mini-batch — the paper's bottleneck).
+//!
+//! `FeatureStore` is a dense row-major f32 matrix in host memory; `slice`
+//! implements step 2 of the six-step loop (gather rows for a mini-batch's
+//! input nodes). The synthetic generator plants class-centroid structure
+//! so GNN training converges (DESIGN.md §Substitutions).
+
+use crate::graph::generate::LabeledGraph;
+use crate::graph::NodeId;
+use crate::util::rng::Pcg;
+
+pub struct FeatureStore {
+    data: Vec<f32>,
+    dim: usize,
+    num_rows: usize,
+}
+
+impl FeatureStore {
+    pub fn new(num_rows: usize, dim: usize) -> Self {
+        FeatureStore { data: vec![0.0; num_rows * dim], dim, num_rows }
+    }
+
+    pub fn from_rows(data: Vec<f32>, dim: usize) -> Self {
+        assert_eq!(data.len() % dim, 0);
+        let num_rows = data.len() / dim;
+        FeatureStore { data, dim, num_rows }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.num_rows
+    }
+
+    /// Size of one row in bytes (what one node costs to copy).
+    pub fn row_bytes(&self) -> usize {
+        self.dim * std::mem::size_of::<f32>()
+    }
+
+    #[inline]
+    pub fn row(&self, v: NodeId) -> &[f32] {
+        let s = v as usize * self.dim;
+        &self.data[s..s + self.dim]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, v: NodeId) -> &mut [f32] {
+        let s = v as usize * self.dim;
+        &mut self.data[s..s + self.dim]
+    }
+
+    /// Gather rows for `nodes` into `out` (len == nodes.len() * dim).
+    /// This is the host-memory-bandwidth-bound "slice" stage; kept free of
+    /// per-row allocation.
+    pub fn slice_into(&self, nodes: &[NodeId], out: &mut [f32]) {
+        assert_eq!(out.len(), nodes.len() * self.dim);
+        for (i, &v) in nodes.iter().enumerate() {
+            let dst = &mut out[i * self.dim..(i + 1) * self.dim];
+            dst.copy_from_slice(self.row(v));
+        }
+    }
+
+    pub fn slice(&self, nodes: &[NodeId]) -> Vec<f32> {
+        let mut out = vec![0.0; nodes.len() * self.dim];
+        self.slice_into(nodes, &mut out);
+        out
+    }
+
+    /// Bytes moved when slicing `n` rows.
+    pub fn slice_bytes(&self, n: usize) -> u64 {
+        (n * self.row_bytes()) as u64
+    }
+}
+
+/// A complete synthetic dataset: graph + features + labels + splits.
+pub struct Dataset {
+    pub name: String,
+    pub graph: crate::graph::CsrGraph,
+    pub features: FeatureStore,
+    pub labels: Vec<u16>,
+    pub num_classes: usize,
+    pub train: Vec<NodeId>,
+    pub val: Vec<NodeId>,
+    pub test: Vec<NodeId>,
+}
+
+/// Feature-generation parameters.
+#[derive(Debug, Clone)]
+pub struct FeatureParams {
+    pub dim: usize,
+    /// Distance between class centroids relative to noise σ=1.
+    pub centroid_scale: f32,
+    /// Fraction of feature dims carrying class signal.
+    pub informative_frac: f32,
+    pub seed: u64,
+}
+
+impl Default for FeatureParams {
+    fn default() -> Self {
+        FeatureParams { dim: 100, centroid_scale: 0.9, informative_frac: 0.4, seed: 0 }
+    }
+}
+
+/// Class-centroid Gaussian features: x_v = centroid[label_v] + ε. Combined
+/// with the generator's homophily this makes the node-classification task
+/// genuinely learnable by a GraphSAGE model (signal in both features and
+/// neighborhoods), so convergence curves (Fig. 3) are meaningful.
+pub fn synthesize_features(lg: &LabeledGraph, p: &FeatureParams) -> FeatureStore {
+    let n = lg.graph.num_nodes();
+    let mut rng = Pcg::new(p.seed ^ 0xFEA7);
+    let informative = ((p.dim as f32 * p.informative_frac) as usize).max(1);
+    // centroids: sparse random ±scale pattern over the informative dims
+    let mut centroids = vec![0.0f32; lg.num_classes * p.dim];
+    for c in 0..lg.num_classes {
+        for d in 0..informative {
+            let sign = if rng.gen_bool(0.5) { 1.0 } else { -1.0 };
+            if rng.gen_bool(0.35) {
+                centroids[c * p.dim + d] = sign * p.centroid_scale;
+            }
+        }
+    }
+    let mut store = FeatureStore::new(n, p.dim);
+    for v in 0..n {
+        let c = lg.labels[v] as usize;
+        let row = store.row_mut(v as NodeId);
+        for d in 0..p.dim {
+            row[d] = centroids[c * p.dim + d] + rng.gen_normal() as f32;
+        }
+    }
+    store
+}
+
+/// Train/val/test node split by fraction (shuffled, seeded).
+pub fn split_nodes(
+    n: usize,
+    train_frac: f64,
+    val_frac: f64,
+    seed: u64,
+) -> (Vec<NodeId>, Vec<NodeId>, Vec<NodeId>) {
+    let mut ids: Vec<NodeId> = (0..n as NodeId).collect();
+    let mut rng = Pcg::new(seed ^ 0x5917);
+    rng.shuffle(&mut ids);
+    let n_train = (n as f64 * train_frac) as usize;
+    let n_val = (n as f64 * val_frac) as usize;
+    let train = ids[..n_train].to_vec();
+    let val = ids[n_train..n_train + n_val].to_vec();
+    let test = ids[n_train + n_val..].to_vec();
+    (train, val, test)
+}
+
+/// Build a full dataset analogue by name (see graph::generate).
+pub fn build_dataset(name: &str, scale: f64, seed: u64) -> Dataset {
+    use crate::graph::generate::{dataset_analogue, labeled_power_law};
+    let params = dataset_analogue(name, scale, seed);
+    let lg = labeled_power_law(&params);
+    let dim = match name {
+        "oag-s" => 256, // stands in for the 768-dim BERT embeddings (scaled)
+        "papers-s" => 128,
+        "yelp-s" => 64,
+        _ => 100,
+    };
+    let features = synthesize_features(
+        &lg,
+        &FeatureParams { dim, seed, ..Default::default() },
+    );
+    // split fractions follow the paper's Table 2 shapes (products has a
+    // small train split; papers100M tiny)
+    let (train_frac, val_frac) = match name {
+        "products-s" => (0.10, 0.02),
+        "papers-s" => (0.05, 0.01),
+        "oag-s" => (0.43, 0.05),
+        "amazon-s" => (0.85, 0.05),
+        _ => (0.75, 0.10),
+    };
+    let (train, val, test) = split_nodes(lg.graph.num_nodes(), train_frac, val_frac, seed);
+    Dataset {
+        name: name.to_string(),
+        graph: lg.graph,
+        features,
+        labels: lg.labels,
+        num_classes: lg.num_classes,
+        train,
+        val,
+        test,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{labeled_power_law, PowerLawParams};
+
+    #[test]
+    fn slice_gathers_rows() {
+        let mut fs = FeatureStore::new(4, 3);
+        for v in 0..4u32 {
+            for d in 0..3 {
+                fs.row_mut(v)[d] = (v * 10 + d as u32) as f32;
+            }
+        }
+        let out = fs.slice(&[2, 0]);
+        assert_eq!(out, vec![20.0, 21.0, 22.0, 0.0, 1.0, 2.0]);
+        assert_eq!(fs.slice_bytes(2), 24);
+    }
+
+    #[test]
+    fn features_separate_classes() {
+        let lg = labeled_power_law(&PowerLawParams {
+            num_nodes: 3000,
+            num_classes: 4,
+            seed: 2,
+            ..Default::default()
+        });
+        let fs = synthesize_features(
+            &lg,
+            &FeatureParams { dim: 32, seed: 2, ..Default::default() },
+        );
+        // class means should differ measurably from each other
+        let mut means = vec![vec![0.0f64; 32]; 4];
+        let mut counts = vec![0usize; 4];
+        for v in 0..3000u32 {
+            let c = lg.labels[v as usize] as usize;
+            counts[c] += 1;
+            for (d, &x) in fs.row(v).iter().enumerate() {
+                means[c][d] += x as f64;
+            }
+        }
+        for c in 0..4 {
+            for d in 0..32 {
+                means[c][d] /= counts[c] as f64;
+            }
+        }
+        let dist: f64 = (0..32)
+            .map(|d| (means[0][d] - means[1][d]).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(dist > 0.5, "centroid distance {dist}");
+    }
+
+    #[test]
+    fn split_is_partition() {
+        let (tr, va, te) = split_nodes(1000, 0.6, 0.2, 7);
+        assert_eq!(tr.len(), 600);
+        assert_eq!(va.len(), 200);
+        assert_eq!(te.len(), 200);
+        let mut all: Vec<NodeId> = tr.iter().chain(&va).chain(&te).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn build_dataset_smoke() {
+        let ds = build_dataset("yelp-s", 0.05, 3);
+        assert!(ds.graph.num_nodes() >= 1000);
+        assert_eq!(ds.features.num_rows(), ds.graph.num_nodes());
+        assert_eq!(ds.labels.len(), ds.graph.num_nodes());
+        assert!(!ds.train.is_empty());
+        assert_eq!(ds.features.dim(), 64);
+    }
+}

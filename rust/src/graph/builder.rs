@@ -1,0 +1,202 @@
+//! Edge-list → CSR construction: dedup, self-loop policy, symmetrization.
+
+use super::{CsrGraph, NodeId};
+
+/// Accumulates edges, then builds an immutable `CsrGraph` (sorted neighbor
+/// lists, duplicates removed).
+#[derive(Debug, Clone)]
+pub struct GraphBuilder {
+    num_nodes: usize,
+    edges: Vec<(NodeId, NodeId)>,
+    allow_self_loops: bool,
+}
+
+impl GraphBuilder {
+    pub fn new(num_nodes: usize) -> Self {
+        assert!(num_nodes <= NodeId::MAX as usize);
+        GraphBuilder { num_nodes, edges: Vec::new(), allow_self_loops: false }
+    }
+
+    pub fn with_capacity(num_nodes: usize, edges: usize) -> Self {
+        let mut b = Self::new(num_nodes);
+        b.edges.reserve(edges);
+        b
+    }
+
+    pub fn allow_self_loops(mut self, allow: bool) -> Self {
+        self.allow_self_loops = allow;
+        self
+    }
+
+    /// Add a directed edge u→v.
+    pub fn add_edge(mut self, u: NodeId, v: NodeId) -> Self {
+        self.push_edge(u, v);
+        self
+    }
+
+    /// Add an undirected edge (stored in both directions).
+    pub fn add_undirected(mut self, u: NodeId, v: NodeId) -> Self {
+        self.push_edge(u, v);
+        self.push_edge(v, u);
+        self
+    }
+
+    /// Non-consuming edge insertion for hot loops (generators).
+    pub fn push_edge(&mut self, u: NodeId, v: NodeId) {
+        debug_assert!((u as usize) < self.num_nodes && (v as usize) < self.num_nodes);
+        if u == v && !self.allow_self_loops {
+            return;
+        }
+        self.edges.push((u, v));
+    }
+
+    pub fn push_undirected(&mut self, u: NodeId, v: NodeId) {
+        self.push_edge(u, v);
+        self.push_edge(v, u);
+    }
+
+    pub fn num_pending_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Build the CSR: counting sort by source, then per-node sort + dedup.
+    pub fn build(self) -> CsrGraph {
+        let n = self.num_nodes;
+        let mut counts = vec![0u64; n + 1];
+        for &(u, _) in &self.edges {
+            counts[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let mut adj = vec![0 as NodeId; self.edges.len()];
+        let mut cursor = counts.clone();
+        for &(u, v) in &self.edges {
+            let c = &mut cursor[u as usize];
+            adj[*c as usize] = v;
+            *c += 1;
+        }
+        // sort + dedup each neighbor list, compacting in place
+        let mut write = 0u64;
+        let mut offsets = vec![0u64; n + 1];
+        for v in 0..n {
+            let s = counts[v] as usize;
+            let e = counts[v + 1] as usize;
+            let list = &mut adj[s..e];
+            list.sort_unstable();
+            let mut prev: Option<NodeId> = None;
+            let start_write = write;
+            for i in 0..list.len() {
+                let x = adj[s + i];
+                if prev != Some(x) {
+                    adj[write as usize] = x;
+                    write += 1;
+                    prev = Some(x);
+                }
+            }
+            offsets[v] = start_write;
+            offsets[v + 1] = write;
+        }
+        adj.truncate(write as usize);
+        adj.shrink_to_fit();
+        let g = CsrGraph { offsets, adj };
+        debug_assert!(g.validate().is_ok());
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn dedup_and_sort() {
+        let g = GraphBuilder::new(3)
+            .add_edge(0, 2)
+            .add_edge(0, 1)
+            .add_edge(0, 2) // dup
+            .add_edge(2, 1)
+            .build();
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[] as &[NodeId]);
+        assert_eq!(g.neighbors(2), &[1]);
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn self_loops_dropped_by_default() {
+        let g = GraphBuilder::new(2).add_edge(0, 0).add_edge(0, 1).build();
+        assert_eq!(g.neighbors(0), &[1]);
+        let g2 = GraphBuilder::new(2)
+            .allow_self_loops(true)
+            .add_edge(0, 0)
+            .add_edge(0, 1)
+            .build();
+        assert_eq!(g2.neighbors(0), &[0, 1]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new(0).build();
+        assert_eq!(g.num_nodes(), 0);
+        assert_eq!(g.num_edges(), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn prop_csr_roundtrip_preserves_edge_set() {
+        check(40, |g: &mut Gen| {
+            let n = g.usize(1..60);
+            let m = g.usize(0..300);
+            let mut b = GraphBuilder::new(n);
+            let mut want = std::collections::BTreeSet::new();
+            for _ in 0..m {
+                let u = g.usize(0..n) as NodeId;
+                let v = g.usize(0..n) as NodeId;
+                if u != v {
+                    want.insert((u, v));
+                }
+                b.push_edge(u, v);
+            }
+            let graph = b.build();
+            prop_assert!(graph.validate().is_ok());
+            let mut got = std::collections::BTreeSet::new();
+            for u in 0..n as NodeId {
+                let mut prev: Option<NodeId> = None;
+                for &v in graph.neighbors(u) {
+                    prop_assert!(prev.map_or(true, |p| p < v), "unsorted or dup");
+                    prev = Some(v);
+                    got.insert((u, v));
+                }
+            }
+            prop_assert_eq!(want, got);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_undirected_is_symmetric() {
+        check(30, |g: &mut Gen| {
+            let n = g.usize(2..50);
+            let m = g.usize(0..200);
+            let mut b = GraphBuilder::new(n);
+            for _ in 0..m {
+                let u = g.usize(0..n) as NodeId;
+                let v = g.usize(0..n) as NodeId;
+                b.push_undirected(u, v);
+            }
+            let graph = b.build();
+            for u in 0..n as NodeId {
+                for &v in graph.neighbors(u) {
+                    prop_assert!(
+                        graph.neighbors(v).binary_search(&u).is_ok(),
+                        "missing reverse edge {v}->{u}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,167 @@
+//! Binary graph serialization (own format — no serde offline).
+//!
+//! Layout (little-endian):
+//!   magic "GNSG" | version u32 | num_nodes u64 | num_edges u64 |
+//!   offsets [u64; n+1] | adj [u32; m]
+//!
+//! Generating the large analogues takes tens of seconds; experiments cache
+//! them under results/graphs/ between runs.
+
+use super::{CsrGraph, NodeId};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"GNSG";
+const VERSION: u32 = 1;
+
+pub fn save(graph: &CsrGraph, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(graph.num_nodes() as u64).to_le_bytes())?;
+    w.write_all(&(graph.num_edges() as u64).to_le_bytes())?;
+    for &o in &graph.offsets {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    for &v in &graph.adj {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<CsrGraph> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic in {}", path.display());
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported graph file version {version}");
+    }
+    let n = read_u64(&mut r)? as usize;
+    let m = read_u64(&mut r)? as usize;
+    let mut offsets = vec![0u64; n + 1];
+    read_u64_slice(&mut r, &mut offsets)?;
+    let mut adj = vec![0 as NodeId; m];
+    read_u32_slice(&mut r, &mut adj)?;
+    let g = CsrGraph { offsets, adj };
+    g.validate().map_err(|e| anyhow::anyhow!("corrupt graph file: {e}"))?;
+    Ok(g)
+}
+
+/// Save labels alongside (plain u16 LE with a small header).
+pub fn save_labels(labels: &[u16], num_classes: usize, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(b"GNSL")?;
+    w.write_all(&(num_classes as u32).to_le_bytes())?;
+    w.write_all(&(labels.len() as u64).to_le_bytes())?;
+    for &l in labels {
+        w.write_all(&l.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load_labels(path: &Path) -> Result<(Vec<u16>, usize)> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != b"GNSL" {
+        bail!("bad label magic");
+    }
+    let num_classes = read_u32(&mut r)? as usize;
+    let n = read_u64(&mut r)? as usize;
+    let mut out = vec![0u16; n];
+    let mut buf = vec![0u8; n * 2];
+    r.read_exact(&mut buf)?;
+    for (i, c) in buf.chunks_exact(2).enumerate() {
+        out[i] = u16::from_le_bytes([c[0], c[1]]);
+    }
+    Ok((out, num_classes))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u64_slice(r: &mut impl Read, out: &mut [u64]) -> Result<()> {
+    let mut buf = vec![0u8; out.len() * 8];
+    r.read_exact(&mut buf)?;
+    for (i, c) in buf.chunks_exact(8).enumerate() {
+        out[i] = u64::from_le_bytes(c.try_into().unwrap());
+    }
+    Ok(())
+}
+
+fn read_u32_slice(r: &mut impl Read, out: &mut [u32]) -> Result<()> {
+    let mut buf = vec![0u8; out.len() * 4];
+    r.read_exact(&mut buf)?;
+    for (i, c) in buf.chunks_exact(4).enumerate() {
+        out[i] = u32::from_le_bytes(c.try_into().unwrap());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{labeled_power_law, PowerLawParams};
+
+    #[test]
+    fn graph_round_trip() {
+        let lg = labeled_power_law(&PowerLawParams {
+            num_nodes: 2000,
+            ..Default::default()
+        });
+        let dir = std::env::temp_dir().join("gns_io_test");
+        let path = dir.join("g.bin");
+        save(&lg.graph, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(lg.graph, loaded);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn labels_round_trip() {
+        let labels: Vec<u16> = (0..500).map(|i| (i % 7) as u16).collect();
+        let dir = std::env::temp_dir().join("gns_io_test_labels");
+        let path = dir.join("l.bin");
+        save_labels(&labels, 7, &path).unwrap();
+        let (got, nc) = load_labels(&path).unwrap();
+        assert_eq!(labels, got);
+        assert_eq!(nc, 7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("gns_io_test_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOPEnope").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

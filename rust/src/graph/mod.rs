@@ -1,0 +1,186 @@
+//! Graph storage substrate: the "giant graph in CPU memory" of mixed
+//! CPU-GPU training (paper §2.2).
+//!
+//! `CsrGraph` is an immutable compressed-sparse-row adjacency structure,
+//! the same layout DGL keeps in shared CPU memory. All samplers read it;
+//! only the builder writes it.
+
+pub mod builder;
+pub mod generate;
+pub mod io;
+pub mod subgraph;
+pub mod walk;
+
+pub use builder::GraphBuilder;
+pub use subgraph::CacheSubgraph;
+
+/// Node id type. u32 bounds graphs at ~4.2B nodes — beyond the paper's
+/// largest (111M nodes) with room to spare, and halves index memory vs u64.
+pub type NodeId = u32;
+
+/// Immutable CSR graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrGraph {
+    /// offsets.len() == num_nodes + 1; neighbors of v are
+    /// `adj[offsets[v] as usize .. offsets[v+1] as usize]`.
+    pub(crate) offsets: Vec<u64>,
+    pub(crate) adj: Vec<NodeId>,
+}
+
+impl CsrGraph {
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.adj.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: NodeId) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: NodeId) -> &[NodeId] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.adj[s..e]
+    }
+
+    /// Average degree (the `C_d` of Theorem 1).
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_nodes() == 0 {
+            return 0.0;
+        }
+        self.num_edges() as f64 / self.num_nodes() as f64
+    }
+
+    /// Degree-proportional cache sampling probabilities (paper eq. 6):
+    /// p_i = deg(i) / Σ_k deg(k).
+    pub fn degree_probs(&self) -> Vec<f64> {
+        let total = self.num_edges() as f64;
+        (0..self.num_nodes())
+            .map(|v| {
+                if total > 0.0 {
+                    self.degree(v as NodeId) as f64 / total
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// Basic structural statistics (Table 2 analogue).
+    pub fn stats(&self) -> GraphStats {
+        let n = self.num_nodes();
+        let mut max_deg = 0usize;
+        let mut isolated = 0usize;
+        for v in 0..n {
+            let d = self.degree(v as NodeId);
+            max_deg = max_deg.max(d);
+            if d == 0 {
+                isolated += 1;
+            }
+        }
+        GraphStats {
+            num_nodes: n,
+            num_edges: self.num_edges(),
+            avg_degree: self.avg_degree(),
+            max_degree: max_deg,
+            isolated_nodes: isolated,
+        }
+    }
+
+    /// Structural invariant check used by tests and after deserialization:
+    /// offsets monotone, adj ids in range, offsets cover adj exactly.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.offsets.is_empty() {
+            return Err("offsets empty".into());
+        }
+        if self.offsets[0] != 0 {
+            return Err("offsets[0] != 0".into());
+        }
+        for w in self.offsets.windows(2) {
+            if w[0] > w[1] {
+                return Err("offsets not monotone".into());
+            }
+        }
+        if *self.offsets.last().unwrap() != self.adj.len() as u64 {
+            return Err("offsets tail != adj len".into());
+        }
+        let n = self.num_nodes() as NodeId;
+        if let Some(&bad) = self.adj.iter().find(|&&u| u >= n) {
+            return Err(format!("adjacency id {bad} out of range (n={n})"));
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphStats {
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+    pub isolated_nodes: usize,
+}
+
+impl std::fmt::Display for GraphStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "nodes={} edges={} avg_deg={:.1} max_deg={} isolated={}",
+            self.num_nodes, self.num_edges, self.avg_degree, self.max_degree, self.isolated_nodes
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> CsrGraph {
+        // 0 - 1 - 2 (undirected)
+        GraphBuilder::new(3)
+            .add_undirected(0, 1)
+            .add_undirected(1, 2)
+            .build()
+    }
+
+    #[test]
+    fn csr_basics() {
+        let g = path3();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 4); // undirected stored both ways
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn degree_probs_sum_to_one() {
+        let g = path3();
+        let p = g.degree_probs();
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!(p[1] > p[0]);
+    }
+
+    #[test]
+    fn stats_fields() {
+        let g = GraphBuilder::new(4).add_undirected(0, 1).build();
+        let s = g.stats();
+        assert_eq!(s.num_nodes, 4);
+        assert_eq!(s.isolated_nodes, 2);
+        assert_eq!(s.max_degree, 1);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut g = path3();
+        g.adj[0] = 99;
+        assert!(g.validate().is_err());
+    }
+}

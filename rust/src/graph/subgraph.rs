@@ -1,0 +1,198 @@
+//! Induced cache subgraph (paper §3.3).
+//!
+//! Naively intersecting each node's neighbor list with the cache during
+//! sampling costs O(|E|) per epoch. Instead, right after the cache is
+//! sampled, we build an induced subgraph S containing, for every node that
+//! has at least one cached neighbor, the *positions in the cache* of its
+//! cached neighbors. During neighbor sampling, the cached neighbors of v
+//! are a single O(1) slice lookup.
+//!
+//! Construction cost is O(Σ_{c ∈ C} deg(c)) — for an undirected graph the
+//! cached neighbors of v are exactly the reverse edges of cache members,
+//! "much more lightweight, usually ≪ O(|E|)" as the paper notes.
+
+use super::{CsrGraph, NodeId};
+
+/// Position of a node within the cache vector (dense u32).
+pub type CachePos = u32;
+
+/// For each graph node, the positions (in the cache) of its cached
+/// neighbors, in CSR form.
+pub struct CacheSubgraph {
+    offsets: Vec<u64>,
+    /// cache positions, grouped per node.
+    cached: Vec<CachePos>,
+    num_cache: usize,
+}
+
+impl CacheSubgraph {
+    /// Build from the cache node list. `cache[i]` is the graph node at
+    /// cache position i. O(Σ deg(cache)) time, one pass.
+    pub fn build(graph: &CsrGraph, cache: &[NodeId]) -> Self {
+        let n = graph.num_nodes();
+        // count cached-neighbor degree per node via cache members' edges
+        // (undirected graphs store both directions, so scanning the cache
+        // rows covers every (v, c) incidence).
+        let mut counts = vec![0u32; n + 1];
+        for &c in cache {
+            for &v in graph.neighbors(c) {
+                counts[v as usize + 1] += 1;
+            }
+        }
+        let mut offsets = vec![0u64; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + counts[i + 1] as u64;
+        }
+        let mut cached = vec![0 as CachePos; offsets[n] as usize];
+        let mut cursor: Vec<u64> = offsets.clone();
+        for (pos, &c) in cache.iter().enumerate() {
+            for &v in graph.neighbors(c) {
+                let slot = &mut cursor[v as usize];
+                cached[*slot as usize] = pos as CachePos;
+                *slot += 1;
+            }
+        }
+        CacheSubgraph { offsets, cached, num_cache: cache.len() }
+    }
+
+    /// Cache positions of v's cached neighbors.
+    #[inline]
+    pub fn cached_neighbors(&self, v: NodeId) -> &[CachePos] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.cached[s..e]
+    }
+
+    pub fn num_cache(&self) -> usize {
+        self.num_cache
+    }
+
+    /// Total incidences (size of the induced structure).
+    pub fn num_incidences(&self) -> usize {
+        self.cached.len()
+    }
+
+    /// Fraction of nodes with ≥1 cached neighbor (cache coverage — the
+    /// quantity Table 4's "#cached nodes" column is driven by).
+    pub fn coverage(&self, graph: &CsrGraph) -> f64 {
+        let n = graph.num_nodes();
+        if n == 0 {
+            return 0.0;
+        }
+        let covered = (0..n)
+            .filter(|&v| !self.cached_neighbors(v as NodeId).is_empty())
+            .count();
+        covered as f64 / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::util::proptest::{check, Gen};
+    use crate::util::rng::Pcg;
+    use crate::prop_assert;
+
+    #[test]
+    fn induced_lists_match_bruteforce() {
+        // triangle + pendant: 0-1, 1-2, 2-0, 2-3
+        let g = GraphBuilder::new(4)
+            .add_undirected(0, 1)
+            .add_undirected(1, 2)
+            .add_undirected(2, 0)
+            .add_undirected(2, 3)
+            .build();
+        let cache: Vec<NodeId> = vec![2, 0]; // positions: 2 -> 0, 0 -> 1
+        let s = CacheSubgraph::build(&g, &cache);
+        // node 1 neighbors {0, 2}; both cached -> positions {1, 0}
+        let mut got: Vec<_> = s.cached_neighbors(1).to_vec();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1]);
+        // node 3 neighbors {2} -> position 0
+        assert_eq!(s.cached_neighbors(3), &[0]);
+        // node 0 neighbors {1, 2}; only 2 cached -> {0}
+        assert_eq!(s.cached_neighbors(0), &[0]);
+        assert_eq!(s.num_cache(), 2);
+    }
+
+    #[test]
+    fn empty_cache() {
+        let g = GraphBuilder::new(3).add_undirected(0, 1).build();
+        let s = CacheSubgraph::build(&g, &[]);
+        assert_eq!(s.cached_neighbors(0), &[] as &[CachePos]);
+        assert_eq!(s.coverage(&g), 0.0);
+    }
+
+    #[test]
+    fn coverage_grows_with_cache_on_power_law() {
+        let lg = crate::graph::generate::labeled_power_law(
+            &crate::graph::generate::PowerLawParams {
+                num_nodes: 4000,
+                avg_degree: 16,
+                ..Default::default()
+            },
+        );
+        let probs = lg.graph.degree_probs();
+        let table = crate::util::rng::AliasTable::new(&probs);
+        let mut rng = Pcg::new(5);
+        let small: Vec<NodeId> = table
+            .sample_distinct(&mut rng, 40)
+            .into_iter()
+            .map(|v| v as NodeId)
+            .collect();
+        let big: Vec<NodeId> = table
+            .sample_distinct(&mut rng, 400)
+            .into_iter()
+            .map(|v| v as NodeId)
+            .collect();
+        let c_small = CacheSubgraph::build(&lg.graph, &small).coverage(&lg.graph);
+        let c_big = CacheSubgraph::build(&lg.graph, &big).coverage(&lg.graph);
+        assert!(c_big > c_small, "small={c_small} big={c_big}");
+        // the power-law claim: 1% degree-sampled cache covers the majority
+        assert!(c_big > 0.5, "coverage={c_big}");
+    }
+
+    #[test]
+    fn prop_subgraph_equals_bruteforce_intersection() {
+        check(25, |g: &mut Gen| {
+            let n = g.usize(2..80);
+            let m = g.usize(1..300);
+            let mut b = GraphBuilder::new(n);
+            for _ in 0..m {
+                let u = g.usize(0..n) as NodeId;
+                let v = g.usize(0..n) as NodeId;
+                b.push_undirected(u, v);
+            }
+            let graph = b.build();
+            let k = g.usize(0..n.min(20));
+            let mut rng = Pcg::new(g.rng.next_u64());
+            let cache: Vec<NodeId> = rng
+                .sample_distinct(n, k)
+                .into_iter()
+                .map(|v| v as NodeId)
+                .collect();
+            let sub = CacheSubgraph::build(&graph, &cache);
+            let pos_of: std::collections::HashMap<NodeId, CachePos> = cache
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (v, i as CachePos))
+                .collect();
+            for v in 0..n as NodeId {
+                let mut want: Vec<CachePos> = graph
+                    .neighbors(v)
+                    .iter()
+                    .filter_map(|u| pos_of.get(u).copied())
+                    .collect();
+                want.sort_unstable();
+                let mut got = sub.cached_neighbors(v).to_vec();
+                got.sort_unstable();
+                prop_assert!(
+                    want == got,
+                    "node {v}: want {want:?} got {got:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,145 @@
+//! Random-walk cache-sampling probabilities (paper §3.2, eqs. 7–9).
+//!
+//! When the training set is a small fraction of the graph (e.g. OGBN-
+//! papers100M trains on 1% of nodes), degree-proportional cache sampling
+//! (eq. 6) wastes cache slots on nodes unreachable from any training node.
+//! The paper instead propagates probability mass from the training set
+//! through L steps of the (fan-out-normalized) adjacency operator:
+//!
+//! ```text
+//! P^0_i = 1/|V_S| if i ∈ V_S else 0                    (eq. 9)
+//! P^ℓ  = (D A + I) P^{ℓ-1},  D = diag(fanout_ℓ / deg)   (eq. 8)
+//! ```
+//!
+//! and samples the cache from P^L (normalized).
+
+use super::{CsrGraph, NodeId};
+
+/// Compute P^L per eqs. (7)–(9). `fanouts[l]` is the per-node sample count
+/// of layer l+1 (same order as the model config, input layer first).
+/// Returned vector is normalized to sum to 1.
+pub fn walk_probs(graph: &CsrGraph, train_set: &[NodeId], fanouts: &[usize]) -> Vec<f64> {
+    let n = graph.num_nodes();
+    assert!(!train_set.is_empty(), "walk_probs: empty training set");
+    let mut p = vec![0.0f64; n];
+    let mass = 1.0 / train_set.len() as f64;
+    for &v in train_set {
+        p[v as usize] += mass;
+    }
+    let mut next = vec![0.0f64; n];
+    for &fanout in fanouts {
+        // next = (D A + I) p ; D A row v scales neighbor contributions by
+        // min(fanout, deg(v)) / deg(v) — the expected fraction of v's
+        // neighborhood actually reached when sampling `fanout` neighbors.
+        next.copy_from_slice(&p);
+        for v in 0..n {
+            let pv = p[v];
+            if pv == 0.0 {
+                continue;
+            }
+            let deg = graph.degree(v as NodeId);
+            if deg == 0 {
+                continue;
+            }
+            let scale = (fanout.min(deg)) as f64 / deg as f64;
+            let w = pv * scale;
+            for &u in graph.neighbors(v as NodeId) {
+                next[u as usize] += w;
+            }
+        }
+        std::mem::swap(&mut p, &mut next);
+    }
+    // normalize (the operator is not stochastic; only relative mass matters)
+    let total: f64 = p.iter().sum();
+    if total > 0.0 {
+        for x in &mut p {
+            *x /= total;
+        }
+    }
+    p
+}
+
+/// Fraction of training nodes within `hops` of any nonzero-probability node
+/// — a diagnostic for cache reachability (paper requirement 2 of §3.2).
+pub fn reachable_mass(probs: &[f64], train_set: &[NodeId]) -> f64 {
+    let covered = train_set
+        .iter()
+        .filter(|&&v| probs[v as usize] > 0.0)
+        .count();
+    covered as f64 / train_set.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn star(n: usize) -> CsrGraph {
+        // node 0 is the hub
+        let mut b = GraphBuilder::new(n);
+        for v in 1..n as NodeId {
+            b.push_undirected(0, v);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn probs_normalized_and_supported_near_train_set() {
+        let g = star(50);
+        let train: Vec<NodeId> = vec![1, 2, 3];
+        let p = walk_probs(&g, &train, &[5, 5]);
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        // hub must accumulate lots of mass: all training nodes touch it
+        assert!(p[0] > p[10], "hub {} leaf {}", p[0], p[10]);
+        // training nodes keep their identity mass (the +I term)
+        assert!(p[1] > 0.0);
+    }
+
+    #[test]
+    fn zero_layer_walk_is_training_distribution() {
+        let g = star(10);
+        let train: Vec<NodeId> = vec![4, 5];
+        let p = walk_probs(&g, &train, &[]);
+        assert!((p[4] - 0.5).abs() < 1e-12);
+        assert!((p[5] - 0.5).abs() < 1e-12);
+        assert_eq!(p[0], 0.0);
+    }
+
+    #[test]
+    fn fanout_caps_propagation() {
+        // high-degree hub with fanout 1: each neighbor gets pv * (1/deg)
+        let g = star(101); // hub degree 100
+        let p1 = walk_probs(&g, &[0], &[1]);
+        let p_all = walk_probs(&g, &[0], &[100]);
+        // with fanout=1 leaves receive 1/100 of hub mass each before
+        // normalization; with fanout=100 they receive full mass
+        let leaf_frac_1 = p1[1] / p1[0];
+        let leaf_frac_all = p_all[1] / p_all[0];
+        assert!(leaf_frac_all > leaf_frac_1 * 50.0);
+    }
+
+    #[test]
+    fn isolated_training_node_keeps_mass() {
+        let mut b = GraphBuilder::new(3);
+        b.push_undirected(0, 1);
+        let g = b.build(); // node 2 isolated
+        let p = walk_probs(&g, &[2], &[5]);
+        assert!((p[2] - 1.0).abs() < 1e-12);
+        assert_eq!(reachable_mass(&p, &[2]), 1.0);
+    }
+
+    #[test]
+    fn mass_spreads_with_layers() {
+        // path graph: mass reaches further with more layers
+        let mut b = GraphBuilder::new(6);
+        for v in 0..5 {
+            b.push_undirected(v, v + 1);
+        }
+        let g = b.build();
+        let p1 = walk_probs(&g, &[0], &[3]);
+        let p3 = walk_probs(&g, &[0], &[3, 3, 3]);
+        assert_eq!(p1[3], 0.0);
+        assert!(p3[3] > 0.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! # gns — Global Neighbor Sampling for mixed CPU-GPU GNN training
+//!
+//! Reproduction of Dong, Zheng, Yang & Karypis, *Global Neighbor Sampling
+//! for Mixed CPU-GPU Training on Giant Graphs* (KDD 2021) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate):** the training coordinator — graph store, the four
+//!   samplers (NS / LADIES / LazyGCN / GNS), the simulated GPU device model,
+//!   the multi-worker sampling pipeline, and the PJRT runtime that executes
+//!   AOT-compiled train steps.
+//! - **L2 (`python/compile/model.py`):** GraphSAGE fwd/bwd + Adam in JAX,
+//!   lowered once to HLO text.
+//! - **L1 (`python/compile/kernels/`):** the Pallas neighbor-aggregation
+//!   kernel inside that HLO.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
+
+pub mod device;
+pub mod features;
+pub mod experiments;
+pub mod pipeline;
+pub mod runtime;
+pub mod sampling;
+pub mod graph;
+pub mod util;

@@ -1,0 +1,159 @@
+//! `gns` — the training coordinator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   info                         print dataset analogue statistics (Table 2)
+//!   train --dataset products-s --method gns [--epochs N] [--scale S] ...
+//!   experiment <table2|table3|table4|table5|table6|fig1|fig2|fig3|fig4|all>
+//!   bench-breakdown              quick Figure-1-style stage breakdown
+//!
+//! Everything the CLI does goes through the public library API; the CLI is
+//! a thin shell so examples/ and benches/ exercise the same paths.
+
+use anyhow::{bail, Result};
+use gns::experiments::{self, ExpOptions, Method};
+use gns::sampling::gns::GnsConfig;
+use gns::util::cli::Args;
+
+fn main() {
+    let args = Args::parse_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn exp_options(args: &Args) -> ExpOptions {
+    let defaults = ExpOptions::default();
+    ExpOptions {
+        scale: args.f64_or("scale", defaults.scale),
+        epochs: args.usize_or("epochs", defaults.epochs),
+        seed: args.u64_or("seed", defaults.seed),
+        workers: args.usize_or("workers", defaults.workers),
+        lr: args.f64_or("lr", defaults.lr as f64) as f32,
+        datasets: args.list("datasets"),
+        results_dir: std::path::PathBuf::from(args.str_or("results-dir", "results")),
+        device_capacity: args.u64_or("device-gb", 16) * (1 << 30),
+        lazy_budget: args.get("lazy-budget-mb").map(|v| {
+            v.parse::<u64>().expect("--lazy-budget-mb expects MiB") << 20
+        }),
+        eval_batches: args.usize_or("eval-batches", defaults.eval_batches),
+    }
+}
+
+fn parse_method(name: &str, seed: u64) -> Result<Method> {
+    Ok(match name {
+        "ns" => Method::Ns,
+        "ladies" | "ladies512" => Method::Ladies(512),
+        "ladies5000" | "ladies5k" => Method::Ladies(5000),
+        "lazygcn" => Method::LazyGcn,
+        "gns" => Method::gns_default(seed),
+        other => bail!("unknown method {other:?} (ns|ladies|ladies5000|lazygcn|gns)"),
+    })
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => {
+            let opts = exp_options(args);
+            println!("{}", experiments::harness::table2_stats(&opts)?);
+            Ok(())
+        }
+        "train" => {
+            let opts = exp_options(args);
+            let dataset = args.str_or("dataset", "products-s").to_string();
+            let seed = opts.seed;
+            let mut method = parse_method(args.str_or("method", "gns"), seed)?;
+            if let Method::Gns(cfg) = &mut method {
+                *cfg = GnsConfig {
+                    cache_fraction: args.f64_or("cache-fraction", cfg.cache_fraction),
+                    update_period: args.usize_or("cache-period", cfg.update_period),
+                    seed,
+                    ..cfg.clone()
+                };
+            }
+            println!(
+                "training {} on {dataset} (scale {}, {} epochs, {} worker(s))",
+                method.label(),
+                opts.scale,
+                opts.epochs,
+                opts.workers
+            );
+            let r = experiments::harness::run_method(&dataset, &method, &opts)?;
+            if let Some(e) = &r.error {
+                bail!("run failed: {e}");
+            }
+            for rep in &r.reports {
+                println!(
+                    "epoch {:>2}: loss {:.4}  train-acc {:.4}  val-F1 {:.4}  wall {:.2}s  (+model {:.2}s)  inputs/batch {:.0} cached {:.0}",
+                    rep.epoch,
+                    rep.mean_loss,
+                    rep.train_acc,
+                    rep.val_f1,
+                    rep.wall.as_secs_f64(),
+                    rep.total_with_model.as_secs_f64(),
+                    rep.avg_input_nodes,
+                    rep.avg_cached_inputs,
+                );
+            }
+            println!("test F1: {:.4}", r.test_f1);
+            if let Some(last) = r.reports.last() {
+                println!("{}", last.clock.render("last-epoch stage breakdown"));
+                println!(
+                    "transfer: h2d {}  d2d {}  saved-by-cache {}",
+                    gns::util::fmt_bytes(last.transfer.h2d_bytes),
+                    gns::util::fmt_bytes(last.transfer.d2d_bytes),
+                    gns::util::fmt_bytes(last.transfer.bytes_saved_by_cache),
+                );
+            }
+            Ok(())
+        }
+        "experiment" | "exp" => {
+            let opts = exp_options(args);
+            let which = args
+                .positional
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            if which == "all" {
+                for id in experiments::ALL_EXPERIMENTS {
+                    println!("=== {id} ===");
+                    println!("{}", experiments::run(id, &opts)?);
+                }
+            } else {
+                println!("{}", experiments::run(which, &opts)?);
+            }
+            Ok(())
+        }
+        "bench-breakdown" => {
+            let opts = exp_options(args);
+            println!("{}", experiments::run("fig1", &opts)?);
+            Ok(())
+        }
+        _ => {
+            println!(
+                "gns — Global Neighbor Sampling (KDD'21) mixed CPU-GPU training coordinator\n\
+                 \n\
+                 USAGE: gns <command> [--flags]\n\
+                 \n\
+                 COMMANDS\n\
+                 \x20 info                      dataset analogue statistics (Table 2)\n\
+                 \x20 train                     train one method on one dataset\n\
+                 \x20     --dataset <name-s>    yelp-s|amazon-s|oag-s|products-s|papers-s\n\
+                 \x20     --method  <m>         ns|ladies|ladies5000|lazygcn|gns\n\
+                 \x20     --epochs N --scale S --workers W --lr F --seed N\n\
+                 \x20     --cache-fraction F --cache-period P   (gns)\n\
+                 \x20 experiment <id|all>       regenerate a paper table/figure\n\
+                 \x20     ids: table2 table3 table4 table5 table6 fig1 fig2 fig3 fig4\n\
+                 \x20 bench-breakdown           quick Figure-1-style breakdown\n\
+                 \n\
+                 Artifacts must exist first: `make artifacts`."
+            );
+            Ok(())
+        }
+    }
+}

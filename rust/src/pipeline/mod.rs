@@ -1,0 +1,11 @@
+//! The training pipeline: bounded queue, sampling worker pool, and the
+//! instrumented mixed CPU-GPU trainer. See trainer.rs for the six-step
+//! loop and DESIGN.md §2 for how this maps to the paper's architecture.
+
+pub mod queue;
+pub mod trainer;
+pub mod worker;
+
+pub use queue::{bounded, QueueStats, Receiver, Sender};
+pub use trainer::{EpochReport, TrainOptions, Trainer};
+pub use worker::{EpochPlan, SampledBatch};

@@ -1,0 +1,201 @@
+//! Bounded MPMC queue with backpressure accounting.
+//!
+//! The sampling workers (producers) and the trainer (consumer) meet here.
+//! Capacity bounds the number of in-flight mini-batches — each pending
+//! batch pins host memory for its blocks, so unbounded queues would defeat
+//! the memory story. Producers block when full (backpressure); both sides'
+//! blocked time is measured, which is how the pipeline's bottleneck is
+//! diagnosed (sampler-bound vs trainer-bound).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+    producers: usize,
+}
+
+struct Shared<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+    stats: Mutex<QueueStats>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct QueueStats {
+    pub pushed: u64,
+    pub popped: u64,
+    pub producer_blocked: Duration,
+    pub consumer_blocked: Duration,
+    pub max_depth: usize,
+}
+
+pub struct Sender<T>(Arc<Shared<T>>);
+pub struct Receiver<T>(Arc<Shared<T>>);
+
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(cap > 0);
+    let shared = Arc::new(Shared {
+        inner: Mutex::new(Inner { q: VecDeque::with_capacity(cap), closed: false, producers: 1 }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+        cap,
+        stats: Mutex::new(QueueStats::default()),
+    });
+    (Sender(shared.clone()), Receiver(shared))
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.0.inner.lock().unwrap().producers += 1;
+        Sender(self.0.clone())
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut inner = self.0.inner.lock().unwrap();
+        inner.producers -= 1;
+        if inner.producers == 0 {
+            inner.closed = true;
+            self.0.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Sender<T> {
+    /// Blocking push; Err(item) if the queue was closed by the receiver.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let t0 = Instant::now();
+        let mut inner = self.0.inner.lock().unwrap();
+        while inner.q.len() >= self.0.cap && !inner.closed {
+            inner = self.0.not_full.wait(inner).unwrap();
+        }
+        if inner.closed {
+            return Err(item);
+        }
+        inner.q.push_back(item);
+        let depth = inner.q.len();
+        drop(inner);
+        {
+            let mut s = self.0.stats.lock().unwrap();
+            s.pushed += 1;
+            s.max_depth = s.max_depth.max(depth);
+            s.producer_blocked += t0.elapsed();
+        }
+        self.0.not_empty.notify_one();
+        Ok(())
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking pop; None once the queue is drained and all senders gone.
+    pub fn pop(&self) -> Option<T> {
+        let t0 = Instant::now();
+        let mut inner = self.0.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.q.pop_front() {
+                drop(inner);
+                {
+                    let mut s = self.0.stats.lock().unwrap();
+                    s.popped += 1;
+                    s.consumer_blocked += t0.elapsed();
+                }
+                self.0.not_full.notify_one();
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.0.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Close from the consumer side: producers' pushes start failing.
+    pub fn close(&self) {
+        let mut inner = self.0.inner.lock().unwrap();
+        inner.closed = true;
+        self.0.not_full.notify_all();
+        self.0.not_empty.notify_all();
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        self.0.stats.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_single_thread() {
+        let (tx, rx) = bounded(4);
+        tx.push(1).unwrap();
+        tx.push(2).unwrap();
+        assert_eq!(rx.pop(), Some(1));
+        assert_eq!(rx.pop(), Some(2));
+        drop(tx);
+        assert_eq!(rx.pop(), None);
+    }
+
+    #[test]
+    fn no_loss_no_dup_across_threads() {
+        let (tx, rx) = bounded(8);
+        let n_producers = 4;
+        let per = 500;
+        let mut handles = Vec::new();
+        for p in 0..n_producers {
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..per {
+                    tx.push(p * per + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut seen = std::collections::HashSet::new();
+        while let Some(v) = rx.pop() {
+            assert!(seen.insert(v), "duplicate {v}");
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(seen.len(), n_producers * per);
+        let stats = rx.stats();
+        assert_eq!(stats.pushed, (n_producers * per) as u64);
+        assert_eq!(stats.popped, stats.pushed);
+        assert!(stats.max_depth <= 8);
+    }
+
+    #[test]
+    fn backpressure_blocks_producer() {
+        let (tx, rx) = bounded(1);
+        tx.push(1).unwrap();
+        let t = thread::spawn(move || {
+            tx.push(2).unwrap(); // blocks until pop
+            tx
+        });
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(rx.pop(), Some(1));
+        let tx = t.join().unwrap();
+        assert_eq!(rx.pop(), Some(2));
+        assert!(rx.stats().producer_blocked >= Duration::from_millis(15));
+        drop(tx);
+    }
+
+    #[test]
+    fn close_unblocks_producers() {
+        let (tx, rx) = bounded(1);
+        tx.push(1).unwrap();
+        let t = thread::spawn(move || tx.push(2));
+        thread::sleep(Duration::from_millis(20));
+        rx.close();
+        assert!(t.join().unwrap().is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! Sampling worker pool — the "parallelize with multiprocessing" of §3.3,
+//! as threads (DGL forks sampler processes; same topology, shared graph).
+//!
+//! The leader partitions the epoch's shuffled target list into chunks; a
+//! shared work list feeds `n` worker threads, each owning its own
+//! `Box<dyn Sampler>` (GNS workers share the leader's cache via
+//! `GnsSampler::worker_clone`). Finished batches flow through the bounded
+//! queue back to the trainer with their chunk index attached, so epoch
+//! metrics can be aggregated deterministically regardless of completion
+//! order.
+
+use super::queue::{bounded, Receiver, Sender};
+use crate::graph::NodeId;
+use crate::sampling::{MiniBatch, Sampler};
+use std::sync::{Arc, Mutex};
+
+pub struct EpochPlan {
+    /// chunked target ids, chunk i = batch i.
+    pub chunks: Vec<Vec<NodeId>>,
+}
+
+impl EpochPlan {
+    /// Shuffle-and-chunk the training set (one epoch's worth of batches).
+    pub fn shuffled(
+        train: &[NodeId],
+        batch_size: usize,
+        rng: &mut crate::util::rng::Pcg,
+    ) -> Self {
+        let mut ids = train.to_vec();
+        rng.shuffle(&mut ids);
+        let chunks = ids.chunks(batch_size).map(|c| c.to_vec()).collect();
+        EpochPlan { chunks }
+    }
+}
+
+pub struct SampledBatch {
+    pub chunk_index: usize,
+    pub batch: anyhow::Result<MiniBatch>,
+    /// time the worker spent inside the sampler for this batch.
+    pub sample_time: std::time::Duration,
+}
+
+/// Run an epoch's sampling across `workers` threads; returns the receiver
+/// the trainer drains plus the join handles (joined by `drain`'s caller or
+/// automatically when the receiver reports None).
+pub fn run_epoch_sampling(
+    samplers: Vec<Box<dyn Sampler>>,
+    plan: EpochPlan,
+    labels: Arc<Vec<u16>>,
+    queue_capacity: usize,
+) -> (Receiver<SampledBatch>, Vec<std::thread::JoinHandle<()>>) {
+    let (tx, rx) = bounded(queue_capacity);
+    let work: Arc<Mutex<std::collections::VecDeque<(usize, Vec<NodeId>)>>> = Arc::new(
+        Mutex::new(plan.chunks.into_iter().enumerate().collect()),
+    );
+    let mut handles = Vec::new();
+    for mut sampler in samplers {
+        let work = work.clone();
+        let labels = labels.clone();
+        let tx: Sender<SampledBatch> = tx.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let item = work.lock().unwrap().pop_front();
+            let Some((chunk_index, targets)) = item else { break };
+            let t0 = std::time::Instant::now();
+            let batch = sampler.sample_batch(&targets, &labels);
+            let sample_time = t0.elapsed();
+            if tx
+                .push(SampledBatch { chunk_index, batch, sample_time })
+                .is_err()
+            {
+                break; // trainer closed the queue (error path)
+            }
+        }));
+    }
+    drop(tx);
+    (rx, handles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::neighbor::NeighborSampler;
+    use crate::sampling::testutil::*;
+    use crate::sampling::validate_batch;
+
+    #[test]
+    fn pool_samples_every_chunk_exactly_once() {
+        let ds = tiny_dataset(8);
+        let shapes = tiny_shapes(16);
+        let g = Arc::new(ds.graph.clone());
+        let samplers: Vec<Box<dyn Sampler>> = (0..3)
+            .map(|i| {
+                Box::new(NeighborSampler::new(g.clone(), shapes.clone(), 100 + i))
+                    as Box<dyn Sampler>
+            })
+            .collect();
+        let mut rng = crate::util::rng::Pcg::new(1);
+        let plan = EpochPlan::shuffled(&ds.train[..160.min(ds.train.len())], 16, &mut rng);
+        let n_chunks = plan.chunks.len();
+        let labels = Arc::new(ds.labels.clone());
+        let (rx, handles) = run_epoch_sampling(samplers, plan, labels, 4);
+        let mut seen = std::collections::HashSet::new();
+        while let Some(sb) = rx.pop() {
+            assert!(seen.insert(sb.chunk_index));
+            let mb = sb.batch.unwrap();
+            validate_batch(&mb, &shapes).unwrap();
+        }
+        assert_eq!(seen.len(), n_chunks);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn epoch_plan_partitions_training_set() {
+        let mut rng = crate::util::rng::Pcg::new(2);
+        let train: Vec<NodeId> = (0..103).collect();
+        let plan = EpochPlan::shuffled(&train, 10, &mut rng);
+        assert_eq!(plan.chunks.len(), 11);
+        assert_eq!(plan.chunks.last().unwrap().len(), 3);
+        let mut all: Vec<NodeId> = plan.chunks.concat();
+        all.sort_unstable();
+        assert_eq!(all, train);
+    }
+}

@@ -1,0 +1,180 @@
+//! AOT artifact loading: meta.json contract + HLO text modules.
+//!
+//! `python -m compile.aot` emits, per model config:
+//!   artifacts/<name>/train.hlo.txt, eval.hlo.txt, meta.json
+//! This module parses meta.json (util::json), derives the parameter and
+//! block shapes the rust side must marshal, and validates consistency so
+//! a stale artifact fails loudly at load time instead of corrupting a run.
+
+use crate::sampling::BlockShapes;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub num_layers: usize,
+    pub feature_dim: usize,
+    pub hidden_dim: usize,
+    pub num_classes: usize,
+    pub batch_size: usize,
+    pub level_sizes: Vec<usize>,
+    pub fanouts: Vec<usize>,
+    pub train_num_outputs: usize,
+    pub dir: PathBuf,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("read {}", meta_path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", meta_path.display()))?;
+        let meta = ArtifactMeta {
+            name: v.req_str("name").map_err(anyhow::Error::msg)?.to_string(),
+            num_layers: v.req_usize("num_layers").map_err(anyhow::Error::msg)?,
+            feature_dim: v.req_usize("feature_dim").map_err(anyhow::Error::msg)?,
+            hidden_dim: v.req_usize("hidden_dim").map_err(anyhow::Error::msg)?,
+            num_classes: v.req_usize("num_classes").map_err(anyhow::Error::msg)?,
+            batch_size: v.req_usize("batch_size").map_err(anyhow::Error::msg)?,
+            level_sizes: v.req_usize_arr("level_sizes").map_err(anyhow::Error::msg)?,
+            fanouts: v.req_usize_arr("fanouts").map_err(anyhow::Error::msg)?,
+            train_num_outputs: v
+                .req_usize("train_num_outputs")
+                .map_err(anyhow::Error::msg)?,
+            dir: dir.to_path_buf(),
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.level_sizes.len() != self.num_layers + 1 {
+            bail!("meta: level_sizes/num_layers mismatch");
+        }
+        if self.fanouts.len() != self.num_layers {
+            bail!("meta: fanouts/num_layers mismatch");
+        }
+        if *self.level_sizes.last().unwrap() != self.batch_size {
+            bail!("meta: last level size must equal batch size");
+        }
+        if self.train_num_outputs != 6 * self.num_layers + 2 {
+            bail!("meta: unexpected train_num_outputs");
+        }
+        if !self.level_sizes.windows(2).all(|w| w[0] >= w[1]) {
+            bail!("meta: level sizes must be non-increasing");
+        }
+        for p in ["train.hlo.txt", "eval.hlo.txt"] {
+            if !self.dir.join(p).exists() {
+                bail!("artifact file {} missing in {}", p, self.dir.display());
+            }
+        }
+        Ok(())
+    }
+
+    pub fn block_shapes(&self) -> BlockShapes {
+        BlockShapes::new(self.level_sizes.clone(), self.fanouts.clone())
+    }
+
+    /// (d_in, d_out) per layer; parameters are W [2*d_in, d_out], b [d_out].
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let mut dims = vec![self.feature_dim];
+        dims.extend(std::iter::repeat(self.hidden_dim).take(self.num_layers - 1));
+        dims.push(self.num_classes);
+        (0..self.num_layers).map(|l| (dims[l], dims[l + 1])).collect()
+    }
+
+    /// Total parameter element count (W + b per layer).
+    pub fn num_param_elems(&self) -> usize {
+        self.layer_dims()
+            .iter()
+            .map(|&(i, o)| 2 * i * o + o)
+            .sum()
+    }
+
+    pub fn train_hlo_path(&self) -> PathBuf {
+        self.dir.join("train.hlo.txt")
+    }
+
+    pub fn eval_hlo_path(&self) -> PathBuf {
+        self.dir.join("eval.hlo.txt")
+    }
+}
+
+/// Locate the artifacts directory: $GNS_ARTIFACTS, ./artifacts, or
+/// ../artifacts (tests run from the crate root).
+pub fn artifacts_root() -> PathBuf {
+    if let Ok(p) = std::env::var("GNS_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    for cand in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_meta(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("meta.json"), body).unwrap();
+        std::fs::write(dir.join("train.hlo.txt"), "HloModule x").unwrap();
+        std::fs::write(dir.join("eval.hlo.txt"), "HloModule x").unwrap();
+    }
+
+    fn tiny_meta_json() -> &'static str {
+        r#"{
+            "name": "tiny", "num_layers": 2, "feature_dim": 16,
+            "hidden_dim": 16, "num_classes": 5, "batch_size": 64,
+            "level_sizes": [1024, 256, 64], "fanouts": [3, 3],
+            "train_num_outputs": 14
+        }"#
+    }
+
+    #[test]
+    fn loads_and_derives_shapes() {
+        let dir = std::env::temp_dir().join("gns_meta_ok");
+        write_meta(&dir, tiny_meta_json());
+        let m = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(m.block_shapes().batch_size(), 64);
+        assert_eq!(m.layer_dims(), vec![(16, 16), (16, 5)]);
+        assert_eq!(m.num_param_elems(), 2 * 16 * 16 + 16 + 2 * 16 * 5 + 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_inconsistent_meta() {
+        let dir = std::env::temp_dir().join("gns_meta_bad");
+        write_meta(
+            &dir,
+            &tiny_meta_json().replace("\"num_layers\": 2", "\"num_layers\": 3"),
+        );
+        assert!(ArtifactMeta::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_missing_hlo() {
+        let dir = std::env::temp_dir().join("gns_meta_missing");
+        write_meta(&dir, tiny_meta_json());
+        std::fs::remove_file(dir.join("train.hlo.txt")).unwrap();
+        assert!(ArtifactMeta::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_artifacts_parse_when_present() {
+        let root = artifacts_root().join("tiny");
+        if root.join("meta.json").exists() {
+            let m = ArtifactMeta::load(&root).unwrap();
+            assert_eq!(m.name, "tiny");
+        }
+    }
+}

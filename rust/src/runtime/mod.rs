@@ -1,0 +1,260 @@
+//! PJRT runtime: loads the AOT HLO artifacts and executes train/eval steps.
+//!
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos — 64-bit instruction ids); the text parser
+//! reassigns ids. See /opt/xla-example/README.md and aot.py.
+//!
+//! Train-step state management: the train computation is functional
+//! (params, adam m/v in → updated out). This PJRT build returns outputs as
+//! a single tuple literal (no untupling API), so the optimizer state
+//! round-trips through host literals each step — ~0.3 MB for the default
+//! configs, two orders of magnitude below the x0 feature block that
+//! dominates transfer (by design: that is the paper's bottleneck).
+
+pub mod artifacts;
+pub mod reference;
+
+pub use artifacts::{artifacts_root, ArtifactMeta};
+
+use crate::sampling::MiniBatch;
+use crate::util::rng::Pcg;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+/// Model + optimizer state as host literals (see module docs).
+pub struct TrainState {
+    /// interleaved [W1, b1, W2, b2, …].
+    pub params: Vec<xla::Literal>,
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+    /// 1-based Adam step counter.
+    pub step: u64,
+}
+
+/// Scalar results of one train step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// masked count of correct predictions within the batch.
+    pub correct: f32,
+    pub batch_real: usize,
+}
+
+impl Runtime {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta = ArtifactMeta::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let train_exe = Self::compile(&client, &meta.train_hlo_path())?;
+        let eval_exe = Self::compile(&client, &meta.eval_hlo_path())?;
+        Ok(Runtime { client, train_exe, eval_exe, meta })
+    }
+
+    pub fn load_by_name(name: &str) -> Result<Self> {
+        Self::load(&artifacts_root().join(name))
+    }
+
+    fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))
+    }
+
+    /// Glorot-style init matching python/compile/model.py's scheme (exact
+    /// values differ — only the scale matters for training).
+    pub fn init_state(&self, seed: u64) -> TrainState {
+        let mut rng = Pcg::with_stream(seed, 0x1417);
+        let mut params = Vec::new();
+        let mut m = Vec::new();
+        let mut v = Vec::new();
+        for (d_in, d_out) in self.meta.layer_dims() {
+            let rows = 2 * d_in;
+            let scale = (2.0 / (rows + d_out) as f64).sqrt();
+            let w: Vec<f32> = (0..rows * d_out)
+                .map(|_| (rng.gen_normal() * scale) as f32)
+                .collect();
+            params.push(
+                xla::Literal::vec1(&w)
+                    .reshape(&[rows as i64, d_out as i64])
+                    .expect("reshape W"),
+            );
+            params.push(xla::Literal::vec1(&vec![0f32; d_out]));
+            m.push(zeros2(rows, d_out));
+            m.push(xla::Literal::vec1(&vec![0f32; d_out]));
+            v.push(zeros2(rows, d_out));
+            v.push(xla::Literal::vec1(&vec![0f32; d_out]));
+        }
+        TrainState { params, m, v, step: 0 }
+    }
+
+    /// Run one train step. `x0` is the assembled input-feature block
+    /// (padded to level_sizes[0] × feature_dim).
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        batch: &MiniBatch,
+        x0: &[f32],
+        lr: f32,
+    ) -> Result<StepOutput> {
+        let meta = &self.meta;
+        let n0 = meta.level_sizes[0];
+        anyhow::ensure!(
+            x0.len() == n0 * meta.feature_dim,
+            "x0 block has {} elems, want {}",
+            x0.len(),
+            n0 * meta.feature_dim
+        );
+        state.step += 1;
+        let n_params = state.params.len();
+        // NOTE: the xla crate's `execute(&[Literal])` leaks every input
+        // device buffer (xla_rs.cc releases without deleting — ~6 MB/step
+        // here, found via §Perf RSS profiling). We therefore create the
+        // input buffers ourselves and go through `execute_b`, whose inputs
+        // are freed by the rust wrappers' Drop.
+        let mut args: Vec<xla::PjRtBuffer> =
+            Vec::with_capacity(3 * n_params + 2 + 3 * self.meta.num_layers + 3);
+        for lit in state.params.iter().chain(&state.m).chain(&state.v) {
+            args.push(self.client.buffer_from_host_literal(None, lit)?);
+        }
+        args.push(self.scalar_buf(state.step as f32)?);
+        args.push(self.scalar_buf(lr)?);
+        self.batch_buffers(batch, x0, &mut args)?;
+
+        let mut result = self.train_exe.execute_b::<xla::PjRtBuffer>(&args)?[0][0]
+            .to_literal_sync()?;
+        let mut outs = result.decompose_tuple()?;
+        anyhow::ensure!(
+            outs.len() == meta.train_num_outputs,
+            "train step returned {} outputs, want {}",
+            outs.len(),
+            meta.train_num_outputs
+        );
+        let correct = outs.pop().unwrap().to_vec::<f32>()?[0];
+        let loss = outs.pop().unwrap().to_vec::<f32>()?[0];
+        // outs = params (n) + m (n) + v (n)
+        let v_new = outs.split_off(2 * n_params);
+        let m_new = outs.split_off(n_params);
+        state.params = outs;
+        state.m = m_new;
+        state.v = v_new;
+        Ok(StepOutput { loss, correct, batch_real: batch.targets.len() })
+    }
+
+    /// Forward-only evaluation: returns row-major logits
+    /// [batch_size × num_classes] (padded rows included; callers mask).
+    pub fn eval_step(
+        &self,
+        state: &TrainState,
+        batch: &MiniBatch,
+        x0: &[f32],
+    ) -> Result<Vec<f32>> {
+        let mut args: Vec<xla::PjRtBuffer> = Vec::new();
+        for lit in state.params.iter() {
+            args.push(self.client.buffer_from_host_literal(None, lit)?);
+        }
+        // eval takes batch tensors sans trailing labels/mask
+        self.batch_buffers(batch, x0, &mut args)?;
+        args.truncate(args.len() - 2);
+        let result = self.eval_exe.execute_b::<xla::PjRtBuffer>(&args)?[0][0]
+            .to_literal_sync()?;
+        let logits = result.to_tuple1()?;
+        Ok(logits.to_vec::<f32>()?)
+    }
+
+    fn scalar_buf(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+
+    /// Marshal a mini-batch into device buffers in the meta.json argument
+    /// order: x0, per-layer (self_idx, idx, w), labels, mask. Direct
+    /// host-slice → device upload (no intermediate Literal copy).
+    fn batch_buffers(
+        &self,
+        batch: &MiniBatch,
+        x0: &[f32],
+        out: &mut Vec<xla::PjRtBuffer>,
+    ) -> Result<()> {
+        let meta = &self.meta;
+        let n0 = meta.level_sizes[0];
+        let f = meta.feature_dim;
+        let c = &self.client;
+        out.push(c.buffer_from_host_buffer(x0, &[n0, f], None)?);
+        anyhow::ensure!(batch.layers.len() == meta.num_layers, "layer count mismatch");
+        for (l, blk) in batch.layers.iter().enumerate() {
+            let cap = meta.level_sizes[l + 1];
+            let k = meta.fanouts[l];
+            out.push(c.buffer_from_host_buffer(&blk.self_idx, &[cap], None)?);
+            out.push(c.buffer_from_host_buffer(&blk.idx, &[cap, k], None)?);
+            out.push(c.buffer_from_host_buffer(&blk.w, &[cap, k], None)?);
+        }
+        out.push(c.buffer_from_host_buffer(&batch.labels, &[meta.batch_size], None)?);
+        out.push(c.buffer_from_host_buffer(&batch.mask, &[meta.batch_size], None)?);
+        Ok(())
+    }
+}
+
+fn zeros2(rows: usize, cols: usize) -> xla::Literal {
+    xla::Literal::vec1(&vec![0f32; rows * cols])
+        .reshape(&[rows as i64, cols as i64])
+        .expect("reshape zeros")
+}
+
+/// Micro-F1 over logits (= accuracy for single-label classification, the
+/// paper's metric).
+pub fn micro_f1(logits: &[f32], labels: &[i32], mask: &[f32], num_classes: usize) -> f64 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (i, (&lab, &m)) in labels.iter().zip(mask).enumerate() {
+        if m == 0.0 {
+            continue;
+        }
+        let row = &logits[i * num_classes..(i + 1) * num_classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j as i32)
+            .unwrap_or(-1);
+        total += 1;
+        if pred == lab {
+            correct += 1;
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        correct as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micro_f1_counts_masked() {
+        // 2 classes, 3 rows, last masked out
+        let logits = vec![0.9, 0.1, 0.2, 0.8, 0.7, 0.3];
+        let labels = vec![0, 1, 1];
+        let mask = vec![1.0, 1.0, 0.0];
+        assert_eq!(micro_f1(&logits, &labels, &mask, 2), 1.0);
+        let labels2 = vec![1, 1, 1];
+        assert_eq!(micro_f1(&logits, &labels2, &mask, 2), 0.5);
+    }
+
+    #[test]
+    fn micro_f1_empty_mask_is_zero() {
+        assert_eq!(micro_f1(&[], &[], &[], 3), 0.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Pure-rust reference forward pass — the cross-language oracle.
+//!
+//! Computes the same GraphSAGE forward as the AOT HLO (python/compile/
+//! model.py) directly on host floats. Used by integration tests to assert
+//! that HLO-executed logits match an independent implementation
+//! (rust ⇄ JAX/Pallas agreement), and available as a slow fallback when
+//! artifacts are absent.
+
+use super::ArtifactMeta;
+use crate::sampling::MiniBatch;
+
+/// Host-side copy of the model parameters.
+#[derive(Debug, Clone)]
+pub struct HostParams {
+    /// per layer: (W [2*d_in × d_out] row-major, b [d_out]).
+    pub layers: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl HostParams {
+    /// Extract from the runtime's literal state.
+    pub fn from_state(state: &super::TrainState) -> anyhow::Result<Self> {
+        let mut layers = Vec::new();
+        for pair in state.params.chunks(2) {
+            let w = pair[0].to_vec::<f32>()?;
+            let b = pair[1].to_vec::<f32>()?;
+            layers.push((w, b));
+        }
+        Ok(HostParams { layers })
+    }
+}
+
+/// Forward pass over one mini-batch; returns row-major logits
+/// [batch_size × num_classes] matching Runtime::eval_step.
+pub fn forward(meta: &ArtifactMeta, params: &HostParams, batch: &MiniBatch, x0: &[f32]) -> Vec<f32> {
+    let dims = meta.layer_dims();
+    assert_eq!(params.layers.len(), dims.len());
+    let mut h = x0.to_vec(); // [cap_0 × d0]
+    let mut d_in = meta.feature_dim;
+    for (l, ((w, b), &(din_l, d_out))) in
+        params.layers.iter().zip(dims.iter()).enumerate()
+    {
+        assert_eq!(d_in, din_l);
+        let blk = &batch.layers[l];
+        let cap = meta.level_sizes[l + 1];
+        let k = meta.fanouts[l];
+        let relu = l + 1 < dims.len();
+        let mut out = vec![0f32; cap * d_out];
+        // aggregate + affine per node
+        let mut agg = vec![0f32; d_in];
+        for i in 0..cap {
+            // Σ_k w·h[idx]
+            agg.iter_mut().for_each(|x| *x = 0.0);
+            for kk in 0..k {
+                let wt = blk.w[i * k + kk];
+                if wt == 0.0 {
+                    continue;
+                }
+                let src = blk.idx[i * k + kk] as usize;
+                let row = &h[src * d_in..(src + 1) * d_in];
+                for (a, &x) in agg.iter_mut().zip(row) {
+                    *a += wt * x;
+                }
+            }
+            let self_row = blk.self_idx[i] as usize;
+            let hself = &h[self_row * d_in..(self_row + 1) * d_in];
+            // z = concat(hself, agg) @ W + b ; W is [2*d_in × d_out]
+            let orow = &mut out[i * d_out..(i + 1) * d_out];
+            orow.copy_from_slice(b);
+            for (r, &x) in hself.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let wrow = &w[r * d_out..(r + 1) * d_out];
+                for (o, &ww) in orow.iter_mut().zip(wrow) {
+                    *o += x * ww;
+                }
+            }
+            for (r, &x) in agg.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let wrow = &w[(d_in + r) * d_out..(d_in + r + 1) * d_out];
+                for (o, &ww) in orow.iter_mut().zip(wrow) {
+                    *o += x * ww;
+                }
+            }
+            if relu {
+                for o in orow.iter_mut() {
+                    if *o < 0.0 {
+                        *o = 0.0;
+                    }
+                }
+            }
+        }
+        h = out;
+        d_in = d_out;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::{BatchStats, LayerBlock};
+
+    fn meta_1layer() -> ArtifactMeta {
+        ArtifactMeta {
+            name: "ref".into(),
+            num_layers: 1,
+            feature_dim: 1,
+            hidden_dim: 1,
+            num_classes: 1,
+            batch_size: 1,
+            level_sizes: vec![2, 1],
+            fanouts: vec![2],
+            train_num_outputs: 8,
+            dir: std::path::PathBuf::new(),
+        }
+    }
+
+    #[test]
+    fn matches_hand_computed_layer() {
+        // identical to python test_sage_layer_ref_known_values
+        let meta = meta_1layer();
+        let params = HostParams { layers: vec![(vec![1.0, 10.0], vec![0.5])] };
+        let batch = MiniBatch {
+            input_nodes: vec![0, 1],
+            input_cached: vec![false, false],
+            layers: vec![LayerBlock {
+                self_idx: vec![0],
+                idx: vec![1, 1],
+                w: vec![0.5, 0.5],
+                n_real: 1,
+            }],
+            labels: vec![0],
+            mask: vec![1.0],
+            targets: vec![0],
+            stats: BatchStats::default(),
+        };
+        let x0 = vec![1.0, 2.0];
+        let logits = forward(&meta, &params, &batch, &x0);
+        // concat(1, 2) @ [1, 10] + 0.5 = 21.5 (single layer: no relu)
+        assert_eq!(logits, vec![21.5]);
+    }
+}

@@ -1,0 +1,97 @@
+//! Importance-sampling coefficients (paper §3.4, eqs. 11–12).
+//!
+//! Cache-sampled neighbors are not uniform draws from N(v): a neighbor u
+//! is available only if it landed in the cache (prob p^C_u, eq. 11) and is
+//! then selected among v's cached neighbors (the k / min(k, N_C(v)) factor,
+//! eq. 12). Rescaling aggregated embeddings by 1/p keeps the neighborhood
+//! aggregation unbiased (eq. 5/10).
+
+/// Probability that node u appears in a cache of size `cache_size` drawn
+/// (approximately independently) with per-draw probability `p_u` (eq. 11):
+/// p^C_u = 1 − (1 − p_u)^{|C|}.
+pub fn cache_inclusion_prob(p_u: f64, cache_size: usize) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&p_u));
+    // log1p-style stable evaluation for small p_u
+    let q = (1.0 - p_u).max(0.0);
+    1.0 - q.powi(cache_size as i32).clamp(0.0, 1.0)
+}
+
+/// Full eq. (12) coefficient for one sampled neighbor u' of node v:
+/// p^{(ℓ)}_{u'} = p^C_{u'} · k / min(k, N_C(v)),
+/// where N_C(v) is the number of v's neighbors present in the cache.
+pub fn sampling_coefficient(p_u: f64, cache_size: usize, fanout: usize, n_cached: usize) -> f64 {
+    debug_assert!(n_cached > 0);
+    let p_c = cache_inclusion_prob(p_u, cache_size);
+    p_c * fanout as f64 / fanout.min(n_cached) as f64
+}
+
+/// Edge weight for the device aggregation: the model computes Σ w·h with a
+/// mean-style estimator, so cache-sampled entries carry (1/s)·(1/p^{(ℓ)})
+/// before row self-normalization (see gns::mod for the normalization
+/// rationale).
+pub fn edge_weight(p_u: f64, cache_size: usize, fanout: usize, n_cached: usize) -> f64 {
+    let coeff = sampling_coefficient(p_u, cache_size, fanout, n_cached);
+    // guard degenerate probabilities: a node with p≈0 should never have
+    // been cached; clamp keeps the weight finite.
+    1.0 / coeff.max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inclusion_prob_limits() {
+        assert_eq!(cache_inclusion_prob(0.0, 100), 0.0);
+        assert!((cache_inclusion_prob(1.0, 1) - 1.0).abs() < 1e-12);
+        // small p, large cache: ≈ 1 - exp(-p|C|)
+        let p = 1e-4;
+        let c = 5000;
+        let got = cache_inclusion_prob(p, c);
+        let approx = 1.0 - (-p * c as f64).exp();
+        assert!((got - approx).abs() < 1e-3, "got={got} approx={approx}");
+    }
+
+    #[test]
+    fn inclusion_monotone_in_cache_size() {
+        let p = 0.01;
+        let a = cache_inclusion_prob(p, 10);
+        let b = cache_inclusion_prob(p, 100);
+        let c = cache_inclusion_prob(p, 1000);
+        assert!(a < b && b < c);
+    }
+
+    #[test]
+    fn coefficient_reduces_to_inclusion_when_cache_rich() {
+        // if v has ≥ k cached neighbors the k/min(k,N_C) factor is 1
+        let p = 0.05;
+        let got = sampling_coefficient(p, 200, 5, 9);
+        assert!((got - cache_inclusion_prob(p, 200)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coefficient_scales_up_when_cache_poor() {
+        // only 2 cached neighbors for fanout 6 → factor 3
+        let p = 0.05;
+        let rich = sampling_coefficient(p, 200, 6, 6);
+        let poor = sampling_coefficient(p, 200, 6, 2);
+        assert!((poor / rich - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn edge_weight_inverse_and_finite() {
+        let w = edge_weight(0.01, 100, 5, 3);
+        let c = sampling_coefficient(0.01, 100, 5, 3);
+        assert!((w * c - 1.0).abs() < 1e-9);
+        // degenerate p=0 stays finite
+        assert!(edge_weight(0.0, 100, 5, 3).is_finite());
+    }
+
+    #[test]
+    fn high_prob_nodes_get_lower_weight() {
+        // frequently-cached (hub) nodes must be down-weighted vs rare ones
+        let hub = edge_weight(0.2, 100, 5, 5);
+        let rare = edge_weight(0.001, 100, 5, 5);
+        assert!(hub < rare);
+    }
+}

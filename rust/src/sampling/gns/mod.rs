@@ -1,0 +1,431 @@
+//! Global Neighbor Sampling — the paper's contribution (§3).
+//!
+//! Differences from node-wise sampling (neighbor.rs):
+//!
+//! 1. A periodically-refreshed **global cache** of nodes whose features are
+//!    GPU-resident (cache.rs; refresh period = Table 6's P knob).
+//! 2. Neighbor sampling **prioritizes cached neighbors**, found in O(1) via
+//!    the induced cache subgraph; hidden layers top up with uniform
+//!    neighbors when the cache can't fill the fan-out, while the **input
+//!    layer samples exclusively from the cache** (paper §4.1 setup) — this
+//!    is what collapses the input-level node count (Table 4).
+//! 3. Cache-sampled entries carry **importance coefficients** (eqs. 11–12,
+//!    importance.rs) so aggregation stays unbiased; rows are then
+//!    self-normalized to unit weight-sum, matching the mean-aggregator
+//!    convention of the NS baseline (a standard variance-bias tradeoff —
+//!    for NS rows this reduces exactly to w = 1/s).
+
+pub mod cache;
+pub mod importance;
+
+pub use cache::{CachePolicy, CacheSampler, CacheState};
+
+use super::*;
+use crate::graph::CsrGraph;
+use crate::util::rng::Pcg;
+use std::sync::Arc;
+
+/// Tunables (paper defaults: 1% cache, refresh every epoch, input layer
+/// cache-only).
+#[derive(Debug, Clone)]
+pub struct GnsConfig {
+    pub cache_fraction: f64,
+    /// Refresh the cache every `update_period` epochs (Table 6's P).
+    pub update_period: usize,
+    pub policy: CachePolicy,
+    /// Sample the input layer only from the cache (paper setting). When
+    /// false, the input layer tops up like hidden layers (ablation).
+    pub input_layer_cache_only: bool,
+    pub seed: u64,
+}
+
+impl Default for GnsConfig {
+    fn default() -> Self {
+        GnsConfig {
+            cache_fraction: 0.01,
+            update_period: 1,
+            policy: CachePolicy::Degree,
+            input_layer_cache_only: true,
+            seed: 0,
+        }
+    }
+}
+
+/// Cache state shared by all GNS sampler instances (the paper parallelizes
+/// sampling across workers; all of them must see the same cache so the
+/// device-resident feature cache stays consistent). The *leader* instance
+/// refreshes at epoch boundaries; workers take cheap Arc snapshots.
+pub struct GnsShared {
+    sampler: std::sync::Mutex<CacheSampler>,
+    state: std::sync::RwLock<Arc<CacheState>>,
+}
+
+pub struct GnsSampler {
+    graph: Arc<CsrGraph>,
+    shapes: BlockShapes,
+    cfg: GnsConfig,
+    shared: Arc<GnsShared>,
+    /// only the leader refreshes the cache in begin_epoch.
+    is_leader: bool,
+    /// per-batch snapshot of the shared cache.
+    state: Arc<CacheState>,
+    rng: Pcg,
+    idx_scratch: Vec<usize>,
+}
+
+impl GnsSampler {
+    pub fn new(
+        graph: Arc<CsrGraph>,
+        shapes: BlockShapes,
+        train_set: &[NodeId],
+        cfg: GnsConfig,
+    ) -> Self {
+        let mut cache_sampler = CacheSampler::new(
+            &graph,
+            train_set,
+            cfg.policy.clone(),
+            cfg.cache_fraction,
+            cfg.seed,
+        );
+        let state = Arc::new(cache_sampler.sample(&graph));
+        let shared = Arc::new(GnsShared {
+            sampler: std::sync::Mutex::new(cache_sampler),
+            state: std::sync::RwLock::new(state.clone()),
+        });
+        let rng = Pcg::with_stream(cfg.seed, 0x6E5);
+        GnsSampler {
+            graph, shapes, cfg, shared, is_leader: true, state, rng,
+            idx_scratch: Vec::with_capacity(64),
+        }
+    }
+
+    /// A worker instance sharing this sampler's cache (own RNG stream).
+    pub fn worker_clone(&self, worker_id: u64) -> Self {
+        self.instance(worker_id, false)
+    }
+
+    /// An instance sharing this sampler's cache. Exactly one live instance
+    /// should be the leader (it alone refreshes the cache in begin_epoch);
+    /// the Trainer's factory convention is: id 0 = leader.
+    pub fn instance(&self, worker_id: u64, is_leader: bool) -> Self {
+        GnsSampler {
+            graph: self.graph.clone(),
+            shapes: self.shapes.clone(),
+            cfg: self.cfg.clone(),
+            shared: self.shared.clone(),
+            is_leader,
+            state: self.state.clone(),
+            rng: Pcg::with_stream(self.cfg.seed ^ worker_id, 0x6E50 + worker_id),
+            idx_scratch: Vec::with_capacity(64),
+        }
+    }
+
+    pub fn cache_state(&self) -> Arc<CacheState> {
+        self.shared.state.read().unwrap().clone()
+    }
+
+    /// Sample neighbors of `v` for layer `layer` (0-based; 0 = input
+    /// layer). Returns (global ids, weights) where weights carry the
+    /// eq. 11–12 coefficients for cache draws and 1.0 for uniform draws,
+    /// pre-normalization.
+    fn sample_one(
+        &mut self,
+        v: NodeId,
+        fanout: usize,
+        is_input_layer: bool,
+        out: &mut Vec<(NodeId, f64)>,
+    ) {
+        out.clear();
+        let cached = self.state.subgraph.cached_neighbors(v);
+        let n_cached = cached.len();
+        let cache_len = self.state.len();
+        if n_cached > 0 {
+            let take = fanout.min(n_cached);
+            self.rng.sample_distinct_into(n_cached, take, &mut self.idx_scratch);
+            let picks = std::mem::take(&mut self.idx_scratch);
+            for &i in &picks {
+                let cpos = cached[i] as usize;
+                let u = self.state.nodes[cpos];
+                let w = importance::edge_weight(
+                    self.state.probs[u as usize],
+                    cache_len,
+                    fanout,
+                    n_cached,
+                );
+                out.push((u, w));
+            }
+            self.idx_scratch = picks;
+        }
+        // Hidden layers top up from the full neighborhood; the input layer
+        // is cache-only in the paper's configuration.
+        if out.len() < fanout && (!is_input_layer || !self.cfg.input_layer_cache_only) {
+            let nbrs = self.graph.neighbors(v);
+            if !nbrs.is_empty() {
+                let want = fanout - out.len();
+                // best-effort distinct top-up: sample up to 4*want draws;
+                // out is tiny (≤ fanout) so a linear dup scan beats hashing
+                let mut added = 0usize;
+                let mut tries = 0usize;
+                while added < want && tries < 4 * want + 8 {
+                    tries += 1;
+                    let u = nbrs[self.rng.gen_range(nbrs.len())];
+                    if !out.iter().any(|&(x, _)| x == u) {
+                        out.push((u, 1.0));
+                        added += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Sampler for GnsSampler {
+    fn name(&self) -> &'static str {
+        "gns"
+    }
+
+    fn begin_epoch(&mut self, epoch: usize) {
+        if self.is_leader && epoch > 0 && epoch % self.cfg.update_period.max(1) == 0 {
+            let mut cs = self.shared.sampler.lock().unwrap();
+            let fresh = Arc::new(cs.sample(&self.graph));
+            *self.shared.state.write().unwrap() = fresh;
+        }
+        // every instance re-snapshots at epoch start
+        self.state = self.shared.state.read().unwrap().clone();
+    }
+
+    fn sample_batch(&mut self, targets: &[NodeId], labels: &[u16]) -> anyhow::Result<MiniBatch> {
+        let shapes = self.shapes.clone();
+        let num_layers = shapes.num_layers();
+        anyhow::ensure!(targets.len() <= shapes.batch_size());
+
+        let mut stats = BatchStats::default();
+        let mut upper: Vec<NodeId> = targets.to_vec();
+        let mut layers_rev: Vec<LayerBlock> = Vec::with_capacity(num_layers);
+        let mut scratch: Vec<(NodeId, f64)> = Vec::new();
+        for l in (0..num_layers).rev() {
+            let fanout = shapes.fanouts[l];
+            let is_input_layer = l == 0;
+            let cap_lower = shapes.level_sizes[l];
+            let mut lb = LevelBuilder::seed(&upper, cap_lower);
+            let mut edges: Vec<Vec<(u32, f32)>> = Vec::with_capacity(upper.len());
+            let upper_nodes = upper.clone();
+            for &v in &upper_nodes {
+                self.sample_one(v, fanout, is_input_layer, &mut scratch);
+                let mut nbrs: Vec<(u32, f32)> = Vec::with_capacity(scratch.len());
+                let mut wsum = 0.0f64;
+                for &(u, w) in scratch.iter() {
+                    if let Some(p) = lb.intern(u) {
+                        nbrs.push((p, w as f32));
+                        wsum += w;
+                    }
+                }
+                // self-normalize to unit sum (mean-aggregator convention;
+                // reduces to 1/s when all weights are equal)
+                if wsum > 0.0 {
+                    let inv = (1.0 / wsum) as f32;
+                    for e in &mut nbrs {
+                        e.1 *= inv;
+                    }
+                } else {
+                    stats.isolated_nodes += 1;
+                }
+                stats.edges += nbrs.len();
+                edges.push(nbrs);
+            }
+            stats.truncated_neighbors += lb.truncated;
+            let (blk, _) = build_layer_block(&edges, shapes.level_sizes[l + 1], fanout);
+            layers_rev.push(blk);
+            upper = lb.nodes;
+        }
+        layers_rev.reverse();
+
+        let input_cached: Vec<bool> =
+            upper.iter().map(|&v| self.state.contains(v)).collect();
+        stats.cached_inputs = input_cached.iter().filter(|&&c| c).count();
+
+        let (lab, mask) = pad_labels(targets, labels, shapes.batch_size());
+        Ok(MiniBatch {
+            input_nodes: upper,
+            input_cached,
+            layers: layers_rev,
+            labels: lab,
+            mask,
+            targets: targets.to_vec(),
+            stats,
+        })
+    }
+
+    fn cache_generation(&self) -> u64 {
+        self.state.generation
+    }
+
+    fn cache_nodes(&self) -> Option<Vec<NodeId>> {
+        Some(self.state.nodes.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::neighbor::NeighborSampler;
+    use super::super::testutil::*;
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    fn setup(batch: usize, frac: f64) -> (crate::features::Dataset, BlockShapes, GnsSampler) {
+        let ds = tiny_dataset(2);
+        let shapes = tiny_shapes(batch);
+        let s = GnsSampler::new(
+            Arc::new(ds.graph.clone()),
+            shapes.clone(),
+            &ds.train,
+            GnsConfig { cache_fraction: frac, seed: 11, ..Default::default() },
+        );
+        (ds, shapes, s)
+    }
+
+    #[test]
+    fn batch_validates_and_reports_cache_stats() {
+        let (ds, shapes, mut s) = setup(32, 0.02);
+        let mb = s.sample_batch(&ds.train[..32], &ds.labels).unwrap();
+        validate_batch(&mb, &shapes).unwrap();
+        assert!(mb.stats.cached_inputs > 0, "no cached inputs sampled");
+        assert_eq!(
+            mb.stats.cached_inputs,
+            mb.input_cached.iter().filter(|&&c| c).count()
+        );
+    }
+
+    #[test]
+    fn gns_shrinks_input_level_vs_ns() {
+        // The headline mechanism (Table 4): with the input layer sampled
+        // from the cache only, GNS's level-0 is much smaller than NS's.
+        let (ds, shapes, mut gns) = setup(64, 0.01);
+        let mut ns = NeighborSampler::new(Arc::new(ds.graph.clone()), shapes.clone(), 11);
+        let a = gns.sample_batch(&ds.train[..64], &ds.labels).unwrap();
+        let b = ns.sample_batch(&ds.train[..64], &ds.labels).unwrap();
+        assert!(
+            (a.num_input_nodes() as f64) < 0.7 * b.num_input_nodes() as f64,
+            "gns {} vs ns {}",
+            a.num_input_nodes(),
+            b.num_input_nodes()
+        );
+    }
+
+    #[test]
+    fn cache_refresh_respects_update_period() {
+        let ds = tiny_dataset(3);
+        let shapes = tiny_shapes(16);
+        let mut s = GnsSampler::new(
+            Arc::new(ds.graph.clone()),
+            shapes,
+            &ds.train,
+            GnsConfig { update_period: 2, seed: 5, ..Default::default() },
+        );
+        let g0 = s.cache_state().generation;
+        s.begin_epoch(0);
+        assert_eq!(s.cache_state().generation, g0, "epoch 0 must not refresh");
+        s.begin_epoch(1);
+        assert_eq!(s.cache_state().generation, g0, "period 2: epoch 1 no refresh");
+        s.begin_epoch(2);
+        assert_eq!(s.cache_state().generation, g0 + 1, "epoch 2 refreshes");
+        s.begin_epoch(4);
+        assert_eq!(s.cache_state().generation, g0 + 2);
+    }
+
+    #[test]
+    fn hidden_layers_top_up_but_input_is_cache_only() {
+        let (ds, _shapes, mut s) = setup(32, 0.005);
+        let mb = s.sample_batch(&ds.train[..32], &ds.labels).unwrap();
+        // every non-self input-level node beyond the level-1 prefix must be
+        // cached (input layer draws only from the cache)
+        let n1 = mb.layers[0].n_real;
+        for (i, &v) in mb.input_nodes.iter().enumerate().skip(n1) {
+            assert!(
+                s.cache_state().contains(v),
+                "input node {v} at pos {i} not cached"
+            );
+        }
+    }
+
+    #[test]
+    fn weights_row_normalized() {
+        let (ds, shapes, mut s) = setup(16, 0.02);
+        let mb = s.sample_batch(&ds.train[..16], &ds.labels).unwrap();
+        for (l, blk) in mb.layers.iter().enumerate() {
+            let k = shapes.fanouts[l];
+            for i in 0..blk.n_real {
+                let sum: f32 = (0..k).map(|kk| blk.w[i * k + kk]).sum();
+                let nz = (0..k).filter(|&kk| blk.w[i * k + kk] != 0.0).count();
+                if nz > 0 {
+                    assert!((sum - 1.0).abs() < 1e-4, "layer {l} row {i} sum {sum}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hub_neighbors_downweighted_vs_rare() {
+        // importance correction: within one row, a high-degree (high-p)
+        // cached neighbor gets less weight than a low-degree one.
+        let (ds, _shapes, mut s) = setup(32, 0.05);
+        let mb = s.sample_batch(&ds.train[..32], &ds.labels).unwrap();
+        let k = 3usize;
+        let blk = &mb.layers[0];
+        let n1 = blk.n_real;
+        let mut checked = false;
+        for i in 0..n1 {
+            let mut entries: Vec<(u32, f32)> = (0..k)
+                .filter(|&kk| blk.w[i * k + kk] > 0.0)
+                .map(|kk| (blk.idx[i * k + kk] as u32, blk.w[i * k + kk]))
+                .collect();
+            if entries.len() < 2 {
+                continue;
+            }
+            entries.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let lo = mb.input_nodes[entries[0].0 as usize];
+            let hi = mb.input_nodes[entries.last().unwrap().0 as usize];
+            if ds.graph.degree(lo) != ds.graph.degree(hi) {
+                assert!(
+                    ds.graph.degree(lo) >= ds.graph.degree(hi),
+                    "row {i}: lighter weight should go to higher degree"
+                );
+                checked = true;
+                break;
+            }
+        }
+        assert!(checked, "no comparable row found");
+    }
+
+    #[test]
+    fn prop_gns_batches_validate_across_configs() {
+        let ds = tiny_dataset(7);
+        let g = Arc::new(ds.graph.clone());
+        check(10, |gen| {
+            let batch = gen.usize(4..40);
+            let shapes = tiny_shapes(batch);
+            let frac = gen.f64(0.001..0.05);
+            let period = gen.usize(1..4);
+            let mut s = GnsSampler::new(
+                g.clone(),
+                shapes.clone(),
+                &ds.train,
+                GnsConfig {
+                    cache_fraction: frac,
+                    update_period: period,
+                    seed: gen.rng.next_u64(),
+                    ..Default::default()
+                },
+            );
+            s.begin_epoch(gen.usize(0..5));
+            let n_t = gen.usize(1..batch + 1).min(ds.train.len());
+            let mb = s
+                .sample_batch(&ds.train[..n_t], &ds.labels)
+                .map_err(|e| e.to_string())?;
+            validate_batch(&mb, &shapes)?;
+            prop_assert!(mb.stats.cached_inputs <= mb.num_input_nodes());
+            Ok(())
+        });
+    }
+}

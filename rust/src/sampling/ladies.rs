@@ -1,0 +1,269 @@
+//! LADIES — LAyer-Dependent Importance Sampling (Zou et al., NeurIPS'19),
+//! the layer-wise baseline of the paper (§2.1).
+//!
+//! Per mini-batch, walking from the output layer down: compute, over the
+//! *entire* candidate frontier (union of current-layer neighborhoods), the
+//! layer-dependent importance distribution
+//!
+//! ```text
+//! q_u ∝ Σ_{v ∈ layer} P̂_{vu}²,   P̂ = D^{-1/2} A D^{-1/2},
+//! ```
+//!
+//! sample `s_layer` nodes from q, and connect each layer node to the
+//! sampled nodes that are its neighbors, with weights ∝ P̂_{vu}/q_u
+//! (row-normalized). This recomputation per layer per batch is exactly the
+//! overhead the paper criticizes; nodes that end up with *zero* sampled
+//! in-set neighbors are the "isolated nodes" of Table 5.
+
+use super::*;
+use crate::graph::CsrGraph;
+use crate::util::rng::Pcg;
+use std::sync::Arc;
+
+pub struct LadiesSampler {
+    graph: Arc<CsrGraph>,
+    shapes: BlockShapes,
+    /// nodes sampled per layer (the 512 / 5000 of Table 3).
+    s_layer: usize,
+    rng: Pcg,
+    /// cumulative isolated-node telemetry for Table 5.
+    pub isolated_first_layer: u64,
+    pub first_layer_nodes: u64,
+}
+
+impl LadiesSampler {
+    pub fn new(graph: Arc<CsrGraph>, shapes: BlockShapes, s_layer: usize, seed: u64) -> Self {
+        LadiesSampler {
+            graph,
+            shapes,
+            s_layer,
+            rng: Pcg::with_stream(seed, 0x1AD1E5),
+            isolated_first_layer: 0,
+            first_layer_nodes: 0,
+        }
+    }
+
+    /// Weighted sampling of `k` distinct candidates from (candidate, q)
+    /// pairs via Efraimidis–Spirakis exponential keys — one pass, no alias
+    /// table build per batch.
+    fn weighted_distinct(
+        rng: &mut Pcg,
+        cands: &[(NodeId, f64)],
+        k: usize,
+    ) -> Vec<NodeId> {
+        if cands.len() <= k {
+            return cands.iter().map(|&(v, _)| v).collect();
+        }
+        // keep the k largest keys u^(1/w) ⇔ smallest -ln(u)/w
+        let mut heap: std::collections::BinaryHeap<(OrderedF64, NodeId)> =
+            std::collections::BinaryHeap::with_capacity(k + 1);
+        for &(v, q) in cands {
+            if q <= 0.0 {
+                continue;
+            }
+            let key = -(1.0 - rng.gen_f64()).ln() / q; // Exp(q) arrival time
+            heap.push((OrderedF64(key), v));
+            if heap.len() > k {
+                heap.pop(); // drop the largest arrival time
+            }
+        }
+        heap.into_iter().map(|(_, v)| v).collect()
+    }
+}
+
+/// Max-heap ordering for f64 keys (no total order on f64 in std).
+#[derive(PartialEq)]
+struct OrderedF64(f64);
+impl Eq for OrderedF64 {}
+impl PartialOrd for OrderedF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrderedF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+impl Sampler for LadiesSampler {
+    fn name(&self) -> &'static str {
+        "ladies"
+    }
+
+    fn begin_epoch(&mut self, _epoch: usize) {}
+
+    fn sample_batch(&mut self, targets: &[NodeId], labels: &[u16]) -> anyhow::Result<MiniBatch> {
+        let shapes = self.shapes.clone();
+        let num_layers = shapes.num_layers();
+        anyhow::ensure!(targets.len() <= shapes.batch_size());
+
+        let mut stats = BatchStats::default();
+        let mut upper: Vec<NodeId> = targets.to_vec();
+        let mut layers_rev: Vec<LayerBlock> = Vec::with_capacity(num_layers);
+        for l in (0..num_layers).rev() {
+            let fanout = shapes.fanouts[l];
+            let cap_lower = shapes.level_sizes[l];
+
+            // 1. frontier importance distribution q over the union of
+            //    neighborhoods — THE expensive step LADIES pays per layer.
+            let mut q: HashMap<NodeId, f64> = HashMap::new();
+            for &v in &upper {
+                let dv = self.graph.degree(v).max(1) as f64;
+                for &u in self.graph.neighbors(v) {
+                    let du = self.graph.degree(u).max(1) as f64;
+                    // P̂_vu² = 1/(deg v · deg u)
+                    *q.entry(u).or_insert(0.0) += 1.0 / (dv * du);
+                }
+            }
+            let cands: Vec<(NodeId, f64)> = q.iter().map(|(&v, &w)| (v, w)).collect();
+
+            // 2. sample s_layer nodes from q
+            let sampled = Self::weighted_distinct(&mut self.rng, &cands, self.s_layer);
+
+            // 3. build the lower level: upper nodes first (self paths),
+            //    then the layer-sampled nodes.
+            let mut lb = LevelBuilder::seed(&upper, cap_lower);
+            let mut in_set: HashMap<NodeId, u32> = HashMap::with_capacity(sampled.len() * 2);
+            for &u in &sampled {
+                if let Some(p) = lb.intern(u) {
+                    in_set.insert(u, p);
+                }
+            }
+            stats.truncated_neighbors += lb.truncated;
+
+            // 4. connect: each upper node to its sampled in-set neighbors,
+            //    weight ∝ P̂_vu / q_u, row-normalized; cap at fanout.
+            let mut edges: Vec<Vec<(u32, f32)>> = Vec::with_capacity(upper.len());
+            for &v in &upper {
+                let dv = self.graph.degree(v).max(1) as f64;
+                let mut nbrs: Vec<(u32, f32)> = Vec::new();
+                for &u in self.graph.neighbors(v) {
+                    if let Some(&p) = in_set.get(&u) {
+                        let du = self.graph.degree(u).max(1) as f64;
+                        let p_hat = 1.0 / (dv * du).sqrt();
+                        let qu = q[&u];
+                        nbrs.push((p, (p_hat / qu) as f32));
+                        if nbrs.len() >= fanout {
+                            break;
+                        }
+                    }
+                }
+                let wsum: f32 = nbrs.iter().map(|e| e.1).sum();
+                if wsum > 0.0 {
+                    for e in &mut nbrs {
+                        e.1 /= wsum;
+                    }
+                } else {
+                    stats.isolated_nodes += 1;
+                    if l == 0 {
+                        self.isolated_first_layer += 1;
+                    }
+                }
+                if l == 0 {
+                    self.first_layer_nodes += 1;
+                }
+                stats.edges += nbrs.len();
+                edges.push(nbrs);
+            }
+            let (blk, _) = build_layer_block(&edges, shapes.level_sizes[l + 1], fanout);
+            layers_rev.push(blk);
+            upper = lb.nodes;
+        }
+        layers_rev.reverse();
+
+        let (lab, mask) = pad_labels(targets, labels, shapes.batch_size());
+        let input_cached = vec![false; upper.len()];
+        Ok(MiniBatch {
+            input_nodes: upper,
+            input_cached,
+            layers: layers_rev,
+            labels: lab,
+            mask,
+            targets: targets.to_vec(),
+            stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn batch_validates() {
+        let ds = tiny_dataset(4);
+        let shapes = tiny_shapes(32);
+        let mut s = LadiesSampler::new(Arc::new(ds.graph.clone()), shapes.clone(), 128, 3);
+        let mb = s.sample_batch(&ds.train[..32], &ds.labels).unwrap();
+        validate_batch(&mb, &shapes).unwrap();
+    }
+
+    #[test]
+    fn layer_size_bounded_by_s_layer() {
+        let ds = tiny_dataset(4);
+        let shapes = tiny_shapes(32);
+        let s_layer = 64;
+        let mut s = LadiesSampler::new(Arc::new(ds.graph.clone()), shapes.clone(), s_layer, 4);
+        let mb = s.sample_batch(&ds.train[..32], &ds.labels).unwrap();
+        // each level adds at most s_layer new nodes
+        assert!(mb.layers[0].n_real <= 32 + s_layer);
+        assert!(mb.num_input_nodes() <= mb.layers[0].n_real + s_layer);
+    }
+
+    #[test]
+    fn small_s_layer_isolates_nodes_large_does_not() {
+        // Table 5's trend: isolation falls as s_layer grows
+        let ds = tiny_dataset(4);
+        let shapes = tiny_shapes(64);
+        let iso_frac = |s_layer: usize| {
+            let mut s =
+                LadiesSampler::new(Arc::new(ds.graph.clone()), shapes.clone(), s_layer, 5);
+            for chunk in ds.train.chunks(64).take(5) {
+                let _ = s.sample_batch(chunk, &ds.labels).unwrap();
+            }
+            s.isolated_first_layer as f64 / s.first_layer_nodes.max(1) as f64
+        };
+        let small = iso_frac(16);
+        let large = iso_frac(2000);
+        assert!(
+            small > large + 0.05,
+            "isolation small={small:.3} large={large:.3}"
+        );
+    }
+
+    #[test]
+    fn weighted_distinct_prefers_heavy_candidates() {
+        let mut rng = Pcg::with_stream(1, 2);
+        let cands: Vec<(NodeId, f64)> = (0..100)
+            .map(|v| (v, if v == 7 { 100.0 } else { 0.1 }))
+            .collect();
+        let mut hits = 0;
+        for _ in 0..50 {
+            let s = LadiesSampler::weighted_distinct(&mut rng, &cands, 5);
+            assert_eq!(s.len(), 5);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), 5);
+            if s.contains(&7) {
+                hits += 1;
+            }
+        }
+        assert!(hits > 45, "heavy candidate sampled only {hits}/50");
+    }
+
+    #[test]
+    fn isolated_targets_still_produce_valid_batch() {
+        // graph where one target has no neighbors at all
+        let g = crate::graph::GraphBuilder::new(10)
+            .add_undirected(0, 1)
+            .add_undirected(1, 2)
+            .build();
+        let labels: Vec<u16> = vec![0; 10];
+        let shapes = BlockShapes::new(vec![40, 20, 4], vec![3, 3]);
+        let mut s = LadiesSampler::new(Arc::new(g), shapes.clone(), 8, 6);
+        let mb = s.sample_batch(&[0, 5, 9], &labels).unwrap();
+        validate_batch(&mb, &shapes).unwrap();
+        assert!(mb.stats.isolated_nodes > 0);
+    }
+}

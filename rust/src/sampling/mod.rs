@@ -1,0 +1,357 @@
+//! Mini-batch samplers: the four training methods the paper compares.
+//!
+//! Every sampler produces the same **fixed-shape padded block format**
+//! consumed by the AOT-compiled train step (see python/compile/model.py):
+//! L+1 node *levels*, where level L is the batch's target nodes and level 0
+//! the input nodes whose features are copied to the device. Level ordering
+//! invariant: the first `n_{l}` entries of level l-1 are exactly the level-l
+//! nodes (so `self_idx[i] = i`); sampled neighbors are appended after,
+//! deduplicated.
+//!
+//! Samplers fold *all* aggregation normalization into the per-edge weights
+//! `w` (the importance-sampling coefficients of paper §3.4): the device
+//! kernel computes a plain weighted sum Σ_k w·h.
+
+pub mod gns;
+pub mod ladies;
+pub mod lazygcn;
+pub mod neighbor;
+
+use crate::graph::NodeId;
+use crate::util::fxhash::{fast_map_with_capacity, FastHashMap};
+use std::collections::HashMap;
+
+/// Static block shapes shared by sampler and AOT artifact; must match the
+/// artifact's meta.json (validated by runtime::artifacts).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockShapes {
+    /// level_sizes[0] = input capacity … level_sizes[L] = batch size.
+    pub level_sizes: Vec<usize>,
+    /// fanouts[l-1] = K_l for layer l.
+    pub fanouts: Vec<usize>,
+}
+
+impl BlockShapes {
+    pub fn new(level_sizes: Vec<usize>, fanouts: Vec<usize>) -> Self {
+        assert_eq!(level_sizes.len(), fanouts.len() + 1);
+        assert!(level_sizes.windows(2).all(|w| w[0] >= w[1]),
+                "level capacities must be non-increasing toward the output");
+        BlockShapes { level_sizes, fanouts }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.fanouts.len()
+    }
+
+    pub fn batch_size(&self) -> usize {
+        *self.level_sizes.last().unwrap()
+    }
+}
+
+/// One layer's padded block tensors.
+#[derive(Debug, Clone)]
+pub struct LayerBlock {
+    /// [cap_l] — position of each level-l node in level l-1 (= identity by
+    /// the ordering invariant; padded tail is 0).
+    pub self_idx: Vec<i32>,
+    /// [cap_l * K_l] row-major — neighbor positions into level l-1.
+    pub idx: Vec<i32>,
+    /// [cap_l * K_l] — importance coefficients; 0 marks padding.
+    pub w: Vec<f32>,
+    /// number of real nodes at this level (≤ cap_l).
+    pub n_real: usize,
+}
+
+/// A fully-assembled mini-batch, ready for literal upload.
+#[derive(Debug, Clone)]
+pub struct MiniBatch {
+    /// Global node ids of level 0 (input) nodes, in block order.
+    pub input_nodes: Vec<NodeId>,
+    /// For each input node: is its feature row resident in the GPU cache?
+    pub input_cached: Vec<bool>,
+    /// layers[0] = layer 1 (level0 → level1) … layers[L-1] = output layer.
+    pub layers: Vec<LayerBlock>,
+    /// [batch] padded labels + mask.
+    pub labels: Vec<i32>,
+    pub mask: Vec<f32>,
+    /// Target global ids (unpadded).
+    pub targets: Vec<NodeId>,
+    /// Sampler diagnostics.
+    pub stats: BatchStats,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct BatchStats {
+    /// neighbor entries dropped because a level hit its capacity.
+    pub truncated_neighbors: usize,
+    /// target/level nodes with zero sampled neighbors (LADIES pathology,
+    /// Table 5).
+    pub isolated_nodes: usize,
+    /// input-layer nodes that are cache-resident (Table 4 "#cached").
+    pub cached_inputs: usize,
+    /// total sampled edges across layers.
+    pub edges: usize,
+}
+
+impl MiniBatch {
+    pub fn num_input_nodes(&self) -> usize {
+        self.input_nodes.len()
+    }
+}
+
+/// Incremental builder for one level-below set with the ordering invariant.
+///
+/// Seeds level l-1 with the level-l nodes (positions 0..n_l), then
+/// registers sampled neighbors, deduplicating and respecting the capacity.
+pub(crate) struct LevelBuilder {
+    pub nodes: Vec<NodeId>,
+    pos: FastHashMap<NodeId, u32>,
+    cap: usize,
+    pub truncated: usize,
+}
+
+impl LevelBuilder {
+    pub fn seed(upper: &[NodeId], cap: usize) -> Self {
+        assert!(upper.len() <= cap, "upper level {} exceeds capacity {cap}", upper.len());
+        let mut pos = fast_map_with_capacity(cap * 2);
+        let mut nodes = Vec::with_capacity(cap);
+        for (i, &v) in upper.iter().enumerate() {
+            nodes.push(v);
+            pos.insert(v, i as u32);
+        }
+        LevelBuilder { nodes, pos, cap, truncated: 0 }
+    }
+
+    /// Position of `v`, inserting if new. None if capacity is exhausted
+    /// (caller must drop the edge — counted as truncation).
+    #[inline]
+    pub fn intern(&mut self, v: NodeId) -> Option<u32> {
+        if let Some(&p) = self.pos.get(&v) {
+            return Some(p);
+        }
+        if self.nodes.len() >= self.cap {
+            self.truncated += 1;
+            return None;
+        }
+        let p = self.nodes.len() as u32;
+        self.nodes.push(v);
+        self.pos.insert(v, p);
+        Some(p)
+    }
+
+    #[allow(dead_code)]
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Assemble a padded `LayerBlock` from per-node neighbor lists.
+///
+/// `edges[i]` = (position in lower level, weight) pairs for upper node i.
+/// Weights are used as-is; callers must already have folded normalization.
+pub(crate) fn build_layer_block(
+    edges: &[Vec<(u32, f32)>],
+    cap: usize,
+    fanout: usize,
+) -> (LayerBlock, usize) {
+    let n_real = edges.len();
+    assert!(n_real <= cap);
+    let mut self_idx = vec![0i32; cap];
+    let mut idx = vec![0i32; cap * fanout];
+    let mut w = vec![0f32; cap * fanout];
+    let mut isolated = 0usize;
+    for (i, nbrs) in edges.iter().enumerate() {
+        self_idx[i] = i as i32; // ordering invariant
+        if nbrs.is_empty() {
+            isolated += 1;
+        }
+        for (k, &(p, wt)) in nbrs.iter().take(fanout).enumerate() {
+            idx[i * fanout + k] = p as i32;
+            w[i * fanout + k] = wt;
+        }
+    }
+    (LayerBlock { self_idx, idx, w, n_real }, isolated)
+}
+
+/// Pad labels/mask for a target chunk.
+pub(crate) fn pad_labels(targets: &[NodeId], labels: &[u16], batch: usize) -> (Vec<i32>, Vec<f32>) {
+    assert!(targets.len() <= batch);
+    let mut lab = vec![0i32; batch];
+    let mut mask = vec![0f32; batch];
+    for (i, &t) in targets.iter().enumerate() {
+        lab[i] = labels[t as usize] as i32;
+        mask[i] = 1.0;
+    }
+    (lab, mask)
+}
+
+/// The sampler interface the pipeline drives.
+pub trait Sampler: Send {
+    fn name(&self) -> &'static str;
+
+    /// Called once per epoch before any batches (GNS refreshes its cache
+    /// here subject to its update period; LazyGCN resets recycling).
+    fn begin_epoch(&mut self, epoch: usize);
+
+    /// Sample a mini-batch for a chunk of target nodes (chunk ≤ batch size).
+    fn sample_batch(&mut self, targets: &[NodeId], labels: &[u16]) -> anyhow::Result<MiniBatch>;
+
+    /// Generation counter of the device-resident cache (GNS); 0 when the
+    /// method has no cache. The trainer re-uploads cache features when it
+    /// observes a new generation.
+    fn cache_generation(&self) -> u64 {
+        0
+    }
+
+    /// Snapshot of the cached node ids (GNS); None for cache-less methods.
+    fn cache_nodes(&self) -> Option<Vec<crate::graph::NodeId>> {
+        None
+    }
+}
+
+/// Structural validation of a mini-batch against shapes — the invariants
+/// the AOT contract depends on. Used by tests and (cheaply) by the
+/// pipeline in debug builds.
+pub fn validate_batch(mb: &MiniBatch, shapes: &BlockShapes) -> Result<(), String> {
+    let ls = &shapes.level_sizes;
+    if mb.layers.len() != shapes.num_layers() {
+        return Err("wrong layer count".into());
+    }
+    if mb.input_nodes.len() > ls[0] {
+        return Err(format!("input nodes {} > cap {}", mb.input_nodes.len(), ls[0]));
+    }
+    if mb.input_nodes.len() != mb.input_cached.len() {
+        return Err("input_cached length mismatch".into());
+    }
+    let mut lower_real = mb.input_nodes.len();
+    for (l, blk) in mb.layers.iter().enumerate() {
+        let cap = ls[l + 1];
+        let k = shapes.fanouts[l];
+        if blk.self_idx.len() != cap || blk.idx.len() != cap * k || blk.w.len() != cap * k {
+            return Err(format!("layer {l} padded lengths wrong"));
+        }
+        if blk.n_real > cap {
+            return Err(format!("layer {l} n_real {} > cap {cap}", blk.n_real));
+        }
+        if blk.n_real > lower_real {
+            return Err(format!(
+                "layer {l}: upper real {} > lower real {lower_real}", blk.n_real
+            ));
+        }
+        for i in 0..blk.n_real {
+            if blk.self_idx[i] as usize >= lower_real {
+                return Err(format!("layer {l} self_idx[{i}] out of range"));
+            }
+            for kk in 0..k {
+                let j = i * k + kk;
+                let (p, wt) = (blk.idx[j], blk.w[j]);
+                if wt != 0.0 && (p as usize) >= lower_real {
+                    return Err(format!("layer {l} idx[{j}]={p} out of range {lower_real}"));
+                }
+                if wt < 0.0 || !wt.is_finite() {
+                    return Err(format!("layer {l} bad weight {wt}"));
+                }
+            }
+        }
+        // padded tail must be inert
+        for i in blk.n_real..cap {
+            for kk in 0..k {
+                if blk.w[i * k + kk] != 0.0 {
+                    return Err(format!("layer {l} padding weight nonzero at {i}"));
+                }
+            }
+        }
+        lower_real = blk.n_real;
+    }
+    let batch = shapes.batch_size();
+    if mb.labels.len() != batch || mb.mask.len() != batch {
+        return Err("labels/mask padded length wrong".into());
+    }
+    if mb.targets.len() != mb.layers.last().map(|b| b.n_real).unwrap_or(0) {
+        return Err("targets vs top layer n_real mismatch".into());
+    }
+    for (i, &m) in mb.mask.iter().enumerate() {
+        let is_real = i < mb.targets.len();
+        if is_real != (m == 1.0) {
+            return Err(format!("mask[{i}]={m} inconsistent with target count"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::features::Dataset;
+
+    /// Small dataset + matching shapes for sampler tests.
+    pub fn tiny_dataset(seed: u64) -> Dataset {
+        crate::features::build_dataset("yelp-s", 0.03, seed)
+    }
+
+    pub fn tiny_shapes(batch: usize) -> BlockShapes {
+        // 2-layer, generous caps
+        BlockShapes::new(
+            vec![batch * 4 * 4, batch * 4, batch],
+            vec![3, 3],
+        )
+    }
+
+    #[allow(dead_code)]
+    pub fn shapes3(batch: usize) -> BlockShapes {
+        BlockShapes::new(
+            vec![batch * 6 * 11 * 4, batch * 6 * 11, batch * 6, batch],
+            vec![5, 10, 5],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_builder_interning() {
+        let mut lb = LevelBuilder::seed(&[10, 20], 4);
+        assert_eq!(lb.intern(10), Some(0));
+        assert_eq!(lb.intern(30), Some(2));
+        assert_eq!(lb.intern(30), Some(2));
+        assert_eq!(lb.intern(40), Some(3));
+        assert_eq!(lb.intern(50), None); // capacity
+        assert_eq!(lb.truncated, 1);
+        assert_eq!(lb.nodes, vec![10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn build_layer_block_pads_and_counts_isolated() {
+        let edges = vec![vec![(1u32, 0.5f32), (2, 0.5)], vec![]];
+        let (blk, isolated) = build_layer_block(&edges, 3, 2);
+        assert_eq!(isolated, 1);
+        assert_eq!(blk.n_real, 2);
+        assert_eq!(blk.self_idx[..2], [0, 1]);
+        assert_eq!(blk.idx[..2], [1, 2]);
+        assert_eq!(blk.w[2..4], [0.0, 0.0]); // isolated row
+        assert_eq!(blk.w[4..6], [0.0, 0.0]); // padding row
+    }
+
+    #[test]
+    fn pad_labels_masks_tail() {
+        let labels: Vec<u16> = vec![5, 6, 7, 8];
+        let (lab, mask) = pad_labels(&[2, 0], &labels, 4);
+        assert_eq!(lab, vec![7, 5, 0, 0]);
+        assert_eq!(mask, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn block_shapes_asserts_monotone() {
+        let s = BlockShapes::new(vec![100, 50, 10], vec![4, 4]);
+        assert_eq!(s.num_layers(), 2);
+        assert_eq!(s.batch_size(), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn block_shapes_rejects_increasing() {
+        BlockShapes::new(vec![10, 50, 10], vec![4, 4]);
+    }
+}

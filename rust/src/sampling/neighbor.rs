@@ -1,0 +1,218 @@
+//! Node-wise neighbor sampling (NS) — the GraphSAGE baseline (paper §2.1).
+//!
+//! For every node at every layer, samples up to `fanout` *distinct*
+//! neighbors uniformly at random; the mean aggregator is expressed through
+//! weights w = 1/s (s = #real sampled neighbors), matching eq. (3).
+
+use super::*;
+use crate::graph::CsrGraph;
+use crate::util::rng::Pcg;
+use std::sync::Arc;
+
+pub struct NeighborSampler {
+    graph: Arc<CsrGraph>,
+    shapes: BlockShapes,
+    rng: Pcg,
+    idx_scratch: Vec<usize>,
+}
+
+impl NeighborSampler {
+    pub fn new(graph: Arc<CsrGraph>, shapes: BlockShapes, seed: u64) -> Self {
+        NeighborSampler {
+            graph,
+            shapes,
+            rng: Pcg::with_stream(seed, 0x4E53),
+            idx_scratch: Vec::with_capacity(64),
+        }
+    }
+
+    /// Sample up to `fanout` distinct neighbors of `v` into `out` (global
+    /// ids). Shared by LazyGCN's mega-batch expansion. `idx_scratch` is a
+    /// reusable index buffer (keeps the hot loop allocation-free).
+    pub(crate) fn sample_neighbors(
+        graph: &CsrGraph,
+        v: NodeId,
+        fanout: usize,
+        rng: &mut Pcg,
+        idx_scratch: &mut Vec<usize>,
+        out: &mut Vec<NodeId>,
+    ) {
+        out.clear();
+        let nbrs = graph.neighbors(v);
+        if nbrs.is_empty() {
+            return;
+        }
+        if nbrs.len() <= fanout {
+            out.extend_from_slice(nbrs);
+        } else {
+            rng.sample_distinct_into(nbrs.len(), fanout, idx_scratch);
+            for &j in idx_scratch.iter() {
+                out.push(nbrs[j]);
+            }
+        }
+    }
+}
+
+impl Sampler for NeighborSampler {
+    fn name(&self) -> &'static str {
+        "ns"
+    }
+
+    fn begin_epoch(&mut self, _epoch: usize) {}
+
+    fn sample_batch(&mut self, targets: &[NodeId], labels: &[u16]) -> anyhow::Result<MiniBatch> {
+        let shapes = self.shapes.clone();
+        let num_layers = shapes.num_layers();
+        anyhow::ensure!(
+            targets.len() <= shapes.batch_size(),
+            "targets {} exceed batch size {}",
+            targets.len(),
+            shapes.batch_size()
+        );
+
+        let mut stats = BatchStats::default();
+        // walk top (output) layer down to the input level
+        let mut upper: Vec<NodeId> = targets.to_vec();
+        let mut layers_rev: Vec<LayerBlock> = Vec::with_capacity(num_layers);
+        let mut scratch: Vec<NodeId> = Vec::new();
+        for l in (0..num_layers).rev() {
+            let fanout = shapes.fanouts[l];
+            let cap_lower = shapes.level_sizes[l];
+            let mut lb = LevelBuilder::seed(&upper, cap_lower);
+            let mut edges: Vec<Vec<(u32, f32)>> = Vec::with_capacity(upper.len());
+            for &v in &upper {
+                Self::sample_neighbors(
+                    &self.graph, v, fanout, &mut self.rng, &mut self.idx_scratch, &mut scratch,
+                );
+                let mut nbrs: Vec<(u32, f32)> = Vec::with_capacity(scratch.len());
+                for &u in &scratch {
+                    if let Some(p) = lb.intern(u) {
+                        nbrs.push((p, 0.0));
+                    }
+                }
+                let s = nbrs.len();
+                if s > 0 {
+                    let w = 1.0 / s as f32; // mean aggregator
+                    for e in &mut nbrs {
+                        e.1 = w;
+                    }
+                } else {
+                    stats.isolated_nodes += 1;
+                }
+                stats.edges += s;
+                edges.push(nbrs);
+            }
+            stats.truncated_neighbors += lb.truncated;
+            let (blk, _isolated) = build_layer_block(&edges, shapes.level_sizes[l + 1], fanout);
+            layers_rev.push(blk);
+            upper = lb.nodes;
+        }
+        layers_rev.reverse();
+
+        let (lab, mask) = pad_labels(targets, labels, shapes.batch_size());
+        let input_cached = vec![false; upper.len()];
+        Ok(MiniBatch {
+            input_nodes: upper,
+            input_cached,
+            layers: layers_rev,
+            labels: lab,
+            mask,
+            targets: targets.to_vec(),
+            stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::prop_assert;
+
+    fn setup(batch: usize) -> (crate::features::Dataset, BlockShapes) {
+        (tiny_dataset(1), tiny_shapes(batch))
+    }
+
+    #[test]
+    fn batch_is_structurally_valid() {
+        let (ds, shapes) = setup(32);
+        let mut s = NeighborSampler::new(Arc::new(ds.graph.clone()), shapes.clone(), 7);
+        let targets = &ds.train[..32];
+        let mb = s.sample_batch(targets, &ds.labels).unwrap();
+        validate_batch(&mb, &shapes).unwrap();
+        assert_eq!(mb.targets.len(), 32);
+        assert!(mb.num_input_nodes() >= 32);
+        assert!(mb.stats.edges > 0);
+    }
+
+    #[test]
+    fn weights_are_mean_normalized() {
+        let (ds, shapes) = setup(16);
+        let mut s = NeighborSampler::new(Arc::new(ds.graph.clone()), shapes.clone(), 8);
+        let mb = s.sample_batch(&ds.train[..16], &ds.labels).unwrap();
+        let k = shapes.fanouts[1];
+        let blk = &mb.layers[1];
+        for i in 0..blk.n_real {
+            let sum: f32 = (0..k).map(|kk| blk.w[i * k + kk]).sum();
+            let nz = (0..k).filter(|&kk| blk.w[i * k + kk] != 0.0).count();
+            if nz > 0 {
+                assert!((sum - 1.0).abs() < 1e-5, "row {i} sum={sum}");
+            }
+        }
+    }
+
+    #[test]
+    fn partial_batch_padded_and_masked() {
+        let (ds, shapes) = setup(32);
+        let mut s = NeighborSampler::new(Arc::new(ds.graph.clone()), shapes.clone(), 9);
+        let mb = s.sample_batch(&ds.train[..10], &ds.labels).unwrap();
+        validate_batch(&mb, &shapes).unwrap();
+        assert_eq!(mb.targets.len(), 10);
+        assert_eq!(mb.mask.iter().filter(|&&m| m == 1.0).count(), 10);
+    }
+
+    #[test]
+    fn input_growth_is_exponential_ish() {
+        // NS's defining pathology: input level ≫ batch (paper Table 4)
+        let (ds, shapes) = setup(64);
+        let mut s = NeighborSampler::new(Arc::new(ds.graph.clone()), shapes.clone(), 10);
+        let mb = s.sample_batch(&ds.train[..64], &ds.labels).unwrap();
+        assert!(
+            mb.num_input_nodes() > 64 * 4,
+            "inputs {} should blow up vs batch 64",
+            mb.num_input_nodes()
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (ds, shapes) = setup(16);
+        let g = Arc::new(ds.graph.clone());
+        let mut a = NeighborSampler::new(g.clone(), shapes.clone(), 42);
+        let mut b = NeighborSampler::new(g, shapes, 42);
+        let ma = a.sample_batch(&ds.train[..16], &ds.labels).unwrap();
+        let mb = b.sample_batch(&ds.train[..16], &ds.labels).unwrap();
+        assert_eq!(ma.input_nodes, mb.input_nodes);
+        assert_eq!(ma.layers[0].idx, mb.layers[0].idx);
+    }
+
+    #[test]
+    fn prop_every_batch_validates() {
+        let (ds, _) = setup(32);
+        let g = Arc::new(ds.graph.clone());
+        check(15, |gen| {
+            let batch = gen.usize(1..48);
+            let shapes = tiny_shapes(batch);
+            let seed = gen.rng.next_u64();
+            let mut s = NeighborSampler::new(g.clone(), shapes.clone(), seed);
+            let n_t = gen.usize(1..batch + 1).min(ds.train.len());
+            let mb = s
+                .sample_batch(&ds.train[..n_t], &ds.labels)
+                .map_err(|e| e.to_string())?;
+            validate_batch(&mb, &shapes)?;
+            prop_assert!(mb.stats.truncated_neighbors == 0 || mb.num_input_nodes() == shapes.level_sizes[0]);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,139 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments; typed getters with defaults and helpful errors. Used by the
+//! `gns` binary, the examples, and the bench drivers.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(iter: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(rest.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(rest.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects a float, got {v:?}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list.
+    pub fn list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--x", "3", "--y=7", "--flag", "--name", "abc"]);
+        assert_eq!(a.usize_or("x", 0), 3);
+        assert_eq!(a.usize_or("y", 0), 7);
+        assert!(a.bool("flag"));
+        assert_eq!(a.str_or("name", ""), "abc");
+        assert_eq!(a.usize_or("missing", 42), 42);
+    }
+
+    #[test]
+    fn positional_and_flags_mix() {
+        let a = parse(&["train", "--epochs", "5", "products"]);
+        assert_eq!(a.positional, vec!["train", "products"]);
+        assert_eq!(a.usize_or("epochs", 0), 5);
+    }
+
+    #[test]
+    fn flag_before_flag_is_boolean() {
+        let a = parse(&["--verbose", "--n", "2"]);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.usize_or("n", 0), 2);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--methods=ns,gns, ladies"]);
+        assert_eq!(
+            a.list("methods").unwrap(),
+            vec!["ns".to_string(), "gns".into(), "ladies".into()]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn typed_error_messages() {
+        let a = parse(&["--n", "abc"]);
+        a.usize_or("n", 0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Fast non-cryptographic hashing for hot-path maps (std's SipHash is the
+//! dominant cost of node-id interning in the samplers; this is the
+//! rustc-hash/FxHash multiply-rotate scheme, which is both fast and good
+//! enough for graph node ids).
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+}
+
+pub type FastHashMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+pub type FastHashSet<K> = HashSet<K, BuildHasherDefault<FxHasher>>;
+
+pub fn fast_map_with_capacity<K, V>(cap: usize) -> FastHashMap<K, V> {
+    FastHashMap::with_capacity_and_hasher(cap, Default::default())
+}
+
+pub fn fast_set_with_capacity<K>(cap: usize) -> FastHashSet<K> {
+    FastHashSet::with_capacity_and_hasher(cap, Default::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_basics() {
+        let mut m: FastHashMap<u32, u32> = fast_map_with_capacity(8);
+        for i in 0..1000u32 {
+            m.insert(i, i * 2);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m[&37], 74);
+        assert!(!m.contains_key(&1000));
+    }
+
+    #[test]
+    fn hash_distributes() {
+        // weak avalanche sanity: sequential keys should not collide in the
+        // low bits used by the table
+        let mut buckets = [0u32; 64];
+        for i in 0..64_000u64 {
+            let mut h = FxHasher::default();
+            h.write_u64(i);
+            buckets[(h.finish() % 64) as usize] += 1;
+        }
+        let (min, max) = buckets
+            .iter()
+            .fold((u32::MAX, 0), |(lo, hi), &b| (lo.min(b), hi.max(b)));
+        assert!(max < 3 * min, "skewed: min={min} max={max}");
+    }
+
+    #[test]
+    fn set_round_trip() {
+        let mut s: FastHashSet<u32> = fast_set_with_capacity(4);
+        assert!(s.insert(7));
+        assert!(!s.insert(7));
+        assert!(s.contains(&7));
+    }
+}

@@ -1,0 +1,39 @@
+//! From-scratch substrates: PRNG/sampling, JSON, stage timers, property
+//! testing, and a tiny CLI arg parser. The build environment has no
+//! crates.io access, so everything the coordinator needs beyond `xla` and
+//! `anyhow` lives here.
+
+pub mod cli;
+pub mod fxhash;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+
+/// Format a byte count human-readably (metrics output).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(17), "17 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

@@ -1,0 +1,420 @@
+//! Deterministic PRNG + sampling substrates.
+//!
+//! crates.io is unavailable in the build environment, so the `rand`
+//! ecosystem is reimplemented here: a PCG64-family generator, uniform /
+//! shuffle / reservoir helpers, Walker alias tables for O(1) weighted
+//! sampling (used by the GNS cache sampler and the graph generators), and
+//! a Zipf sampler for power-law degree workloads.
+
+/// PCG-XSH-RR 64/32 with 64-bit output composition. Deterministic, seedable,
+/// splittable enough for per-worker streams.
+#[derive(Debug, Clone)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Independent stream for parallel workers: distinct `stream` values
+    /// give statistically independent sequences for the same seed.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, bound) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn gen_range(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        let bound = bound as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn gen_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Standard normal via Box-Muller (one value; fine for feature gen).
+    pub fn gen_normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.gen_f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.gen_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Allocation-free variant of `sample_distinct` for hot paths: clears
+    /// and fills `out`. For small k (neighbor fan-outs ≤ 32) uses rejection
+    /// with a linear duplicate scan — no hashing, no allocation.
+    pub fn sample_distinct_into(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
+        out.clear();
+        debug_assert!(k <= n);
+        if k == n {
+            out.extend(0..n);
+            return;
+        }
+        if k <= 32 && k * 2 <= n {
+            while out.len() < k {
+                let v = self.gen_range(n);
+                if !out.contains(&v) {
+                    out.push(v);
+                }
+            }
+            return;
+        }
+        out.extend(self.sample_distinct(n, k));
+    }
+
+    /// Sample `k` distinct items from `0..n` without replacement.
+    /// Uses Floyd's algorithm for k << n, partial shuffle otherwise.
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_distinct: k={k} > n={n}");
+        if k * 4 >= n {
+            let mut all: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + self.gen_range(n - i);
+                all.swap(i, j);
+            }
+            all.truncate(k);
+            return all;
+        }
+        // Floyd's: O(k) expected inserts into a small set.
+        let mut chosen = std::collections::HashSet::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        for j in n - k..n {
+            let t = self.gen_range(j + 1);
+            let v = if chosen.contains(&t) { j } else { t };
+            chosen.insert(v);
+            out.push(v);
+        }
+        out
+    }
+}
+
+/// Walker alias table: O(n) build, O(1) weighted sampling.
+///
+/// Used for the GNS cache distribution (eq. 6 / eq. 8 of the paper) and the
+/// degree-proportional edge endpoints of the graph generators.
+#[derive(Debug, Clone)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "AliasTable: empty weights");
+        assert!(n <= u32::MAX as usize);
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0 && total.is_finite(), "AliasTable: bad weights");
+        let scale = n as f64 / total;
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * scale).collect();
+        let mut alias = vec![0u32; n];
+        let mut small: Vec<u32> = Vec::new();
+        let mut large: Vec<u32> = Vec::new();
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 { small.push(i as u32) } else { large.push(i as u32) }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            alias[s as usize] = l;
+            prob[l as usize] = (prob[l as usize] + prob[s as usize]) - 1.0;
+            if prob[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Numerical residue: pin remaining columns to 1.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i as usize] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg) -> usize {
+        let i = rng.gen_range(self.prob.len());
+        if rng.gen_f64() < self.prob[i] { i } else { self.alias[i] as usize }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Sample `k` *distinct* indices (rejection; intended for k ≪ n as in
+    /// cache sampling where k ≈ 1% of n).
+    pub fn sample_distinct(&self, rng: &mut Pcg, k: usize) -> Vec<usize> {
+        let n = self.len();
+        assert!(k <= n);
+        let mut seen = std::collections::HashSet::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        let mut rejects = 0usize;
+        while out.len() < k {
+            let v = self.sample(rng);
+            if seen.insert(v) {
+                out.push(v);
+            } else {
+                rejects += 1;
+                // Heavy-tail guard: if the distribution is too concentrated
+                // for rejection to make progress, fall back to weighted
+                // sampling without replacement over the remainder.
+                if rejects > 16 * k + 1024 {
+                    let mut rest: Vec<usize> =
+                        (0..n).filter(|i| !seen.contains(i)).collect();
+                    // systematic fill by residual probability order
+                    rest.sort_by(|&a, &b| {
+                        self.prob[b].partial_cmp(&self.prob[a]).unwrap()
+                    });
+                    for v in rest.into_iter().take(k - out.len()) {
+                        out.push(v);
+                    }
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Zipf(α) sampler over 1..=n via rejection-inversion (Hörmann).
+/// Drives the power-law degree sequences of the synthetic giant graphs.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: f64,
+    alpha: f64,
+    t: f64,
+}
+
+impl Zipf {
+    pub fn new(n: usize, alpha: f64) -> Self {
+        assert!(n >= 1 && alpha > 0.0 && (alpha - 1.0).abs() > 1e-9);
+        let n = n as f64;
+        let t = (n.powf(1.0 - alpha) - alpha) / (1.0 - alpha);
+        Zipf { n, alpha, t }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg) -> usize {
+        // Inverse-CDF of the enveloping density, then accept/reject.
+        loop {
+            let u = rng.gen_f64() * self.t;
+            let x = if u <= 1.0 {
+                u.max(f64::MIN_POSITIVE)
+            } else {
+                (u * (1.0 - self.alpha) + self.alpha).powf(1.0 / (1.0 - self.alpha))
+            };
+            let k = x.ceil().clamp(1.0, self.n);
+            let ratio = k.powf(-self.alpha) / x.floor().max(1.0).powf(-self.alpha);
+            if rng.gen_f64() < ratio {
+                return k as usize;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_deterministic_and_stream_independent() {
+        let mut a = Pcg::new(42);
+        let mut b = Pcg::new(42);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_eq!(xs, ys);
+        let mut c = Pcg::with_stream(42, 7);
+        let zs: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut rng = Pcg::new(1);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.gen_range(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gen_f64_unit_interval_mean() {
+        let mut rng = Pcg::new(2);
+        let mut sum = 0.0;
+        for _ in 0..20_000 {
+            let v = rng.gen_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 20_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg::new(3);
+        let n = 30_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = rng.gen_normal();
+            s1 += v;
+            s2 += v * v;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut rng = Pcg::new(4);
+        for &(n, k) in &[(10usize, 10usize), (100, 3), (1000, 250), (5, 0)] {
+            let s = rng.sample_distinct(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k, "duplicates for n={n} k={k}");
+            assert!(s.iter().all(|&v| v < n));
+        }
+    }
+
+    #[test]
+    fn sample_distinct_into_matches_contract() {
+        let mut rng = Pcg::new(44);
+        let mut buf = Vec::new();
+        for &(n, k) in &[(100usize, 5usize), (16, 15), (8, 8), (1000, 64)] {
+            rng.sample_distinct_into(n, k, &mut buf);
+            assert_eq!(buf.len(), k);
+            let set: std::collections::HashSet<_> = buf.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(buf.iter().all(|&v| v < n));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg::new(5);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn alias_table_matches_weights() {
+        let weights = [1.0, 2.0, 3.0, 4.0];
+        let table = AliasTable::new(&weights);
+        let mut rng = Pcg::new(6);
+        let mut counts = [0usize; 4];
+        let trials = 100_000;
+        for _ in 0..trials {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        let total: f64 = weights.iter().sum();
+        for (i, &w) in weights.iter().enumerate() {
+            let want = w / total;
+            let got = counts[i] as f64 / trials as f64;
+            assert!((got - want).abs() < 0.01, "i={i} want={want} got={got}");
+        }
+    }
+
+    #[test]
+    fn alias_table_degenerate_single_heavy() {
+        let mut w = vec![1e-12; 100];
+        w[17] = 1.0;
+        let table = AliasTable::new(&w);
+        let mut rng = Pcg::new(7);
+        let hits = (0..1000).filter(|_| table.sample(&mut rng) == 17).count();
+        assert!(hits > 990, "hits={hits}");
+    }
+
+    #[test]
+    fn alias_sample_distinct_no_dups_and_heavy_tail_fallback() {
+        let mut w = vec![1e-9; 50];
+        w[3] = 1.0;
+        w[4] = 0.5;
+        let table = AliasTable::new(&w);
+        let mut rng = Pcg::new(8);
+        let s = table.sample_distinct(&mut rng, 10);
+        assert_eq!(s.len(), 10);
+        let set: std::collections::HashSet<_> = s.iter().collect();
+        assert_eq!(set.len(), 10);
+        assert!(s.contains(&3) && s.contains(&4));
+    }
+
+    #[test]
+    fn zipf_is_heavy_tailed_and_in_range() {
+        let z = Zipf::new(1000, 1.5);
+        let mut rng = Pcg::new(9);
+        let mut ones = 0usize;
+        for _ in 0..10_000 {
+            let v = z.sample(&mut rng);
+            assert!((1..=1000).contains(&v));
+            if v == 1 {
+                ones += 1;
+            }
+        }
+        // P(1) for alpha=1.5, n=1000 is ~0.38
+        assert!(ones > 2500, "ones={ones}");
+    }
+}

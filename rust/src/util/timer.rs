@@ -1,0 +1,214 @@
+//! Stage timing substrate for the mixed CPU-GPU training breakdown.
+//!
+//! The paper's Figures 1 and 2 are per-stage runtime breakdowns of the
+//! six-step mini-batch loop (sample → slice → copy → forward/backward →
+//! update). `StageClock` accumulates wall time per named stage plus
+//! *modeled* time (the simulated PCIe transfer — see device/transfer.rs),
+//! and renders the same rows the paper plots.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// The pipeline stages of one mini-batch (paper §2.2 six-step loop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Stage {
+    /// Step 1: mini-batch sampling (CPU).
+    Sample,
+    /// Step 2: slicing node features out of CPU memory.
+    Slice,
+    /// Step 3: CPU→GPU transfer (modeled PCIe + real marshalling).
+    Copy,
+    /// Steps 4–5: forward + backward on the device.
+    Compute,
+    /// Step 6: optimizer update (fused into the train step on device;
+    /// covers output readback / bookkeeping here).
+    Update,
+    /// Anything else (queueing, control).
+    Other,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 6] = [
+        Stage::Sample,
+        Stage::Slice,
+        Stage::Copy,
+        Stage::Compute,
+        Stage::Update,
+        Stage::Other,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Sample => "sample",
+            Stage::Slice => "slice",
+            Stage::Copy => "copy",
+            Stage::Compute => "compute",
+            Stage::Update => "update",
+            Stage::Other => "other",
+        }
+    }
+}
+
+/// Accumulates measured and modeled time per stage.
+#[derive(Debug, Clone, Default)]
+pub struct StageClock {
+    measured: BTreeMap<Stage, Duration>,
+    modeled: BTreeMap<Stage, Duration>,
+    counts: BTreeMap<Stage, u64>,
+}
+
+impl StageClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `stage`.
+    pub fn time<T>(&mut self, stage: Stage, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add_measured(stage, t0.elapsed());
+        out
+    }
+
+    pub fn add_measured(&mut self, stage: Stage, d: Duration) {
+        *self.measured.entry(stage).or_default() += d;
+        *self.counts.entry(stage).or_default() += 1;
+    }
+
+    /// Add *modeled* time (e.g. simulated PCIe transfer). Kept separate so
+    /// reports can show measured vs modeled columns honestly.
+    pub fn add_modeled(&mut self, stage: Stage, d: Duration) {
+        *self.modeled.entry(stage).or_default() += d;
+    }
+
+    pub fn measured(&self, stage: Stage) -> Duration {
+        self.measured.get(&stage).copied().unwrap_or_default()
+    }
+
+    pub fn modeled(&self, stage: Stage) -> Duration {
+        self.modeled.get(&stage).copied().unwrap_or_default()
+    }
+
+    /// measured + modeled for a stage.
+    pub fn total(&self, stage: Stage) -> Duration {
+        self.measured(stage) + self.modeled(stage)
+    }
+
+    pub fn count(&self, stage: Stage) -> u64 {
+        self.counts.get(&stage).copied().unwrap_or_default()
+    }
+
+    pub fn grand_total(&self) -> Duration {
+        Stage::ALL.iter().map(|&s| self.total(s)).sum()
+    }
+
+    pub fn merge(&mut self, other: &StageClock) {
+        for &s in &Stage::ALL {
+            *self.measured.entry(s).or_default() += other.measured(s);
+            *self.modeled.entry(s).or_default() += other.modeled(s);
+            *self.counts.entry(s).or_default() += other.count(s);
+        }
+    }
+
+    /// Percentage breakdown over total (the paper's Figure 1 format).
+    pub fn percentages(&self) -> Vec<(Stage, f64)> {
+        let total = self.grand_total().as_secs_f64();
+        Stage::ALL
+            .iter()
+            .map(|&s| {
+                let frac = if total > 0.0 {
+                    100.0 * self.total(s).as_secs_f64() / total
+                } else {
+                    0.0
+                };
+                (s, frac)
+            })
+            .collect()
+    }
+
+    /// Render an aligned table of seconds + percent per stage.
+    pub fn render(&self, title: &str) -> String {
+        let mut out = format!("{title}\n");
+        let total = self.grand_total().as_secs_f64();
+        for &s in &Stage::ALL {
+            let t = self.total(s).as_secs_f64();
+            if t == 0.0 && self.count(s) == 0 {
+                continue;
+            }
+            let pct = if total > 0.0 { 100.0 * t / total } else { 0.0 };
+            out.push_str(&format!(
+                "  {:<8} {:>9.3}s  {:>5.1}%  (measured {:>8.3}s, modeled {:>8.3}s)\n",
+                s.name(),
+                t,
+                pct,
+                self.measured(s).as_secs_f64(),
+                self.modeled(s).as_secs_f64(),
+            ));
+        }
+        out.push_str(&format!("  {:<8} {:>9.3}s\n", "total", total));
+        out
+    }
+}
+
+/// Simple scoped timer for ad-hoc profiling.
+pub struct ScopedTimer {
+    start: Instant,
+}
+
+impl ScopedTimer {
+    pub fn start() -> Self {
+        ScopedTimer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_reports() {
+        let mut c = StageClock::new();
+        c.add_measured(Stage::Sample, Duration::from_millis(10));
+        c.add_measured(Stage::Sample, Duration::from_millis(20));
+        c.add_modeled(Stage::Copy, Duration::from_millis(70));
+        assert_eq!(c.measured(Stage::Sample), Duration::from_millis(30));
+        assert_eq!(c.total(Stage::Copy), Duration::from_millis(70));
+        assert_eq!(c.count(Stage::Sample), 2);
+        let pct = c.percentages();
+        let copy_pct = pct.iter().find(|(s, _)| *s == Stage::Copy).unwrap().1;
+        assert!((copy_pct - 70.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn time_closure_counts() {
+        let mut c = StageClock::new();
+        let v = c.time(Stage::Compute, || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(c.count(Stage::Compute), 1);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = StageClock::new();
+        let mut b = StageClock::new();
+        a.add_measured(Stage::Slice, Duration::from_millis(5));
+        b.add_measured(Stage::Slice, Duration::from_millis(7));
+        b.add_modeled(Stage::Copy, Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.measured(Stage::Slice), Duration::from_millis(12));
+        assert_eq!(a.modeled(Stage::Copy), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn render_contains_stages() {
+        let mut c = StageClock::new();
+        c.add_measured(Stage::Sample, Duration::from_millis(1));
+        let text = c.render("breakdown");
+        assert!(text.contains("sample"));
+        assert!(text.contains("total"));
+    }
+}

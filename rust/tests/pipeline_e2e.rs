@@ -1,0 +1,205 @@
+//! Full-pipeline integration: Trainer + worker pool + device model over the
+//! tiny AOT artifact, with every sampler the paper compares.
+
+use gns::device::TransferModel;
+use gns::features::{build_dataset, Dataset};
+use gns::pipeline::{TrainOptions, Trainer};
+use gns::runtime::Runtime;
+use gns::sampling::gns::{GnsConfig, GnsSampler};
+use gns::sampling::ladies::LadiesSampler;
+use gns::sampling::lazygcn::{LazyGcnConfig, LazyGcnSampler};
+use gns::sampling::neighbor::NeighborSampler;
+use gns::sampling::Sampler;
+use std::sync::Arc;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = gns::runtime::artifacts_root().join("tiny");
+    if !dir.join("meta.json").exists() {
+        eprintln!("SKIP: artifacts/tiny missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("load tiny artifact"))
+}
+
+fn tiny_ds(rt: &Runtime) -> Dataset {
+    let mut ds = build_dataset("yelp-s", 0.03, 23);
+    let lg = gns::graph::generate::LabeledGraph {
+        graph: ds.graph.clone(),
+        labels: ds
+            .labels
+            .iter()
+            .map(|&c| (c as usize % rt.meta.num_classes) as u16)
+            .collect(),
+        num_classes: rt.meta.num_classes,
+    };
+    ds.features = gns::features::synthesize_features(
+        &lg,
+        &gns::features::FeatureParams {
+            dim: rt.meta.feature_dim,
+            centroid_scale: 1.5,
+            informative_frac: 0.6,
+            seed: 23,
+        },
+    );
+    ds.labels = lg.labels;
+    ds.num_classes = rt.meta.num_classes;
+    // keep epochs fast
+    ds.train.truncate(1024);
+    ds.val.truncate(256);
+    ds
+}
+
+fn opts(epochs: usize, workers: usize) -> TrainOptions {
+    TrainOptions {
+        epochs,
+        lr: 3e-3,
+        workers,
+        queue_capacity: 4,
+        eval_batches: 3,
+        seed: 1,
+        device_capacity: 16 * (1 << 30),
+        transfer: TransferModel::default(),
+        compute_model: gns::device::ComputeModel::default(),
+        paranoid_validate: true,
+    }
+}
+
+#[test]
+fn ns_pipeline_trains_and_reports_breakdown() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = tiny_ds(&rt);
+    let shapes = rt.meta.block_shapes();
+    let graph = Arc::new(ds.graph.clone());
+    let mut trainer = Trainer::new(rt, &ds, &opts(2, 1)).unwrap();
+    let reports = trainer
+        .train(
+            &|w| Box::new(NeighborSampler::new(graph.clone(), shapes.clone(), 100 + w as u64)),
+            &opts(2, 1),
+        )
+        .unwrap();
+    assert_eq!(reports.len(), 2);
+    let last = &reports[1];
+    assert!(last.mean_loss.is_finite());
+    assert!(last.batches >= 1);
+    // loss should move down across epochs on the learnable dataset
+    assert!(last.mean_loss < reports[0].mean_loss * 1.05);
+    // breakdown must contain real time in every core stage
+    use gns::util::timer::Stage;
+    for s in [Stage::Sample, Stage::Slice, Stage::Compute] {
+        assert!(last.clock.measured(s).as_nanos() > 0, "stage {s:?} empty");
+    }
+    assert!(last.clock.modeled(Stage::Copy).as_nanos() > 0);
+    assert!(last.transfer.h2d_bytes > 0);
+}
+
+#[test]
+fn gns_pipeline_uploads_cache_and_saves_bytes() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = tiny_ds(&rt);
+    let shapes = rt.meta.block_shapes();
+    let graph = Arc::new(ds.graph.clone());
+    let o = opts(2, 1);
+    let mut trainer = Trainer::new(rt, &ds, &o).unwrap();
+    let template = GnsSampler::new(
+        graph.clone(),
+        shapes.clone(),
+        &ds.train,
+        GnsConfig { cache_fraction: 0.02, seed: 3, ..Default::default() },
+    );
+    let factory = move |w: usize| -> Box<dyn Sampler> {
+        Box::new(template.instance(w as u64, w == 0))
+    };
+    let reports = trainer.train(&factory, &o).unwrap();
+    let last = reports.last().unwrap();
+    assert!(last.avg_cached_inputs > 0.0, "no cached inputs observed");
+    assert!(
+        last.transfer.bytes_saved_by_cache > 0,
+        "cache produced no transfer savings"
+    );
+    let (hits, misses) = trainer.cache_hits_misses();
+    assert!(hits > 0);
+    assert!(hits + misses > 0);
+    // GNS input level must be smaller than NS's (mechanism check at the
+    // pipeline level)
+    assert!(last.avg_input_nodes < shapes.level_sizes[0] as f64);
+}
+
+#[test]
+fn ladies_pipeline_runs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = tiny_ds(&rt);
+    let shapes = rt.meta.block_shapes();
+    let graph = Arc::new(ds.graph.clone());
+    let o = opts(1, 1);
+    let mut trainer = Trainer::new(rt, &ds, &o).unwrap();
+    let reports = trainer
+        .train(
+            &|w| Box::new(LadiesSampler::new(graph.clone(), shapes.clone(), 128, 40 + w as u64)),
+            &o,
+        )
+        .unwrap();
+    assert!(reports[0].mean_loss.is_finite());
+}
+
+#[test]
+fn lazygcn_pipeline_runs_and_small_budget_fails_loudly() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = tiny_ds(&rt);
+    let shapes = rt.meta.block_shapes();
+    let graph = Arc::new(ds.graph.clone());
+    let o = opts(1, 1);
+    {
+        let mut trainer = Trainer::new(runtime_or_skip().unwrap(), &ds, &o).unwrap();
+        let reports = trainer
+            .train(
+                &|w| {
+                    Box::new(LazyGcnSampler::new(
+                        graph.clone(),
+                        shapes.clone(),
+                        LazyGcnConfig { seed: 50 + w as u64, ..Default::default() },
+                    ))
+                },
+                &o,
+            )
+            .unwrap();
+        assert!(reports[0].mean_loss.is_finite());
+    }
+    // tiny device budget → the paper's OOM failure mode, as a typed error
+    let mut trainer = Trainer::new(rt, &ds, &o).unwrap();
+    let err = trainer
+        .train(
+            &|w| {
+                Box::new(LazyGcnSampler::new(
+                    graph.clone(),
+                    shapes.clone(),
+                    LazyGcnConfig {
+                        device_budget_bytes: 4_000,
+                        feature_row_bytes: 64,
+                        seed: 60 + w as u64,
+                        ..Default::default()
+                    },
+                ))
+            },
+            &o,
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("OOM") || format!("{err:#}").contains("OOM"), "{err:#}");
+}
+
+#[test]
+fn multi_worker_pipeline_matches_batch_count() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = tiny_ds(&rt);
+    let shapes = rt.meta.block_shapes();
+    let graph = Arc::new(ds.graph.clone());
+    let o = opts(1, 3);
+    let mut trainer = Trainer::new(rt, &ds, &o).unwrap();
+    let reports = trainer
+        .train(
+            &|w| Box::new(NeighborSampler::new(graph.clone(), shapes.clone(), 70 + w as u64)),
+            &o,
+        )
+        .unwrap();
+    let expected = ds.train.len().div_ceil(64);
+    assert_eq!(reports[0].batches, expected);
+}

@@ -1,0 +1,165 @@
+//! Runtime integration: tiny AOT artifact loaded and executed from rust.
+//!
+//! Requires `make artifacts` (the tests are skipped with a loud message if
+//! artifacts/tiny is absent — `make test` always builds them first).
+//!
+//! This is the cross-language seam: structural batches sampled in rust are
+//! marshalled into the JAX-lowered HLO (with the Pallas aggregation kernel
+//! inside) and the numerics are cross-checked against an independent
+//! pure-rust forward implementation.
+
+use gns::features::build_dataset;
+use gns::runtime::{micro_f1, reference, Runtime};
+use gns::sampling::gns::{GnsConfig, GnsSampler};
+use gns::sampling::neighbor::NeighborSampler;
+use gns::sampling::Sampler;
+use std::sync::Arc;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = gns::runtime::artifacts_root().join("tiny");
+    if !dir.join("meta.json").exists() {
+        eprintln!("SKIP: artifacts/tiny missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("load tiny artifact"))
+}
+
+/// Dataset matched to the tiny artifact (features regenerated at the
+/// artifact's dim, labels collapsed onto its class count).
+fn tiny_ds(rt: &Runtime) -> gns::features::Dataset {
+    let mut ds = build_dataset("yelp-s", 0.03, 42);
+    let lg = gns::graph::generate::LabeledGraph {
+        graph: ds.graph.clone(),
+        labels: ds
+            .labels
+            .iter()
+            .map(|&c| (c as usize % rt.meta.num_classes) as u16)
+            .collect(),
+        num_classes: rt.meta.num_classes,
+    };
+    let features = gns::features::synthesize_features(
+        &lg,
+        &gns::features::FeatureParams {
+            dim: rt.meta.feature_dim,
+            centroid_scale: 1.5,
+            informative_frac: 0.6,
+            seed: 42,
+        },
+    );
+    ds.features = features;
+    ds.labels = lg.labels;
+    ds.num_classes = rt.meta.num_classes;
+    ds
+}
+
+fn make_x0(rt: &Runtime, ds: &gns::features::Dataset, mb: &gns::sampling::MiniBatch) -> Vec<f32> {
+    let dim = rt.meta.feature_dim;
+    let mut x0 = vec![0f32; rt.meta.level_sizes[0] * dim];
+    ds.features
+        .slice_into(&mb.input_nodes, &mut x0[..mb.input_nodes.len() * dim]);
+    x0
+}
+
+#[test]
+fn hlo_eval_matches_rust_reference_forward() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = tiny_ds(&rt);
+    let shapes = rt.meta.block_shapes();
+    let mut sampler = NeighborSampler::new(Arc::new(ds.graph.clone()), shapes, 7);
+    let state = rt.init_state(3);
+    let mb = sampler
+        .sample_batch(&ds.train[..rt.meta.batch_size], &ds.labels)
+        .unwrap();
+    let x0 = make_x0(&rt, &ds, &mb);
+    let hlo_logits = rt.eval_step(&state, &mb, &x0).unwrap();
+
+    let params = reference::HostParams::from_state(&state).unwrap();
+    let ref_logits = reference::forward(&rt.meta, &params, &mb, &x0);
+    assert_eq!(hlo_logits.len(), ref_logits.len());
+    let mut max_err = 0f32;
+    for (a, b) in hlo_logits.iter().zip(&ref_logits) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(
+        max_err < 2e-3,
+        "HLO vs rust reference forward disagree: max err {max_err}"
+    );
+}
+
+#[test]
+fn train_steps_decrease_loss_and_learn() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = tiny_ds(&rt);
+    let shapes = rt.meta.block_shapes();
+    let mut sampler = NeighborSampler::new(Arc::new(ds.graph.clone()), shapes, 8);
+    let mut state = rt.init_state(5);
+    let b = rt.meta.batch_size;
+    let mut first = None;
+    let mut last = 0f32;
+    for step in 0..30 {
+        let lo = (step * b) % (ds.train.len() - b);
+        let targets = &ds.train[lo..lo + b];
+        let mb = sampler.sample_batch(targets, &ds.labels).unwrap();
+        let x0 = make_x0(&rt, &ds, &mb);
+        let out = rt.train_step(&mut state, &mb, &x0, 3e-3).unwrap();
+        assert!(out.loss.is_finite());
+        if first.is_none() {
+            first = Some(out.loss);
+        }
+        last = out.loss;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first * 0.9,
+        "loss did not decrease: first={first} last={last}"
+    );
+    assert_eq!(state.step, 30);
+}
+
+#[test]
+fn gns_batches_execute_and_eval_f1_improves_over_random() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = tiny_ds(&rt);
+    let shapes = rt.meta.block_shapes();
+    let graph = Arc::new(ds.graph.clone());
+    let mut gns_sampler = GnsSampler::new(
+        graph.clone(),
+        shapes.clone(),
+        &ds.train,
+        GnsConfig { cache_fraction: 0.02, seed: 9, ..Default::default() },
+    );
+    let mut state = rt.init_state(7);
+    let b = rt.meta.batch_size;
+    for epoch in 0..4 {
+        gns_sampler.begin_epoch(epoch);
+        for step in 0..12 {
+            let lo = (step * b) % (ds.train.len() - b);
+            let mb = gns_sampler
+                .sample_batch(&ds.train[lo..lo + b], &ds.labels)
+                .unwrap();
+            let x0 = make_x0(&rt, &ds, &mb);
+            rt.train_step(&mut state, &mb, &x0, 3e-3).unwrap();
+        }
+    }
+    // eval on a validation chunk via NS neighborhoods
+    let mut ns = NeighborSampler::new(graph, shapes, 10);
+    let chunk = &ds.val[..b.min(ds.val.len())];
+    let mb = ns.sample_batch(chunk, &ds.labels).unwrap();
+    let x0 = make_x0(&rt, &ds, &mb);
+    let logits = rt.eval_step(&state, &mb, &x0).unwrap();
+    let f1 = micro_f1(&logits, &mb.labels, &mb.mask, rt.meta.num_classes);
+    let random = 1.0 / rt.meta.num_classes as f64;
+    assert!(
+        f1 > 2.0 * random,
+        "GNS-trained model F1 {f1:.3} not better than random {random:.3}"
+    );
+}
+
+#[test]
+fn artifact_meta_matches_block_shapes_contract() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let shapes = rt.meta.block_shapes();
+    assert_eq!(shapes.batch_size(), rt.meta.batch_size);
+    assert_eq!(shapes.num_layers(), rt.meta.num_layers);
+    assert!(rt.meta.num_param_elems() > 0);
+}
