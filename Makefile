@@ -1,0 +1,30 @@
+# Build/verify entry points. `make check` is the tier-1 gate: it builds the
+# library, CLI, every bench and example (so API breaks in them fail the
+# build), runs the test suite, and verifies formatting.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build check test fmt artifacts clean
+
+build:
+	$(CARGO) build --release
+
+check:
+	$(CARGO) build --release --benches --examples
+	$(CARGO) test -q
+	$(CARGO) fmt --check
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt
+
+# AOT-lower the JAX/Pallas model to HLO text artifacts the rust runtime
+# executes. Requires jax; artifacts land in ./artifacts/<config>/.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+clean:
+	$(CARGO) clean

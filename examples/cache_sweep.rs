@@ -4,20 +4,24 @@
 //!
 //!   cargo run --release --offline --example cache_sweep -- \
 //!       [--dataset products-s] [--scale 0.3] [--epochs 4]
+//!
+//! Every cell is a method spec (`gns:cache-fraction=F,update-period=P,
+//! policy=X`) run through the shared harness — the sweep is just spec
+//! construction.
 
-use gns::experiments::harness::{run_method, ExpOptions, Method};
-use gns::sampling::gns::{CachePolicy, GnsConfig};
+use gns::experiments::harness::{check_exp_args, run_method, ExpOptions};
+use gns::sampling::spec::MethodSpec;
 use gns::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env();
+    check_exp_args(&args, &["dataset"]).map_err(anyhow::Error::msg)?;
     let dataset = args.str_or("dataset", "products-s").to_string();
-    let opts = ExpOptions {
-        scale: args.f64_or("scale", 0.3),
-        epochs: args.usize_or("epochs", 4),
-        seed: args.u64_or("seed", 9),
-        ..Default::default()
-    };
+    // honor every shared experiment flag; sweep-specific defaults apply
+    // only when the flag is absent
+    let mut opts = ExpOptions::from_args(&args);
+    opts.epochs = args.usize_or("epochs", 4);
+    opts.seed = args.u64_or("seed", 9);
     println!(
         "GNS cache sweep on {dataset} (x{}, {} epochs)\n",
         opts.scale, opts.epochs
@@ -26,39 +30,22 @@ fn main() -> anyhow::Result<()> {
         "{:<12} {:>7} {:>8} {:>8} {:>14} {:>14}",
         "policy", "cache%", "period", "F1", "cached/batch", "saved/epoch"
     );
-    for policy in [
-        CachePolicy::Degree,
-        CachePolicy::RandomWalk { fanouts: vec![5, 10, 15] },
-        CachePolicy::Uniform,
-    ] {
+    for policy in ["degree", "random-walk", "uniform"] {
         for &frac in &[0.01, 0.001] {
             for &period in &[1usize, 5] {
-                let m = Method::Gns(GnsConfig {
-                    cache_fraction: frac,
-                    update_period: period,
-                    policy: policy.clone(),
-                    seed: opts.seed,
-                    ..Default::default()
-                });
-                let r = run_method(&dataset, &m, &opts)?;
+                let spec = MethodSpec::new("gns")
+                    .with("cache-fraction", frac)
+                    .with("update-period", period)
+                    .with("policy", policy);
+                let r = run_method(&dataset, &spec, &opts)?;
                 let (cached, saved) = r
                     .reports
                     .last()
-                    .map(|rep| {
-                        (
-                            rep.avg_cached_inputs,
-                            rep.transfer.bytes_saved_by_cache,
-                        )
-                    })
+                    .map(|rep| (rep.avg_cached_inputs, rep.transfer.bytes_saved_by_cache))
                     .unwrap_or((f64::NAN, 0));
-                let pname = match &policy {
-                    CachePolicy::Degree => "degree",
-                    CachePolicy::RandomWalk { .. } => "random-walk",
-                    CachePolicy::Uniform => "uniform",
-                };
                 println!(
                     "{:<12} {:>7.2} {:>8} {:>8.4} {:>14.0} {:>14}",
-                    pname,
+                    policy,
                     100.0 * frac,
                     period,
                     r.test_f1,

@@ -7,7 +7,9 @@
 //!   cargo run --release --example memcheck step   # train-step loop
 //!
 //! RSS is printed every 15 iterations; growth ⇒ regression.
-use gns::sampling::Sampler;
+
+use gns::sampling::spec::{BuildContext, MethodRegistry, MethodSpec};
+
 fn main() -> anyhow::Result<()> {
     let mode = std::env::args().nth(1).unwrap_or("lit".into());
     let rss = || {
@@ -20,22 +22,28 @@ fn main() -> anyhow::Result<()> {
             let v = vec![0.5f32; 20000 * 64];
             let lit = xla::Literal::vec1(&v).reshape(&[20000, 64])?;
             std::hint::black_box(&lit);
-            if i % 50 == 0 { println!("{i}: {}", rss()); }
+            if i % 50 == 0 {
+                println!("{i}: {}", rss());
+            }
         }
         println!("end: {}", rss());
     } else {
         let rt = gns::runtime::Runtime::load_by_name("yelp")?;
         let ds = gns::features::build_dataset("yelp-s", 0.4, 1);
         let shapes = rt.meta.block_shapes();
-        let mut ns = gns::sampling::neighbor::NeighborSampler::new(std::sync::Arc::new(ds.graph.clone()), shapes, 1);
+        let ctx = BuildContext::new(&ds, shapes, 1);
+        let mut ns = MethodRegistry::global().sampler(&MethodSpec::new("ns"), &ctx, 0)?;
         let mut state = rt.init_state(1);
-        let mut x0 = vec![0f32; rt.meta.level_sizes[0]*rt.meta.feature_dim];
+        let mut x0 = vec![0f32; rt.meta.level_sizes[0] * rt.meta.feature_dim];
         let mb = ns.sample_batch(&ds.train[..256], &ds.labels)?;
         let dim = ds.features.dim();
-        ds.features.slice_into(&mb.input_nodes, &mut x0[..mb.input_nodes.len()*dim]);
+        ds.features
+            .slice_into(&mb.input_nodes, &mut x0[..mb.input_nodes.len() * dim]);
         for i in 0..60 {
             rt.train_step(&mut state, &mb, &x0, 3e-3)?;
-            if i % 15 == 0 { println!("{i}: {}", rss()); }
+            if i % 15 == 0 {
+                println!("{i}: {}", rss());
+            }
         }
         println!("end: {}", rss());
     }

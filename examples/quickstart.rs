@@ -2,66 +2,42 @@
 //!
 //!   make artifacts && cargo run --release --offline --example quickstart
 //!
-//! Generates a small power-law graph with learnable labels, trains a
-//! 2-layer GraphSAGE for a few epochs with Global Neighbor Sampling, and
-//! prints the loss/F1 trajectory plus the data-movement savings the GNS
-//! cache produced.
+//! One `Session` wraps the whole run: the method spec is parsed by the
+//! `MethodRegistry`, the dataset analogue is generated and refitted to
+//! the `tiny` AOT artifact, and `run()` trains GraphSAGE with Global
+//! Neighbor Sampling and evaluates the test split.
 
-use gns::features::{build_dataset, synthesize_features, FeatureParams};
-use gns::graph::generate::LabeledGraph;
-use gns::pipeline::{TrainOptions, Trainer};
-use gns::runtime::Runtime;
-use gns::sampling::gns::{GnsConfig, GnsSampler};
-use gns::sampling::Sampler;
-use std::sync::Arc;
+use gns::session::Session;
 
 fn main() -> anyhow::Result<()> {
-    // 1. The AOT artifact: a JAX GraphSAGE train step (with the Pallas
-    //    aggregation kernel inside) lowered to HLO text at build time.
-    let rt = Runtime::load_by_name("tiny")?;
+    let mut session = Session::builder("yelp-s", "gns:cache-fraction=0.02")
+        .scale(0.05)
+        .seed(7)
+        .epochs(4)
+        .artifact("tiny") // the smoke artifact from `make artifacts`
+        .refit_features(true) // resynthesize features at its dims
+        .build()?;
     println!(
         "artifact 'tiny': {} layers, batch {}, levels {:?}",
-        rt.meta.num_layers, rt.meta.batch_size, rt.meta.level_sizes
+        session.meta().num_layers,
+        session.meta().batch_size,
+        session.meta().level_sizes
     );
+    println!("dataset: {}", session.dataset().graph.stats());
 
-    // 2. A synthetic dataset analogue, re-featured to the artifact dims.
-    let mut ds = build_dataset("yelp-s", 0.05, 7);
-    let lg = LabeledGraph {
-        graph: ds.graph.clone(),
-        labels: ds.labels.iter().map(|&c| (c as usize % rt.meta.num_classes) as u16).collect(),
-        num_classes: rt.meta.num_classes,
-    };
-    ds.features = synthesize_features(
-        &lg,
-        &FeatureParams { dim: rt.meta.feature_dim, seed: 7, ..Default::default() },
-    );
-    ds.labels = lg.labels;
-    ds.num_classes = rt.meta.num_classes;
-    println!("dataset: {}", ds.graph.stats());
-
-    // 3. Train with GNS: a 2% cache, refreshed every epoch.
-    let shapes = rt.meta.block_shapes();
-    let graph = Arc::new(ds.graph.clone());
-    let template = GnsSampler::new(
-        graph,
-        shapes,
-        &ds.train,
-        GnsConfig { cache_fraction: 0.02, seed: 7, ..Default::default() },
-    );
-    let opts = TrainOptions { epochs: 4, ..Default::default() };
-    let mut trainer = Trainer::new(rt, &ds, &opts)?;
-    let reports = trainer.train(
-        &|w| Box::new(template.instance(w as u64, w == 0)) as Box<dyn Sampler>,
-        &opts,
-    )?;
-
-    for r in &reports {
+    let result = session.run()?;
+    if let Some(e) = &result.error {
+        anyhow::bail!("training failed: {e}");
+    }
+    for r in &result.reports {
         println!(
             "epoch {}: loss {:.4}  val-F1 {:.3}  inputs/batch {:.0} (cached {:.0})",
             r.epoch, r.mean_loss, r.val_f1, r.avg_input_nodes, r.avg_cached_inputs
         );
     }
-    let last = reports.last().unwrap();
+    println!("test F1: {:.4}", result.test_f1);
+
+    let last = result.reports.last().unwrap();
     println!(
         "\nGNS cache saved {} of CPU→GPU transfer this epoch (h2d {}, d2d {}).",
         gns::util::fmt_bytes(last.transfer.bytes_saved_by_cache),

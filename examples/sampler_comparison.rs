@@ -5,25 +5,22 @@
 //!   cargo run --release --offline --example sampler_comparison -- \
 //!       [--dataset products-s] [--scale 0.4] [--epochs 3]
 
-use gns::experiments::harness::{run_method, ExpOptions, Method};
+use gns::experiments::harness::{check_exp_args, run_method, ExpOptions};
+use gns::experiments::table3;
+use gns::sampling::spec::MethodRegistry;
 use gns::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env();
+    check_exp_args(&args, &["dataset"]).map_err(anyhow::Error::msg)?;
     let dataset = args.str_or("dataset", "products-s").to_string();
-    let opts = ExpOptions {
-        scale: args.f64_or("scale", 0.4),
-        epochs: args.usize_or("epochs", 3),
-        seed: args.u64_or("seed", 5),
-        ..Default::default()
-    };
-    let methods = vec![
-        Method::Ns,
-        Method::Ladies(512),
-        Method::Ladies(5000),
-        Method::LazyGcn,
-        Method::gns_default(opts.seed),
-    ];
+    // honor every shared experiment flag; comparison-specific defaults
+    // apply only when the flag is absent
+    let mut opts = ExpOptions::from_args(&args);
+    opts.scale = args.f64_or("scale", 0.4);
+    opts.seed = args.u64_or("seed", 5);
+    let registry = MethodRegistry::global();
+    let methods = table3::methods();
     println!(
         "comparing {} methods on {dataset} (x{}, {} epochs)\n",
         methods.len(),
@@ -48,7 +45,7 @@ fn main() -> anyhow::Result<()> {
             .unwrap_or("");
         println!(
             "{:<13} {:>7.4} {:>12.3} {:>10.2} {:>13.0} {:>10} {:>9}",
-            m.label(),
+            registry.label(&m),
             r.test_f1,
             r.epoch_time(),
             r.wall_epoch_time(),

@@ -8,29 +8,31 @@
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
-use gns::experiments::harness::{run_method, ExpOptions, Method};
+use gns::experiments::harness::{check_exp_args, run_method, ExpOptions};
+use gns::sampling::spec::{MethodRegistry, MethodSpec};
 use gns::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env();
-    let opts = ExpOptions {
-        scale: args.f64_or("scale", 1.0),
-        epochs: args.usize_or("epochs", 8),
-        workers: args.usize_or("workers", 1),
-        seed: args.u64_or("seed", 3),
-        eval_batches: 8,
-        ..Default::default()
-    };
+    check_exp_args(&args, &[]).map_err(anyhow::Error::msg)?;
+    // honor every shared experiment flag; this driver's own defaults
+    // (full scale, long run) apply only when the flag is absent
+    let mut opts = ExpOptions::from_args(&args);
+    opts.scale = args.f64_or("scale", 1.0);
+    opts.epochs = args.usize_or("epochs", 8);
+    opts.seed = args.u64_or("seed", 3);
+    opts.eval_batches = args.usize_or("eval-batches", 8);
     println!(
         "=== end-to-end: products-s x{} | {} epochs | batch 256 | fanouts 5,10,15 ===\n",
         opts.scale, opts.epochs
     );
 
+    let registry = MethodRegistry::global();
     let mut summary: Vec<(String, f64, f64, f64)> = Vec::new();
-    for method in [Method::Ns, Method::gns_default(opts.seed)] {
-        let label = method.label();
+    for spec in [MethodSpec::new("ns"), MethodSpec::new("gns")] {
+        let label = registry.label(&spec);
         println!("--- {label} ---");
-        let r = run_method("products-s", &method, &opts)?;
+        let r = run_method("products-s", &spec, &opts)?;
         if let Some(e) = &r.error {
             anyhow::bail!("{label} failed: {e}");
         }
@@ -54,12 +56,7 @@ fn main() -> anyhow::Result<()> {
             gns::util::fmt_bytes(last.transfer.h2d_bytes),
             gns::util::fmt_bytes(last.transfer.bytes_saved_by_cache),
         );
-        summary.push((
-            label,
-            r.test_f1,
-            r.epoch_time(),
-            last.avg_input_nodes,
-        ));
+        summary.push((label, r.test_f1, r.epoch_time(), last.avg_input_nodes));
     }
 
     println!("=== summary (paper Table 3/4 shape) ===");

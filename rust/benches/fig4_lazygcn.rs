@@ -1,26 +1,10 @@
 //! `cargo bench --bench fig4_lazygcn` — regenerates the paper's fig4.
 //! Flags (after `--`): --scale S --epochs N --seed X --datasets a,b
 //! Results: results/fig4.{txt,json}. See DESIGN.md §4 for the expected shape.
-
-use gns::experiments::{self, ExpOptions};
-use gns::util::cli::Args;
+//!
+//! All drivers share `experiments::bench_main`: common flag parsing
+//! (with unknown-flag rejection) + the experiment registry.
 
 fn main() {
-    let args = Args::parse_env();
-    let defaults = ExpOptions::default();
-    let opts = ExpOptions {
-        scale: args.f64_or("scale", defaults.scale),
-        epochs: args.usize_or("epochs", defaults.epochs),
-        seed: args.u64_or("seed", defaults.seed),
-        workers: args.usize_or("workers", defaults.workers),
-        datasets: args.list("datasets"),
-        ..defaults
-    };
-    match experiments::run("fig4", &opts) {
-        Ok(text) => println!("{text}"),
-        Err(e) => {
-            eprintln!("fig4 failed: {e:#}");
-            std::process::exit(1);
-        }
-    }
+    gns::experiments::bench_main("fig4");
 }

@@ -4,15 +4,14 @@
 //! Covers the per-batch critical path: neighbor sampling (NS + GNS),
 //! cache-subgraph construction, feature slicing, x0 padding, and the
 //! bounded queue. Used by the §Perf pass — before/after numbers are
-//! recorded in EXPERIMENTS.md.
+//! recorded in EXPERIMENTS.md. Samplers come from the `MethodRegistry`
+//! so the benchmark exercises the same construction path as production.
 
 use gns::features::build_dataset;
 use gns::graph::subgraph::CacheSubgraph;
-use gns::sampling::gns::{GnsConfig, GnsSampler};
-use gns::sampling::neighbor::NeighborSampler;
-use gns::sampling::{BlockShapes, Sampler};
+use gns::sampling::spec::{BuildContext, MethodRegistry, MethodSpec};
+use gns::sampling::BlockShapes;
 use gns::util::cli::Args;
-use std::sync::Arc;
 use std::time::Instant;
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
@@ -29,24 +28,24 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
 
 fn main() {
     let args = Args::parse_env();
+    if let Err(e) = args.check_known(&["scale", "bench"]) {
+        eprintln!("micro_hotpath: {e}");
+        std::process::exit(2);
+    }
     let scale = args.f64_or("scale", 0.5);
     let ds = build_dataset("products-s", scale, 1);
     println!("workload: products-s x{scale} — {}", ds.graph.stats());
-    let graph = Arc::new(ds.graph.clone());
     let shapes = BlockShapes::new(vec![20000, 12000, 2048, 256], vec![5, 10, 15]);
+    let reg = MethodRegistry::global();
+    let ctx = BuildContext::new(&ds, shapes.clone(), 1);
 
-    let mut ns = NeighborSampler::new(graph.clone(), shapes.clone(), 1);
+    let mut ns = reg.sampler(&MethodSpec::new("ns"), &ctx, 0).unwrap();
     bench("ns::sample_batch (256 targets)", 30, || {
         let mb = ns.sample_batch(&ds.train[..256], &ds.labels).unwrap();
         std::hint::black_box(mb.num_input_nodes());
     });
 
-    let mut gns = GnsSampler::new(
-        graph.clone(),
-        shapes.clone(),
-        &ds.train,
-        GnsConfig { seed: 1, ..Default::default() },
-    );
+    let mut gns = reg.sampler(&MethodSpec::new("gns"), &ctx, 0).unwrap();
     bench("gns::sample_batch (256 targets)", 30, || {
         let mb = gns.sample_batch(&ds.train[..256], &ds.labels).unwrap();
         std::hint::black_box(mb.stats.cached_inputs);

@@ -4,31 +4,25 @@
 //! fig2 — runtime breakdown (seconds) NS vs GNS (products + oag);
 //! fig3 — test-F1 vs epoch for all methods (products);
 //! fig4 — LazyGCN F1 vs mini-batch size (yelp).
+//!
+//! Every run is constructed through the `Session` facade — the figure
+//! drivers only differ in how they drive it (full run vs per-epoch
+//! interleaved evaluation vs chunk-size sweeps).
 
-use super::harness::{load_env, make_factory, run_method, ExpOptions, Method};
+use super::harness::{run_method, ExpOptions};
 use super::report::{fmt_f1, save};
-use crate::pipeline::Trainer;
-use crate::sampling::neighbor::NeighborSampler;
-use crate::sampling::Sampler;
+use crate::sampling::spec::{MethodRegistry, MethodSpec};
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::timer::Stage;
 use anyhow::Result;
-use std::sync::Arc;
 
 const BREAKDOWN_DATASETS: [&str; 2] = ["products-s", "oag-s"];
 
-fn shapes_for_factory(s: &crate::sampling::BlockShapes) -> crate::sampling::BlockShapes {
-    s.clone()
-}
-
-fn rt_shapes(t: &Trainer<'_>) -> crate::sampling::BlockShapes {
-    t.runtime.meta.block_shapes()
-}
-
-fn breakdown_for(dataset: &str, method: &Method, opts: &ExpOptions) -> Result<(String, Json)> {
-    let r = run_method(dataset, method, opts)?;
+fn breakdown_for(dataset: &str, spec: &MethodSpec, opts: &ExpOptions) -> Result<(String, Json)> {
+    let label = MethodRegistry::global().label(spec);
+    let r = run_method(dataset, spec, opts)?;
     if let Some(e) = &r.error {
-        anyhow::bail!("{} on {dataset}: {e}", method.label());
+        anyhow::bail!("{label} on {dataset}: {e}");
     }
     // aggregate device-frame stage seconds over epochs (DESIGN.md
     // §Substitutions: sample/4 workers, slice measured, copy + compute
@@ -40,8 +34,11 @@ fn breakdown_for(dataset: &str, method: &Method, opts: &ExpOptions) -> Result<(S
         }
     }
     let total: f64 = sums.values().sum();
-    let mut text = format!("{} on {dataset} (device-frame total {:.3}s over {} epochs)\n",
-        method.label(), total, r.reports.len());
+    let mut text = format!(
+        "{label} on {dataset} (device-frame total {:.3}s over {} epochs)\n",
+        total,
+        r.reports.len()
+    );
     let mut stages: Vec<Json> = Vec::new();
     for (&st, &secs) in &sums {
         let pct = 100.0 * secs / total.max(1e-12);
@@ -54,7 +51,7 @@ fn breakdown_for(dataset: &str, method: &Method, opts: &ExpOptions) -> Result<(S
     }
     let j = obj(vec![
         ("dataset", s(dataset)),
-        ("method", s(&method.label())),
+        ("method", s(&label)),
         ("stages", arr(stages)),
     ]);
     Ok((text, j))
@@ -65,7 +62,7 @@ pub fn fig1(opts: &ExpOptions) -> Result<String> {
     let mut text = String::from("Figure 1: runtime breakdown (%) of NS mini-batch training\n");
     let mut items: Vec<Json> = Vec::new();
     for ds in BREAKDOWN_DATASETS {
-        let (t, j) = breakdown_for(ds, &Method::Ns, opts)?;
+        let (t, j) = breakdown_for(ds, &MethodSpec::new("ns"), opts)?;
         text.push_str(&t);
         items.push(j);
     }
@@ -77,7 +74,7 @@ pub fn fig2(opts: &ExpOptions) -> Result<String> {
     let mut text = String::from("Figure 2: runtime breakdown (s), NS vs GNS\n");
     let mut items: Vec<Json> = Vec::new();
     for ds in BREAKDOWN_DATASETS {
-        for m in [Method::Ns, Method::gns_default(opts.seed)] {
+        for m in [MethodSpec::new("ns"), MethodSpec::new("gns")] {
             let (t, j) = breakdown_for(ds, &m, opts)?;
             text.push_str(&t);
             items.push(j);
@@ -88,39 +85,30 @@ pub fn fig2(opts: &ExpOptions) -> Result<String> {
 
 /// Fig. 3: test-F1 vs epoch for all four methods on products-s.
 pub fn fig3(opts: &ExpOptions) -> Result<String> {
+    let reg = MethodRegistry::global();
     let methods = vec![
-        Method::Ns,
-        Method::Ladies(512),
-        Method::LazyGcn,
-        Method::gns_default(opts.seed),
+        MethodSpec::new("ns"),
+        reg.parse("ladies:s-layer=512")?,
+        MethodSpec::new("lazygcn"),
+        MethodSpec::new("gns"),
     ];
     let mut text = String::from("Figure 3: test F1 (%) vs epoch (products-s)\n");
     let mut series: Vec<Json> = Vec::new();
     for m in methods {
-        // re-run with per-epoch evaluation: run_method gives only the end
-        // F1, so drive the trainer manually here.
-        let (ds, rt) = load_env("products-s", &m, opts)?;
-        let shapes = rt.meta.block_shapes();
-        let topts = opts.train_options();
-        let mut trainer = Trainer::new(rt, &ds, &topts)?;
-        let factory = make_factory(&m, &ds, shapes.clone(), opts);
+        // per-epoch evaluation: run one epoch at a time and interleave a
+        // test-split eval (run_method only reports the end F1). GNS cache
+        // state persists across epochs through the session's factory.
+        let mut session = opts
+            .session("products-s", &m)
+            .build()
+            .map_err(anyhow::Error::new)?;
+        let ds = session.dataset();
         let mut curve: Vec<f64> = Vec::new();
         let mut failed = None;
         for epoch in 0..opts.epochs {
-            let mut one = topts.clone();
-            one.epochs = 1;
-            // leader persists across calls through the factory's shared
-            // state for GNS; for the others a fresh sampler per epoch is
-            // equivalent. Run one epoch at a time to interleave eval.
-            match trainer.train_from_epoch(factory.as_ref(), &one, epoch) {
+            match session.train_epoch(epoch) {
                 Ok(_) => {
-                    let graph = Arc::new(ds.graph.clone());
-                    let mut ev: Box<dyn Sampler> = Box::new(NeighborSampler::new(
-                        graph,
-                        shapes.clone(),
-                        opts.seed + 999,
-                    ));
-                    let f1 = trainer.evaluate(&mut ev, &ds.test, opts.eval_batches)?;
+                    let f1 = session.evaluate_split(&ds.test, opts.eval_batches)?;
                     curve.push(f1);
                 }
                 Err(e) => {
@@ -129,7 +117,7 @@ pub fn fig3(opts: &ExpOptions) -> Result<String> {
                 }
             }
         }
-        let label = m.label();
+        let label = session.label().to_string();
         match failed {
             Some(e) => text.push_str(&format!("{label:<12} FAILED: {e}\n")),
             None => {
@@ -160,45 +148,23 @@ pub fn fig4(opts: &ExpOptions) -> Result<String> {
     let mut text = String::from("Figure 4: LazyGCN test F1 (%) vs mini-batch size (yelp-s)\n");
     let mut rows: Vec<Json> = Vec::new();
     for &bsz in &batch_sizes {
-        let m = Method::LazyGcn;
-        let (ds, rt) = load_env("yelp-s", &m, opts)?;
-        let shapes = rt.meta.block_shapes();
-        let mut topts = opts.train_options();
-        // chunk the epoch into `bsz`-target chunks inside the 256-padded
-        // block (mask handles the tail) — batch size without re-lowering.
-        topts.epochs = opts.epochs;
-        let mut trainer = Trainer::new(rt, &ds, &topts)?;
-        let row_bytes = ds.features.row_bytes() as u64;
         let recycle = (512 / bsz).max(2);
-        let graph = std::sync::Arc::new(ds.graph.clone());
-        let seed = opts.seed;
-        let factory = move |w: usize| -> Box<dyn Sampler> {
-            Box::new(crate::sampling::lazygcn::LazyGcnSampler::new(
-                graph.clone(),
-                shapes_for_factory(&shapes),
-                crate::sampling::lazygcn::LazyGcnConfig {
-                    recycle_period: recycle,
-                    rho: 1.1,
-                    device_budget_bytes: u64::MAX,
-                    feature_row_bytes: row_bytes,
-                    seed: seed + w as u64,
-                },
-            ))
-        };
-        let shapes = rt_shapes(&trainer);
-        let result = trainer.train_with_chunk_size(&factory, &topts, bsz);
-        let f1 = match result {
-            Ok(_) => {
-                let graph = Arc::new(ds.graph.clone());
-                let mut ev: Box<dyn Sampler> = Box::new(NeighborSampler::new(
-                    graph,
-                    shapes.clone(),
-                    opts.seed + 999,
-                ));
-                trainer.evaluate(&mut ev, &ds.test, opts.eval_batches)?
-            }
-            Err(_) => f64::NAN,
-        };
+        let spec = MethodSpec::new("lazygcn").with("recycle-period", recycle);
+        // chunk the epoch into `bsz`-target chunks inside the padded block
+        // (mask handles the tail) — batch size without re-lowering; the
+        // mega-batch budget is unbounded here (memory is fig4's control,
+        // not its variable).
+        let mut session = opts
+            .session("yelp-s", &spec)
+            .lazy_budget(Some(u64::MAX))
+            .chunk_size(bsz)
+            // fig4 historically evaluates with exactly the requested batch
+            // count (no .max(8) floor)
+            .test_eval_batches(opts.eval_batches)
+            .build()
+            .map_err(anyhow::Error::new)?;
+        let r = session.run()?;
+        let f1 = r.test_f1; // NaN when the run failed
         text.push_str(&format!("  batch {:>4}: F1 {}\n", bsz, fmt_f1(f1)));
         rows.push(obj(vec![("batch", num(bsz as f64)), ("f1", num(f1))]));
     }

@@ -1,18 +1,19 @@
-//! Shared experiment harness: dataset/artifact wiring, method registry,
-//! and the generic "train method M on dataset D, collect reports" driver.
+//! Shared experiment harness: the global experiment knobs and the generic
+//! "train method M on dataset D, collect reports" driver.
+//!
+//! Method construction lives in `sampling::spec` (the `MethodRegistry`)
+//! and run wiring in `session` — this module only adapts `ExpOptions`
+//! onto the `SessionBuilder` so every table/figure driver, example, and
+//! bench shares one construction path.
 
-use crate::device::TransferModel;
-use crate::features::{build_dataset, Dataset};
+use crate::features::build_dataset;
 use crate::graph::generate::DATASET_NAMES;
-use crate::pipeline::{EpochReport, TrainOptions, Trainer};
-use crate::runtime::Runtime;
-use crate::sampling::gns::{CachePolicy, GnsConfig, GnsSampler};
-use crate::sampling::ladies::LadiesSampler;
-use crate::sampling::lazygcn::{LazyGcnConfig, LazyGcnSampler};
-use crate::sampling::neighbor::NeighborSampler;
-use crate::sampling::{BlockShapes, Sampler};
-use anyhow::{Context, Result};
-use std::sync::Arc;
+use crate::sampling::spec::MethodSpec;
+use crate::session::{Session, SessionBuilder};
+use crate::util::cli::Args;
+use anyhow::Result;
+
+pub use crate::session::RunResult;
 
 /// Global experiment knobs (CLI-settable; defaults sized for a single-core
 /// testbed — see EXPERIMENTS.md for the exact values used per run).
@@ -54,19 +55,47 @@ impl Default for ExpOptions {
     }
 }
 
+/// The CLI flags `ExpOptions::from_args` understands, as (name, help)
+/// pairs — the single source for flag validation *and* the generated
+/// help text, so the two cannot drift.
+pub const EXP_FLAGS: &[(&str, &str)] = &[
+    ("scale", "node-count multiplier on the dataset analogues"),
+    ("epochs", "training epochs"),
+    ("seed", "base RNG seed"),
+    ("workers", "sampling worker threads"),
+    ("lr", "Adam learning rate"),
+    ("datasets", "comma-separated dataset filter (yelp-s,amazon-s,...)"),
+    ("results-dir", "directory for results/*.{txt,json}"),
+    ("device-gb", "simulated device memory in GiB"),
+    ("lazy-budget-mb", "LazyGCN mega-batch pinning budget in MiB"),
+    ("eval-batches", "validation batches evaluated per epoch"),
+];
+
+/// Validate CLI flags against [`EXP_FLAGS`] plus driver-specific extras —
+/// the one place the shared rejection list is assembled.
+pub fn check_exp_args(args: &Args, extra: &[&str]) -> Result<(), String> {
+    let mut known: Vec<&str> = EXP_FLAGS.iter().map(|&(k, _)| k).collect();
+    known.extend_from_slice(extra);
+    args.check_known(&known)
+}
+
 impl ExpOptions {
-    pub fn train_options(&self) -> TrainOptions {
-        TrainOptions {
-            epochs: self.epochs,
-            lr: self.lr,
-            workers: self.workers,
-            queue_capacity: 4,
-            eval_batches: self.eval_batches,
-            seed: self.seed,
-            device_capacity: self.device_capacity,
-            transfer: TransferModel::default(),
-            compute_model: crate::device::ComputeModel::default(),
-            paranoid_validate: false,
+    /// Parse the shared experiment flags (see [`EXP_FLAGS`]).
+    pub fn from_args(args: &Args) -> ExpOptions {
+        let defaults = ExpOptions::default();
+        ExpOptions {
+            scale: args.f64_or("scale", defaults.scale),
+            epochs: args.usize_or("epochs", defaults.epochs),
+            seed: args.u64_or("seed", defaults.seed),
+            workers: args.usize_or("workers", defaults.workers),
+            lr: args.f64_or("lr", defaults.lr as f64) as f32,
+            datasets: args.list("datasets"),
+            results_dir: std::path::PathBuf::from(args.str_or("results-dir", "results")),
+            device_capacity: args.u64_or("device-gb", 16) * (1 << 30),
+            lazy_budget: args
+                .get("lazy-budget-mb")
+                .map(|v| v.parse::<u64>().expect("--lazy-budget-mb expects MiB") << 20),
+            eval_batches: args.usize_or("eval-batches", defaults.eval_batches),
         }
     }
 
@@ -75,187 +104,32 @@ impl ExpOptions {
             .clone()
             .unwrap_or_else(|| default.iter().map(|s| s.to_string()).collect())
     }
-}
 
-/// The five training methods of Table 3.
-#[derive(Debug, Clone)]
-pub enum Method {
-    Ns,
-    Ladies(usize),
-    LazyGcn,
-    Gns(GnsConfig),
-}
-
-impl Method {
-    pub fn label(&self) -> String {
-        match self {
-            Method::Ns => "NS".into(),
-            Method::Ladies(s) => format!("LADIES({s})"),
-            Method::LazyGcn => "LazyGCN".into(),
-            Method::Gns(_) => "GNS".into(),
-        }
-    }
-
-    pub fn gns_default(seed: u64) -> Method {
-        Method::Gns(GnsConfig { seed, ..Default::default() })
-    }
-
-    /// Which AOT artifact shape this method needs (see aot.py).
-    pub fn artifact_for(&self, dataset: &str) -> String {
-        let base = dataset.trim_end_matches("-s");
-        match self {
-            Method::Gns(_) => format!("{base}_gns"),
-            Method::Ladies(s) if *s > 2048 => format!("{base}_ladies5k"),
-            _ => base.to_string(),
-        }
+    /// A `SessionBuilder` carrying these options for (dataset, spec).
+    pub fn session(&self, dataset: &str, spec: &MethodSpec) -> SessionBuilder {
+        Session::builder(dataset, &spec.name)
+            .spec(spec.clone())
+            .scale(self.scale)
+            .epochs(self.epochs)
+            .seed(self.seed)
+            .workers(self.workers)
+            .lr(self.lr)
+            .device_capacity(self.device_capacity)
+            .lazy_budget(self.lazy_budget)
+            .eval_batches(self.eval_batches)
     }
 }
 
-/// Load dataset analogue + the artifact runtime a method needs.
-pub fn load_env(dataset: &str, method: &Method, opts: &ExpOptions) -> Result<(Dataset, Runtime)> {
-    let ds = build_dataset(dataset, opts.scale, opts.seed);
-    let artifact = method.artifact_for(dataset);
-    let rt = Runtime::load_by_name(&artifact)
-        .with_context(|| format!("artifact {artifact:?} (run `make artifacts`)"))?;
-    anyhow::ensure!(
-        rt.meta.feature_dim == ds.features.dim(),
-        "artifact {artifact} feature dim {} != dataset {}",
-        rt.meta.feature_dim,
-        ds.features.dim()
-    );
-    Ok((ds, rt))
-}
-
-/// Build a sampler factory for `method` over `ds`.
-pub fn make_factory<'a>(
-    method: &Method,
-    ds: &'a Dataset,
-    shapes: BlockShapes,
-    opts: &ExpOptions,
-) -> Box<dyn Fn(usize) -> Box<dyn Sampler> + 'a> {
-    let graph = Arc::new(ds.graph.clone());
-    let seed = opts.seed;
-    match method {
-        Method::Ns => Box::new(move |w| {
-            Box::new(NeighborSampler::new(graph.clone(), shapes.clone(), seed + w as u64))
-        }),
-        Method::Ladies(s_layer) => {
-            let s_layer = *s_layer;
-            Box::new(move |w| {
-                Box::new(LadiesSampler::new(
-                    graph.clone(),
-                    shapes.clone(),
-                    s_layer,
-                    seed + w as u64,
-                ))
-            })
-        }
-        Method::LazyGcn => {
-            let row_bytes = ds.features.row_bytes() as u64;
-            let budget = opts.lazy_budget.unwrap_or(opts.device_capacity);
-            Box::new(move |w| {
-                Box::new(LazyGcnSampler::new(
-                    graph.clone(),
-                    shapes.clone(),
-                    LazyGcnConfig {
-                        recycle_period: 2,
-                        rho: 1.1,
-                        device_budget_bytes: budget,
-                        feature_row_bytes: row_bytes,
-                        seed: seed + w as u64,
-                    },
-                ))
-            })
-        }
-        Method::Gns(cfg) => {
-            // choose the walk policy automatically when the train split is
-            // small (paper §3.2): < 20% of nodes → random-walk probs
-            let mut cfg = cfg.clone();
-            if matches!(cfg.policy, CachePolicy::Degree)
-                && (ds.train.len() as f64) < 0.2 * ds.graph.num_nodes() as f64
-            {
-                cfg.policy = CachePolicy::RandomWalk { fanouts: shapes.fanouts.clone() };
-            }
-            let template = GnsSampler::new(graph, shapes, &ds.train, cfg);
-            Box::new(move |w| Box::new(template.instance(w as u64, w == 0)))
-        }
-    }
-}
-
-/// Outcome of training one (method, dataset) cell.
-pub struct RunResult {
-    pub reports: Vec<EpochReport>,
-    pub test_f1: f64,
-    pub device_peak: u64,
-    pub error: Option<String>,
-}
-
-impl RunResult {
-    pub fn final_f1(&self) -> f64 {
-        self.test_f1
-    }
-
-    /// mean per-epoch time in the device frame (as-if the paper's T4
-    /// testbed; see ComputeModel). The raw measured wall time is available
-    /// per report in `reports`.
-    pub fn epoch_time(&self) -> f64 {
-        if self.reports.is_empty() {
-            return f64::NAN;
-        }
-        self.reports
-            .iter()
-            .map(|r| r.device_frame_secs())
-            .sum::<f64>()
-            / self.reports.len() as f64
-    }
-
-    /// mean measured wall seconds per epoch (CPU testbed frame).
-    pub fn wall_epoch_time(&self) -> f64 {
-        if self.reports.is_empty() {
-            return f64::NAN;
-        }
-        self.reports.iter().map(|r| r.wall.as_secs_f64()).sum::<f64>()
-            / self.reports.len() as f64
-    }
-}
-
-/// Train `method` on `dataset` and evaluate on the test split.
-/// LazyGCN device OOM (and any other structured failure) is captured in
-/// `error` rather than propagated — Table 3 reports those cells as N/A.
-pub fn run_method(dataset: &str, method: &Method, opts: &ExpOptions) -> Result<RunResult> {
-    let (ds, rt) = load_env(dataset, method, opts)?;
-    let shapes = rt.meta.block_shapes();
-    let topts = opts.train_options();
-    let mut trainer = Trainer::new(rt, &ds, &topts)?;
-    let factory = make_factory(method, &ds, shapes.clone(), opts);
-    match trainer.train(factory.as_ref(), &topts) {
-        Ok(reports) => {
-            // test F1 via NS neighborhoods (standard inductive evaluation)
-            let graph = Arc::new(ds.graph.clone());
-            let mut eval_sampler: Box<dyn Sampler> = Box::new(NeighborSampler::new(
-                graph,
-                shapes,
-                opts.seed + 999,
-            ));
-            let test_f1 = trainer.evaluate(
-                &mut eval_sampler,
-                &ds.test,
-                opts.eval_batches.max(8),
-            )?;
-            Ok(RunResult {
-                test_f1,
-                device_peak: trainer.device_peak_bytes(),
-                reports,
-                error: None,
-            })
-        }
-        Err(e) => Ok(RunResult {
-            reports: Vec::new(),
-            test_f1: f64::NAN,
-            device_peak: trainer.device_peak_bytes(),
-            error: Some(format!("{e:#}")),
-        }),
-    }
+/// Train `spec` on `dataset` and evaluate on the test split.
+/// Structured training failures (e.g. LazyGCN device OOM) are captured in
+/// `RunResult::error` rather than propagated — Table 3 reports those
+/// cells as N/A.
+pub fn run_method(dataset: &str, spec: &MethodSpec, opts: &ExpOptions) -> Result<RunResult> {
+    let mut session = opts
+        .session(dataset, spec)
+        .build()
+        .map_err(anyhow::Error::new)?;
+    session.run()
 }
 
 /// Table 2 analogue: statistics of the generated datasets.
@@ -288,23 +162,33 @@ mod tests {
     use super::*;
 
     #[test]
-    fn artifact_mapping_per_method() {
-        assert_eq!(Method::Ns.artifact_for("products-s"), "products");
-        assert_eq!(
-            Method::gns_default(0).artifact_for("papers-s"),
-            "papers_gns"
-        );
-        assert_eq!(Method::Ladies(5000).artifact_for("yelp-s"), "yelp_ladies5k");
-        assert_eq!(Method::Ladies(512).artifact_for("yelp-s"), "yelp");
-        assert_eq!(Method::LazyGcn.artifact_for("amazon-s"), "amazon");
-    }
-
-    #[test]
     fn table2_renders_all_datasets() {
         let opts = ExpOptions { scale: 0.03, ..Default::default() };
         let text = table2_stats(&opts).unwrap();
         for name in DATASET_NAMES {
             assert!(text.contains(name), "{name} missing");
         }
+    }
+
+    #[test]
+    fn from_args_parses_every_exp_flag() {
+        let argv = [
+            "--scale", "0.5", "--epochs", "7", "--seed", "9", "--workers", "2",
+            "--lr", "0.001", "--datasets", "yelp-s,oag-s", "--results-dir", "out",
+            "--device-gb", "8", "--lazy-budget-mb", "3", "--eval-batches", "4",
+        ];
+        let args = Args::parse(argv.iter().map(|s| s.to_string()));
+        args.check_known(&EXP_FLAGS.iter().map(|&(k, _)| k).collect::<Vec<_>>())
+            .unwrap();
+        let o = ExpOptions::from_args(&args);
+        assert_eq!(o.scale, 0.5);
+        assert_eq!(o.epochs, 7);
+        assert_eq!(o.seed, 9);
+        assert_eq!(o.workers, 2);
+        assert_eq!(o.datasets.as_deref().unwrap().len(), 2);
+        assert_eq!(o.results_dir, std::path::PathBuf::from("out"));
+        assert_eq!(o.device_capacity, 8 << 30);
+        assert_eq!(o.lazy_budget, Some(3 << 20));
+        assert_eq!(o.eval_batches, 4);
     }
 }

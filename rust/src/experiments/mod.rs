@@ -15,7 +15,8 @@ pub mod table5;
 pub mod table6;
 pub mod figures;
 
-pub use harness::{ExpOptions, Method};
+pub use crate::sampling::spec::MethodSpec;
+pub use harness::{ExpOptions, RunResult};
 
 /// Run an experiment by id ("table3" … "fig4").
 pub fn run(id: &str, opts: &ExpOptions) -> anyhow::Result<String> {
@@ -36,3 +37,23 @@ pub fn run(id: &str, opts: &ExpOptions) -> anyhow::Result<String> {
 pub const ALL_EXPERIMENTS: [&str; 9] = [
     "table2", "table3", "table4", "table5", "table6", "fig1", "fig2", "fig3", "fig4",
 ];
+
+/// Shared entrypoint for the `cargo bench` drivers: parse the common
+/// experiment flags (rejecting unknown ones), run experiment `id`, print
+/// the paper-format text, exit nonzero on failure.
+pub fn bench_main(id: &str) {
+    let args = crate::util::cli::Args::parse_env();
+    // "bench" is cargo's own bench-mode flag
+    if let Err(e) = harness::check_exp_args(&args, &["bench"]) {
+        eprintln!("{id}: {e}");
+        std::process::exit(2);
+    }
+    let opts = ExpOptions::from_args(&args);
+    match run(id, &opts) {
+        Ok(text) => println!("{text}"),
+        Err(e) => {
+            eprintln!("{id} failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -6,27 +6,28 @@
 //! LazyGCN poor accuracy at batch 1000-equivalent and OOM on the large
 //! analogues (papers-s/oag-s under a T4-sized device budget).
 
-use super::harness::{run_method, ExpOptions, Method};
+use super::harness::{run_method, ExpOptions};
 use super::report::{fmt_f1, fmt_secs, save};
+use crate::sampling::spec::{MethodRegistry, MethodSpec};
 use crate::util::json::{arr, num, obj, s, Json};
 use anyhow::Result;
 
 pub const DEFAULT_DATASETS: [&str; 5] =
     ["yelp-s", "amazon-s", "oag-s", "products-s", "papers-s"];
 
-pub fn methods(seed: u64) -> Vec<Method> {
-    vec![
-        Method::Ns,
-        Method::Ladies(512),
-        Method::Ladies(5000),
-        Method::LazyGcn,
-        Method::gns_default(seed),
-    ]
+/// The five method specs of Table 3, parsed through the registry.
+pub fn methods() -> Vec<MethodSpec> {
+    let reg = MethodRegistry::global();
+    ["ns", "ladies:s-layer=512", "ladies:s-layer=5000", "lazygcn", "gns"]
+        .iter()
+        .map(|t| reg.parse(t).expect("builtin spec"))
+        .collect()
 }
 
 pub fn run(opts: &ExpOptions) -> Result<String> {
+    let reg = MethodRegistry::global();
     let datasets = opts.dataset_list(&DEFAULT_DATASETS);
-    let methods = methods(opts.seed);
+    let methods = methods();
     let mut text = String::from(
         "Table 3: F1 (%) and time/epoch (s; measured + modeled PCIe)\n",
     );
@@ -36,12 +37,9 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
     ));
     let mut rows: Vec<Json> = Vec::new();
     for ds in &datasets {
-        // LazyGCN on the two giant analogues gets a deliberately realistic
-        // (T4-sized) device budget so its mega-batch OOM reproduces; the
-        // budget is generous elsewhere.
         for m in &methods {
             let mut o = opts.clone();
-            if matches!(m, Method::LazyGcn) && (ds == "papers-s" || ds == "oag-s") {
+            if m.name == "lazygcn" && (ds == "papers-s" || ds == "oag-s") {
                 // The giant analogues get a scale-faithful mega-batch
                 // budget: on the paper's testbed the T4's free memory holds
                 // only a small fraction of papers100M/OAG feature rows, so
@@ -55,17 +53,19 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
                 Some(_) => "error".to_string(),
                 None => String::new(),
             };
+            let label = reg.label(m);
             text.push_str(&format!(
                 "{:<13} {:<8} {:>9} {:>13} {:>12}\n",
                 ds,
-                m.label(),
+                label,
                 fmt_f1(r.final_f1()),
                 fmt_secs(r.epoch_time()),
                 note
             ));
             rows.push(obj(vec![
                 ("dataset", s(ds)),
-                ("method", s(&m.label())),
+                ("method", s(&label)),
+                ("spec", m.to_json()),
                 ("f1", num(r.final_f1())),
                 ("epoch_seconds", num(r.epoch_time())),
                 ("device_peak_bytes", num(r.device_peak as f64)),

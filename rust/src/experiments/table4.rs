@@ -3,18 +3,17 @@
 //!
 //! Pure sampling experiment (no training) — this is the paper's headline
 //! *mechanism*: GNS reduces distinct input nodes by ~3–6× and serves a
-//! large share of them from the cache.
+//! large share of them from the cache. Samplers come from the
+//! `MethodRegistry` like every other construction site.
 
-use super::harness::{ExpOptions, Method};
+use super::harness::ExpOptions;
 use super::report::save;
 use super::table3::DEFAULT_DATASETS;
 use crate::features::build_dataset;
-use crate::sampling::gns::{GnsConfig, GnsSampler};
-use crate::sampling::neighbor::NeighborSampler;
-use crate::sampling::{BlockShapes, Sampler};
+use crate::sampling::spec::{BuildContext, MethodRegistry, MethodSpec};
+use crate::sampling::BlockShapes;
 use crate::util::json::{arr, num, obj, s, Json};
 use anyhow::Result;
-use std::sync::Arc;
 
 /// Per-dataset measurement.
 pub struct Table4Row {
@@ -28,14 +27,13 @@ pub fn measure(dataset: &str, opts: &ExpOptions, batches: usize) -> Result<Table
     let ds = build_dataset(dataset, opts.scale, opts.seed);
     // shapes mirror the NS artifact (generous caps; we only count nodes)
     let shapes = BlockShapes::new(vec![60000, 30000, 4096, 256], vec![5, 10, 15]);
-    let graph = Arc::new(ds.graph.clone());
-    let mut ns = NeighborSampler::new(graph.clone(), shapes.clone(), opts.seed);
-    let mut gns = GnsSampler::new(
-        graph,
-        shapes,
-        &ds.train,
-        GnsConfig { seed: opts.seed, ..Default::default() },
-    );
+    let reg = MethodRegistry::global();
+    let ctx = BuildContext::new(&ds, shapes, opts.seed);
+    let mut ns = reg.sampler(&MethodSpec::new("ns"), &ctx, 0)?;
+    // default spec = policy "auto": the same degree/random-walk switch the
+    // training path applies, so this table measures the cache distribution
+    // a real run of the dataset would use (pass policy=degree to pin it)
+    let mut gns = reg.sampler(&MethodSpec::new("gns"), &ctx, 0)?;
     let b = 256usize;
     let n_batches = batches.min(ds.train.len() / b).max(1);
     let (mut ns_in, mut gns_in, mut gns_c) = (0usize, 0usize, 0usize);
@@ -81,7 +79,6 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
             ("gns_cached", num(row.gns_cached)),
         ]));
     }
-    let _ = Method::Ns; // method enum kept in the signature space for symmetry
     save(&opts.results_dir, "table4", &text, obj(vec![
         ("scale", num(opts.scale)),
         ("rows", arr(rows)),

@@ -2,15 +2,18 @@
 //! function of nodes-sampled-per-layer (256 … 10000) on the products
 //! analogue. Expected shape: isolation falls monotonically (52.7% at 256
 //! down to 0% at 10000 in the paper).
+//!
+//! Isolation is measured from the mini-batch block format
+//! (`sampling::first_layer_isolation`) so the experiment needs no sampler
+//! internals and the sampler itself comes from the `MethodRegistry`.
 
 use super::harness::ExpOptions;
 use super::report::save;
 use crate::features::build_dataset;
-use crate::sampling::ladies::LadiesSampler;
-use crate::sampling::{BlockShapes, Sampler};
+use crate::sampling::spec::{BuildContext, MethodRegistry};
+use crate::sampling::{first_layer_isolation, BlockShapes};
 use crate::util::json::{arr, num, obj, Json};
 use anyhow::Result;
-use std::sync::Arc;
 
 pub const SWEEP: [usize; 5] = [256, 512, 1000, 5000, 10000];
 
@@ -21,17 +24,19 @@ pub fn isolation_fraction(s_layer: usize, opts: &ExpOptions) -> Result<f64> {
         vec![40000, 31000, 20500, 256],
         vec![5, 10, 15],
     );
-    let mut s = LadiesSampler::new(
-        Arc::new(ds.graph.clone()),
-        shapes,
-        s_layer,
-        opts.seed,
-    );
+    let reg = MethodRegistry::global();
+    let spec = reg.parse(&format!("ladies:s-layer={s_layer}"))?;
+    let ctx = BuildContext::new(&ds, shapes, opts.seed);
+    let mut s = reg.sampler(&spec, &ctx, 0)?;
     let b = 256;
+    let (mut isolated, mut total) = (0usize, 0usize);
     for chunk in ds.train.chunks(b).take(8) {
-        let _ = s.sample_batch(chunk, &ds.labels)?;
+        let mb = s.sample_batch(chunk, &ds.labels)?;
+        let (iso, n) = first_layer_isolation(&mb);
+        isolated += iso;
+        total += n;
     }
-    Ok(s.isolated_first_layer as f64 / s.first_layer_nodes.max(1) as f64)
+    Ok(isolated as f64 / total.max(1) as f64)
 }
 
 pub fn run(opts: &ExpOptions) -> Result<String> {

@@ -5,9 +5,9 @@
 //! cache hurts, and hurts *more* at long update periods (a fresh small
 //! sample beats a stale one — the paper's closing observation).
 
-use super::harness::{run_method, ExpOptions, Method};
+use super::harness::{run_method, ExpOptions};
 use super::report::{fmt_f1, save};
-use crate::sampling::gns::GnsConfig;
+use crate::sampling::spec::MethodSpec;
 use crate::util::json::{arr, num, obj, Json};
 use anyhow::Result;
 
@@ -30,13 +30,10 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
     for &frac in &CACHE_FRACTIONS {
         let mut line = format!("{:<12}", format!("|V|x{}%", frac * 100.0));
         for &p in &PERIODS {
-            let method = Method::Gns(GnsConfig {
-                cache_fraction: frac,
-                update_period: p,
-                seed: o.seed,
-                ..Default::default()
-            });
-            let r = run_method("products-s", &method, &o)?;
+            let spec = MethodSpec::new("gns")
+                .with("cache-fraction", frac)
+                .with("update-period", p);
+            let r = run_method("products-s", &spec, &o)?;
             line.push_str(&format!(" {:>8}", fmt_f1(r.final_f1())));
             rows.push(obj(vec![
                 ("cache_fraction", num(frac)),

@@ -21,5 +21,9 @@ pub mod experiments;
 pub mod pipeline;
 pub mod runtime;
 pub mod sampling;
+pub mod session;
 pub mod graph;
 pub mod util;
+
+pub use sampling::spec::{MethodRegistry, MethodSpec};
+pub use session::{Session, SessionBuilder};

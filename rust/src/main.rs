@@ -2,17 +2,28 @@
 //!
 //! Subcommands:
 //!   info                         print dataset analogue statistics (Table 2)
-//!   train --dataset products-s --method gns [--epochs N] [--scale S] ...
+//!   train --dataset products-s --method gns:cache-fraction=0.02 ...
 //!   experiment <table2|table3|table4|table5|table6|fig1|fig2|fig3|fig4|all>
 //!   bench-breakdown              quick Figure-1-style stage breakdown
 //!
-//! Everything the CLI does goes through the public library API; the CLI is
-//! a thin shell so examples/ and benches/ exercise the same paths.
+//! Everything the CLI does goes through the public library API (the
+//! `MethodRegistry` + `Session` layers); the CLI is a thin shell so
+//! examples/ and benches/ exercise the same paths. The method list and
+//! flag documentation in `--help` are generated from the registry and the
+//! flag tables, so the help cannot drift from what is accepted.
 
 use anyhow::{bail, Result};
-use gns::experiments::{self, ExpOptions, Method};
-use gns::sampling::gns::GnsConfig;
+use gns::experiments::{self, harness::EXP_FLAGS, ExpOptions};
+use gns::sampling::spec::{MethodRegistry, ParamValue};
 use gns::util::cli::Args;
+
+/// Flags specific to `train` (on top of [`EXP_FLAGS`]).
+const TRAIN_FLAGS: &[(&str, &str)] = &[
+    ("dataset", "dataset analogue: yelp-s|amazon-s|oag-s|products-s|papers-s"),
+    ("method", "method spec: name[:key=value,...] — see METHODS"),
+    ("cache-fraction", "gns shorthand for --method gns:cache-fraction=F"),
+    ("cache-period", "gns shorthand for --method gns:update-period=P"),
+];
 
 fn main() {
     let args = Args::parse_env();
@@ -26,64 +37,52 @@ fn main() {
     std::process::exit(code);
 }
 
-fn exp_options(args: &Args) -> ExpOptions {
-    let defaults = ExpOptions::default();
-    ExpOptions {
-        scale: args.f64_or("scale", defaults.scale),
-        epochs: args.usize_or("epochs", defaults.epochs),
-        seed: args.u64_or("seed", defaults.seed),
-        workers: args.usize_or("workers", defaults.workers),
-        lr: args.f64_or("lr", defaults.lr as f64) as f32,
-        datasets: args.list("datasets"),
-        results_dir: std::path::PathBuf::from(args.str_or("results-dir", "results")),
-        device_capacity: args.u64_or("device-gb", 16) * (1 << 30),
-        lazy_budget: args.get("lazy-budget-mb").map(|v| {
-            v.parse::<u64>().expect("--lazy-budget-mb expects MiB") << 20
-        }),
-        eval_batches: args.usize_or("eval-batches", defaults.eval_batches),
-    }
-}
-
-fn parse_method(name: &str, seed: u64) -> Result<Method> {
-    Ok(match name {
-        "ns" => Method::Ns,
-        "ladies" | "ladies512" => Method::Ladies(512),
-        "ladies5000" | "ladies5k" => Method::Ladies(5000),
-        "lazygcn" => Method::LazyGcn,
-        "gns" => Method::gns_default(seed),
-        other => bail!("unknown method {other:?} (ns|ladies|ladies5000|lazygcn|gns)"),
-    })
+/// Reject typo'd flags: every command declares its accepted keys and the
+/// error lists the valid ones.
+fn check_flags(args: &Args, extra: &[(&str, &str)]) -> Result<()> {
+    let extra_keys: Vec<&str> = extra.iter().map(|&(k, _)| k).collect();
+    gns::experiments::harness::check_exp_args(args, &extra_keys).map_err(anyhow::Error::msg)
 }
 
 fn run(args: &Args) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "info" => {
-            let opts = exp_options(args);
+            check_flags(args, &[])?;
+            let opts = ExpOptions::from_args(args);
             println!("{}", experiments::harness::table2_stats(&opts)?);
             Ok(())
         }
         "train" => {
-            let opts = exp_options(args);
+            check_flags(args, TRAIN_FLAGS)?;
+            let opts = ExpOptions::from_args(args);
             let dataset = args.str_or("dataset", "products-s").to_string();
-            let seed = opts.seed;
-            let mut method = parse_method(args.str_or("method", "gns"), seed)?;
-            if let Method::Gns(cfg) = &mut method {
-                *cfg = GnsConfig {
-                    cache_fraction: args.f64_or("cache-fraction", cfg.cache_fraction),
-                    update_period: args.usize_or("cache-period", cfg.update_period),
-                    seed,
-                    ..cfg.clone()
-                };
+            let registry = MethodRegistry::global();
+            let mut spec = registry.parse(args.str_or("method", "gns"))?;
+            // legacy gns shorthands fold into the spec, typed by the
+            // registry's own param declarations so this site cannot drift
+            for (flag, key) in [("cache-fraction", "cache-fraction"), ("cache-period", "update-period")] {
+                if let Some(v) = args.get(flag) {
+                    if spec.name != "gns" {
+                        bail!("--{flag} only applies to --method gns (got {:?})", spec.name);
+                    }
+                    let builder = registry.get("gns").map_err(anyhow::Error::new)?;
+                    let info = gns::sampling::spec::param_info(builder, key)
+                        .map_err(anyhow::Error::new)?;
+                    let value = ParamValue::parse_as(info.kind, v).ok_or_else(|| {
+                        anyhow::anyhow!("--{flag} expects a {}, got {v:?}", info.kind)
+                    })?;
+                    spec = spec.with(key, value);
+                }
             }
             println!(
-                "training {} on {dataset} (scale {}, {} epochs, {} worker(s))",
-                method.label(),
+                "training {} ({spec}) on {dataset} (scale {}, {} epochs, {} worker(s))",
+                registry.label(&spec),
                 opts.scale,
                 opts.epochs,
                 opts.workers
             );
-            let r = experiments::harness::run_method(&dataset, &method, &opts)?;
+            let r = experiments::harness::run_method(&dataset, &spec, &opts)?;
             if let Some(e) = &r.error {
                 bail!("run failed: {e}");
             }
@@ -113,7 +112,8 @@ fn run(args: &Args) -> Result<()> {
             Ok(())
         }
         "experiment" | "exp" => {
-            let opts = exp_options(args);
+            check_flags(args, &[])?;
+            let opts = ExpOptions::from_args(args);
             let which = args
                 .positional
                 .get(1)
@@ -130,30 +130,49 @@ fn run(args: &Args) -> Result<()> {
             Ok(())
         }
         "bench-breakdown" => {
-            let opts = exp_options(args);
+            check_flags(args, &[])?;
+            let opts = ExpOptions::from_args(args);
             println!("{}", experiments::run("fig1", &opts)?);
             Ok(())
         }
         _ => {
-            println!(
-                "gns — Global Neighbor Sampling (KDD'21) mixed CPU-GPU training coordinator\n\
-                 \n\
-                 USAGE: gns <command> [--flags]\n\
-                 \n\
-                 COMMANDS\n\
-                 \x20 info                      dataset analogue statistics (Table 2)\n\
-                 \x20 train                     train one method on one dataset\n\
-                 \x20     --dataset <name-s>    yelp-s|amazon-s|oag-s|products-s|papers-s\n\
-                 \x20     --method  <m>         ns|ladies|ladies5000|lazygcn|gns\n\
-                 \x20     --epochs N --scale S --workers W --lr F --seed N\n\
-                 \x20     --cache-fraction F --cache-period P   (gns)\n\
-                 \x20 experiment <id|all>       regenerate a paper table/figure\n\
-                 \x20     ids: table2 table3 table4 table5 table6 fig1 fig2 fig3 fig4\n\
-                 \x20 bench-breakdown           quick Figure-1-style breakdown\n\
-                 \n\
-                 Artifacts must exist first: `make artifacts`."
-            );
+            println!("{}", help_text());
             Ok(())
         }
     }
+}
+
+/// Help text generated from the method registry and the flag tables.
+fn help_text() -> String {
+    let registry = MethodRegistry::global();
+    let mut out = String::from(
+        "gns — Global Neighbor Sampling (KDD'21) mixed CPU-GPU training coordinator\n\
+         \n\
+         USAGE: gns <command> [--flags]\n\
+         \n\
+         COMMANDS\n\
+         \x20 info                      dataset analogue statistics (Table 2)\n\
+         \x20 train                     train one method on one dataset\n\
+         \x20 experiment <id|all>       regenerate a paper table/figure\n",
+    );
+    out.push_str(&format!(
+        "\x20     ids: {}\n",
+        experiments::ALL_EXPERIMENTS.join(" ")
+    ));
+    out.push_str(
+        "\x20 bench-breakdown           quick Figure-1-style breakdown\n\
+         \n\
+         METHODS (--method name[:key=value,...])\n",
+    );
+    out.push_str(&registry.help_methods());
+    out.push_str("\nTRAIN FLAGS\n");
+    for (k, help) in TRAIN_FLAGS {
+        out.push_str(&format!("  --{k:<18} {help}\n"));
+    }
+    out.push_str("\nCOMMON FLAGS\n");
+    for (k, help) in EXP_FLAGS {
+        out.push_str(&format!("  --{k:<18} {help}\n"));
+    }
+    out.push_str("\nArtifacts must exist first: `make artifacts`.\n");
+    out
 }

@@ -110,12 +110,13 @@ impl Default for TrainOptions {
 }
 
 /// Factory that builds one sampler per worker. Worker 0's sampler is the
-/// leader (drives GNS cache refresh).
-pub type SamplerFactory<'a> = dyn Fn(usize) -> Box<dyn Sampler> + 'a;
+/// leader (drives GNS cache refresh). The canonical boxed form is
+/// `sampling::spec::SamplerFactory`, produced by `MethodRegistry`.
+pub type SamplerFactory = dyn Fn(usize) -> Box<dyn Sampler> + Send + Sync;
 
-pub struct Trainer<'d> {
+pub struct Trainer {
     pub runtime: Runtime,
-    pub dataset: &'d Dataset,
+    pub dataset: Arc<Dataset>,
     pub state: TrainState,
     device_mem: DeviceMemory,
     feature_cache: DeviceFeatureCache,
@@ -125,8 +126,8 @@ pub struct Trainer<'d> {
     x0_dirty_elems: usize,
 }
 
-impl<'d> Trainer<'d> {
-    pub fn new(runtime: Runtime, dataset: &'d Dataset, opts: &TrainOptions) -> Result<Self> {
+impl Trainer {
+    pub fn new(runtime: Runtime, dataset: Arc<Dataset>, opts: &TrainOptions) -> Result<Self> {
         anyhow::ensure!(
             runtime.meta.feature_dim == dataset.features.dim(),
             "artifact feature_dim {} != dataset dim {}",
@@ -165,7 +166,7 @@ impl<'d> Trainer<'d> {
     /// Train `opts.epochs` epochs with samplers from `factory`.
     pub fn train(
         &mut self,
-        factory: &SamplerFactory<'_>,
+        factory: &SamplerFactory,
         opts: &TrainOptions,
     ) -> Result<Vec<EpochReport>> {
         self.train_with_chunk_size(factory, opts, self.runtime.meta.batch_size)
@@ -176,7 +177,7 @@ impl<'d> Trainer<'d> {
     /// mini-batch size without re-lowering artifacts).
     pub fn train_with_chunk_size(
         &mut self,
-        factory: &SamplerFactory<'_>,
+        factory: &SamplerFactory,
         opts: &TrainOptions,
         chunk_size: usize,
     ) -> Result<Vec<EpochReport>> {
@@ -198,7 +199,7 @@ impl<'d> Trainer<'d> {
     /// to `train` (used by the Figure 3 convergence curves).
     pub fn train_from_epoch(
         &mut self,
-        factory: &SamplerFactory<'_>,
+        factory: &SamplerFactory,
         opts: &TrainOptions,
         epoch: usize,
     ) -> Result<EpochReport> {
@@ -211,7 +212,7 @@ impl<'d> Trainer<'d> {
     fn train_epoch(
         &mut self,
         leader: &mut Box<dyn Sampler>,
-        factory: &SamplerFactory<'_>,
+        factory: &SamplerFactory,
         opts: &TrainOptions,
         epoch: usize,
         rng: &mut Pcg,

@@ -79,7 +79,7 @@ pub fn run_epoch_sampling(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sampling::neighbor::NeighborSampler;
+    use crate::sampling::spec::{BuildContext, MethodRegistry, MethodSpec};
     use crate::sampling::testutil::*;
     use crate::sampling::validate_batch;
 
@@ -87,13 +87,11 @@ mod tests {
     fn pool_samples_every_chunk_exactly_once() {
         let ds = tiny_dataset(8);
         let shapes = tiny_shapes(16);
-        let g = Arc::new(ds.graph.clone());
-        let samplers: Vec<Box<dyn Sampler>> = (0..3)
-            .map(|i| {
-                Box::new(NeighborSampler::new(g.clone(), shapes.clone(), 100 + i))
-                    as Box<dyn Sampler>
-            })
-            .collect();
+        let ctx = BuildContext::new(&ds, shapes.clone(), 100);
+        let factory = MethodRegistry::global()
+            .factory(&MethodSpec::new("ns"), &ctx)
+            .unwrap();
+        let samplers: Vec<Box<dyn Sampler>> = (0..3).map(|i| factory(i)).collect();
         let mut rng = crate::util::rng::Pcg::new(1);
         let plan = EpochPlan::shuffled(&ds.train[..160.min(ds.train.len())], 16, &mut rng);
         let n_chunks = plan.chunks.len();

@@ -49,7 +49,13 @@ pub struct StepOutput {
 
 impl Runtime {
     pub fn load(dir: &Path) -> Result<Self> {
-        let meta = ArtifactMeta::load(dir)?;
+        Self::load_with_meta(ArtifactMeta::load(dir)?)
+    }
+
+    /// Compile the executables for an already-loaded (and validated)
+    /// artifact meta — avoids re-reading meta.json when the caller has
+    /// inspected it first (see `session::SessionBuilder::build`).
+    pub fn load_with_meta(meta: ArtifactMeta) -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
         let train_exe = Self::compile(&client, &meta.train_hlo_path())?;
         let eval_exe = Self::compile(&client, &meta.eval_hlo_path())?;

@@ -26,9 +26,6 @@ pub struct LadiesSampler {
     /// nodes sampled per layer (the 512 / 5000 of Table 3).
     s_layer: usize,
     rng: Pcg,
-    /// cumulative isolated-node telemetry for Table 5.
-    pub isolated_first_layer: u64,
-    pub first_layer_nodes: u64,
 }
 
 impl LadiesSampler {
@@ -38,8 +35,6 @@ impl LadiesSampler {
             shapes,
             s_layer,
             rng: Pcg::with_stream(seed, 0x1AD1E5),
-            isolated_first_layer: 0,
-            first_layer_nodes: 0,
         }
     }
 
@@ -155,13 +150,10 @@ impl Sampler for LadiesSampler {
                         e.1 /= wsum;
                     }
                 } else {
+                    // isolated node (Table 5); per-batch first-layer
+                    // isolation is derived from the block format by
+                    // `sampling::first_layer_isolation`
                     stats.isolated_nodes += 1;
-                    if l == 0 {
-                        self.isolated_first_layer += 1;
-                    }
-                }
-                if l == 0 {
-                    self.first_layer_nodes += 1;
                 }
                 stats.edges += nbrs.len();
                 edges.push(nbrs);
@@ -220,10 +212,14 @@ mod tests {
         let iso_frac = |s_layer: usize| {
             let mut s =
                 LadiesSampler::new(Arc::new(ds.graph.clone()), shapes.clone(), s_layer, 5);
+            let (mut isolated, mut total) = (0usize, 0usize);
             for chunk in ds.train.chunks(64).take(5) {
-                let _ = s.sample_batch(chunk, &ds.labels).unwrap();
+                let mb = s.sample_batch(chunk, &ds.labels).unwrap();
+                let (iso, n) = super::super::first_layer_isolation(&mb);
+                isolated += iso;
+                total += n;
             }
-            s.isolated_first_layer as f64 / s.first_layer_nodes.max(1) as f64
+            isolated as f64 / total.max(1) as f64
         };
         let small = iso_frac(16);
         let large = iso_frac(2000);

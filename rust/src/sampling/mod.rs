@@ -16,6 +16,7 @@ pub mod gns;
 pub mod ladies;
 pub mod lazygcn;
 pub mod neighbor;
+pub mod spec;
 
 use crate::graph::NodeId;
 use crate::util::fxhash::{fast_map_with_capacity, FastHashMap};
@@ -209,6 +210,25 @@ pub trait Sampler: Send {
     }
 }
 
+/// Count first-layer isolation in a mini-batch: real rows of the
+/// input-side layer (layer 1, `layers[0]`) whose sampled-neighbor weights
+/// are all zero. Returns `(isolated, total)` — the Table 5 statistic,
+/// computed from the block format so callers need no sampler internals.
+pub fn first_layer_isolation(mb: &MiniBatch) -> (usize, usize) {
+    let Some(blk) = mb.layers.first() else {
+        return (0, 0);
+    };
+    let cap = blk.self_idx.len();
+    if cap == 0 {
+        return (0, 0);
+    }
+    let fanout = blk.w.len() / cap;
+    let isolated = (0..blk.n_real)
+        .filter(|&i| blk.w[i * fanout..(i + 1) * fanout].iter().all(|&w| w == 0.0))
+        .count();
+    (isolated, blk.n_real)
+}
+
 /// Structural validation of a mini-batch against shapes — the invariants
 /// the AOT contract depends on. Used by tests and (cheaply) by the
 /// pipeline in debug builds.
@@ -340,6 +360,22 @@ mod tests {
         let (lab, mask) = pad_labels(&[2, 0], &labels, 4);
         assert_eq!(lab, vec![7, 5, 0, 0]);
         assert_eq!(mask, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn first_layer_isolation_counts_zero_weight_rows() {
+        let edges = vec![vec![(1u32, 1.0f32)], vec![], vec![(0, 0.5), (2, 0.5)]];
+        let (blk, _) = build_layer_block(&edges, 4, 2);
+        let mb = MiniBatch {
+            input_nodes: vec![0, 1, 2, 3],
+            input_cached: vec![false; 4],
+            layers: vec![blk],
+            labels: vec![0; 3],
+            mask: vec![1.0; 3],
+            targets: vec![0, 1, 2],
+            stats: BatchStats::default(),
+        };
+        assert_eq!(first_layer_isolation(&mb), (1, 3));
     }
 
     #[test]

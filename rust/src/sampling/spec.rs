@@ -1,0 +1,1080 @@
+//! The open method API: `MethodSpec` + `MethodBuilder` + `MethodRegistry`.
+//!
+//! A *method spec* is the single description of a training method that
+//! every entry point (CLI, experiments, examples, benches, tests) parses,
+//! prints, and builds samplers from:
+//!
+//! ```text
+//! spec      := name [":" param ("," param)*]
+//! param     := key "=" value
+//! examples  := ns | ladies:s-layer=5000 | gns:cache-fraction=0.02,update-period=2
+//! ```
+//!
+//! `Display` round-trips through `MethodRegistry::parse`, and the same
+//! spec serialises to/from JSON (`util::json`) for results files and
+//! config-driven sweeps.
+//!
+//! Each method implements [`MethodBuilder`], which owns everything that
+//! used to be smeared across `parse_method`, `Method::artifact_for`, and
+//! `make_factory`: parameter declaration + validation, artifact-shape
+//! selection, and per-worker sampler factory construction (including the
+//! GNS leader convention: worker 0 drives cache refresh). Builders are
+//! registered in a [`MethodRegistry`], so new methods, ablations, and
+//! hybrids plug in without touching the harness, CLI, or pipeline.
+
+use super::gns::{CachePolicy, GnsConfig, GnsSampler};
+use super::ladies::LadiesSampler;
+use super::lazygcn::{LazyGcnConfig, LazyGcnSampler};
+use super::neighbor::NeighborSampler;
+use super::{BlockShapes, Sampler};
+use crate::features::Dataset;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Arc;
+
+/// Builds one sampler per pipeline worker. Worker 0 is the leader (for
+/// GNS it alone refreshes the shared cache at epoch boundaries).
+pub type SamplerFactory = Box<dyn Fn(usize) -> Box<dyn Sampler> + Send + Sync>;
+
+// ---------------------------------------------------------------------------
+// Typed parameters
+
+/// Declared type of a method parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    Bool,
+    Int,
+    Float,
+    Str,
+}
+
+impl fmt::Display for ParamKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ParamKind::Bool => "bool",
+            ParamKind::Int => "int",
+            ParamKind::Float => "float",
+            ParamKind::Str => "string",
+        })
+    }
+}
+
+/// A typed parameter value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamValue {
+    Bool(bool),
+    Int(u64),
+    Float(f64),
+    Str(String),
+}
+
+impl ParamValue {
+    pub fn kind(&self) -> ParamKind {
+        match self {
+            ParamValue::Bool(_) => ParamKind::Bool,
+            ParamValue::Int(_) => ParamKind::Int,
+            ParamValue::Float(_) => ParamKind::Float,
+            ParamValue::Str(_) => ParamKind::Str,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            ParamValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            ParamValue::Int(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ParamValue::Float(x) => Some(*x),
+            ParamValue::Int(n) => Some(*n as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ParamValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Parse a textual value as `kind`.
+    pub fn parse_as(kind: ParamKind, text: &str) -> Option<ParamValue> {
+        match kind {
+            ParamKind::Bool => match text {
+                "true" | "1" | "yes" => Some(ParamValue::Bool(true)),
+                "false" | "0" | "no" => Some(ParamValue::Bool(false)),
+                _ => None,
+            },
+            ParamKind::Int => text.parse::<u64>().ok().map(ParamValue::Int),
+            ParamKind::Float => match text.parse::<f64>() {
+                Ok(x) if x.is_finite() => Some(ParamValue::Float(x)),
+                _ => None,
+            },
+            ParamKind::Str => Some(ParamValue::Str(text.to_string())),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            ParamValue::Bool(b) => Json::Bool(*b),
+            ParamValue::Int(n) => Json::Num(*n as f64),
+            ParamValue::Float(x) => Json::Num(*x),
+            ParamValue::Str(s) => Json::Str(s.clone()),
+        }
+    }
+}
+
+impl fmt::Display for ParamValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParamValue::Bool(b) => write!(f, "{b}"),
+            ParamValue::Int(n) => write!(f, "{n}"),
+            ParamValue::Float(x) => write!(f, "{x}"),
+            ParamValue::Str(s) => f.write_str(s),
+        }
+    }
+}
+
+impl From<bool> for ParamValue {
+    fn from(b: bool) -> Self {
+        ParamValue::Bool(b)
+    }
+}
+
+impl From<u64> for ParamValue {
+    fn from(n: u64) -> Self {
+        ParamValue::Int(n)
+    }
+}
+
+impl From<usize> for ParamValue {
+    fn from(n: usize) -> Self {
+        ParamValue::Int(n as u64)
+    }
+}
+
+impl From<f64> for ParamValue {
+    fn from(x: f64) -> Self {
+        ParamValue::Float(x)
+    }
+}
+
+impl From<&str> for ParamValue {
+    fn from(s: &str) -> Self {
+        ParamValue::Str(s.to_string())
+    }
+}
+
+/// Declaration of one accepted parameter (drives validation *and* the
+/// generated CLI help, so the two cannot drift).
+#[derive(Debug, Clone, Copy)]
+pub struct ParamInfo {
+    pub key: &'static str,
+    pub kind: ParamKind,
+    /// Rendered default, shown in help.
+    pub default: &'static str,
+    pub help: &'static str,
+}
+
+// ---------------------------------------------------------------------------
+// Spec + errors
+
+/// A method name plus typed key=value parameters — the unit every run is
+/// constructed from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MethodSpec {
+    pub name: String,
+    pub params: BTreeMap<String, ParamValue>,
+}
+
+impl MethodSpec {
+    pub fn new(name: &str) -> MethodSpec {
+        MethodSpec { name: name.to_string(), params: BTreeMap::new() }
+    }
+
+    /// Builder-style parameter attachment:
+    /// `MethodSpec::new("gns").with("cache-fraction", 0.02)`.
+    pub fn with(mut self, key: &str, value: impl Into<ParamValue>) -> MethodSpec {
+        self.params.insert(key.to_string(), value.into());
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ParamValue> {
+        self.params.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.as_u64())
+            .map(|n| n as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    /// JSON form: `{"method": "gns", "params": {"cache-fraction": 0.02}}`.
+    pub fn to_json(&self) -> Json {
+        let params = Json::Obj(
+            self.params
+                .iter()
+                .map(|(k, v)| (k.clone(), v.to_json()))
+                .collect(),
+        );
+        json::obj(vec![
+            ("method", Json::Str(self.name.clone())),
+            ("params", params),
+        ])
+    }
+}
+
+impl fmt::Display for MethodSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.name)?;
+        for (i, (k, v)) in self.params.iter().enumerate() {
+            f.write_str(if i == 0 { ":" } else { "," })?;
+            write!(f, "{k}={v}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Typed spec-layer errors (parse + validation).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpecError {
+    UnknownMethod { name: String, known: Vec<String> },
+    UnknownParam { method: String, key: String, valid: Vec<String> },
+    BadValue { method: String, key: String, value: String, want: ParamKind },
+    Grammar { spec: String, reason: String },
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::UnknownMethod { name, known } => write!(
+                f,
+                "unknown method {name:?}; known methods: {}",
+                known.join(", ")
+            ),
+            SpecError::UnknownParam { method, key, valid } => {
+                if valid.is_empty() {
+                    write!(f, "method {method:?} takes no parameters (got {key:?})")
+                } else {
+                    write!(
+                        f,
+                        "unknown parameter {key:?} for method {method:?}; valid: {}",
+                        valid.join(", ")
+                    )
+                }
+            }
+            SpecError::BadValue { method, key, value, want } => write!(
+                f,
+                "parameter {key}={value:?} of method {method:?} is not a valid {want}"
+            ),
+            SpecError::Grammar { spec, reason } => {
+                write!(f, "malformed method spec {spec:?}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+// ---------------------------------------------------------------------------
+// Builder trait + context
+
+/// Everything a method needs to construct per-worker samplers.
+pub struct BuildContext<'a> {
+    pub dataset: &'a Dataset,
+    /// Shared graph handle the factories capture — builders clone the Arc,
+    /// never the CSR arrays.
+    pub graph: Arc<crate::graph::CsrGraph>,
+    pub shapes: BlockShapes,
+    pub seed: u64,
+    /// Simulated device memory capacity (bytes).
+    pub device_capacity: u64,
+    /// LazyGCN mega-batch pinning budget (defaults to `device_capacity`).
+    pub lazy_budget: Option<u64>,
+}
+
+impl<'a> BuildContext<'a> {
+    pub fn new(dataset: &'a Dataset, shapes: BlockShapes, seed: u64) -> BuildContext<'a> {
+        let graph = Arc::new(dataset.graph.clone());
+        Self::with_graph(dataset, graph, shapes, seed)
+    }
+
+    /// Like `new`, but reusing an existing shared graph handle (callers
+    /// building several factories over one dataset pay one deep copy).
+    pub fn with_graph(
+        dataset: &'a Dataset,
+        graph: Arc<crate::graph::CsrGraph>,
+        shapes: BlockShapes,
+        seed: u64,
+    ) -> BuildContext<'a> {
+        BuildContext {
+            dataset,
+            graph,
+            shapes,
+            seed,
+            device_capacity: 16 * (1 << 30),
+            lazy_budget: None,
+        }
+    }
+}
+
+/// One training method's construction logic. Implementations own param
+/// validation, artifact-shape selection, and factory wiring; they are the
+/// *only* place samplers are constructed outside sampler unit tests.
+pub trait MethodBuilder: Send + Sync {
+    /// Canonical spec name (`ns`, `ladies`, `lazygcn`, `gns`).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for the generated CLI help.
+    fn summary(&self) -> &'static str;
+
+    /// `(alias, canonical spec)` pairs, e.g. `("ladies5k", "ladies:s-layer=5000")`.
+    fn aliases(&self) -> &'static [(&'static str, &'static str)] {
+        &[]
+    }
+
+    /// Accepted parameters (validation + generated help).
+    fn params(&self) -> &'static [ParamInfo];
+
+    /// Human label for result tables, e.g. `LADIES(512)`.
+    fn label(&self, spec: &MethodSpec) -> String;
+
+    /// AOT artifact name this (spec, dataset) pair executes against.
+    fn artifact_for(&self, spec: &MethodSpec, dataset: &str) -> String;
+
+    /// Build the per-worker sampler factory.
+    fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory>;
+}
+
+fn artifact_base(dataset: &str) -> &str {
+    dataset.trim_end_matches("-s")
+}
+
+/// Look up a declared parameter on a builder; the one place the
+/// UnknownParam error is constructed, shared by the text, programmatic,
+/// and JSON entry points.
+pub fn param_info(
+    builder: &dyn MethodBuilder,
+    key: &str,
+) -> Result<&'static ParamInfo, SpecError> {
+    builder
+        .params()
+        .iter()
+        .find(|p| p.key == key)
+        .ok_or_else(|| SpecError::UnknownParam {
+            method: builder.name().to_string(),
+            key: key.to_string(),
+            valid: builder.params().iter().map(|p| p.key.to_string()).collect(),
+        })
+}
+
+// ---------------------------------------------------------------------------
+// Built-in builders
+
+struct NsBuilder;
+
+impl MethodBuilder for NsBuilder {
+    fn name(&self) -> &'static str {
+        "ns"
+    }
+
+    fn summary(&self) -> &'static str {
+        "uniform node-wise neighbor sampling (GraphSAGE baseline)"
+    }
+
+    fn params(&self) -> &'static [ParamInfo] {
+        &[]
+    }
+
+    fn label(&self, _spec: &MethodSpec) -> String {
+        "NS".to_string()
+    }
+
+    fn artifact_for(&self, _spec: &MethodSpec, dataset: &str) -> String {
+        artifact_base(dataset).to_string()
+    }
+
+    fn build(&self, _spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
+        let graph = ctx.graph.clone();
+        let shapes = ctx.shapes.clone();
+        let seed = ctx.seed;
+        Ok(Box::new(move |w| {
+            Box::new(NeighborSampler::new(graph.clone(), shapes.clone(), seed + w as u64))
+        }))
+    }
+}
+
+struct LadiesBuilder;
+
+const LADIES_PARAMS: &[ParamInfo] = &[ParamInfo {
+    key: "s-layer",
+    kind: ParamKind::Int,
+    default: "512",
+    help: "nodes sampled per layer (Table 3 uses 512 and 5000)",
+}];
+
+impl MethodBuilder for LadiesBuilder {
+    fn name(&self) -> &'static str {
+        "ladies"
+    }
+
+    fn summary(&self) -> &'static str {
+        "layer-dependent importance sampling (Zou et al.)"
+    }
+
+    fn aliases(&self) -> &'static [(&'static str, &'static str)] {
+        &[
+            ("ladies512", "ladies:s-layer=512"),
+            ("ladies5000", "ladies:s-layer=5000"),
+            ("ladies5k", "ladies:s-layer=5000"),
+        ]
+    }
+
+    fn params(&self) -> &'static [ParamInfo] {
+        LADIES_PARAMS
+    }
+
+    fn label(&self, spec: &MethodSpec) -> String {
+        format!("LADIES({})", spec.usize_or("s-layer", 512))
+    }
+
+    fn artifact_for(&self, spec: &MethodSpec, dataset: &str) -> String {
+        let base = artifact_base(dataset);
+        if spec.usize_or("s-layer", 512) > 2048 {
+            format!("{base}_ladies5k")
+        } else {
+            base.to_string()
+        }
+    }
+
+    fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
+        let s_layer = spec.usize_or("s-layer", 512);
+        anyhow::ensure!(s_layer >= 1, "ladies: s-layer must be >= 1");
+        let graph = ctx.graph.clone();
+        let shapes = ctx.shapes.clone();
+        let seed = ctx.seed;
+        Ok(Box::new(move |w| {
+            Box::new(LadiesSampler::new(
+                graph.clone(),
+                shapes.clone(),
+                s_layer,
+                seed + w as u64,
+            ))
+        }))
+    }
+}
+
+struct LazyGcnBuilder;
+
+const LAZYGCN_PARAMS: &[ParamInfo] = &[
+    ParamInfo {
+        key: "recycle-period",
+        kind: ParamKind::Int,
+        default: "2",
+        help: "mini-batches recycled per mega-batch (R)",
+    },
+    ParamInfo {
+        key: "rho",
+        kind: ParamKind::Float,
+        default: "1.1",
+        help: "recycling growth rate per epoch",
+    },
+];
+
+impl MethodBuilder for LazyGcnBuilder {
+    fn name(&self) -> &'static str {
+        "lazygcn"
+    }
+
+    fn summary(&self) -> &'static str {
+        "periodic mega-batch recycling (Ramezani et al.)"
+    }
+
+    fn params(&self) -> &'static [ParamInfo] {
+        LAZYGCN_PARAMS
+    }
+
+    fn label(&self, _spec: &MethodSpec) -> String {
+        "LazyGCN".to_string()
+    }
+
+    fn artifact_for(&self, _spec: &MethodSpec, dataset: &str) -> String {
+        artifact_base(dataset).to_string()
+    }
+
+    fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
+        let recycle_period = spec.usize_or("recycle-period", 2);
+        let rho = spec.f64_or("rho", 1.1);
+        anyhow::ensure!(recycle_period >= 1, "lazygcn: recycle-period must be >= 1");
+        anyhow::ensure!(rho >= 1.0, "lazygcn: rho must be >= 1.0");
+        let graph = ctx.graph.clone();
+        let shapes = ctx.shapes.clone();
+        let seed = ctx.seed;
+        let row_bytes = ctx.dataset.features.row_bytes() as u64;
+        let budget = ctx.lazy_budget.unwrap_or(ctx.device_capacity);
+        Ok(Box::new(move |w| {
+            Box::new(LazyGcnSampler::new(
+                graph.clone(),
+                shapes.clone(),
+                LazyGcnConfig {
+                    recycle_period,
+                    rho,
+                    device_budget_bytes: budget,
+                    feature_row_bytes: row_bytes,
+                    seed: seed + w as u64,
+                },
+            ))
+        }))
+    }
+}
+
+struct GnsBuilder;
+
+const GNS_PARAMS: &[ParamInfo] = &[
+    ParamInfo {
+        key: "cache-fraction",
+        kind: ParamKind::Float,
+        default: "0.01",
+        help: "fraction of |V| held in the GPU feature cache",
+    },
+    ParamInfo {
+        key: "update-period",
+        kind: ParamKind::Int,
+        default: "1",
+        help: "refresh the cache every P epochs (Table 6)",
+    },
+    ParamInfo {
+        key: "policy",
+        kind: ParamKind::Str,
+        default: "auto",
+        help: "cache distribution: auto|degree|random-walk|uniform \
+               (auto = degree, or random-walk when the train split is small)",
+    },
+    ParamInfo {
+        key: "input-cache-only",
+        kind: ParamKind::Bool,
+        default: "true",
+        help: "sample the input layer exclusively from the cache (paper setting)",
+    },
+];
+
+impl MethodBuilder for GnsBuilder {
+    fn name(&self) -> &'static str {
+        "gns"
+    }
+
+    fn summary(&self) -> &'static str {
+        "global neighbor sampling with a GPU-resident cache (this paper)"
+    }
+
+    fn params(&self) -> &'static [ParamInfo] {
+        GNS_PARAMS
+    }
+
+    fn label(&self, _spec: &MethodSpec) -> String {
+        "GNS".to_string()
+    }
+
+    fn artifact_for(&self, _spec: &MethodSpec, dataset: &str) -> String {
+        format!("{}_gns", artifact_base(dataset))
+    }
+
+    fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
+        let cache_fraction = spec.f64_or("cache-fraction", 0.01);
+        let update_period = spec.usize_or("update-period", 1);
+        anyhow::ensure!(
+            cache_fraction > 0.0 && cache_fraction <= 1.0,
+            "gns: cache-fraction must be in (0, 1], got {cache_fraction}"
+        );
+        anyhow::ensure!(update_period >= 1, "gns: update-period must be >= 1");
+        let ds = ctx.dataset;
+        let policy = match spec.str_or("policy", "auto") {
+            "degree" => CachePolicy::Degree,
+            "random-walk" => CachePolicy::RandomWalk { fanouts: ctx.shapes.fanouts.clone() },
+            "uniform" => CachePolicy::Uniform,
+            // the paper's §3.2 switch: degree probabilities when most nodes
+            // train, L-step walk probabilities when the train split is small
+            "auto" => {
+                if (ds.train.len() as f64) < 0.2 * ds.graph.num_nodes() as f64 {
+                    CachePolicy::RandomWalk { fanouts: ctx.shapes.fanouts.clone() }
+                } else {
+                    CachePolicy::Degree
+                }
+            }
+            other => anyhow::bail!(
+                "gns: policy must be auto|degree|random-walk|uniform, got {other:?}"
+            ),
+        };
+        let cfg = GnsConfig {
+            cache_fraction,
+            update_period,
+            policy,
+            input_layer_cache_only: spec.bool_or("input-cache-only", true),
+            seed: ctx.seed,
+        };
+        let graph = ctx.graph.clone();
+        let template = GnsSampler::new(graph, ctx.shapes.clone(), &ds.train, cfg);
+        // leader convention: worker 0's instance refreshes the shared cache
+        Ok(Box::new(move |w| Box::new(template.instance(w as u64, w == 0))))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+
+/// The set of known methods. `builtin()` registers the paper's four;
+/// `register` plugs in new ones (ablations, hybrids) without touching any
+/// other layer.
+pub struct MethodRegistry {
+    builders: Vec<Box<dyn MethodBuilder>>,
+}
+
+impl Default for MethodRegistry {
+    fn default() -> Self {
+        MethodRegistry::builtin()
+    }
+}
+
+impl MethodRegistry {
+    pub fn empty() -> MethodRegistry {
+        MethodRegistry { builders: Vec::new() }
+    }
+
+    /// The four methods of the paper's evaluation.
+    pub fn builtin() -> MethodRegistry {
+        let mut r = MethodRegistry::empty();
+        r.register(Box::new(NsBuilder));
+        r.register(Box::new(LadiesBuilder));
+        r.register(Box::new(LazyGcnBuilder));
+        r.register(Box::new(GnsBuilder));
+        r
+    }
+
+    /// Process-wide shared registry of the built-in methods.
+    pub fn global() -> &'static MethodRegistry {
+        static GLOBAL: std::sync::OnceLock<MethodRegistry> = std::sync::OnceLock::new();
+        GLOBAL.get_or_init(MethodRegistry::builtin)
+    }
+
+    pub fn register(&mut self, builder: Box<dyn MethodBuilder>) {
+        assert!(
+            self.builders.iter().all(|b| b.name() != builder.name()),
+            "method {:?} registered twice",
+            builder.name()
+        );
+        self.builders.push(builder);
+    }
+
+    pub fn builders(&self) -> impl Iterator<Item = &dyn MethodBuilder> {
+        self.builders.iter().map(|b| b.as_ref())
+    }
+
+    /// Canonical names + aliases, in registration order.
+    pub fn method_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for b in &self.builders {
+            names.push(b.name().to_string());
+            for (alias, _) in b.aliases() {
+                names.push(alias.to_string());
+            }
+        }
+        names
+    }
+
+    /// Look up a builder by canonical name (aliases resolve in `parse`).
+    pub fn get(&self, name: &str) -> Result<&dyn MethodBuilder, SpecError> {
+        self.builders
+            .iter()
+            .find(|b| b.name() == name)
+            .map(|b| b.as_ref())
+            .ok_or_else(|| SpecError::UnknownMethod {
+                name: name.to_string(),
+                known: self.method_names(),
+            })
+    }
+
+    /// Parse and validate a spec string (`name[:k=v,...]`), resolving
+    /// aliases to their canonical spec first. Explicit params override
+    /// alias presets.
+    pub fn parse(&self, text: &str) -> Result<MethodSpec, SpecError> {
+        let text = text.trim();
+        let (head, tail) = match text.split_once(':') {
+            Some((h, t)) => (h.trim(), Some(t)),
+            None => (text, None),
+        };
+        if head.is_empty() {
+            return Err(SpecError::Grammar {
+                spec: text.to_string(),
+                reason: "empty method name".to_string(),
+            });
+        }
+        // resolve the head: canonical name, or alias -> canonical spec
+        let mut spec = if self.builders.iter().any(|b| b.name() == head) {
+            MethodSpec::new(head)
+        } else {
+            let canonical = self.builders.iter().find_map(|b| {
+                b.aliases()
+                    .iter()
+                    .find(|(alias, _)| *alias == head)
+                    .map(|&(_, canon)| canon)
+            });
+            match canonical {
+                Some(canon) => self.parse(canon)?,
+                None => {
+                    return Err(SpecError::UnknownMethod {
+                        name: head.to_string(),
+                        known: self.method_names(),
+                    })
+                }
+            }
+        };
+        let builder = self.get(&spec.name)?;
+        if let Some(tail) = tail {
+            for pair in tail.split(',') {
+                let pair = pair.trim();
+                if pair.is_empty() {
+                    return Err(SpecError::Grammar {
+                        spec: text.to_string(),
+                        reason: "empty key=value pair".to_string(),
+                    });
+                }
+                let (key, value) = pair.split_once('=').ok_or_else(|| SpecError::Grammar {
+                    spec: text.to_string(),
+                    reason: format!("parameter {pair:?} is not key=value"),
+                })?;
+                let (key, value) = (key.trim(), value.trim());
+                let info = param_info(builder, key)?;
+                let parsed = ParamValue::parse_as(info.kind, value).ok_or_else(|| {
+                    SpecError::BadValue {
+                        method: builder.name().to_string(),
+                        key: key.to_string(),
+                        value: value.to_string(),
+                        want: info.kind,
+                    }
+                })?;
+                spec.params.insert(key.to_string(), parsed);
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Validate a programmatically-built spec (unknown keys / wrong kinds).
+    pub fn validate(&self, spec: &MethodSpec) -> Result<(), SpecError> {
+        let builder = self.get(&spec.name)?;
+        for (key, value) in &spec.params {
+            let info = param_info(builder, key)?;
+            // ints are acceptable where floats are declared (0.02 vs 1)
+            let ok = value.kind() == info.kind
+                || (info.kind == ParamKind::Float && value.kind() == ParamKind::Int);
+            if !ok {
+                return Err(SpecError::BadValue {
+                    method: builder.name().to_string(),
+                    key: key.clone(),
+                    value: value.to_string(),
+                    want: info.kind,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Typed spec from JSON: `{"method": ..., "params": {...}}`.
+    pub fn from_json(&self, v: &Json) -> Result<MethodSpec, SpecError> {
+        let name = v
+            .get("method")
+            .and_then(|m| m.as_str())
+            .ok_or_else(|| SpecError::Grammar {
+                spec: "<json>".to_string(),
+                reason: "missing string field \"method\"".to_string(),
+            })?;
+        let builder = self.get(name)?;
+        let mut spec = MethodSpec::new(name);
+        if let Some(Json::Obj(params)) = v.get("params") {
+            for (key, value) in params {
+                let info = param_info(builder, key)?;
+                let parsed = match (info.kind, value) {
+                    (ParamKind::Bool, Json::Bool(b)) => Some(ParamValue::Bool(*b)),
+                    (ParamKind::Int, Json::Num(n)) if n.fract() == 0.0 && *n >= 0.0 => {
+                        Some(ParamValue::Int(*n as u64))
+                    }
+                    (ParamKind::Float, Json::Num(n)) if n.is_finite() => {
+                        Some(ParamValue::Float(*n))
+                    }
+                    (ParamKind::Str, Json::Str(s)) => Some(ParamValue::Str(s.clone())),
+                    _ => None,
+                };
+                let parsed = parsed.ok_or_else(|| SpecError::BadValue {
+                    method: builder.name().to_string(),
+                    key: key.clone(),
+                    value: value.to_string_pretty(),
+                    want: info.kind,
+                })?;
+                spec.params.insert(key.clone(), parsed);
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Table label for a spec (falls back to the raw name when unknown).
+    pub fn label(&self, spec: &MethodSpec) -> String {
+        match self.get(&spec.name) {
+            Ok(b) => b.label(spec),
+            Err(_) => spec.name.clone(),
+        }
+    }
+
+    /// Artifact name for (spec, dataset).
+    pub fn artifact_for(&self, spec: &MethodSpec, dataset: &str) -> Result<String, SpecError> {
+        Ok(self.get(&spec.name)?.artifact_for(spec, dataset))
+    }
+
+    /// Validate and build the per-worker sampler factory for a spec.
+    pub fn factory(
+        &self,
+        spec: &MethodSpec,
+        ctx: &BuildContext<'_>,
+    ) -> anyhow::Result<SamplerFactory> {
+        self.validate(spec).map_err(anyhow::Error::new)?;
+        let builder = self.get(&spec.name).map_err(anyhow::Error::new)?;
+        builder.build(spec, ctx)
+    }
+
+    /// Build a single sampler (worker `w`) for a spec — the one-liner the
+    /// tests, table experiments, and benches use.
+    pub fn sampler(
+        &self,
+        spec: &MethodSpec,
+        ctx: &BuildContext<'_>,
+        worker: usize,
+    ) -> anyhow::Result<Box<dyn Sampler>> {
+        Ok(self.factory(spec, ctx)?(worker))
+    }
+
+    /// Generated method documentation for the CLI help (names, summaries,
+    /// parameters with defaults, aliases) — help cannot drift from the
+    /// registry because it *is* the registry.
+    pub fn help_methods(&self) -> String {
+        let mut out = String::new();
+        for b in &self.builders {
+            out.push_str(&format!("  {:<10} {}\n", b.name(), b.summary()));
+            for p in b.params() {
+                out.push_str(&format!(
+                    "    {:<24} {} ({}, default {})\n",
+                    format!("{}=<{}>", p.key, p.kind),
+                    p.help,
+                    p.kind,
+                    p.default
+                ));
+            }
+            if !b.aliases().is_empty() {
+                let list: Vec<String> = b
+                    .aliases()
+                    .iter()
+                    .map(|(a, c)| format!("{a} = {c}"))
+                    .collect();
+                out.push_str(&format!("    aliases: {}\n", list.join(", ")));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::testutil::*;
+    use crate::sampling::validate_batch;
+
+    fn reg() -> MethodRegistry {
+        MethodRegistry::builtin()
+    }
+
+    #[test]
+    fn parses_bare_names_and_params() {
+        let r = reg();
+        let s = r.parse("ns").unwrap();
+        assert_eq!(s, MethodSpec::new("ns"));
+        let s = r.parse("gns:cache-fraction=0.02,update-period=2").unwrap();
+        assert_eq!(s.f64_or("cache-fraction", 0.0), 0.02);
+        assert_eq!(s.usize_or("update-period", 0), 2);
+        let s = r.parse("ladies:s-layer=5000").unwrap();
+        assert_eq!(s.usize_or("s-layer", 0), 5000);
+    }
+
+    #[test]
+    fn aliases_expand_and_explicit_params_override() {
+        let r = reg();
+        assert_eq!(r.parse("ladies512").unwrap(), r.parse("ladies:s-layer=512").unwrap());
+        assert_eq!(r.parse("ladies5k").unwrap(), r.parse("ladies:s-layer=5000").unwrap());
+        assert_eq!(r.parse("ladies5000").unwrap(), r.parse("ladies5k").unwrap());
+        let s = r.parse("ladies512:s-layer=64").unwrap();
+        assert_eq!(s.usize_or("s-layer", 0), 64);
+    }
+
+    #[test]
+    fn typed_errors_name_the_problem() {
+        let r = reg();
+        match r.parse("dgl").unwrap_err() {
+            SpecError::UnknownMethod { name, known } => {
+                assert_eq!(name, "dgl");
+                assert!(known.contains(&"gns".to_string()));
+                assert!(known.contains(&"ladies5k".to_string()));
+            }
+            e => panic!("wrong error: {e}"),
+        }
+        match r.parse("gns:cache-frac=0.1").unwrap_err() {
+            SpecError::UnknownParam { key, valid, .. } => {
+                assert_eq!(key, "cache-frac");
+                assert!(valid.contains(&"cache-fraction".to_string()));
+            }
+            e => panic!("wrong error: {e}"),
+        }
+        match r.parse("gns:cache-fraction=lots").unwrap_err() {
+            SpecError::BadValue { key, want, .. } => {
+                assert_eq!(key, "cache-fraction");
+                assert_eq!(want, ParamKind::Float);
+            }
+            e => panic!("wrong error: {e}"),
+        }
+        assert!(matches!(r.parse(""), Err(SpecError::Grammar { .. })));
+        assert!(matches!(r.parse("gns:nope"), Err(SpecError::Grammar { .. })));
+    }
+
+    #[test]
+    fn display_round_trips() {
+        let r = reg();
+        for text in [
+            "ns",
+            "ladies:s-layer=5000",
+            "lazygcn:recycle-period=4,rho=1.25",
+            "gns:cache-fraction=0.02,input-cache-only=false,policy=degree,update-period=2",
+        ] {
+            let spec = r.parse(text).unwrap();
+            assert_eq!(spec.to_string(), text, "canonical rendering");
+            assert_eq!(r.parse(&spec.to_string()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let r = reg();
+        let spec = r.parse("gns:cache-fraction=0.005,policy=uniform").unwrap();
+        let j = spec.to_json();
+        let text = j.to_string_pretty();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(r.from_json(&parsed).unwrap(), spec);
+        // bad JSON params are typed errors too
+        let bad = crate::util::json::Json::parse(
+            r#"{"method": "gns", "params": {"cache-fraction": "a lot"}}"#,
+        )
+        .unwrap();
+        assert!(matches!(r.from_json(&bad), Err(SpecError::BadValue { .. })));
+    }
+
+    #[test]
+    fn artifact_mapping_matches_paper_layout() {
+        let r = reg();
+        let a = |t: &str, ds: &str| r.artifact_for(&r.parse(t).unwrap(), ds).unwrap();
+        assert_eq!(a("ns", "products-s"), "products");
+        assert_eq!(a("gns", "papers-s"), "papers_gns");
+        assert_eq!(a("ladies5k", "yelp-s"), "yelp_ladies5k");
+        assert_eq!(a("ladies:s-layer=512", "yelp-s"), "yelp");
+        assert_eq!(a("lazygcn", "amazon-s"), "amazon");
+    }
+
+    #[test]
+    fn builders_construct_working_samplers() {
+        let ds = tiny_dataset(3);
+        let shapes = tiny_shapes(16);
+        let r = reg();
+        for text in ["ns", "ladies:s-layer=64", "lazygcn", "gns:cache-fraction=0.02"] {
+            let spec = r.parse(text).unwrap();
+            let ctx = BuildContext::new(&ds, shapes.clone(), 7);
+            let mut s = r.sampler(&spec, &ctx, 0).unwrap();
+            s.begin_epoch(0);
+            let mb = s.sample_batch(&ds.train[..16], &ds.labels).unwrap();
+            validate_batch(&mb, &shapes).unwrap_or_else(|e| panic!("{text}: {e}"));
+        }
+    }
+
+    #[test]
+    fn gns_auto_policy_switches_on_small_train_split() {
+        let ds = tiny_dataset(5);
+        let shapes = tiny_shapes(8);
+        let r = reg();
+        let spec = r.parse("gns:cache-fraction=0.05").unwrap();
+        let mut small = ds;
+        let keep = small.graph.num_nodes() / 10; // 10% < the 20% threshold
+        small.train.truncate(keep.max(1));
+        let ctx = BuildContext::new(&small, shapes, 7);
+        // auto must build (random-walk path) and produce cached inputs
+        let mut s = r.sampler(&spec, &ctx, 0).unwrap();
+        let n = small.train.len().min(8);
+        let mb = s.sample_batch(&small.train[..n], &small.labels).unwrap();
+        assert!(mb.stats.cached_inputs > 0);
+    }
+
+    #[test]
+    fn invalid_combinations_fail_in_build() {
+        let ds = tiny_dataset(3);
+        let shapes = tiny_shapes(8);
+        let r = reg();
+        let ctx = BuildContext::new(&ds, shapes, 1);
+        for text in [
+            "gns:cache-fraction=0",
+            "gns:update-period=0",
+            "gns:policy=magic",
+            "ladies:s-layer=0",
+            "lazygcn:rho=0.5",
+        ] {
+            let spec = r.parse(text).unwrap();
+            assert!(r.factory(&spec, &ctx).is_err(), "{text} should fail");
+        }
+    }
+
+    #[test]
+    fn registry_rejects_unknown_spec_params_from_with() {
+        let r = reg();
+        let spec = MethodSpec::new("ns").with("bogus", 1u64);
+        assert!(matches!(r.validate(&spec), Err(SpecError::UnknownParam { .. })));
+    }
+
+    #[test]
+    fn help_lists_every_method_param_and_alias() {
+        let r = reg();
+        let help = r.help_methods();
+        for b in r.builders() {
+            assert!(help.contains(b.name()));
+            for p in b.params() {
+                assert!(help.contains(p.key), "{} missing", p.key);
+            }
+            for (alias, _) in b.aliases() {
+                assert!(help.contains(alias), "{alias} missing");
+            }
+        }
+    }
+}

@@ -1,0 +1,588 @@
+//! The run-construction facade: `SessionBuilder` → `Session::run()`.
+//!
+//! A *session* wraps everything a training run needs — dataset build,
+//! artifact discovery + shape validation, `Trainer` setup, per-worker
+//! sampler factories from the [`MethodRegistry`], training, and test-split
+//! evaluation — behind one builder, so the CLI, the experiment drivers,
+//! the examples, and the benches all construct runs the same way:
+//!
+//! ```no_run
+//! use gns::session::Session;
+//!
+//! let mut session = Session::builder("products-s", "gns:cache-fraction=0.02")
+//!     .scale(0.3)
+//!     .epochs(4)
+//!     .build()?;
+//! let result = session.run()?;
+//! println!("test F1 {:.4}", result.test_f1);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! Failures before training starts are **typed** ([`BuildError`]): an
+//! unknown method or parameter is a [`SpecError`], a missing AOT artifact
+//! carries a "run `make artifacts`" diagnostic (tests skip on it via
+//! [`SessionBuilder::build_or_skip`]), and artifact/dataset shape
+//! mismatches name both sides. Structured *training* failures (e.g. the
+//! LazyGCN mega-batch OOM of Table 3) are captured in
+//! [`RunResult::error`] rather than propagated, so sweeps report N/A
+//! cells instead of aborting.
+
+use crate::device::{ComputeModel, TransferModel};
+use crate::features::{build_dataset, synthesize_features, Dataset, FeatureParams};
+use crate::graph::generate::{LabeledGraph, DATASET_NAMES};
+use crate::graph::{CsrGraph, NodeId};
+use crate::pipeline::{EpochReport, TrainOptions, Trainer};
+use crate::runtime::{artifacts_root, ArtifactMeta, Runtime};
+use crate::sampling::spec::{
+    BuildContext, MethodRegistry, MethodSpec, SamplerFactory, SpecError,
+};
+use crate::sampling::BlockShapes;
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Typed session-construction errors.
+#[derive(Debug)]
+pub enum BuildError {
+    /// Unknown method / parameter / malformed spec text.
+    Spec(SpecError),
+    /// The AOT artifact directory is absent.
+    MissingArtifact { artifact: String, dir: PathBuf },
+    /// Artifact and dataset disagree on tensor shapes.
+    ShapeMismatch { artifact: String, detail: String },
+    /// Invalid builder inputs (e.g. a chunk size beyond the batch capacity).
+    Invalid(String),
+    /// Artifact parse / PJRT compile / factory construction failures.
+    Runtime(anyhow::Error),
+}
+
+impl BuildError {
+    /// True when the failure is "artifacts not built yet" — the condition
+    /// tests and examples treat as a skip, not an error.
+    pub fn is_missing_artifact(&self) -> bool {
+        matches!(self, BuildError::MissingArtifact { .. })
+    }
+}
+
+impl fmt::Display for BuildError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BuildError::Spec(e) => write!(f, "{e}"),
+            BuildError::MissingArtifact { artifact, dir } => write!(
+                f,
+                "artifact {artifact:?} not found at {} — run `make artifacts` \
+                 to AOT-compile the train/eval HLO first",
+                dir.display()
+            ),
+            BuildError::ShapeMismatch { artifact, detail } => {
+                write!(f, "artifact {artifact:?} does not match the dataset: {detail}")
+            }
+            BuildError::Invalid(msg) => write!(f, "invalid session configuration: {msg}"),
+            BuildError::Runtime(e) => write!(f, "{e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for BuildError {}
+
+impl From<SpecError> for BuildError {
+    fn from(e: SpecError) -> Self {
+        BuildError::Spec(e)
+    }
+}
+
+/// Outcome of training one (method, dataset) cell.
+pub struct RunResult {
+    pub reports: Vec<EpochReport>,
+    pub test_f1: f64,
+    pub device_peak: u64,
+    /// Structured training failure (e.g. LazyGCN OOM), captured rather
+    /// than propagated — Table 3 reports those cells as N/A.
+    pub error: Option<String>,
+}
+
+impl RunResult {
+    pub fn final_f1(&self) -> f64 {
+        self.test_f1
+    }
+
+    /// mean per-epoch time in the device frame (as-if the paper's T4
+    /// testbed; see ComputeModel). The raw measured wall time is available
+    /// per report in `reports`.
+    pub fn epoch_time(&self) -> f64 {
+        if self.reports.is_empty() {
+            return f64::NAN;
+        }
+        self.reports
+            .iter()
+            .map(|r| r.device_frame_secs())
+            .sum::<f64>()
+            / self.reports.len() as f64
+    }
+
+    /// mean measured wall seconds per epoch (CPU testbed frame).
+    pub fn wall_epoch_time(&self) -> f64 {
+        if self.reports.is_empty() {
+            return f64::NAN;
+        }
+        self.reports.iter().map(|r| r.wall.as_secs_f64()).sum::<f64>()
+            / self.reports.len() as f64
+    }
+}
+
+enum MethodSource {
+    Text(String),
+    Spec(MethodSpec),
+}
+
+/// Builder for [`Session`]. Defaults mirror the experiment harness
+/// (single-core testbed sizing).
+pub struct SessionBuilder {
+    dataset: String,
+    method: MethodSource,
+    scale: f64,
+    epochs: usize,
+    seed: u64,
+    workers: usize,
+    lr: f32,
+    device_capacity: u64,
+    lazy_budget: Option<u64>,
+    eval_batches: usize,
+    test_eval_batches: Option<usize>,
+    queue_capacity: usize,
+    paranoid_validate: bool,
+    chunk_size: Option<usize>,
+    artifact: Option<String>,
+    artifacts_dir: Option<PathBuf>,
+    refit_features: bool,
+    max_train_nodes: Option<usize>,
+    max_val_nodes: Option<usize>,
+}
+
+impl SessionBuilder {
+    pub fn new(dataset: &str, method: &str) -> SessionBuilder {
+        SessionBuilder {
+            dataset: dataset.to_string(),
+            method: MethodSource::Text(method.to_string()),
+            scale: 0.3,
+            epochs: 3,
+            seed: 1,
+            workers: 1,
+            lr: 3e-3,
+            device_capacity: 16 * (1 << 30),
+            lazy_budget: None,
+            eval_batches: 6,
+            test_eval_batches: None,
+            queue_capacity: 4,
+            paranoid_validate: false,
+            chunk_size: None,
+            artifact: None,
+            artifacts_dir: None,
+            refit_features: false,
+            max_train_nodes: None,
+            max_val_nodes: None,
+        }
+    }
+
+    /// Use a pre-parsed spec instead of spec text.
+    pub fn spec(mut self, spec: MethodSpec) -> Self {
+        self.method = MethodSource::Spec(spec);
+        self
+    }
+
+    pub fn scale(mut self, scale: f64) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    pub fn epochs(mut self, epochs: usize) -> Self {
+        self.epochs = epochs;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn device_capacity(mut self, bytes: u64) -> Self {
+        self.device_capacity = bytes;
+        self
+    }
+
+    /// LazyGCN mega-batch pinning budget (defaults to device capacity).
+    pub fn lazy_budget(mut self, bytes: Option<u64>) -> Self {
+        self.lazy_budget = bytes;
+        self
+    }
+
+    pub fn eval_batches(mut self, n: usize) -> Self {
+        self.eval_batches = n;
+        self
+    }
+
+    /// Batches used for the final test-split evaluation (default:
+    /// `eval_batches.max(8)` — the shared-harness convention).
+    pub fn test_eval_batches(mut self, n: usize) -> Self {
+        self.test_eval_batches = Some(n);
+        self
+    }
+
+    pub fn queue_capacity(mut self, n: usize) -> Self {
+        self.queue_capacity = n;
+        self
+    }
+
+    /// Validate every batch against the block invariants (tests/debug).
+    pub fn paranoid_validate(mut self, on: bool) -> Self {
+        self.paranoid_validate = on;
+        self
+    }
+
+    /// Per-batch target-chunk size ≤ the padded batch capacity (smaller
+    /// chunks are masked — how Figure 4 sweeps the mini-batch size
+    /// without re-lowering artifacts).
+    pub fn chunk_size(mut self, n: usize) -> Self {
+        self.chunk_size = Some(n);
+        self
+    }
+
+    /// Override the artifact name (instead of the registry's
+    /// method×dataset mapping) — e.g. the `tiny` smoke artifact.
+    pub fn artifact(mut self, name: &str) -> Self {
+        self.artifact = Some(name.to_string());
+        self
+    }
+
+    /// Override the artifacts root directory ($GNS_ARTIFACTS / ./artifacts
+    /// by default).
+    pub fn artifacts_dir(mut self, dir: PathBuf) -> Self {
+        self.artifacts_dir = Some(dir);
+        self
+    }
+
+    /// Re-synthesize features/labels to the artifact's dims and class
+    /// count (the quickstart/tiny-artifact path).
+    pub fn refit_features(mut self, on: bool) -> Self {
+        self.refit_features = on;
+        self
+    }
+
+    /// Truncate the train split (fast smoke runs).
+    pub fn max_train_nodes(mut self, n: usize) -> Self {
+        self.max_train_nodes = Some(n);
+        self
+    }
+
+    /// Truncate the validation split (fast smoke runs).
+    pub fn max_val_nodes(mut self, n: usize) -> Self {
+        self.max_val_nodes = Some(n);
+        self
+    }
+
+    /// Resolve the spec, build the dataset, load + validate the artifact,
+    /// and stand up the trainer and sampler factories.
+    pub fn build(self) -> Result<Session, BuildError> {
+        let registry = MethodRegistry::global();
+        let spec = match &self.method {
+            MethodSource::Text(t) => registry.parse(t)?,
+            MethodSource::Spec(s) => {
+                registry.validate(s)?;
+                s.clone()
+            }
+        };
+        // validate the dataset name up front (cheap) so a typo is reported
+        // as such, not as a missing artifact for a nonsense name
+        if !DATASET_NAMES.contains(&self.dataset.as_str()) {
+            return Err(BuildError::Invalid(format!(
+                "unknown dataset {:?} (expected {})",
+                self.dataset,
+                DATASET_NAMES.join("|")
+            )));
+        }
+        // artifact checks come before dataset synthesis so the common
+        // artifacts-not-built case (tests skipping, fresh checkouts) fails
+        // fast instead of generating a full graph first
+        let artifact = match &self.artifact {
+            Some(name) => name.clone(),
+            None => registry.artifact_for(&spec, &self.dataset)?,
+        };
+        let root = self.artifacts_dir.clone().unwrap_or_else(artifacts_root);
+        let dir = root.join(&artifact);
+        if !dir.join("meta.json").exists() {
+            return Err(BuildError::MissingArtifact { artifact, dir });
+        }
+        let meta = ArtifactMeta::load(&dir).map_err(BuildError::Runtime)?;
+        let chunk_size = self.chunk_size.unwrap_or(meta.batch_size);
+        if chunk_size == 0 || chunk_size > meta.batch_size {
+            return Err(BuildError::Invalid(format!(
+                "chunk size {chunk_size} out of range 1..={}",
+                meta.batch_size
+            )));
+        }
+
+        let mut ds = build_dataset(&self.dataset, self.scale, self.seed);
+        if let Some(n) = self.max_train_nodes {
+            ds.train.truncate(n);
+        }
+        if let Some(n) = self.max_val_nodes {
+            ds.val.truncate(n);
+        }
+        if self.refit_features {
+            refit_dataset_to_artifact(&mut ds, &meta, self.seed);
+        }
+        if meta.feature_dim != ds.features.dim() {
+            return Err(BuildError::ShapeMismatch {
+                artifact,
+                detail: format!(
+                    "artifact feature dim {} != dataset feature dim {}",
+                    meta.feature_dim,
+                    ds.features.dim()
+                ),
+            });
+        }
+        if meta.num_classes < ds.num_classes {
+            return Err(BuildError::ShapeMismatch {
+                artifact,
+                detail: format!(
+                    "artifact class count {} < dataset class count {}",
+                    meta.num_classes, ds.num_classes
+                ),
+            });
+        }
+        // meta is already loaded and validated — hand it to the runtime
+        // instead of re-reading meta.json
+        let runtime = Runtime::load_with_meta(meta).map_err(BuildError::Runtime)?;
+        let shapes = runtime.meta.block_shapes();
+        let ds = Arc::new(ds);
+
+        // one deep graph copy, shared by both factories via Arc
+        let graph: Arc<CsrGraph> = Arc::new(ds.graph.clone());
+        let mut ctx = BuildContext::with_graph(&ds, graph.clone(), shapes.clone(), self.seed);
+        ctx.device_capacity = self.device_capacity;
+        ctx.lazy_budget = self.lazy_budget;
+        let factory = registry.factory(&spec, &ctx).map_err(BuildError::Runtime)?;
+        // test/val evaluation samples NS neighborhoods (standard inductive
+        // evaluation), also built through the registry; a fresh sampler is
+        // drawn from this factory per evaluation so repeated evals of the
+        // same model state see identical neighborhoods
+        let eval_ctx = BuildContext::with_graph(&ds, graph, shapes, self.seed + 999);
+        let eval_factory = registry
+            .factory(&MethodSpec::new("ns"), &eval_ctx)
+            .map_err(BuildError::Runtime)?;
+
+        let topts = TrainOptions {
+            epochs: self.epochs,
+            lr: self.lr,
+            workers: self.workers,
+            queue_capacity: self.queue_capacity,
+            eval_batches: self.eval_batches,
+            seed: self.seed,
+            device_capacity: self.device_capacity,
+            transfer: TransferModel::default(),
+            compute_model: ComputeModel::default(),
+            paranoid_validate: self.paranoid_validate,
+        };
+        let label = registry.label(&spec);
+        let trainer = Trainer::new(runtime, ds.clone(), &topts).map_err(BuildError::Runtime)?;
+        Ok(Session {
+            dataset: ds,
+            trainer,
+            factory,
+            eval_factory,
+            spec,
+            label,
+            test_eval_batches: self.test_eval_batches.unwrap_or(self.eval_batches.max(8)),
+            topts,
+            chunk_size,
+        })
+    }
+
+    /// `build`, or print a SKIP diagnostic and return None when the AOT
+    /// artifact is absent — keeps `cargo test -q` meaningful without the
+    /// Python AOT step. Panics on any other build failure.
+    pub fn build_or_skip(self) -> Option<Session> {
+        match self.build() {
+            Ok(s) => Some(s),
+            Err(e) if e.is_missing_artifact() => {
+                eprintln!("SKIP: {e}");
+                None
+            }
+            Err(e) => panic!("session build failed: {e}"),
+        }
+    }
+}
+
+/// A fully-wired training run. See the module docs for the lifecycle.
+pub struct Session {
+    dataset: Arc<Dataset>,
+    trainer: Trainer,
+    factory: SamplerFactory,
+    eval_factory: SamplerFactory,
+    spec: MethodSpec,
+    label: String,
+    test_eval_batches: usize,
+    topts: TrainOptions,
+    chunk_size: usize,
+}
+
+impl Session {
+    pub fn builder(dataset: &str, method: &str) -> SessionBuilder {
+        SessionBuilder::new(dataset, method)
+    }
+
+    /// Train all epochs, then evaluate on the test split. Structured
+    /// training failures land in `RunResult::error`.
+    pub fn run(&mut self) -> anyhow::Result<RunResult> {
+        match self
+            .trainer
+            .train_with_chunk_size(self.factory.as_ref(), &self.topts, self.chunk_size)
+        {
+            Ok(reports) => {
+                let test_f1 = self.test_f1()?;
+                Ok(RunResult {
+                    test_f1,
+                    device_peak: self.trainer.device_peak_bytes(),
+                    reports,
+                    error: None,
+                })
+            }
+            Err(e) => Ok(RunResult {
+                reports: Vec::new(),
+                test_f1: f64::NAN,
+                device_peak: self.trainer.device_peak_bytes(),
+                error: Some(format!("{e:#}")),
+            }),
+        }
+    }
+
+    /// Run exactly one epoch (per-epoch interleaving, e.g. the Figure 3
+    /// convergence curves). Cross-epoch sampler state (the GNS cache)
+    /// persists through the factory's shared handles.
+    pub fn train_epoch(&mut self, epoch: usize) -> anyhow::Result<EpochReport> {
+        self.trainer
+            .train_from_epoch(self.factory.as_ref(), &self.topts, epoch)
+    }
+
+    /// Micro-F1 over up to `max_batches` batches of `targets` with a
+    /// fresh NS evaluation sampler (deterministic per evaluation).
+    pub fn evaluate_split(
+        &mut self,
+        targets: &[NodeId],
+        max_batches: usize,
+    ) -> anyhow::Result<f64> {
+        let mut sampler = (self.eval_factory)(0);
+        self.trainer.evaluate(&mut sampler, targets, max_batches)
+    }
+
+    /// Test-split micro-F1 (the paper's headline metric).
+    pub fn test_f1(&mut self) -> anyhow::Result<f64> {
+        let ds = self.dataset.clone();
+        let n = self.test_eval_batches;
+        self.evaluate_split(&ds.test, n)
+    }
+
+    /// The dataset this session trains on (shared handle).
+    pub fn dataset(&self) -> Arc<Dataset> {
+        self.dataset.clone()
+    }
+
+    pub fn spec(&self) -> &MethodSpec {
+        &self.spec
+    }
+
+    /// Table label for the method (e.g. `LADIES(512)`).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn shapes(&self) -> BlockShapes {
+        self.trainer.runtime.meta.block_shapes()
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.trainer.runtime.meta
+    }
+
+    pub fn device_peak_bytes(&self) -> u64 {
+        self.trainer.device_peak_bytes()
+    }
+
+    pub fn cache_hits_misses(&self) -> (u64, u64) {
+        self.trainer.cache_hits_misses()
+    }
+}
+
+/// Re-synthesize a dataset's features and collapse its labels onto an
+/// artifact's feature dim / class count, so any analogue can drive any
+/// artifact (the `tiny` smoke-artifact path used by quickstart and the
+/// e2e tests).
+pub fn refit_dataset_to_artifact(ds: &mut Dataset, meta: &ArtifactMeta, seed: u64) {
+    let lg = LabeledGraph {
+        graph: ds.graph.clone(),
+        labels: ds
+            .labels
+            .iter()
+            .map(|&c| (c as usize % meta.num_classes) as u16)
+            .collect(),
+        num_classes: meta.num_classes,
+    };
+    ds.features = synthesize_features(
+        &lg,
+        &FeatureParams {
+            dim: meta.feature_dim,
+            centroid_scale: 1.5,
+            informative_frac: 0.6,
+            seed,
+        },
+    );
+    ds.labels = lg.labels;
+    ds.num_classes = meta.num_classes;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_method_is_a_typed_spec_error() {
+        let err = Session::builder("yelp-s", "dgl").scale(0.03).build().unwrap_err();
+        match err {
+            BuildError::Spec(SpecError::UnknownMethod { name, known }) => {
+                assert_eq!(name, "dgl");
+                assert!(known.contains(&"gns".to_string()));
+            }
+            e => panic!("wrong error: {e}"),
+        }
+    }
+
+    #[test]
+    fn missing_artifact_names_the_fix() {
+        let empty = std::env::temp_dir().join("gns_session_no_artifacts");
+        std::fs::create_dir_all(&empty).unwrap();
+        let err = Session::builder("yelp-s", "ns")
+            .scale(0.03)
+            .artifacts_dir(empty)
+            .build()
+            .unwrap_err();
+        assert!(err.is_missing_artifact(), "{err}");
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn run_result_times_are_nan_when_empty() {
+        let r = RunResult { reports: Vec::new(), test_f1: f64::NAN, device_peak: 0, error: None };
+        assert!(r.epoch_time().is_nan());
+        assert!(r.wall_epoch_time().is_nan());
+    }
+}

@@ -78,8 +78,42 @@ impl Args {
         }
     }
 
+    /// Boolean flag: absent = false, `--flag` = true, and explicit
+    /// `--flag=true|false` (also 1/0, yes/no) is honored. Any other value
+    /// is an error rather than silently false.
     pub fn bool(&self, key: &str) -> bool {
-        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+        match self.get(key) {
+            None => false,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key} expects true|false, got {v:?}"),
+        }
+    }
+
+    /// All flag keys present on the command line.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.flags.keys().map(|s| s.as_str())
+    }
+
+    /// Reject unknown flags: commands declare their accepted keys and the
+    /// error lists the valid ones (typos used to be silently ignored).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        let unknown: Vec<&str> = self
+            .keys()
+            .filter(|k| !known.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            let mut valid: Vec<&str> = known.to_vec();
+            valid.sort_unstable();
+            Err(format!(
+                "unknown flag{} --{}; valid flags: --{}",
+                if unknown.len() > 1 { "s" } else { "" },
+                unknown.join(", --"),
+                valid.join(" --")
+            ))
+        }
     }
 
     /// Comma-separated list.
@@ -135,5 +169,32 @@ mod tests {
     fn typed_error_messages() {
         let a = parse(&["--n", "abc"]);
         a.usize_or("n", 0);
+    }
+
+    #[test]
+    fn bool_accepts_explicit_false() {
+        let a = parse(&["--x=false", "--y=no", "--z=0", "--w=true", "--bare"]);
+        assert!(!a.bool("x"));
+        assert!(!a.bool("y"));
+        assert!(!a.bool("z"));
+        assert!(a.bool("w"));
+        assert!(a.bool("bare"));
+        assert!(!a.bool("absent"));
+    }
+
+    #[test]
+    #[should_panic(expected = "expects true|false")]
+    fn bool_rejects_garbage_values() {
+        let a = parse(&["--x=maybe"]);
+        a.bool("x");
+    }
+
+    #[test]
+    fn check_known_lists_valid_flags() {
+        let a = parse(&["--scale", "0.5", "--epochz", "3"]);
+        let err = a.check_known(&["scale", "epochs"]).unwrap_err();
+        assert!(err.contains("--epochz"), "{err}");
+        assert!(err.contains("--epochs"), "{err}");
+        assert!(a.check_known(&["scale", "epochz"]).is_ok());
     }
 }

@@ -1,19 +1,31 @@
 //! Cross-module integration invariants that do not require AOT artifacts:
 //! dataset → sampler → device accounting chains, statistical properties of
 //! the GNS estimator, and the Table 4 mechanism at integration level.
+//!
+//! Every sampler is constructed through the `MethodRegistry` — the same
+//! path the CLI, experiments, and benches use.
 
 use gns::device::{DeviceFeatureCache, DeviceMemory, TransferModel, TransferStats};
 use gns::features::build_dataset;
 use gns::graph::subgraph::CacheSubgraph;
 use gns::graph::walk::walk_probs;
-use gns::sampling::gns::{CachePolicy, GnsConfig, GnsSampler};
-use gns::sampling::ladies::LadiesSampler;
-use gns::sampling::neighbor::NeighborSampler;
-use gns::sampling::{validate_batch, BlockShapes, Sampler};
-use std::sync::Arc;
+use gns::sampling::spec::{BuildContext, MethodRegistry, MethodSpec};
+use gns::sampling::{first_layer_isolation, validate_batch, BlockShapes, Sampler};
 
 fn shapes(batch: usize) -> BlockShapes {
     BlockShapes::new(vec![batch * 24, batch * 6, batch], vec![4, 5])
+}
+
+fn sampler(
+    spec_text: &str,
+    ds: &gns::features::Dataset,
+    sh: BlockShapes,
+    seed: u64,
+) -> Box<dyn Sampler> {
+    let reg = MethodRegistry::global();
+    let spec = reg.parse(spec_text).unwrap();
+    let ctx = BuildContext::new(ds, sh, seed);
+    reg.sampler(&spec, &ctx, 0).unwrap()
 }
 
 #[test]
@@ -21,15 +33,9 @@ fn table4_mechanism_input_counts_ns_vs_gns() {
     // integration-level reproduction of Table 4's ordering:
     //   #input(GNS) << #input(NS), #cached(GNS) > 0
     let ds = build_dataset("products-s", 0.2, 11);
-    let graph = Arc::new(ds.graph.clone());
     let sh = shapes(128);
-    let mut ns = NeighborSampler::new(graph.clone(), sh.clone(), 1);
-    let mut gns = GnsSampler::new(
-        graph,
-        sh.clone(),
-        &ds.train,
-        GnsConfig { cache_fraction: 0.01, seed: 1, ..Default::default() },
-    );
+    let mut ns = sampler("ns", &ds, sh.clone(), 1);
+    let mut gns = sampler("gns:cache-fraction=0.01,policy=degree", &ds, sh.clone(), 1);
     let mut ns_inputs = 0usize;
     let mut gns_inputs = 0usize;
     let mut gns_cached = 0usize;
@@ -55,14 +61,8 @@ fn table4_mechanism_input_counts_ns_vs_gns() {
 #[test]
 fn device_accounting_tracks_sampler_cache_exactly() {
     let ds = build_dataset("yelp-s", 0.05, 13);
-    let graph = Arc::new(ds.graph.clone());
     let sh = shapes(64);
-    let mut gns = GnsSampler::new(
-        graph,
-        sh.clone(),
-        &ds.train,
-        GnsConfig { cache_fraction: 0.02, seed: 5, ..Default::default() },
-    );
+    let mut gns = sampler("gns:cache-fraction=0.02,policy=degree", &ds, sh, 5);
     let row_bytes = ds.features.row_bytes() as u64;
     let mut cache = DeviceFeatureCache::new(row_bytes);
     let mut mem = DeviceMemory::t4();
@@ -91,7 +91,6 @@ fn gns_estimator_is_statistically_consistent() {
     // importance weights, the weighted average of neighbor features over
     // many resampled caches should approximate the true neighborhood mean.
     let ds = build_dataset("yelp-s", 0.04, 17);
-    let graph = Arc::new(ds.graph.clone());
     let sh = shapes(32);
     // pick a target with decent degree
     let v = *ds
@@ -111,24 +110,20 @@ fn gns_estimator_is_statistically_consistent() {
 
     let trials = 300;
     let mut acc = vec![0f64; dim];
+    // one deep graph copy shared across all trials (BuildContext::new
+    // would deep-copy the CSR arrays per call)
+    let graph = std::sync::Arc::new(ds.graph.clone());
+    let reg = MethodRegistry::global();
+    let spec = reg
+        .parse("gns:cache-fraction=0.05,input-cache-only=false,policy=degree")
+        .unwrap();
     for trial in 0..trials {
-        let mut gns = GnsSampler::new(
-            graph.clone(),
-            sh.clone(),
-            &ds.train,
-            GnsConfig {
-                cache_fraction: 0.05,
-                seed: 1000 + trial,
-                input_layer_cache_only: false,
-                ..Default::default()
-            },
-        );
+        let ctx = BuildContext::with_graph(&ds, graph.clone(), sh.clone(), 1000 + trial);
+        let mut gns = reg.sampler(&spec, &ctx, 0).unwrap();
         let mb = gns.sample_batch(&[v], &ds.labels).unwrap();
         // layer 2 (output layer) row 0 = target's sampled neighbors
         let blk = mb.layers.last().unwrap();
         let k = sh.fanouts[1];
-        let lower = &mb.layers[0]; // level-1 nodes = lower real nodes
-        let _ = lower;
         for kk in 0..k {
             let w = blk.w[kk];
             if w == 0.0 {
@@ -156,26 +151,16 @@ fn gns_estimator_is_statistically_consistent() {
 #[test]
 fn random_walk_cache_policy_integrates_with_sampler() {
     let ds = build_dataset("papers-s", 0.02, 19);
-    let graph = Arc::new(ds.graph.clone());
     let sh = shapes(64);
-    let mut gns = GnsSampler::new(
-        graph,
-        sh.clone(),
-        &ds.train,
-        GnsConfig {
-            cache_fraction: 0.01,
-            policy: CachePolicy::RandomWalk { fanouts: vec![4, 5] },
-            seed: 7,
-            ..Default::default()
-        },
-    );
+    let mut gns = sampler("gns:cache-fraction=0.01,policy=random-walk", &ds, sh.clone(), 7);
     let mb = gns.sample_batch(&ds.train[..64], &ds.labels).unwrap();
     validate_batch(&mb, &sh).unwrap();
     // with a small training split, walk-based caches must still produce
     // cached inputs (reachability requirement 2 of §3.2)
     assert!(mb.stats.cached_inputs > 0);
 
-    // all cached nodes reachable per walk probs
+    // all cached nodes reachable per walk probs (the policy derives its
+    // fanouts from the block shapes: [4, 5])
     let probs = walk_probs(&ds.graph, &ds.train, &[4, 5]);
     for v in gns.cache_nodes().unwrap() {
         assert!(probs[v as usize] > 0.0);
@@ -188,12 +173,15 @@ fn ladies_isolation_depends_on_graph_density() {
     let sparse = build_dataset("yelp-s", 0.04, 29);
     let dense = build_dataset("amazon-s", 0.04, 29);
     let iso = |ds: &gns::features::Dataset| {
-        let sh = shapes(64);
-        let mut s = LadiesSampler::new(Arc::new(ds.graph.clone()), sh, 96, 3);
+        let mut s = sampler("ladies:s-layer=96", ds, shapes(64), 3);
+        let (mut isolated, mut total) = (0usize, 0usize);
         for chunk in ds.train.chunks(64).take(6) {
-            let _ = s.sample_batch(chunk, &ds.labels).unwrap();
+            let mb = s.sample_batch(chunk, &ds.labels).unwrap();
+            let (iso, n) = first_layer_isolation(&mb);
+            isolated += iso;
+            total += n;
         }
-        s.isolated_first_layer as f64 / s.first_layer_nodes.max(1) as f64
+        isolated as f64 / total.max(1) as f64
     };
     let i_sparse = iso(&sparse);
     let i_dense = iso(&dense);
@@ -220,4 +208,22 @@ fn cache_subgraph_scales_with_coverage_on_all_analogues() {
         let cov = sub.coverage(&ds.graph);
         assert!(cov > 0.3, "{name}: 1% cache coverage {cov:.3}");
     }
+}
+
+#[test]
+fn registry_specs_build_every_method_without_artifacts() {
+    // the registry path works end-to-end for all methods and aliases the
+    // CLI accepts, artifact-free (sampling only)
+    let ds = build_dataset("yelp-s", 0.03, 37);
+    let reg = MethodRegistry::global();
+    for name in reg.method_names() {
+        let spec = reg.parse(&name).unwrap();
+        let ctx = BuildContext::new(&ds, shapes(16), 2);
+        let mut s = reg.sampler(&spec, &ctx, 0).unwrap();
+        s.begin_epoch(0);
+        let mb = s.sample_batch(&ds.train[..16], &ds.labels).unwrap();
+        validate_batch(&mb, &shapes(16)).unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+    // programmatic specs validate too
+    assert!(reg.validate(&MethodSpec::new("gns").with("cache-fraction", 0.02)).is_ok());
 }

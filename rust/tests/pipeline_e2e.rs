@@ -1,88 +1,38 @@
-//! Full-pipeline integration: Trainer + worker pool + device model over the
-//! tiny AOT artifact, with every sampler the paper compares.
+//! Full-pipeline integration: `Session` (Trainer + worker pool + device
+//! model) over the tiny AOT artifact, with every sampler the paper
+//! compares. Runs are constructed exactly as the CLI constructs them —
+//! through `SessionBuilder` — and skip with a loud diagnostic when
+//! `make artifacts` has not been run.
 
-use gns::device::TransferModel;
-use gns::features::{build_dataset, Dataset};
-use gns::pipeline::{TrainOptions, Trainer};
-use gns::runtime::Runtime;
-use gns::sampling::gns::{GnsConfig, GnsSampler};
-use gns::sampling::ladies::LadiesSampler;
-use gns::sampling::lazygcn::{LazyGcnConfig, LazyGcnSampler};
-use gns::sampling::neighbor::NeighborSampler;
-use gns::sampling::Sampler;
-use std::sync::Arc;
+use gns::session::{Session, SessionBuilder};
 
-fn runtime_or_skip() -> Option<Runtime> {
-    let dir = gns::runtime::artifacts_root().join("tiny");
-    if !dir.join("meta.json").exists() {
-        eprintln!("SKIP: artifacts/tiny missing — run `make artifacts`");
-        return None;
-    }
-    Some(Runtime::load(&dir).expect("load tiny artifact"))
-}
-
-fn tiny_ds(rt: &Runtime) -> Dataset {
-    let mut ds = build_dataset("yelp-s", 0.03, 23);
-    let lg = gns::graph::generate::LabeledGraph {
-        graph: ds.graph.clone(),
-        labels: ds
-            .labels
-            .iter()
-            .map(|&c| (c as usize % rt.meta.num_classes) as u16)
-            .collect(),
-        num_classes: rt.meta.num_classes,
-    };
-    ds.features = gns::features::synthesize_features(
-        &lg,
-        &gns::features::FeatureParams {
-            dim: rt.meta.feature_dim,
-            centroid_scale: 1.5,
-            informative_frac: 0.6,
-            seed: 23,
-        },
-    );
-    ds.labels = lg.labels;
-    ds.num_classes = rt.meta.num_classes;
-    // keep epochs fast
-    ds.train.truncate(1024);
-    ds.val.truncate(256);
-    ds
-}
-
-fn opts(epochs: usize, workers: usize) -> TrainOptions {
-    TrainOptions {
-        epochs,
-        lr: 3e-3,
-        workers,
-        queue_capacity: 4,
-        eval_batches: 3,
-        seed: 1,
-        device_capacity: 16 * (1 << 30),
-        transfer: TransferModel::default(),
-        compute_model: gns::device::ComputeModel::default(),
-        paranoid_validate: true,
-    }
+/// The tiny-artifact session shared by these tests: yelp-s analogue
+/// refitted to the artifact's dims, truncated splits for speed.
+fn tiny_session(method: &str, epochs: usize, workers: usize) -> SessionBuilder {
+    Session::builder("yelp-s", method)
+        .scale(0.03)
+        .seed(1)
+        .epochs(epochs)
+        .workers(workers)
+        .eval_batches(3)
+        .artifact("tiny")
+        .refit_features(true)
+        .max_train_nodes(1024)
+        .max_val_nodes(256)
+        .paranoid_validate(true)
 }
 
 #[test]
 fn ns_pipeline_trains_and_reports_breakdown() {
-    let Some(rt) = runtime_or_skip() else { return };
-    let ds = tiny_ds(&rt);
-    let shapes = rt.meta.block_shapes();
-    let graph = Arc::new(ds.graph.clone());
-    let mut trainer = Trainer::new(rt, &ds, &opts(2, 1)).unwrap();
-    let reports = trainer
-        .train(
-            &|w| Box::new(NeighborSampler::new(graph.clone(), shapes.clone(), 100 + w as u64)),
-            &opts(2, 1),
-        )
-        .unwrap();
-    assert_eq!(reports.len(), 2);
-    let last = &reports[1];
+    let Some(mut session) = tiny_session("ns", 2, 1).build_or_skip() else { return };
+    let r = session.run().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.reports.len(), 2);
+    let last = &r.reports[1];
     assert!(last.mean_loss.is_finite());
     assert!(last.batches >= 1);
     // loss should move down across epochs on the learnable dataset
-    assert!(last.mean_loss < reports[0].mean_loss * 1.05);
+    assert!(last.mean_loss < r.reports[0].mean_loss * 1.05);
     // breakdown must contain real time in every core stage
     use gns::util::timer::Stage;
     for s in [Stage::Sample, Stage::Slice, Stage::Compute] {
@@ -90,33 +40,26 @@ fn ns_pipeline_trains_and_reports_breakdown() {
     }
     assert!(last.clock.modeled(Stage::Copy).as_nanos() > 0);
     assert!(last.transfer.h2d_bytes > 0);
+    assert!(r.test_f1.is_finite());
 }
 
 #[test]
 fn gns_pipeline_uploads_cache_and_saves_bytes() {
-    let Some(rt) = runtime_or_skip() else { return };
-    let ds = tiny_ds(&rt);
-    let shapes = rt.meta.block_shapes();
-    let graph = Arc::new(ds.graph.clone());
-    let o = opts(2, 1);
-    let mut trainer = Trainer::new(rt, &ds, &o).unwrap();
-    let template = GnsSampler::new(
-        graph.clone(),
-        shapes.clone(),
-        &ds.train,
-        GnsConfig { cache_fraction: 0.02, seed: 3, ..Default::default() },
-    );
-    let factory = move |w: usize| -> Box<dyn Sampler> {
-        Box::new(template.instance(w as u64, w == 0))
+    let Some(mut session) =
+        tiny_session("gns:cache-fraction=0.02", 2, 1).seed(3).build_or_skip()
+    else {
+        return;
     };
-    let reports = trainer.train(&factory, &o).unwrap();
-    let last = reports.last().unwrap();
+    let shapes = session.shapes();
+    let r = session.run().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    let last = r.reports.last().unwrap();
     assert!(last.avg_cached_inputs > 0.0, "no cached inputs observed");
     assert!(
         last.transfer.bytes_saved_by_cache > 0,
         "cache produced no transfer savings"
     );
-    let (hits, misses) = trainer.cache_hits_misses();
+    let (hits, misses) = session.cache_hits_misses();
     assert!(hits > 0);
     assert!(hits + misses > 0);
     // GNS input level must be smaller than NS's (mechanism check at the
@@ -126,80 +69,54 @@ fn gns_pipeline_uploads_cache_and_saves_bytes() {
 
 #[test]
 fn ladies_pipeline_runs() {
-    let Some(rt) = runtime_or_skip() else { return };
-    let ds = tiny_ds(&rt);
-    let shapes = rt.meta.block_shapes();
-    let graph = Arc::new(ds.graph.clone());
-    let o = opts(1, 1);
-    let mut trainer = Trainer::new(rt, &ds, &o).unwrap();
-    let reports = trainer
-        .train(
-            &|w| Box::new(LadiesSampler::new(graph.clone(), shapes.clone(), 128, 40 + w as u64)),
-            &o,
-        )
-        .unwrap();
-    assert!(reports[0].mean_loss.is_finite());
+    let Some(mut session) = tiny_session("ladies:s-layer=128", 1, 1).build_or_skip() else {
+        return;
+    };
+    let r = session.run().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert!(r.reports[0].mean_loss.is_finite());
 }
 
 #[test]
 fn lazygcn_pipeline_runs_and_small_budget_fails_loudly() {
-    let Some(rt) = runtime_or_skip() else { return };
-    let ds = tiny_ds(&rt);
-    let shapes = rt.meta.block_shapes();
-    let graph = Arc::new(ds.graph.clone());
-    let o = opts(1, 1);
-    {
-        let mut trainer = Trainer::new(runtime_or_skip().unwrap(), &ds, &o).unwrap();
-        let reports = trainer
-            .train(
-                &|w| {
-                    Box::new(LazyGcnSampler::new(
-                        graph.clone(),
-                        shapes.clone(),
-                        LazyGcnConfig { seed: 50 + w as u64, ..Default::default() },
-                    ))
-                },
-                &o,
-            )
-            .unwrap();
-        assert!(reports[0].mean_loss.is_finite());
-    }
-    // tiny device budget → the paper's OOM failure mode, as a typed error
-    let mut trainer = Trainer::new(rt, &ds, &o).unwrap();
-    let err = trainer
-        .train(
-            &|w| {
-                Box::new(LazyGcnSampler::new(
-                    graph.clone(),
-                    shapes.clone(),
-                    LazyGcnConfig {
-                        device_budget_bytes: 4_000,
-                        feature_row_bytes: 64,
-                        seed: 60 + w as u64,
-                        ..Default::default()
-                    },
-                ))
-            },
-            &o,
-        )
-        .unwrap_err();
-    assert!(err.to_string().contains("OOM") || format!("{err:#}").contains("OOM"), "{err:#}");
+    let Some(mut session) = tiny_session("lazygcn", 1, 1).build_or_skip() else { return };
+    let r = session.run().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert!(r.reports[0].mean_loss.is_finite());
+
+    // tiny device budget → the paper's OOM failure mode, captured as a
+    // structured error in the run result (Table 3's N/A cells)
+    let Some(mut session) = tiny_session("lazygcn", 1, 1)
+        .lazy_budget(Some(4_000))
+        .build_or_skip()
+    else {
+        return;
+    };
+    let r = session.run().unwrap();
+    let err = r.error.expect("tiny budget must fail");
+    assert!(err.contains("OOM"), "{err}");
+    assert!(r.test_f1.is_nan());
 }
 
 #[test]
 fn multi_worker_pipeline_matches_batch_count() {
-    let Some(rt) = runtime_or_skip() else { return };
-    let ds = tiny_ds(&rt);
-    let shapes = rt.meta.block_shapes();
-    let graph = Arc::new(ds.graph.clone());
-    let o = opts(1, 3);
-    let mut trainer = Trainer::new(rt, &ds, &o).unwrap();
-    let reports = trainer
-        .train(
-            &|w| Box::new(NeighborSampler::new(graph.clone(), shapes.clone(), 70 + w as u64)),
-            &o,
-        )
-        .unwrap();
-    let expected = ds.train.len().div_ceil(64);
-    assert_eq!(reports[0].batches, expected);
+    let Some(mut session) = tiny_session("ns", 1, 3).build_or_skip() else { return };
+    let batch = session.meta().batch_size;
+    let n_train = session.dataset().train.len();
+    let r = session.run().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.reports[0].batches, n_train.div_ceil(batch));
+}
+
+#[test]
+fn chunk_size_out_of_range_is_a_typed_error() {
+    // builder misuse: chunk size beyond the padded batch capacity
+    match tiny_session("ns", 1, 1).chunk_size(1 << 20).build() {
+        Err(e) if e.is_missing_artifact() => eprintln!("SKIP: {e}"),
+        Err(gns::session::BuildError::Invalid(msg)) => {
+            assert!(msg.contains("chunk size"), "{msg}");
+        }
+        Err(e) => panic!("wrong error: {e}"),
+        Ok(_) => panic!("chunk size 1<<20 must not build"),
+    }
 }

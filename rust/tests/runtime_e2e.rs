@@ -6,14 +6,14 @@
 //! This is the cross-language seam: structural batches sampled in rust are
 //! marshalled into the JAX-lowered HLO (with the Pallas aggregation kernel
 //! inside) and the numerics are cross-checked against an independent
-//! pure-rust forward implementation.
+//! pure-rust forward implementation. Samplers come from the
+//! `MethodRegistry`; the dataset refit reuses the session helper.
 
 use gns::features::build_dataset;
 use gns::runtime::{micro_f1, reference, Runtime};
-use gns::sampling::gns::{GnsConfig, GnsSampler};
-use gns::sampling::neighbor::NeighborSampler;
+use gns::sampling::spec::{BuildContext, MethodRegistry, MethodSpec};
 use gns::sampling::Sampler;
-use std::sync::Arc;
+use gns::session::refit_dataset_to_artifact;
 
 fn runtime_or_skip() -> Option<Runtime> {
     let dir = gns::runtime::artifacts_root().join("tiny");
@@ -28,28 +28,19 @@ fn runtime_or_skip() -> Option<Runtime> {
 /// artifact's dim, labels collapsed onto its class count).
 fn tiny_ds(rt: &Runtime) -> gns::features::Dataset {
     let mut ds = build_dataset("yelp-s", 0.03, 42);
-    let lg = gns::graph::generate::LabeledGraph {
-        graph: ds.graph.clone(),
-        labels: ds
-            .labels
-            .iter()
-            .map(|&c| (c as usize % rt.meta.num_classes) as u16)
-            .collect(),
-        num_classes: rt.meta.num_classes,
-    };
-    let features = gns::features::synthesize_features(
-        &lg,
-        &gns::features::FeatureParams {
-            dim: rt.meta.feature_dim,
-            centroid_scale: 1.5,
-            informative_frac: 0.6,
-            seed: 42,
-        },
-    );
-    ds.features = features;
-    ds.labels = lg.labels;
-    ds.num_classes = rt.meta.num_classes;
+    refit_dataset_to_artifact(&mut ds, &rt.meta, 42);
     ds
+}
+
+fn sampler(
+    rt: &Runtime,
+    ds: &gns::features::Dataset,
+    spec_text: &str,
+    seed: u64,
+) -> Box<dyn Sampler> {
+    let reg = MethodRegistry::global();
+    let ctx = BuildContext::new(ds, rt.meta.block_shapes(), seed);
+    reg.sampler(&reg.parse(spec_text).unwrap(), &ctx, 0).unwrap()
 }
 
 fn make_x0(rt: &Runtime, ds: &gns::features::Dataset, mb: &gns::sampling::MiniBatch) -> Vec<f32> {
@@ -64,10 +55,9 @@ fn make_x0(rt: &Runtime, ds: &gns::features::Dataset, mb: &gns::sampling::MiniBa
 fn hlo_eval_matches_rust_reference_forward() {
     let Some(rt) = runtime_or_skip() else { return };
     let ds = tiny_ds(&rt);
-    let shapes = rt.meta.block_shapes();
-    let mut sampler = NeighborSampler::new(Arc::new(ds.graph.clone()), shapes, 7);
+    let mut ns = sampler(&rt, &ds, "ns", 7);
     let state = rt.init_state(3);
-    let mb = sampler
+    let mb = ns
         .sample_batch(&ds.train[..rt.meta.batch_size], &ds.labels)
         .unwrap();
     let x0 = make_x0(&rt, &ds, &mb);
@@ -90,8 +80,7 @@ fn hlo_eval_matches_rust_reference_forward() {
 fn train_steps_decrease_loss_and_learn() {
     let Some(rt) = runtime_or_skip() else { return };
     let ds = tiny_ds(&rt);
-    let shapes = rt.meta.block_shapes();
-    let mut sampler = NeighborSampler::new(Arc::new(ds.graph.clone()), shapes, 8);
+    let mut ns = sampler(&rt, &ds, "ns", 8);
     let mut state = rt.init_state(5);
     let b = rt.meta.batch_size;
     let mut first = None;
@@ -99,7 +88,7 @@ fn train_steps_decrease_loss_and_learn() {
     for step in 0..30 {
         let lo = (step * b) % (ds.train.len() - b);
         let targets = &ds.train[lo..lo + b];
-        let mb = sampler.sample_batch(targets, &ds.labels).unwrap();
+        let mb = ns.sample_batch(targets, &ds.labels).unwrap();
         let x0 = make_x0(&rt, &ds, &mb);
         let out = rt.train_step(&mut state, &mb, &x0, 3e-3).unwrap();
         assert!(out.loss.is_finite());
@@ -120,14 +109,7 @@ fn train_steps_decrease_loss_and_learn() {
 fn gns_batches_execute_and_eval_f1_improves_over_random() {
     let Some(rt) = runtime_or_skip() else { return };
     let ds = tiny_ds(&rt);
-    let shapes = rt.meta.block_shapes();
-    let graph = Arc::new(ds.graph.clone());
-    let mut gns_sampler = GnsSampler::new(
-        graph.clone(),
-        shapes.clone(),
-        &ds.train,
-        GnsConfig { cache_fraction: 0.02, seed: 9, ..Default::default() },
-    );
+    let mut gns_sampler = sampler(&rt, &ds, "gns:cache-fraction=0.02", 9);
     let mut state = rt.init_state(7);
     let b = rt.meta.batch_size;
     for epoch in 0..4 {
@@ -142,7 +124,7 @@ fn gns_batches_execute_and_eval_f1_improves_over_random() {
         }
     }
     // eval on a validation chunk via NS neighborhoods
-    let mut ns = NeighborSampler::new(graph, shapes, 10);
+    let mut ns = sampler(&rt, &ds, "ns", 10);
     let chunk = &ds.val[..b.min(ds.val.len())];
     let mb = ns.sample_batch(chunk, &ds.labels).unwrap();
     let x0 = make_x0(&rt, &ds, &mb);
@@ -162,4 +144,10 @@ fn artifact_meta_matches_block_shapes_contract() {
     assert_eq!(shapes.batch_size(), rt.meta.batch_size);
     assert_eq!(shapes.num_layers(), rt.meta.num_layers);
     assert!(rt.meta.num_param_elems() > 0);
+    // the spec layer agrees with the artifact naming convention
+    let spec = MethodSpec::new("gns");
+    assert_eq!(
+        MethodRegistry::global().artifact_for(&spec, "yelp-s").unwrap(),
+        "yelp_gns"
+    );
 }

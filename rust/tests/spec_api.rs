@@ -1,0 +1,159 @@
+//! Public-API tests for the `MethodSpec` registry and the `Session`
+//! builder: parse/Display round-trip property (util::proptest),
+//! registry-covers-every-CLI-method, and typed builder-misuse errors
+//! (bad method name, artifact/dataset shape mismatch) — all artifact-free.
+
+use gns::sampling::spec::{
+    MethodRegistry, MethodSpec, ParamKind, ParamValue, SpecError,
+};
+use gns::session::{BuildError, Session};
+use gns::util::proptest::check;
+use gns::{prop_assert, prop_assert_eq};
+use std::path::Path;
+
+/// Property: any registry-valid spec renders to text that parses back to
+/// the identical spec (typed values included).
+#[test]
+fn prop_spec_display_parse_round_trip() {
+    let reg = MethodRegistry::global();
+    let builders: Vec<&str> = reg.builders().map(|b| b.name()).collect();
+    check(200, |g| {
+        let name = *g.choose(&builders);
+        let builder = reg.get(name).unwrap();
+        let mut spec = MethodSpec::new(name);
+        for info in builder.params() {
+            if !g.bool(0.6) {
+                continue; // random subset of params
+            }
+            let value = match info.kind {
+                ParamKind::Bool => ParamValue::Bool(g.bool(0.5)),
+                ParamKind::Int => ParamValue::Int(g.usize(1..10_000) as u64),
+                ParamKind::Float => ParamValue::Float(g.f64(0.0001..0.9999)),
+                // strings must come from the param's own domain; `policy`
+                // is the only string param today
+                ParamKind::Str => ParamValue::Str(
+                    (*g.choose(&["auto", "degree", "random-walk", "uniform"])).to_string(),
+                ),
+            };
+            spec.params.insert(info.key.to_string(), value);
+        }
+        prop_assert!(reg.validate(&spec).is_ok(), "generated spec invalid: {spec}");
+        let text = spec.to_string();
+        let reparsed = reg.parse(&text).map_err(|e| e.to_string())?;
+        prop_assert_eq!(reparsed, spec.clone());
+        // JSON round-trip as well
+        let json_text = spec.to_json().to_string_pretty();
+        let parsed = gns::util::json::Json::parse(&json_text)?;
+        let from_json = reg.from_json(&parsed).map_err(|e| e.to_string())?;
+        prop_assert_eq!(from_json, spec);
+        Ok(())
+    });
+}
+
+/// Every method name and alias the CLI accepts resolves in the registry,
+/// parses, labels, and maps to an artifact — so CLI help (generated from
+/// the registry) can never advertise something the parser rejects.
+#[test]
+fn registry_covers_every_cli_method() {
+    let reg = MethodRegistry::global();
+    let names = reg.method_names();
+    for required in ["ns", "ladies", "ladies512", "ladies5000", "ladies5k", "lazygcn", "gns"] {
+        assert!(
+            names.iter().any(|n| n == required),
+            "{required} missing from registry"
+        );
+    }
+    for name in &names {
+        let spec = reg.parse(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(!reg.label(&spec).is_empty());
+        let artifact = reg.artifact_for(&spec, "products-s").unwrap();
+        assert!(!artifact.is_empty());
+        // generated help mentions every accepted name
+        // (helps the CLI help-drift satellite stay fixed)
+        let help = reg.help_methods();
+        assert!(help.contains(name.as_str()), "help omits {name}");
+    }
+}
+
+#[test]
+fn session_rejects_unknown_method_with_typed_error() {
+    let err = Session::builder("yelp-s", "graphsaint")
+        .scale(0.03)
+        .build()
+        .unwrap_err();
+    match err {
+        BuildError::Spec(SpecError::UnknownMethod { name, known }) => {
+            assert_eq!(name, "graphsaint");
+            assert!(known.contains(&"ns".to_string()));
+        }
+        e => panic!("expected UnknownMethod, got: {e}"),
+    }
+}
+
+#[test]
+fn session_rejects_unknown_param_with_typed_error() {
+    let err = Session::builder("yelp-s", "gns:cache-frac=0.1")
+        .scale(0.03)
+        .build()
+        .unwrap_err();
+    match err {
+        BuildError::Spec(SpecError::UnknownParam { key, valid, .. }) => {
+            assert_eq!(key, "cache-frac");
+            assert!(valid.contains(&"cache-fraction".to_string()));
+        }
+        e => panic!("expected UnknownParam, got: {e}"),
+    }
+}
+
+/// Write a consistent-but-mismatched artifact meta so the shape check
+/// trips before any PJRT work.
+fn write_fake_artifact(dir: &Path, feature_dim: usize, num_classes: usize) {
+    std::fs::create_dir_all(dir).unwrap();
+    let meta = format!(
+        r#"{{
+            "name": "fake", "num_layers": 2, "feature_dim": {feature_dim},
+            "hidden_dim": 16, "num_classes": {num_classes}, "batch_size": 64,
+            "level_sizes": [1024, 256, 64], "fanouts": [3, 3],
+            "train_num_outputs": 14
+        }}"#
+    );
+    std::fs::write(dir.join("meta.json"), meta).unwrap();
+    std::fs::write(dir.join("train.hlo.txt"), "HloModule x").unwrap();
+    std::fs::write(dir.join("eval.hlo.txt"), "HloModule x").unwrap();
+}
+
+#[test]
+fn session_reports_shape_mismatch_as_typed_error() {
+    let root = std::env::temp_dir().join("gns_spec_api_shape_mismatch");
+    // yelp-s features are 64-dim; this artifact expects 16
+    write_fake_artifact(&root.join("yelp"), 16, 128);
+    let err = Session::builder("yelp-s", "ns")
+        .scale(0.03)
+        .artifacts_dir(root.clone())
+        .build()
+        .unwrap_err();
+    match err {
+        BuildError::ShapeMismatch { artifact, detail } => {
+            assert_eq!(artifact, "yelp");
+            assert!(detail.contains("feature dim"), "{detail}");
+        }
+        e => panic!("expected ShapeMismatch, got: {e}"),
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn session_missing_artifact_is_skippable_and_actionable() {
+    let root = std::env::temp_dir().join("gns_spec_api_missing");
+    std::fs::create_dir_all(&root).unwrap();
+    let err = Session::builder("yelp-s", "ns")
+        .scale(0.03)
+        .artifacts_dir(root.clone())
+        .build()
+        .unwrap_err();
+    assert!(err.is_missing_artifact());
+    let msg = err.to_string();
+    assert!(msg.contains("make artifacts"), "{msg}");
+    assert!(msg.contains("yelp"), "{msg}");
+    std::fs::remove_dir_all(&root).ok();
+}
