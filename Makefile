@@ -5,7 +5,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build check test fmt artifacts clean
+.PHONY: build check test fmt bench artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -14,9 +14,15 @@ check:
 	$(CARGO) build --release --benches --examples
 	$(CARGO) test -q
 	$(CARGO) fmt --check
+	$(CARGO) bench --bench micro_hotpath -- --scale 0.1 --smoke
 
 test:
 	$(CARGO) test -q
+
+# Hot-path perf numbers: writes BENCH_hotpath.json at the repo root so the
+# per-PR perf trajectory is tracked (see docs/PERF.md).
+bench:
+	$(CARGO) bench --bench micro_hotpath -- --scale 0.5 --json BENCH_hotpath.json
 
 fmt:
 	$(CARGO) fmt

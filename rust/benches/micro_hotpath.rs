@@ -1,52 +1,83 @@
 //! Micro-benchmarks of the L3 hot paths (criterion is unavailable offline;
 //! this is a self-contained harness with warmup + repeated timing).
 //!
-//! Covers the per-batch critical path: neighbor sampling (NS + GNS),
+//! Covers the per-batch critical path: neighbor sampling (NS + GNS) on
+//! both the recycled arena path and the allocating convenience path,
 //! cache-subgraph construction, feature slicing, x0 padding, and the
 //! bounded queue. Used by the §Perf pass — before/after numbers are
-//! recorded in EXPERIMENTS.md. Samplers come from the `MethodRegistry`
-//! so the benchmark exercises the same construction path as production.
+//! recorded in docs/PERF.md, and `--json <path>` emits machine-readable
+//! ns/iter (the `make bench` target writes BENCH_hotpath.json at the repo
+//! root so the perf trajectory is tracked across PRs). `--smoke` shrinks
+//! iteration counts so `make check` can keep this binary from rotting.
+//! Samplers come from the `MethodRegistry` so the benchmark exercises the
+//! same construction path as production.
 
 use gns::features::build_dataset;
 use gns::graph::subgraph::CacheSubgraph;
 use gns::sampling::spec::{BuildContext, MethodRegistry, MethodSpec};
-use gns::sampling::BlockShapes;
+use gns::sampling::{BlockShapes, MiniBatch};
 use gns::util::cli::Args;
+use gns::util::json::{self, Json};
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
-    for _ in 0..iters.div_ceil(5).max(1) {
-        f(); // warmup
+struct Harness {
+    /// (name, ns per iteration) for every bench that ran.
+    results: Vec<(String, f64)>,
+    /// smoke mode: minimal iterations, just prove the path executes.
+    smoke: bool,
+}
+
+impl Harness {
+    fn bench<F: FnMut()>(&mut self, name: &str, iters: usize, mut f: F) {
+        let iters = if self.smoke { 2 } else { iters.max(1) };
+        for _ in 0..iters.div_ceil(5).max(1) {
+            f(); // warmup
+        }
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let total = t0.elapsed();
+        let per = total / iters as u32;
+        println!("{name:<44} {per:>12.2?} /iter  ({iters} iters)");
+        self.results
+            .push((name.to_string(), total.as_secs_f64() * 1e9 / iters as f64));
     }
-    let t0 = Instant::now();
-    for _ in 0..iters {
-        f();
-    }
-    let per = t0.elapsed() / iters as u32;
-    println!("{name:<38} {per:>12.2?} /iter  ({iters} iters)");
 }
 
 fn main() {
     let args = Args::parse_env();
-    if let Err(e) = args.check_known(&["scale", "bench"]) {
+    if let Err(e) = args.check_known(&["scale", "bench", "json", "smoke"]) {
         eprintln!("micro_hotpath: {e}");
         std::process::exit(2);
     }
     let scale = args.f64_or("scale", 0.5);
+    let mut h = Harness { results: Vec::new(), smoke: args.bool("smoke") };
     let ds = build_dataset("products-s", scale, 1);
     println!("workload: products-s x{scale} — {}", ds.graph.stats());
     let shapes = BlockShapes::new(vec![20000, 12000, 2048, 256], vec![5, 10, 15]);
     let reg = MethodRegistry::global();
     let ctx = BuildContext::new(&ds, shapes.clone(), 1);
 
+    // the production path: one recycled slot, zero steady-state allocation
     let mut ns = reg.sampler(&MethodSpec::new("ns"), &ctx, 0).unwrap();
-    bench("ns::sample_batch (256 targets)", 30, || {
+    let mut slot = MiniBatch::default();
+    h.bench("ns::sample_batch (256 targets, recycled)", 30, || {
+        ns.sample_batch_into(&ds.train[..256], &ds.labels, &mut slot).unwrap();
+        std::hint::black_box(slot.num_input_nodes());
+    });
+    // the allocating convenience path, for the recycling-win comparison
+    h.bench("ns::sample_batch (256 targets, fresh alloc)", 30, || {
         let mb = ns.sample_batch(&ds.train[..256], &ds.labels).unwrap();
         std::hint::black_box(mb.num_input_nodes());
     });
 
     let mut gns = reg.sampler(&MethodSpec::new("gns"), &ctx, 0).unwrap();
-    bench("gns::sample_batch (256 targets)", 30, || {
+    h.bench("gns::sample_batch (256 targets, recycled)", 30, || {
+        gns.sample_batch_into(&ds.train[..256], &ds.labels, &mut slot).unwrap();
+        std::hint::black_box(slot.stats.cached_inputs);
+    });
+    h.bench("gns::sample_batch (256 targets, fresh alloc)", 30, || {
         let mb = gns.sample_batch(&ds.train[..256], &ds.labels).unwrap();
         std::hint::black_box(mb.stats.cached_inputs);
     });
@@ -59,25 +90,25 @@ fn main() {
         .into_iter()
         .map(|v| v as u32)
         .collect();
-    bench("cache_subgraph::build (1% cache)", 20, || {
+    h.bench("cache_subgraph::build (1% cache)", 20, || {
         let s = CacheSubgraph::build(&ds.graph, &cache);
         std::hint::black_box(s.num_incidences());
     });
 
     let mb = ns.sample_batch(&ds.train[..256], &ds.labels).unwrap();
     let mut x0 = vec![0f32; shapes.level_sizes[0] * ds.features.dim()];
-    bench("features::slice_into (batch inputs)", 50, || {
+    h.bench("features::slice_into (batch inputs)", 50, || {
         let n = mb.input_nodes.len() * ds.features.dim();
         ds.features.slice_into(&mb.input_nodes, &mut x0[..n]);
         std::hint::black_box(x0[0]);
     });
-    bench("x0 tail zero-fill (padded block)", 50, || {
+    h.bench("x0 tail zero-fill (padded block)", 50, || {
         let n = mb.input_nodes.len() * ds.features.dim();
         x0[n..].fill(0.0);
         std::hint::black_box(x0[x0.len() - 1]);
     });
 
-    bench("queue push+pop round-trip x100", 50, || {
+    h.bench("queue push+pop round-trip x100", 50, || {
         let (tx, rx) = gns::pipeline::bounded::<usize>(128);
         for i in 0..100 {
             tx.push(i).unwrap();
@@ -91,11 +122,44 @@ fn main() {
         }
     });
 
+    // the recycling channel itself: slot round-trip through the pool
+    let pool = gns::pipeline::BufferPool::new();
+    pool.put(ns.sample_batch(&ds.train[..256], &ds.labels).unwrap());
+    h.bench("buffer_pool take+put round-trip x100", 50, || {
+        for _ in 0..100 {
+            let slot = pool.take();
+            pool.put(slot);
+        }
+        std::hint::black_box(pool.idle());
+    });
+
     // literal-marshalling proxy: Literal::vec1 is memcpy-bound; measure the
     // copy of a full x0 block (what the runtime pays per step on top of
     // slice_into).
-    bench("x0 block copy (literal proxy)", 20, || {
+    h.bench("x0 block copy (literal proxy)", 20, || {
         let v = x0.to_vec();
         std::hint::black_box(v.len());
     });
+
+    if let Some(path) = args.get("json") {
+        let entries: Vec<Json> = h
+            .results
+            .iter()
+            .map(|(name, ns)| {
+                json::obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("ns_per_iter", Json::Num(*ns)),
+                ])
+            })
+            .collect();
+        let doc = json::obj(vec![
+            ("bench", Json::Str("micro_hotpath".to_string())),
+            ("workload", Json::Str(format!("products-s x{scale}"))),
+            ("smoke", Json::Bool(h.smoke)),
+            ("benches", json::arr(entries)),
+        ]);
+        std::fs::write(path, doc.to_string_pretty())
+            .unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
+    }
 }

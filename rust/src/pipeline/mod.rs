@@ -1,11 +1,15 @@
-//! The training pipeline: bounded queue, sampling worker pool, and the
-//! instrumented mixed CPU-GPU trainer. See trainer.rs for the six-step
-//! loop and DESIGN.md §2 for how this maps to the paper's architecture.
+//! The training pipeline: bounded queue, sampling worker pool, the
+//! buffer-recycling return channel, and the instrumented mixed CPU-GPU
+//! trainer. See trainer.rs for the six-step loop, recycle.rs for the
+//! zero-allocation batch-slot story (docs/PERF.md), and DESIGN.md §2 for
+//! how this maps to the paper's architecture.
 
 pub mod queue;
+pub mod recycle;
 pub mod trainer;
 pub mod worker;
 
 pub use queue::{bounded, QueueStats, Receiver, Sender};
+pub use recycle::BufferPool;
 pub use trainer::{EpochReport, TrainOptions, Trainer};
 pub use worker::{EpochPlan, SampledBatch};

@@ -1,0 +1,100 @@
+//! Buffer recycling — the return channel that closes the mini-batch loop.
+//!
+//! The bounded queue (queue.rs) carries full batches from the sampling
+//! workers to the trainer; this pool carries the *empty slots* back.
+//! Workers `take` a slot before sampling, the trainer `put`s each drained
+//! slot after its train step. Slots are only ever created when the pool is
+//! dry (cold start), so the number of live `BatchBuffers` is bounded by
+//! what can be in flight at once: `queue_capacity` queued + one per worker
+//! + one in the trainer's hands — instead of one fresh allocation zoo per
+//! mini-batch.
+//!
+//! The pool is shape-agnostic: slots are reset/resized by the sampler via
+//! `MiniBatch::ensure_shapes`, so a pool can outlive epochs and even
+//! pipelines with different block shapes (slots then reallocate once).
+
+use crate::sampling::BatchBuffers;
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct BufferPool {
+    slots: Mutex<Vec<BatchBuffers>>,
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    /// Pop a recycled slot, or a fresh empty one when the pool is dry.
+    /// The slot may hold a previous batch's data — samplers reset it via
+    /// `ensure_shapes` (reset cost stays on the worker thread, off the
+    /// trainer's critical path).
+    pub fn take(&self) -> BatchBuffers {
+        self.slots.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a drained slot for reuse.
+    pub fn put(&self, slot: BatchBuffers) {
+        self.slots.lock().unwrap().push(slot);
+    }
+
+    /// Currently idle (checked-in) slots.
+    pub fn idle(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::{BlockShapes, MiniBatch};
+
+    #[test]
+    fn take_from_dry_pool_yields_fresh_slot() {
+        let pool = BufferPool::new();
+        let slot = pool.take();
+        assert!(slot.layers.is_empty());
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn put_take_round_trip_preserves_capacity() {
+        let pool = BufferPool::new();
+        let shapes = BlockShapes::new(vec![40, 20, 4], vec![3, 3]);
+        let mut slot = MiniBatch::with_shapes(&shapes);
+        slot.input_nodes.push(7);
+        pool.put(slot);
+        assert_eq!(pool.idle(), 1);
+        let back = pool.take();
+        assert_eq!(pool.idle(), 0);
+        // same allocation comes back (tensors still sized for the shapes)
+        assert_eq!(back.layers.len(), 2);
+        assert_eq!(back.layers[0].idx.len(), 60);
+        assert_eq!(back.input_nodes, vec![7]);
+    }
+
+    #[test]
+    fn pool_is_shared_across_threads() {
+        use std::sync::Arc;
+        let pool = Arc::new(BufferPool::new());
+        let shapes = BlockShapes::new(vec![16, 8, 2], vec![2, 2]);
+        for _ in 0..4 {
+            pool.put(MiniBatch::with_shapes(&shapes));
+        }
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let pool = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    let slot = pool.take();
+                    pool.put(slot);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.idle(), 4);
+    }
+}

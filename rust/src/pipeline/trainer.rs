@@ -13,6 +13,7 @@
 //! new cache generation, its feature rows are uploaded once (bulk PCIe
 //! transfer) and pinned in simulated device memory.
 
+use super::recycle::BufferPool;
 use super::worker::{run_epoch_sampling, EpochPlan};
 use crate::device::{ComputeModel, DeviceFeatureCache, DeviceMemory, TransferModel, TransferStats};
 use crate::features::Dataset;
@@ -124,6 +125,10 @@ pub struct Trainer {
     /// high-water mark of filled rows in x0_scratch (§Perf: zero only the
     /// previously-dirtied tail instead of the whole padded block).
     x0_dirty_elems: usize,
+    /// recycled batch slots shared with the sampling workers: drained
+    /// batches return here instead of being dropped, bounding live batch
+    /// memory at queue_capacity + workers (+1) slots across all epochs.
+    buffer_pool: Arc<BufferPool>,
 }
 
 impl Trainer {
@@ -160,6 +165,7 @@ impl Trainer {
             feature_cache,
             x0_scratch: vec![0.0; x0_len],
             x0_dirty_elems: 0,
+            buffer_pool: Arc::new(BufferPool::new()),
         })
     }
 
@@ -185,9 +191,15 @@ impl Trainer {
         let mut rng = Pcg::with_stream(opts.seed, 0x7247);
         // persistent leader sampler handles epoch lifecycle + eval sampling
         let mut leader = factory(0);
+        // worker samplers are built once and recycled across epochs (each
+        // owns O(|V|) intern tables — rebuilding them per epoch would cost
+        // more than the per-epoch clones this pipeline eliminates)
+        let mut workers: Vec<Box<dyn Sampler>> =
+            (1..=opts.workers.max(1)).map(|w| factory(w)).collect();
         for epoch in 0..opts.epochs {
-            let report =
-                self.train_epoch(&mut leader, factory, opts, epoch, &mut rng, chunk_size)?;
+            let (report, returned) =
+                self.train_epoch(&mut leader, opts, epoch, &mut rng, chunk_size, workers)?;
+            workers = returned;
             reports.push(report);
         }
         Ok(reports)
@@ -206,18 +218,24 @@ impl Trainer {
         let mut leader = factory(0);
         let mut rng = Pcg::with_stream(opts.seed ^ (epoch as u64) << 32, 0x7247);
         let bs = self.runtime.meta.batch_size;
-        self.train_epoch(&mut leader, factory, opts, epoch, &mut rng, bs)
+        let workers: Vec<Box<dyn Sampler>> =
+            (1..=opts.workers.max(1)).map(|w| factory(w)).collect();
+        self.train_epoch(&mut leader, opts, epoch, &mut rng, bs, workers)
+            .map(|(report, _workers)| report)
     }
 
+    /// One epoch. Takes the worker samplers by value and returns them so
+    /// multi-epoch callers reuse the instances (on error the samplers are
+    /// dropped; the caller rebuilds on retry).
     fn train_epoch(
         &mut self,
         leader: &mut Box<dyn Sampler>,
-        factory: &SamplerFactory,
         opts: &TrainOptions,
         epoch: usize,
         rng: &mut Pcg,
         chunk_size: usize,
-    ) -> Result<EpochReport> {
+        mut workers: Vec<Box<dyn Sampler>>,
+    ) -> Result<(EpochReport, Vec<Box<dyn Sampler>>)> {
         anyhow::ensure!(
             chunk_size >= 1 && chunk_size <= self.runtime.meta.batch_size,
             "chunk size {chunk_size} out of range"
@@ -226,24 +244,26 @@ impl Trainer {
         let mut transfer = TransferStats::default();
         let epoch_start = Instant::now();
 
+        // leader first (it refreshes the shared GNS cache), then the
+        // workers re-snapshot the fresh epoch state
         leader.begin_epoch(epoch);
         self.sync_cache(leader.as_ref(), &opts.transfer, &mut clock, &mut transfer)?;
+        for s in &mut workers {
+            s.begin_epoch(epoch);
+        }
 
         let plan = EpochPlan::shuffled(&self.dataset.train, chunk_size, rng);
-        let n_chunks = plan.chunks.len();
+        let n_chunks = plan.num_chunks();
 
-        // spin up workers (worker 0 shares the leader's epoch state through
-        // the factory's shared handles — e.g. the GNS cache)
-        let samplers: Vec<Box<dyn Sampler>> = (1..=opts.workers.max(1))
-            .map(|w| {
-                let mut s = factory(w);
-                s.begin_epoch(epoch);
-                s
-            })
-            .collect();
-        let labels = Arc::new(self.dataset.labels.clone());
-        let (rx, handles) =
-            run_epoch_sampling(samplers, plan, labels, opts.queue_capacity);
+        // workers read labels straight from the shared dataset (one Arc
+        // bump — the per-epoch `labels.clone()` used to copy |V| u16s)
+        let (rx, handles, sampler_return) = run_epoch_sampling(
+            workers,
+            plan,
+            self.dataset.clone(),
+            opts.queue_capacity,
+            self.buffer_pool.clone(),
+        );
 
         let mut total_loss = 0.0f64;
         let mut total_correct = 0.0f64;
@@ -254,23 +274,36 @@ impl Trainer {
         let mut isolated = 0usize;
         let mut truncated = 0usize;
 
+        // Any failure inside the drain loop must close the queue and join
+        // the workers — otherwise producers blocked on a full queue would
+        // outlive the epoch as zombie threads.
+        let mut epoch_err: Option<anyhow::Error> = None;
         while let Some(sb) = rx.pop() {
             let mb = match sb.batch {
                 Ok(mb) => mb,
                 Err(e) => {
-                    rx.close();
-                    for h in handles {
-                        let _ = h.join();
-                    }
-                    return Err(e.context("sampler failed"));
+                    epoch_err = Some(e.context("sampler failed"));
+                    break;
                 }
             };
             clock.add_measured(Stage::Sample, sb.sample_time);
             if opts.paranoid_validate {
-                crate::sampling::validate_batch(&mb, &self.runtime.meta.block_shapes())
-                    .map_err(anyhow::Error::msg)?;
+                if let Err(msg) =
+                    crate::sampling::validate_batch(&mb, &self.runtime.meta.block_shapes())
+                {
+                    self.buffer_pool.put(mb);
+                    epoch_err = Some(anyhow::Error::msg(msg));
+                    break;
+                }
             }
-            let out = self.run_train_batch(&mb, opts, &mut clock, &mut transfer)?;
+            let out = match self.run_train_batch(&mb, opts, &mut clock, &mut transfer) {
+                Ok(out) => out,
+                Err(e) => {
+                    self.buffer_pool.put(mb);
+                    epoch_err = Some(e);
+                    break;
+                }
+            };
             total_loss += out.loss as f64 * out.batch_real as f64;
             total_correct += out.correct as f64;
             total_targets += out.batch_real;
@@ -279,20 +312,33 @@ impl Trainer {
             sum_cached += mb.stats.cached_inputs;
             isolated += mb.stats.isolated_nodes;
             truncated += mb.stats.truncated_neighbors;
+            // return the drained slot to the workers (recycling channel)
+            self.buffer_pool.put(mb);
+        }
+        if let Some(e) = epoch_err {
+            rx.close(); // unblocks producers waiting on a full queue
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
         }
         for h in handles {
             h.join().ok();
         }
+        // all workers exited: collect their samplers for next-epoch reuse
+        let workers = std::mem::take(&mut *sampler_return.lock().unwrap());
         anyhow::ensure!(batches == n_chunks, "lost batches: {batches} != {n_chunks}");
 
         // validation F1 with the leader sampler's topology-free NS pass
+        // (Arc bump so the val split outlives the &mut self call)
+        let dataset = self.dataset.clone();
         let val_f1 = clock.time(Stage::Other, || {
-            self.evaluate(leader, &self.dataset.val, opts.eval_batches)
+            self.evaluate(leader, &dataset.val, opts.eval_batches)
         })?;
 
         let wall = epoch_start.elapsed();
         let modeled = transfer.modeled_h2d + transfer.modeled_d2d;
-        Ok(EpochReport {
+        let report = EpochReport {
             epoch,
             mean_loss: total_loss / total_targets.max(1) as f64,
             train_acc: total_correct / total_targets.max(1) as f64,
@@ -306,7 +352,8 @@ impl Trainer {
             avg_cached_inputs: sum_cached as f64 / batches.max(1) as f64,
             isolated_nodes: isolated,
             truncated_neighbors: truncated,
-        })
+        };
+        Ok((report, workers))
     }
 
     /// Upload a new cache generation's features to the device if needed.
@@ -406,8 +453,11 @@ impl Trainer {
         let dim = self.dataset.features.dim();
         let mut correct_weighted = 0.0f64;
         let mut total = 0usize;
+        // evaluation reuses one recycled slot across its batches (returned
+        // to the pool at the end; dropped only on the error path)
+        let mut mb = self.buffer_pool.take();
         for chunk in targets.chunks(batch).take(max_batches.max(1)) {
-            let mb = sampler.sample_batch(chunk, &self.dataset.labels)?;
+            sampler.sample_batch_into(chunk, &self.dataset.labels, &mut mb)?;
             let n = mb.input_nodes.len();
             self.dataset
                 .features
@@ -422,6 +472,7 @@ impl Trainer {
             correct_weighted += f1 * chunk.len() as f64;
             total += chunk.len();
         }
+        self.buffer_pool.put(mb);
         Ok(correct_weighted / total.max(1) as f64)
     }
 

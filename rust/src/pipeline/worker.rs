@@ -1,35 +1,58 @@
 //! Sampling worker pool — the "parallelize with multiprocessing" of §3.3,
 //! as threads (DGL forks sampler processes; same topology, shared graph).
 //!
-//! The leader partitions the epoch's shuffled target list into chunks; a
-//! shared work list feeds `n` worker threads, each owning its own
-//! `Box<dyn Sampler>` (GNS workers share the leader's cache via
-//! `GnsSampler::worker_clone`). Finished batches flow through the bounded
-//! queue back to the trainer with their chunk index attached, so epoch
-//! metrics can be aggregated deterministically regardless of completion
-//! order.
+//! The leader shuffles the epoch's target list once; workers claim chunk
+//! *indices* from a shared atomic cursor and read their targets as ranges
+//! of that single shuffled vector (no per-chunk `Vec` materialization).
+//! Each worker owns its own `Box<dyn Sampler>` (GNS workers share the
+//! leader's cache via `GnsSampler::worker_clone`) and assembles batches
+//! into recycled `BatchBuffers` slots from the shared [`BufferPool`].
+//! Finished batches flow through the bounded queue back to the trainer
+//! with their chunk index attached, so epoch metrics can be aggregated
+//! deterministically regardless of completion order; the trainer hands
+//! each drained slot back to the pool.
 
 use super::queue::{bounded, Receiver, Sender};
+use super::recycle::BufferPool;
+use crate::features::Dataset;
 use crate::graph::NodeId;
 use crate::sampling::{MiniBatch, Sampler};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 pub struct EpochPlan {
-    /// chunked target ids, chunk i = batch i.
-    pub chunks: Vec<Vec<NodeId>>,
+    /// the epoch's shuffled target ids — one vector, chunked by range.
+    ids: Vec<NodeId>,
+    chunk_size: usize,
 }
 
 impl EpochPlan {
-    /// Shuffle-and-chunk the training set (one epoch's worth of batches).
+    /// Shuffle the training set once; chunks are handed out as `(start,
+    /// end)` ranges of this single vector.
     pub fn shuffled(
         train: &[NodeId],
         batch_size: usize,
         rng: &mut crate::util::rng::Pcg,
     ) -> Self {
+        assert!(batch_size > 0);
         let mut ids = train.to_vec();
         rng.shuffle(&mut ids);
-        let chunks = ids.chunks(batch_size).map(|c| c.to_vec()).collect();
-        EpochPlan { chunks }
+        EpochPlan { ids, chunk_size: batch_size }
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.ids.len().div_ceil(self.chunk_size)
+    }
+
+    pub fn num_targets(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Target ids of chunk `i` — a borrowed range, no allocation.
+    pub fn chunk(&self, i: usize) -> &[NodeId] {
+        let s = i * self.chunk_size;
+        let e = (s + self.chunk_size).min(self.ids.len());
+        &self.ids[s..e]
     }
 }
 
@@ -40,40 +63,69 @@ pub struct SampledBatch {
     pub sample_time: std::time::Duration,
 }
 
-/// Run an epoch's sampling across `workers` threads; returns the receiver
-/// the trainer drains plus the join handles (joined by `drain`'s caller or
-/// automatically when the receiver reports None).
+/// Return slot for worker samplers: each worker pushes its sampler here
+/// when it exits (in completion order, not worker order).
+pub type SamplerReturn = Arc<Mutex<Vec<Box<dyn Sampler>>>>;
+
+/// Run an epoch's sampling across the given samplers (one thread each);
+/// returns the receiver the trainer drains, the join handles (joined by
+/// `drain`'s caller or automatically when the receiver reports None), and
+/// the [`SamplerReturn`] slot, so callers can reuse the sampler
+/// instances — and their O(|V|) intern tables — for the next epoch
+/// instead of rebuilding them. Batch slots come from `pool`; the
+/// consumer should `pool.put` each drained batch so steady-state
+/// sampling allocates nothing.
 pub fn run_epoch_sampling(
     samplers: Vec<Box<dyn Sampler>>,
     plan: EpochPlan,
-    labels: Arc<Vec<u16>>,
+    dataset: Arc<Dataset>,
     queue_capacity: usize,
-) -> (Receiver<SampledBatch>, Vec<std::thread::JoinHandle<()>>) {
+    pool: Arc<BufferPool>,
+) -> (Receiver<SampledBatch>, Vec<std::thread::JoinHandle<()>>, SamplerReturn) {
     let (tx, rx) = bounded(queue_capacity);
-    let work: Arc<Mutex<std::collections::VecDeque<(usize, Vec<NodeId>)>>> = Arc::new(
-        Mutex::new(plan.chunks.into_iter().enumerate().collect()),
-    );
+    let plan = Arc::new(plan);
+    let cursor = Arc::new(AtomicUsize::new(0));
+    let returned: SamplerReturn = Arc::new(Mutex::new(Vec::with_capacity(samplers.len())));
     let mut handles = Vec::new();
     for mut sampler in samplers {
-        let work = work.clone();
-        let labels = labels.clone();
+        let plan = plan.clone();
+        let cursor = cursor.clone();
+        let dataset = dataset.clone();
+        let pool = pool.clone();
+        let returned = returned.clone();
         let tx: Sender<SampledBatch> = tx.clone();
-        handles.push(std::thread::spawn(move || loop {
-            let item = work.lock().unwrap().pop_front();
-            let Some((chunk_index, targets)) = item else { break };
-            let t0 = std::time::Instant::now();
-            let batch = sampler.sample_batch(&targets, &labels);
-            let sample_time = t0.elapsed();
-            if tx
-                .push(SampledBatch { chunk_index, batch, sample_time })
-                .is_err()
-            {
-                break; // trainer closed the queue (error path)
+        handles.push(std::thread::spawn(move || {
+            loop {
+                let chunk_index = cursor.fetch_add(1, Ordering::Relaxed);
+                if chunk_index >= plan.num_chunks() {
+                    break;
+                }
+                let targets = plan.chunk(chunk_index);
+                let mut slot = pool.take();
+                let t0 = std::time::Instant::now();
+                let result = sampler.sample_batch_into(targets, &dataset.labels, &mut slot);
+                let sample_time = t0.elapsed();
+                let batch = match result {
+                    Ok(()) => Ok(slot),
+                    Err(e) => {
+                        // a partially-written slot resets cleanly (see
+                        // MiniBatch::reset) — recycle it even on failure
+                        pool.put(slot);
+                        Err(e)
+                    }
+                };
+                if tx
+                    .push(SampledBatch { chunk_index, batch, sample_time })
+                    .is_err()
+                {
+                    break; // trainer closed the queue (error path)
+                }
             }
+            returned.lock().unwrap().push(sampler);
         }));
     }
     drop(tx);
-    (rx, handles)
+    (rx, handles, returned)
 }
 
 #[cfg(test)]
@@ -84,8 +136,8 @@ mod tests {
     use crate::sampling::validate_batch;
 
     #[test]
-    fn pool_samples_every_chunk_exactly_once() {
-        let ds = tiny_dataset(8);
+    fn pool_samples_every_chunk_exactly_once_with_recycling() {
+        let ds = Arc::new(tiny_dataset(8));
         let shapes = tiny_shapes(16);
         let ctx = BuildContext::new(&ds, shapes.clone(), 100);
         let factory = MethodRegistry::global()
@@ -94,30 +146,98 @@ mod tests {
         let samplers: Vec<Box<dyn Sampler>> = (0..3).map(|i| factory(i)).collect();
         let mut rng = crate::util::rng::Pcg::new(1);
         let plan = EpochPlan::shuffled(&ds.train[..160.min(ds.train.len())], 16, &mut rng);
-        let n_chunks = plan.chunks.len();
-        let labels = Arc::new(ds.labels.clone());
-        let (rx, handles) = run_epoch_sampling(samplers, plan, labels, 4);
+        let n_chunks = plan.num_chunks();
+        let pool = Arc::new(BufferPool::new());
+        let (rx, handles, returned) =
+            run_epoch_sampling(samplers, plan, ds.clone(), 4, pool.clone());
         let mut seen = std::collections::HashSet::new();
         while let Some(sb) = rx.pop() {
             assert!(seen.insert(sb.chunk_index));
             let mb = sb.batch.unwrap();
             validate_batch(&mb, &shapes).unwrap();
+            pool.put(mb); // the trainer's side of the return channel
         }
         assert_eq!(seen.len(), n_chunks);
         for h in handles {
             h.join().unwrap();
         }
+        // every sampler instance comes back for next-epoch reuse
+        assert_eq!(returned.lock().unwrap().len(), 3);
+        // every live slot is back in the pool, and recycling bounded the
+        // slot count at (workers + queue capacity + the one we held) — far
+        // below one-per-batch
+        let idle = pool.idle();
+        assert!(idle >= 1, "no slot survived to be recycled");
+        assert!(
+            idle <= 3 + 4 + 1,
+            "recycling failed to bound live slots: {idle} for {n_chunks} chunks"
+        );
     }
 
     #[test]
-    fn epoch_plan_partitions_training_set() {
+    fn epoch_plan_hands_out_ranges_of_one_shuffled_vector() {
         let mut rng = crate::util::rng::Pcg::new(2);
         let train: Vec<NodeId> = (0..103).collect();
         let plan = EpochPlan::shuffled(&train, 10, &mut rng);
-        assert_eq!(plan.chunks.len(), 11);
-        assert_eq!(plan.chunks.last().unwrap().len(), 3);
-        let mut all: Vec<NodeId> = plan.chunks.concat();
+        assert_eq!(plan.num_chunks(), 11);
+        assert_eq!(plan.num_targets(), 103);
+        assert_eq!(plan.chunk(10).len(), 3); // tail chunk
+        let mut all: Vec<NodeId> = (0..plan.num_chunks())
+            .flat_map(|i| plan.chunk(i).iter().copied())
+            .collect();
         all.sort_unstable();
         assert_eq!(all, train);
+    }
+
+    #[test]
+    fn recycled_slots_carry_no_stale_data_across_epochs() {
+        // sample the same chunks twice: once with fresh slots, once
+        // through a pool primed with the first run's (dirty) slots —
+        // batches must be identical field-for-field
+        let ds = Arc::new(tiny_dataset(9));
+        let shapes = tiny_shapes(16);
+        let ctx = BuildContext::new(&ds, shapes.clone(), 55);
+        let reg = MethodRegistry::global();
+        let run = |pool: Arc<BufferPool>| {
+            let factory = reg.factory(&MethodSpec::new("ns"), &ctx).unwrap();
+            let samplers: Vec<Box<dyn Sampler>> = vec![factory(0)];
+            let mut rng = crate::util::rng::Pcg::new(3);
+            let plan = EpochPlan::shuffled(&ds.train[..64], 16, &mut rng);
+            let (rx, handles, _returned) =
+                run_epoch_sampling(samplers, plan, ds.clone(), 2, pool.clone());
+            let mut out: Vec<(usize, MiniBatch)> = Vec::new();
+            while let Some(sb) = rx.pop() {
+                out.push((sb.chunk_index, sb.batch.unwrap()));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            out.sort_by_key(|(i, _)| *i);
+            out
+        };
+        let pool = Arc::new(BufferPool::new());
+        let first = run(pool.clone());
+        // return the dirty slots so the second run recycles them
+        let mut second_pool_slots = 0;
+        for (_, mb) in &first {
+            pool.put(mb.clone());
+            second_pool_slots += 1;
+        }
+        assert!(second_pool_slots > 0);
+        let second = run(pool);
+        assert_eq!(first.len(), second.len());
+        for ((i, a), (j, b)) in first.iter().zip(&second) {
+            assert_eq!(i, j);
+            assert_eq!(a.input_nodes, b.input_nodes, "chunk {i}");
+            assert_eq!(a.targets, b.targets);
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.mask, b.mask);
+            for (x, y) in a.layers.iter().zip(&b.layers) {
+                assert_eq!(x.n_real, y.n_real);
+                assert_eq!(x.self_idx, y.self_idx);
+                assert_eq!(x.idx, y.idx);
+                assert_eq!(x.w, y.w);
+            }
+        }
     }
 }

@@ -1,0 +1,278 @@
+//! Zero-allocation batch-assembly substrate (§Perf: the mini-batch hot
+//! path).
+//!
+//! Samplers used to build a fresh object zoo per mini-batch: a hashmap per
+//! level for node interning, a `Vec<Vec<(u32, f32)>>` edge list per layer,
+//! and freshly-allocated padded tensors. This module provides the two
+//! reusable pieces that replace all of it:
+//!
+//! - [`InternTable`]: a generation-stamped direct-address table over the
+//!   whole node-id space. `intern` is a single indexed load; "clearing"
+//!   between levels is a generation bump, not an O(|V|) wipe.
+//! - [`LevelBuilder`]: the level-construction protocol (seed the lower
+//!   level with the upper level's nodes, then dedup-append sampled
+//!   neighbors up to capacity) running on borrowed, recycled storage.
+//!
+//! Together with `MiniBatch::{with_shapes, reset, ensure_shapes}` (the
+//! batch-slot arena) and `pipeline::BufferPool` (the recycling return
+//! channel), steady-state sampling performs no per-batch heap allocation.
+
+use crate::graph::NodeId;
+
+/// Direct-address interning table: one `(generation, position)` pair per
+/// graph node. A slot is live only when its stamp equals the table's
+/// current generation, so starting a new level is O(1) — bump the
+/// generation — instead of clearing |V| entries or rebuilding a hashmap.
+///
+/// Memory: 8 bytes × |V| per sampler instance, paid once at construction.
+/// On the (astronomically rare) u32 generation wraparound the table is
+/// wiped once so stale stamps from 2³² levels ago cannot alias.
+pub struct InternTable {
+    /// per graph node: (generation stamp, position in the current level).
+    slots: Vec<(u32, u32)>,
+    generation: u32,
+}
+
+impl InternTable {
+    pub fn new(num_nodes: usize) -> Self {
+        // slots are stamped 0 = "never stamped"; the live generation
+        // starts at 1 so a fresh table is empty even before the first
+        // begin_level.
+        InternTable { slots: vec![(0, 0); num_nodes], generation: 1 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Invalidate every entry by bumping the generation. Wipes the table
+    /// on wraparound so a slot stamped 2³² generations ago cannot read as
+    /// live.
+    pub fn begin_level(&mut self) {
+        self.generation = self.generation.wrapping_add(1);
+        if self.generation == 0 {
+            for s in &mut self.slots {
+                *s = (0, 0);
+            }
+            self.generation = 1;
+        }
+    }
+
+    /// Position of `v` in the current level, if interned this generation.
+    #[inline]
+    pub fn get(&self, v: NodeId) -> Option<u32> {
+        let (stamp, pos) = self.slots[v as usize];
+        (stamp == self.generation).then_some(pos)
+    }
+
+    /// Stamp `v` with a position in the current level.
+    #[inline]
+    pub fn set(&mut self, v: NodeId, pos: u32) {
+        self.slots[v as usize] = (self.generation, pos);
+    }
+
+    #[cfg(test)]
+    pub(crate) fn force_generation(&mut self, generation: u32) {
+        self.generation = generation;
+    }
+}
+
+/// Generation-stamped membership set over the node-id space — the
+/// set-only companion of [`InternTable`] (4 bytes/node instead of 8) for
+/// "seen this round" checks where the position lives elsewhere.
+pub struct StampSet {
+    stamps: Vec<u32>,
+    generation: u32,
+}
+
+impl StampSet {
+    pub fn new(num_nodes: usize) -> Self {
+        // stamp 0 = "never stamped"; live generation starts at 1 so a
+        // fresh set is empty before the first begin_round.
+        StampSet { stamps: vec![0; num_nodes], generation: 1 }
+    }
+
+    /// Empty the set by bumping the generation (O(1); wipes on wrap, as
+    /// [`InternTable::begin_level`]).
+    pub fn begin_round(&mut self) {
+        self.generation = self.generation.wrapping_add(1);
+        if self.generation == 0 {
+            for s in &mut self.stamps {
+                *s = 0;
+            }
+            self.generation = 1;
+        }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, v: NodeId) {
+        self.stamps[v as usize] = self.generation;
+    }
+
+    #[inline]
+    pub fn contains(&self, v: NodeId) -> bool {
+        self.stamps[v as usize] == self.generation
+    }
+}
+
+/// Incremental builder for one level-below set with the ordering
+/// invariant: the lower level starts with the upper level's nodes
+/// (positions `0..n_upper`), then sampled neighbors are appended,
+/// deduplicated, until `cap` is reached. Runs entirely on borrowed,
+/// recycled storage — seeding bumps the table generation and refills
+/// `nodes` in place.
+pub(crate) struct LevelBuilder<'a> {
+    table: &'a mut InternTable,
+    nodes: &'a mut Vec<NodeId>,
+    cap: usize,
+    /// edges dropped because the level hit its capacity.
+    pub truncated: usize,
+}
+
+impl<'a> LevelBuilder<'a> {
+    pub fn seed(
+        table: &'a mut InternTable,
+        nodes: &'a mut Vec<NodeId>,
+        upper: &[NodeId],
+        cap: usize,
+    ) -> Self {
+        assert!(upper.len() <= cap, "upper level {} exceeds capacity {cap}", upper.len());
+        table.begin_level();
+        nodes.clear();
+        for (i, &v) in upper.iter().enumerate() {
+            nodes.push(v);
+            table.set(v, i as u32);
+        }
+        LevelBuilder { table, nodes, cap, truncated: 0 }
+    }
+
+    /// Position of `v`, inserting if new. None if capacity is exhausted
+    /// (caller must drop the edge — counted as truncation).
+    #[inline]
+    pub fn intern(&mut self, v: NodeId) -> Option<u32> {
+        if let Some(p) = self.table.get(v) {
+            return Some(p);
+        }
+        if self.nodes.len() >= self.cap {
+            self.truncated += 1;
+            return None;
+        }
+        let p = self.nodes.len() as u32;
+        self.nodes.push(v);
+        self.table.set(v, p);
+        Some(p)
+    }
+
+    #[allow(dead_code)]
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Write padded labels + mask for a target chunk into recycled tensors.
+/// Only the real prefix is written — the tail is already zero by the
+/// `MiniBatch::reset` dirty-region invariant.
+pub(crate) fn pad_labels_into(
+    targets: &[NodeId],
+    labels: &[u16],
+    lab: &mut [i32],
+    mask: &mut [f32],
+) {
+    debug_assert!(targets.len() <= lab.len());
+    for (i, &t) in targets.iter().enumerate() {
+        lab[i] = labels[t as usize] as i32;
+        mask[i] = 1.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_tables_are_empty_before_first_level() {
+        assert_eq!(InternTable::new(4).get(0), None);
+        assert_eq!(InternTable::new(4).get(3), None);
+        assert!(!StampSet::new(4).contains(0));
+    }
+
+    #[test]
+    fn level_builder_interning() {
+        let mut table = InternTable::new(64);
+        let mut nodes = Vec::new();
+        let mut lb = LevelBuilder::seed(&mut table, &mut nodes, &[10, 20], 4);
+        assert_eq!(lb.intern(10), Some(0));
+        assert_eq!(lb.intern(30), Some(2));
+        assert_eq!(lb.intern(30), Some(2));
+        assert_eq!(lb.intern(40), Some(3));
+        assert_eq!(lb.intern(50), None); // capacity
+        assert_eq!(lb.truncated, 1);
+        drop(lb);
+        assert_eq!(nodes, vec![10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn generation_bump_invalidates_previous_level() {
+        let mut table = InternTable::new(8);
+        let mut nodes = Vec::new();
+        {
+            let mut lb = LevelBuilder::seed(&mut table, &mut nodes, &[3], 8);
+            assert_eq!(lb.intern(5), Some(1));
+        }
+        // a fresh level must not see the previous level's entries
+        let mut other = Vec::new();
+        LevelBuilder::seed(&mut table, &mut other, &[7], 8);
+        assert_eq!(table.get(5), None);
+        assert_eq!(table.get(3), None);
+        assert_eq!(table.get(7), Some(0));
+    }
+
+    #[test]
+    fn generation_wrap_clears_stale_stamps() {
+        let mut table = InternTable::new(16);
+        // stamp an entry at the maximal generation, then wrap
+        table.force_generation(u32::MAX - 1);
+        table.begin_level(); // generation == u32::MAX
+        table.set(2, 7);
+        assert_eq!(table.get(2), Some(7));
+        table.begin_level(); // wraps: table wiped, generation restarts at 1
+        assert_eq!(table.get(2), None, "stale stamp survived the wrap");
+        table.set(4, 1);
+        assert_eq!(table.get(4), Some(1));
+        // and the next bump still invalidates normally
+        table.begin_level();
+        assert_eq!(table.get(4), None);
+    }
+
+    #[test]
+    fn stamp_set_rounds_and_wrap() {
+        let mut set = StampSet::new(8);
+        set.begin_round();
+        set.insert(3);
+        assert!(set.contains(3));
+        assert!(!set.contains(4));
+        set.begin_round();
+        assert!(!set.contains(3), "previous round leaked");
+        // wraparound wipes stale stamps
+        set.insert(5);
+        set.generation = u32::MAX;
+        set.insert(6);
+        set.begin_round();
+        assert!(!set.contains(6));
+        assert!(!set.contains(5));
+    }
+
+    #[test]
+    fn pad_labels_into_writes_prefix_only() {
+        let labels: Vec<u16> = vec![5, 6, 7, 8];
+        let mut lab = vec![0i32; 4];
+        let mut mask = vec![0f32; 4];
+        pad_labels_into(&[2, 0], &labels, &mut lab, &mut mask);
+        assert_eq!(lab, vec![7, 5, 0, 0]);
+        assert_eq!(mask, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+}

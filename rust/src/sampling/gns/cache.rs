@@ -11,7 +11,7 @@ use crate::graph::subgraph::CacheSubgraph;
 use crate::graph::walk::walk_probs;
 use crate::graph::{CsrGraph, NodeId};
 use crate::util::rng::{AliasTable, Pcg};
-use std::collections::HashMap;
+use std::sync::Arc;
 
 /// How the cache distribution 𝒫 is computed.
 #[derive(Debug, Clone, PartialEq)]
@@ -26,14 +26,26 @@ pub enum CachePolicy {
 }
 
 /// The sampled cache + everything derived from it.
+///
+/// Shared across all worker samplers behind an `Arc`; the heavy per-node
+/// arrays inside are either `Arc`-shared with the `CacheSampler` (probs)
+/// or dense direct-address structures so per-batch `contains`/`pos`
+/// queries are single indexed loads instead of hashmap probes.
 pub struct CacheState {
-    /// cache position → graph node.
-    pub nodes: Vec<NodeId>,
-    /// graph node → cache position.
-    pub pos: HashMap<NodeId, u32>,
+    /// cache position → graph node. `Arc` so `Sampler::cache_nodes` hands
+    /// the trainer a snapshot without copying the id list.
+    pub nodes: Arc<Vec<NodeId>>,
+    /// graph node → cache position; `u32::MAX` = not cached.
+    pos: Vec<u32>,
+    /// membership bitmap (one bit per graph node): `contains` touches an
+    /// eighth of the memory `pos` would, and the input_cached pass is
+    /// contains-heavy.
+    member: Vec<u64>,
     /// The static sampling distribution 𝒫 (per graph node) the cache was
     /// drawn from — needed for the eq. (11) inclusion probabilities.
-    pub probs: Vec<f64>,
+    /// Shared with the `CacheSampler` (it is immutable per policy), so a
+    /// refresh no longer clones |V| f64s.
+    pub probs: Arc<Vec<f64>>,
     /// Induced subgraph: cached neighbors per graph node (§3.3).
     pub subgraph: CacheSubgraph,
     /// Monotone generation counter; the trainer re-uploads features when
@@ -44,7 +56,17 @@ pub struct CacheState {
 impl CacheState {
     #[inline]
     pub fn contains(&self, v: NodeId) -> bool {
-        self.pos.contains_key(&v)
+        let i = v as usize;
+        (self.member[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Cache position of `v`, if cached.
+    #[inline]
+    pub fn pos(&self, v: NodeId) -> Option<u32> {
+        match self.pos[v as usize] {
+            u32::MAX => None,
+            p => Some(p),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -60,7 +82,8 @@ impl CacheState {
 pub struct CacheSampler {
     policy: CachePolicy,
     cache_size: usize,
-    probs: Vec<f64>,
+    /// `Arc`-shared with every `CacheState` drawn from it.
+    probs: Arc<Vec<f64>>,
     table: AliasTable,
     rng: Pcg,
     generation: u64,
@@ -90,7 +113,7 @@ impl CacheSampler {
         CacheSampler {
             policy,
             cache_size,
-            probs,
+            probs: Arc::new(probs),
             table,
             rng: Pcg::with_stream(seed, 0xCAC4E),
             generation: 0,
@@ -105,20 +128,25 @@ impl CacheSampler {
         &self.policy
     }
 
-    /// Draw a fresh cache and build its induced subgraph.
+    /// Draw a fresh cache and build its induced subgraph. The probs array
+    /// is `Arc`-shared (not cloned), so a refresh costs O(|C| + Σ deg(C))
+    /// plus the dense position/membership arrays — no O(|V|) f64 copy.
     pub fn sample(&mut self, graph: &CsrGraph) -> CacheState {
         self.generation += 1;
         let drawn = self.table.sample_distinct(&mut self.rng, self.cache_size);
         let nodes: Vec<NodeId> = drawn.into_iter().map(|v| v as NodeId).collect();
-        let pos: HashMap<NodeId, u32> = nodes
-            .iter()
-            .enumerate()
-            .map(|(i, &v)| (v, i as u32))
-            .collect();
+        let n = graph.num_nodes();
+        let mut pos = vec![u32::MAX; n];
+        let mut member = vec![0u64; n.div_ceil(64)];
+        for (i, &v) in nodes.iter().enumerate() {
+            pos[v as usize] = i as u32;
+            member[(v as usize) >> 6] |= 1u64 << (v as usize & 63);
+        }
         let subgraph = CacheSubgraph::build(graph, &nodes);
         CacheState {
-            nodes,
+            nodes: Arc::new(nodes),
             pos,
+            member,
             probs: self.probs.clone(),
             subgraph,
             generation: self.generation,
@@ -159,9 +187,15 @@ mod tests {
         let set: std::collections::HashSet<_> = c.nodes.iter().collect();
         assert_eq!(set.len(), 100);
         for (i, &v) in c.nodes.iter().enumerate() {
-            assert_eq!(c.pos[&v], i as u32);
+            assert_eq!(c.pos(v), Some(i as u32));
             assert!(c.contains(v));
         }
+        // a node outside the cache reads as absent in both structures
+        let missing = (0..g.num_nodes() as NodeId)
+            .find(|v| !c.nodes.contains(v))
+            .unwrap();
+        assert_eq!(c.pos(missing), None);
+        assert!(!c.contains(missing));
         assert_eq!(c.generation, 1);
         let c2 = cs.sample(&g);
         assert_eq!(c2.generation, 2);

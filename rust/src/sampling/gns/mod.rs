@@ -20,6 +20,7 @@ pub mod importance;
 
 pub use cache::{CachePolicy, CacheSampler, CacheState};
 
+use super::arena::{pad_labels_into, InternTable, LevelBuilder};
 use super::*;
 use crate::graph::CsrGraph;
 use crate::util::rng::Pcg;
@@ -71,6 +72,13 @@ pub struct GnsSampler {
     state: Arc<CacheState>,
     rng: Pcg,
     idx_scratch: Vec<usize>,
+    /// reusable per-node (neighbor, weight) buffer.
+    scratch: Vec<(NodeId, f64)>,
+    /// O(1) node→position interning across levels.
+    intern: InternTable,
+    /// double-buffered level node lists.
+    level_upper: Vec<NodeId>,
+    level_lower: Vec<NodeId>,
 }
 
 impl GnsSampler {
@@ -93,9 +101,15 @@ impl GnsSampler {
             state: std::sync::RwLock::new(state.clone()),
         });
         let rng = Pcg::with_stream(cfg.seed, 0x6E5);
+        let intern = InternTable::new(graph.num_nodes());
+        let max_level = shapes.level_sizes[0];
         GnsSampler {
             graph, shapes, cfg, shared, is_leader: true, state, rng,
             idx_scratch: Vec::with_capacity(64),
+            scratch: Vec::with_capacity(64),
+            intern,
+            level_upper: Vec::with_capacity(max_level),
+            level_lower: Vec::with_capacity(max_level),
         }
     }
 
@@ -108,6 +122,7 @@ impl GnsSampler {
     /// should be the leader (it alone refreshes the cache in begin_epoch);
     /// the Trainer's factory convention is: id 0 = leader.
     pub fn instance(&self, worker_id: u64, is_leader: bool) -> Self {
+        let max_level = self.shapes.level_sizes[0];
         GnsSampler {
             graph: self.graph.clone(),
             shapes: self.shapes.clone(),
@@ -117,6 +132,10 @@ impl GnsSampler {
             state: self.state.clone(),
             rng: Pcg::with_stream(self.cfg.seed ^ worker_id, 0x6E50 + worker_id),
             idx_scratch: Vec::with_capacity(64),
+            scratch: Vec::with_capacity(64),
+            intern: InternTable::new(self.graph.num_nodes()),
+            level_upper: Vec::with_capacity(max_level),
+            level_lower: Vec::with_capacity(max_level),
         }
     }
 
@@ -124,42 +143,46 @@ impl GnsSampler {
         self.shared.state.read().unwrap().clone()
     }
 
-    /// Sample neighbors of `v` for layer `layer` (0-based; 0 = input
-    /// layer). Returns (global ids, weights) where weights carry the
-    /// eq. 11–12 coefficients for cache draws and 1.0 for uniform draws,
-    /// pre-normalization.
+    /// Sample neighbors of `v` for one layer. Fills `out` with
+    /// (global id, weight) pairs where weights carry the eq. 11–12
+    /// coefficients for cache draws and 1.0 for uniform draws,
+    /// pre-normalization. Associated fn over explicit field borrows so
+    /// the batch loop can hold the level builder across calls.
+    #[allow(clippy::too_many_arguments)]
     fn sample_one(
-        &mut self,
+        graph: &CsrGraph,
+        state: &CacheState,
+        input_layer_cache_only: bool,
+        rng: &mut Pcg,
+        idx_scratch: &mut Vec<usize>,
         v: NodeId,
         fanout: usize,
         is_input_layer: bool,
         out: &mut Vec<(NodeId, f64)>,
     ) {
         out.clear();
-        let cached = self.state.subgraph.cached_neighbors(v);
+        let cached = state.subgraph.cached_neighbors(v);
         let n_cached = cached.len();
-        let cache_len = self.state.len();
+        let cache_len = state.len();
         if n_cached > 0 {
             let take = fanout.min(n_cached);
-            self.rng.sample_distinct_into(n_cached, take, &mut self.idx_scratch);
-            let picks = std::mem::take(&mut self.idx_scratch);
-            for &i in &picks {
+            rng.sample_distinct_into(n_cached, take, idx_scratch);
+            for &i in idx_scratch.iter() {
                 let cpos = cached[i] as usize;
-                let u = self.state.nodes[cpos];
+                let u = state.nodes[cpos];
                 let w = importance::edge_weight(
-                    self.state.probs[u as usize],
+                    state.probs[u as usize],
                     cache_len,
                     fanout,
                     n_cached,
                 );
                 out.push((u, w));
             }
-            self.idx_scratch = picks;
         }
         // Hidden layers top up from the full neighborhood; the input layer
         // is cache-only in the paper's configuration.
-        if out.len() < fanout && (!is_input_layer || !self.cfg.input_layer_cache_only) {
-            let nbrs = self.graph.neighbors(v);
+        if out.len() < fanout && (!is_input_layer || !input_layer_cache_only) {
+            let nbrs = graph.neighbors(v);
             if !nbrs.is_empty() {
                 let want = fanout - out.len();
                 // best-effort distinct top-up: sample up to 4*want draws;
@@ -168,7 +191,7 @@ impl GnsSampler {
                 let mut tries = 0usize;
                 while added < want && tries < 4 * want + 8 {
                     tries += 1;
-                    let u = nbrs[self.rng.gen_range(nbrs.len())];
+                    let u = nbrs[rng.gen_range(nbrs.len())];
                     if !out.iter().any(|&(x, _)| x == u) {
                         out.push((u, 1.0));
                         added += 1;
@@ -194,73 +217,108 @@ impl Sampler for GnsSampler {
         self.state = self.shared.state.read().unwrap().clone();
     }
 
-    fn sample_batch(&mut self, targets: &[NodeId], labels: &[u16]) -> anyhow::Result<MiniBatch> {
-        let shapes = self.shapes.clone();
-        let num_layers = shapes.num_layers();
-        anyhow::ensure!(targets.len() <= shapes.batch_size());
+    fn sample_batch_into(
+        &mut self,
+        targets: &[NodeId],
+        labels: &[u16],
+        out: &mut MiniBatch,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(targets.len() <= self.shapes.batch_size());
+        out.ensure_shapes(&self.shapes);
 
-        let mut stats = BatchStats::default();
-        let mut upper: Vec<NodeId> = targets.to_vec();
-        let mut layers_rev: Vec<LayerBlock> = Vec::with_capacity(num_layers);
-        let mut scratch: Vec<(NodeId, f64)> = Vec::new();
+        // disjoint field borrows for the hot loop
+        let GnsSampler {
+            graph,
+            shapes,
+            cfg,
+            state,
+            rng,
+            idx_scratch,
+            scratch,
+            intern,
+            level_upper,
+            level_lower,
+            ..
+        } = self;
+        let graph: &CsrGraph = &**graph;
+        let state: &CacheState = &**state;
+        let input_layer_cache_only = cfg.input_layer_cache_only;
+        let num_layers = shapes.num_layers();
+
+        level_upper.clear();
+        level_upper.extend_from_slice(targets);
         for l in (0..num_layers).rev() {
             let fanout = shapes.fanouts[l];
             let is_input_layer = l == 0;
             let cap_lower = shapes.level_sizes[l];
-            let mut lb = LevelBuilder::seed(&upper, cap_lower);
-            let mut edges: Vec<Vec<(u32, f32)>> = Vec::with_capacity(upper.len());
-            let upper_nodes = upper.clone();
-            for &v in &upper_nodes {
-                self.sample_one(v, fanout, is_input_layer, &mut scratch);
-                let mut nbrs: Vec<(u32, f32)> = Vec::with_capacity(scratch.len());
+            let blk = &mut out.layers[l];
+            let n_upper = level_upper.len();
+            debug_assert!(n_upper <= blk.self_idx.len());
+            blk.n_real = n_upper;
+            let mut lb = LevelBuilder::seed(intern, level_lower, level_upper, cap_lower);
+            let (mut edges_l, mut isolated_l) = (0usize, 0usize);
+            for i in 0..n_upper {
+                let v = level_upper[i];
+                blk.self_idx[i] = i as i32;
+                Self::sample_one(
+                    graph,
+                    state,
+                    input_layer_cache_only,
+                    rng,
+                    idx_scratch,
+                    v,
+                    fanout,
+                    is_input_layer,
+                    scratch,
+                );
+                let row = i * fanout;
+                let mut s = 0usize;
                 let mut wsum = 0.0f64;
                 for &(u, w) in scratch.iter() {
+                    if s >= fanout {
+                        break;
+                    }
                     if let Some(p) = lb.intern(u) {
-                        nbrs.push((p, w as f32));
+                        blk.idx[row + s] = p as i32;
+                        blk.w[row + s] = w as f32;
                         wsum += w;
+                        s += 1;
                     }
                 }
                 // self-normalize to unit sum (mean-aggregator convention;
                 // reduces to 1/s when all weights are equal)
                 if wsum > 0.0 {
                     let inv = (1.0 / wsum) as f32;
-                    for e in &mut nbrs {
-                        e.1 *= inv;
+                    for e in &mut blk.w[row..row + s] {
+                        *e *= inv;
                     }
                 } else {
-                    stats.isolated_nodes += 1;
+                    isolated_l += 1;
                 }
-                stats.edges += nbrs.len();
-                edges.push(nbrs);
+                edges_l += s;
             }
-            stats.truncated_neighbors += lb.truncated;
-            let (blk, _) = build_layer_block(&edges, shapes.level_sizes[l + 1], fanout);
-            layers_rev.push(blk);
-            upper = lb.nodes;
+            out.stats.edges += edges_l;
+            out.stats.isolated_nodes += isolated_l;
+            out.stats.truncated_neighbors += lb.truncated;
+            std::mem::swap(level_upper, level_lower);
         }
-        layers_rev.reverse();
 
-        let input_cached: Vec<bool> =
-            upper.iter().map(|&v| self.state.contains(v)).collect();
-        stats.cached_inputs = input_cached.iter().filter(|&&c| c).count();
+        out.input_nodes.extend_from_slice(level_upper);
+        for &v in level_upper.iter() {
+            out.input_cached.push(state.contains(v));
+        }
+        out.stats.cached_inputs = out.input_cached.iter().filter(|&&c| c).count();
 
-        let (lab, mask) = pad_labels(targets, labels, shapes.batch_size());
-        Ok(MiniBatch {
-            input_nodes: upper,
-            input_cached,
-            layers: layers_rev,
-            labels: lab,
-            mask,
-            targets: targets.to_vec(),
-            stats,
-        })
+        out.targets.extend_from_slice(targets);
+        pad_labels_into(targets, labels, &mut out.labels, &mut out.mask);
+        Ok(())
     }
 
     fn cache_generation(&self) -> u64 {
         self.state.generation
     }
 
-    fn cache_nodes(&self) -> Option<Vec<NodeId>> {
+    fn cache_nodes(&self) -> Option<Arc<Vec<NodeId>>> {
         Some(self.state.nodes.clone())
     }
 }

@@ -15,9 +15,11 @@
 //! overhead the paper criticizes; nodes that end up with *zero* sampled
 //! in-set neighbors are the "isolated nodes" of Table 5.
 
+use super::arena::{pad_labels_into, InternTable, LevelBuilder, StampSet};
 use super::*;
 use crate::graph::CsrGraph;
 use crate::util::rng::Pcg;
+use std::collections::HashMap;
 use std::sync::Arc;
 
 pub struct LadiesSampler {
@@ -26,15 +28,39 @@ pub struct LadiesSampler {
     /// nodes sampled per layer (the 512 / 5000 of Table 3).
     s_layer: usize,
     rng: Pcg,
+    /// O(1) node→position interning across levels.
+    intern: InternTable,
+    /// marks the layer-sampled candidate set; a stamp-only set because
+    /// membership must be "sampled this layer", not merely "interned"
+    /// (upper nodes intern too) — positions are read from `intern`.
+    sampled_mark: StampSet,
+    /// double-buffered level node lists.
+    level_upper: Vec<NodeId>,
+    level_lower: Vec<NodeId>,
+    /// reusable frontier distribution + candidate list. The q
+    /// recomputation itself stays hash-based — it *is* the per-layer
+    /// overhead the paper criticizes about LADIES — but the storage is
+    /// recycled across layers and batches.
+    q: HashMap<NodeId, f64>,
+    cands: Vec<(NodeId, f64)>,
 }
 
 impl LadiesSampler {
     pub fn new(graph: Arc<CsrGraph>, shapes: BlockShapes, s_layer: usize, seed: u64) -> Self {
+        let intern = InternTable::new(graph.num_nodes());
+        let sampled_mark = StampSet::new(graph.num_nodes());
+        let max_level = shapes.level_sizes[0];
         LadiesSampler {
             graph,
             shapes,
             s_layer,
             rng: Pcg::with_stream(seed, 0x1AD1E5),
+            intern,
+            sampled_mark,
+            level_upper: Vec::with_capacity(max_level),
+            level_lower: Vec::with_capacity(max_level),
+            q: HashMap::new(),
+            cands: Vec::new(),
         }
     }
 
@@ -88,93 +114,114 @@ impl Sampler for LadiesSampler {
 
     fn begin_epoch(&mut self, _epoch: usize) {}
 
-    fn sample_batch(&mut self, targets: &[NodeId], labels: &[u16]) -> anyhow::Result<MiniBatch> {
-        let shapes = self.shapes.clone();
-        let num_layers = shapes.num_layers();
-        anyhow::ensure!(targets.len() <= shapes.batch_size());
+    fn sample_batch_into(
+        &mut self,
+        targets: &[NodeId],
+        labels: &[u16],
+        out: &mut MiniBatch,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(targets.len() <= self.shapes.batch_size());
+        out.ensure_shapes(&self.shapes);
 
-        let mut stats = BatchStats::default();
-        let mut upper: Vec<NodeId> = targets.to_vec();
-        let mut layers_rev: Vec<LayerBlock> = Vec::with_capacity(num_layers);
+        let LadiesSampler {
+            graph,
+            shapes,
+            s_layer,
+            rng,
+            intern,
+            sampled_mark,
+            level_upper,
+            level_lower,
+            q,
+            cands,
+        } = self;
+        let graph: &CsrGraph = &**graph;
+        let s_layer = *s_layer;
+        let num_layers = shapes.num_layers();
+
+        level_upper.clear();
+        level_upper.extend_from_slice(targets);
         for l in (0..num_layers).rev() {
             let fanout = shapes.fanouts[l];
             let cap_lower = shapes.level_sizes[l];
 
             // 1. frontier importance distribution q over the union of
             //    neighborhoods — THE expensive step LADIES pays per layer.
-            let mut q: HashMap<NodeId, f64> = HashMap::new();
-            for &v in &upper {
-                let dv = self.graph.degree(v).max(1) as f64;
-                for &u in self.graph.neighbors(v) {
-                    let du = self.graph.degree(u).max(1) as f64;
+            q.clear();
+            for &v in level_upper.iter() {
+                let dv = graph.degree(v).max(1) as f64;
+                for &u in graph.neighbors(v) {
+                    let du = graph.degree(u).max(1) as f64;
                     // P̂_vu² = 1/(deg v · deg u)
                     *q.entry(u).or_insert(0.0) += 1.0 / (dv * du);
                 }
             }
-            let cands: Vec<(NodeId, f64)> = q.iter().map(|(&v, &w)| (v, w)).collect();
+            cands.clear();
+            cands.extend(q.iter().map(|(&v, &w)| (v, w)));
 
             // 2. sample s_layer nodes from q
-            let sampled = Self::weighted_distinct(&mut self.rng, &cands, self.s_layer);
+            let sampled = Self::weighted_distinct(rng, cands, s_layer);
 
             // 3. build the lower level: upper nodes first (self paths),
-            //    then the layer-sampled nodes.
-            let mut lb = LevelBuilder::seed(&upper, cap_lower);
-            let mut in_set: HashMap<NodeId, u32> = HashMap::with_capacity(sampled.len() * 2);
+            //    then the layer-sampled nodes, marked for the connect step.
+            let blk = &mut out.layers[l];
+            let n_upper = level_upper.len();
+            debug_assert!(n_upper <= blk.self_idx.len());
+            blk.n_real = n_upper;
+            let mut lb = LevelBuilder::seed(intern, level_lower, level_upper, cap_lower);
+            sampled_mark.begin_round();
             for &u in &sampled {
-                if let Some(p) = lb.intern(u) {
-                    in_set.insert(u, p);
+                if lb.intern(u).is_some() {
+                    sampled_mark.insert(u);
                 }
             }
-            stats.truncated_neighbors += lb.truncated;
+            out.stats.truncated_neighbors += lb.truncated;
 
             // 4. connect: each upper node to its sampled in-set neighbors,
             //    weight ∝ P̂_vu / q_u, row-normalized; cap at fanout.
-            let mut edges: Vec<Vec<(u32, f32)>> = Vec::with_capacity(upper.len());
-            for &v in &upper {
-                let dv = self.graph.degree(v).max(1) as f64;
-                let mut nbrs: Vec<(u32, f32)> = Vec::new();
-                for &u in self.graph.neighbors(v) {
-                    if let Some(&p) = in_set.get(&u) {
-                        let du = self.graph.degree(u).max(1) as f64;
+            for i in 0..n_upper {
+                let v = level_upper[i];
+                blk.self_idx[i] = i as i32;
+                let dv = graph.degree(v).max(1) as f64;
+                let row = i * fanout;
+                let mut s = 0usize;
+                for &u in graph.neighbors(v) {
+                    if sampled_mark.contains(u) {
+                        // sampled ⇒ interned this level, so the position
+                        // lookup cannot miss
+                        let Some(p) = intern.get(u) else { continue };
+                        let du = graph.degree(u).max(1) as f64;
                         let p_hat = 1.0 / (dv * du).sqrt();
                         let qu = q[&u];
-                        nbrs.push((p, (p_hat / qu) as f32));
-                        if nbrs.len() >= fanout {
+                        blk.idx[row + s] = p as i32;
+                        blk.w[row + s] = (p_hat / qu) as f32;
+                        s += 1;
+                        if s >= fanout {
                             break;
                         }
                     }
                 }
-                let wsum: f32 = nbrs.iter().map(|e| e.1).sum();
+                let wsum: f32 = blk.w[row..row + s].iter().sum();
                 if wsum > 0.0 {
-                    for e in &mut nbrs {
-                        e.1 /= wsum;
+                    for e in &mut blk.w[row..row + s] {
+                        *e /= wsum;
                     }
                 } else {
                     // isolated node (Table 5); per-batch first-layer
                     // isolation is derived from the block format by
                     // `sampling::first_layer_isolation`
-                    stats.isolated_nodes += 1;
+                    out.stats.isolated_nodes += 1;
                 }
-                stats.edges += nbrs.len();
-                edges.push(nbrs);
+                out.stats.edges += s;
             }
-            let (blk, _) = build_layer_block(&edges, shapes.level_sizes[l + 1], fanout);
-            layers_rev.push(blk);
-            upper = lb.nodes;
+            std::mem::swap(level_upper, level_lower);
         }
-        layers_rev.reverse();
 
-        let (lab, mask) = pad_labels(targets, labels, shapes.batch_size());
-        let input_cached = vec![false; upper.len()];
-        Ok(MiniBatch {
-            input_nodes: upper,
-            input_cached,
-            layers: layers_rev,
-            labels: lab,
-            mask,
-            targets: targets.to_vec(),
-            stats,
-        })
+        out.input_nodes.extend_from_slice(level_upper);
+        out.input_cached.resize(level_upper.len(), false);
+        out.targets.extend_from_slice(targets);
+        pad_labels_into(targets, labels, &mut out.labels, &mut out.mask);
+        Ok(())
     }
 }
 

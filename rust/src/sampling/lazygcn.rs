@@ -13,9 +13,11 @@
 //! ρ ("recycling growth rate") multiplies R over epochs as in the original
 //! paper (rho=1.1 in the paper's setup).
 
+use super::arena::{pad_labels_into, InternTable, LevelBuilder};
 use super::*;
 use crate::graph::CsrGraph;
 use crate::util::rng::Pcg;
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// A frozen mega-batch: induced sampled adjacency over its node set.
@@ -64,14 +66,32 @@ pub struct LazyGcnSampler {
     rng: Pcg,
     epoch: usize,
     mega: Option<MegaBatch>,
-    /// pending target chunks accumulated until the mega-batch is built.
-    pending: Vec<Vec<NodeId>>,
+    /// O(1) node→position interning across levels.
+    intern: InternTable,
+    /// double-buffered level node lists.
+    level_upper: Vec<NodeId>,
+    level_lower: Vec<NodeId>,
+    /// reusable pick-index buffer for frozen-list resampling.
+    idx_scratch: Vec<usize>,
 }
 
 impl LazyGcnSampler {
     pub fn new(graph: Arc<CsrGraph>, shapes: BlockShapes, cfg: LazyGcnConfig) -> Self {
         let rng = Pcg::with_stream(cfg.seed, 0x1A27);
-        LazyGcnSampler { graph, shapes, cfg, rng, epoch: 0, mega: None, pending: Vec::new() }
+        let intern = InternTable::new(graph.num_nodes());
+        let max_level = shapes.level_sizes[0];
+        LazyGcnSampler {
+            graph,
+            shapes,
+            cfg,
+            rng,
+            epoch: 0,
+            mega: None,
+            intern,
+            level_upper: Vec::with_capacity(max_level),
+            level_lower: Vec::with_capacity(max_level),
+            idx_scratch: Vec::with_capacity(64),
+        }
     }
 
     fn effective_period(&self) -> usize {
@@ -162,13 +182,16 @@ impl Sampler for LazyGcnSampler {
     fn begin_epoch(&mut self, epoch: usize) {
         self.epoch = epoch;
         self.mega = None; // fresh mega-batch at epoch start
-        self.pending.clear();
     }
 
-    fn sample_batch(&mut self, targets: &[NodeId], labels: &[u16]) -> anyhow::Result<MiniBatch> {
-        let shapes = self.shapes.clone();
-        let num_layers = shapes.num_layers();
-        anyhow::ensure!(targets.len() <= shapes.batch_size());
+    fn sample_batch_into(
+        &mut self,
+        targets: &[NodeId],
+        labels: &[u16],
+        out: &mut MiniBatch,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(targets.len() <= self.shapes.batch_size());
+        out.ensure_shapes(&self.shapes);
 
         // (Re)build the mega-batch when exhausted. The mega-batch is seeded
         // with the current chunk; recycling reuses its frozen structure for
@@ -181,77 +204,88 @@ impl Sampler for LazyGcnSampler {
             let mega = self.build_mega(targets)?;
             self.mega = Some(mega);
         }
-        let mega = self.mega.as_mut().unwrap();
-        mega.served += 1;
 
-        let mut stats = BatchStats::default();
+        let LazyGcnSampler {
+            shapes,
+            rng,
+            mega,
+            intern,
+            level_upper,
+            level_lower,
+            idx_scratch,
+            ..
+        } = self;
+        let mega = mega.as_mut().unwrap();
+        mega.served += 1;
+        let num_layers = shapes.num_layers();
+
         // Mini-batch levels are built *within* the frozen mega structure:
         // targets not in the mega-batch are re-rooted to it by intersection
         // (they were seeds of some earlier mega in this epoch — if absent,
         // they appear isolated, one of LazyGCN's small-batch pathologies).
-        let mut upper: Vec<NodeId> = targets.to_vec();
-        let mut layers_rev: Vec<LayerBlock> = Vec::with_capacity(num_layers);
+        level_upper.clear();
+        level_upper.extend_from_slice(targets);
         for l in (0..num_layers).rev() {
             let fanout = shapes.fanouts[l];
             let cap_lower = shapes.level_sizes[l];
-            let mut lb = LevelBuilder::seed(&upper, cap_lower);
-            let mut edges: Vec<Vec<(u32, f32)>> = Vec::with_capacity(upper.len());
-            for &v in &upper {
-                let mut nbrs: Vec<(u32, f32)> = Vec::new();
+            let blk = &mut out.layers[l];
+            let n_upper = level_upper.len();
+            debug_assert!(n_upper <= blk.self_idx.len());
+            blk.n_real = n_upper;
+            let mut lb = LevelBuilder::seed(intern, level_lower, level_upper, cap_lower);
+            let (mut edges_l, mut isolated_l) = (0usize, 0usize);
+            for i in 0..n_upper {
+                let v = level_upper[i];
+                blk.self_idx[i] = i as i32;
+                let row = i * fanout;
+                let mut s = 0usize;
                 if let Some(&mi) = mega.pos.get(&v) {
                     let frozen = &mega.adj[mi as usize];
                     // resample *within* the frozen list (recycling)
                     let take = fanout.min(frozen.len());
-                    let picks: Vec<usize> = if take == frozen.len() {
-                        (0..take).collect()
+                    if take == frozen.len() {
+                        for &fp in frozen.iter() {
+                            if let Some(p) = lb.intern(mega.nodes[fp as usize]) {
+                                blk.idx[row + s] = p as i32;
+                                s += 1;
+                            }
+                        }
                     } else {
-                        self.rng.sample_distinct(frozen.len(), take)
-                    };
-                    for i in picks {
-                        let u = mega.nodes[frozen[i] as usize];
-                        if let Some(p) = lb.intern(u) {
-                            nbrs.push((p, 0.0));
+                        rng.sample_distinct_into(frozen.len(), take, idx_scratch);
+                        for &j in idx_scratch.iter() {
+                            let u = mega.nodes[frozen[j] as usize];
+                            if let Some(p) = lb.intern(u) {
+                                blk.idx[row + s] = p as i32;
+                                s += 1;
+                            }
                         }
                     }
                 }
-                let s = nbrs.len();
                 if s > 0 {
-                    let w = 1.0 / s as f32;
-                    for e in &mut nbrs {
-                        e.1 = w;
-                    }
+                    blk.w[row..row + s].fill(1.0 / s as f32);
                 } else {
-                    stats.isolated_nodes += 1;
+                    isolated_l += 1;
                 }
-                stats.edges += s;
-                edges.push(nbrs);
+                edges_l += s;
             }
-            stats.truncated_neighbors += lb.truncated;
-            let (blk, _) = build_layer_block(&edges, shapes.level_sizes[l + 1], fanout);
-            layers_rev.push(blk);
-            upper = lb.nodes;
+            out.stats.edges += edges_l;
+            out.stats.isolated_nodes += isolated_l;
+            out.stats.truncated_neighbors += lb.truncated;
+            std::mem::swap(level_upper, level_lower);
         }
-        layers_rev.reverse();
 
         // Mega-batch features are device-pinned: recycled mini-batches copy
         // nothing (that's LazyGCN's point) — flag inputs as cached when the
         // mega-batch holds them.
-        let input_cached: Vec<bool> = upper
-            .iter()
-            .map(|v| self.mega.as_ref().unwrap().pos.contains_key(v))
-            .collect();
-        stats.cached_inputs = input_cached.iter().filter(|&&c| c).count();
+        out.input_nodes.extend_from_slice(level_upper);
+        for &v in level_upper.iter() {
+            out.input_cached.push(mega.pos.contains_key(&v));
+        }
+        out.stats.cached_inputs = out.input_cached.iter().filter(|&&c| c).count();
 
-        let (lab, mask) = pad_labels(targets, labels, shapes.batch_size());
-        Ok(MiniBatch {
-            input_nodes: upper,
-            input_cached,
-            layers: layers_rev,
-            labels: lab,
-            mask,
-            targets: targets.to_vec(),
-            stats,
-        })
+        out.targets.extend_from_slice(targets);
+        pad_labels_into(targets, labels, &mut out.labels, &mut out.mask);
+        Ok(())
     }
 }
 

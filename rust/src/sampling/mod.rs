@@ -12,15 +12,16 @@
 //! `w` (the importance-sampling coefficients of paper §3.4): the device
 //! kernel computes a plain weighted sum Σ_k w·h.
 
+pub mod arena;
 pub mod gns;
 pub mod ladies;
 pub mod lazygcn;
 pub mod neighbor;
 pub mod spec;
 
+pub use arena::InternTable;
+
 use crate::graph::NodeId;
-use crate::util::fxhash::{fast_map_with_capacity, FastHashMap};
-use std::collections::HashMap;
 
 /// Static block shapes shared by sampler and AOT artifact; must match the
 /// artifact's meta.json (validated by runtime::artifacts).
@@ -50,7 +51,7 @@ impl BlockShapes {
 }
 
 /// One layer's padded block tensors.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct LayerBlock {
     /// [cap_l] — position of each level-l node in level l-1 (= identity by
     /// the ordering invariant; padded tail is 0).
@@ -64,7 +65,11 @@ pub struct LayerBlock {
 }
 
 /// A fully-assembled mini-batch, ready for literal upload.
-#[derive(Debug, Clone)]
+///
+/// Doubles as the recycled batch-slot arena (see [`BatchBuffers`]): all
+/// tensors are allocated once at padded capacity and reused across
+/// batches via [`MiniBatch::reset`] / [`MiniBatch::ensure_shapes`].
+#[derive(Debug, Clone, Default)]
 pub struct MiniBatch {
     /// Global node ids of level 0 (input) nodes, in block order.
     pub input_nodes: Vec<NodeId>,
@@ -94,96 +99,94 @@ pub struct BatchStats {
     pub edges: usize,
 }
 
+/// The recycled batch-slot arena: a `MiniBatch` whose tensors are
+/// allocated once at padded capacity and reused across batches. The alias
+/// marks APIs (worker pool, `pipeline::BufferPool`) that recycle storage
+/// rather than consume a freshly-allocated batch.
+pub type BatchBuffers = MiniBatch;
+
 impl MiniBatch {
     pub fn num_input_nodes(&self) -> usize {
         self.input_nodes.len()
     }
-}
 
-/// Incremental builder for one level-below set with the ordering invariant.
-///
-/// Seeds level l-1 with the level-l nodes (positions 0..n_l), then
-/// registers sampled neighbors, deduplicating and respecting the capacity.
-pub(crate) struct LevelBuilder {
-    pub nodes: Vec<NodeId>,
-    pos: FastHashMap<NodeId, u32>,
-    cap: usize,
-    pub truncated: usize,
-}
-
-impl LevelBuilder {
-    pub fn seed(upper: &[NodeId], cap: usize) -> Self {
-        assert!(upper.len() <= cap, "upper level {} exceeds capacity {cap}", upper.len());
-        let mut pos = fast_map_with_capacity(cap * 2);
-        let mut nodes = Vec::with_capacity(cap);
-        for (i, &v) in upper.iter().enumerate() {
-            nodes.push(v);
-            pos.insert(v, i as u32);
-        }
-        LevelBuilder { nodes, pos, cap, truncated: 0 }
-    }
-
-    /// Position of `v`, inserting if new. None if capacity is exhausted
-    /// (caller must drop the edge — counted as truncation).
-    #[inline]
-    pub fn intern(&mut self, v: NodeId) -> Option<u32> {
-        if let Some(&p) = self.pos.get(&v) {
-            return Some(p);
-        }
-        if self.nodes.len() >= self.cap {
-            self.truncated += 1;
-            return None;
-        }
-        let p = self.nodes.len() as u32;
-        self.nodes.push(v);
-        self.pos.insert(v, p);
-        Some(p)
-    }
-
-    #[allow(dead_code)]
-    pub fn len(&self) -> usize {
-        self.nodes.len()
-    }
-}
-
-/// Assemble a padded `LayerBlock` from per-node neighbor lists.
-///
-/// `edges[i]` = (position in lower level, weight) pairs for upper node i.
-/// Weights are used as-is; callers must already have folded normalization.
-pub(crate) fn build_layer_block(
-    edges: &[Vec<(u32, f32)>],
-    cap: usize,
-    fanout: usize,
-) -> (LayerBlock, usize) {
-    let n_real = edges.len();
-    assert!(n_real <= cap);
-    let mut self_idx = vec![0i32; cap];
-    let mut idx = vec![0i32; cap * fanout];
-    let mut w = vec![0f32; cap * fanout];
-    let mut isolated = 0usize;
-    for (i, nbrs) in edges.iter().enumerate() {
-        self_idx[i] = i as i32; // ordering invariant
-        if nbrs.is_empty() {
-            isolated += 1;
-        }
-        for (k, &(p, wt)) in nbrs.iter().take(fanout).enumerate() {
-            idx[i * fanout + k] = p as i32;
-            w[i * fanout + k] = wt;
+    /// Allocate a full-capacity batch slot for `shapes`: every padded
+    /// tensor at its final size, node lists reserved at their caps. Paid
+    /// once per slot; the slot is then recycled via [`MiniBatch::reset`].
+    pub fn with_shapes(shapes: &BlockShapes) -> MiniBatch {
+        let ls = &shapes.level_sizes;
+        let layers = (0..shapes.num_layers())
+            .map(|l| {
+                let cap = ls[l + 1];
+                let k = shapes.fanouts[l];
+                LayerBlock {
+                    self_idx: vec![0i32; cap],
+                    idx: vec![0i32; cap * k],
+                    w: vec![0f32; cap * k],
+                    n_real: 0,
+                }
+            })
+            .collect();
+        MiniBatch {
+            input_nodes: Vec::with_capacity(ls[0]),
+            input_cached: Vec::with_capacity(ls[0]),
+            layers,
+            labels: vec![0i32; shapes.batch_size()],
+            mask: vec![0f32; shapes.batch_size()],
+            targets: Vec::with_capacity(shapes.batch_size()),
+            stats: BatchStats::default(),
         }
     }
-    (LayerBlock { self_idx, idx, w, n_real }, isolated)
-}
 
-/// Pad labels/mask for a target chunk.
-pub(crate) fn pad_labels(targets: &[NodeId], labels: &[u16], batch: usize) -> (Vec<i32>, Vec<f32>) {
-    assert!(targets.len() <= batch);
-    let mut lab = vec![0i32; batch];
-    let mut mask = vec![0f32; batch];
-    for (i, &t) in targets.iter().enumerate() {
-        lab[i] = labels[t as usize] as i32;
-        mask[i] = 1.0;
+    /// Return the slot to the all-zero state, touching only the dirty
+    /// regions (O(real data), not O(capacity)). Relies on the writer
+    /// invariant that nonzero tensor data is confined to rows
+    /// `0..n_real` per layer and the `targets.len()` labels/mask prefix —
+    /// samplers set `n_real` and push targets *before* writing, so even a
+    /// partially-written slot (failed batch) resets correctly.
+    pub fn reset(&mut self) {
+        for blk in &mut self.layers {
+            let cap = blk.self_idx.len();
+            if cap == 0 {
+                blk.n_real = 0;
+                continue;
+            }
+            let k = blk.idx.len() / cap;
+            let n = blk.n_real.min(cap);
+            blk.self_idx[..n].fill(0);
+            blk.idx[..n * k].fill(0);
+            blk.w[..n * k].fill(0.0);
+            blk.n_real = 0;
+        }
+        let t = self.targets.len().min(self.labels.len());
+        self.labels[..t].fill(0);
+        self.mask[..t].fill(0.0);
+        self.input_nodes.clear();
+        self.input_cached.clear();
+        self.targets.clear();
+        self.stats = BatchStats::default();
     }
-    (lab, mask)
+
+    /// Make the slot ready for `shapes`: recycled in place (reset) when
+    /// the tensor sizes already match, reallocated otherwise — which
+    /// covers both fresh `default()` slots and shape changes between
+    /// pipelines.
+    pub fn ensure_shapes(&mut self, shapes: &BlockShapes) {
+        let ls = &shapes.level_sizes;
+        let matches = self.layers.len() == shapes.num_layers()
+            && self.labels.len() == shapes.batch_size()
+            && self.mask.len() == shapes.batch_size()
+            && self.layers.iter().enumerate().all(|(l, b)| {
+                b.self_idx.len() == ls[l + 1]
+                    && b.idx.len() == ls[l + 1] * shapes.fanouts[l]
+                    && b.w.len() == ls[l + 1] * shapes.fanouts[l]
+            });
+        if matches {
+            self.reset();
+        } else {
+            *self = MiniBatch::with_shapes(shapes);
+        }
+    }
 }
 
 /// The sampler interface the pipeline drives.
@@ -194,8 +197,26 @@ pub trait Sampler: Send {
     /// here subject to its update period; LazyGCN resets recycling).
     fn begin_epoch(&mut self, epoch: usize);
 
-    /// Sample a mini-batch for a chunk of target nodes (chunk ≤ batch size).
-    fn sample_batch(&mut self, targets: &[NodeId], labels: &[u16]) -> anyhow::Result<MiniBatch>;
+    /// The arena hot path: assemble a mini-batch for a chunk of target
+    /// nodes (chunk ≤ batch size) into the recycled slot `out`. The slot
+    /// is resized/reset via `MiniBatch::ensure_shapes`, so any slot — a
+    /// fresh `default()`, or a drained batch handed back by the trainer —
+    /// is acceptable. Steady-state implementations perform no per-batch
+    /// heap allocation (verified by tests/alloc_hotpath.rs for NS + GNS).
+    fn sample_batch_into(
+        &mut self,
+        targets: &[NodeId],
+        labels: &[u16],
+        out: &mut MiniBatch,
+    ) -> anyhow::Result<()>;
+
+    /// Allocating convenience wrapper around `sample_batch_into` for
+    /// tests, experiments, and one-off sampling.
+    fn sample_batch(&mut self, targets: &[NodeId], labels: &[u16]) -> anyhow::Result<MiniBatch> {
+        let mut out = MiniBatch::default();
+        self.sample_batch_into(targets, labels, &mut out)?;
+        Ok(out)
+    }
 
     /// Generation counter of the device-resident cache (GNS); 0 when the
     /// method has no cache. The trainer re-uploads cache features when it
@@ -204,8 +225,9 @@ pub trait Sampler: Send {
         0
     }
 
-    /// Snapshot of the cached node ids (GNS); None for cache-less methods.
-    fn cache_nodes(&self) -> Option<Vec<crate::graph::NodeId>> {
+    /// Snapshot of the cached node ids (GNS); a cheap `Arc` clone of the
+    /// shared cache state's node list, None for cache-less methods.
+    fn cache_nodes(&self) -> Option<std::sync::Arc<Vec<crate::graph::NodeId>>> {
         None
     }
 }
@@ -331,41 +353,15 @@ mod tests {
     use super::*;
 
     #[test]
-    fn level_builder_interning() {
-        let mut lb = LevelBuilder::seed(&[10, 20], 4);
-        assert_eq!(lb.intern(10), Some(0));
-        assert_eq!(lb.intern(30), Some(2));
-        assert_eq!(lb.intern(30), Some(2));
-        assert_eq!(lb.intern(40), Some(3));
-        assert_eq!(lb.intern(50), None); // capacity
-        assert_eq!(lb.truncated, 1);
-        assert_eq!(lb.nodes, vec![10, 20, 30, 40]);
-    }
-
-    #[test]
-    fn build_layer_block_pads_and_counts_isolated() {
-        let edges = vec![vec![(1u32, 0.5f32), (2, 0.5)], vec![]];
-        let (blk, isolated) = build_layer_block(&edges, 3, 2);
-        assert_eq!(isolated, 1);
-        assert_eq!(blk.n_real, 2);
-        assert_eq!(blk.self_idx[..2], [0, 1]);
-        assert_eq!(blk.idx[..2], [1, 2]);
-        assert_eq!(blk.w[2..4], [0.0, 0.0]); // isolated row
-        assert_eq!(blk.w[4..6], [0.0, 0.0]); // padding row
-    }
-
-    #[test]
-    fn pad_labels_masks_tail() {
-        let labels: Vec<u16> = vec![5, 6, 7, 8];
-        let (lab, mask) = pad_labels(&[2, 0], &labels, 4);
-        assert_eq!(lab, vec![7, 5, 0, 0]);
-        assert_eq!(mask, vec![1.0, 1.0, 0.0, 0.0]);
-    }
-
-    #[test]
     fn first_layer_isolation_counts_zero_weight_rows() {
-        let edges = vec![vec![(1u32, 1.0f32)], vec![], vec![(0, 0.5), (2, 0.5)]];
-        let (blk, _) = build_layer_block(&edges, 4, 2);
+        // 3 real rows over cap 4, fanout 2: row 0 one edge, row 1 isolated,
+        // row 2 two half-weight edges, row 3 padding.
+        let blk = LayerBlock {
+            self_idx: vec![0, 1, 2, 0],
+            idx: vec![1, 0, 0, 0, 0, 2, 0, 0],
+            w: vec![1.0, 0.0, 0.0, 0.0, 0.5, 0.5, 0.0, 0.0],
+            n_real: 3,
+        };
         let mb = MiniBatch {
             input_nodes: vec![0, 1, 2, 3],
             input_cached: vec![false; 4],
@@ -376,6 +372,76 @@ mod tests {
             stats: BatchStats::default(),
         };
         assert_eq!(first_layer_isolation(&mb), (1, 3));
+    }
+
+    #[test]
+    fn with_shapes_allocates_full_capacity_zeroed() {
+        let shapes = BlockShapes::new(vec![40, 20, 4], vec![3, 3]);
+        let mb = MiniBatch::with_shapes(&shapes);
+        assert_eq!(mb.layers.len(), 2);
+        assert_eq!(mb.layers[0].self_idx.len(), 20);
+        assert_eq!(mb.layers[0].idx.len(), 60);
+        assert_eq!(mb.layers[1].w.len(), 12);
+        assert_eq!(mb.labels.len(), 4);
+        assert!(mb.input_nodes.is_empty() && mb.input_nodes.capacity() >= 40);
+        // an empty slot must validate as an empty batch
+        validate_batch(&mb, &shapes).unwrap();
+    }
+
+    #[test]
+    fn reset_zeroes_dirty_regions_only() {
+        let shapes = BlockShapes::new(vec![40, 20, 4], vec![3, 3]);
+        let mut mb = MiniBatch::with_shapes(&shapes);
+        // simulate a written batch (writer invariant: data within n_real
+        // rows and the targets prefix)
+        mb.layers[1].n_real = 2;
+        mb.layers[1].self_idx[..2].copy_from_slice(&[0, 1]);
+        mb.layers[1].idx[0] = 3;
+        mb.layers[1].w[0] = 1.0;
+        mb.layers[0].n_real = 5;
+        mb.layers[0].idx[14] = 2;
+        mb.layers[0].w[14] = 0.5;
+        mb.input_nodes.extend_from_slice(&[9, 8, 7]);
+        mb.input_cached.extend_from_slice(&[true, false, true]);
+        mb.targets.extend_from_slice(&[9, 8]);
+        mb.labels[..2].copy_from_slice(&[4, 4]);
+        mb.mask[..2].fill(1.0);
+        mb.stats.edges = 3;
+
+        mb.reset();
+        assert!(mb.input_nodes.is_empty());
+        assert!(mb.input_cached.is_empty());
+        assert!(mb.targets.is_empty());
+        assert_eq!(mb.stats.edges, 0);
+        for blk in &mb.layers {
+            assert_eq!(blk.n_real, 0);
+            assert!(blk.self_idx.iter().all(|&x| x == 0));
+            assert!(blk.idx.iter().all(|&x| x == 0));
+            assert!(blk.w.iter().all(|&x| x == 0.0));
+        }
+        assert!(mb.labels.iter().all(|&x| x == 0));
+        assert!(mb.mask.iter().all(|&x| x == 0.0));
+        validate_batch(&mb, &shapes).unwrap();
+    }
+
+    #[test]
+    fn ensure_shapes_recycles_or_reallocates() {
+        let a = BlockShapes::new(vec![40, 20, 4], vec![3, 3]);
+        let b = BlockShapes::new(vec![64, 32, 8], vec![2, 2]);
+        let mut mb = MiniBatch::default();
+        mb.ensure_shapes(&a); // fresh slot: allocates
+        assert_eq!(mb.labels.len(), 4);
+        let cap_before = mb.input_nodes.capacity();
+        mb.input_nodes.push(1);
+        mb.layers[0].n_real = 1;
+        mb.layers[0].w[0] = 0.25;
+        mb.ensure_shapes(&a); // matching shapes: recycled in place
+        assert_eq!(mb.input_nodes.capacity(), cap_before);
+        assert!(mb.input_nodes.is_empty());
+        assert_eq!(mb.layers[0].w[0], 0.0);
+        mb.ensure_shapes(&b); // different shapes: reallocated
+        assert_eq!(mb.labels.len(), 8);
+        assert_eq!(mb.layers[0].idx.len(), 64);
     }
 
     #[test]

@@ -3,7 +3,13 @@
 //! For every node at every layer, samples up to `fanout` *distinct*
 //! neighbors uniformly at random; the mean aggregator is expressed through
 //! weights w = 1/s (s = #real sampled neighbors), matching eq. (3).
+//!
+//! Batch assembly runs on the arena hot path (arena.rs): edges are written
+//! directly into the recycled padded tensors and node interning goes
+//! through the generation-stamped [`InternTable`] — steady state performs
+//! no per-batch heap allocation.
 
+use super::arena::{pad_labels_into, InternTable, LevelBuilder};
 use super::*;
 use crate::graph::CsrGraph;
 use crate::util::rng::Pcg;
@@ -14,15 +20,28 @@ pub struct NeighborSampler {
     shapes: BlockShapes,
     rng: Pcg,
     idx_scratch: Vec<usize>,
+    /// reusable per-node neighbor buffer (global ids).
+    nbr_scratch: Vec<NodeId>,
+    /// O(1) node→position interning across levels.
+    intern: InternTable,
+    /// double-buffered level node lists (current upper / lower being built).
+    level_upper: Vec<NodeId>,
+    level_lower: Vec<NodeId>,
 }
 
 impl NeighborSampler {
     pub fn new(graph: Arc<CsrGraph>, shapes: BlockShapes, seed: u64) -> Self {
+        let max_level = shapes.level_sizes[0];
+        let intern = InternTable::new(graph.num_nodes());
         NeighborSampler {
             graph,
             shapes,
             rng: Pcg::with_stream(seed, 0x4E53),
             idx_scratch: Vec::with_capacity(64),
+            nbr_scratch: Vec::with_capacity(64),
+            intern,
+            level_upper: Vec::with_capacity(max_level),
+            level_lower: Vec::with_capacity(max_level),
         }
     }
 
@@ -60,66 +79,81 @@ impl Sampler for NeighborSampler {
 
     fn begin_epoch(&mut self, _epoch: usize) {}
 
-    fn sample_batch(&mut self, targets: &[NodeId], labels: &[u16]) -> anyhow::Result<MiniBatch> {
-        let shapes = self.shapes.clone();
-        let num_layers = shapes.num_layers();
+    fn sample_batch_into(
+        &mut self,
+        targets: &[NodeId],
+        labels: &[u16],
+        out: &mut MiniBatch,
+    ) -> anyhow::Result<()> {
         anyhow::ensure!(
-            targets.len() <= shapes.batch_size(),
+            targets.len() <= self.shapes.batch_size(),
             "targets {} exceed batch size {}",
             targets.len(),
-            shapes.batch_size()
+            self.shapes.batch_size()
         );
+        out.ensure_shapes(&self.shapes);
 
-        let mut stats = BatchStats::default();
+        // disjoint field borrows for the hot loop
+        let NeighborSampler {
+            graph,
+            shapes,
+            rng,
+            idx_scratch,
+            nbr_scratch,
+            intern,
+            level_upper,
+            level_lower,
+        } = self;
+        let graph: &CsrGraph = &**graph;
+        let num_layers = shapes.num_layers();
+
         // walk top (output) layer down to the input level
-        let mut upper: Vec<NodeId> = targets.to_vec();
-        let mut layers_rev: Vec<LayerBlock> = Vec::with_capacity(num_layers);
-        let mut scratch: Vec<NodeId> = Vec::new();
+        level_upper.clear();
+        level_upper.extend_from_slice(targets);
         for l in (0..num_layers).rev() {
             let fanout = shapes.fanouts[l];
             let cap_lower = shapes.level_sizes[l];
-            let mut lb = LevelBuilder::seed(&upper, cap_lower);
-            let mut edges: Vec<Vec<(u32, f32)>> = Vec::with_capacity(upper.len());
-            for &v in &upper {
-                Self::sample_neighbors(
-                    &self.graph, v, fanout, &mut self.rng, &mut self.idx_scratch, &mut scratch,
-                );
-                let mut nbrs: Vec<(u32, f32)> = Vec::with_capacity(scratch.len());
-                for &u in &scratch {
+            let blk = &mut out.layers[l];
+            let n_upper = level_upper.len();
+            debug_assert!(n_upper <= blk.self_idx.len());
+            // set n_real before writing any row: reset()'s dirty-region
+            // bookkeeping then covers even a partially-written slot
+            blk.n_real = n_upper;
+            let mut lb = LevelBuilder::seed(intern, level_lower, level_upper, cap_lower);
+            let (mut edges_l, mut isolated_l) = (0usize, 0usize);
+            for i in 0..n_upper {
+                let v = level_upper[i];
+                blk.self_idx[i] = i as i32; // ordering invariant
+                Self::sample_neighbors(graph, v, fanout, rng, idx_scratch, nbr_scratch);
+                let row = i * fanout;
+                let mut s = 0usize;
+                for &u in nbr_scratch.iter() {
+                    if s >= fanout {
+                        break;
+                    }
                     if let Some(p) = lb.intern(u) {
-                        nbrs.push((p, 0.0));
+                        blk.idx[row + s] = p as i32;
+                        s += 1;
                     }
                 }
-                let s = nbrs.len();
                 if s > 0 {
-                    let w = 1.0 / s as f32; // mean aggregator
-                    for e in &mut nbrs {
-                        e.1 = w;
-                    }
+                    blk.w[row..row + s].fill(1.0 / s as f32); // mean aggregator
                 } else {
-                    stats.isolated_nodes += 1;
+                    isolated_l += 1;
                 }
-                stats.edges += s;
-                edges.push(nbrs);
+                edges_l += s;
             }
-            stats.truncated_neighbors += lb.truncated;
-            let (blk, _isolated) = build_layer_block(&edges, shapes.level_sizes[l + 1], fanout);
-            layers_rev.push(blk);
-            upper = lb.nodes;
+            out.stats.edges += edges_l;
+            out.stats.isolated_nodes += isolated_l;
+            out.stats.truncated_neighbors += lb.truncated;
+            std::mem::swap(level_upper, level_lower);
         }
-        layers_rev.reverse();
 
-        let (lab, mask) = pad_labels(targets, labels, shapes.batch_size());
-        let input_cached = vec![false; upper.len()];
-        Ok(MiniBatch {
-            input_nodes: upper,
-            input_cached,
-            layers: layers_rev,
-            labels: lab,
-            mask,
-            targets: targets.to_vec(),
-            stats,
-        })
+        out.input_nodes.extend_from_slice(level_upper);
+        out.input_cached.resize(level_upper.len(), false);
+        out.targets.extend_from_slice(targets);
+        pad_labels_into(targets, labels, &mut out.labels, &mut out.mask);
+        Ok(())
     }
 }
 
@@ -127,8 +161,8 @@ impl Sampler for NeighborSampler {
 mod tests {
     use super::super::testutil::*;
     use super::*;
-    use crate::util::proptest::check;
     use crate::prop_assert;
+    use crate::util::proptest::check;
 
     fn setup(batch: usize) -> (crate::features::Dataset, BlockShapes) {
         (tiny_dataset(1), tiny_shapes(batch))
@@ -198,17 +232,47 @@ mod tests {
     }
 
     #[test]
+    fn recycled_slot_matches_fresh_slot_batches() {
+        // the buffer-recycling invariant: sampling into one recycled slot
+        // produces byte-identical batches to fresh allocations
+        let (ds, shapes) = setup(16);
+        let g = Arc::new(ds.graph.clone());
+        let mut fresh = NeighborSampler::new(g.clone(), shapes.clone(), 77);
+        let mut recycled = NeighborSampler::new(g, shapes.clone(), 77);
+        let mut slot = MiniBatch::default();
+        for step in 0..4 {
+            let chunk = &ds.train[step * 16..(step + 1) * 16];
+            let a = fresh.sample_batch(chunk, &ds.labels).unwrap();
+            recycled.sample_batch_into(chunk, &ds.labels, &mut slot).unwrap();
+            validate_batch(&slot, &shapes).unwrap();
+            assert_eq!(a.input_nodes, slot.input_nodes, "step {step}");
+            assert_eq!(a.targets, slot.targets);
+            assert_eq!(a.labels, slot.labels);
+            assert_eq!(a.mask, slot.mask);
+            for (x, y) in a.layers.iter().zip(&slot.layers) {
+                assert_eq!(x.n_real, y.n_real);
+                assert_eq!(x.self_idx, y.self_idx);
+                assert_eq!(x.idx, y.idx);
+                assert_eq!(x.w, y.w);
+            }
+        }
+    }
+
+    #[test]
     fn prop_every_batch_validates() {
         let (ds, _) = setup(32);
         let g = Arc::new(ds.graph.clone());
+        // one recycled slot shared across all cases — shapes differ per
+        // case, so this also exercises ensure_shapes reallocation
+        let slot = std::cell::RefCell::new(MiniBatch::default());
         check(15, |gen| {
             let batch = gen.usize(1..48);
             let shapes = tiny_shapes(batch);
             let seed = gen.rng.next_u64();
             let mut s = NeighborSampler::new(g.clone(), shapes.clone(), seed);
             let n_t = gen.usize(1..batch + 1).min(ds.train.len());
-            let mb = s
-                .sample_batch(&ds.train[..n_t], &ds.labels)
+            let mut mb = slot.borrow_mut();
+            s.sample_batch_into(&ds.train[..n_t], &ds.labels, &mut mb)
                 .map_err(|e| e.to_string())?;
             validate_batch(&mb, &shapes)?;
             prop_assert!(mb.stats.truncated_neighbors == 0 || mb.num_input_nodes() == shapes.level_sizes[0]);

@@ -1022,6 +1022,30 @@ mod tests {
     }
 
     #[test]
+    fn all_methods_validate_on_one_recycled_arena_slot() {
+        // every method must keep the block invariants when writing into
+        // the same recycled BatchBuffers slot batch after batch
+        let ds = tiny_dataset(6);
+        let shapes = tiny_shapes(16);
+        let r = reg();
+        for text in ["ns", "ladies:s-layer=64", "lazygcn", "gns:cache-fraction=0.02"] {
+            let spec = r.parse(text).unwrap();
+            let ctx = BuildContext::new(&ds, shapes.clone(), 9);
+            let mut s = r.sampler(&spec, &ctx, 0).unwrap();
+            s.begin_epoch(0);
+            let mut slot = crate::sampling::MiniBatch::default();
+            for step in 0..4 {
+                let chunk = &ds.train[step * 16..(step + 1) * 16];
+                s.sample_batch_into(chunk, &ds.labels, &mut slot)
+                    .unwrap_or_else(|e| panic!("{text} step {step}: {e}"));
+                validate_batch(&slot, &shapes)
+                    .unwrap_or_else(|e| panic!("{text} step {step}: {e}"));
+                assert_eq!(slot.targets, chunk, "{text} step {step}");
+            }
+        }
+    }
+
+    #[test]
     fn gns_auto_policy_switches_on_small_train_split() {
         let ds = tiny_dataset(5);
         let shapes = tiny_shapes(8);

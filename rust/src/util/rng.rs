@@ -97,7 +97,13 @@ impl Pcg {
 
     /// Allocation-free variant of `sample_distinct` for hot paths: clears
     /// and fills `out`. For small k (neighbor fan-outs ≤ 32) uses rejection
-    /// with a linear duplicate scan — no hashing, no allocation.
+    /// with a linear duplicate scan — no hashing, no allocation. Dense
+    /// draws (k within 4× of n) run a partial Fisher-Yates *inside* `out`,
+    /// so once the buffer's capacity has grown no path but the rare
+    /// k>32-sparse Floyd fallback allocates. The dense branch consumes the
+    /// identical draw sequence as `sample_distinct`; the small-k rejection
+    /// branch is this function's own scheme, so switching a call site from
+    /// `sample_distinct` to this changes its seeded stream.
     pub fn sample_distinct_into(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
         out.clear();
         debug_assert!(k <= n);
@@ -112,6 +118,17 @@ impl Pcg {
                     out.push(v);
                 }
             }
+            return;
+        }
+        if k * 4 >= n {
+            // partial Fisher-Yates in the reused buffer (same draws as
+            // sample_distinct's dense branch, minus its fresh Vec)
+            out.extend(0..n);
+            for i in 0..k {
+                let j = i + self.gen_range(n - i);
+                out.swap(i, j);
+            }
+            out.truncate(k);
             return;
         }
         out.extend(self.sample_distinct(n, k));
@@ -341,12 +358,35 @@ mod tests {
     fn sample_distinct_into_matches_contract() {
         let mut rng = Pcg::new(44);
         let mut buf = Vec::new();
-        for &(n, k) in &[(100usize, 5usize), (16, 15), (8, 8), (1000, 64)] {
+        for &(n, k) in &[
+            (100usize, 5usize),
+            (16, 15),
+            (8, 8),
+            (1000, 64),
+            (5, 3),   // small dense: in-buffer partial shuffle
+            (120, 40), // k > 32 dense
+            (10_000, 40), // k > 32 sparse: Floyd fallback
+        ] {
             rng.sample_distinct_into(n, k, &mut buf);
             assert_eq!(buf.len(), k);
             let set: std::collections::HashSet<_> = buf.iter().collect();
             assert_eq!(set.len(), k);
             assert!(buf.iter().all(|&v| v < n));
+        }
+    }
+
+    #[test]
+    fn sample_distinct_into_dense_path_matches_sample_distinct() {
+        // the in-buffer partial shuffle must consume the identical draw
+        // sequence as sample_distinct's dense branch
+        for &(n, k) in &[(10usize, 9usize), (120, 40), (7, 4)] {
+            let mut a = Pcg::new(4242);
+            let mut b = Pcg::new(4242);
+            let direct = a.sample_distinct(n, k);
+            let mut buf = Vec::new();
+            b.sample_distinct_into(n, k, &mut buf);
+            assert_eq!(direct, buf, "n={n} k={k}");
+            assert_eq!(a.next_u64(), b.next_u64(), "rng streams diverged");
         }
     }
 

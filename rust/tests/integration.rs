@@ -162,7 +162,7 @@ fn random_walk_cache_policy_integrates_with_sampler() {
     // all cached nodes reachable per walk probs (the policy derives its
     // fanouts from the block shapes: [4, 5])
     let probs = walk_probs(&ds.graph, &ds.train, &[4, 5]);
-    for v in gns.cache_nodes().unwrap() {
+    for &v in gns.cache_nodes().unwrap().iter() {
         assert!(probs[v as usize] > 0.0);
     }
 }
