@@ -15,14 +15,17 @@ check:
 	$(CARGO) test -q
 	$(CARGO) fmt --check
 	$(CARGO) bench --bench micro_hotpath -- --scale 0.1 --smoke
+	$(CARGO) bench --bench tiering_policies -- --scale 0.1 --smoke
 
 test:
 	$(CARGO) test -q
 
-# Hot-path perf numbers: writes BENCH_hotpath.json at the repo root so the
-# per-PR perf trajectory is tracked (see docs/PERF.md).
+# Hot-path perf numbers: writes BENCH_hotpath.json and BENCH_tiering.json
+# at the repo root so the per-PR perf trajectory is tracked (docs/PERF.md,
+# docs/TIERING.md). Both are gitignored.
 bench:
 	$(CARGO) bench --bench micro_hotpath -- --scale 0.5 --json BENCH_hotpath.json
+	$(CARGO) bench --bench tiering_policies -- --scale 0.5 --json BENCH_tiering.json
 
 fmt:
 	$(CARGO) fmt

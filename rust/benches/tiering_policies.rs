@@ -1,0 +1,159 @@
+//! Tier-policy comparison bench: drive the same sampling workload through
+//! each cache policy (`none`, `gns`, `degree`, `presample`) and report the
+//! per-batch serve cost plus the transfer ledger (hit rate, PCIe bytes,
+//! bytes saved by cache hits and by delta uploads).
+//!
+//! This is the policy × sampler experiment grid the tiering refactor
+//! opens: static tiers (Data Tiering) vs the sampler-driven GNS cache on
+//! identical batches. `--json <path>` emits machine-readable results
+//! (`make bench` writes BENCH_tiering.json); `--smoke` shrinks the run so
+//! `make check` keeps this binary from rotting.
+
+use gns::device::{DeviceMemory, TransferModel, TransferStats};
+use gns::features::build_dataset;
+use gns::sampling::spec::{cache_policy_spec, BuildContext, MethodRegistry};
+use gns::sampling::{BlockShapes, MiniBatch};
+use gns::tiering::{build_policy, TierBuild, TieringEngine, PRESAMPLE_WORKER, WARMUP_BATCHES};
+use gns::util::cli::Args;
+use gns::util::json::{self, Json};
+use std::time::Instant;
+
+/// One (method, tier policy) cell of the grid.
+const CONFIGS: &[(&str, &str)] = &[
+    ("ns:cache=none", "baseline: every input row crosses PCIe"),
+    ("ns:cache=degree", "static top-degree tier under uniform NS"),
+    ("ns:cache=presample", "presampled-frequency tier under uniform NS"),
+    ("gns:cache-fraction=0.01,cache=gns", "the paper's sampler-driven cache"),
+    ("gns:cache-fraction=0.01,cache=degree", "static tier under GNS sampling"),
+];
+
+fn main() {
+    let args = Args::parse_env();
+    if let Err(e) = args.check_known(&["scale", "epochs", "batches", "json", "smoke"]) {
+        eprintln!("tiering_policies: {e}");
+        std::process::exit(2);
+    }
+    let scale = args.f64_or("scale", 0.5);
+    let smoke = args.bool("smoke");
+    let epochs = if smoke { 2 } else { args.usize_or("epochs", 3) };
+    let ds = build_dataset("products-s", scale, 1);
+    println!("workload: products-s x{scale} — {}", ds.graph.stats());
+    let batch = 256usize;
+    let shapes = BlockShapes::new(vec![20000, 12000, 2048, batch], vec![5, 10, 15]);
+    let max_batches = ds.train.len() / batch;
+    assert!(
+        max_batches >= 1,
+        "train split too small for one {batch}-target batch — raise --scale"
+    );
+    let batches_per_epoch = if smoke {
+        2.min(max_batches.max(1))
+    } else {
+        args.usize_or("batches", 30).min(max_batches.max(1))
+    };
+    let reg = MethodRegistry::global();
+    let model = TransferModel::default();
+    let row_bytes = ds.features.row_bytes() as u64;
+    let dim = ds.features.dim();
+    let mut x0 = vec![0f32; shapes.level_sizes[0] * dim];
+
+    println!(
+        "{:<42} {:>12} {:>7} {:>10} {:>10} {:>10}",
+        "method/cache", "ns/batch", "hit%", "h2d MB", "saved MB", "Δsaved MB"
+    );
+    let mut entries: Vec<Json> = Vec::new();
+    for &(spec_text, what) in CONFIGS {
+        let spec = reg.parse(spec_text).unwrap();
+        let ctx = BuildContext::new(&ds, shapes.clone(), 7);
+        let factory = reg.factory(&spec, &ctx).unwrap();
+        let policy = build_policy(
+            &cache_policy_spec(&spec).unwrap(),
+            &TierBuild {
+                graph: &ds.graph,
+                train: &ds.train,
+                labels: &ds.labels,
+                chunk_size: batch,
+                warmup_batches: if smoke { 2 } else { WARMUP_BATCHES },
+            },
+            || factory(PRESAMPLE_WORKER),
+        )
+        .unwrap();
+        let mut leader = factory(0);
+        let mut engine = TieringEngine::new(policy, ds.graph.num_nodes(), row_bytes);
+        let mut mem = DeviceMemory::t4();
+        let mut stats = TransferStats::default();
+        let mut slot = MiniBatch::default();
+        let mut served = 0usize;
+        let t0 = Instant::now();
+        for epoch in 0..epochs {
+            leader.begin_epoch(epoch);
+            engine
+                .begin_epoch(epoch, leader.as_ref(), &mut mem, &model, &mut stats)
+                .unwrap();
+            for b in 0..batches_per_epoch {
+                let chunk = &ds.train[b * batch..(b + 1) * batch];
+                leader
+                    .sample_batch_into(chunk, &ds.labels, &mut slot)
+                    .unwrap();
+                // the serve path under test: one partition feeds the host
+                // gather and the transfer accounting
+                engine.plan_batch(&slot.input_nodes);
+                let n = slot.input_nodes.len() * dim;
+                ds.features.slice_runs_into(
+                    &slot.input_nodes,
+                    engine.last_plan().runs(),
+                    &mut x0[..n],
+                );
+                engine.serve_planned(&model, &mut stats);
+                served += 1;
+            }
+        }
+        let ns_per_batch = t0.elapsed().as_secs_f64() * 1e9 / served.max(1) as f64;
+        let (hits, misses) = engine.hits_misses();
+        let hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+        let mb = |b: u64| b as f64 / (1 << 20) as f64;
+        println!(
+            "{:<42} {:>12.0} {:>6.1}% {:>10.1} {:>10.1} {:>10.1}",
+            spec_text,
+            ns_per_batch,
+            100.0 * hit_rate,
+            mb(stats.h2d_bytes),
+            mb(stats.bytes_saved_by_cache),
+            mb(stats.bytes_saved_by_delta),
+        );
+        entries.push(json::obj(vec![
+            ("spec", Json::Str(spec_text.to_string())),
+            ("what", Json::Str(what.to_string())),
+            ("ns_per_batch", Json::Num(ns_per_batch)),
+            ("hit_rate", Json::Num(hit_rate)),
+            ("h2d_bytes", Json::Num(stats.h2d_bytes as f64)),
+            ("d2d_bytes", Json::Num(stats.d2d_bytes as f64)),
+            (
+                "bytes_saved_by_cache",
+                Json::Num(stats.bytes_saved_by_cache as f64),
+            ),
+            (
+                "bytes_saved_by_delta",
+                Json::Num(stats.bytes_saved_by_delta as f64),
+            ),
+            (
+                "resident_rows",
+                Json::Num(engine.cache().resident_rows() as f64),
+            ),
+        ]));
+        engine.release(&mut mem);
+    }
+
+    if let Some(path) = args.get("json") {
+        let doc = json::obj(vec![
+            ("bench", Json::Str("tiering_policies".to_string())),
+            ("workload", Json::Str(format!("products-s x{scale}"))),
+            ("smoke", Json::Bool(smoke)),
+            ("epochs", Json::Num(epochs as f64)),
+            ("batches_per_epoch", Json::Num(batches_per_epoch as f64)),
+            ("configs", json::arr(entries)),
+        ]);
+        std::fs::write(path, doc.to_string_pretty())
+            .unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
+    }
+}

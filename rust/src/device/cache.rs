@@ -1,37 +1,70 @@
-//! Device-resident feature cache: the GPU half of the GNS cache (§3.1).
+//! Device-resident feature cache: the GPU half of the feature-tiering
+//! subsystem (paper §3.1; policies live in `crate::tiering`).
 //!
-//! When the sampler publishes a new cache generation, the trainer uploads
-//! the cached rows once (one big PCIe transfer, amortized over the period's
-//! mini-batches). Per mini-batch, input-layer rows that hit the cache are
-//! served device-side (fast d2d), and only the misses cross PCIe.
+//! When a tier policy publishes a new cache generation, the cached rows
+//! are uploaded once (amortized over the period's mini-batches) — and
+//! only as a **delta**: rows already resident in the previous generation
+//! are kept device-side (modeled d2d compaction) instead of re-crossing
+//! PCIe. Per mini-batch, input-layer rows that hit the cache are served
+//! device-side (fast d2d), and only the misses cross PCIe.
+//!
+//! Residency is tracked with two dense per-node arrays — a row index and
+//! a generation stamp — so `contains`/`row_of` are single indexed loads
+//! and a refresh never clears O(|V|) state: bumping the generation
+//! invalidates every stale stamp at once (the same trick the sampler-side
+//! `CacheState` and `InternTable` use).
 
 use super::transfer::{TransferModel, TransferStats};
 use super::{DeviceBuffer, DeviceMemory};
 use crate::graph::NodeId;
+use crate::tiering::plan::GatherPlan;
 use anyhow::Result;
-use std::collections::HashMap;
 
 pub struct DeviceFeatureCache {
-    /// generation currently resident (0 = nothing uploaded).
+    /// policy generation currently resident (0 = nothing uploaded) — only
+    /// used for the same-generation no-op check in `upload`.
     generation: u64,
-    /// node → device row for the resident generation.
-    rows: HashMap<NodeId, u32>,
+    /// monotone internal upload counter the stamps are written against.
+    /// Policies may reuse generation numbers across `release` (e.g. two
+    /// static tiers both publishing generation 1); `seq` never repeats, so
+    /// stale stamps can never resurrect as residency.
+    seq: u64,
+    /// node → device row for the upload stamped at the same index.
+    row_of: Vec<u32>,
+    /// node → `seq` of last residency; resident ⇔ stamp == current seq
+    /// (and something is uploaded). Stale entries are invalidated by the
+    /// seq bump, never by an O(|V|) clear.
+    stamp: Vec<u64>,
+    resident: usize,
     row_bytes: u64,
     buf: Option<DeviceBuffer>,
+    /// recycled plan backing `serve_batch` (the convenience entry point);
+    /// the engine keeps its own plan and uses `plan_batch`/`serve_plan`.
+    scratch_plan: GatherPlan,
     /// cumulative hit/miss counts (Table 4 telemetry).
     pub hits: u64,
     pub misses: u64,
+    /// delta-upload telemetry: rows that crossed PCIe on refresh vs rows
+    /// reused from the previous generation.
+    pub delta_uploaded_rows: u64,
+    pub delta_reused_rows: u64,
 }
 
 impl DeviceFeatureCache {
-    pub fn new(row_bytes: u64) -> Self {
+    pub fn new(num_nodes: usize, row_bytes: u64) -> Self {
         DeviceFeatureCache {
             generation: 0,
-            rows: HashMap::new(),
+            seq: 0,
+            row_of: vec![u32::MAX; num_nodes],
+            stamp: vec![0; num_nodes],
+            resident: 0,
             row_bytes,
             buf: None,
+            scratch_plan: GatherPlan::new(),
             hits: 0,
             misses: 0,
+            delta_uploaded_rows: 0,
+            delta_reused_rows: 0,
         }
     }
 
@@ -40,11 +73,33 @@ impl DeviceFeatureCache {
     }
 
     pub fn resident_rows(&self) -> usize {
-        self.rows.len()
+        self.resident
+    }
+
+    pub fn row_bytes(&self) -> u64 {
+        self.row_bytes
+    }
+
+    #[inline]
+    pub fn contains(&self, v: NodeId) -> bool {
+        self.generation != 0 && self.stamp[v as usize] == self.seq
+    }
+
+    /// Device row of `v` in the resident generation, if cached.
+    #[inline]
+    pub fn row_of(&self, v: NodeId) -> Option<u32> {
+        if self.contains(v) {
+            Some(self.row_of[v as usize])
+        } else {
+            None
+        }
     }
 
     /// Upload a new cache generation: frees the previous buffer, allocates
-    /// for `nodes`, accounts one bulk PCIe transfer. Returns modeled time.
+    /// for `nodes` (distinct ids), and accounts the PCIe transfer as a
+    /// **delta** — rows already resident under the previous generation are
+    /// kept on device (modeled d2d) and only fresh rows cross PCIe.
+    /// Returns the modeled upload time.
     pub fn upload(
         &mut self,
         nodes: &[NodeId],
@@ -53,59 +108,116 @@ impl DeviceFeatureCache {
         model: &TransferModel,
         stats: &mut TransferStats,
     ) -> Result<std::time::Duration> {
+        anyhow::ensure!(generation != 0, "cache generation 0 is reserved for 'empty'");
         if generation == self.generation {
             return Ok(std::time::Duration::ZERO);
         }
+        // duplicate ids would double-count `fresh` and overstate residency;
+        // policies must publish distinct node sets (TierSnapshot contract)
+        #[cfg(debug_assertions)]
+        {
+            let mut seen = std::collections::HashSet::with_capacity(nodes.len());
+            debug_assert!(
+                nodes.iter().all(|v| seen.insert(*v)),
+                "upload nodes must be distinct"
+            );
+        }
+        // rows stamped with the previous upload's seq were resident until
+        // this refresh and move d2d; after a `release` (generation == 0)
+        // nothing counts as resident even if stamps survived
+        let prev_seq = if self.generation != 0 { self.seq } else { 0 };
         if let Some(buf) = self.buf.take() {
             mem.free(buf);
         }
+        // from here the old rows are gone from the device: if the alloc
+        // below fails, the cache must read as empty, not as still holding
+        // the previous generation against a freed buffer
+        self.generation = 0;
+        self.resident = 0;
         let bytes = nodes.len() as u64 * self.row_bytes;
         let buf = mem.alloc(bytes)?;
         self.buf = Some(buf);
-        self.rows = nodes
-            .iter()
-            .enumerate()
-            .map(|(i, &v)| (v, i as u32))
-            .collect();
+        self.seq += 1;
+        let new_seq = self.seq;
+        let mut fresh = 0u64;
+        for (i, &v) in nodes.iter().enumerate() {
+            let vi = v as usize;
+            if prev_seq == 0 || self.stamp[vi] != prev_seq {
+                fresh += 1;
+            }
+            self.stamp[vi] = new_seq;
+            self.row_of[vi] = i as u32;
+        }
+        let reused = nodes.len() as u64 - fresh;
         self.generation = generation;
-        Ok(stats.h2d(model, bytes))
+        self.resident = nodes.len();
+        self.delta_uploaded_rows += fresh;
+        self.delta_reused_rows += reused;
+        // a refresh that moves nothing over PCIe must not record a phantom
+        // transfer (h2d always charges the per-transfer latency)
+        let mut t = std::time::Duration::ZERO;
+        if fresh > 0 {
+            t += stats.h2d(model, fresh * self.row_bytes);
+        }
+        t += stats.d2d(model, reused * self.row_bytes);
+        stats.record_delta_savings(reused * self.row_bytes);
+        Ok(t)
     }
 
-    /// Serve one mini-batch's input rows: cached rows are d2d copies, the
+    /// Partition one mini-batch's input rows into hit/miss runs — the one
+    /// residency probe per batch; slicing, transfer accounting, and
+    /// compute all read the resulting plan.
+    pub fn plan_batch(&self, input_nodes: &[NodeId], plan: &mut GatherPlan) {
+        plan.build(input_nodes, |v| self.contains(v));
+    }
+
+    /// Account one planned mini-batch: cached rows are d2d copies, the
     /// rest cross PCIe. Returns (modeled copy time, missed node count).
+    pub fn serve_plan(
+        &mut self,
+        plan: &GatherPlan,
+        model: &TransferModel,
+        stats: &mut TransferStats,
+    ) -> (std::time::Duration, usize) {
+        self.hits += plan.hit_rows() as u64;
+        self.misses += plan.miss_rows() as u64;
+        // fully-resident batches move nothing over PCIe — don't record a
+        // phantom transfer (h2d charges per-transfer latency even at 0 B)
+        let mut t = std::time::Duration::ZERO;
+        if plan.miss_rows() > 0 {
+            t += stats.h2d(model, plan.miss_bytes(self.row_bytes));
+        }
+        t += stats.d2d(model, plan.hit_bytes(self.row_bytes));
+        stats.record_cache_savings(plan.hit_bytes(self.row_bytes));
+        (t, plan.miss_rows())
+    }
+
+    /// Plan + serve in one call (convenience for callers that don't keep
+    /// a plan around) — the same `plan_batch` + `serve_plan` path the
+    /// engine drives, against a recycled internal plan. Residency is a
+    /// dense stamp load per node — no hashmap probe anywhere.
     pub fn serve_batch(
         &mut self,
         input_nodes: &[NodeId],
         model: &TransferModel,
         stats: &mut TransferStats,
     ) -> (std::time::Duration, usize) {
-        let mut hit = 0u64;
-        let mut miss = 0u64;
-        for v in input_nodes {
-            if self.rows.contains_key(v) {
-                hit += 1;
-            } else {
-                miss += 1;
-            }
-        }
-        self.hits += hit;
-        self.misses += miss;
-        let mut t = stats.h2d(model, miss * self.row_bytes);
-        t += stats.d2d(model, hit * self.row_bytes);
-        stats.record_cache_savings(hit * self.row_bytes);
-        (t, miss as usize)
-    }
-
-    pub fn contains(&self, v: NodeId) -> bool {
-        self.rows.contains_key(&v)
+        let mut plan = std::mem::take(&mut self.scratch_plan);
+        self.plan_batch(input_nodes, &mut plan);
+        let out = self.serve_plan(&plan, model, stats);
+        self.scratch_plan = plan;
+        out
     }
 
     pub fn release(&mut self, mem: &mut DeviceMemory) {
         if let Some(buf) = self.buf.take() {
             mem.free(buf);
         }
-        self.rows.clear();
+        // generation 0 invalidates residency without touching the arrays;
+        // the next upload bumps `seq` past every surviving stamp, so a
+        // policy that reuses generation numbers cannot resurrect old rows
         self.generation = 0;
+        self.resident = 0;
     }
 }
 
@@ -115,7 +227,7 @@ mod tests {
 
     fn setup() -> (DeviceFeatureCache, DeviceMemory, TransferModel, TransferStats) {
         (
-            DeviceFeatureCache::new(400),
+            DeviceFeatureCache::new(64, 400),
             DeviceMemory::new(1 << 20),
             TransferModel::default(),
             TransferStats::default(),
@@ -133,6 +245,24 @@ mod tests {
         assert_eq!(c.hits, 2);
         assert_eq!(c.misses, 2);
         assert_eq!(stats.bytes_saved_by_cache, 800);
+    }
+
+    #[test]
+    fn serve_plan_matches_serve_batch() {
+        let (mut c, mut mem, model, mut stats) = setup();
+        c.upload(&[4, 5, 6, 7], 1, &mut mem, &model, &mut stats).unwrap();
+        let batch = [4u32, 9, 5, 6, 11, 7];
+        let mut a = TransferStats::default();
+        let (ta, ma) = c.serve_batch(&batch, &model, &mut a);
+        let mut plan = GatherPlan::new();
+        c.plan_batch(&batch, &mut plan);
+        let mut b = TransferStats::default();
+        let (tb, mb) = c.serve_plan(&plan, &model, &mut b);
+        assert_eq!(ta, tb);
+        assert_eq!(ma, mb);
+        assert_eq!(a.h2d_bytes, b.h2d_bytes);
+        assert_eq!(a.d2d_bytes, b.d2d_bytes);
+        assert_eq!(a.bytes_saved_by_cache, b.bytes_saved_by_cache);
     }
 
     #[test]
@@ -155,17 +285,109 @@ mod tests {
         assert_eq!(mem.used(), 1200);
         assert!(!c.contains(1));
         assert!(c.contains(4));
+        assert_eq!(c.row_of(4), Some(1));
+        assert_eq!(c.row_of(1), None);
         c.release(&mut mem);
         assert_eq!(mem.used(), 0);
+        assert!(!c.contains(4));
+    }
+
+    #[test]
+    fn delta_upload_pays_pcie_only_for_fresh_rows() {
+        let (mut c, mut mem, model, mut stats) = setup();
+        c.upload(&[1, 2, 3], 1, &mut mem, &model, &mut stats).unwrap();
+        assert_eq!(stats.h2d_bytes, 1200);
+        assert_eq!(c.delta_uploaded_rows, 3);
+        // generation 2 overlaps on {2, 3}: only {4, 5} cross PCIe
+        c.upload(&[2, 3, 4, 5], 2, &mut mem, &model, &mut stats).unwrap();
+        assert_eq!(stats.h2d_bytes, 1200 + 800);
+        assert_eq!(stats.d2d_bytes, 800);
+        assert_eq!(stats.bytes_saved_by_delta, 800);
+        assert_eq!(c.delta_uploaded_rows, 5);
+        assert_eq!(c.delta_reused_rows, 2);
+        assert!(!c.contains(1));
+        for v in [2u32, 3, 4, 5] {
+            assert!(c.contains(v));
+        }
+        // row indices follow the *new* layout
+        assert_eq!(c.row_of(2), Some(0));
+        assert_eq!(c.row_of(5), Some(3));
+    }
+
+    #[test]
+    fn release_then_same_generation_upload_does_not_resurrect_old_rows() {
+        // two static policies both publish generation 1; swapping between
+        // them (release + upload) must not leave the first tier's rows
+        // reading as resident via surviving stamps
+        let (mut c, mut mem, model, mut stats) = setup();
+        c.upload(&[1, 2, 3], 1, &mut mem, &model, &mut stats).unwrap();
+        c.release(&mut mem);
+        assert!(!c.contains(1));
+        c.upload(&[4, 5], 1, &mut mem, &model, &mut stats).unwrap();
+        for v in [1u32, 2, 3] {
+            assert!(!c.contains(v), "stale stamp resurrected node {v}");
+            assert_eq!(c.row_of(v), None);
+        }
+        assert!(c.contains(4) && c.contains(5));
+        // and the post-release upload is all-fresh (no phantom delta reuse)
+        assert_eq!(c.delta_reused_rows, 0);
+        assert_eq!(stats.bytes_saved_by_delta, 0);
+    }
+
+    #[test]
+    fn generation_zero_upload_is_rejected() {
+        let (mut c, mut mem, model, mut stats) = setup();
+        assert!(c.upload(&[1], 0, &mut mem, &model, &mut stats).is_err());
     }
 
     #[test]
     fn oversized_cache_ooms() {
-        let mut c = DeviceFeatureCache::new(1 << 20);
+        let mut c = DeviceFeatureCache::new(8, 1 << 20);
         let mut mem = DeviceMemory::new(1 << 20);
         let model = TransferModel::default();
         let mut stats = TransferStats::default();
         let nodes: Vec<NodeId> = (0..4).collect();
         assert!(c.upload(&nodes, 1, &mut mem, &model, &mut stats).is_err());
+    }
+
+    #[test]
+    fn failed_refresh_leaves_cache_empty_not_stale() {
+        // refresh frees the old buffer before the fallible alloc; on OOM
+        // the previous generation's rows must not read as resident
+        let mut c = DeviceFeatureCache::new(64, 400);
+        let mut mem = DeviceMemory::new(1600);
+        let model = TransferModel::default();
+        let mut stats = TransferStats::default();
+        c.upload(&[1, 2], 1, &mut mem, &model, &mut stats).unwrap();
+        assert!(c.contains(1));
+        // 5 rows * 400 B > capacity → alloc fails after the free
+        let big: Vec<NodeId> = (10..15).collect();
+        assert!(c.upload(&big, 2, &mut mem, &model, &mut stats).is_err());
+        assert_eq!(c.generation(), 0);
+        assert_eq!(c.resident_rows(), 0);
+        assert!(!c.contains(1), "freed rows must not read as resident");
+        assert_eq!(c.row_of(1), None);
+        let (_t, missed) = c.serve_batch(&[1, 2], &model, &mut stats);
+        assert_eq!(missed, 2, "no phantom d2d hits after a failed refresh");
+        // recovery: a later fitting upload works and is all-fresh
+        c.upload(&[3], 3, &mut mem, &model, &mut stats).unwrap();
+        assert!(c.contains(3));
+        assert_eq!(c.delta_reused_rows, 0);
+    }
+
+    #[test]
+    fn fully_overlapping_refresh_records_no_phantom_pcie_transfer() {
+        let (mut c, mut mem, model, mut stats) = setup();
+        c.upload(&[1, 2], 1, &mut mem, &model, &mut stats).unwrap();
+        let transfers_before = stats.h2d_transfers;
+        let h2d_before = stats.h2d_bytes;
+        c.upload(&[1, 2], 2, &mut mem, &model, &mut stats).unwrap();
+        assert_eq!(stats.h2d_bytes, h2d_before);
+        assert_eq!(
+            stats.h2d_transfers, transfers_before,
+            "0-byte refresh must not count a PCIe transfer"
+        );
+        assert_eq!(stats.bytes_saved_by_delta, 800);
+        assert!(c.contains(1) && c.contains(2));
     }
 }

@@ -58,12 +58,16 @@ impl DeviceMemory {
     }
 
     pub fn alloc(&mut self, bytes: u64) -> Result<DeviceBuffer> {
-        if self.used + bytes > self.capacity {
+        // `used + bytes` can wrap u64 on absurd requests — saturate to a
+        // guaranteed-OOM value instead of wrapping past the capacity check
+        let needed = self.used.checked_add(bytes).unwrap_or(u64::MAX);
+        if needed > self.capacity {
             bail!(
-                "device OOM: requested {} with {} used of {}",
+                "device OOM: requested {} with {} used of {} (peak {})",
                 crate::util::fmt_bytes(bytes),
                 crate::util::fmt_bytes(self.used),
-                crate::util::fmt_bytes(self.capacity)
+                crate::util::fmt_bytes(self.capacity),
+                crate::util::fmt_bytes(self.peak)
             );
         }
         let id = self.next_id;
@@ -130,5 +134,17 @@ mod tests {
         let mut m = DeviceMemory::new(10);
         let err = m.alloc(100).unwrap_err().to_string();
         assert!(err.contains("OOM"));
+        assert!(err.contains("peak"), "{err}");
+    }
+
+    #[test]
+    fn absurd_request_does_not_wrap_the_ledger() {
+        let mut m = DeviceMemory::new(1000);
+        let _a = m.alloc(400).unwrap();
+        // used + bytes would wrap u64; must OOM, not alloc
+        assert!(m.alloc(u64::MAX - 100).is_err());
+        assert_eq!(m.used(), 400);
+        let _b = m.alloc(600).unwrap(); // ledger still consistent
+        assert_eq!(m.used(), 1000);
     }
 }

@@ -50,6 +50,10 @@ pub struct TransferStats {
     /// bytes that would have crossed PCIe without the GNS cache (saved by
     /// cache hits) — the headline "reduced data copy" quantity.
     pub bytes_saved_by_cache: u64,
+    /// bytes that skipped PCIe on cache *refresh* because the row was
+    /// already device-resident in the previous generation (delta upload;
+    /// see tiering::TieringEngine / DeviceFeatureCache::upload).
+    pub bytes_saved_by_delta: u64,
 }
 
 impl TransferStats {
@@ -74,6 +78,10 @@ impl TransferStats {
         self.bytes_saved_by_cache += bytes;
     }
 
+    pub fn record_delta_savings(&mut self, bytes: u64) {
+        self.bytes_saved_by_delta += bytes;
+    }
+
     pub fn merge(&mut self, other: &TransferStats) {
         self.h2d_bytes += other.h2d_bytes;
         self.h2d_transfers += other.h2d_transfers;
@@ -81,6 +89,7 @@ impl TransferStats {
         self.modeled_h2d += other.modeled_h2d;
         self.modeled_d2d += other.modeled_d2d;
         self.bytes_saved_by_cache += other.bytes_saved_by_cache;
+        self.bytes_saved_by_delta += other.bytes_saved_by_delta;
     }
 }
 
@@ -129,9 +138,11 @@ mod tests {
         a.h2d(&m, 10);
         b.h2d(&m, 20);
         b.d2d(&m, 5);
+        b.record_delta_savings(7);
         a.merge(&b);
         assert_eq!(a.h2d_bytes, 30);
         assert_eq!(a.d2d_bytes, 5);
         assert_eq!(a.h2d_transfers, 2);
+        assert_eq!(a.bytes_saved_by_delta, 7);
     }
 }

@@ -4,6 +4,13 @@
 //! Expected shape: at 1% cache, accuracy is flat across P; shrinking the
 //! cache hurts, and hurts *more* at long update periods (a fresh small
 //! sample beats a stale one — the paper's closing observation).
+//!
+//! A second block ablates the device *tier policy* at a fixed 1% budget
+//! (`cache=gns|degree|presample`, see crate::tiering): sampling — and so
+//! F1 — is identical across rows; what moves is the transfer ledger
+//! (hit rate, PCIe bytes, bytes saved), the Data Tiering claim that
+//! static degree/presampled tiers capture most of the cache's traffic
+//! reduction.
 
 use super::harness::{run_method, ExpOptions};
 use super::report::{fmt_f1, save};
@@ -13,6 +20,8 @@ use anyhow::Result;
 
 pub const CACHE_FRACTIONS: [f64; 3] = [0.01, 0.001, 0.0001];
 pub const PERIODS: [usize; 4] = [1, 2, 5, 10];
+/// Tier policies ablated at fixed 1% budget (second block).
+pub const TIER_POLICIES: [&str; 3] = ["gns", "degree", "presample"];
 
 pub fn run(opts: &ExpOptions) -> Result<String> {
     // sensitivity needs enough epochs for P=10 to matter; stretch the
@@ -44,9 +53,53 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
         line.push('\n');
         text.push_str(&line);
     }
+
+    // tier-policy ablation: same sampler, different device-resident set —
+    // F1 stays put, the transfer ledger moves
+    text.push_str(&format!(
+        "\nTier policy ablation (budget = 1% |V|, P = 1)\n{:<12} {:>8} {:>8} {:>12} {:>12}\n",
+        "policy", "F1", "hit%", "h2d MB/ep", "saved MB/ep"
+    ));
+    let mut policy_rows: Vec<Json> = Vec::new();
+    for &policy in &TIER_POLICIES {
+        let spec = MethodSpec::new("gns")
+            .with("cache-fraction", 0.01)
+            .with("update-period", 1usize)
+            .with("cache", policy);
+        let r = run_method("products-s", &spec, &o)?;
+        let epochs = r.reports.len().max(1) as f64;
+        let h2d_mb = r.reports.iter().map(|e| e.transfer.h2d_bytes).sum::<u64>() as f64
+            / epochs
+            / (1 << 20) as f64;
+        let saved_mb = r
+            .reports
+            .iter()
+            .map(|e| e.transfer.bytes_saved_by_cache)
+            .sum::<u64>() as f64
+            / epochs
+            / (1 << 20) as f64;
+        let hit_rate = r.cache_hit_rate();
+        text.push_str(&format!(
+            "{:<12} {:>8} {:>7.1}% {:>12.1} {:>12.1}\n",
+            policy,
+            fmt_f1(r.final_f1()),
+            100.0 * hit_rate,
+            h2d_mb,
+            saved_mb
+        ));
+        policy_rows.push(obj(vec![
+            ("policy", Json::Str(policy.to_string())),
+            ("f1", num(r.final_f1())),
+            ("hit_rate", num(hit_rate)),
+            ("h2d_mb_per_epoch", num(h2d_mb)),
+            ("saved_mb_per_epoch", num(saved_mb)),
+        ]));
+    }
+
     save(&o.results_dir, "table6", &text, obj(vec![
         ("scale", num(o.scale)),
         ("epochs", num(o.epochs as f64)),
         ("rows", arr(rows)),
+        ("tier_policies", arr(policy_rows)),
     ]))
 }

@@ -69,6 +69,25 @@ impl FeatureStore {
         out
     }
 
+    /// Gather rows for `nodes` segment-by-segment along a [`GatherPlan`]'s
+    /// runs (`out` holds the full block, len == nodes.len() * dim). The
+    /// result is identical to [`FeatureStore::slice_into`] over the whole
+    /// list — the run structure exists so the *same* partition that drives
+    /// transfer accounting also drives the host gather (in a real mixed
+    /// CPU-GPU system only the miss runs would be gathered host-side).
+    pub fn slice_runs_into(
+        &self,
+        nodes: &[NodeId],
+        runs: &[crate::tiering::GatherRun],
+        out: &mut [f32],
+    ) {
+        assert_eq!(out.len(), nodes.len() * self.dim);
+        for run in runs {
+            let (s, e) = (run.start as usize, run.end() as usize);
+            self.slice_into(&nodes[s..e], &mut out[s * self.dim..e * self.dim]);
+        }
+    }
+
     /// Bytes moved when slicing `n` rows.
     pub fn slice_bytes(&self, n: usize) -> u64 {
         (n * self.row_bytes()) as u64
@@ -204,6 +223,22 @@ mod tests {
         let out = fs.slice(&[2, 0]);
         assert_eq!(out, vec![20.0, 21.0, 22.0, 0.0, 1.0, 2.0]);
         assert_eq!(fs.slice_bytes(2), 24);
+    }
+
+    #[test]
+    fn slice_runs_matches_full_slice() {
+        let mut fs = FeatureStore::new(6, 2);
+        for v in 0..6u32 {
+            for d in 0..2 {
+                fs.row_mut(v)[d] = (v * 10 + d as u32) as f32;
+            }
+        }
+        let nodes = [5u32, 0, 3, 3, 1];
+        let mut plan = crate::tiering::GatherPlan::new();
+        plan.build(&nodes, |v| v >= 3); // arbitrary partition
+        let mut by_runs = vec![0.0; nodes.len() * 2];
+        fs.slice_runs_into(&nodes, plan.runs(), &mut by_runs);
+        assert_eq!(by_runs, fs.slice(&nodes));
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub mod runtime;
 pub mod sampling;
 pub mod session;
 pub mod graph;
+pub mod tiering;
 pub mod util;
 
 pub use sampling::spec::{MethodRegistry, MethodSpec};

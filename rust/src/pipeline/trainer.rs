@@ -9,16 +9,21 @@
 //!   4-5. **compute**— AOT train step on PJRT (real time);
 //!   6. **update**   — in-graph Adam; this stage covers output readback.
 //!
-//! The GNS cache lifecycle also lives here: when the sampler publishes a
-//! new cache generation, its feature rows are uploaded once (bulk PCIe
-//! transfer) and pinned in simulated device memory.
+//! The feature-tier lifecycle is delegated to `tiering::TieringEngine`:
+//! at every epoch boundary the engine consults its `CachePolicy` (the
+//! sampler-driven GNS cache by default; static degree/presample tiers via
+//! `Trainer::set_cache_policy`) and delta-uploads the resident rows; per
+//! batch it partitions the input nodes into hit/miss runs once
+//! (`GatherPlan`) and both the host slice and the transfer accounting
+//! read that single partition.
 
 use super::recycle::BufferPool;
 use super::worker::{run_epoch_sampling, EpochPlan};
-use crate::device::{ComputeModel, DeviceFeatureCache, DeviceMemory, TransferModel, TransferStats};
+use crate::device::{ComputeModel, DeviceMemory, TransferModel, TransferStats};
 use crate::features::Dataset;
 use crate::runtime::{micro_f1, Runtime, TrainState};
 use crate::sampling::{MiniBatch, Sampler};
+use crate::tiering::{CachePolicy, SamplerPolicy, TieringEngine};
 use crate::util::rng::Pcg;
 use crate::util::timer::{Stage, StageClock};
 use anyhow::{Context, Result};
@@ -120,7 +125,9 @@ pub struct Trainer {
     pub dataset: Arc<Dataset>,
     pub state: TrainState,
     device_mem: DeviceMemory,
-    feature_cache: DeviceFeatureCache,
+    /// the feature-tiering subsystem: cache policy + device-resident
+    /// feature cache + per-batch gather plan.
+    tiering: TieringEngine,
     x0_scratch: Vec<f32>,
     /// high-water mark of filled rows in x0_scratch (§Perf: zero only the
     /// previously-dirtied tail instead of the whole padded block).
@@ -155,18 +162,35 @@ impl Trainer {
         device_mem
             .alloc(static_bytes)
             .context("device cannot hold model state + batch block")?;
-        let feature_cache =
-            DeviceFeatureCache::new(dataset.features.row_bytes() as u64);
+        // default policy: follow the sampler's own cache (GNS); cache-less
+        // samplers publish generation 0 and the tier stays empty
+        let tiering = TieringEngine::new(
+            Box::new(SamplerPolicy),
+            dataset.features.num_rows(),
+            dataset.features.row_bytes() as u64,
+        );
         Ok(Trainer {
             runtime,
             dataset,
             state,
             device_mem,
-            feature_cache,
+            tiering,
             x0_scratch: vec![0.0; x0_len],
             x0_dirty_elems: 0,
             buffer_pool: Arc::new(BufferPool::new()),
         })
+    }
+
+    /// Install a different cache policy (degree/presample static tiers,
+    /// `none`, …). Any rows resident under the old policy are released.
+    pub fn set_cache_policy(&mut self, policy: Box<dyn CachePolicy>) {
+        self.tiering.replace_policy(policy, &mut self.device_mem);
+    }
+
+    /// The feature-tiering engine (policy name, device cache telemetry,
+    /// last batch's gather plan).
+    pub fn tiering(&self) -> &TieringEngine {
+        &self.tiering
     }
 
     /// Train `opts.epochs` epochs with samplers from `factory`.
@@ -247,7 +271,7 @@ impl Trainer {
         // leader first (it refreshes the shared GNS cache), then the
         // workers re-snapshot the fresh epoch state
         leader.begin_epoch(epoch);
-        self.sync_cache(leader.as_ref(), &opts.transfer, &mut clock, &mut transfer)?;
+        self.sync_cache(epoch, leader.as_ref(), &opts.transfer, &mut clock, &mut transfer)?;
         for s in &mut workers {
             s.begin_epoch(epoch);
         }
@@ -356,24 +380,21 @@ impl Trainer {
         Ok((report, workers))
     }
 
-    /// Upload a new cache generation's features to the device if needed.
+    /// Consult the cache policy and (delta-)upload the epoch's resident
+    /// feature rows to the device if the tier generation changed.
     fn sync_cache(
         &mut self,
+        epoch: usize,
         sampler: &dyn Sampler,
         model: &TransferModel,
         clock: &mut StageClock,
         transfer: &mut TransferStats,
     ) -> Result<()> {
-        let gen = sampler.cache_generation();
-        if gen != 0 && gen != self.feature_cache.generation() {
-            if let Some(nodes) = sampler.cache_nodes() {
-                let t = self
-                    .feature_cache
-                    .upload(&nodes, gen, &mut self.device_mem, model, transfer)
-                    .context("upload GNS cache to device")?;
-                clock.add_modeled(Stage::Copy, t);
-            }
-        }
+        let t = self
+            .tiering
+            .begin_epoch(epoch, sampler, &mut self.device_mem, model, transfer)
+            .context("upload feature tier to device")?;
+        clock.add_modeled(Stage::Copy, t);
         Ok(())
     }
 
@@ -405,6 +426,8 @@ impl Trainer {
     }
 
     /// Host slice (step 2) + modeled transfer (step 3) for the input block.
+    /// One `GatherPlan` partitions the input nodes into hit/miss runs;
+    /// both the host gather and the transfer accounting read it.
     fn assemble_x0(
         &mut self,
         mb: &MiniBatch,
@@ -415,18 +438,19 @@ impl Trainer {
         let dim = self.dataset.features.dim();
         let t0 = Instant::now();
         let n = mb.input_nodes.len();
-        self.dataset
-            .features
-            .slice_into(&mb.input_nodes, &mut self.x0_scratch[..n * dim]);
+        self.tiering.plan_batch(&mb.input_nodes);
+        self.dataset.features.slice_runs_into(
+            &mb.input_nodes,
+            self.tiering.last_plan().runs(),
+            &mut self.x0_scratch[..n * dim],
+        );
         // zero only the tail the previous batch dirtied (§Perf iteration 2)
         let dirty_end = self.x0_dirty_elems.max(n * dim);
         self.x0_scratch[n * dim..dirty_end].fill(0.0);
         self.x0_dirty_elems = n * dim;
         clock.add_measured(Stage::Slice, t0.elapsed());
 
-        let (t_copy, _missed) =
-            self.feature_cache
-                .serve_batch(&mb.input_nodes, &opts.transfer, transfer);
+        let (t_copy, _missed) = self.tiering.serve_planned(&opts.transfer, transfer);
         // block metadata (idx/w/self/labels) also crosses PCIe
         let meta_bytes: u64 = mb
             .layers
@@ -481,6 +505,6 @@ impl Trainer {
     }
 
     pub fn cache_hits_misses(&self) -> (u64, u64) {
-        (self.feature_cache.hits, self.feature_cache.misses)
+        self.tiering.hits_misses()
     }
 }

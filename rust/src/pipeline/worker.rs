@@ -11,6 +11,12 @@
 //! with their chunk index attached, so epoch metrics can be aggregated
 //! deterministically regardless of completion order; the trainer hands
 //! each drained slot back to the pool.
+//!
+//! Workers are deliberately *tier-agnostic*: they assemble batches
+//! without consulting the device feature cache. Residency is resolved
+//! once per drained batch on the trainer side (`tiering::TieringEngine`
+//! builds the `GatherPlan` that feeds slicing and transfer accounting),
+//! so worker threads never contend on tier state.
 
 use super::queue::{bounded, Receiver, Sender};
 use super::recycle::BufferPool;

@@ -13,9 +13,12 @@ use crate::graph::{CsrGraph, NodeId};
 use crate::util::rng::{AliasTable, Pcg};
 use std::sync::Arc;
 
-/// How the cache distribution 𝒫 is computed.
+/// How the cache sampling distribution 𝒫 is computed (renamed from
+/// `CachePolicy`: "policy" now names the device-residency layer in
+/// `crate::tiering`; this enum picks the *distribution* GNS draws its
+/// importance cache from).
 #[derive(Debug, Clone, PartialEq)]
-pub enum CachePolicy {
+pub enum CacheDistribution {
     /// eq. (6): p_i ∝ deg(i). Best when most nodes are training nodes.
     Degree,
     /// eqs. (7)–(9): L-step expected-visit probability from the training
@@ -80,7 +83,7 @@ impl CacheState {
 
 /// Builds and refreshes `CacheState`s.
 pub struct CacheSampler {
-    policy: CachePolicy,
+    policy: CacheDistribution,
     cache_size: usize,
     /// `Arc`-shared with every `CacheState` drawn from it.
     probs: Arc<Vec<f64>>,
@@ -94,7 +97,7 @@ impl CacheSampler {
     pub fn new(
         graph: &CsrGraph,
         train_set: &[NodeId],
-        policy: CachePolicy,
+        policy: CacheDistribution,
         cache_fraction: f64,
         seed: u64,
     ) -> Self {
@@ -102,9 +105,9 @@ impl CacheSampler {
         let cache_size = ((n as f64 * cache_fraction).round() as usize)
             .clamp(1, n);
         let probs = match &policy {
-            CachePolicy::Degree => graph.degree_probs(),
-            CachePolicy::RandomWalk { fanouts } => walk_probs(graph, train_set, fanouts),
-            CachePolicy::Uniform => vec![1.0 / n as f64; n],
+            CacheDistribution::Degree => graph.degree_probs(),
+            CacheDistribution::RandomWalk { fanouts } => walk_probs(graph, train_set, fanouts),
+            CacheDistribution::Uniform => vec![1.0 / n as f64; n],
         };
         // nodes with zero probability can never be sampled; AliasTable
         // needs a positive total, which degree/walk probs guarantee on any
@@ -124,7 +127,7 @@ impl CacheSampler {
         self.cache_size
     }
 
-    pub fn policy(&self) -> &CachePolicy {
+    pub fn policy(&self) -> &CacheDistribution {
         &self.policy
     }
 
@@ -173,7 +176,7 @@ mod tests {
     fn cache_size_fraction() {
         let g = graph();
         let train: Vec<NodeId> = (0..500).collect();
-        let cs = CacheSampler::new(&g, &train, CachePolicy::Degree, 0.01, 1);
+        let cs = CacheSampler::new(&g, &train, CacheDistribution::Degree, 0.01, 1);
         assert_eq!(cs.cache_size(), 50);
     }
 
@@ -181,7 +184,7 @@ mod tests {
     fn sample_produces_distinct_nodes_with_positions() {
         let g = graph();
         let train: Vec<NodeId> = (0..500).collect();
-        let mut cs = CacheSampler::new(&g, &train, CachePolicy::Degree, 0.02, 2);
+        let mut cs = CacheSampler::new(&g, &train, CacheDistribution::Degree, 0.02, 2);
         let c = cs.sample(&g);
         assert_eq!(c.len(), 100);
         let set: std::collections::HashSet<_> = c.nodes.iter().collect();
@@ -206,7 +209,7 @@ mod tests {
     fn degree_policy_prefers_hubs() {
         let g = graph();
         let train: Vec<NodeId> = (0..500).collect();
-        let mut cs = CacheSampler::new(&g, &train, CachePolicy::Degree, 0.02, 3);
+        let mut cs = CacheSampler::new(&g, &train, CacheDistribution::Degree, 0.02, 3);
         let c = cs.sample(&g);
         let cache_avg_deg: f64 = c.nodes.iter().map(|&v| g.degree(v) as f64).sum::<f64>()
             / c.len() as f64;
@@ -225,7 +228,7 @@ mod tests {
         let mut cs = CacheSampler::new(
             &g,
             &train,
-            CachePolicy::RandomWalk { fanouts: vec![5, 10, 15] },
+            CacheDistribution::RandomWalk { fanouts: vec![5, 10, 15] },
             0.02,
             4,
         );
@@ -240,7 +243,7 @@ mod tests {
         // *edge endpoints* (here: fraction of nodes with a cached neighbor)
         let g = graph();
         let train: Vec<NodeId> = (0..2500).collect();
-        let mut cs = CacheSampler::new(&g, &train, CachePolicy::Degree, 0.01, 5);
+        let mut cs = CacheSampler::new(&g, &train, CacheDistribution::Degree, 0.01, 5);
         let c = cs.sample(&g);
         let cov = c.subgraph.coverage(&g);
         assert!(cov > 0.35, "coverage {cov}");

@@ -18,7 +18,7 @@
 pub mod cache;
 pub mod importance;
 
-pub use cache::{CachePolicy, CacheSampler, CacheState};
+pub use cache::{CacheDistribution, CacheSampler, CacheState};
 
 use super::arena::{pad_labels_into, InternTable, LevelBuilder};
 use super::*;
@@ -33,7 +33,7 @@ pub struct GnsConfig {
     pub cache_fraction: f64,
     /// Refresh the cache every `update_period` epochs (Table 6's P).
     pub update_period: usize,
-    pub policy: CachePolicy,
+    pub policy: CacheDistribution,
     /// Sample the input layer only from the cache (paper setting). When
     /// false, the input layer tops up like hidden layers (ablation).
     pub input_layer_cache_only: bool,
@@ -45,7 +45,7 @@ impl Default for GnsConfig {
         GnsConfig {
             cache_fraction: 0.01,
             update_period: 1,
-            policy: CachePolicy::Degree,
+            policy: CacheDistribution::Degree,
             input_layer_cache_only: true,
             seed: 0,
         }

@@ -22,7 +22,7 @@
 //! registered in a [`MethodRegistry`], so new methods, ablations, and
 //! hybrids plug in without touching the harness, CLI, or pipeline.
 
-use super::gns::{CachePolicy, GnsConfig, GnsSampler};
+use super::gns::{CacheDistribution, GnsConfig, GnsSampler};
 use super::ladies::LadiesSampler;
 use super::lazygcn::{LazyGcnConfig, LazyGcnSampler};
 use super::neighbor::NeighborSampler;
@@ -395,6 +395,27 @@ pub fn param_info(
 // ---------------------------------------------------------------------------
 // Built-in builders
 
+/// The `cache=` parameter every method accepts: the device feature-tier
+/// policy (grammar in [`crate::tiering::PolicySpec`]). `auto` follows the
+/// sampler's own cache — GNS's importance cache, nothing for the rest —
+/// so the default reproduces pre-tiering behavior exactly.
+pub const CACHE_PARAM: ParamInfo = ParamInfo {
+    key: "cache",
+    kind: ParamKind::Str,
+    default: "auto",
+    help: "device feature tier: auto|none|gns|degree[:budget=ROWS]|presample[:budget=ROWS]",
+};
+
+/// Parse + validate a spec's `cache=` parameter. Shared by every builder
+/// (build-time rejection of bad policies) and by the session layer that
+/// materializes the policy.
+pub fn cache_policy_spec(spec: &MethodSpec) -> anyhow::Result<crate::tiering::PolicySpec> {
+    crate::tiering::PolicySpec::parse(spec.str_or("cache", CACHE_PARAM.default))
+        .map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))
+}
+
+const NS_PARAMS: &[ParamInfo] = &[CACHE_PARAM];
+
 struct NsBuilder;
 
 impl MethodBuilder for NsBuilder {
@@ -407,7 +428,7 @@ impl MethodBuilder for NsBuilder {
     }
 
     fn params(&self) -> &'static [ParamInfo] {
-        &[]
+        NS_PARAMS
     }
 
     fn label(&self, _spec: &MethodSpec) -> String {
@@ -418,7 +439,8 @@ impl MethodBuilder for NsBuilder {
         artifact_base(dataset).to_string()
     }
 
-    fn build(&self, _spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
+    fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
+        cache_policy_spec(spec)?;
         let graph = ctx.graph.clone();
         let shapes = ctx.shapes.clone();
         let seed = ctx.seed;
@@ -430,12 +452,15 @@ impl MethodBuilder for NsBuilder {
 
 struct LadiesBuilder;
 
-const LADIES_PARAMS: &[ParamInfo] = &[ParamInfo {
-    key: "s-layer",
-    kind: ParamKind::Int,
-    default: "512",
-    help: "nodes sampled per layer (Table 3 uses 512 and 5000)",
-}];
+const LADIES_PARAMS: &[ParamInfo] = &[
+    ParamInfo {
+        key: "s-layer",
+        kind: ParamKind::Int,
+        default: "512",
+        help: "nodes sampled per layer (Table 3 uses 512 and 5000)",
+    },
+    CACHE_PARAM,
+];
 
 impl MethodBuilder for LadiesBuilder {
     fn name(&self) -> &'static str {
@@ -472,6 +497,7 @@ impl MethodBuilder for LadiesBuilder {
     }
 
     fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
+        cache_policy_spec(spec)?;
         let s_layer = spec.usize_or("s-layer", 512);
         anyhow::ensure!(s_layer >= 1, "ladies: s-layer must be >= 1");
         let graph = ctx.graph.clone();
@@ -503,6 +529,7 @@ const LAZYGCN_PARAMS: &[ParamInfo] = &[
         default: "1.1",
         help: "recycling growth rate per epoch",
     },
+    CACHE_PARAM,
 ];
 
 impl MethodBuilder for LazyGcnBuilder {
@@ -527,6 +554,7 @@ impl MethodBuilder for LazyGcnBuilder {
     }
 
     fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
+        cache_policy_spec(spec)?;
         let recycle_period = spec.usize_or("recycle-period", 2);
         let rho = spec.f64_or("rho", 1.1);
         anyhow::ensure!(recycle_period >= 1, "lazygcn: recycle-period must be >= 1");
@@ -580,6 +608,7 @@ const GNS_PARAMS: &[ParamInfo] = &[
         default: "true",
         help: "sample the input layer exclusively from the cache (paper setting)",
     },
+    CACHE_PARAM,
 ];
 
 impl MethodBuilder for GnsBuilder {
@@ -604,6 +633,7 @@ impl MethodBuilder for GnsBuilder {
     }
 
     fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
+        cache_policy_spec(spec)?;
         let cache_fraction = spec.f64_or("cache-fraction", 0.01);
         let update_period = spec.usize_or("update-period", 1);
         anyhow::ensure!(
@@ -613,16 +643,18 @@ impl MethodBuilder for GnsBuilder {
         anyhow::ensure!(update_period >= 1, "gns: update-period must be >= 1");
         let ds = ctx.dataset;
         let policy = match spec.str_or("policy", "auto") {
-            "degree" => CachePolicy::Degree,
-            "random-walk" => CachePolicy::RandomWalk { fanouts: ctx.shapes.fanouts.clone() },
-            "uniform" => CachePolicy::Uniform,
+            "degree" => CacheDistribution::Degree,
+            "random-walk" => {
+                CacheDistribution::RandomWalk { fanouts: ctx.shapes.fanouts.clone() }
+            }
+            "uniform" => CacheDistribution::Uniform,
             // the paper's §3.2 switch: degree probabilities when most nodes
             // train, L-step walk probabilities when the train split is small
             "auto" => {
                 if (ds.train.len() as f64) < 0.2 * ds.graph.num_nodes() as f64 {
-                    CachePolicy::RandomWalk { fanouts: ctx.shapes.fanouts.clone() }
+                    CacheDistribution::RandomWalk { fanouts: ctx.shapes.fanouts.clone() }
                 } else {
-                    CachePolicy::Degree
+                    CacheDistribution::Degree
                 }
             }
             other => anyhow::bail!(

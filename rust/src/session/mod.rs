@@ -34,9 +34,10 @@ use crate::graph::{CsrGraph, NodeId};
 use crate::pipeline::{EpochReport, TrainOptions, Trainer};
 use crate::runtime::{artifacts_root, ArtifactMeta, Runtime};
 use crate::sampling::spec::{
-    BuildContext, MethodRegistry, MethodSpec, SamplerFactory, SpecError,
+    cache_policy_spec, BuildContext, MethodRegistry, MethodSpec, SamplerFactory, SpecError,
 };
 use crate::sampling::BlockShapes;
+use crate::tiering::{build_policy, TierBuild, PRESAMPLE_WORKER, WARMUP_BATCHES};
 use std::fmt;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -96,6 +97,10 @@ pub struct RunResult {
     pub reports: Vec<EpochReport>,
     pub test_f1: f64,
     pub device_peak: u64,
+    /// Device feature-cache hit/miss totals across the run (tiering
+    /// telemetry; both 0 when the tier policy is `none`).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
     /// Structured training failure (e.g. LazyGCN OOM), captured rather
     /// than propagated — Table 3 reports those cells as N/A.
     pub error: Option<String>,
@@ -104,6 +109,16 @@ pub struct RunResult {
 impl RunResult {
     pub fn final_f1(&self) -> f64 {
         self.test_f1
+    }
+
+    /// Fraction of served input rows that hit the device feature cache
+    /// (NaN when nothing was served).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            return f64::NAN;
+        }
+        self.cache_hits as f64 / total as f64
     }
 
     /// mean per-epoch time in the device frame (as-if the paper's T4
@@ -301,6 +316,9 @@ impl SessionBuilder {
                 s.clone()
             }
         };
+        // the `cache=` tier policy is validated up front too (cheap), so a
+        // bad policy string is reported before artifact/dataset work
+        let tier_spec = cache_policy_spec(&spec).map_err(BuildError::Runtime)?;
         // validate the dataset name up front (cheap) so a typo is reported
         // as such, not as a missing artifact for a nonsense name
         if !DATASET_NAMES.contains(&self.dataset.as_str()) {
@@ -394,7 +412,25 @@ impl SessionBuilder {
             paranoid_validate: self.paranoid_validate,
         };
         let label = registry.label(&spec);
-        let trainer = Trainer::new(runtime, ds.clone(), &topts).map_err(BuildError::Runtime)?;
+        let mut trainer =
+            Trainer::new(runtime, ds.clone(), &topts).map_err(BuildError::Runtime)?;
+        // materialize the feature-tier policy from the spec's `cache=`
+        // parameter (default `auto` = follow the sampler's own cache, i.e.
+        // the trainer's built-in policy); a presample tier runs its warmup
+        // here, with a non-leader sampler so the GNS cache is untouched
+        let policy = build_policy(
+            &tier_spec,
+            &TierBuild {
+                graph: &ds.graph,
+                train: &ds.train,
+                labels: &ds.labels,
+                chunk_size,
+                warmup_batches: WARMUP_BATCHES,
+            },
+            || factory(PRESAMPLE_WORKER),
+        )
+        .map_err(BuildError::Runtime)?;
+        trainer.set_cache_policy(policy);
         Ok(Session {
             dataset: ds,
             trainer,
@@ -444,26 +480,25 @@ impl Session {
     /// Train all epochs, then evaluate on the test split. Structured
     /// training failures land in `RunResult::error`.
     pub fn run(&mut self) -> anyhow::Result<RunResult> {
-        match self
+        let outcome = self
             .trainer
-            .train_with_chunk_size(self.factory.as_ref(), &self.topts, self.chunk_size)
-        {
+            .train_with_chunk_size(self.factory.as_ref(), &self.topts, self.chunk_size);
+        let (reports, test_f1, error) = match outcome {
             Ok(reports) => {
                 let test_f1 = self.test_f1()?;
-                Ok(RunResult {
-                    test_f1,
-                    device_peak: self.trainer.device_peak_bytes(),
-                    reports,
-                    error: None,
-                })
+                (reports, test_f1, None)
             }
-            Err(e) => Ok(RunResult {
-                reports: Vec::new(),
-                test_f1: f64::NAN,
-                device_peak: self.trainer.device_peak_bytes(),
-                error: Some(format!("{e:#}")),
-            }),
-        }
+            Err(e) => (Vec::new(), f64::NAN, Some(format!("{e:#}"))),
+        };
+        let (cache_hits, cache_misses) = self.trainer.cache_hits_misses();
+        Ok(RunResult {
+            reports,
+            test_f1,
+            device_peak: self.trainer.device_peak_bytes(),
+            cache_hits,
+            cache_misses,
+            error,
+        })
     }
 
     /// Run exactly one epoch (per-epoch interleaving, e.g. the Figure 3
@@ -520,6 +555,14 @@ impl Session {
 
     pub fn cache_hits_misses(&self) -> (u64, u64) {
         self.trainer.cache_hits_misses()
+    }
+
+    /// Name of the active feature-tier policy (`none|gns|degree|presample`).
+    /// Note `gns` names the sampler-driven policy (the `auto` default):
+    /// for cache-less samplers it is resident-row-free by design (see
+    /// docs/TIERING.md) — check `cache_hits_misses()` for effect.
+    pub fn cache_policy(&self) -> &'static str {
+        self.trainer.tiering().policy_name()
     }
 }
 
@@ -581,8 +624,28 @@ mod tests {
 
     #[test]
     fn run_result_times_are_nan_when_empty() {
-        let r = RunResult { reports: Vec::new(), test_f1: f64::NAN, device_peak: 0, error: None };
+        let r = RunResult {
+            reports: Vec::new(),
+            test_f1: f64::NAN,
+            device_peak: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            error: None,
+        };
         assert!(r.epoch_time().is_nan());
         assert!(r.wall_epoch_time().is_nan());
+        assert!(r.cache_hit_rate().is_nan());
+    }
+
+    #[test]
+    fn bad_cache_policy_fails_session_build() {
+        // `cache=` is validated before any artifact/dataset work can hide it
+        let err = Session::builder("yelp-s", "ns:cache=magic")
+            .scale(0.03)
+            .build()
+            .unwrap_err();
+        // the registry's factory-time validation rejects it as a runtime
+        // build error naming the grammar
+        assert!(err.to_string().contains("cache policy"), "{err}");
     }
 }

@@ -1,0 +1,224 @@
+//! Feature tiering: the pluggable subsystem deciding which feature rows
+//! live on the device, when the resident set refreshes, and how each
+//! mini-batch's input rows are gathered.
+//!
+//! The paper's core claim is that data copy dominates mixed CPU-GPU
+//! training and a GPU-resident cache of frequently-sampled nodes removes
+//! most of it. This module makes that cache/transfer layer first-class
+//! and method-agnostic (FastGL, arXiv:2409.14939, argues for exactly this
+//! split), so every sampler — not just GNS — can run with a tier:
+//!
+//! - [`CachePolicy`] (policy.rs): *which* rows are resident, *when* to
+//!   refresh — `none`, `gns` (sampler-driven), `degree`, `presample`.
+//! - [`GatherPlan`] (plan.rs): the per-batch hit/miss partition, built
+//!   once and consumed by slicing, transfer accounting, and compute.
+//! - [`TieringEngine`]: the trainer-facing facade owning the policy, the
+//!   device-resident [`DeviceFeatureCache`], and the recycled plan.
+//!
+//! Lifecycle per epoch: the trainer calls [`TieringEngine::begin_epoch`]
+//! after the leader sampler's `begin_epoch`; the policy publishes a
+//! [`TierSnapshot`] and a generation change triggers a **delta upload**
+//! (only non-resident rows cross PCIe). Per batch, `plan_batch` +
+//! `serve_planned` partition the input nodes once and account the copy.
+//! Accounting invariants are documented in docs/TIERING.md and enforced
+//! by tests/tiering.rs.
+
+pub mod plan;
+pub mod policy;
+
+pub use plan::{GatherPlan, GatherRun};
+pub use policy::{
+    build_policy, default_budget, CachePolicy, DegreePolicy, NonePolicy, PolicyKind,
+    PolicySpec, PresamplePolicy, SamplerPolicy, TierBuild, TierSnapshot,
+    PRESAMPLE_WORKER, WARMUP_BATCHES,
+};
+
+use crate::device::{DeviceFeatureCache, DeviceMemory, TransferModel, TransferStats};
+use crate::graph::NodeId;
+use crate::sampling::Sampler;
+use anyhow::Result;
+use std::time::Duration;
+
+/// The trainer-facing tiering facade: one policy, one device cache, one
+/// recycled gather plan. All feature movement routes through here.
+pub struct TieringEngine {
+    policy: Box<dyn CachePolicy>,
+    cache: DeviceFeatureCache,
+    plan: GatherPlan,
+}
+
+impl TieringEngine {
+    pub fn new(policy: Box<dyn CachePolicy>, num_nodes: usize, row_bytes: u64) -> Self {
+        TieringEngine {
+            policy,
+            cache: DeviceFeatureCache::new(num_nodes, row_bytes),
+            plan: GatherPlan::new(),
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn cache(&self) -> &DeviceFeatureCache {
+        &self.cache
+    }
+
+    /// The last `plan_batch` partition (hit/miss runs + counts).
+    pub fn last_plan(&self) -> &GatherPlan {
+        &self.plan
+    }
+
+    /// Swap the policy, dropping any resident rows of the old one (the
+    /// device buffer is returned to `mem`).
+    pub fn replace_policy(&mut self, policy: Box<dyn CachePolicy>, mem: &mut DeviceMemory) {
+        self.cache.release(mem);
+        self.policy = policy;
+    }
+
+    /// Epoch boundary: consult the policy and (delta-)upload the resident
+    /// set if its generation changed. Returns the modeled upload time.
+    pub fn begin_epoch(
+        &mut self,
+        epoch: usize,
+        sampler: &dyn Sampler,
+        mem: &mut DeviceMemory,
+        model: &TransferModel,
+        stats: &mut TransferStats,
+    ) -> Result<Duration> {
+        let Some(tier) = self.policy.epoch_tier(epoch, sampler) else {
+            return Ok(Duration::ZERO);
+        };
+        // upload() itself no-ops on an unchanged generation — single
+        // source of truth for the refresh condition
+        self.cache
+            .upload(&tier.nodes, tier.generation, mem, model, stats)
+    }
+
+    /// Partition one batch's input nodes into hit/miss runs — the single
+    /// residency pass that slicing, accounting, and compute read.
+    pub fn plan_batch(&mut self, input_nodes: &[NodeId]) {
+        self.cache.plan_batch(input_nodes, &mut self.plan);
+    }
+
+    /// Account the copy for the last planned batch. Returns (modeled copy
+    /// time, missed node count).
+    pub fn serve_planned(
+        &mut self,
+        model: &TransferModel,
+        stats: &mut TransferStats,
+    ) -> (Duration, usize) {
+        self.cache.serve_plan(&self.plan, model, stats)
+    }
+
+    /// `plan_batch` + `serve_planned` in one call.
+    pub fn serve(
+        &mut self,
+        input_nodes: &[NodeId],
+        model: &TransferModel,
+        stats: &mut TransferStats,
+    ) -> (Duration, usize) {
+        self.plan_batch(input_nodes);
+        self.serve_planned(model, stats)
+    }
+
+    /// Cumulative (hits, misses) across all served batches.
+    pub fn hits_misses(&self) -> (u64, u64) {
+        (self.cache.hits, self.cache.misses)
+    }
+
+    /// Drop the resident rows, returning the device buffer to `mem`.
+    pub fn release(&mut self, mem: &mut DeviceMemory) {
+        self.cache.release(mem);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A sampler stub that only publishes a cache (epoch_tier input).
+    struct FakeCache {
+        generation: u64,
+        nodes: std::sync::Arc<Vec<NodeId>>,
+    }
+
+    impl Sampler for FakeCache {
+        fn name(&self) -> &'static str {
+            "fake"
+        }
+
+        fn begin_epoch(&mut self, _epoch: usize) {}
+
+        fn sample_batch_into(
+            &mut self,
+            _targets: &[NodeId],
+            _labels: &[u16],
+            _out: &mut crate::sampling::MiniBatch,
+        ) -> anyhow::Result<()> {
+            anyhow::bail!("not a real sampler")
+        }
+
+        fn cache_generation(&self) -> u64 {
+            self.generation
+        }
+
+        fn cache_nodes(&self) -> Option<std::sync::Arc<Vec<NodeId>>> {
+            Some(self.nodes.clone())
+        }
+    }
+
+    #[test]
+    fn sampler_policy_follows_generations_and_uploads_once_each() {
+        let mut engine =
+            TieringEngine::new(Box::new(SamplerPolicy), 32, 100);
+        let mut mem = DeviceMemory::new(1 << 20);
+        let model = TransferModel::default();
+        let mut stats = TransferStats::default();
+        let mut s = FakeCache { generation: 1, nodes: std::sync::Arc::new(vec![1, 2, 3]) };
+        engine.begin_epoch(0, &s, &mut mem, &model, &mut stats).unwrap();
+        assert_eq!(engine.cache().generation(), 1);
+        assert_eq!(stats.h2d_bytes, 300);
+        // same generation: no re-upload
+        engine.begin_epoch(1, &s, &mut mem, &model, &mut stats).unwrap();
+        assert_eq!(stats.h2d_bytes, 300);
+        // new generation overlapping on {2,3}: delta = 1 row
+        s.generation = 2;
+        s.nodes = std::sync::Arc::new(vec![2, 3, 4]);
+        engine.begin_epoch(2, &s, &mut mem, &model, &mut stats).unwrap();
+        assert_eq!(engine.cache().generation(), 2);
+        assert_eq!(stats.h2d_bytes, 400);
+        assert_eq!(stats.bytes_saved_by_delta, 200);
+    }
+
+    #[test]
+    fn none_policy_serves_everything_from_host() {
+        let mut engine = TieringEngine::new(Box::new(NonePolicy), 16, 100);
+        let mut mem = DeviceMemory::new(1 << 20);
+        let model = TransferModel::default();
+        let mut stats = TransferStats::default();
+        let s = FakeCache { generation: 5, nodes: std::sync::Arc::new(vec![1]) };
+        // the policy ignores even a cache-publishing sampler
+        engine.begin_epoch(0, &s, &mut mem, &model, &mut stats).unwrap();
+        assert_eq!(mem.used(), 0);
+        let (_t, missed) = engine.serve(&[1, 2, 3], &model, &mut stats);
+        assert_eq!(missed, 3);
+        assert_eq!(stats.bytes_saved_by_cache, 0);
+        assert_eq!(engine.hits_misses(), (0, 3));
+        assert_eq!(engine.last_plan().miss_rows(), 3);
+    }
+
+    #[test]
+    fn replace_policy_releases_resident_rows() {
+        let mut engine = TieringEngine::new(Box::new(SamplerPolicy), 16, 100);
+        let mut mem = DeviceMemory::new(1 << 20);
+        let model = TransferModel::default();
+        let mut stats = TransferStats::default();
+        let s = FakeCache { generation: 1, nodes: std::sync::Arc::new(vec![0, 1]) };
+        engine.begin_epoch(0, &s, &mut mem, &model, &mut stats).unwrap();
+        assert_eq!(mem.used(), 200);
+        engine.replace_policy(Box::new(NonePolicy), &mut mem);
+        assert_eq!(mem.used(), 0);
+        assert_eq!(engine.policy_name(), "none");
+    }
+}

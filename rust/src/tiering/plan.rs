@@ -1,0 +1,162 @@
+//! Per-batch gather plans: one pass over the input nodes partitions them
+//! into device-hit vs host-miss **runs**, and everything downstream —
+//! host slicing, transfer accounting, compute hand-off — reads that single
+//! partition instead of re-probing the cache per stage.
+//!
+//! A run is a maximal stretch of consecutive input rows with the same
+//! residency. Power-law caches make runs long (GNS orders the cached
+//! nodes contiguously at the front of the input level), so the run list
+//! is typically far shorter than the node list.
+
+use crate::graph::NodeId;
+
+/// One maximal stretch of consecutive input rows with equal residency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GatherRun {
+    /// first input row of the run.
+    pub start: u32,
+    /// number of rows.
+    pub len: u32,
+    /// true = rows are device-resident (served d2d), false = host rows
+    /// that must cross PCIe.
+    pub resident: bool,
+}
+
+impl GatherRun {
+    pub fn end(&self) -> u32 {
+        self.start + self.len
+    }
+}
+
+/// The partition of one mini-batch's input nodes into hit/miss runs,
+/// with row counts precomputed. Reused across batches (the run vector is
+/// recycled, so steady-state planning allocates nothing).
+#[derive(Debug, Clone, Default)]
+pub struct GatherPlan {
+    runs: Vec<GatherRun>,
+    hit_rows: usize,
+    miss_rows: usize,
+}
+
+impl GatherPlan {
+    pub fn new() -> GatherPlan {
+        GatherPlan::default()
+    }
+
+    /// Rebuild the plan for `nodes`, querying `resident(v)` exactly once
+    /// per node — the *only* residency probe on the per-batch path.
+    pub fn build(&mut self, nodes: &[NodeId], mut resident: impl FnMut(NodeId) -> bool) {
+        self.runs.clear();
+        self.hit_rows = 0;
+        self.miss_rows = 0;
+        for (i, &v) in nodes.iter().enumerate() {
+            let r = resident(v);
+            if r {
+                self.hit_rows += 1;
+            } else {
+                self.miss_rows += 1;
+            }
+            match self.runs.last_mut() {
+                Some(run) if run.resident == r => run.len += 1,
+                _ => self.runs.push(GatherRun { start: i as u32, len: 1, resident: r }),
+            }
+        }
+    }
+
+    /// The hit/miss runs in input-row order.
+    pub fn runs(&self) -> &[GatherRun] {
+        &self.runs
+    }
+
+    /// Input rows resident on device (served d2d).
+    pub fn hit_rows(&self) -> usize {
+        self.hit_rows
+    }
+
+    /// Input rows that must be gathered on host and cross PCIe.
+    pub fn miss_rows(&self) -> usize {
+        self.miss_rows
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.hit_rows + self.miss_rows
+    }
+
+    /// Bytes served device-side at `row_bytes` per row — by construction
+    /// `hit_bytes + miss_bytes == total_rows * row_bytes` (the accounting
+    /// identity docs/TIERING.md relies on).
+    pub fn hit_bytes(&self, row_bytes: u64) -> u64 {
+        self.hit_rows as u64 * row_bytes
+    }
+
+    /// Bytes that must cross PCIe at `row_bytes` per row.
+    pub fn miss_bytes(&self, row_bytes: u64) -> u64 {
+        self.miss_rows as u64 * row_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitions_into_maximal_runs() {
+        let mut plan = GatherPlan::new();
+        // resident iff even
+        plan.build(&[2, 4, 1, 3, 5, 6], |v| v % 2 == 0);
+        assert_eq!(
+            plan.runs(),
+            &[
+                GatherRun { start: 0, len: 2, resident: true },
+                GatherRun { start: 2, len: 3, resident: false },
+                GatherRun { start: 5, len: 1, resident: true },
+            ]
+        );
+        assert_eq!(plan.hit_rows(), 3);
+        assert_eq!(plan.miss_rows(), 3);
+        assert_eq!(plan.total_rows(), 6);
+    }
+
+    #[test]
+    fn byte_accounting_identity() {
+        let mut plan = GatherPlan::new();
+        plan.build(&[1, 2, 3, 4, 5], |v| v <= 2);
+        let rb = 400u64;
+        assert_eq!(plan.hit_bytes(rb), 800);
+        assert_eq!(plan.miss_bytes(rb), 1200);
+        assert_eq!(
+            plan.hit_bytes(rb) + plan.miss_bytes(rb),
+            plan.total_rows() as u64 * rb
+        );
+    }
+
+    #[test]
+    fn empty_and_uniform_batches() {
+        let mut plan = GatherPlan::new();
+        plan.build(&[], |_| true);
+        assert!(plan.runs().is_empty());
+        assert_eq!(plan.total_rows(), 0);
+        plan.build(&[7, 8, 9], |_| false);
+        assert_eq!(plan.runs().len(), 1);
+        assert_eq!(plan.miss_rows(), 3);
+        // rebuilds reuse the run vector and fully reset counts
+        plan.build(&[7], |_| true);
+        assert_eq!(plan.hit_rows(), 1);
+        assert_eq!(plan.miss_rows(), 0);
+    }
+
+    #[test]
+    fn runs_cover_every_row_exactly_once() {
+        let mut plan = GatherPlan::new();
+        let nodes: Vec<NodeId> = (0..97).collect();
+        plan.build(&nodes, |v| (v / 7) % 2 == 0);
+        let mut covered = 0u32;
+        let mut next = 0u32;
+        for run in plan.runs() {
+            assert_eq!(run.start, next, "runs must be contiguous");
+            next = run.end();
+            covered += run.len;
+        }
+        assert_eq!(covered as usize, nodes.len());
+    }
+}

@@ -1,0 +1,353 @@
+//! Cache policies: *which* feature rows are GPU-resident and *when* the
+//! resident set refreshes.
+//!
+//! Four built-ins:
+//!
+//! - [`NonePolicy`] — no device cache; every input row crosses PCIe.
+//! - [`SamplerPolicy`] (`gns`/`auto`) — follow the training sampler's own
+//!   published cache (the GNS importance cache, §3.2). Cache-less
+//!   samplers publish generation 0, so `auto` degrades to `none` for
+//!   NS/LADIES/LazyGCN unless a static policy is requested.
+//! - [`DegreePolicy`] — static top-degree tier, computed once before
+//!   training (Data Tiering, Min et al., arXiv:2111.05894).
+//! - [`PresamplePolicy`] — static top-frequency tier from a presampling
+//!   warmup pass: run the method's own sampler over the training set,
+//!   count input-node occurrences, pin the most-visited rows.
+//!
+//! A policy is consulted once per epoch ([`CachePolicy::epoch_tier`]);
+//! the returned [`TierSnapshot`]'s generation drives (delta) re-upload in
+//! `TieringEngine::begin_epoch`. Static policies return generation 1
+//! forever, so they upload exactly once.
+
+use crate::graph::{CsrGraph, NodeId};
+use crate::sampling::{MiniBatch, Sampler};
+use std::sync::Arc;
+
+/// The resident set a policy wants on device for the coming epoch.
+pub struct TierSnapshot {
+    /// Monotone tag; the device cache re-uploads iff it differs from the
+    /// resident generation. 0 is reserved for "empty".
+    pub generation: u64,
+    /// Distinct node ids whose feature rows should be GPU-resident.
+    pub nodes: Arc<Vec<NodeId>>,
+}
+
+/// Which rows are GPU-resident and when to refresh them — the pluggable
+/// half of the feature-tiering subsystem.
+pub trait CachePolicy: Send {
+    /// Spec name (`none`, `gns`, `degree`, `presample`).
+    fn name(&self) -> &'static str;
+
+    /// Desired resident set at the start of `epoch`. `sampler` is the
+    /// leader training sampler (already `begin_epoch`-ed); sampler-driven
+    /// policies read their tier from it, static policies ignore it.
+    /// `None` means "no device cache".
+    fn epoch_tier(&mut self, epoch: usize, sampler: &dyn Sampler) -> Option<TierSnapshot>;
+}
+
+/// No device cache: every input row crosses PCIe (the NS baseline).
+#[derive(Debug, Default)]
+pub struct NonePolicy;
+
+impl CachePolicy for NonePolicy {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn epoch_tier(&mut self, _epoch: usize, _sampler: &dyn Sampler) -> Option<TierSnapshot> {
+        None
+    }
+}
+
+/// Follow the sampler's own published cache (GNS). This is the `auto`
+/// default: samplers without a cache publish generation 0 and the device
+/// cache stays empty.
+#[derive(Debug, Default)]
+pub struct SamplerPolicy;
+
+impl CachePolicy for SamplerPolicy {
+    fn name(&self) -> &'static str {
+        "gns"
+    }
+
+    fn epoch_tier(&mut self, _epoch: usize, sampler: &dyn Sampler) -> Option<TierSnapshot> {
+        let generation = sampler.cache_generation();
+        if generation == 0 {
+            return None;
+        }
+        sampler
+            .cache_nodes()
+            .map(|nodes| TierSnapshot { generation, nodes })
+    }
+}
+
+/// Static top-degree tier: the `budget` highest-degree nodes, computed
+/// once at construction. Generation is 1 forever — one upload, no
+/// refresh traffic.
+pub struct DegreePolicy {
+    nodes: Arc<Vec<NodeId>>,
+}
+
+impl DegreePolicy {
+    pub fn new(graph: &CsrGraph, budget: usize) -> DegreePolicy {
+        let n = graph.num_nodes();
+        let mut ids: Vec<NodeId> = (0..n as NodeId).collect();
+        let budget = budget.max(1).min(n.max(1));
+        // deterministic order: degree desc, node id asc on ties. Select
+        // the top `budget` in O(|V|) first; only the kept prefix is sorted
+        // (budgets are ~1% of |V|, a full sort would dominate build time).
+        let key = |v: &NodeId| (std::cmp::Reverse(graph.degree(*v)), *v);
+        if budget < ids.len() {
+            ids.select_nth_unstable_by_key(budget - 1, key);
+            ids.truncate(budget);
+        }
+        ids.sort_unstable_by_key(key);
+        DegreePolicy { nodes: Arc::new(ids) }
+    }
+
+    pub fn nodes(&self) -> &Arc<Vec<NodeId>> {
+        &self.nodes
+    }
+}
+
+impl CachePolicy for DegreePolicy {
+    fn name(&self) -> &'static str {
+        "degree"
+    }
+
+    fn epoch_tier(&mut self, _epoch: usize, _sampler: &dyn Sampler) -> Option<TierSnapshot> {
+        Some(TierSnapshot { generation: 1, nodes: self.nodes.clone() })
+    }
+}
+
+/// Static top-frequency tier from a presampling warmup pass: sample
+/// `warmup_batches` mini-batches with the method's own sampler, count how
+/// often each node appears in the input level, pin the `budget`
+/// most-frequent rows. Nodes never seen in the warmup are not pinned even
+/// if the budget has room (their presampled frequency is 0).
+pub struct PresamplePolicy {
+    nodes: Arc<Vec<NodeId>>,
+}
+
+impl PresamplePolicy {
+    /// Run the warmup and freeze the tier. `sampler` should be a throwaway
+    /// instance (its RNG advances); targets are consumed in chunks of
+    /// `chunk_size` from the front of `targets`.
+    pub fn from_warmup(
+        sampler: &mut dyn Sampler,
+        targets: &[NodeId],
+        labels: &[u16],
+        chunk_size: usize,
+        warmup_batches: usize,
+        budget: usize,
+        num_nodes: usize,
+    ) -> anyhow::Result<PresamplePolicy> {
+        anyhow::ensure!(chunk_size >= 1, "presample: chunk_size must be >= 1");
+        anyhow::ensure!(warmup_batches >= 1, "presample: warmup_batches must be >= 1");
+        let mut counts = vec![0u32; num_nodes];
+        let mut slot = MiniBatch::default();
+        sampler.begin_epoch(0);
+        for chunk in targets.chunks(chunk_size).take(warmup_batches) {
+            sampler.sample_batch_into(chunk, labels, &mut slot)?;
+            for &v in &slot.input_nodes {
+                counts[v as usize] += 1;
+            }
+        }
+        let mut ids: Vec<NodeId> = (0..num_nodes as NodeId)
+            .filter(|&v| counts[v as usize] > 0)
+            .collect();
+        // deterministic: frequency desc, node id asc on ties
+        ids.sort_unstable_by_key(|&v| (std::cmp::Reverse(counts[v as usize]), v));
+        ids.truncate(budget.max(1));
+        Ok(PresamplePolicy { nodes: Arc::new(ids) })
+    }
+
+    pub fn nodes(&self) -> &Arc<Vec<NodeId>> {
+        &self.nodes
+    }
+}
+
+impl CachePolicy for PresamplePolicy {
+    fn name(&self) -> &'static str {
+        "presample"
+    }
+
+    fn epoch_tier(&mut self, _epoch: usize, _sampler: &dyn Sampler) -> Option<TierSnapshot> {
+        Some(TierSnapshot { generation: 1, nodes: self.nodes.clone() })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spec grammar
+
+/// Parsed `cache=` parameter: `policy[:budget=N]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    None,
+    /// Sampler-driven (the `gns`/`auto` spellings).
+    SamplerDriven,
+    Degree,
+    Presample,
+}
+
+impl PolicyKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PolicyKind::None => "none",
+            PolicyKind::SamplerDriven => "gns",
+            PolicyKind::Degree => "degree",
+            PolicyKind::Presample => "presample",
+        }
+    }
+}
+
+/// The `cache=policy[:budget=N]` grammar shared by every method spec
+/// (docs/API.md). `budget` is a row count and only static policies
+/// accept it (`gns` sizes its cache via `cache-fraction`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PolicySpec {
+    pub kind: PolicyKind,
+    pub budget: Option<usize>,
+}
+
+impl PolicySpec {
+    pub fn parse(text: &str) -> anyhow::Result<PolicySpec> {
+        let mut parts = text.trim().split(':');
+        let head = parts.next().unwrap_or("").trim();
+        let kind = match head {
+            "auto" | "gns" => PolicyKind::SamplerDriven,
+            "none" => PolicyKind::None,
+            "degree" => PolicyKind::Degree,
+            "presample" => PolicyKind::Presample,
+            other => anyhow::bail!(
+                "cache policy must be auto|none|gns|degree|presample, got {other:?}"
+            ),
+        };
+        let mut budget = None;
+        for opt in parts {
+            let opt = opt.trim();
+            let (key, value) = opt.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("cache option {opt:?} is not key=value")
+            })?;
+            match key.trim() {
+                "budget" => {
+                    let n: usize = value.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("cache budget {value:?} is not a row count")
+                    })?;
+                    anyhow::ensure!(n >= 1, "cache budget must be >= 1");
+                    budget = Some(n);
+                }
+                other => anyhow::bail!("unknown cache option {other:?} (valid: budget)"),
+            }
+        }
+        if budget.is_some() && !matches!(kind, PolicyKind::Degree | PolicyKind::Presample) {
+            anyhow::bail!(
+                "cache policy {head:?} takes no budget (only degree|presample do; \
+                 gns sizes its cache via cache-fraction)"
+            );
+        }
+        Ok(PolicySpec { kind, budget })
+    }
+
+    /// Row budget for static tiers, defaulting to 1% of |V| (the paper's
+    /// cache-fraction default) when unspecified.
+    pub fn budget_or_default(&self, num_nodes: usize) -> usize {
+        self.budget.unwrap_or_else(|| default_budget(num_nodes))
+    }
+}
+
+/// Default static-tier budget: 1% of |V|, at least one row.
+pub fn default_budget(num_nodes: usize) -> usize {
+    (num_nodes / 100).max(1)
+}
+
+/// Presampling warmup length used by the session layer (batches).
+pub const WARMUP_BATCHES: usize = 32;
+
+/// Factory worker id handed to `build_policy`'s `make_sampler` for the
+/// presample warmup: any id but 0 (the leader), so a GNS warmup sampler
+/// snapshots the shared cache without ever refreshing it.
+pub const PRESAMPLE_WORKER: usize = 97;
+
+/// Everything needed to materialize a policy from its spec. `labels` and
+/// `chunk_size` feed the presample warmup; the other kinds ignore them.
+pub struct TierBuild<'a> {
+    pub graph: &'a CsrGraph,
+    pub train: &'a [NodeId],
+    pub labels: &'a [u16],
+    pub chunk_size: usize,
+    pub warmup_batches: usize,
+}
+
+/// Build a boxed policy from a parsed spec. `make_sampler` is only
+/// invoked for `presample` (a throwaway warmup sampler — pass a factory
+/// worker that is not the leader so GNS warmups don't refresh the shared
+/// cache).
+pub fn build_policy(
+    spec: &PolicySpec,
+    b: &TierBuild<'_>,
+    make_sampler: impl FnOnce() -> Box<dyn Sampler>,
+) -> anyhow::Result<Box<dyn CachePolicy>> {
+    let n = b.graph.num_nodes();
+    Ok(match spec.kind {
+        PolicyKind::None => Box::new(NonePolicy),
+        PolicyKind::SamplerDriven => Box::new(SamplerPolicy),
+        PolicyKind::Degree => Box::new(DegreePolicy::new(b.graph, spec.budget_or_default(n))),
+        PolicyKind::Presample => {
+            let mut sampler = make_sampler();
+            Box::new(PresamplePolicy::from_warmup(
+                sampler.as_mut(),
+                b.train,
+                b.labels,
+                b.chunk_size,
+                b.warmup_batches,
+                spec.budget_or_default(n),
+                n,
+            )?)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_round_trips_kinds_and_budget() {
+        assert_eq!(
+            PolicySpec::parse("auto").unwrap(),
+            PolicySpec { kind: PolicyKind::SamplerDriven, budget: None }
+        );
+        assert_eq!(
+            PolicySpec::parse("gns").unwrap().kind,
+            PolicyKind::SamplerDriven
+        );
+        assert_eq!(PolicySpec::parse("none").unwrap().kind, PolicyKind::None);
+        let s = PolicySpec::parse("degree:budget=4096").unwrap();
+        assert_eq!(s.kind, PolicyKind::Degree);
+        assert_eq!(s.budget, Some(4096));
+        let s = PolicySpec::parse("presample:budget=128").unwrap();
+        assert_eq!(s.kind, PolicyKind::Presample);
+        assert_eq!(s.budget, Some(128));
+    }
+
+    #[test]
+    fn spec_grammar_rejects_nonsense() {
+        assert!(PolicySpec::parse("magic").is_err());
+        assert!(PolicySpec::parse("degree:budget=0").is_err());
+        assert!(PolicySpec::parse("degree:budget=lots").is_err());
+        assert!(PolicySpec::parse("degree:rows=5").is_err());
+        assert!(PolicySpec::parse("degree:budget").is_err());
+        // budget only applies to static tiers
+        assert!(PolicySpec::parse("gns:budget=5").is_err());
+        assert!(PolicySpec::parse("none:budget=5").is_err());
+    }
+
+    #[test]
+    fn budget_defaults_to_one_percent() {
+        let s = PolicySpec::parse("degree").unwrap();
+        assert_eq!(s.budget_or_default(5000), 50);
+        assert_eq!(s.budget_or_default(10), 1);
+        assert_eq!(default_budget(0), 1);
+    }
+}

@@ -64,7 +64,7 @@ fn device_accounting_tracks_sampler_cache_exactly() {
     let sh = shapes(64);
     let mut gns = sampler("gns:cache-fraction=0.02,policy=degree", &ds, sh, 5);
     let row_bytes = ds.features.row_bytes() as u64;
-    let mut cache = DeviceFeatureCache::new(row_bytes);
+    let mut cache = DeviceFeatureCache::new(ds.graph.num_nodes(), row_bytes);
     let mut mem = DeviceMemory::t4();
     let model = TransferModel::default();
     let mut stats = TransferStats::default();

@@ -29,11 +29,24 @@ fn prop_spec_display_parse_round_trip() {
                 ParamKind::Bool => ParamValue::Bool(g.bool(0.5)),
                 ParamKind::Int => ParamValue::Int(g.usize(1..10_000) as u64),
                 ParamKind::Float => ParamValue::Float(g.f64(0.0001..0.9999)),
-                // strings must come from the param's own domain; `policy`
-                // is the only string param today
-                ParamKind::Str => ParamValue::Str(
-                    (*g.choose(&["auto", "degree", "random-walk", "uniform"])).to_string(),
-                ),
+                // strings come from the param's own domain: `policy` (GNS
+                // cache distribution) and the shared `cache` tier policy
+                ParamKind::Str => {
+                    const CACHE_DOMAIN: &[&str] = &[
+                        "auto",
+                        "none",
+                        "gns",
+                        "degree",
+                        "presample",
+                        "degree:budget=64",
+                        "presample:budget=256",
+                    ];
+                    const POLICY_DOMAIN: &[&str] =
+                        &["auto", "degree", "random-walk", "uniform"];
+                    let domain =
+                        if info.key == "cache" { CACHE_DOMAIN } else { POLICY_DOMAIN };
+                    ParamValue::Str((*g.choose(domain)).to_string())
+                }
             };
             spec.params.insert(info.key.to_string(), value);
         }

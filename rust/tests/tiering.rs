@@ -1,0 +1,466 @@
+//! Feature-tiering subsystem invariants (docs/TIERING.md):
+//!
+//! 1. gather-plan byte accounting: what crosses PCIe per batch equals the
+//!    uncached bytes minus `bytes_saved_by_cache`;
+//! 2. delta uploads move exactly the non-resident row set;
+//! 3. the dense-map device cache serves batches identically to the old
+//!    per-node HashMap cache (reference reimplemented here);
+//! 4. the `gns` policy routed through the TieringEngine reproduces the
+//!    legacy trainer path's hit/miss and savings numbers;
+//! 5. every method accepts `cache=none|gns|degree|presample[:budget=N]`.
+
+use gns::device::{DeviceFeatureCache, DeviceMemory, TransferModel, TransferStats};
+use gns::features::{build_dataset, Dataset};
+use gns::graph::NodeId;
+use gns::sampling::spec::{cache_policy_spec, BuildContext, MethodRegistry};
+use gns::sampling::{BlockShapes, Sampler};
+use gns::tiering::{
+    build_policy, DegreePolicy, PolicyKind, PolicySpec, PresamplePolicy, SamplerPolicy,
+    TierBuild, TieringEngine, PRESAMPLE_WORKER,
+};
+use std::collections::HashMap;
+
+fn shapes(batch: usize) -> BlockShapes {
+    BlockShapes::new(vec![batch * 24, batch * 6, batch], vec![4, 5])
+}
+
+fn dataset() -> Dataset {
+    build_dataset("yelp-s", 0.05, 13)
+}
+
+fn sampler_for(spec_text: &str, ds: &Dataset, sh: BlockShapes, seed: u64) -> Box<dyn Sampler> {
+    let reg = MethodRegistry::global();
+    let spec = reg.parse(spec_text).unwrap();
+    let ctx = BuildContext::new(ds, sh, seed);
+    reg.sampler(&spec, &ctx, 0).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// 1. accounting identity
+
+#[test]
+fn plan_accounting_equals_uncached_minus_savings() {
+    let ds = dataset();
+    let sh = shapes(64);
+    let row_bytes = ds.features.row_bytes() as u64;
+    let mut s = sampler_for("gns:cache-fraction=0.02,policy=degree", &ds, sh, 5);
+    let policy = Box::new(SamplerPolicy);
+    let mut engine = TieringEngine::new(policy, ds.graph.num_nodes(), row_bytes);
+    let mut mem = DeviceMemory::t4();
+    let model = TransferModel::default();
+    let mut stats = TransferStats::default();
+    s.begin_epoch(0);
+    engine
+        .begin_epoch(0, s.as_ref(), &mut mem, &model, &mut stats)
+        .unwrap();
+    let h2d_after_upload = stats.h2d_bytes;
+
+    let mut total_input_bytes = 0u64;
+    for i in 0..4 {
+        let chunk = &ds.train[i * 64..(i + 1) * 64];
+        let mb = s.sample_batch(chunk, &ds.labels).unwrap();
+        total_input_bytes += mb.input_nodes.len() as u64 * row_bytes;
+        engine.serve(&mb.input_nodes, &model, &mut stats);
+        // per-batch identity on the plan itself
+        let plan = engine.last_plan();
+        assert_eq!(
+            plan.hit_bytes(row_bytes) + plan.miss_bytes(row_bytes),
+            plan.total_rows() as u64 * row_bytes
+        );
+    }
+    // cumulative identity: served PCIe bytes == uncached bytes - savings
+    let served_h2d = stats.h2d_bytes - h2d_after_upload;
+    assert_eq!(served_h2d, total_input_bytes - stats.bytes_saved_by_cache);
+    let (hits, _misses) = engine.hits_misses();
+    assert!(hits > 0, "degree-distribution GNS cache should hit");
+}
+
+// ---------------------------------------------------------------------------
+// 2. delta uploads
+
+#[test]
+fn delta_upload_moves_exactly_the_nonresident_rows() {
+    let ds = dataset();
+    let sh = shapes(32);
+    let row_bytes = ds.features.row_bytes() as u64;
+    // refresh every epoch so each begin_epoch publishes a fresh generation;
+    // a 5% degree-weighted cache makes cross-refresh overlap near-certain
+    let mut s = sampler_for("gns:cache-fraction=0.05,policy=degree", &ds, sh, 9);
+    let mut engine =
+        TieringEngine::new(Box::new(SamplerPolicy), ds.graph.num_nodes(), row_bytes);
+    let mut mem = DeviceMemory::t4();
+    let model = TransferModel::default();
+    let mut stats = TransferStats::default();
+
+    s.begin_epoch(0);
+    let gen1: Vec<NodeId> = s.cache_nodes().unwrap().to_vec();
+    engine
+        .begin_epoch(0, s.as_ref(), &mut mem, &model, &mut stats)
+        .unwrap();
+    assert_eq!(stats.h2d_bytes, gen1.len() as u64 * row_bytes);
+
+    s.begin_epoch(1); // leader refresh → new generation
+    let gen2: Vec<NodeId> = s.cache_nodes().unwrap().to_vec();
+    assert_ne!(gen1, gen2, "refresh must draw a new cache");
+    let h2d_before = stats.h2d_bytes;
+    engine
+        .begin_epoch(1, s.as_ref(), &mut mem, &model, &mut stats)
+        .unwrap();
+
+    // expected delta: rows of gen2 not resident under gen1
+    let prev: std::collections::HashSet<NodeId> = gen1.iter().copied().collect();
+    let fresh = gen2.iter().filter(|v| !prev.contains(v)).count() as u64;
+    let reused = gen2.len() as u64 - fresh;
+    assert_eq!(stats.h2d_bytes - h2d_before, fresh * row_bytes);
+    assert_eq!(stats.bytes_saved_by_delta, reused * row_bytes);
+    assert!(
+        reused > 0,
+        "degree-weighted caches should overlap across refreshes"
+    );
+    // residency reflects exactly gen2
+    for &v in &gen2 {
+        assert!(engine.cache().contains(v));
+    }
+    for &v in gen1.iter().filter(|v| !gen2.contains(v)) {
+        assert!(!engine.cache().contains(v));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. dense map == HashMap reference
+
+/// The pre-tiering DeviceFeatureCache accounting, verbatim: a per-node
+/// HashMap probed on every input row, full (non-delta) uploads.
+struct HashMapCacheRef {
+    generation: u64,
+    rows: HashMap<NodeId, u32>,
+    row_bytes: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl HashMapCacheRef {
+    fn new(row_bytes: u64) -> Self {
+        HashMapCacheRef { generation: 0, rows: HashMap::new(), row_bytes, hits: 0, misses: 0 }
+    }
+
+    fn upload(&mut self, nodes: &[NodeId], generation: u64) {
+        if generation == self.generation {
+            return;
+        }
+        self.rows = nodes.iter().enumerate().map(|(i, &v)| (v, i as u32)).collect();
+        self.generation = generation;
+    }
+
+    fn serve_batch(
+        &mut self,
+        input_nodes: &[NodeId],
+        model: &TransferModel,
+        stats: &mut TransferStats,
+    ) -> usize {
+        let mut hit = 0u64;
+        let mut miss = 0u64;
+        for v in input_nodes {
+            if self.rows.contains_key(v) {
+                hit += 1;
+            } else {
+                miss += 1;
+            }
+        }
+        self.hits += hit;
+        self.misses += miss;
+        stats.h2d(model, miss * self.row_bytes);
+        stats.d2d(model, hit * self.row_bytes);
+        stats.record_cache_savings(hit * self.row_bytes);
+        miss as usize
+    }
+}
+
+#[test]
+fn dense_cache_serves_identically_to_hashmap_cache() {
+    let ds = dataset();
+    let sh = shapes(48);
+    let row_bytes = ds.features.row_bytes() as u64;
+    let model = TransferModel::default();
+    let mut s = sampler_for("gns:cache-fraction=0.01", &ds, sh, 21);
+
+    let mut dense = DeviceFeatureCache::new(ds.graph.num_nodes(), row_bytes);
+    let mut mem = DeviceMemory::t4();
+    let mut dense_stats = TransferStats::default();
+    let mut reference = HashMapCacheRef::new(row_bytes);
+    let mut ref_stats = TransferStats::default();
+
+    for epoch in 0..3 {
+        s.begin_epoch(epoch);
+        let nodes = s.cache_nodes().unwrap();
+        let generation = s.cache_generation();
+        dense
+            .upload(&nodes, generation, &mut mem, &model, &mut dense_stats)
+            .unwrap();
+        reference.upload(&nodes, generation);
+        for i in 0..3 {
+            let chunk = &ds.train[i * 48..(i + 1) * 48];
+            let mb = s.sample_batch(chunk, &ds.labels).unwrap();
+            let before_dense = (dense_stats.h2d_bytes, dense_stats.d2d_bytes);
+            let before_ref = (ref_stats.h2d_bytes, ref_stats.d2d_bytes);
+            let (_t, dense_missed) = dense.serve_batch(&mb.input_nodes, &model, &mut dense_stats);
+            let ref_missed = reference.serve_batch(&mb.input_nodes, &model, &mut ref_stats);
+            assert_eq!(dense_missed, ref_missed, "epoch {epoch} batch {i}");
+            assert_eq!(
+                dense_stats.h2d_bytes - before_dense.0,
+                ref_stats.h2d_bytes - before_ref.0,
+                "serve-side PCIe bytes must match the HashMap reference"
+            );
+            assert_eq!(
+                dense_stats.d2d_bytes - before_dense.1,
+                ref_stats.d2d_bytes - before_ref.1
+            );
+            // row-by-row residency agreement
+            for &v in &mb.input_nodes {
+                assert_eq!(dense.contains(v), reference.rows.contains_key(&v));
+            }
+        }
+    }
+    assert_eq!(dense.hits, reference.hits);
+    assert_eq!(dense.misses, reference.misses);
+    assert_eq!(dense_stats.bytes_saved_by_cache, ref_stats.bytes_saved_by_cache);
+    assert!(dense.hits > 0);
+}
+
+// ---------------------------------------------------------------------------
+// 4. gns policy ≡ legacy trainer path
+
+#[test]
+fn gns_policy_reproduces_legacy_hit_miss_and_savings() {
+    let ds = dataset();
+    let sh = shapes(64);
+    let row_bytes = ds.features.row_bytes() as u64;
+    let model = TransferModel::default();
+    // two identically-seeded samplers produce identical batch sequences
+    let mut legacy_s = sampler_for("gns:cache-fraction=0.05", &ds, sh.clone(), 33);
+    let mut engine_s = sampler_for("gns:cache-fraction=0.05", &ds, sh, 33);
+
+    let mut reference = HashMapCacheRef::new(row_bytes);
+    let mut ref_stats = TransferStats::default();
+    let mut engine =
+        TieringEngine::new(Box::new(SamplerPolicy), ds.graph.num_nodes(), row_bytes);
+    let mut mem = DeviceMemory::t4();
+    let mut eng_stats = TransferStats::default();
+
+    // legacy upload traffic: every refresh re-crosses PCIe in full
+    let mut legacy_upload_bytes = 0u64;
+    for epoch in 0..3 {
+        legacy_s.begin_epoch(epoch);
+        engine_s.begin_epoch(epoch);
+        let nodes = legacy_s.cache_nodes().unwrap();
+        if legacy_s.cache_generation() != reference.generation {
+            legacy_upload_bytes += nodes.len() as u64 * row_bytes;
+        }
+        reference.upload(&nodes, legacy_s.cache_generation());
+        engine
+            .begin_epoch(epoch, engine_s.as_ref(), &mut mem, &model, &mut eng_stats)
+            .unwrap();
+        for i in 0..4 {
+            let chunk = &ds.train[i * 64..(i + 1) * 64];
+            let a = legacy_s.sample_batch(chunk, &ds.labels).unwrap();
+            let b = engine_s.sample_batch(chunk, &ds.labels).unwrap();
+            assert_eq!(a.input_nodes, b.input_nodes, "sampler determinism");
+            reference.serve_batch(&a.input_nodes, &model, &mut ref_stats);
+            engine.serve(&b.input_nodes, &model, &mut eng_stats);
+        }
+    }
+    let (hits, misses) = engine.hits_misses();
+    assert_eq!(hits, reference.hits, "hit totals must match the legacy path");
+    assert_eq!(misses, reference.misses);
+    assert_eq!(
+        eng_stats.bytes_saved_by_cache, ref_stats.bytes_saved_by_cache,
+        "serve-side savings must match the legacy path"
+    );
+    assert!(hits > 0);
+    // total engine PCIe traffic = legacy serve traffic + legacy upload
+    // traffic - the delta-upload savings (the only divergence allowed)
+    assert_eq!(
+        eng_stats.h2d_bytes,
+        ref_stats.h2d_bytes + legacy_upload_bytes - eng_stats.bytes_saved_by_delta
+    );
+    assert!(
+        eng_stats.bytes_saved_by_delta > 0,
+        "3 epochs of refresh on a degree-weighted cache must overlap"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 5. spec plumbing + static policies
+
+#[test]
+fn every_method_accepts_every_cache_policy() {
+    let ds = dataset();
+    let sh = shapes(16);
+    let reg = MethodRegistry::global();
+    for method in ["ns", "ladies:s-layer=64", "lazygcn", "gns:cache-fraction=0.02"] {
+        for cache in ["none", "gns", "auto", "degree", "presample:budget=64"] {
+            let sep = if method.contains(':') { "," } else { ":" };
+            let text = format!("{method}{sep}cache={cache}");
+            let spec = reg.parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+            let ctx = BuildContext::new(&ds, sh.clone(), 3);
+            let factory = reg
+                .factory(&spec, &ctx)
+                .unwrap_or_else(|e| panic!("{text}: {e}"));
+            // the policy is buildable for the method's own sampler
+            let tier = cache_policy_spec(&spec).unwrap();
+            let policy = build_policy(
+                &tier,
+                &TierBuild {
+                    graph: &ds.graph,
+                    train: &ds.train,
+                    labels: &ds.labels,
+                    chunk_size: 16,
+                    warmup_batches: 2,
+                },
+                || factory(PRESAMPLE_WORKER),
+            )
+            .unwrap_or_else(|e| panic!("{text}: {e}"));
+            let expected = match tier.kind {
+                PolicyKind::None => "none",
+                PolicyKind::SamplerDriven => "gns",
+                PolicyKind::Degree => "degree",
+                PolicyKind::Presample => "presample",
+            };
+            assert_eq!(policy.name(), expected, "{text}");
+        }
+    }
+    // bad cache specs are rejected at factory build time
+    let ctx = BuildContext::new(&ds, sh, 3);
+    for bad in ["ns:cache=bogus", "ns:cache=degree:budget=0", "ns:cache=gns:budget=4"] {
+        let spec = reg.parse(bad).unwrap();
+        assert!(reg.factory(&spec, &ctx).is_err(), "{bad} should fail");
+    }
+}
+
+#[test]
+fn cache_param_round_trips_through_display_and_json() {
+    let reg = MethodRegistry::global();
+    for text in ["ns:cache=degree:budget=128", "ladies:cache=presample,s-layer=64"] {
+        let spec = reg.parse(text).unwrap();
+        assert_eq!(spec.to_string(), text);
+        assert_eq!(reg.parse(&spec.to_string()).unwrap(), spec);
+        let j = spec.to_json().to_string_pretty();
+        let parsed = gns::util::json::Json::parse(&j).unwrap();
+        assert_eq!(reg.from_json(&parsed).unwrap(), spec);
+    }
+}
+
+#[test]
+fn degree_policy_pins_top_degree_rows_and_uploads_once() {
+    let ds = dataset();
+    let row_bytes = ds.features.row_bytes() as u64;
+    let budget = 100;
+    let policy = DegreePolicy::new(&ds.graph, budget);
+    let min_cached_degree = policy
+        .nodes()
+        .iter()
+        .map(|&v| ds.graph.degree(v))
+        .min()
+        .unwrap();
+    // no uncached node may out-degree the cached minimum
+    let max_uncached = (0..ds.graph.num_nodes() as NodeId)
+        .filter(|v| !policy.nodes().contains(v))
+        .map(|v| ds.graph.degree(v))
+        .max()
+        .unwrap();
+    assert!(max_uncached <= min_cached_degree, "tier must be the top-degree set");
+
+    let sh = shapes(32);
+    let mut s = sampler_for("ns", &ds, sh, 2);
+    let mut engine = TieringEngine::new(Box::new(policy), ds.graph.num_nodes(), row_bytes);
+    let mut mem = DeviceMemory::t4();
+    let model = TransferModel::default();
+    let mut stats = TransferStats::default();
+    s.begin_epoch(0);
+    engine.begin_epoch(0, s.as_ref(), &mut mem, &model, &mut stats).unwrap();
+    assert_eq!(engine.cache().resident_rows(), budget);
+    let after_first = stats.h2d_bytes;
+    s.begin_epoch(1);
+    engine.begin_epoch(1, s.as_ref(), &mut mem, &model, &mut stats).unwrap();
+    assert_eq!(stats.h2d_bytes, after_first, "static tier uploads exactly once");
+    // a hub-heavy tier hits under plain NS
+    let mb = s.sample_batch(&ds.train[..32], &ds.labels).unwrap();
+    engine.serve(&mb.input_nodes, &model, &mut stats);
+    let (hits, _) = engine.hits_misses();
+    assert!(hits > 0, "top-degree tier should catch NS traffic");
+}
+
+#[test]
+fn presample_policy_pins_warmup_frequent_rows_within_budget() {
+    let ds = dataset();
+    let sh = shapes(32);
+    let row_bytes = ds.features.row_bytes() as u64;
+    let budget = 200;
+    let mut warm = sampler_for("ns", &ds, sh.clone(), 44);
+    let policy = PresamplePolicy::from_warmup(
+        warm.as_mut(),
+        &ds.train,
+        &ds.labels,
+        32,
+        8,
+        budget,
+        ds.graph.num_nodes(),
+    )
+    .unwrap();
+    assert!(policy.nodes().len() <= budget);
+    assert!(!policy.nodes().is_empty());
+
+    let mut s = sampler_for("ns", &ds, sh, 45);
+    let mut engine = TieringEngine::new(Box::new(policy), ds.graph.num_nodes(), row_bytes);
+    let mut mem = DeviceMemory::t4();
+    let model = TransferModel::default();
+    let mut stats = TransferStats::default();
+    s.begin_epoch(0);
+    engine.begin_epoch(0, s.as_ref(), &mut mem, &model, &mut stats).unwrap();
+    for i in 0..4 {
+        let mb = s
+            .sample_batch(&ds.train[i * 32..(i + 1) * 32], &ds.labels)
+            .unwrap();
+        engine.serve(&mb.input_nodes, &model, &mut stats);
+    }
+    let (hits, misses) = engine.hits_misses();
+    assert!(hits > 0, "presampled tier should catch repeat traffic");
+    assert!(misses > 0, "a 200-row tier cannot catch everything");
+}
+
+#[test]
+fn policy_spec_budget_defaults_and_parse_surface() {
+    let s = PolicySpec::parse("degree").unwrap();
+    assert_eq!(s.budget_or_default(10_000), 100);
+    assert_eq!(
+        PolicySpec::parse("presample:budget=7").unwrap(),
+        PolicySpec { kind: PolicyKind::Presample, budget: Some(7) }
+    );
+    assert!(PolicySpec::parse("lru").is_err());
+}
+
+// ---------------------------------------------------------------------------
+// plan reuse across batches (no stale state)
+
+#[test]
+fn engine_plan_is_rebuilt_per_batch() {
+    let ds = dataset();
+    let row_bytes = ds.features.row_bytes() as u64;
+    let policy = DegreePolicy::new(&ds.graph, 50);
+    let hot: Vec<NodeId> = policy.nodes().to_vec();
+    let mut engine =
+        TieringEngine::new(Box::new(policy), ds.graph.num_nodes(), row_bytes);
+    let mut mem = DeviceMemory::t4();
+    let model = TransferModel::default();
+    let mut stats = TransferStats::default();
+    let sh = shapes(16);
+    let mut s = sampler_for("ns", &ds, sh, 1);
+    s.begin_epoch(0);
+    engine.begin_epoch(0, s.as_ref(), &mut mem, &model, &mut stats).unwrap();
+    engine.plan_batch(&hot);
+    assert_eq!(engine.last_plan().miss_rows(), 0);
+    assert_eq!(engine.last_plan().runs().len(), 1);
+    engine.plan_batch(&[]);
+    assert_eq!(engine.last_plan().total_rows(), 0);
+    assert!(engine.last_plan().runs().is_empty());
+}
