@@ -1,11 +1,15 @@
 # Build/verify entry points. `make check` is the tier-1 gate: it builds the
 # library, CLI, every bench and example (so API breaks in them fail the
-# build), runs the test suite, and verifies formatting.
+# build), runs the test suite, lints with clippy at -D warnings, verifies
+# formatting, and smoke-runs the bench binaries (which emit BENCH_*.json —
+# gitignored locally, uploaded as artifacts by CI so the perf trajectory
+# accumulates per PR). `make ci` chains `check` + the python suite for
+# local parity with .github/workflows/ci.yml.
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build check test fmt bench artifacts clean
+.PHONY: build check ci test fmt clippy bench artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -13,19 +17,30 @@ build:
 check:
 	$(CARGO) build --release --benches --examples
 	$(CARGO) test -q
+	$(CARGO) clippy --all-targets -- -D warnings
 	$(CARGO) fmt --check
-	$(CARGO) bench --bench micro_hotpath -- --scale 0.1 --smoke
-	$(CARGO) bench --bench tiering_policies -- --scale 0.1 --smoke
+	$(CARGO) bench --bench micro_hotpath -- --scale 0.1 --smoke --json BENCH_hotpath.json
+	$(CARGO) bench --bench tiering_policies -- --scale 0.1 --smoke --json BENCH_tiering.json
+	$(CARGO) bench --bench shard_scaling -- --scale 0.1 --smoke --json BENCH_shard.json
+
+# The full local gate: everything CI runs (rust + python) in one target.
+ci: check
+	cd python && $(PYTHON) -m pytest tests -q
 
 test:
 	$(CARGO) test -q
 
-# Hot-path perf numbers: writes BENCH_hotpath.json and BENCH_tiering.json
-# at the repo root so the per-PR perf trajectory is tracked (docs/PERF.md,
-# docs/TIERING.md). Both are gitignored.
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+# Hot-path perf numbers: writes BENCH_hotpath.json, BENCH_tiering.json and
+# BENCH_shard.json at the repo root so the per-PR perf trajectory is
+# tracked (docs/PERF.md, docs/TIERING.md, docs/SHARDING.md). All are
+# gitignored.
 bench:
 	$(CARGO) bench --bench micro_hotpath -- --scale 0.5 --json BENCH_hotpath.json
 	$(CARGO) bench --bench tiering_policies -- --scale 0.5 --json BENCH_tiering.json
+	$(CARGO) bench --bench shard_scaling -- --scale 0.5 --json BENCH_shard.json
 
 fmt:
 	$(CARGO) fmt

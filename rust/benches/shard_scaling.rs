@@ -1,0 +1,177 @@
+//! Shard-scaling bench: the same products-s sampling workload executed
+//! as K ∈ {1, 2, 4, 8} shard-parallel pipelines (one device feature tier
+//! per shard, hash or range partitioner), reporting per-batch serve cost,
+//! shard-local traffic fraction, cross-shard fetch bytes, and the edge
+//! cut of the partition — the scaling surface the sharding subsystem
+//! opens (docs/SHARDING.md).
+//!
+//! `--json <path>` emits machine-readable results (`make bench` writes
+//! BENCH_shard.json); `--smoke` shrinks the sweep so `make check` and CI
+//! keep this binary from rotting.
+
+use gns::device::{DeviceMemory, TransferModel, TransferStats};
+use gns::features::build_dataset;
+use gns::sampling::spec::{cache_policy_spec, BuildContext, MethodRegistry};
+use gns::sampling::{BlockShapes, MiniBatch};
+use gns::shard::ShardSpec;
+use gns::tiering::{build_policies, TierBuild, TieringEngine, PRESAMPLE_WORKER};
+use gns::util::cli::Args;
+use gns::util::json::{self, Json};
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse_env();
+    if let Err(e) =
+        args.check_known(&["scale", "epochs", "batches", "part", "method", "json", "smoke"])
+    {
+        eprintln!("shard_scaling: {e}");
+        std::process::exit(2);
+    }
+    let scale = args.f64_or("scale", 0.5);
+    let smoke = args.bool("smoke");
+    let epochs = if smoke { 1 } else { args.usize_or("epochs", 2) };
+    let part = args.str_or("part", "hash").to_string();
+    let method = args.str_or("method", "gns:cache-fraction=0.01").to_string();
+    let sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+
+    let ds = build_dataset("products-s", scale, 1);
+    println!("workload: products-s x{scale} ({method}) — {}", ds.graph.stats());
+    let batch = 256usize;
+    let shapes = BlockShapes::new(vec![20000, 12000, 2048, batch], vec![5, 10, 15]);
+    let reg = MethodRegistry::global();
+    let model = TransferModel::default();
+    let row_bytes = ds.features.row_bytes() as u64;
+    let dim = ds.features.dim();
+    let num_nodes = ds.graph.num_nodes();
+    let mut x0 = vec![0f32; shapes.level_sizes[0] * dim];
+    // total batches held constant across K so the sweep compares like
+    // against like (each shard serves ~total/K)
+    let total_batches = if smoke { 4 } else { args.usize_or("batches", 32) };
+
+    println!(
+        "{:>3} {:>12} {:>8} {:>12} {:>12} {:>8} {:>9}",
+        "K", "ns/batch", "local%", "x-shard MB", "h2d MB", "hit%", "edge-cut"
+    );
+    let mut entries: Vec<Json> = Vec::new();
+    for &k in sweep {
+        let shard_spec = ShardSpec::parse(&format!("{k}:part={part}"))
+            .unwrap_or_else(|e| panic!("shard spec: {e}"));
+        let router = shard_spec.router(num_nodes);
+        let targets = ds.train_by_shard(&router);
+        let spec = reg.parse(&method).unwrap();
+        let ctx = BuildContext::new(&ds, shapes.clone(), 7);
+        let factory = reg.factory(&spec, &ctx).unwrap();
+        let tier_spec = cache_policy_spec(&spec).unwrap();
+        let mut leader = factory(0);
+        // one engine + device + policy instance per shard (each shard
+        // simulates its own GPU, exactly like the trainer's lanes); the
+        // expensive tier state is computed once and shared across lanes
+        let policies = build_policies(
+            &tier_spec,
+            &TierBuild {
+                graph: &ds.graph,
+                train: &ds.train,
+                labels: &ds.labels,
+                chunk_size: batch,
+                warmup_batches: 2,
+            },
+            || factory(PRESAMPLE_WORKER),
+            k,
+        )
+        .unwrap();
+        let mut lanes: Vec<(TieringEngine, DeviceMemory)> = policies
+            .into_iter()
+            .map(|policy| {
+                (
+                    TieringEngine::new(policy, num_nodes, row_bytes),
+                    DeviceMemory::t4(),
+                )
+            })
+            .collect();
+        let mut stats = TransferStats::default();
+        let mut slot = MiniBatch::default();
+        let per_shard = (total_batches / k).max(1);
+        let mut served = 0usize;
+        let mut local_rows = 0u64;
+        let mut remote_rows = 0u64;
+        let t0 = Instant::now();
+        for epoch in 0..epochs {
+            leader.begin_epoch(epoch);
+            for (engine, mem) in &mut lanes {
+                engine
+                    .begin_epoch(epoch, leader.as_ref(), mem, &model, &mut stats)
+                    .unwrap();
+            }
+            for (shard, (engine, _mem)) in lanes.iter_mut().enumerate() {
+                let own = &targets[shard];
+                for chunk in own.chunks(batch).take(per_shard) {
+                    leader
+                        .sample_batch_into(chunk, &ds.labels, &mut slot)
+                        .unwrap();
+                    engine.plan_batch(&slot.input_nodes);
+                    let n = slot.input_nodes.len() * dim;
+                    ds.features.slice_runs_into(
+                        &slot.input_nodes,
+                        engine.last_plan().runs(),
+                        &mut x0[..n],
+                    );
+                    engine.serve_planned(&model, &mut stats);
+                    let (local, remote) = router.count(shard as u32, &slot.input_nodes);
+                    local_rows += local;
+                    remote_rows += remote;
+                    served += 1;
+                }
+            }
+        }
+        let ns_per_batch = t0.elapsed().as_secs_f64() * 1e9 / served.max(1) as f64;
+        let cross_shard_bytes = remote_rows * row_bytes;
+        let local_frac = local_rows as f64 / (local_rows + remote_rows).max(1) as f64;
+        let (hits, misses): (u64, u64) = lanes.iter().fold((0, 0), |(h, m), (e, _)| {
+            let (eh, em) = e.hits_misses();
+            (h + eh, m + em)
+        });
+        let hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+        let edge_cut_frac = if k > 1 {
+            ds.graph.edge_cut(router.assignment()) as f64 / ds.graph.num_edges().max(1) as f64
+        } else {
+            0.0
+        };
+        let mb = |b: u64| b as f64 / (1 << 20) as f64;
+        println!(
+            "{k:>3} {ns_per_batch:>12.0} {:>7.1}% {:>12.1} {:>12.1} {:>7.1}% {:>8.1}%",
+            100.0 * local_frac,
+            mb(cross_shard_bytes),
+            mb(stats.h2d_bytes),
+            100.0 * hit_rate,
+            100.0 * edge_cut_frac,
+        );
+        entries.push(json::obj(vec![
+            ("shards", Json::Num(k as f64)),
+            ("part", Json::Str(part.clone())),
+            ("ns_per_batch", Json::Num(ns_per_batch)),
+            ("batches", Json::Num(served as f64)),
+            ("local_fraction", Json::Num(local_frac)),
+            ("cross_shard_bytes", Json::Num(cross_shard_bytes as f64)),
+            ("h2d_bytes", Json::Num(stats.h2d_bytes as f64)),
+            ("hit_rate", Json::Num(hit_rate)),
+            ("edge_cut_fraction", Json::Num(edge_cut_frac)),
+        ]));
+        for (engine, mem) in &mut lanes {
+            engine.release(mem);
+        }
+    }
+
+    if let Some(path) = args.get("json") {
+        let doc = json::obj(vec![
+            ("bench", Json::Str("shard_scaling".to_string())),
+            ("workload", Json::Str(format!("products-s x{scale}"))),
+            ("method", Json::Str(method.clone())),
+            ("smoke", Json::Bool(smoke)),
+            ("epochs", Json::Num(epochs as f64)),
+            ("configs", json::arr(entries)),
+        ]);
+        std::fs::write(path, doc.to_string_pretty())
+            .unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
+    }
+}

@@ -6,19 +6,85 @@
 //! Isolation is measured from the mini-batch block format
 //! (`sampling::first_layer_isolation`) so the experiment needs no sampler
 //! internals and the sampler itself comes from the `MethodRegistry`.
+//!
+//! A second block reports **shard scaling** on the same analogue: the
+//! partition quality of `hash` vs `range` at K ∈ {1, 2, 4, 8} shards —
+//! target balance, edge-cut fraction, and the fraction of sampled input
+//! rows a shard must fetch remotely under NS (docs/SHARDING.md).
 
 use super::harness::ExpOptions;
 use super::report::save;
 use crate::features::build_dataset;
 use crate::sampling::spec::{BuildContext, MethodRegistry};
-use crate::sampling::{first_layer_isolation, BlockShapes};
+use crate::sampling::{first_layer_isolation, BlockShapes, MiniBatch};
+use crate::shard::ShardSpec;
 use crate::util::json::{arr, num, obj, Json};
 use anyhow::Result;
 
 pub const SWEEP: [usize; 5] = [256, 512, 1000, 5000, 10000];
 
-pub fn isolation_fraction(s_layer: usize, opts: &ExpOptions) -> Result<f64> {
-    let ds = build_dataset("products-s", opts.scale, opts.seed);
+/// Shard counts of the scaling block (K=1 anchors the unsharded baseline).
+pub const SHARD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// Partition-quality numbers for one (K, partitioner) cell.
+pub struct ShardScalingRow {
+    pub shards: usize,
+    pub part: &'static str,
+    /// max shard target count / mean shard target count (1.0 = perfect).
+    pub balance: f64,
+    /// cross-shard edges / total edges.
+    pub edge_cut: f64,
+    /// remote input rows / total input rows over an NS sampling probe.
+    pub remote_frac: f64,
+}
+
+/// Measure one shard-scaling cell: partition `ds`'s train targets, probe
+/// a few NS batches per shard, and classify their input rows through the
+/// `ShardRouter` — no AOT runtime needed. Takes the dataset by reference
+/// so a sweep builds it once, not per cell.
+pub fn shard_scaling_row(
+    ds: &crate::features::Dataset,
+    k: usize,
+    part: &'static str,
+    seed: u64,
+) -> Result<ShardScalingRow> {
+    let spec = ShardSpec::parse(&format!("{k}:part={part}"))?;
+    let router = spec.router(ds.graph.num_nodes());
+    let targets = ds.train_by_shard(&router);
+    let mean = ds.train.len() as f64 / k.max(1) as f64;
+    let balance = targets.iter().map(Vec::len).max().unwrap_or(0) as f64 / mean.max(1.0);
+    let edge_cut = if k > 1 {
+        ds.graph.edge_cut(router.assignment()) as f64 / ds.graph.num_edges().max(1) as f64
+    } else {
+        0.0
+    };
+
+    let shapes = BlockShapes::new(vec![20000, 12000, 2048, 256], vec![5, 10, 15]);
+    let reg = MethodRegistry::global();
+    let ctx = BuildContext::new(ds, shapes, seed);
+    let mut sampler = reg.sampler(&reg.parse("ns")?, &ctx, 0)?;
+    sampler.begin_epoch(0);
+    let mut slot = MiniBatch::default();
+    let (mut local, mut remote) = (0u64, 0u64);
+    for (shard, own) in targets.iter().enumerate() {
+        for chunk in own.chunks(256).take(2) {
+            sampler.sample_batch_into(chunk, &ds.labels, &mut slot)?;
+            let (l, r) = router.count(shard as u32, &slot.input_nodes);
+            local += l;
+            remote += r;
+        }
+    }
+    let remote_frac = remote as f64 / (local + remote).max(1) as f64;
+    Ok(ShardScalingRow { shards: k, part, balance, edge_cut, remote_frac })
+}
+
+/// Isolation fraction for one LADIES sweep point. Takes the dataset by
+/// reference so a sweep builds it once, not per point.
+pub fn isolation_fraction(
+    ds: &crate::features::Dataset,
+    s_layer: usize,
+    seed: u64,
+) -> Result<f64> {
     // capacities sized for the largest sweep point
     let shapes = BlockShapes::new(
         vec![40000, 31000, 20500, 256],
@@ -26,7 +92,7 @@ pub fn isolation_fraction(s_layer: usize, opts: &ExpOptions) -> Result<f64> {
     );
     let reg = MethodRegistry::global();
     let spec = reg.parse(&format!("ladies:s-layer={s_layer}"))?;
-    let ctx = BuildContext::new(&ds, shapes, opts.seed);
+    let ctx = BuildContext::new(ds, shapes, seed);
     let mut s = reg.sampler(&spec, &ctx, 0)?;
     let b = 256;
     let (mut isolated, mut total) = (0usize, 0usize);
@@ -44,18 +110,51 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
         "Table 5: % of isolated first-layer nodes in LADIES (products-s)\n",
     );
     text.push_str("  #sampled/layer   % isolated\n");
+    // one dataset build shared by the isolation sweep AND the
+    // shard-scaling block (both probe the same products-s analogue)
+    let ds = build_dataset("products-s", opts.scale, opts.seed);
     let mut rows: Vec<Json> = Vec::new();
     for &s_layer in &SWEEP {
-        let frac = isolation_fraction(s_layer, opts)?;
+        let frac = isolation_fraction(&ds, s_layer, opts.seed)?;
         text.push_str(&format!("  {:>13} {:>11.1}\n", s_layer, 100.0 * frac));
         rows.push(obj(vec![
             ("s_layer", num(s_layer as f64)),
             ("isolated_pct", num(100.0 * frac)),
         ]));
     }
+
+    text.push_str(
+        "\nShard scaling (products-s): partition quality, hash vs range\n\
+         \x20 K  part    balance  edge-cut%  remote-input%\n",
+    );
+    let mut shard_rows: Vec<Json> = Vec::new();
+    // K=1 ignores the partitioner, so the unsharded anchor is emitted once
+    for &k in &SHARD_SWEEP {
+        let parts: &[&'static str] = if k == 1 { &["hash"] } else { &["hash", "range"] };
+        for &part in parts {
+            let row = shard_scaling_row(&ds, k, part, opts.seed)?;
+            text.push_str(&format!(
+                "  {:>2}  {:<6} {:>8.3} {:>10.1} {:>14.1}\n",
+                row.shards,
+                row.part,
+                row.balance,
+                100.0 * row.edge_cut,
+                100.0 * row.remote_frac,
+            ));
+            shard_rows.push(obj(vec![
+                ("shards", num(row.shards as f64)),
+                ("part", Json::Str(row.part.to_string())),
+                ("balance", num(row.balance)),
+                ("edge_cut_pct", num(100.0 * row.edge_cut)),
+                ("remote_input_pct", num(100.0 * row.remote_frac)),
+            ]));
+        }
+    }
+
     save(&opts.results_dir, "table5", &text, obj(vec![
         ("scale", num(opts.scale)),
         ("rows", arr(rows)),
+        ("shard_scaling", arr(shard_rows)),
     ]))
 }
 
@@ -66,8 +165,26 @@ mod tests {
     #[test]
     fn isolation_decreases_with_layer_size() {
         let opts = ExpOptions { scale: 0.15, ..Default::default() };
-        let small = isolation_fraction(64, &opts).unwrap();
-        let large = isolation_fraction(4000, &opts).unwrap();
+        let ds = build_dataset("products-s", opts.scale, opts.seed);
+        let small = isolation_fraction(&ds, 64, opts.seed).unwrap();
+        let large = isolation_fraction(&ds, 4000, opts.seed).unwrap();
         assert!(small > large, "small={small} large={large}");
+    }
+
+    #[test]
+    fn shard_scaling_rows_behave() {
+        let opts = ExpOptions { scale: 0.1, ..Default::default() };
+        let ds = build_dataset("products-s", opts.scale, opts.seed);
+        // K=1: everything local, nothing cut, perfectly balanced
+        let one = shard_scaling_row(&ds, 1, "hash", opts.seed).unwrap();
+        assert_eq!(one.edge_cut, 0.0);
+        assert_eq!(one.remote_frac, 0.0);
+        assert!((one.balance - 1.0).abs() < 1e-9, "balance {}", one.balance);
+        // K=4 hash: structure-free partition ⇒ remote traffic appears and
+        // the edge cut is near the random expectation (K-1)/K
+        let four = shard_scaling_row(&ds, 4, "hash", opts.seed).unwrap();
+        assert!(four.remote_frac > 0.0);
+        assert!(four.edge_cut > 0.5, "edge cut {}", four.edge_cut);
+        assert!(four.balance < 1.5, "hash balance {}", four.balance);
     }
 }

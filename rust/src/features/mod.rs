@@ -106,6 +106,16 @@ pub struct Dataset {
     pub test: Vec<NodeId>,
 }
 
+impl Dataset {
+    /// Split the train targets into per-shard lists (stable order) for
+    /// shard-parallel pipelines: shard `s` trains on exactly the targets
+    /// it owns. Under a single-shard router the split is `[self.train]`
+    /// verbatim — the start of the `shards=1 == unsharded` guarantee.
+    pub fn train_by_shard(&self, router: &crate::shard::ShardRouter) -> Vec<Vec<NodeId>> {
+        router.split_targets(&self.train)
+    }
+}
+
 /// Feature-generation parameters.
 #[derive(Debug, Clone)]
 pub struct FeatureParams {
@@ -284,6 +294,24 @@ mod tests {
         let mut all: Vec<NodeId> = tr.iter().chain(&va).chain(&te).copied().collect();
         all.sort_unstable();
         assert_eq!(all, (0..1000u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn train_by_shard_covers_the_split_exactly_once() {
+        let ds = build_dataset("yelp-s", 0.05, 3);
+        let router = crate::shard::ShardSpec::parse("3:part=range")
+            .unwrap()
+            .router(ds.graph.num_nodes());
+        let split = ds.train_by_shard(&router);
+        assert_eq!(split.len(), 3);
+        let mut all: Vec<NodeId> = split.iter().flatten().copied().collect();
+        all.sort_unstable();
+        let mut expect = ds.train.clone();
+        expect.sort_unstable();
+        assert_eq!(all, expect);
+        // single shard: the split is the train list verbatim
+        let single = ds.train_by_shard(&crate::shard::ShardRouter::single());
+        assert_eq!(single, vec![ds.train.clone()]);
     }
 
     #[test]

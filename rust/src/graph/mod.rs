@@ -92,6 +92,28 @@ impl CsrGraph {
         }
     }
 
+    /// Count directed CSR entries whose endpoints land in different
+    /// shards under `assignment` (node → shard id, one entry per node).
+    /// An undirected edge stored both ways contributes 2, consistent
+    /// with [`CsrGraph::num_edges`] — divide by `num_edges` for the edge
+    /// cut *fraction* a partitioner quality report wants.
+    pub fn edge_cut(&self, assignment: &[u32]) -> u64 {
+        assert_eq!(
+            assignment.len(),
+            self.num_nodes(),
+            "assignment must cover every node"
+        );
+        let mut cut = 0u64;
+        for (v, &sv) in assignment.iter().enumerate() {
+            for &u in self.neighbors(v as NodeId) {
+                if assignment[u as usize] != sv {
+                    cut += 1;
+                }
+            }
+        }
+        cut
+    }
+
     /// Structural invariant check used by tests and after deserialization:
     /// offsets monotone, adj ids in range, offsets cover adj exactly.
     pub fn validate(&self) -> Result<(), String> {
@@ -175,6 +197,17 @@ mod tests {
         assert_eq!(s.num_nodes, 4);
         assert_eq!(s.isolated_nodes, 2);
         assert_eq!(s.max_degree, 1);
+    }
+
+    #[test]
+    fn edge_cut_counts_cross_shard_entries() {
+        let g = path3(); // 0 - 1 - 2
+        // one shard: nothing crosses
+        assert_eq!(g.edge_cut(&[0, 0, 0]), 0);
+        // split {0,1} | {2}: the 1-2 edge crosses, stored both ways
+        assert_eq!(g.edge_cut(&[0, 0, 1]), 2);
+        // fully split: every stored entry crosses
+        assert_eq!(g.edge_cut(&[0, 1, 2]), g.num_edges() as u64);
     }
 
     #[test]

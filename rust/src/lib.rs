@@ -22,6 +22,7 @@ pub mod pipeline;
 pub mod runtime;
 pub mod sampling;
 pub mod session;
+pub mod shard;
 pub mod graph;
 pub mod tiering;
 pub mod util;

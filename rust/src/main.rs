@@ -23,6 +23,7 @@ const TRAIN_FLAGS: &[(&str, &str)] = &[
     ("method", "method spec: name[:key=value,...] — see METHODS"),
     ("cache-fraction", "gns shorthand for --method gns:cache-fraction=F"),
     ("cache-period", "gns shorthand for --method gns:update-period=P"),
+    ("shards", "shorthand for the method param shards=K[:part=hash|range]"),
 ];
 
 fn main() {
@@ -75,6 +76,11 @@ fn run(args: &Args) -> Result<()> {
                     spec = spec.with(key, value);
                 }
             }
+            // every method accepts shards=, so the shorthand needs no
+            // method check; validation happens at factory build
+            if let Some(v) = args.get("shards") {
+                spec = spec.with("shards", v);
+            }
             println!(
                 "training {} ({spec}) on {dataset} (scale {}, {} epochs, {} worker(s))",
                 registry.label(&spec),
@@ -107,6 +113,26 @@ fn run(args: &Args) -> Result<()> {
                     gns::util::fmt_bytes(last.transfer.h2d_bytes),
                     gns::util::fmt_bytes(last.transfer.d2d_bytes),
                     gns::util::fmt_bytes(last.transfer.bytes_saved_by_cache),
+                );
+            }
+            if r.shards.len() > 1 {
+                for s in &r.shards {
+                    println!(
+                        "shard {:>2}: targets {:>7}  batches {:>5}  local {:.1}%  \
+                         cross-shard {}  cache-hit {:.1}%",
+                        s.shard,
+                        s.train_targets,
+                        s.batches,
+                        100.0 * s.local_fraction(),
+                        gns::util::fmt_bytes(s.cross_shard_bytes),
+                        100.0 * s.cache_hits as f64
+                            / (s.cache_hits + s.cache_misses).max(1) as f64,
+                    );
+                }
+                println!(
+                    "cross-shard total: {} ({:.1}% of input rows local)",
+                    gns::util::fmt_bytes(r.cross_shard_bytes()),
+                    100.0 * r.local_fraction(),
                 );
             }
             Ok(())

@@ -16,6 +16,15 @@
 //! batch it partitions the input nodes into hit/miss runs once
 //! (`GatherPlan`) and both the host slice and the transfer accounting
 //! read that single partition.
+//!
+//! **Shard-parallel execution** (docs/SHARDING.md): the trainer holds one
+//! *lane* per shard — the shard's own train targets, `TieringEngine`, and
+//! simulated device (`DeviceMemory`), i.e. one GPU per shard. Each epoch
+//! runs every lane's own `EpochPlan` + worker pool and classifies each
+//! batch's input rows as shard-local vs remote via the `ShardRouter`
+//! (cross-shard bytes are the `ShardReport` roll-up in `RunResult`).
+//! `shards=1` builds exactly one lane and is metric-identical to the
+//! pre-sharding pipeline (tests/shard.rs).
 
 use super::recycle::BufferPool;
 use super::worker::{run_epoch_sampling, EpochPlan};
@@ -23,6 +32,7 @@ use crate::device::{ComputeModel, DeviceMemory, TransferModel, TransferStats};
 use crate::features::Dataset;
 use crate::runtime::{micro_f1, Runtime, TrainState};
 use crate::sampling::{MiniBatch, Sampler};
+use crate::shard::{ShardReport, ShardRouter, ShardSpec};
 use crate::tiering::{CachePolicy, SamplerPolicy, TieringEngine};
 use crate::util::rng::Pcg;
 use crate::util::timer::{Stage, StageClock};
@@ -96,6 +106,10 @@ pub struct TrainOptions {
     pub compute_model: ComputeModel,
     /// validate every batch against the block invariants (tests/debug).
     pub paranoid_validate: bool,
+    /// shard-parallel execution: one pipeline lane (targets + worker pool
+    /// + device tier) per shard. The default single shard is the
+    /// unsharded pipeline.
+    pub shards: ShardSpec,
 }
 
 impl Default for TrainOptions {
@@ -111,6 +125,7 @@ impl Default for TrainOptions {
             transfer: TransferModel::default(),
             compute_model: ComputeModel::default(),
             paranoid_validate: cfg!(debug_assertions),
+            shards: ShardSpec::default(),
         }
     }
 }
@@ -120,14 +135,36 @@ impl Default for TrainOptions {
 /// `sampling::spec::SamplerFactory`, produced by `MethodRegistry`.
 pub type SamplerFactory = dyn Fn(usize) -> Box<dyn Sampler> + Send + Sync;
 
+/// One shard's slice of the pipeline: its train targets, its simulated
+/// device, its feature tier, and its traffic ledger. `shards=1` builds
+/// exactly one lane, which *is* the unsharded pipeline.
+struct ShardLane {
+    shard: u32,
+    /// train targets this shard owns (stable order; lane 0 of a
+    /// single-shard trainer holds the full train split verbatim).
+    targets: Vec<crate::graph::NodeId>,
+    /// this shard's simulated GPU (model replica + feature tier).
+    device_mem: DeviceMemory,
+    /// this shard's feature-tiering subsystem: cache policy +
+    /// device-resident feature cache + per-batch gather plan.
+    tiering: TieringEngine,
+    /// cumulative shard-routing ledger (see ShardReport).
+    batches: u64,
+    local_rows: u64,
+    remote_rows: u64,
+}
+
 pub struct Trainer {
     pub runtime: Runtime,
     pub dataset: Arc<Dataset>,
     pub state: TrainState,
-    device_mem: DeviceMemory,
-    /// the feature-tiering subsystem: cache policy + device-resident
-    /// feature cache + per-batch gather plan.
-    tiering: TieringEngine,
+    /// node→shard ownership map shared by every lane (trivial for 1 shard).
+    router: ShardRouter,
+    /// one pipeline lane per shard; lanes run their epochs sequentially
+    /// on this single-host testbed, each against its own device model.
+    lanes: Vec<ShardLane>,
+    /// feature row size (cross-shard byte accounting).
+    row_bytes: u64,
     x0_scratch: Vec<f32>,
     /// high-water mark of filled rows in x0_scratch (§Perf: zero only the
     /// previously-dirtied tail instead of the whole padded block).
@@ -154,43 +191,103 @@ impl Trainer {
         );
         let state = runtime.init_state(opts.seed);
         let x0_len = runtime.meta.level_sizes[0] * runtime.meta.feature_dim;
-        let mut device_mem = DeviceMemory::new(opts.device_capacity);
-        // model/optimizer state + one batch's blocks live on device too;
-        // account them once (they are constant across steps).
+        // model/optimizer state + one batch's blocks live on each shard's
+        // device (one model replica per simulated GPU); account them once
+        // per lane (they are constant across steps).
         let static_bytes = (3 * runtime.meta.num_param_elems() * 4) as u64
             + (x0_len * 4) as u64;
-        device_mem
-            .alloc(static_bytes)
-            .context("device cannot hold model state + batch block")?;
-        // default policy: follow the sampler's own cache (GNS); cache-less
-        // samplers publish generation 0 and the tier stays empty
-        let tiering = TieringEngine::new(
-            Box::new(SamplerPolicy),
-            dataset.features.num_rows(),
-            dataset.features.row_bytes() as u64,
-        );
+        let router = opts.shards.router(dataset.graph.num_nodes());
+        let targets_by_shard = dataset.train_by_shard(&router);
+        let row_bytes = dataset.features.row_bytes() as u64;
+        let mut lanes = Vec::with_capacity(targets_by_shard.len());
+        for (shard, targets) in targets_by_shard.into_iter().enumerate() {
+            let mut device_mem = DeviceMemory::new(opts.device_capacity);
+            device_mem
+                .alloc(static_bytes)
+                .context("device cannot hold model state + batch block")?;
+            // default policy: follow the sampler's own cache (GNS);
+            // cache-less samplers publish generation 0 and the tier stays
+            // empty
+            let tiering = TieringEngine::new(
+                Box::new(SamplerPolicy),
+                dataset.features.num_rows(),
+                row_bytes,
+            );
+            lanes.push(ShardLane {
+                shard: shard as u32,
+                targets,
+                device_mem,
+                tiering,
+                batches: 0,
+                local_rows: 0,
+                remote_rows: 0,
+            });
+        }
         Ok(Trainer {
             runtime,
             dataset,
             state,
-            device_mem,
-            tiering,
+            router,
+            lanes,
+            row_bytes,
             x0_scratch: vec![0.0; x0_len],
             x0_dirty_elems: 0,
             buffer_pool: Arc::new(BufferPool::new()),
         })
     }
 
-    /// Install a different cache policy (degree/presample static tiers,
-    /// `none`, …). Any rows resident under the old policy are released.
+    /// Install a different cache policy on **shard 0** (degree/presample
+    /// static tiers, `none`, …). Any rows resident under the old policy
+    /// are released. Multi-shard trainers install one policy instance per
+    /// lane via [`Trainer::set_lane_cache_policy`].
     pub fn set_cache_policy(&mut self, policy: Box<dyn CachePolicy>) {
-        self.tiering.replace_policy(policy, &mut self.device_mem);
+        self.set_lane_cache_policy(0, policy);
     }
 
-    /// The feature-tiering engine (policy name, device cache telemetry,
-    /// last batch's gather plan).
+    /// Install a cache policy on one shard lane (each simulated GPU owns
+    /// an independent tier).
+    pub fn set_lane_cache_policy(&mut self, lane: usize, policy: Box<dyn CachePolicy>) {
+        let l = &mut self.lanes[lane];
+        l.tiering.replace_policy(policy, &mut l.device_mem);
+    }
+
+    /// Number of shard lanes (1 = unsharded pipeline).
+    pub fn num_shards(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The node→shard ownership map.
+    pub fn router(&self) -> &ShardRouter {
+        &self.router
+    }
+
+    /// Shard 0's feature-tiering engine (policy name, device cache
+    /// telemetry, last batch's gather plan) — the whole pipeline's engine
+    /// for single-shard trainers.
     pub fn tiering(&self) -> &TieringEngine {
-        &self.tiering
+        &self.lanes[0].tiering
+    }
+
+    /// Per-shard traffic roll-up (local vs remote rows, cross-shard
+    /// bytes, cache telemetry) accumulated across the run so far.
+    pub fn shard_reports(&self) -> Vec<ShardReport> {
+        self.lanes
+            .iter()
+            .map(|l| {
+                let (cache_hits, cache_misses) = l.tiering.hits_misses();
+                ShardReport {
+                    shard: l.shard,
+                    train_targets: l.targets.len(),
+                    batches: l.batches,
+                    local_rows: l.local_rows,
+                    remote_rows: l.remote_rows,
+                    cross_shard_bytes: l.remote_rows * self.row_bytes,
+                    cache_hits,
+                    cache_misses,
+                    device_peak: l.device_mem.peak(),
+                }
+            })
+            .collect()
     }
 
     /// Train `opts.epochs` epochs with samplers from `factory`.
@@ -222,7 +319,7 @@ impl Trainer {
             (1..=opts.workers.max(1)).map(|w| factory(w)).collect();
         for epoch in 0..opts.epochs {
             let (report, returned) =
-                self.train_epoch(&mut leader, opts, epoch, &mut rng, chunk_size, workers)?;
+                self.train_epoch(leader.as_mut(), opts, epoch, &mut rng, chunk_size, workers)?;
             workers = returned;
             reports.push(report);
         }
@@ -244,16 +341,19 @@ impl Trainer {
         let bs = self.runtime.meta.batch_size;
         let workers: Vec<Box<dyn Sampler>> =
             (1..=opts.workers.max(1)).map(|w| factory(w)).collect();
-        self.train_epoch(&mut leader, opts, epoch, &mut rng, bs, workers)
+        self.train_epoch(leader.as_mut(), opts, epoch, &mut rng, bs, workers)
             .map(|(report, _workers)| report)
     }
 
-    /// One epoch. Takes the worker samplers by value and returns them so
-    /// multi-epoch callers reuse the instances (on error the samplers are
-    /// dropped; the caller rebuilds on retry).
+    /// One epoch across every shard lane. Takes the worker samplers by
+    /// value and returns them so multi-epoch callers reuse the instances
+    /// (on error the samplers are dropped; the caller rebuilds on retry).
+    /// Lanes run sequentially with the same worker pool — each lane's
+    /// `EpochPlan` covers only the targets its shard owns, and its
+    /// batches are tiered/accounted against the lane's own device.
     fn train_epoch(
         &mut self,
-        leader: &mut Box<dyn Sampler>,
+        leader: &mut dyn Sampler,
         opts: &TrainOptions,
         epoch: usize,
         rng: &mut Pcg,
@@ -268,26 +368,16 @@ impl Trainer {
         let mut transfer = TransferStats::default();
         let epoch_start = Instant::now();
 
-        // leader first (it refreshes the shared GNS cache), then the
-        // workers re-snapshot the fresh epoch state
+        // leader first (it refreshes the shared GNS cache), then every
+        // lane uploads its own device replica of the published tier, then
+        // the workers re-snapshot the fresh epoch state
         leader.begin_epoch(epoch);
-        self.sync_cache(epoch, leader.as_ref(), &opts.transfer, &mut clock, &mut transfer)?;
+        for lane in 0..self.lanes.len() {
+            self.sync_cache(lane, epoch, &*leader, &opts.transfer, &mut clock, &mut transfer)?;
+        }
         for s in &mut workers {
             s.begin_epoch(epoch);
         }
-
-        let plan = EpochPlan::shuffled(&self.dataset.train, chunk_size, rng);
-        let n_chunks = plan.num_chunks();
-
-        // workers read labels straight from the shared dataset (one Arc
-        // bump — the per-epoch `labels.clone()` used to copy |V| u16s)
-        let (rx, handles, sampler_return) = run_epoch_sampling(
-            workers,
-            plan,
-            self.dataset.clone(),
-            opts.queue_capacity,
-            self.buffer_pool.clone(),
-        );
 
         let mut total_loss = 0.0f64;
         let mut total_correct = 0.0f64;
@@ -297,61 +387,99 @@ impl Trainer {
         let mut sum_cached = 0usize;
         let mut isolated = 0usize;
         let mut truncated = 0usize;
+        let multi_shard = self.router.num_shards() > 1;
 
-        // Any failure inside the drain loop must close the queue and join
-        // the workers — otherwise producers blocked on a full queue would
-        // outlive the epoch as zombie threads.
-        let mut epoch_err: Option<anyhow::Error> = None;
-        while let Some(sb) = rx.pop() {
-            let mb = match sb.batch {
-                Ok(mb) => mb,
-                Err(e) => {
-                    epoch_err = Some(e.context("sampler failed"));
-                    break;
+        for lane in 0..self.lanes.len() {
+            // each lane shuffles its own targets; with one lane this is
+            // the same single draw sequence as the unsharded pipeline
+            let plan = EpochPlan::shuffled(&self.lanes[lane].targets, chunk_size, rng);
+            let n_chunks = plan.num_chunks();
+
+            // workers read labels straight from the shared dataset (one
+            // Arc bump — the per-epoch `labels.clone()` used to copy |V|
+            // u16s)
+            let (rx, handles, sampler_return) = run_epoch_sampling(
+                workers,
+                plan,
+                self.dataset.clone(),
+                opts.queue_capacity,
+                self.buffer_pool.clone(),
+            );
+
+            let mut lane_batches = 0usize;
+            // Any failure inside the drain loop must close the queue and
+            // join the workers — otherwise producers blocked on a full
+            // queue would outlive the epoch as zombie threads.
+            let mut epoch_err: Option<anyhow::Error> = None;
+            while let Some(sb) = rx.pop() {
+                let mb = match sb.batch {
+                    Ok(mb) => mb,
+                    Err(e) => {
+                        epoch_err = Some(e.context("sampler failed"));
+                        break;
+                    }
+                };
+                clock.add_measured(Stage::Sample, sb.sample_time);
+                if opts.paranoid_validate {
+                    if let Err(msg) =
+                        crate::sampling::validate_batch(&mb, &self.runtime.meta.block_shapes())
+                    {
+                        self.buffer_pool.put(mb);
+                        epoch_err = Some(anyhow::Error::msg(msg));
+                        break;
+                    }
                 }
-            };
-            clock.add_measured(Stage::Sample, sb.sample_time);
-            if opts.paranoid_validate {
-                if let Err(msg) =
-                    crate::sampling::validate_batch(&mb, &self.runtime.meta.block_shapes())
-                {
-                    self.buffer_pool.put(mb);
-                    epoch_err = Some(anyhow::Error::msg(msg));
-                    break;
+                let out = match self.run_train_batch(lane, &mb, opts, &mut clock, &mut transfer) {
+                    Ok(out) => out,
+                    Err(e) => {
+                        self.buffer_pool.put(mb);
+                        epoch_err = Some(e);
+                        break;
+                    }
+                };
+                total_loss += out.loss as f64 * out.batch_real as f64;
+                total_correct += out.correct as f64;
+                total_targets += out.batch_real;
+                batches += 1;
+                lane_batches += 1;
+                sum_inputs += mb.num_input_nodes();
+                sum_cached += mb.stats.cached_inputs;
+                isolated += mb.stats.isolated_nodes;
+                truncated += mb.stats.truncated_neighbors;
+                // shard ledger: rows owned by this lane's shard are
+                // local, the rest are remote fetches from their owner
+                // (the single-shard path skips the per-row probe)
+                if multi_shard {
+                    let (local, remote) =
+                        self.router.count(self.lanes[lane].shard, &mb.input_nodes);
+                    self.lanes[lane].local_rows += local;
+                    self.lanes[lane].remote_rows += remote;
+                } else {
+                    self.lanes[lane].local_rows += mb.input_nodes.len() as u64;
                 }
+                self.lanes[lane].batches += 1;
+                // return the drained slot to the workers (recycling channel)
+                self.buffer_pool.put(mb);
             }
-            let out = match self.run_train_batch(&mb, opts, &mut clock, &mut transfer) {
-                Ok(out) => out,
-                Err(e) => {
-                    self.buffer_pool.put(mb);
-                    epoch_err = Some(e);
-                    break;
+            if let Some(e) = epoch_err {
+                rx.close(); // unblocks producers waiting on a full queue
+                for h in handles {
+                    let _ = h.join();
                 }
-            };
-            total_loss += out.loss as f64 * out.batch_real as f64;
-            total_correct += out.correct as f64;
-            total_targets += out.batch_real;
-            batches += 1;
-            sum_inputs += mb.num_input_nodes();
-            sum_cached += mb.stats.cached_inputs;
-            isolated += mb.stats.isolated_nodes;
-            truncated += mb.stats.truncated_neighbors;
-            // return the drained slot to the workers (recycling channel)
-            self.buffer_pool.put(mb);
-        }
-        if let Some(e) = epoch_err {
-            rx.close(); // unblocks producers waiting on a full queue
+                return Err(e);
+            }
             for h in handles {
-                let _ = h.join();
+                h.join().ok();
             }
-            return Err(e);
+            // all workers exited: collect their samplers for the next
+            // lane (and the next epoch)
+            workers = std::mem::take(&mut *sampler_return.lock().unwrap());
+            anyhow::ensure!(
+                lane_batches == n_chunks,
+                "shard {}: lost batches: {lane_batches} != {n_chunks}",
+                self.lanes[lane].shard
+            );
         }
-        for h in handles {
-            h.join().ok();
-        }
-        // all workers exited: collect their samplers for next-epoch reuse
-        let workers = std::mem::take(&mut *sampler_return.lock().unwrap());
-        anyhow::ensure!(batches == n_chunks, "lost batches: {batches} != {n_chunks}");
 
         // validation F1 with the leader sampler's topology-free NS pass
         // (Arc bump so the val split outlives the &mut self call)
@@ -380,33 +508,37 @@ impl Trainer {
         Ok((report, workers))
     }
 
-    /// Consult the cache policy and (delta-)upload the epoch's resident
-    /// feature rows to the device if the tier generation changed.
+    /// Consult one lane's cache policy and (delta-)upload the epoch's
+    /// resident feature rows to that lane's device if the tier generation
+    /// changed.
     fn sync_cache(
         &mut self,
+        lane: usize,
         epoch: usize,
         sampler: &dyn Sampler,
         model: &TransferModel,
         clock: &mut StageClock,
         transfer: &mut TransferStats,
     ) -> Result<()> {
-        let t = self
+        let l = &mut self.lanes[lane];
+        let t = l
             .tiering
-            .begin_epoch(epoch, sampler, &mut self.device_mem, model, transfer)
+            .begin_epoch(epoch, sampler, &mut l.device_mem, model, transfer)
             .context("upload feature tier to device")?;
         clock.add_modeled(Stage::Copy, t);
         Ok(())
     }
 
-    /// Steps 2–6 for one sampled batch.
+    /// Steps 2–6 for one sampled batch, against one lane's device.
     fn run_train_batch(
         &mut self,
+        lane: usize,
         mb: &MiniBatch,
         opts: &TrainOptions,
         clock: &mut StageClock,
         transfer: &mut TransferStats,
     ) -> Result<crate::runtime::StepOutput> {
-        self.assemble_x0(mb, opts, clock, transfer);
+        self.assemble_x0(lane, mb, opts, clock, transfer);
         let t0 = Instant::now();
         let out = self
             .runtime
@@ -426,10 +558,11 @@ impl Trainer {
     }
 
     /// Host slice (step 2) + modeled transfer (step 3) for the input block.
-    /// One `GatherPlan` partitions the input nodes into hit/miss runs;
-    /// both the host gather and the transfer accounting read it.
+    /// One `GatherPlan` per lane partitions the input nodes into hit/miss
+    /// runs; both the host gather and the transfer accounting read it.
     fn assemble_x0(
         &mut self,
+        lane: usize,
         mb: &MiniBatch,
         opts: &TrainOptions,
         clock: &mut StageClock,
@@ -438,10 +571,10 @@ impl Trainer {
         let dim = self.dataset.features.dim();
         let t0 = Instant::now();
         let n = mb.input_nodes.len();
-        self.tiering.plan_batch(&mb.input_nodes);
+        self.lanes[lane].tiering.plan_batch(&mb.input_nodes);
         self.dataset.features.slice_runs_into(
             &mb.input_nodes,
-            self.tiering.last_plan().runs(),
+            self.lanes[lane].tiering.last_plan().runs(),
             &mut self.x0_scratch[..n * dim],
         );
         // zero only the tail the previous batch dirtied (§Perf iteration 2)
@@ -450,7 +583,8 @@ impl Trainer {
         self.x0_dirty_elems = n * dim;
         clock.add_measured(Stage::Slice, t0.elapsed());
 
-        let (t_copy, _missed) = self.tiering.serve_planned(&opts.transfer, transfer);
+        let (t_copy, _missed) =
+            self.lanes[lane].tiering.serve_planned(&opts.transfer, transfer);
         // block metadata (idx/w/self/labels) also crosses PCIe
         let meta_bytes: u64 = mb
             .layers
@@ -463,10 +597,11 @@ impl Trainer {
     }
 
     /// Micro-F1 over up to `max_batches` batches of `targets`, using the
-    /// given sampler for neighborhood construction.
+    /// given sampler for neighborhood construction. Evaluation runs on
+    /// the leader device (lane 0) and bypasses the feature tiers.
     pub fn evaluate(
         &mut self,
-        sampler: &mut Box<dyn Sampler>,
+        sampler: &mut dyn Sampler,
         targets: &[crate::graph::NodeId],
         max_batches: usize,
     ) -> Result<f64> {
@@ -500,11 +635,21 @@ impl Trainer {
         Ok(correct_weighted / total.max(1) as f64)
     }
 
+    /// Peak bytes on the most-loaded shard device (the binding device
+    /// for capacity planning; lane 0's peak for single-shard trainers).
     pub fn device_peak_bytes(&self) -> u64 {
-        self.device_mem.peak()
+        self.lanes.iter().map(|l| l.device_mem.peak()).max().unwrap_or(0)
     }
 
+    /// Device feature-cache (hits, misses) summed across every shard lane.
     pub fn cache_hits_misses(&self) -> (u64, u64) {
-        self.tiering.hits_misses()
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        for l in &self.lanes {
+            let (h, m) = l.tiering.hits_misses();
+            hits += h;
+            misses += m;
+        }
+        (hits, misses)
     }
 }

@@ -81,6 +81,7 @@ pub type SamplerReturn = Arc<Mutex<Vec<Box<dyn Sampler>>>>;
 /// instead of rebuilding them. Batch slots come from `pool`; the
 /// consumer should `pool.put` each drained batch so steady-state
 /// sampling allocates nothing.
+#[allow(clippy::type_complexity)]
 pub fn run_epoch_sampling(
     samplers: Vec<Box<dyn Sampler>>,
     plan: EpochPlan,

@@ -414,7 +414,26 @@ pub fn cache_policy_spec(spec: &MethodSpec) -> anyhow::Result<crate::tiering::Po
         .map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))
 }
 
-const NS_PARAMS: &[ParamInfo] = &[CACHE_PARAM];
+/// The `shards=` parameter every method accepts: shard-parallel execution
+/// (grammar in [`crate::shard::ShardSpec`]). `1` is the unsharded
+/// pipeline and is required to be metric-identical to it (tests/shard.rs).
+pub const SHARD_PARAM: ParamInfo = ParamInfo {
+    key: "shards",
+    kind: ParamKind::Str,
+    default: "1",
+    help: "shard-parallel pipelines: K[:part=hash|range] — one sampling pipeline \
+           + device feature tier per shard",
+};
+
+/// Parse + validate a spec's `shards=` parameter. Shared by every builder
+/// (build-time rejection of bad shard configs) and by the session layer
+/// that stands up the per-shard lanes.
+pub fn shard_spec(spec: &MethodSpec) -> anyhow::Result<crate::shard::ShardSpec> {
+    crate::shard::ShardSpec::parse(spec.str_or("shards", SHARD_PARAM.default))
+        .map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))
+}
+
+const NS_PARAMS: &[ParamInfo] = &[CACHE_PARAM, SHARD_PARAM];
 
 struct NsBuilder;
 
@@ -441,6 +460,7 @@ impl MethodBuilder for NsBuilder {
 
     fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
         cache_policy_spec(spec)?;
+        shard_spec(spec)?;
         let graph = ctx.graph.clone();
         let shapes = ctx.shapes.clone();
         let seed = ctx.seed;
@@ -460,6 +480,7 @@ const LADIES_PARAMS: &[ParamInfo] = &[
         help: "nodes sampled per layer (Table 3 uses 512 and 5000)",
     },
     CACHE_PARAM,
+    SHARD_PARAM,
 ];
 
 impl MethodBuilder for LadiesBuilder {
@@ -498,6 +519,7 @@ impl MethodBuilder for LadiesBuilder {
 
     fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
         cache_policy_spec(spec)?;
+        shard_spec(spec)?;
         let s_layer = spec.usize_or("s-layer", 512);
         anyhow::ensure!(s_layer >= 1, "ladies: s-layer must be >= 1");
         let graph = ctx.graph.clone();
@@ -530,6 +552,7 @@ const LAZYGCN_PARAMS: &[ParamInfo] = &[
         help: "recycling growth rate per epoch",
     },
     CACHE_PARAM,
+    SHARD_PARAM,
 ];
 
 impl MethodBuilder for LazyGcnBuilder {
@@ -555,6 +578,7 @@ impl MethodBuilder for LazyGcnBuilder {
 
     fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
         cache_policy_spec(spec)?;
+        shard_spec(spec)?;
         let recycle_period = spec.usize_or("recycle-period", 2);
         let rho = spec.f64_or("rho", 1.1);
         anyhow::ensure!(recycle_period >= 1, "lazygcn: recycle-period must be >= 1");
@@ -609,6 +633,7 @@ const GNS_PARAMS: &[ParamInfo] = &[
         help: "sample the input layer exclusively from the cache (paper setting)",
     },
     CACHE_PARAM,
+    SHARD_PARAM,
 ];
 
 impl MethodBuilder for GnsBuilder {
@@ -634,6 +659,7 @@ impl MethodBuilder for GnsBuilder {
 
     fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
         cache_policy_spec(spec)?;
+        shard_spec(spec)?;
         let cache_fraction = spec.f64_or("cache-fraction", 0.01);
         let update_period = spec.usize_or("update-period", 1);
         anyhow::ensure!(

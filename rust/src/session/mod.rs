@@ -34,10 +34,12 @@ use crate::graph::{CsrGraph, NodeId};
 use crate::pipeline::{EpochReport, TrainOptions, Trainer};
 use crate::runtime::{artifacts_root, ArtifactMeta, Runtime};
 use crate::sampling::spec::{
-    cache_policy_spec, BuildContext, MethodRegistry, MethodSpec, SamplerFactory, SpecError,
+    cache_policy_spec, shard_spec, BuildContext, MethodRegistry, MethodSpec, SamplerFactory,
+    SpecError,
 };
 use crate::sampling::BlockShapes;
-use crate::tiering::{build_policy, TierBuild, PRESAMPLE_WORKER, WARMUP_BATCHES};
+use crate::shard::{ShardReport, ShardSpec};
+use crate::tiering::{build_policies, TierBuild, PRESAMPLE_WORKER, WARMUP_BATCHES};
 use std::fmt;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -101,6 +103,10 @@ pub struct RunResult {
     /// telemetry; both 0 when the tier policy is `none`).
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Per-shard traffic roll-up (`shards=K`): local vs remote input
+    /// rows, cross-shard bytes, per-shard cache telemetry. One entry per
+    /// shard; a single entry for unsharded runs.
+    pub shards: Vec<ShardReport>,
     /// Structured training failure (e.g. LazyGCN OOM), captured rather
     /// than propagated — Table 3 reports those cells as N/A.
     pub error: Option<String>,
@@ -119,6 +125,22 @@ impl RunResult {
             return f64::NAN;
         }
         self.cache_hits as f64 / total as f64
+    }
+
+    /// Total bytes fetched across shards (0 for unsharded runs).
+    pub fn cross_shard_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.cross_shard_bytes).sum()
+    }
+
+    /// Fraction of all served input rows that were shard-local (NaN when
+    /// nothing was served; 1.0 for unsharded runs).
+    pub fn local_fraction(&self) -> f64 {
+        let local: u64 = self.shards.iter().map(|s| s.local_rows).sum();
+        let remote: u64 = self.shards.iter().map(|s| s.remote_rows).sum();
+        if local + remote == 0 {
+            return f64::NAN;
+        }
+        local as f64 / (local + remote) as f64
     }
 
     /// mean per-epoch time in the device frame (as-if the paper's T4
@@ -172,6 +194,7 @@ pub struct SessionBuilder {
     refit_features: bool,
     max_train_nodes: Option<usize>,
     max_val_nodes: Option<usize>,
+    shards: Option<ShardSpec>,
 }
 
 impl SessionBuilder {
@@ -196,6 +219,7 @@ impl SessionBuilder {
             refit_features: false,
             max_train_nodes: None,
             max_val_nodes: None,
+            shards: None,
         }
     }
 
@@ -305,6 +329,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Shard-parallel execution override (one pipeline lane + device
+    /// tier per shard). Takes precedence over the method spec's
+    /// `shards=` parameter; the default follows the spec (itself
+    /// defaulting to the single-shard unsharded pipeline).
+    pub fn shards(mut self, spec: ShardSpec) -> Self {
+        self.shards = Some(spec);
+        self
+    }
+
     /// Resolve the spec, build the dataset, load + validate the artifact,
     /// and stand up the trainer and sampler factories.
     pub fn build(self) -> Result<Session, BuildError> {
@@ -316,9 +349,14 @@ impl SessionBuilder {
                 s.clone()
             }
         };
-        // the `cache=` tier policy is validated up front too (cheap), so a
-        // bad policy string is reported before artifact/dataset work
+        // the `cache=` tier policy and `shards=` config are validated up
+        // front too (cheap), so a bad string is reported before
+        // artifact/dataset work
         let tier_spec = cache_policy_spec(&spec).map_err(BuildError::Runtime)?;
+        let shards = match &self.shards {
+            Some(s) => s.clone(),
+            None => shard_spec(&spec).map_err(BuildError::Runtime)?,
+        };
         // validate the dataset name up front (cheap) so a typo is reported
         // as such, not as a missing artifact for a nonsense name
         if !DATASET_NAMES.contains(&self.dataset.as_str()) {
@@ -410,6 +448,7 @@ impl SessionBuilder {
             transfer: TransferModel::default(),
             compute_model: ComputeModel::default(),
             paranoid_validate: self.paranoid_validate,
+            shards,
         };
         let label = registry.label(&spec);
         let mut trainer =
@@ -417,8 +456,11 @@ impl SessionBuilder {
         // materialize the feature-tier policy from the spec's `cache=`
         // parameter (default `auto` = follow the sampler's own cache, i.e.
         // the trainer's built-in policy); a presample tier runs its warmup
-        // here, with a non-leader sampler so the GNS cache is untouched
-        let policy = build_policy(
+        // here, with a non-leader sampler so the GNS cache is untouched.
+        // Every shard lane simulates its own GPU, so each gets an
+        // independent policy instance — but the expensive tier state
+        // (degree ranking, presample warmup) is computed once and shared.
+        let policies = build_policies(
             &tier_spec,
             &TierBuild {
                 graph: &ds.graph,
@@ -428,9 +470,12 @@ impl SessionBuilder {
                 warmup_batches: WARMUP_BATCHES,
             },
             || factory(PRESAMPLE_WORKER),
+            trainer.num_shards(),
         )
         .map_err(BuildError::Runtime)?;
-        trainer.set_cache_policy(policy);
+        for (lane, policy) in policies.into_iter().enumerate() {
+            trainer.set_lane_cache_policy(lane, policy);
+        }
         Ok(Session {
             dataset: ds,
             trainer,
@@ -497,6 +542,7 @@ impl Session {
             device_peak: self.trainer.device_peak_bytes(),
             cache_hits,
             cache_misses,
+            shards: self.trainer.shard_reports(),
             error,
         })
     }
@@ -517,7 +563,7 @@ impl Session {
         max_batches: usize,
     ) -> anyhow::Result<f64> {
         let mut sampler = (self.eval_factory)(0);
-        self.trainer.evaluate(&mut sampler, targets, max_batches)
+        self.trainer.evaluate(sampler.as_mut(), targets, max_batches)
     }
 
     /// Test-split micro-F1 (the paper's headline metric).
@@ -555,6 +601,17 @@ impl Session {
 
     pub fn cache_hits_misses(&self) -> (u64, u64) {
         self.trainer.cache_hits_misses()
+    }
+
+    /// Number of shard lanes this session trains with (1 = unsharded).
+    pub fn num_shards(&self) -> usize {
+        self.trainer.num_shards()
+    }
+
+    /// Per-shard traffic roll-up accumulated so far (see
+    /// [`ShardReport`]).
+    pub fn shard_reports(&self) -> Vec<ShardReport> {
+        self.trainer.shard_reports()
     }
 
     /// Name of the active feature-tier policy (`none|gns|degree|presample`).
@@ -630,11 +687,14 @@ mod tests {
             device_peak: 0,
             cache_hits: 0,
             cache_misses: 0,
+            shards: Vec::new(),
             error: None,
         };
         assert!(r.epoch_time().is_nan());
         assert!(r.wall_epoch_time().is_nan());
         assert!(r.cache_hit_rate().is_nan());
+        assert!(r.local_fraction().is_nan());
+        assert_eq!(r.cross_shard_bytes(), 0);
     }
 
     #[test]
@@ -647,5 +707,14 @@ mod tests {
         // the registry's factory-time validation rejects it as a runtime
         // build error naming the grammar
         assert!(err.to_string().contains("cache policy"), "{err}");
+    }
+
+    #[test]
+    fn bad_shard_spec_fails_session_build() {
+        // `shards=` is validated before any artifact/dataset work too
+        for bad in ["ns:shards=0", "ns:shards=4:part=metis", "ns:shards=lots"] {
+            let err = Session::builder("yelp-s", bad).scale(0.03).build().unwrap_err();
+            assert!(err.to_string().contains("shard"), "{bad}: {err}");
+        }
     }
 }

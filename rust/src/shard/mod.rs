@@ -1,0 +1,173 @@
+//! Shard-parallel execution: partition the graph + dataset into K shards
+//! and run one full sampling/tiering pipeline per shard.
+//!
+//! The paper's giant-graph regime (§1: hundreds of millions of nodes)
+//! outgrows a single sampling pipeline and a single device cache; the
+//! partition-aware systems in PAPERS.md (DistDGL, PaGraph) split the
+//! graph so each shard owns a slice of the training targets, runs its own
+//! sampling workers, and pins its own feature cache, with cross-shard
+//! feature traffic explicitly accounted. This module is that execution
+//! model, simulated one-GPU-per-shard:
+//!
+//! - [`Partitioner`] (partition.rs): node→shard assignment — `hash`
+//!   (balance extreme) and `range` (contiguity extreme) behind a trait so
+//!   topology-aware schemes can plug in.
+//! - [`ShardRouter`] (router.rs): the dense ownership map every lane
+//!   consults; classifies sampled input rows as shard-local vs remote and
+//!   splits the train targets per shard.
+//! - [`ShardSpec`]: the `shards=K[:part=hash|range]` grammar every
+//!   method spec accepts (plumbed like `cache=`; see docs/API.md).
+//! - [`ShardReport`]: the per-shard traffic roll-up (local rows, remote
+//!   fetches, cross-shard bytes, cache telemetry) surfaced in
+//!   [`crate::session::RunResult`].
+//!
+//! The pipeline side lives in `pipeline::trainer`: the `Trainer` holds
+//! one *lane* per shard (own `EpochPlan` over the shard's targets, own
+//! `TieringEngine` + `DeviceMemory`), and `shards=1` is required to be
+//! metric-identical to the pre-sharding path (tests/shard.rs; invariants
+//! in docs/SHARDING.md).
+
+pub mod partition;
+pub mod router;
+
+pub use partition::{build_partitioner, HashPartitioner, Partitioner, RangePartitioner};
+pub use router::{ShardReport, ShardRouter};
+
+use std::fmt;
+
+/// Hard cap on the shard count: each shard simulates a full device
+/// (model replica + feature tier), so runaway values are config typos.
+pub const MAX_SHARDS: usize = 256;
+
+/// Which partitioner a [`ShardSpec`] names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartKind {
+    Hash,
+    Range,
+}
+
+impl PartKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PartKind::Hash => "hash",
+            PartKind::Range => "range",
+        }
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<PartKind> {
+        match text {
+            "hash" => Ok(PartKind::Hash),
+            "range" => Ok(PartKind::Range),
+            other => anyhow::bail!("shard partitioner must be hash|range, got {other:?}"),
+        }
+    }
+}
+
+impl fmt::Display for PartKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The `shards=K[:part=hash|range]` grammar shared by every method spec
+/// (docs/API.md). `K=1` (the default) is the unsharded pipeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub shards: usize,
+    pub part: PartKind,
+}
+
+impl Default for ShardSpec {
+    fn default() -> Self {
+        ShardSpec { shards: 1, part: PartKind::Hash }
+    }
+}
+
+impl ShardSpec {
+    pub fn parse(text: &str) -> anyhow::Result<ShardSpec> {
+        let mut parts = text.trim().split(':');
+        let head = parts.next().unwrap_or("").trim();
+        let shards: usize = head
+            .parse()
+            .map_err(|_| anyhow::anyhow!("shard count {head:?} is not an integer"))?;
+        anyhow::ensure!(shards >= 1, "shard count must be >= 1");
+        anyhow::ensure!(
+            shards <= MAX_SHARDS,
+            "shard count {shards} exceeds the {MAX_SHARDS}-shard cap"
+        );
+        let mut part = PartKind::Hash;
+        for opt in parts {
+            let opt = opt.trim();
+            let (key, value) = opt
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("shard option {opt:?} is not key=value"))?;
+            match key.trim() {
+                "part" => part = PartKind::parse(value.trim())?,
+                other => anyhow::bail!("unknown shard option {other:?} (valid: part)"),
+            }
+        }
+        Ok(ShardSpec { shards, part })
+    }
+
+    /// True for the single-shard (unsharded) configuration.
+    pub fn is_single(&self) -> bool {
+        self.shards == 1
+    }
+
+    /// Build this spec's router over `num_nodes` nodes.
+    pub fn router(&self, num_nodes: usize) -> ShardRouter {
+        if self.is_single() {
+            return ShardRouter::single();
+        }
+        let p = build_partitioner(self, num_nodes);
+        ShardRouter::from_partitioner(p.as_ref(), num_nodes)
+    }
+}
+
+impl fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.shards)?;
+        if self.part != PartKind::Hash {
+            write!(f, ":part={}", self.part)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        assert_eq!(ShardSpec::parse("1").unwrap(), ShardSpec::default());
+        let s = ShardSpec::parse("4:part=range").unwrap();
+        assert_eq!(s, ShardSpec { shards: 4, part: PartKind::Range });
+        assert_eq!(s.to_string(), "4:part=range");
+        assert_eq!(ShardSpec::parse(&s.to_string()).unwrap(), s);
+        // hash is the default and renders bare
+        let s = ShardSpec::parse("8:part=hash").unwrap();
+        assert_eq!(s.to_string(), "8");
+        assert_eq!(ShardSpec::parse(&s.to_string()).unwrap(), s);
+    }
+
+    #[test]
+    fn spec_grammar_rejects_nonsense() {
+        assert!(ShardSpec::parse("0").is_err());
+        assert!(ShardSpec::parse("lots").is_err());
+        assert!(ShardSpec::parse("4:part=metis").is_err());
+        assert!(ShardSpec::parse("4:split=range").is_err());
+        assert!(ShardSpec::parse("4:part").is_err());
+        assert!(ShardSpec::parse("100000").is_err(), "cap must hold");
+    }
+
+    #[test]
+    fn spec_builds_matching_router() {
+        let r = ShardSpec::parse("1").unwrap().router(100);
+        assert_eq!(r.num_shards(), 1);
+        assert!(r.assignment().is_empty());
+        let r = ShardSpec::parse("4:part=range").unwrap().router(100);
+        assert_eq!(r.num_shards(), 4);
+        assert_eq!(r.assignment().len(), 100);
+    }
+}

@@ -1,0 +1,171 @@
+//! Graph partitioners: assign every node to exactly one of K shards.
+//!
+//! DistDGL partitions with METIS and PaGraph with a greedy streaming
+//! heuristic; both are topology-aware. This reproduction starts with the
+//! two structure-free baselines every partition-aware system also ships —
+//! **hash** (uniform pseudo-random ownership, the best balance / worst
+//! locality extreme) and **range** (contiguous id blocks, which inherit
+//! whatever locality the node numbering carries) — behind a
+//! [`Partitioner`] trait so topology-aware schemes can plug in later
+//! without touching the pipeline.
+//!
+//! Contract: for every node id `v < num_nodes`, `shard_of(v)` is a stable
+//! pure function into `0..num_shards` — the partition covers every node
+//! exactly once (enforced by tests/shard.rs).
+
+use crate::graph::NodeId;
+use crate::util::fxhash::FxHasher;
+use std::hash::Hasher;
+
+/// Assigns nodes to shards. Implementations must be pure and stable: the
+/// same node always maps to the same shard for the life of the run.
+pub trait Partitioner: Send + Sync {
+    /// Spec name (`hash`, `range`).
+    fn name(&self) -> &'static str;
+
+    fn num_shards(&self) -> usize;
+
+    /// Owning shard of `v`, in `0..num_shards`.
+    fn shard_of(&self, v: NodeId) -> u32;
+}
+
+/// Uniform pseudo-random ownership: `fxhash(v) mod K`. Best-balance
+/// baseline; ignores topology entirely, so its edge cut approaches the
+/// random-partition expectation `(K-1)/K`.
+pub struct HashPartitioner {
+    shards: u64,
+}
+
+impl HashPartitioner {
+    pub fn new(shards: usize) -> HashPartitioner {
+        assert!(shards >= 1, "need at least one shard");
+        HashPartitioner { shards: shards as u64 }
+    }
+}
+
+impl Partitioner for HashPartitioner {
+    fn name(&self) -> &'static str {
+        "hash"
+    }
+
+    fn num_shards(&self) -> usize {
+        self.shards as usize
+    }
+
+    #[inline]
+    fn shard_of(&self, v: NodeId) -> u32 {
+        if self.shards == 1 {
+            return 0;
+        }
+        let mut h = FxHasher::default();
+        h.write_u32(v);
+        (h.finish() % self.shards) as u32
+    }
+}
+
+/// Contiguous id blocks: shard `s` owns ids in `[s*n/K, (s+1)*n/K)`.
+/// Block sizes differ by at most one node. Generated analogues number
+/// nodes in insertion order, so ranges keep whatever locality that order
+/// carries (for real datasets this is where a locality-preserving
+/// reordering would pay off).
+pub struct RangePartitioner {
+    shards: u64,
+    num_nodes: u64,
+}
+
+impl RangePartitioner {
+    pub fn new(shards: usize, num_nodes: usize) -> RangePartitioner {
+        assert!(shards >= 1, "need at least one shard");
+        RangePartitioner { shards: shards as u64, num_nodes: num_nodes as u64 }
+    }
+}
+
+impl Partitioner for RangePartitioner {
+    fn name(&self) -> &'static str {
+        "range"
+    }
+
+    fn num_shards(&self) -> usize {
+        self.shards as usize
+    }
+
+    #[inline]
+    fn shard_of(&self, v: NodeId) -> u32 {
+        if self.shards == 1 || self.num_nodes == 0 {
+            return 0;
+        }
+        // v < num_nodes ⇒ v*K/n < K; the min() only guards out-of-range ids
+        ((v as u64 * self.shards / self.num_nodes).min(self.shards - 1)) as u32
+    }
+}
+
+/// Build the partitioner a [`crate::shard::ShardSpec`] names.
+pub fn build_partitioner(
+    spec: &crate::shard::ShardSpec,
+    num_nodes: usize,
+) -> Box<dyn Partitioner> {
+    match spec.part {
+        crate::shard::PartKind::Hash => Box::new(HashPartitioner::new(spec.shards)),
+        crate::shard::PartKind::Range => {
+            Box::new(RangePartitioner::new(spec.shards, num_nodes))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_partition_is_stable_and_in_range() {
+        let p = HashPartitioner::new(4);
+        for v in 0..1000u32 {
+            let s = p.shard_of(v);
+            assert!(s < 4);
+            assert_eq!(s, p.shard_of(v), "ownership must be stable");
+        }
+    }
+
+    #[test]
+    fn hash_partition_is_roughly_balanced() {
+        let p = HashPartitioner::new(8);
+        let mut sizes = [0usize; 8];
+        for v in 0..80_000u32 {
+            sizes[p.shard_of(v) as usize] += 1;
+        }
+        let (min, max) = sizes
+            .iter()
+            .fold((usize::MAX, 0), |(lo, hi), &s| (lo.min(s), hi.max(s)));
+        assert!(max < 2 * min, "skewed hash partition: min={min} max={max}");
+    }
+
+    #[test]
+    fn range_partition_is_contiguous_and_balanced() {
+        let n = 103usize;
+        let p = RangePartitioner::new(4, n);
+        let mut sizes = [0usize; 4];
+        let mut prev = 0u32;
+        for v in 0..n as u32 {
+            let s = p.shard_of(v);
+            assert!(s >= prev, "range shards must be non-decreasing in id");
+            prev = s;
+            sizes[s as usize] += 1;
+        }
+        let (min, max) = sizes
+            .iter()
+            .fold((usize::MAX, 0), |(lo, hi), &s| (lo.min(s), hi.max(s)));
+        assert!(max - min <= 1, "range blocks must differ by <= 1: {sizes:?}");
+    }
+
+    #[test]
+    fn single_shard_owns_everything() {
+        for p in [
+            Box::new(HashPartitioner::new(1)) as Box<dyn Partitioner>,
+            Box::new(RangePartitioner::new(1, 50)),
+        ] {
+            for v in 0..50u32 {
+                assert_eq!(p.shard_of(v), 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Shard routing: the dense node→shard map every per-shard pipeline
+//! consults, plus the per-shard traffic ledger.
+//!
+//! A [`ShardRouter`] materializes a partitioner into one `u32` per node
+//! (a single indexed load on the per-batch path, same trick as the dense
+//! residency stamps in `device::cache`). Shard `s`'s pipeline classifies
+//! every sampled input node as **local** (owned by `s`, served from the
+//! shard's own host partition / device cache) or **remote** (owned by
+//! another shard, fetched across the interconnect). Remote rows are the
+//! cross-shard traffic DistDGL-style systems minimize; the accounting
+//! identity — every input row is exactly one of local or remote, so
+//! `local + remote` equals what the unsharded path would have served —
+//! is enforced by tests/shard.rs.
+
+use super::partition::Partitioner;
+use crate::graph::NodeId;
+use std::sync::Arc;
+
+/// Dense node→shard ownership map shared by every shard lane.
+#[derive(Debug, Clone)]
+pub struct ShardRouter {
+    /// one shard id per node; empty in the single-shard fast path (the
+    /// unsharded pipeline never pays the |V| materialization).
+    assignment: Arc<Vec<u32>>,
+    shards: u32,
+}
+
+impl ShardRouter {
+    /// The trivial single-shard router: everything is local, nothing is
+    /// materialized.
+    pub fn single() -> ShardRouter {
+        ShardRouter { assignment: Arc::new(Vec::new()), shards: 1 }
+    }
+
+    /// Materialize `p` over `num_nodes` nodes (one `u32` each).
+    pub fn from_partitioner(p: &dyn Partitioner, num_nodes: usize) -> ShardRouter {
+        if p.num_shards() <= 1 {
+            return ShardRouter::single();
+        }
+        let assignment: Vec<u32> = (0..num_nodes as NodeId).map(|v| p.shard_of(v)).collect();
+        ShardRouter { assignment: Arc::new(assignment), shards: p.num_shards() as u32 }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards as usize
+    }
+
+    /// Owning shard of `v` (always 0 for the single-shard router).
+    #[inline]
+    pub fn shard_of(&self, v: NodeId) -> u32 {
+        if self.shards == 1 {
+            0
+        } else {
+            self.assignment[v as usize]
+        }
+    }
+
+    /// The dense ownership map (empty for the single-shard router).
+    pub fn assignment(&self) -> &[u32] {
+        &self.assignment
+    }
+
+    /// `(local, remote)` row counts of `nodes` as seen from `shard` —
+    /// the per-batch classification pass. Every row is exactly one of
+    /// the two, so `local + remote == nodes.len()`.
+    pub fn count(&self, shard: u32, nodes: &[NodeId]) -> (u64, u64) {
+        if self.shards == 1 {
+            return (nodes.len() as u64, 0);
+        }
+        let mut local = 0u64;
+        for &v in nodes {
+            if self.assignment[v as usize] == shard {
+                local += 1;
+            }
+        }
+        (local, nodes.len() as u64 - local)
+    }
+
+    /// Stable split of `targets` into per-shard lists: each target keeps
+    /// its relative order, and the single-shard split is exactly
+    /// `vec![targets]` (the `shards=1 == unsharded` guarantee starts
+    /// here).
+    pub fn split_targets(&self, targets: &[NodeId]) -> Vec<Vec<NodeId>> {
+        if self.shards == 1 {
+            return vec![targets.to_vec()];
+        }
+        let mut out: Vec<Vec<NodeId>> = vec![Vec::new(); self.shards as usize];
+        for &v in targets {
+            out[self.assignment[v as usize] as usize].push(v);
+        }
+        out
+    }
+
+    /// Nodes owned per shard (for balance reporting).
+    pub fn shard_sizes(&self, num_nodes: usize) -> Vec<usize> {
+        if self.shards == 1 {
+            return vec![num_nodes];
+        }
+        let mut sizes = vec![0usize; self.shards as usize];
+        for &s in self.assignment.iter() {
+            sizes[s as usize] += 1;
+        }
+        sizes
+    }
+}
+
+/// Per-shard traffic roll-up for one training run: how much of the
+/// shard's input traffic stayed local vs crossed shards, plus the
+/// shard's own device-cache telemetry. Surfaced in
+/// [`crate::session::RunResult::shards`].
+#[derive(Debug, Clone, Default)]
+pub struct ShardReport {
+    pub shard: u32,
+    /// train targets owned by this shard.
+    pub train_targets: usize,
+    /// mini-batches this shard's pipeline served.
+    pub batches: u64,
+    /// input rows owned by this shard (served shard-locally).
+    pub local_rows: u64,
+    /// input rows owned by another shard (remote fetches).
+    pub remote_rows: u64,
+    /// bytes the remote fetches moved across shards (`remote_rows *
+    /// row_bytes`).
+    pub cross_shard_bytes: u64,
+    /// this shard's device feature-cache hit/miss totals.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// peak bytes on this shard's simulated device.
+    pub device_peak: u64,
+}
+
+impl ShardReport {
+    /// Fraction of this shard's input rows that were shard-local (NaN
+    /// when nothing was served).
+    pub fn local_fraction(&self) -> f64 {
+        let total = self.local_rows + self.remote_rows;
+        if total == 0 {
+            return f64::NAN;
+        }
+        self.local_rows as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::partition::{HashPartitioner, RangePartitioner};
+
+    #[test]
+    fn single_router_is_all_local_and_unmaterialized() {
+        let r = ShardRouter::single();
+        assert_eq!(r.num_shards(), 1);
+        assert!(r.assignment().is_empty());
+        assert_eq!(r.shard_of(123), 0);
+        assert_eq!(r.count(0, &[1, 2, 3]), (3, 0));
+        let targets = vec![5u32, 1, 9];
+        assert_eq!(r.split_targets(&targets), vec![targets.clone()]);
+        assert_eq!(r.shard_sizes(10), vec![10]);
+    }
+
+    #[test]
+    fn count_partitions_every_row() {
+        let p = HashPartitioner::new(3);
+        let r = ShardRouter::from_partitioner(&p, 100);
+        let nodes: Vec<NodeId> = (0..100).collect();
+        let mut local_total = 0;
+        for s in 0..3 {
+            let (local, remote) = r.count(s, &nodes);
+            assert_eq!(local + remote, nodes.len() as u64);
+            local_total += local;
+        }
+        // each row is local to exactly one shard
+        assert_eq!(local_total, nodes.len() as u64);
+    }
+
+    #[test]
+    fn split_targets_is_stable_and_covering() {
+        let p = RangePartitioner::new(4, 40);
+        let r = ShardRouter::from_partitioner(&p, 40);
+        let targets: Vec<NodeId> = vec![39, 0, 20, 10, 1, 21];
+        let split = r.split_targets(&targets);
+        assert_eq!(split.len(), 4);
+        // stable within each shard
+        assert_eq!(split[0], vec![0, 1]);
+        assert_eq!(split[2], vec![20, 21]);
+        let total: usize = split.iter().map(Vec::len).sum();
+        assert_eq!(total, targets.len());
+    }
+
+    #[test]
+    fn shard_sizes_match_assignment() {
+        let p = HashPartitioner::new(4);
+        let r = ShardRouter::from_partitioner(&p, 1000);
+        let sizes = r.shard_sizes(1000);
+        assert_eq!(sizes.iter().sum::<usize>(), 1000);
+        assert_eq!(sizes.len(), 4);
+    }
+
+    #[test]
+    fn local_fraction_nan_when_empty() {
+        assert!(ShardReport::default().local_fraction().is_nan());
+    }
+}

@@ -28,8 +28,8 @@ pub mod policy;
 
 pub use plan::{GatherPlan, GatherRun};
 pub use policy::{
-    build_policy, default_budget, CachePolicy, DegreePolicy, NonePolicy, PolicyKind,
-    PolicySpec, PresamplePolicy, SamplerPolicy, TierBuild, TierSnapshot,
+    build_policies, build_policy, default_budget, CachePolicy, DegreePolicy, NonePolicy,
+    PolicyKind, PolicySpec, PresamplePolicy, SamplerPolicy, TierBuild, TierSnapshot,
     PRESAMPLE_WORKER, WARMUP_BATCHES,
 };
 

@@ -105,6 +105,12 @@ impl DegreePolicy {
         DegreePolicy { nodes: Arc::new(ids) }
     }
 
+    /// A policy instance over an already-ranked tier (shared `Arc`) —
+    /// how per-shard replicas avoid re-ranking the graph K times.
+    pub fn from_nodes(nodes: Arc<Vec<NodeId>>) -> DegreePolicy {
+        DegreePolicy { nodes }
+    }
+
     pub fn nodes(&self) -> &Arc<Vec<NodeId>> {
         &self.nodes
     }
@@ -160,6 +166,12 @@ impl PresamplePolicy {
         ids.sort_unstable_by_key(|&v| (std::cmp::Reverse(counts[v as usize]), v));
         ids.truncate(budget.max(1));
         Ok(PresamplePolicy { nodes: Arc::new(ids) })
+    }
+
+    /// A policy instance over an already-warmed tier (shared `Arc`) —
+    /// how per-shard replicas avoid re-running the warmup K times.
+    pub fn from_nodes(nodes: Arc<Vec<NodeId>>) -> PresamplePolicy {
+        PresamplePolicy { nodes }
     }
 
     pub fn nodes(&self) -> &Arc<Vec<NodeId>> {
@@ -288,14 +300,45 @@ pub fn build_policy(
     b: &TierBuild<'_>,
     make_sampler: impl FnOnce() -> Box<dyn Sampler>,
 ) -> anyhow::Result<Box<dyn CachePolicy>> {
+    Ok(build_policies(spec, b, make_sampler, 1)?.pop().expect("count >= 1"))
+}
+
+/// Build `count` independent policy instances from one spec — one per
+/// shard lane. The expensive state (degree ranking, presample warmup)
+/// is computed **once** and the pinned row set shared across instances
+/// via `Arc`, so a K-shard run pays the same build cost as an unsharded
+/// one while every simulated device still owns its own policy object.
+pub fn build_policies(
+    spec: &PolicySpec,
+    b: &TierBuild<'_>,
+    make_sampler: impl FnOnce() -> Box<dyn Sampler>,
+    count: usize,
+) -> anyhow::Result<Vec<Box<dyn CachePolicy>>> {
+    anyhow::ensure!(count >= 1, "need at least one policy instance");
     let n = b.graph.num_nodes();
-    Ok(match spec.kind {
-        PolicyKind::None => Box::new(NonePolicy),
-        PolicyKind::SamplerDriven => Box::new(SamplerPolicy),
-        PolicyKind::Degree => Box::new(DegreePolicy::new(b.graph, spec.budget_or_default(n))),
+    let mut out: Vec<Box<dyn CachePolicy>> = Vec::with_capacity(count);
+    match spec.kind {
+        PolicyKind::None => {
+            for _ in 0..count {
+                out.push(Box::new(NonePolicy));
+            }
+        }
+        PolicyKind::SamplerDriven => {
+            for _ in 0..count {
+                out.push(Box::new(SamplerPolicy));
+            }
+        }
+        PolicyKind::Degree => {
+            let nodes = DegreePolicy::new(b.graph, spec.budget_or_default(n))
+                .nodes()
+                .clone();
+            for _ in 0..count {
+                out.push(Box::new(DegreePolicy::from_nodes(nodes.clone())));
+            }
+        }
         PolicyKind::Presample => {
             let mut sampler = make_sampler();
-            Box::new(PresamplePolicy::from_warmup(
+            let nodes = PresamplePolicy::from_warmup(
                 sampler.as_mut(),
                 b.train,
                 b.labels,
@@ -303,9 +346,15 @@ pub fn build_policy(
                 b.warmup_batches,
                 spec.budget_or_default(n),
                 n,
-            )?)
+            )?
+            .nodes()
+            .clone();
+            for _ in 0..count {
+                out.push(Box::new(PresamplePolicy::from_nodes(nodes.clone())));
+            }
         }
-    })
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -341,6 +390,35 @@ mod tests {
         // budget only applies to static tiers
         assert!(PolicySpec::parse("gns:budget=5").is_err());
         assert!(PolicySpec::parse("none:budget=5").is_err());
+    }
+
+    #[test]
+    fn build_policies_shares_one_tier_across_instances() {
+        let g = crate::graph::GraphBuilder::new(6)
+            .add_undirected(0, 1)
+            .add_undirected(0, 2)
+            .add_undirected(0, 3)
+            .add_undirected(1, 2)
+            .build();
+        // from_nodes replicas share the ranked Arc, no re-ranking
+        let first = DegreePolicy::new(&g, 3);
+        let replica = DegreePolicy::from_nodes(first.nodes().clone());
+        assert!(Arc::ptr_eq(first.nodes(), replica.nodes()));
+        // build_policies stamps out K instances of the right kind
+        let spec = PolicySpec::parse("degree:budget=3").unwrap();
+        let b = TierBuild {
+            graph: &g,
+            train: &[],
+            labels: &[],
+            chunk_size: 1,
+            warmup_batches: 1,
+        };
+        let ps = build_policies(&spec, &b, || panic!("degree needs no sampler"), 3).unwrap();
+        assert_eq!(ps.len(), 3);
+        for p in &ps {
+            assert_eq!(p.name(), "degree");
+        }
+        assert!(build_policies(&spec, &b, || panic!("unused"), 0).is_err());
     }
 
     #[test]

@@ -23,16 +23,16 @@ impl Args {
         while let Some(arg) = it.next() {
             if let Some(rest) = arg.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
+                    out.insert_flag(k, v.to_string());
                 } else {
                     // `--key value` unless the next token is another flag
                     match it.peek() {
                         Some(next) if !next.starts_with("--") => {
                             let v = it.next().unwrap();
-                            out.flags.insert(rest.to_string(), v);
+                            out.insert_flag(rest, v);
                         }
                         _ => {
-                            out.flags.insert(rest.to_string(), "true".to_string());
+                            out.insert_flag(rest, "true".to_string());
                         }
                     }
                 }
@@ -41,6 +41,17 @@ impl Args {
             }
         }
         out
+    }
+
+    /// A flag may be given once. Last-wins duplicates used to be accepted
+    /// silently, which let typo'd CI/workflow invocations mask the value
+    /// actually in effect — now they are a hard error.
+    fn insert_flag(&mut self, key: &str, value: String) {
+        if let Some(prev) = self.flags.insert(key.to_string(), value) {
+            panic!(
+                "duplicate flag --{key} (was {prev:?}); each flag may be given once"
+            );
+        }
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -187,6 +198,18 @@ mod tests {
     fn bool_rejects_garbage_values() {
         let a = parse(&["--x=maybe"]);
         a.bool("x");
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate flag --x")]
+    fn duplicate_flags_are_a_hard_error() {
+        parse(&["--x", "1", "--x", "2"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate flag --smoke")]
+    fn duplicate_boolean_flags_are_rejected_too() {
+        parse(&["--smoke", "--smoke=true"]);
     }
 
     #[test]

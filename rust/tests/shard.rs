@@ -1,0 +1,242 @@
+//! Sharding subsystem invariants (docs/SHARDING.md):
+//!
+//! 1. `shards=1` reproduces the unsharded pipeline batch-for-batch:
+//!    identical loss / accuracy / hit / miss / transfer metrics for all
+//!    four methods, with either partitioner (artifact-gated, skips when
+//!    `make artifacts` has not run);
+//! 2. partitioners cover every node exactly once (total partition);
+//! 3. cross-shard byte accounting: classified `local + remote` bytes
+//!    equal what the unsharded path serves over PCIe for the same
+//!    batches (`cache=none`) — sharding reclassifies traffic, it never
+//!    creates or loses bytes;
+//! 4. the `shards=` param is plumbed through every method spec.
+
+use gns::device::{TransferModel, TransferStats};
+use gns::features::build_dataset;
+use gns::sampling::spec::{BuildContext, MethodRegistry};
+use gns::sampling::{BlockShapes, MiniBatch};
+use gns::session::{Session, SessionBuilder};
+use gns::shard::{build_partitioner, ShardSpec};
+use gns::tiering::{NonePolicy, TieringEngine};
+
+const METHODS: [&str; 4] = ["ns", "ladies:s-layer=128", "lazygcn", "gns:cache-fraction=0.02"];
+
+fn with_param(method: &str, param: &str) -> String {
+    let sep = if method.contains(':') { "," } else { ":" };
+    format!("{method}{sep}{param}")
+}
+
+// ---------------------------------------------------------------------------
+// 1. shards=1 ≡ unsharded
+
+/// The tiny-artifact session the e2e suites share.
+fn tiny_session(method: &str) -> SessionBuilder {
+    Session::builder("yelp-s", method)
+        .scale(0.03)
+        .seed(1)
+        .epochs(2)
+        .workers(1)
+        .eval_batches(2)
+        .artifact("tiny")
+        .refit_features(true)
+        .max_train_nodes(512)
+        .max_val_nodes(128)
+        .paranoid_validate(true)
+}
+
+/// Every deterministic per-epoch + run-total metric a config produces.
+#[derive(Debug, PartialEq)]
+struct Metrics {
+    per_epoch: Vec<(u64, u64, u64, usize, u64, u64)>, // (loss, acc, val, batches, h2d, d2d)
+    cache_hits: u64,
+    cache_misses: u64,
+    test_f1: u64,
+}
+
+fn run_metrics(builder: SessionBuilder) -> Option<Metrics> {
+    let mut session = builder.build_or_skip()?;
+    let r = session.run().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    Some(Metrics {
+        per_epoch: r
+            .reports
+            .iter()
+            .map(|rep| {
+                (
+                    rep.mean_loss.to_bits(),
+                    rep.train_acc.to_bits(),
+                    rep.val_f1.to_bits(),
+                    rep.batches,
+                    rep.transfer.h2d_bytes,
+                    rep.transfer.d2d_bytes,
+                )
+            })
+            .collect(),
+        cache_hits: r.cache_hits,
+        cache_misses: r.cache_misses,
+        test_f1: r.test_f1.to_bits(),
+    })
+}
+
+#[test]
+fn single_shard_is_metric_identical_to_unsharded_for_all_methods() {
+    for method in METHODS {
+        let Some(base) = run_metrics(tiny_session(method)) else { return };
+        // the same run through shards=1, with both partitioners and via
+        // the builder override — every metric must be bit-identical
+        for variant in [
+            with_param(method, "shards=1"),
+            with_param(method, "shards=1:part=range"),
+        ] {
+            let got = run_metrics(tiny_session(&variant)).unwrap();
+            assert_eq!(got, base, "{variant} diverged from {method}");
+        }
+        let via_builder = run_metrics(
+            tiny_session(method).shards(ShardSpec::parse("1:part=range").unwrap()),
+        )
+        .unwrap();
+        assert_eq!(via_builder, base, "builder override diverged for {method}");
+    }
+}
+
+#[test]
+fn sharded_session_trains_and_rolls_up_per_shard_traffic() {
+    let Some(mut session) = tiny_session("ns:shards=2").build_or_skip() else { return };
+    assert_eq!(session.num_shards(), 2);
+    let n_train = session.dataset().train.len();
+    let r = session.run().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.shards.len(), 2);
+    // the shards partition the train split
+    let owned: usize = r.shards.iter().map(|s| s.train_targets).sum();
+    assert_eq!(owned, n_train);
+    // every shard served batches, and structure-free hash partitioning
+    // must produce remote fetches
+    for s in &r.shards {
+        assert!(s.batches > 0, "shard {} served nothing", s.shard);
+        assert!(s.local_rows > 0, "shard {} saw no local rows", s.shard);
+        assert_eq!(s.cross_shard_bytes > 0, s.remote_rows > 0);
+    }
+    assert!(r.cross_shard_bytes() > 0, "2-way hash sharding must cross shards");
+    let lf = r.local_fraction();
+    assert!(lf > 0.0 && lf < 1.0, "local fraction {lf}");
+    assert!(r.test_f1.is_finite());
+}
+
+// ---------------------------------------------------------------------------
+// 2. partitioners are total partitions
+
+#[test]
+fn partitioners_cover_every_node_exactly_once() {
+    let n = 5000usize;
+    for k in [1usize, 2, 3, 8] {
+        for part in ["hash", "range"] {
+            let spec = ShardSpec::parse(&format!("{k}:part={part}")).unwrap();
+            let p = build_partitioner(&spec, n);
+            let mut counts = vec![0u32; k];
+            for v in 0..n as u32 {
+                let s = p.shard_of(v);
+                assert!((s as usize) < k, "{part}/{k}: shard {s} out of range");
+                counts[s as usize] += 1;
+            }
+            // every node lands in exactly one shard
+            assert_eq!(counts.iter().sum::<u32>() as usize, n, "{part}/{k}");
+            // and the router's target split covers the same partition
+            let router = spec.router(n);
+            let targets: Vec<u32> = (0..n as u32).rev().collect();
+            let split = router.split_targets(&targets);
+            assert_eq!(split.len(), k);
+            let mut all: Vec<u32> = split.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n as u32).collect::<Vec<_>>(), "{part}/{k}");
+            for (shard, own) in split.iter().enumerate() {
+                assert_eq!(counts[shard] as usize, own.len(), "{part}/{k} shard {shard}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. cross-shard byte accounting identity
+
+#[test]
+fn classified_bytes_equal_unsharded_h2d() {
+    let ds = build_dataset("yelp-s", 0.05, 13);
+    let n = ds.graph.num_nodes();
+    let row_bytes = ds.features.row_bytes() as u64;
+    let shapes = BlockShapes::new(vec![64 * 24, 64 * 6, 64], vec![4, 5]);
+    let reg = MethodRegistry::global();
+    let model = TransferModel::default();
+
+    for part in ["hash", "range"] {
+        let spec = ShardSpec::parse(&format!("4:part={part}")).unwrap();
+        let router = spec.router(n);
+        let targets = ds.train_by_shard(&router);
+        // two identically-seeded samplers: one drives the sharded
+        // classification, one the unsharded cache=none reference
+        let ctx = BuildContext::new(&ds, shapes.clone(), 21);
+        let mut sampler = reg.sampler(&reg.parse("ns").unwrap(), &ctx, 0).unwrap();
+        sampler.begin_epoch(0);
+        let mut unsharded = TieringEngine::new(Box::new(NonePolicy), n, row_bytes);
+        let mut stats = TransferStats::default();
+        let mut slot = MiniBatch::default();
+        let (mut local, mut remote) = (0u64, 0u64);
+        for (shard, own) in targets.iter().enumerate() {
+            for chunk in own.chunks(64).take(3) {
+                sampler.sample_batch_into(chunk, &ds.labels, &mut slot).unwrap();
+                let (l, r) = router.count(shard as u32, &slot.input_nodes);
+                assert_eq!(l + r, slot.input_nodes.len() as u64, "rows lost");
+                local += l;
+                remote += r;
+                unsharded.serve(&slot.input_nodes, &model, &mut stats);
+            }
+        }
+        // the identity: classification never creates or loses traffic —
+        // local + remote bytes equal exactly what the unsharded cache-less
+        // path pushed over PCIe for the same batches
+        assert_eq!(
+            (local + remote) * row_bytes,
+            stats.h2d_bytes,
+            "{part}: sum(local + remote) must equal the unsharded h2d bytes"
+        );
+        assert!(remote > 0, "{part}: 4-way sharding must see remote rows");
+        assert!(local > 0, "{part}: shards must also keep local traffic");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. spec plumbing
+
+#[test]
+fn every_method_accepts_the_shards_param() {
+    let ds = build_dataset("yelp-s", 0.05, 13);
+    let shapes = BlockShapes::new(vec![16 * 24, 16 * 6, 16], vec![4, 5]);
+    let reg = MethodRegistry::global();
+    let ctx = BuildContext::new(&ds, shapes, 3);
+    for method in METHODS {
+        for shards in ["1", "2", "4:part=range", "8:part=hash"] {
+            let text = with_param(method, &format!("shards={shards}"));
+            let spec = reg.parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+            reg.factory(&spec, &ctx)
+                .unwrap_or_else(|e| panic!("{text}: {e}"));
+        }
+    }
+    // bad shard configs are rejected at factory build time
+    for bad in ["ns:shards=0", "ns:shards=x", "ns:shards=2:part=metis", "ns:shards=99999"] {
+        let spec = reg.parse(bad).unwrap();
+        assert!(reg.factory(&spec, &ctx).is_err(), "{bad} should fail");
+    }
+}
+
+#[test]
+fn shards_param_round_trips_through_display_and_json() {
+    let reg = MethodRegistry::global();
+    for text in ["ns:shards=4:part=range", "gns:cache-fraction=0.02,shards=2"] {
+        let spec = reg.parse(text).unwrap();
+        assert_eq!(spec.to_string(), text);
+        assert_eq!(reg.parse(&spec.to_string()).unwrap(), spec);
+        let j = spec.to_json().to_string_pretty();
+        let parsed = gns::util::json::Json::parse(&j).unwrap();
+        assert_eq!(reg.from_json(&parsed).unwrap(), spec);
+    }
+}

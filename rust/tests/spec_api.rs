@@ -30,7 +30,8 @@ fn prop_spec_display_parse_round_trip() {
                 ParamKind::Int => ParamValue::Int(g.usize(1..10_000) as u64),
                 ParamKind::Float => ParamValue::Float(g.f64(0.0001..0.9999)),
                 // strings come from the param's own domain: `policy` (GNS
-                // cache distribution) and the shared `cache` tier policy
+                // cache distribution), the shared `cache` tier policy, and
+                // the shared `shards` shard-parallel config
                 ParamKind::Str => {
                     const CACHE_DOMAIN: &[&str] = &[
                         "auto",
@@ -41,10 +42,15 @@ fn prop_spec_display_parse_round_trip() {
                         "degree:budget=64",
                         "presample:budget=256",
                     ];
+                    const SHARD_DOMAIN: &[&str] =
+                        &["1", "2", "4", "8:part=hash", "4:part=range"];
                     const POLICY_DOMAIN: &[&str] =
                         &["auto", "degree", "random-walk", "uniform"];
-                    let domain =
-                        if info.key == "cache" { CACHE_DOMAIN } else { POLICY_DOMAIN };
+                    let domain = match info.key {
+                        "cache" => CACHE_DOMAIN,
+                        "shards" => SHARD_DOMAIN,
+                        _ => POLICY_DOMAIN,
+                    };
                     ParamValue::Str((*g.choose(domain)).to_string())
                 }
             };
