@@ -5,12 +5,20 @@
 //! One `Session` wraps the whole run: the method spec is parsed by the
 //! `MethodRegistry`, the dataset analogue is generated and refitted to
 //! the `tiny` AOT artifact, and `run()` trains GraphSAGE with Global
-//! Neighbor Sampling and evaluates the test split.
+//! Neighbor Sampling and evaluates the test split. The spec shows all
+//! three cross-cutting parameters together: `cache=` (feature tier,
+//! docs/TIERING.md), `shards=` (partitioned pipelines, docs/SHARDING.md
+//! — `part=greedy` is the locality-aware streaming partitioner), and
+//! `topo=` (modeled hardware topology, docs/TOPOLOGY.md — `dist`
+//! charges cross-shard fetches IB seconds).
 
 use gns::session::Session;
 
 fn main() -> anyhow::Result<()> {
-    let mut session = Session::builder("yelp-s", "gns:cache-fraction=0.02")
+    let mut session = Session::builder(
+        "yelp-s",
+        "gns:cache-fraction=0.02,cache=auto,shards=2:part=greedy,topo=dist",
+    )
         .scale(0.05)
         .seed(7)
         .epochs(4)
@@ -43,6 +51,13 @@ fn main() -> anyhow::Result<()> {
         gns::util::fmt_bytes(last.transfer.bytes_saved_by_cache),
         gns::util::fmt_bytes(last.transfer.h2d_bytes),
         gns::util::fmt_bytes(last.transfer.d2d_bytes),
+    );
+    println!(
+        "{} shards exchanged {} remotely — {:.4}s modeled on the {} interconnect.",
+        session.num_shards(),
+        gns::util::fmt_bytes(result.cross_shard_bytes()),
+        result.modeled_inter_secs(),
+        session.topology().name,
     );
     println!("{}", last.clock.render("stage breakdown (last epoch)"));
     Ok(())

@@ -152,12 +152,14 @@ fn main() {
                 ])
             })
             .collect();
-        let doc = json::obj(vec![
-            ("bench", Json::Str("micro_hotpath".to_string())),
-            ("workload", Json::Str(format!("products-s x{scale}"))),
-            ("smoke", Json::Bool(h.smoke)),
-            ("benches", json::arr(entries)),
-        ]);
+        let doc = json::bench_doc(
+            "micro_hotpath",
+            vec![
+                ("workload", Json::Str(format!("products-s x{scale}"))),
+                ("smoke", Json::Bool(h.smoke)),
+                ("benches", json::arr(entries)),
+            ],
+        );
         std::fs::write(path, doc.to_string_pretty())
             .unwrap_or_else(|e| panic!("write {path}: {e}"));
         println!("wrote {path}");

@@ -1,29 +1,31 @@
 //! Shard-scaling bench: the same products-s sampling workload executed
 //! as K ∈ {1, 2, 4, 8} shard-parallel pipelines (one device feature tier
-//! per shard, hash or range partitioner), reporting per-batch serve cost,
-//! shard-local traffic fraction, cross-shard fetch bytes, and the edge
-//! cut of the partition — the scaling surface the sharding subsystem
-//! opens (docs/SHARDING.md).
+//! per shard; hash, range, or greedy partitioner), reporting per-batch
+//! serve cost, shard-local traffic fraction, cross-shard fetch bytes,
+//! modeled interconnect seconds under the selected `--topo` preset
+//! (default `dist` — the cross-shard link is the point of this sweep),
+//! and the edge cut of the partition (docs/SHARDING.md, docs/TOPOLOGY.md).
 //!
 //! `--json <path>` emits machine-readable results (`make bench` writes
 //! BENCH_shard.json); `--smoke` shrinks the sweep so `make check` and CI
 //! keep this binary from rotting.
 
-use gns::device::{DeviceMemory, TransferModel, TransferStats};
+use gns::device::DeviceMemory;
 use gns::features::build_dataset;
 use gns::sampling::spec::{cache_policy_spec, BuildContext, MethodRegistry};
 use gns::sampling::{BlockShapes, MiniBatch};
 use gns::shard::ShardSpec;
 use gns::tiering::{build_policies, TierBuild, TieringEngine, PRESAMPLE_WORKER};
+use gns::topology::{HardwareTopology, LinkClock, LinkKind, TransferStats};
 use gns::util::cli::Args;
 use gns::util::json::{self, Json};
 use std::time::Instant;
 
 fn main() {
     let args = Args::parse_env();
-    if let Err(e) =
-        args.check_known(&["scale", "epochs", "batches", "part", "method", "json", "smoke"])
-    {
+    if let Err(e) = args.check_known(&[
+        "scale", "epochs", "batches", "part", "method", "topo", "json", "smoke",
+    ]) {
         eprintln!("shard_scaling: {e}");
         std::process::exit(2);
     }
@@ -31,15 +33,22 @@ fn main() {
     let smoke = args.bool("smoke");
     let epochs = if smoke { 1 } else { args.usize_or("epochs", 2) };
     let part = args.str_or("part", "hash").to_string();
+    let topo_text = args.str_or("topo", "dist").to_string();
     let method = args.str_or("method", "gns:cache-fraction=0.01").to_string();
     let sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
 
     let ds = build_dataset("products-s", scale, 1);
-    println!("workload: products-s x{scale} ({method}) — {}", ds.graph.stats());
+    let links = LinkClock::new(
+        HardwareTopology::parse(&topo_text).unwrap_or_else(|e| panic!("--topo: {e}")),
+    );
+    println!(
+        "workload: products-s x{scale} ({method}) — {}\ntopology: {}",
+        ds.graph.stats(),
+        links.topology()
+    );
     let batch = 256usize;
     let shapes = BlockShapes::new(vec![20000, 12000, 2048, batch], vec![5, 10, 15]);
     let reg = MethodRegistry::global();
-    let model = TransferModel::default();
     let row_bytes = ds.features.row_bytes() as u64;
     let dim = ds.features.dim();
     let num_nodes = ds.graph.num_nodes();
@@ -49,14 +58,14 @@ fn main() {
     let total_batches = if smoke { 4 } else { args.usize_or("batches", 32) };
 
     println!(
-        "{:>3} {:>12} {:>8} {:>12} {:>12} {:>8} {:>9}",
-        "K", "ns/batch", "local%", "x-shard MB", "h2d MB", "hit%", "edge-cut"
+        "{:>3} {:>12} {:>8} {:>12} {:>10} {:>12} {:>8} {:>9}",
+        "K", "ns/batch", "local%", "x-shard MB", "inter s", "h2d MB", "hit%", "edge-cut"
     );
     let mut entries: Vec<Json> = Vec::new();
     for &k in sweep {
         let shard_spec = ShardSpec::parse(&format!("{k}:part={part}"))
             .unwrap_or_else(|e| panic!("shard spec: {e}"));
-        let router = shard_spec.router(num_nodes);
+        let router = shard_spec.router(&ds.graph);
         let targets = ds.train_by_shard(&router);
         let spec = reg.parse(&method).unwrap();
         let ctx = BuildContext::new(&ds, shapes.clone(), 7);
@@ -99,7 +108,7 @@ fn main() {
             leader.begin_epoch(epoch);
             for (engine, mem) in &mut lanes {
                 engine
-                    .begin_epoch(epoch, leader.as_ref(), mem, &model, &mut stats)
+                    .begin_epoch(epoch, leader.as_ref(), mem, &links, &mut stats)
                     .unwrap();
             }
             for (shard, (engine, _mem)) in lanes.iter_mut().enumerate() {
@@ -115,10 +124,15 @@ fn main() {
                         engine.last_plan().runs(),
                         &mut x0[..n],
                     );
-                    engine.serve_planned(&model, &mut stats);
+                    engine.serve_planned(&links, &mut stats);
                     let (local, remote) = router.count(shard as u32, &slot.input_nodes);
                     local_rows += local;
                     remote_rows += remote;
+                    // each batch's remote rows are one fetch over the
+                    // interconnect (exactly how the trainer charges them)
+                    if remote > 0 {
+                        stats.charge(&links, LinkKind::Inter, remote * row_bytes);
+                    }
                     served += 1;
                 }
             }
@@ -136,11 +150,13 @@ fn main() {
         } else {
             0.0
         };
+        let inter_secs = stats.modeled_inter.as_secs_f64();
         let mb = |b: u64| b as f64 / (1 << 20) as f64;
         println!(
-            "{k:>3} {ns_per_batch:>12.0} {:>7.1}% {:>12.1} {:>12.1} {:>7.1}% {:>8.1}%",
+            "{k:>3} {ns_per_batch:>12.0} {:>7.1}% {:>12.1} {:>10.4} {:>12.1} {:>7.1}% {:>8.1}%",
             100.0 * local_frac,
             mb(cross_shard_bytes),
+            inter_secs,
             mb(stats.h2d_bytes),
             100.0 * hit_rate,
             100.0 * edge_cut_frac,
@@ -152,6 +168,9 @@ fn main() {
             ("batches", Json::Num(served as f64)),
             ("local_fraction", Json::Num(local_frac)),
             ("cross_shard_bytes", Json::Num(cross_shard_bytes as f64)),
+            ("inter_bytes", Json::Num(stats.inter_bytes as f64)),
+            ("inter_secs", Json::Num(inter_secs)),
+            ("inter_fetches", Json::Num(stats.inter_transfers as f64)),
             ("h2d_bytes", Json::Num(stats.h2d_bytes as f64)),
             ("hit_rate", Json::Num(hit_rate)),
             ("edge_cut_fraction", Json::Num(edge_cut_frac)),
@@ -162,14 +181,17 @@ fn main() {
     }
 
     if let Some(path) = args.get("json") {
-        let doc = json::obj(vec![
-            ("bench", Json::Str("shard_scaling".to_string())),
-            ("workload", Json::Str(format!("products-s x{scale}"))),
-            ("method", Json::Str(method.clone())),
-            ("smoke", Json::Bool(smoke)),
-            ("epochs", Json::Num(epochs as f64)),
-            ("configs", json::arr(entries)),
-        ]);
+        let doc = json::bench_doc(
+            "shard_scaling",
+            vec![
+                ("workload", Json::Str(format!("products-s x{scale}"))),
+                ("method", Json::Str(method.clone())),
+                ("topo", Json::Str(topo_text.clone())),
+                ("smoke", Json::Bool(smoke)),
+                ("epochs", Json::Num(epochs as f64)),
+                ("configs", json::arr(entries)),
+            ],
+        );
         std::fs::write(path, doc.to_string_pretty())
             .unwrap_or_else(|e| panic!("write {path}: {e}"));
         println!("wrote {path}");

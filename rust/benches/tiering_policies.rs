@@ -9,11 +9,12 @@
 //! (`make bench` writes BENCH_tiering.json); `--smoke` shrinks the run so
 //! `make check` keeps this binary from rotting.
 
-use gns::device::{DeviceMemory, TransferModel, TransferStats};
+use gns::device::DeviceMemory;
 use gns::features::build_dataset;
 use gns::sampling::spec::{cache_policy_spec, BuildContext, MethodRegistry};
 use gns::sampling::{BlockShapes, MiniBatch};
 use gns::tiering::{build_policy, TierBuild, TieringEngine, PRESAMPLE_WORKER, WARMUP_BATCHES};
+use gns::topology::{LinkClock, TransferStats};
 use gns::util::cli::Args;
 use gns::util::json::{self, Json};
 use std::time::Instant;
@@ -51,7 +52,7 @@ fn main() {
         args.usize_or("batches", 30).min(max_batches.max(1))
     };
     let reg = MethodRegistry::global();
-    let model = TransferModel::default();
+    let links = LinkClock::pcie();
     let row_bytes = ds.features.row_bytes() as u64;
     let dim = ds.features.dim();
     let mut x0 = vec![0f32; shapes.level_sizes[0] * dim];
@@ -87,7 +88,7 @@ fn main() {
         for epoch in 0..epochs {
             leader.begin_epoch(epoch);
             engine
-                .begin_epoch(epoch, leader.as_ref(), &mut mem, &model, &mut stats)
+                .begin_epoch(epoch, leader.as_ref(), &mut mem, &links, &mut stats)
                 .unwrap();
             for b in 0..batches_per_epoch {
                 let chunk = &ds.train[b * batch..(b + 1) * batch];
@@ -103,7 +104,7 @@ fn main() {
                     engine.last_plan().runs(),
                     &mut x0[..n],
                 );
-                engine.serve_planned(&model, &mut stats);
+                engine.serve_planned(&links, &mut stats);
                 served += 1;
             }
         }
@@ -144,14 +145,16 @@ fn main() {
     }
 
     if let Some(path) = args.get("json") {
-        let doc = json::obj(vec![
-            ("bench", Json::Str("tiering_policies".to_string())),
-            ("workload", Json::Str(format!("products-s x{scale}"))),
-            ("smoke", Json::Bool(smoke)),
-            ("epochs", Json::Num(epochs as f64)),
-            ("batches_per_epoch", Json::Num(batches_per_epoch as f64)),
-            ("configs", json::arr(entries)),
-        ]);
+        let doc = json::bench_doc(
+            "tiering_policies",
+            vec![
+                ("workload", Json::Str(format!("products-s x{scale}"))),
+                ("smoke", Json::Bool(smoke)),
+                ("epochs", Json::Num(epochs as f64)),
+                ("batches_per_epoch", Json::Num(batches_per_epoch as f64)),
+                ("configs", json::arr(entries)),
+            ],
+        );
         std::fs::write(path, doc.to_string_pretty())
             .unwrap_or_else(|e| panic!("write {path}: {e}"));
         println!("wrote {path}");

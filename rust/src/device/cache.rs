@@ -14,10 +14,10 @@
 //! invalidates every stale stamp at once (the same trick the sampler-side
 //! `CacheState` and `InternTable` use).
 
-use super::transfer::{TransferModel, TransferStats};
 use super::{DeviceBuffer, DeviceMemory};
 use crate::graph::NodeId;
 use crate::tiering::plan::GatherPlan;
+use crate::topology::{LinkClock, LinkKind, TransferStats};
 use anyhow::Result;
 
 pub struct DeviceFeatureCache {
@@ -105,7 +105,7 @@ impl DeviceFeatureCache {
         nodes: &[NodeId],
         generation: u64,
         mem: &mut DeviceMemory,
-        model: &TransferModel,
+        clock: &LinkClock,
         stats: &mut TransferStats,
     ) -> Result<std::time::Duration> {
         anyhow::ensure!(generation != 0, "cache generation 0 is reserved for 'empty'");
@@ -153,14 +153,17 @@ impl DeviceFeatureCache {
         self.resident = nodes.len();
         self.delta_uploaded_rows += fresh;
         self.delta_reused_rows += reused;
-        // a refresh that moves nothing over PCIe must not record a phantom
-        // transfer (h2d always charges the per-transfer latency)
+        // a refresh that moves nothing over a link must not record a
+        // phantom transfer there (links charge per-transfer latency, and
+        // topo= overrides can give d2d a nonzero one too)
         let mut t = std::time::Duration::ZERO;
         if fresh > 0 {
-            t += stats.h2d(model, fresh * self.row_bytes);
+            t += stats.charge(clock, LinkKind::H2d, fresh * self.row_bytes);
         }
-        t += stats.d2d(model, reused * self.row_bytes);
-        stats.record_delta_savings(reused * self.row_bytes);
+        if reused > 0 {
+            t += stats.charge(clock, LinkKind::D2d, reused * self.row_bytes);
+            stats.record_delta_savings(reused * self.row_bytes);
+        }
         Ok(t)
     }
 
@@ -176,19 +179,22 @@ impl DeviceFeatureCache {
     pub fn serve_plan(
         &mut self,
         plan: &GatherPlan,
-        model: &TransferModel,
+        clock: &LinkClock,
         stats: &mut TransferStats,
     ) -> (std::time::Duration, usize) {
         self.hits += plan.hit_rows() as u64;
         self.misses += plan.miss_rows() as u64;
-        // fully-resident batches move nothing over PCIe — don't record a
-        // phantom transfer (h2d charges per-transfer latency even at 0 B)
+        // a batch that moves nothing over a link must not record a
+        // phantom transfer there (links charge per-transfer latency even
+        // at 0 B, and topo= overrides can give d2d a nonzero one too)
         let mut t = std::time::Duration::ZERO;
         if plan.miss_rows() > 0 {
-            t += stats.h2d(model, plan.miss_bytes(self.row_bytes));
+            t += stats.charge(clock, LinkKind::H2d, plan.miss_bytes(self.row_bytes));
         }
-        t += stats.d2d(model, plan.hit_bytes(self.row_bytes));
-        stats.record_cache_savings(plan.hit_bytes(self.row_bytes));
+        if plan.hit_rows() > 0 {
+            t += stats.charge(clock, LinkKind::D2d, plan.hit_bytes(self.row_bytes));
+            stats.record_cache_savings(plan.hit_bytes(self.row_bytes));
+        }
         (t, plan.miss_rows())
     }
 
@@ -199,12 +205,12 @@ impl DeviceFeatureCache {
     pub fn serve_batch(
         &mut self,
         input_nodes: &[NodeId],
-        model: &TransferModel,
+        clock: &LinkClock,
         stats: &mut TransferStats,
     ) -> (std::time::Duration, usize) {
         let mut plan = std::mem::take(&mut self.scratch_plan);
         self.plan_batch(input_nodes, &mut plan);
-        let out = self.serve_plan(&plan, model, stats);
+        let out = self.serve_plan(&plan, clock, stats);
         self.scratch_plan = plan;
         out
     }
@@ -225,22 +231,22 @@ impl DeviceFeatureCache {
 mod tests {
     use super::*;
 
-    fn setup() -> (DeviceFeatureCache, DeviceMemory, TransferModel, TransferStats) {
+    fn setup() -> (DeviceFeatureCache, DeviceMemory, LinkClock, TransferStats) {
         (
             DeviceFeatureCache::new(64, 400),
             DeviceMemory::new(1 << 20),
-            TransferModel::default(),
+            LinkClock::pcie(),
             TransferStats::default(),
         )
     }
 
     #[test]
     fn upload_and_serve() {
-        let (mut c, mut mem, model, mut stats) = setup();
-        c.upload(&[1, 2, 3], 1, &mut mem, &model, &mut stats).unwrap();
+        let (mut c, mut mem, clock, mut stats) = setup();
+        c.upload(&[1, 2, 3], 1, &mut mem, &clock, &mut stats).unwrap();
         assert_eq!(c.resident_rows(), 3);
         assert_eq!(mem.used(), 1200);
-        let (_t, missed) = c.serve_batch(&[1, 2, 9, 10], &model, &mut stats);
+        let (_t, missed) = c.serve_batch(&[1, 2, 9, 10], &clock, &mut stats);
         assert_eq!(missed, 2);
         assert_eq!(c.hits, 2);
         assert_eq!(c.misses, 2);
@@ -249,15 +255,15 @@ mod tests {
 
     #[test]
     fn serve_plan_matches_serve_batch() {
-        let (mut c, mut mem, model, mut stats) = setup();
-        c.upload(&[4, 5, 6, 7], 1, &mut mem, &model, &mut stats).unwrap();
+        let (mut c, mut mem, clock, mut stats) = setup();
+        c.upload(&[4, 5, 6, 7], 1, &mut mem, &clock, &mut stats).unwrap();
         let batch = [4u32, 9, 5, 6, 11, 7];
         let mut a = TransferStats::default();
-        let (ta, ma) = c.serve_batch(&batch, &model, &mut a);
+        let (ta, ma) = c.serve_batch(&batch, &clock, &mut a);
         let mut plan = GatherPlan::new();
         c.plan_batch(&batch, &mut plan);
         let mut b = TransferStats::default();
-        let (tb, mb) = c.serve_plan(&plan, &model, &mut b);
+        let (tb, mb) = c.serve_plan(&plan, &clock, &mut b);
         assert_eq!(ta, tb);
         assert_eq!(ma, mb);
         assert_eq!(a.h2d_bytes, b.h2d_bytes);
@@ -267,10 +273,10 @@ mod tests {
 
     #[test]
     fn same_generation_upload_is_noop() {
-        let (mut c, mut mem, model, mut stats) = setup();
-        c.upload(&[1], 1, &mut mem, &model, &mut stats).unwrap();
+        let (mut c, mut mem, clock, mut stats) = setup();
+        c.upload(&[1], 1, &mut mem, &clock, &mut stats).unwrap();
         let before = stats.h2d_bytes;
-        c.upload(&[2, 3], 1, &mut mem, &model, &mut stats).unwrap();
+        c.upload(&[2, 3], 1, &mut mem, &clock, &mut stats).unwrap();
         assert_eq!(stats.h2d_bytes, before);
         assert!(c.contains(1));
         assert!(!c.contains(2));
@@ -278,10 +284,10 @@ mod tests {
 
     #[test]
     fn new_generation_replaces_and_frees() {
-        let (mut c, mut mem, model, mut stats) = setup();
-        c.upload(&[1, 2], 1, &mut mem, &model, &mut stats).unwrap();
+        let (mut c, mut mem, clock, mut stats) = setup();
+        c.upload(&[1, 2], 1, &mut mem, &clock, &mut stats).unwrap();
         assert_eq!(mem.used(), 800);
-        c.upload(&[3, 4, 5], 2, &mut mem, &model, &mut stats).unwrap();
+        c.upload(&[3, 4, 5], 2, &mut mem, &clock, &mut stats).unwrap();
         assert_eq!(mem.used(), 1200);
         assert!(!c.contains(1));
         assert!(c.contains(4));
@@ -294,12 +300,12 @@ mod tests {
 
     #[test]
     fn delta_upload_pays_pcie_only_for_fresh_rows() {
-        let (mut c, mut mem, model, mut stats) = setup();
-        c.upload(&[1, 2, 3], 1, &mut mem, &model, &mut stats).unwrap();
+        let (mut c, mut mem, clock, mut stats) = setup();
+        c.upload(&[1, 2, 3], 1, &mut mem, &clock, &mut stats).unwrap();
         assert_eq!(stats.h2d_bytes, 1200);
         assert_eq!(c.delta_uploaded_rows, 3);
         // generation 2 overlaps on {2, 3}: only {4, 5} cross PCIe
-        c.upload(&[2, 3, 4, 5], 2, &mut mem, &model, &mut stats).unwrap();
+        c.upload(&[2, 3, 4, 5], 2, &mut mem, &clock, &mut stats).unwrap();
         assert_eq!(stats.h2d_bytes, 1200 + 800);
         assert_eq!(stats.d2d_bytes, 800);
         assert_eq!(stats.bytes_saved_by_delta, 800);
@@ -319,11 +325,11 @@ mod tests {
         // two static policies both publish generation 1; swapping between
         // them (release + upload) must not leave the first tier's rows
         // reading as resident via surviving stamps
-        let (mut c, mut mem, model, mut stats) = setup();
-        c.upload(&[1, 2, 3], 1, &mut mem, &model, &mut stats).unwrap();
+        let (mut c, mut mem, clock, mut stats) = setup();
+        c.upload(&[1, 2, 3], 1, &mut mem, &clock, &mut stats).unwrap();
         c.release(&mut mem);
         assert!(!c.contains(1));
-        c.upload(&[4, 5], 1, &mut mem, &model, &mut stats).unwrap();
+        c.upload(&[4, 5], 1, &mut mem, &clock, &mut stats).unwrap();
         for v in [1u32, 2, 3] {
             assert!(!c.contains(v), "stale stamp resurrected node {v}");
             assert_eq!(c.row_of(v), None);
@@ -336,18 +342,18 @@ mod tests {
 
     #[test]
     fn generation_zero_upload_is_rejected() {
-        let (mut c, mut mem, model, mut stats) = setup();
-        assert!(c.upload(&[1], 0, &mut mem, &model, &mut stats).is_err());
+        let (mut c, mut mem, clock, mut stats) = setup();
+        assert!(c.upload(&[1], 0, &mut mem, &clock, &mut stats).is_err());
     }
 
     #[test]
     fn oversized_cache_ooms() {
         let mut c = DeviceFeatureCache::new(8, 1 << 20);
         let mut mem = DeviceMemory::new(1 << 20);
-        let model = TransferModel::default();
+        let clock = LinkClock::pcie();
         let mut stats = TransferStats::default();
         let nodes: Vec<NodeId> = (0..4).collect();
-        assert!(c.upload(&nodes, 1, &mut mem, &model, &mut stats).is_err());
+        assert!(c.upload(&nodes, 1, &mut mem, &clock, &mut stats).is_err());
     }
 
     #[test]
@@ -356,32 +362,54 @@ mod tests {
         // the previous generation's rows must not read as resident
         let mut c = DeviceFeatureCache::new(64, 400);
         let mut mem = DeviceMemory::new(1600);
-        let model = TransferModel::default();
+        let clock = LinkClock::pcie();
         let mut stats = TransferStats::default();
-        c.upload(&[1, 2], 1, &mut mem, &model, &mut stats).unwrap();
+        c.upload(&[1, 2], 1, &mut mem, &clock, &mut stats).unwrap();
         assert!(c.contains(1));
         // 5 rows * 400 B > capacity → alloc fails after the free
         let big: Vec<NodeId> = (10..15).collect();
-        assert!(c.upload(&big, 2, &mut mem, &model, &mut stats).is_err());
+        assert!(c.upload(&big, 2, &mut mem, &clock, &mut stats).is_err());
         assert_eq!(c.generation(), 0);
         assert_eq!(c.resident_rows(), 0);
         assert!(!c.contains(1), "freed rows must not read as resident");
         assert_eq!(c.row_of(1), None);
-        let (_t, missed) = c.serve_batch(&[1, 2], &model, &mut stats);
+        let (_t, missed) = c.serve_batch(&[1, 2], &clock, &mut stats);
         assert_eq!(missed, 2, "no phantom d2d hits after a failed refresh");
         // recovery: a later fitting upload works and is all-fresh
-        c.upload(&[3], 3, &mut mem, &model, &mut stats).unwrap();
+        c.upload(&[3], 3, &mut mem, &clock, &mut stats).unwrap();
         assert!(c.contains(3));
         assert_eq!(c.delta_reused_rows, 0);
     }
 
     #[test]
+    fn zero_byte_d2d_paths_charge_no_phantom_latency() {
+        // topo= overrides can give d2d a per-transfer latency (the old
+        // TransferModel could not); all-miss serves and no-reuse
+        // refreshes must then not accrue it for bytes that never moved
+        let topo = crate::topology::HardwareTopology::parse("pcie:d2d-us=5").unwrap();
+        let clock = LinkClock::new(topo);
+        let mut c = DeviceFeatureCache::new(64, 400);
+        let mut mem = DeviceMemory::new(1 << 20);
+        let mut stats = TransferStats::default();
+        // first upload: nothing previously resident → zero reused rows
+        c.upload(&[1, 2], 1, &mut mem, &clock, &mut stats).unwrap();
+        assert_eq!(stats.modeled_d2d, std::time::Duration::ZERO);
+        // all-miss serve: zero hit bytes
+        c.serve_batch(&[9, 10, 11], &clock, &mut stats);
+        assert_eq!(stats.modeled_d2d, std::time::Duration::ZERO);
+        assert_eq!(stats.d2d_bytes, 0);
+        // a real hit does charge the configured latency
+        c.serve_batch(&[1], &clock, &mut stats);
+        assert!(stats.modeled_d2d >= std::time::Duration::from_micros(5));
+    }
+
+    #[test]
     fn fully_overlapping_refresh_records_no_phantom_pcie_transfer() {
-        let (mut c, mut mem, model, mut stats) = setup();
-        c.upload(&[1, 2], 1, &mut mem, &model, &mut stats).unwrap();
+        let (mut c, mut mem, clock, mut stats) = setup();
+        c.upload(&[1, 2], 1, &mut mem, &clock, &mut stats).unwrap();
         let transfers_before = stats.h2d_transfers;
         let h2d_before = stats.h2d_bytes;
-        c.upload(&[1, 2], 2, &mut mem, &model, &mut stats).unwrap();
+        c.upload(&[1, 2], 2, &mut mem, &clock, &mut stats).unwrap();
         assert_eq!(stats.h2d_bytes, h2d_before);
         assert_eq!(
             stats.h2d_transfers, transfers_before,

@@ -5,10 +5,11 @@
 //!
 //!  - **device memory ledger** with a hard capacity — LazyGCN's mega-batch
 //!    OOM and the feasibility of pinning the GNS cache both live here;
-//!  - **transfer cost model** (transfer.rs) — CPU-side slicing runs for
-//!    real (memory-bandwidth bound), while the PCIe hop is accounted in
-//!    bytes and converted to modeled seconds at a configurable bandwidth
-//!    (default: 12 GB/s effective, a T4's PCIe 3.0 x16 practical rate);
+//!  - **link-typed transfer costs** — CPU-side slicing runs for real
+//!    (memory-bandwidth bound), while every modeled hop (PCIe, d2d,
+//!    interconnect) is charged through `crate::topology`'s
+//!    `HardwareTopology`/`LinkClock` (docs/TOPOLOGY.md); the old
+//!    device-local `transfer.rs` cost model moved there;
 //!  - **GPU feature cache** (cache.rs) — the device-resident copy of the
 //!    GNS cache: rows uploaded once per cache generation, hit/miss
 //!    accounting per mini-batch.
@@ -18,11 +19,9 @@
 
 pub mod cache;
 pub mod compute_model;
-pub mod transfer;
 
 pub use cache::DeviceFeatureCache;
 pub use compute_model::ComputeModel;
-pub use transfer::{TransferModel, TransferStats};
 
 use anyhow::{bail, Result};
 

@@ -8,9 +8,11 @@
 //! internals and the sampler itself comes from the `MethodRegistry`.
 //!
 //! A second block reports **shard scaling** on the same analogue: the
-//! partition quality of `hash` vs `range` at K ∈ {1, 2, 4, 8} shards —
-//! target balance, edge-cut fraction, and the fraction of sampled input
-//! rows a shard must fetch remotely under NS (docs/SHARDING.md).
+//! partition quality of `hash` vs `range` vs `greedy` at K ∈ {1, 2, 4, 8}
+//! shards — target balance, edge-cut fraction, the fraction of sampled
+//! input rows a shard must fetch remotely under NS, and the modeled
+//! interconnect seconds those remote fetches cost under the `dist`
+//! topology preset (docs/SHARDING.md, docs/TOPOLOGY.md).
 
 use super::harness::ExpOptions;
 use super::report::save;
@@ -18,6 +20,7 @@ use crate::features::build_dataset;
 use crate::sampling::spec::{BuildContext, MethodRegistry};
 use crate::sampling::{first_layer_isolation, BlockShapes, MiniBatch};
 use crate::shard::ShardSpec;
+use crate::topology::{HardwareTopology, LinkClock, LinkKind, TransferStats};
 use crate::util::json::{arr, num, obj, Json};
 use anyhow::Result;
 
@@ -36,6 +39,9 @@ pub struct ShardScalingRow {
     pub edge_cut: f64,
     /// remote input rows / total input rows over an NS sampling probe.
     pub remote_frac: f64,
+    /// modeled `inter`-link seconds the probe's remote fetches cost under
+    /// the `dist` topology preset (0 at K=1; docs/TOPOLOGY.md).
+    pub inter_secs_dist: f64,
 }
 
 /// Measure one shard-scaling cell: partition `ds`'s train targets, probe
@@ -49,7 +55,7 @@ pub fn shard_scaling_row(
     seed: u64,
 ) -> Result<ShardScalingRow> {
     let spec = ShardSpec::parse(&format!("{k}:part={part}"))?;
-    let router = spec.router(ds.graph.num_nodes());
+    let router = spec.router(&ds.graph);
     let targets = ds.train_by_shard(&router);
     let mean = ds.train.len() as f64 / k.max(1) as f64;
     let balance = targets.iter().map(Vec::len).max().unwrap_or(0) as f64 / mean.max(1.0);
@@ -65,6 +71,11 @@ pub fn shard_scaling_row(
     let mut sampler = reg.sampler(&reg.parse("ns")?, &ctx, 0)?;
     sampler.begin_epoch(0);
     let mut slot = MiniBatch::default();
+    // charge each batch's remote rows as one fetch over the dist preset's
+    // interconnect — the modeled seconds the shard-scaling block reports
+    let links = LinkClock::new(HardwareTopology::dist());
+    let mut stats = TransferStats::default();
+    let row_bytes = ds.features.row_bytes() as u64;
     let (mut local, mut remote) = (0u64, 0u64);
     for (shard, own) in targets.iter().enumerate() {
         for chunk in own.chunks(256).take(2) {
@@ -72,10 +83,20 @@ pub fn shard_scaling_row(
             let (l, r) = router.count(shard as u32, &slot.input_nodes);
             local += l;
             remote += r;
+            if r > 0 {
+                stats.charge(&links, LinkKind::Inter, r * row_bytes);
+            }
         }
     }
     let remote_frac = remote as f64 / (local + remote).max(1) as f64;
-    Ok(ShardScalingRow { shards: k, part, balance, edge_cut, remote_frac })
+    Ok(ShardScalingRow {
+        shards: k,
+        part,
+        balance,
+        edge_cut,
+        remote_frac,
+        inter_secs_dist: stats.modeled_inter.as_secs_f64(),
+    })
 }
 
 /// Isolation fraction for one LADIES sweep point. Takes the dataset by
@@ -124,22 +145,24 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
     }
 
     text.push_str(
-        "\nShard scaling (products-s): partition quality, hash vs range\n\
-         \x20 K  part    balance  edge-cut%  remote-input%\n",
+        "\nShard scaling (products-s): partition quality, hash vs range vs greedy\n\
+         \x20 K  part    balance  edge-cut%  remote-input%  inter-s@dist\n",
     );
     let mut shard_rows: Vec<Json> = Vec::new();
     // K=1 ignores the partitioner, so the unsharded anchor is emitted once
     for &k in &SHARD_SWEEP {
-        let parts: &[&'static str] = if k == 1 { &["hash"] } else { &["hash", "range"] };
+        let parts: &[&'static str] =
+            if k == 1 { &["hash"] } else { &["hash", "range", "greedy"] };
         for &part in parts {
             let row = shard_scaling_row(&ds, k, part, opts.seed)?;
             text.push_str(&format!(
-                "  {:>2}  {:<6} {:>8.3} {:>10.1} {:>14.1}\n",
+                "  {:>2}  {:<6} {:>8.3} {:>10.1} {:>14.1} {:>13.4}\n",
                 row.shards,
                 row.part,
                 row.balance,
                 100.0 * row.edge_cut,
                 100.0 * row.remote_frac,
+                row.inter_secs_dist,
             ));
             shard_rows.push(obj(vec![
                 ("shards", num(row.shards as f64)),
@@ -147,6 +170,7 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
                 ("balance", num(row.balance)),
                 ("edge_cut_pct", num(100.0 * row.edge_cut)),
                 ("remote_input_pct", num(100.0 * row.remote_frac)),
+                ("inter_secs_dist", num(row.inter_secs_dist)),
             ]));
         }
     }
@@ -175,16 +199,30 @@ mod tests {
     fn shard_scaling_rows_behave() {
         let opts = ExpOptions { scale: 0.1, ..Default::default() };
         let ds = build_dataset("products-s", opts.scale, opts.seed);
-        // K=1: everything local, nothing cut, perfectly balanced
+        // K=1: everything local, nothing cut, perfectly balanced, no
+        // interconnect traffic to charge
         let one = shard_scaling_row(&ds, 1, "hash", opts.seed).unwrap();
         assert_eq!(one.edge_cut, 0.0);
         assert_eq!(one.remote_frac, 0.0);
+        assert_eq!(one.inter_secs_dist, 0.0);
         assert!((one.balance - 1.0).abs() < 1e-9, "balance {}", one.balance);
-        // K=4 hash: structure-free partition ⇒ remote traffic appears and
-        // the edge cut is near the random expectation (K-1)/K
+        // K=4 hash: structure-free partition ⇒ remote traffic appears, the
+        // edge cut is near the random expectation (K-1)/K, and the remote
+        // fetches cost modeled interconnect seconds under dist
         let four = shard_scaling_row(&ds, 4, "hash", opts.seed).unwrap();
         assert!(four.remote_frac > 0.0);
         assert!(four.edge_cut > 0.5, "edge cut {}", four.edge_cut);
         assert!(four.balance < 1.5, "hash balance {}", four.balance);
+        assert!(four.inter_secs_dist > 0.0, "dist must charge remote fetches");
+        // greedy reads the topology: its cut must undercut structure-free
+        // hash on the community-structured analogue
+        let greedy = shard_scaling_row(&ds, 4, "greedy", opts.seed).unwrap();
+        assert!(
+            greedy.edge_cut < four.edge_cut,
+            "greedy cut {} not below hash cut {}",
+            greedy.edge_cut,
+            four.edge_cut
+        );
+        assert!(greedy.remote_frac.is_finite());
     }
 }

@@ -301,7 +301,7 @@ mod tests {
         let ds = build_dataset("yelp-s", 0.05, 3);
         let router = crate::shard::ShardSpec::parse("3:part=range")
             .unwrap()
-            .router(ds.graph.num_nodes());
+            .router(&ds.graph);
         let split = ds.train_by_shard(&router);
         assert_eq!(split.len(), 3);
         let mut all: Vec<NodeId> = split.iter().flatten().copied().collect();

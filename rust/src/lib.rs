@@ -25,6 +25,7 @@ pub mod session;
 pub mod shard;
 pub mod graph;
 pub mod tiering;
+pub mod topology;
 pub mod util;
 
 pub use sampling::spec::{MethodRegistry, MethodSpec};

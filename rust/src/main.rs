@@ -23,7 +23,8 @@ const TRAIN_FLAGS: &[(&str, &str)] = &[
     ("method", "method spec: name[:key=value,...] — see METHODS"),
     ("cache-fraction", "gns shorthand for --method gns:cache-fraction=F"),
     ("cache-period", "gns shorthand for --method gns:update-period=P"),
-    ("shards", "shorthand for the method param shards=K[:part=hash|range]"),
+    ("shards", "shorthand for the method param shards=K[:part=hash|range|greedy]"),
+    ("topo", "shorthand for the method param topo=preset[:key=value...] (pcie|nvlink|dist)"),
 ];
 
 fn main() {
@@ -76,10 +77,13 @@ fn run(args: &Args) -> Result<()> {
                     spec = spec.with(key, value);
                 }
             }
-            // every method accepts shards=, so the shorthand needs no
-            // method check; validation happens at factory build
+            // every method accepts shards= and topo=, so the shorthands
+            // need no method check; validation happens at factory build
             if let Some(v) = args.get("shards") {
                 spec = spec.with("shards", v);
+            }
+            if let Some(v) = args.get("topo") {
+                spec = spec.with("topo", v);
             }
             println!(
                 "training {} ({spec}) on {dataset} (scale {}, {} epochs, {} worker(s))",
@@ -114,6 +118,20 @@ fn run(args: &Args) -> Result<()> {
                     gns::util::fmt_bytes(last.transfer.d2d_bytes),
                     gns::util::fmt_bytes(last.transfer.bytes_saved_by_cache),
                 );
+                // per-link run totals against the modeled topology
+                let totals = r.transfer_totals();
+                let link_line: Vec<String> = totals
+                    .links()
+                    .iter()
+                    .map(|(link, bytes, modeled)| {
+                        format!(
+                            "{link} {} / {:.3}s",
+                            gns::util::fmt_bytes(*bytes),
+                            modeled.as_secs_f64()
+                        )
+                    })
+                    .collect();
+                println!("links: {}", link_line.join("  ·  "));
             }
             if r.shards.len() > 1 {
                 for s in &r.shards {
@@ -130,9 +148,11 @@ fn run(args: &Args) -> Result<()> {
                     );
                 }
                 println!(
-                    "cross-shard total: {} ({:.1}% of input rows local)",
+                    "cross-shard total: {} ({:.1}% of input rows local, {:.3}s modeled \
+                     interconnect)",
                     gns::util::fmt_bytes(r.cross_shard_bytes()),
                     100.0 * r.local_fraction(),
+                    r.modeled_inter_secs(),
                 );
             }
             Ok(())

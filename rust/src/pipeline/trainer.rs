@@ -4,8 +4,10 @@
 //!   1. **sample**   — worker threads (worker.rs), measured per batch;
 //!   2. **slice**    — gather input-node feature rows from host memory
 //!                     (features::FeatureStore::slice_into, real time);
-//!   3. **copy**     — CPU→GPU: cache misses cross modeled PCIe, cache
-//!                     hits are modeled d2d (device/transfer.rs);
+//!   3. **copy**     — CPU→GPU: cache misses cross the modeled h2d link,
+//!                     cache hits are modeled d2d, and cross-shard remote
+//!                     fetches are charged on the `inter` link — all
+//!                     through one `topology::LinkClock` (docs/TOPOLOGY.md);
 //!   4-5. **compute**— AOT train step on PJRT (real time);
 //!   6. **update**   — in-graph Adam; this stage covers output readback.
 //!
@@ -28,12 +30,13 @@
 
 use super::recycle::BufferPool;
 use super::worker::{run_epoch_sampling, EpochPlan};
-use crate::device::{ComputeModel, DeviceMemory, TransferModel, TransferStats};
+use crate::device::{ComputeModel, DeviceMemory};
 use crate::features::Dataset;
 use crate::runtime::{micro_f1, Runtime, TrainState};
 use crate::sampling::{MiniBatch, Sampler};
 use crate::shard::{ShardReport, ShardRouter, ShardSpec};
 use crate::tiering::{CachePolicy, SamplerPolicy, TieringEngine};
+use crate::topology::{HardwareTopology, LinkClock, LinkKind, TransferStats};
 use crate::util::rng::Pcg;
 use crate::util::timer::{Stage, StageClock};
 use anyhow::{Context, Result};
@@ -100,7 +103,10 @@ pub struct TrainOptions {
     pub seed: u64,
     /// device memory capacity (simulated GPU).
     pub device_capacity: u64,
-    pub transfer: TransferModel,
+    /// modeled hardware topology (link bandwidths/latencies) every
+    /// modeled byte is charged against; the `topo=` spec parameter
+    /// (docs/TOPOLOGY.md). Defaults to the single-box `pcie` preset.
+    pub topology: HardwareTopology,
     /// "as-if-GPU" compute model used for the device-frame breakdown
     /// (DESIGN.md §Substitutions; both frames appear in all reports).
     pub compute_model: ComputeModel,
@@ -122,7 +128,7 @@ impl Default for TrainOptions {
             eval_batches: 8,
             seed: 0,
             device_capacity: 16 * (1 << 30),
-            transfer: TransferModel::default(),
+            topology: HardwareTopology::pcie(),
             compute_model: ComputeModel::default(),
             paranoid_validate: cfg!(debug_assertions),
             shards: ShardSpec::default(),
@@ -196,7 +202,7 @@ impl Trainer {
         // per lane (they are constant across steps).
         let static_bytes = (3 * runtime.meta.num_param_elems() * 4) as u64
             + (x0_len * 4) as u64;
-        let router = opts.shards.router(dataset.graph.num_nodes());
+        let router = opts.shards.router(&dataset.graph);
         let targets_by_shard = dataset.train_by_shard(&router);
         let row_bytes = dataset.features.row_bytes() as u64;
         let mut lanes = Vec::with_capacity(targets_by_shard.len());
@@ -366,6 +372,9 @@ impl Trainer {
         );
         let mut clock = StageClock::new();
         let mut transfer = TransferStats::default();
+        // every modeled byte this epoch is charged through one link-typed
+        // channel (h2d uploads/misses, d2d hits, inter remote fetches)
+        let links = LinkClock::new(opts.topology.clone());
         let epoch_start = Instant::now();
 
         // leader first (it refreshes the shared GNS cache), then every
@@ -373,7 +382,7 @@ impl Trainer {
         // the workers re-snapshot the fresh epoch state
         leader.begin_epoch(epoch);
         for lane in 0..self.lanes.len() {
-            self.sync_cache(lane, epoch, &*leader, &opts.transfer, &mut clock, &mut transfer)?;
+            self.sync_cache(lane, epoch, &*leader, &links, &mut clock, &mut transfer)?;
         }
         for s in &mut workers {
             s.begin_epoch(epoch);
@@ -429,7 +438,9 @@ impl Trainer {
                         break;
                     }
                 }
-                let out = match self.run_train_batch(lane, &mb, opts, &mut clock, &mut transfer) {
+                let out =
+                    match self.run_train_batch(lane, &mb, opts, &links, &mut clock, &mut transfer)
+                    {
                     Ok(out) => out,
                     Err(e) => {
                         self.buffer_pool.put(mb);
@@ -447,13 +458,21 @@ impl Trainer {
                 isolated += mb.stats.isolated_nodes;
                 truncated += mb.stats.truncated_neighbors;
                 // shard ledger: rows owned by this lane's shard are
-                // local, the rest are remote fetches from their owner
-                // (the single-shard path skips the per-row probe)
+                // local, the rest are remote fetches from their owner —
+                // charged as one batched fetch on the `inter` link (zero
+                // modeled seconds on single-box topologies; see
+                // docs/TOPOLOGY.md). The single-shard path skips the
+                // per-row probe.
                 if multi_shard {
                     let (local, remote) =
                         self.router.count(self.lanes[lane].shard, &mb.input_nodes);
                     self.lanes[lane].local_rows += local;
                     self.lanes[lane].remote_rows += remote;
+                    if remote > 0 {
+                        let t =
+                            transfer.charge(&links, LinkKind::Inter, remote * self.row_bytes);
+                        clock.add_modeled(Stage::Copy, t);
+                    }
                 } else {
                     self.lanes[lane].local_rows += mb.input_nodes.len() as u64;
                 }
@@ -489,7 +508,7 @@ impl Trainer {
         })?;
 
         let wall = epoch_start.elapsed();
-        let modeled = transfer.modeled_h2d + transfer.modeled_d2d;
+        let modeled = transfer.modeled_total();
         let report = EpochReport {
             epoch,
             mean_loss: total_loss / total_targets.max(1) as f64,
@@ -516,14 +535,14 @@ impl Trainer {
         lane: usize,
         epoch: usize,
         sampler: &dyn Sampler,
-        model: &TransferModel,
+        links: &LinkClock,
         clock: &mut StageClock,
         transfer: &mut TransferStats,
     ) -> Result<()> {
         let l = &mut self.lanes[lane];
         let t = l
             .tiering
-            .begin_epoch(epoch, sampler, &mut l.device_mem, model, transfer)
+            .begin_epoch(epoch, sampler, &mut l.device_mem, links, transfer)
             .context("upload feature tier to device")?;
         clock.add_modeled(Stage::Copy, t);
         Ok(())
@@ -535,10 +554,11 @@ impl Trainer {
         lane: usize,
         mb: &MiniBatch,
         opts: &TrainOptions,
+        links: &LinkClock,
         clock: &mut StageClock,
         transfer: &mut TransferStats,
     ) -> Result<crate::runtime::StepOutput> {
-        self.assemble_x0(lane, mb, opts, clock, transfer);
+        self.assemble_x0(lane, mb, links, clock, transfer);
         let t0 = Instant::now();
         let out = self
             .runtime
@@ -564,7 +584,7 @@ impl Trainer {
         &mut self,
         lane: usize,
         mb: &MiniBatch,
-        opts: &TrainOptions,
+        links: &LinkClock,
         clock: &mut StageClock,
         transfer: &mut TransferStats,
     ) {
@@ -583,8 +603,7 @@ impl Trainer {
         self.x0_dirty_elems = n * dim;
         clock.add_measured(Stage::Slice, t0.elapsed());
 
-        let (t_copy, _missed) =
-            self.lanes[lane].tiering.serve_planned(&opts.transfer, transfer);
+        let (t_copy, _missed) = self.lanes[lane].tiering.serve_planned(links, transfer);
         // block metadata (idx/w/self/labels) also crosses PCIe
         let meta_bytes: u64 = mb
             .layers
@@ -592,7 +611,7 @@ impl Trainer {
             .map(|b| (b.idx.len() * 4 + b.w.len() * 4 + b.self_idx.len() * 4) as u64)
             .sum::<u64>()
             + (mb.labels.len() * 4 + mb.mask.len() * 4) as u64;
-        let t_meta = transfer.h2d(&opts.transfer, meta_bytes);
+        let t_meta = transfer.charge(links, LinkKind::H2d, meta_bytes);
         clock.add_modeled(Stage::Copy, t_copy + t_meta);
     }
 

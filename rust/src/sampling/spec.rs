@@ -264,6 +264,10 @@ impl fmt::Display for MethodSpec {
 pub enum SpecError {
     UnknownMethod { name: String, known: Vec<String> },
     UnknownParam { method: String, key: String, valid: Vec<String> },
+    /// The same key given twice in one spec's parameter list. Matching
+    /// the CLI's duplicate-flag rule (util::cli), last-wins would let a
+    /// typo'd sweep config silently mask the value actually in effect.
+    DuplicateParam { method: String, key: String },
     BadValue { method: String, key: String, value: String, want: ParamKind },
     Grammar { spec: String, reason: String },
 }
@@ -287,6 +291,11 @@ impl fmt::Display for SpecError {
                     )
                 }
             }
+            SpecError::DuplicateParam { method, key } => write!(
+                f,
+                "duplicate parameter {key:?} for method {method:?}; each key may be \
+                 given once"
+            ),
             SpecError::BadValue { method, key, value, want } => write!(
                 f,
                 "parameter {key}={value:?} of method {method:?} is not a valid {want}"
@@ -433,7 +442,27 @@ pub fn shard_spec(spec: &MethodSpec) -> anyhow::Result<crate::shard::ShardSpec> 
         .map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))
 }
 
-const NS_PARAMS: &[ParamInfo] = &[CACHE_PARAM, SHARD_PARAM];
+/// The `topo=` parameter every method accepts: the modeled hardware
+/// topology (grammar in [`crate::topology::HardwareTopology::parse`]).
+/// The `pcie` default is the single-box compatibility anchor — identical
+/// modeled seconds to omitting the parameter entirely.
+pub const TOPO_PARAM: ParamInfo = ParamInfo {
+    key: "topo",
+    kind: ParamKind::Str,
+    default: "pcie",
+    help: "modeled hardware topology: pcie|nvlink|dist[:h2d-gbps=G][:d2d-gbps=G]\
+           [:inter-gbps=G][:h2d-us=U][:d2d-us=U][:inter-us=U]",
+};
+
+/// Parse + validate a spec's `topo=` parameter. Shared by every builder
+/// (build-time rejection of bad topologies) and by the session layer
+/// that hands the topology to the trainer.
+pub fn topo_spec(spec: &MethodSpec) -> anyhow::Result<crate::topology::HardwareTopology> {
+    crate::topology::HardwareTopology::parse(spec.str_or("topo", TOPO_PARAM.default))
+        .map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))
+}
+
+const NS_PARAMS: &[ParamInfo] = &[CACHE_PARAM, SHARD_PARAM, TOPO_PARAM];
 
 struct NsBuilder;
 
@@ -461,6 +490,7 @@ impl MethodBuilder for NsBuilder {
     fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
         cache_policy_spec(spec)?;
         shard_spec(spec)?;
+        topo_spec(spec)?;
         let graph = ctx.graph.clone();
         let shapes = ctx.shapes.clone();
         let seed = ctx.seed;
@@ -481,6 +511,7 @@ const LADIES_PARAMS: &[ParamInfo] = &[
     },
     CACHE_PARAM,
     SHARD_PARAM,
+    TOPO_PARAM,
 ];
 
 impl MethodBuilder for LadiesBuilder {
@@ -520,6 +551,7 @@ impl MethodBuilder for LadiesBuilder {
     fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
         cache_policy_spec(spec)?;
         shard_spec(spec)?;
+        topo_spec(spec)?;
         let s_layer = spec.usize_or("s-layer", 512);
         anyhow::ensure!(s_layer >= 1, "ladies: s-layer must be >= 1");
         let graph = ctx.graph.clone();
@@ -553,6 +585,7 @@ const LAZYGCN_PARAMS: &[ParamInfo] = &[
     },
     CACHE_PARAM,
     SHARD_PARAM,
+    TOPO_PARAM,
 ];
 
 impl MethodBuilder for LazyGcnBuilder {
@@ -579,6 +612,7 @@ impl MethodBuilder for LazyGcnBuilder {
     fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
         cache_policy_spec(spec)?;
         shard_spec(spec)?;
+        topo_spec(spec)?;
         let recycle_period = spec.usize_or("recycle-period", 2);
         let rho = spec.f64_or("rho", 1.1);
         anyhow::ensure!(recycle_period >= 1, "lazygcn: recycle-period must be >= 1");
@@ -634,6 +668,7 @@ const GNS_PARAMS: &[ParamInfo] = &[
     },
     CACHE_PARAM,
     SHARD_PARAM,
+    TOPO_PARAM,
 ];
 
 impl MethodBuilder for GnsBuilder {
@@ -660,6 +695,7 @@ impl MethodBuilder for GnsBuilder {
     fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
         cache_policy_spec(spec)?;
         shard_spec(spec)?;
+        topo_spec(spec)?;
         let cache_fraction = spec.f64_or("cache-fraction", 0.01);
         let update_period = spec.usize_or("update-period", 1);
         anyhow::ensure!(
@@ -812,6 +848,10 @@ impl MethodRegistry {
         };
         let builder = self.get(&spec.name)?;
         if let Some(tail) = tail {
+            // duplicate keys within one parameter list are a hard error
+            // (same rule as duplicate CLI flags); explicit params may
+            // still override an alias preset — that is one key per list
+            let mut seen: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
             for pair in tail.split(',') {
                 let pair = pair.trim();
                 if pair.is_empty() {
@@ -825,6 +865,12 @@ impl MethodRegistry {
                     reason: format!("parameter {pair:?} is not key=value"),
                 })?;
                 let (key, value) = (key.trim(), value.trim());
+                if !seen.insert(key) {
+                    return Err(SpecError::DuplicateParam {
+                        method: builder.name().to_string(),
+                        key: key.to_string(),
+                    });
+                }
                 let info = param_info(builder, key)?;
                 let parsed = ParamValue::parse_as(info.kind, value).ok_or_else(|| {
                     SpecError::BadValue {

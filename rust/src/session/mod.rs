@@ -27,19 +27,20 @@
 //! [`RunResult::error`] rather than propagated, so sweeps report N/A
 //! cells instead of aborting.
 
-use crate::device::{ComputeModel, TransferModel};
+use crate::device::ComputeModel;
 use crate::features::{build_dataset, synthesize_features, Dataset, FeatureParams};
 use crate::graph::generate::{LabeledGraph, DATASET_NAMES};
 use crate::graph::{CsrGraph, NodeId};
 use crate::pipeline::{EpochReport, TrainOptions, Trainer};
 use crate::runtime::{artifacts_root, ArtifactMeta, Runtime};
 use crate::sampling::spec::{
-    cache_policy_spec, shard_spec, BuildContext, MethodRegistry, MethodSpec, SamplerFactory,
-    SpecError,
+    cache_policy_spec, shard_spec, topo_spec, BuildContext, MethodRegistry, MethodSpec,
+    SamplerFactory, SpecError,
 };
 use crate::sampling::BlockShapes;
 use crate::shard::{ShardReport, ShardSpec};
 use crate::tiering::{build_policies, TierBuild, PRESAMPLE_WORKER, WARMUP_BATCHES};
+use crate::topology::{HardwareTopology, TransferStats};
 use std::fmt;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -132,6 +133,23 @@ impl RunResult {
         self.shards.iter().map(|s| s.cross_shard_bytes).sum()
     }
 
+    /// Per-link transfer ledger summed over every epoch: bytes, modeled
+    /// seconds, and transfer counts for the h2d / d2d / inter links
+    /// (docs/TOPOLOGY.md). `TransferStats::links()` iterates them.
+    pub fn transfer_totals(&self) -> TransferStats {
+        let mut t = TransferStats::default();
+        for r in &self.reports {
+            t.merge(&r.transfer);
+        }
+        t
+    }
+
+    /// Modeled interconnect seconds charged for cross-shard remote
+    /// fetches (0.0 for unsharded runs and single-box topologies).
+    pub fn modeled_inter_secs(&self) -> f64 {
+        self.transfer_totals().modeled_inter.as_secs_f64()
+    }
+
     /// Fraction of all served input rows that were shard-local (NaN when
     /// nothing was served; 1.0 for unsharded runs).
     pub fn local_fraction(&self) -> f64 {
@@ -195,6 +213,7 @@ pub struct SessionBuilder {
     max_train_nodes: Option<usize>,
     max_val_nodes: Option<usize>,
     shards: Option<ShardSpec>,
+    topology: Option<HardwareTopology>,
 }
 
 impl SessionBuilder {
@@ -220,6 +239,7 @@ impl SessionBuilder {
             max_train_nodes: None,
             max_val_nodes: None,
             shards: None,
+            topology: None,
         }
     }
 
@@ -338,6 +358,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Modeled hardware-topology override (link bandwidths/latencies for
+    /// every modeled byte; docs/TOPOLOGY.md). Takes precedence over the
+    /// method spec's `topo=` parameter; the default follows the spec
+    /// (itself defaulting to the single-box `pcie` preset, the exact
+    /// pre-topology numbers).
+    pub fn topology(mut self, topo: HardwareTopology) -> Self {
+        self.topology = Some(topo);
+        self
+    }
+
     /// Resolve the spec, build the dataset, load + validate the artifact,
     /// and stand up the trainer and sampler factories.
     pub fn build(self) -> Result<Session, BuildError> {
@@ -356,6 +386,10 @@ impl SessionBuilder {
         let shards = match &self.shards {
             Some(s) => s.clone(),
             None => shard_spec(&spec).map_err(BuildError::Runtime)?,
+        };
+        let topology = match &self.topology {
+            Some(t) => t.clone(),
+            None => topo_spec(&spec).map_err(BuildError::Runtime)?,
         };
         // validate the dataset name up front (cheap) so a typo is reported
         // as such, not as a missing artifact for a nonsense name
@@ -445,7 +479,7 @@ impl SessionBuilder {
             eval_batches: self.eval_batches,
             seed: self.seed,
             device_capacity: self.device_capacity,
-            transfer: TransferModel::default(),
+            topology,
             compute_model: ComputeModel::default(),
             paranoid_validate: self.paranoid_validate,
             shards,
@@ -608,6 +642,12 @@ impl Session {
         self.trainer.num_shards()
     }
 
+    /// The modeled hardware topology this session charges transfers
+    /// against (the `topo=` parameter; docs/TOPOLOGY.md).
+    pub fn topology(&self) -> &HardwareTopology {
+        &self.topts.topology
+    }
+
     /// Per-shard traffic roll-up accumulated so far (see
     /// [`ShardReport`]).
     pub fn shard_reports(&self) -> Vec<ShardReport> {
@@ -707,6 +747,15 @@ mod tests {
         // the registry's factory-time validation rejects it as a runtime
         // build error naming the grammar
         assert!(err.to_string().contains("cache policy"), "{err}");
+    }
+
+    #[test]
+    fn bad_topo_spec_fails_session_build() {
+        // `topo=` is validated before any artifact/dataset work too
+        for bad in ["ns:topo=warp", "ns:topo=pcie:h2d-gbps=0", "ns:topo=pcie:inter-us=3"] {
+            let err = Session::builder("yelp-s", bad).scale(0.03).build().unwrap_err();
+            assert!(err.to_string().contains("topo"), "{bad}: {err}");
+        }
     }
 
     #[test]

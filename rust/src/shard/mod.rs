@@ -10,12 +10,13 @@
 //! model, simulated one-GPU-per-shard:
 //!
 //! - [`Partitioner`] (partition.rs): node→shard assignment — `hash`
-//!   (balance extreme) and `range` (contiguity extreme) behind a trait so
-//!   topology-aware schemes can plug in.
+//!   (balance extreme), `range` (contiguity extreme), and `greedy`
+//!   (LDG-style locality-aware streaming, capacity-bounded) behind a
+//!   trait so further schemes (METIS) can plug in.
 //! - [`ShardRouter`] (router.rs): the dense ownership map every lane
 //!   consults; classifies sampled input rows as shard-local vs remote and
 //!   splits the train targets per shard.
-//! - [`ShardSpec`]: the `shards=K[:part=hash|range]` grammar every
+//! - [`ShardSpec`]: the `shards=K[:part=hash|range|greedy]` grammar every
 //!   method spec accepts (plumbed like `cache=`; see docs/API.md).
 //! - [`ShardReport`]: the per-shard traffic roll-up (local rows, remote
 //!   fetches, cross-shard bytes, cache telemetry) surfaced in
@@ -30,7 +31,10 @@
 pub mod partition;
 pub mod router;
 
-pub use partition::{build_partitioner, HashPartitioner, Partitioner, RangePartitioner};
+pub use partition::{
+    build_partitioner, GreedyPartitioner, HashPartitioner, Partitioner, RangePartitioner,
+    GREEDY_SLACK_PCT,
+};
 pub use router::{ShardReport, ShardRouter};
 
 use std::fmt;
@@ -44,6 +48,8 @@ pub const MAX_SHARDS: usize = 256;
 pub enum PartKind {
     Hash,
     Range,
+    /// LDG-style locality-aware streaming (partition.rs).
+    Greedy,
 }
 
 impl PartKind {
@@ -51,6 +57,7 @@ impl PartKind {
         match self {
             PartKind::Hash => "hash",
             PartKind::Range => "range",
+            PartKind::Greedy => "greedy",
         }
     }
 
@@ -58,7 +65,10 @@ impl PartKind {
         match text {
             "hash" => Ok(PartKind::Hash),
             "range" => Ok(PartKind::Range),
-            other => anyhow::bail!("shard partitioner must be hash|range, got {other:?}"),
+            "greedy" => Ok(PartKind::Greedy),
+            other => {
+                anyhow::bail!("shard partitioner must be hash|range|greedy, got {other:?}")
+            }
         }
     }
 }
@@ -69,8 +79,9 @@ impl fmt::Display for PartKind {
     }
 }
 
-/// The `shards=K[:part=hash|range]` grammar shared by every method spec
-/// (docs/API.md). `K=1` (the default) is the unsharded pipeline.
+/// The `shards=K[:part=hash|range|greedy]` grammar shared by every
+/// method spec (docs/API.md). `K=1` (the default) is the unsharded
+/// pipeline.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardSpec {
     pub shards: usize,
@@ -114,13 +125,15 @@ impl ShardSpec {
         self.shards == 1
     }
 
-    /// Build this spec's router over `num_nodes` nodes.
-    pub fn router(&self, num_nodes: usize) -> ShardRouter {
+    /// Build this spec's router over `graph`. Structure-free
+    /// partitioners only read the node count; `greedy` streams the
+    /// adjacency (which is why the router needs the graph, not a size).
+    pub fn router(&self, graph: &crate::graph::CsrGraph) -> ShardRouter {
         if self.is_single() {
             return ShardRouter::single();
         }
-        let p = build_partitioner(self, num_nodes);
-        ShardRouter::from_partitioner(p.as_ref(), num_nodes)
+        let p = build_partitioner(self, graph);
+        ShardRouter::from_partitioner(p.as_ref(), graph.num_nodes())
     }
 }
 
@@ -145,6 +158,10 @@ mod tests {
         assert_eq!(s, ShardSpec { shards: 4, part: PartKind::Range });
         assert_eq!(s.to_string(), "4:part=range");
         assert_eq!(ShardSpec::parse(&s.to_string()).unwrap(), s);
+        let s = ShardSpec::parse("4:part=greedy").unwrap();
+        assert_eq!(s, ShardSpec { shards: 4, part: PartKind::Greedy });
+        assert_eq!(s.to_string(), "4:part=greedy");
+        assert_eq!(ShardSpec::parse(&s.to_string()).unwrap(), s);
         // hash is the default and renders bare
         let s = ShardSpec::parse("8:part=hash").unwrap();
         assert_eq!(s.to_string(), "8");
@@ -163,11 +180,18 @@ mod tests {
 
     #[test]
     fn spec_builds_matching_router() {
-        let r = ShardSpec::parse("1").unwrap().router(100);
+        let mut b = crate::graph::GraphBuilder::new(100);
+        for v in 0..100u32 {
+            b = b.add_undirected(v, (v + 1) % 100);
+        }
+        let g = b.build();
+        let r = ShardSpec::parse("1").unwrap().router(&g);
         assert_eq!(r.num_shards(), 1);
         assert!(r.assignment().is_empty());
-        let r = ShardSpec::parse("4:part=range").unwrap().router(100);
-        assert_eq!(r.num_shards(), 4);
-        assert_eq!(r.assignment().len(), 100);
+        for part in ["hash", "range", "greedy"] {
+            let r = ShardSpec::parse(&format!("4:part={part}")).unwrap().router(&g);
+            assert_eq!(r.num_shards(), 4, "{part}");
+            assert_eq!(r.assignment().len(), 100, "{part}");
+        }
     }
 }

@@ -33,9 +33,10 @@ pub use policy::{
     PRESAMPLE_WORKER, WARMUP_BATCHES,
 };
 
-use crate::device::{DeviceFeatureCache, DeviceMemory, TransferModel, TransferStats};
+use crate::device::{DeviceFeatureCache, DeviceMemory};
 use crate::graph::NodeId;
 use crate::sampling::Sampler;
+use crate::topology::{LinkClock, TransferStats};
 use anyhow::Result;
 use std::time::Duration;
 
@@ -83,7 +84,7 @@ impl TieringEngine {
         epoch: usize,
         sampler: &dyn Sampler,
         mem: &mut DeviceMemory,
-        model: &TransferModel,
+        clock: &LinkClock,
         stats: &mut TransferStats,
     ) -> Result<Duration> {
         let Some(tier) = self.policy.epoch_tier(epoch, sampler) else {
@@ -92,7 +93,7 @@ impl TieringEngine {
         // upload() itself no-ops on an unchanged generation — single
         // source of truth for the refresh condition
         self.cache
-            .upload(&tier.nodes, tier.generation, mem, model, stats)
+            .upload(&tier.nodes, tier.generation, mem, clock, stats)
     }
 
     /// Partition one batch's input nodes into hit/miss runs — the single
@@ -105,21 +106,21 @@ impl TieringEngine {
     /// time, missed node count).
     pub fn serve_planned(
         &mut self,
-        model: &TransferModel,
+        clock: &LinkClock,
         stats: &mut TransferStats,
     ) -> (Duration, usize) {
-        self.cache.serve_plan(&self.plan, model, stats)
+        self.cache.serve_plan(&self.plan, clock, stats)
     }
 
     /// `plan_batch` + `serve_planned` in one call.
     pub fn serve(
         &mut self,
         input_nodes: &[NodeId],
-        model: &TransferModel,
+        clock: &LinkClock,
         stats: &mut TransferStats,
     ) -> (Duration, usize) {
         self.plan_batch(input_nodes);
-        self.serve_planned(model, stats)
+        self.serve_planned(clock, stats)
     }
 
     /// Cumulative (hits, misses) across all served batches.
@@ -173,19 +174,19 @@ mod tests {
         let mut engine =
             TieringEngine::new(Box::new(SamplerPolicy), 32, 100);
         let mut mem = DeviceMemory::new(1 << 20);
-        let model = TransferModel::default();
+        let clock = LinkClock::pcie();
         let mut stats = TransferStats::default();
         let mut s = FakeCache { generation: 1, nodes: std::sync::Arc::new(vec![1, 2, 3]) };
-        engine.begin_epoch(0, &s, &mut mem, &model, &mut stats).unwrap();
+        engine.begin_epoch(0, &s, &mut mem, &clock, &mut stats).unwrap();
         assert_eq!(engine.cache().generation(), 1);
         assert_eq!(stats.h2d_bytes, 300);
         // same generation: no re-upload
-        engine.begin_epoch(1, &s, &mut mem, &model, &mut stats).unwrap();
+        engine.begin_epoch(1, &s, &mut mem, &clock, &mut stats).unwrap();
         assert_eq!(stats.h2d_bytes, 300);
         // new generation overlapping on {2,3}: delta = 1 row
         s.generation = 2;
         s.nodes = std::sync::Arc::new(vec![2, 3, 4]);
-        engine.begin_epoch(2, &s, &mut mem, &model, &mut stats).unwrap();
+        engine.begin_epoch(2, &s, &mut mem, &clock, &mut stats).unwrap();
         assert_eq!(engine.cache().generation(), 2);
         assert_eq!(stats.h2d_bytes, 400);
         assert_eq!(stats.bytes_saved_by_delta, 200);
@@ -195,13 +196,13 @@ mod tests {
     fn none_policy_serves_everything_from_host() {
         let mut engine = TieringEngine::new(Box::new(NonePolicy), 16, 100);
         let mut mem = DeviceMemory::new(1 << 20);
-        let model = TransferModel::default();
+        let clock = LinkClock::pcie();
         let mut stats = TransferStats::default();
         let s = FakeCache { generation: 5, nodes: std::sync::Arc::new(vec![1]) };
         // the policy ignores even a cache-publishing sampler
-        engine.begin_epoch(0, &s, &mut mem, &model, &mut stats).unwrap();
+        engine.begin_epoch(0, &s, &mut mem, &clock, &mut stats).unwrap();
         assert_eq!(mem.used(), 0);
-        let (_t, missed) = engine.serve(&[1, 2, 3], &model, &mut stats);
+        let (_t, missed) = engine.serve(&[1, 2, 3], &clock, &mut stats);
         assert_eq!(missed, 3);
         assert_eq!(stats.bytes_saved_by_cache, 0);
         assert_eq!(engine.hits_misses(), (0, 3));
@@ -212,10 +213,10 @@ mod tests {
     fn replace_policy_releases_resident_rows() {
         let mut engine = TieringEngine::new(Box::new(SamplerPolicy), 16, 100);
         let mut mem = DeviceMemory::new(1 << 20);
-        let model = TransferModel::default();
+        let clock = LinkClock::pcie();
         let mut stats = TransferStats::default();
         let s = FakeCache { generation: 1, nodes: std::sync::Arc::new(vec![0, 1]) };
-        engine.begin_epoch(0, &s, &mut mem, &model, &mut stats).unwrap();
+        engine.begin_epoch(0, &s, &mut mem, &clock, &mut stats).unwrap();
         assert_eq!(mem.used(), 200);
         engine.replace_policy(Box::new(NonePolicy), &mut mem);
         assert_eq!(mem.used(), 0);

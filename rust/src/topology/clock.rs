@@ -1,0 +1,228 @@
+//! The link-typed accounting channel: [`LinkClock`] converts (link,
+//! bytes) into modeled seconds against a [`HardwareTopology`], and
+//! [`TransferStats`] is the per-link byte/second/transfer ledger every
+//! modeled byte in the system flows through.
+//!
+//! This replaces the old `device::transfer::{TransferModel, TransferStats}`
+//! pair: the seconds math is identical for the `pcie` preset (bit-identity
+//! enforced by rust/tests/topology.rs), but every charge now names its
+//! link, so tier uploads, gather misses, d2d cache hits, and cross-shard
+//! remote fetches all land in one typed ledger instead of ad-hoc fields.
+
+use super::{HardwareTopology, LinkKind};
+use std::time::Duration;
+
+/// Converts (link, bytes) to modeled time for one topology — the single
+/// seconds-math channel. Stateless beyond the topology it wraps; pair it
+/// with a [`TransferStats`] via [`TransferStats::charge`].
+#[derive(Debug, Clone)]
+pub struct LinkClock {
+    topo: HardwareTopology,
+}
+
+impl LinkClock {
+    pub fn new(topo: HardwareTopology) -> LinkClock {
+        LinkClock { topo }
+    }
+
+    /// The default single-box clock (the compatibility anchor preset).
+    pub fn pcie() -> LinkClock {
+        LinkClock::new(HardwareTopology::pcie())
+    }
+
+    pub fn topology(&self) -> &HardwareTopology {
+        &self.topo
+    }
+
+    /// Modeled time of one transfer of `bytes` over `link`. Links the
+    /// topology does not have (e.g. `inter` on `pcie`) cost zero seconds.
+    pub fn time(&self, link: LinkKind, bytes: u64) -> Duration {
+        self.topo.time(link, bytes)
+    }
+}
+
+impl From<HardwareTopology> for LinkClock {
+    fn from(topo: HardwareTopology) -> LinkClock {
+        LinkClock::new(topo)
+    }
+}
+
+/// Per-link byte/time accounting for one training run (or epoch).
+#[derive(Debug, Clone, Default)]
+pub struct TransferStats {
+    pub h2d_bytes: u64,
+    pub h2d_transfers: u64,
+    pub d2d_bytes: u64,
+    /// cross-shard remote-fetch traffic over the `inter` link. Counted
+    /// even when the topology has no interconnect (bytes still move in a
+    /// real deployment); `modeled_inter` stays zero in that case.
+    pub inter_bytes: u64,
+    /// number of `inter`-link fetches charged (one per batch with remote
+    /// rows — each pays the link's per-transfer latency).
+    pub inter_transfers: u64,
+    pub modeled_h2d: Duration,
+    pub modeled_d2d: Duration,
+    pub modeled_inter: Duration,
+    /// bytes that would have crossed PCIe without the GNS cache (saved by
+    /// cache hits) — the headline "reduced data copy" quantity.
+    pub bytes_saved_by_cache: u64,
+    /// bytes that skipped PCIe on cache *refresh* because the row was
+    /// already device-resident in the previous generation (delta upload;
+    /// see tiering::TieringEngine / DeviceFeatureCache::upload).
+    pub bytes_saved_by_delta: u64,
+}
+
+impl TransferStats {
+    /// Record one transfer of `bytes` over `link`, converting to modeled
+    /// seconds through `clock`. Returns the modeled time. This is the one
+    /// channel every modeled byte flows through.
+    pub fn charge(&mut self, clock: &LinkClock, link: LinkKind, bytes: u64) -> Duration {
+        let t = clock.time(link, bytes);
+        match link {
+            LinkKind::H2d => {
+                self.h2d_bytes += bytes;
+                self.h2d_transfers += 1;
+                self.modeled_h2d += t;
+            }
+            LinkKind::D2d => {
+                self.d2d_bytes += bytes;
+                self.modeled_d2d += t;
+            }
+            LinkKind::Inter => {
+                self.inter_bytes += bytes;
+                self.inter_transfers += 1;
+                self.modeled_inter += t;
+            }
+        }
+        t
+    }
+
+    /// Bytes accumulated on one link.
+    pub fn bytes(&self, link: LinkKind) -> u64 {
+        match link {
+            LinkKind::H2d => self.h2d_bytes,
+            LinkKind::D2d => self.d2d_bytes,
+            LinkKind::Inter => self.inter_bytes,
+        }
+    }
+
+    /// Modeled seconds accumulated on one link.
+    pub fn modeled(&self, link: LinkKind) -> Duration {
+        match link {
+            LinkKind::H2d => self.modeled_h2d,
+            LinkKind::D2d => self.modeled_d2d,
+            LinkKind::Inter => self.modeled_inter,
+        }
+    }
+
+    /// Total modeled transfer time across every link.
+    pub fn modeled_total(&self) -> Duration {
+        self.modeled_h2d + self.modeled_d2d + self.modeled_inter
+    }
+
+    /// Per-link roll-up `(link, bytes, modeled)` in `LinkKind::ALL` order
+    /// — the report/bench surface.
+    pub fn links(&self) -> [(LinkKind, u64, Duration); 3] {
+        [
+            (LinkKind::H2d, self.h2d_bytes, self.modeled_h2d),
+            (LinkKind::D2d, self.d2d_bytes, self.modeled_d2d),
+            (LinkKind::Inter, self.inter_bytes, self.modeled_inter),
+        ]
+    }
+
+    pub fn record_cache_savings(&mut self, bytes: u64) {
+        self.bytes_saved_by_cache += bytes;
+    }
+
+    pub fn record_delta_savings(&mut self, bytes: u64) {
+        self.bytes_saved_by_delta += bytes;
+    }
+
+    pub fn merge(&mut self, other: &TransferStats) {
+        self.h2d_bytes += other.h2d_bytes;
+        self.h2d_transfers += other.h2d_transfers;
+        self.d2d_bytes += other.d2d_bytes;
+        self.inter_bytes += other.inter_bytes;
+        self.inter_transfers += other.inter_transfers;
+        self.modeled_h2d += other.modeled_h2d;
+        self.modeled_d2d += other.modeled_d2d;
+        self.modeled_inter += other.modeled_inter;
+        self.bytes_saved_by_cache += other.bytes_saved_by_cache;
+        self.bytes_saved_by_delta += other.bytes_saved_by_delta;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_accumulate_per_link() {
+        let clock = LinkClock::pcie();
+        let mut s = TransferStats::default();
+        s.charge(&clock, LinkKind::H2d, 1000);
+        s.charge(&clock, LinkKind::H2d, 2000);
+        s.charge(&clock, LinkKind::D2d, 500);
+        s.record_cache_savings(500);
+        assert_eq!(s.h2d_bytes, 3000);
+        assert_eq!(s.h2d_transfers, 2);
+        assert_eq!(s.d2d_bytes, 500);
+        assert_eq!(s.bytes_saved_by_cache, 500);
+        assert!(s.modeled_h2d > Duration::ZERO);
+        assert_eq!(s.bytes(LinkKind::H2d), 3000);
+        assert_eq!(s.modeled(LinkKind::H2d), s.modeled_h2d);
+    }
+
+    #[test]
+    fn d2d_much_faster_than_h2d() {
+        let clock = LinkClock::pcie();
+        let bytes = 100 << 20;
+        assert!(clock.time(LinkKind::H2d, bytes) > 10 * clock.time(LinkKind::D2d, bytes));
+    }
+
+    #[test]
+    fn inter_on_single_box_counts_bytes_but_zero_seconds() {
+        let clock = LinkClock::pcie();
+        let mut s = TransferStats::default();
+        let t = s.charge(&clock, LinkKind::Inter, 1 << 20);
+        assert_eq!(t, Duration::ZERO);
+        assert_eq!(s.inter_bytes, 1 << 20);
+        assert_eq!(s.inter_transfers, 1);
+        assert_eq!(s.modeled_inter, Duration::ZERO);
+        assert_eq!(s.modeled_total(), s.modeled_h2d + s.modeled_d2d);
+    }
+
+    #[test]
+    fn inter_on_dist_charges_bandwidth_plus_latency() {
+        let clock = LinkClock::new(crate::topology::HardwareTopology::dist());
+        let inter = clock.topology().inter.unwrap();
+        let mut s = TransferStats::default();
+        let bytes = 10u64 << 20;
+        let t = s.charge(&clock, LinkKind::Inter, bytes);
+        let want = inter.latency
+            + Duration::from_secs_f64(bytes as f64 / inter.bytes_per_sec);
+        assert_eq!(t, want);
+        assert_eq!(s.modeled_inter, want);
+        assert_eq!(s.inter_transfers, 1);
+    }
+
+    #[test]
+    fn merge_sums_every_field() {
+        let clock = LinkClock::new(crate::topology::HardwareTopology::dist());
+        let mut a = TransferStats::default();
+        let mut b = TransferStats::default();
+        a.charge(&clock, LinkKind::H2d, 10);
+        b.charge(&clock, LinkKind::H2d, 20);
+        b.charge(&clock, LinkKind::D2d, 5);
+        b.charge(&clock, LinkKind::Inter, 7);
+        b.record_delta_savings(7);
+        a.merge(&b);
+        assert_eq!(a.h2d_bytes, 30);
+        assert_eq!(a.d2d_bytes, 5);
+        assert_eq!(a.inter_bytes, 7);
+        assert_eq!(a.inter_transfers, 1);
+        assert_eq!(a.h2d_transfers, 2);
+        assert_eq!(a.bytes_saved_by_delta, 7);
+        assert!(a.modeled_inter > Duration::ZERO);
+    }
+}

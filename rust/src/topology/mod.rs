@@ -1,0 +1,361 @@
+//! Modeled hardware topology: the single home of every modeled second.
+//!
+//! The paper's speedup story is about where bytes move inside a mixed
+//! CPU-GPU box, and its successors (DistDGL, PaGraph — PAPERS.md) extend
+//! the same question across NVLink bridges and InfiniBand fabrics. Before
+//! this module, modeled transfer time was smeared across four homes — a
+//! hardcoded PCIe hop in `device/transfer.rs`, the device cache's serve
+//! math, the tiering engine's delta uploads, and a cross-shard byte count
+//! that was never charged seconds at all. Now one description rules them:
+//!
+//! - [`HardwareTopology`] — the typed links of the modeled box:
+//!   - `h2d`: host↔device (PCIe) — per-batch gather misses, tier uploads,
+//!     block metadata;
+//!   - `d2d`: on-device (HBM / peer) — cache hits, delta-upload reuse;
+//!   - `inter`: inter-device / inter-node (NVLink peer, IB NIC) —
+//!     cross-shard remote feature fetches. Optional: the single-box
+//!     `pcie` preset has no interconnect and charges those fetches zero
+//!     seconds (bytes are still counted), which is exactly the
+//!     pre-topology behavior.
+//! - [`LinkClock`] (clock.rs) — converts (link, bytes) to modeled time;
+//!   replaces the old ad-hoc `TransferModel` seconds math.
+//! - [`TransferStats`] (clock.rs) — the per-link byte/second/transfer
+//!   ledger every modeled byte flows through via
+//!   [`TransferStats::charge`].
+//!
+//! **Compatibility anchor**: the default `pcie` preset carries the exact
+//! pre-refactor numbers (12 GB/s + 10 µs PCIe, 200 GB/s d2d, no
+//! interconnect), so `topo=pcie` — and omitting `topo=` entirely —
+//! reproduces the old modeled seconds bit-identically
+//! (rust/tests/topology.rs). Presets, the `topo=` spec grammar, and the
+//! accounting invariants are documented in docs/TOPOLOGY.md.
+
+pub mod clock;
+
+pub use clock::{LinkClock, TransferStats};
+
+use std::fmt;
+use std::time::Duration;
+
+/// The three link types every modeled byte is charged against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    /// Host↔device (PCIe): gather misses, tier uploads, block metadata.
+    H2d,
+    /// On-device (HBM/peer copies): cache hits, delta-upload reuse.
+    D2d,
+    /// Inter-device / inter-node (NVLink peer, IB): cross-shard fetches.
+    Inter,
+}
+
+impl LinkKind {
+    pub const ALL: [LinkKind; 3] = [LinkKind::H2d, LinkKind::D2d, LinkKind::Inter];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkKind::H2d => "h2d",
+            LinkKind::D2d => "d2d",
+            LinkKind::Inter => "inter",
+        }
+    }
+}
+
+impl fmt::Display for LinkKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One typed link: sustained bandwidth plus a per-transfer launch latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    pub bytes_per_sec: f64,
+    pub latency: Duration,
+}
+
+impl Link {
+    pub fn new(bytes_per_sec: f64, latency: Duration) -> Link {
+        assert!(
+            bytes_per_sec.is_finite() && bytes_per_sec > 0.0,
+            "link bandwidth must be positive"
+        );
+        Link { bytes_per_sec, latency }
+    }
+
+    /// Modeled time for one transfer of `bytes` over this link.
+    pub fn time(&self, bytes: u64) -> Duration {
+        self.latency + Duration::from_secs_f64(bytes as f64 / self.bytes_per_sec)
+    }
+}
+
+/// Typed-link description of the modeled box. Built from a preset name
+/// (plus optional overrides) via [`HardwareTopology::parse`]; the spec
+/// parameter `topo=` plumbs it through every method exactly like
+/// `cache=`/`shards=` (docs/API.md).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareTopology {
+    /// Preset this topology was derived from (`pcie`, `nvlink`, `dist`).
+    pub name: &'static str,
+    pub h2d: Link,
+    pub d2d: Link,
+    /// Interconnect between shard devices. `None` = single-box topology:
+    /// cross-shard fetches are counted in bytes but charged zero modeled
+    /// seconds (the pre-topology behavior the `pcie` anchor preserves).
+    pub inter: Option<Link>,
+}
+
+impl Default for HardwareTopology {
+    fn default() -> Self {
+        HardwareTopology::pcie()
+    }
+}
+
+impl HardwareTopology {
+    /// Preset names accepted by [`HardwareTopology::parse`].
+    pub const PRESETS: [&'static str; 3] = ["pcie", "nvlink", "dist"];
+
+    /// The paper's T4 testbed — and the compatibility anchor: these are
+    /// the exact numbers the old `TransferModel` hardcoded (PCIe 3.0 x16
+    /// effective ≈ 12 GB/s + ~10 µs launch, HBM-ish 200 GB/s d2d), with
+    /// no modeled interconnect.
+    pub fn pcie() -> HardwareTopology {
+        HardwareTopology {
+            name: "pcie",
+            h2d: Link::new(12.0e9, Duration::from_micros(10)),
+            d2d: Link::new(200.0e9, Duration::ZERO),
+            inter: None,
+        }
+    }
+
+    /// Multi-GPU single box: shard devices exchange remote rows over an
+    /// NVLink-class peer link (~150 GB/s, ~2 µs).
+    pub fn nvlink() -> HardwareTopology {
+        HardwareTopology {
+            name: "nvlink",
+            inter: Some(Link::new(150.0e9, Duration::from_micros(2))),
+            ..HardwareTopology::pcie()
+        }
+    }
+
+    /// Multi-node cluster: shard devices exchange remote rows over a
+    /// 100 Gb/s InfiniBand-class NIC (~12.5 GB/s, ~5 µs per fetch RPC).
+    pub fn dist() -> HardwareTopology {
+        HardwareTopology {
+            name: "dist",
+            inter: Some(Link::new(12.5e9, Duration::from_micros(5))),
+            ..HardwareTopology::pcie()
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> anyhow::Result<HardwareTopology> {
+        match name {
+            "pcie" => Ok(HardwareTopology::pcie()),
+            "nvlink" => Ok(HardwareTopology::nvlink()),
+            "dist" => Ok(HardwareTopology::dist()),
+            other => anyhow::bail!(
+                "topology preset must be {}, got {other:?}",
+                Self::PRESETS.join("|")
+            ),
+        }
+    }
+
+    /// The link a kind maps to (`None` for `inter` on single-box presets).
+    pub fn link(&self, kind: LinkKind) -> Option<&Link> {
+        match kind {
+            LinkKind::H2d => Some(&self.h2d),
+            LinkKind::D2d => Some(&self.d2d),
+            LinkKind::Inter => self.inter.as_ref(),
+        }
+    }
+
+    /// Modeled time of one transfer of `bytes` over `kind`. Unlinked
+    /// kinds (no interconnect) cost zero seconds.
+    pub fn time(&self, kind: LinkKind, bytes: u64) -> Duration {
+        self.link(kind).map_or(Duration::ZERO, |l| l.time(bytes))
+    }
+
+    /// Parse the `topo=` spec grammar (docs/API.md):
+    ///
+    /// ```text
+    /// topo := preset [":" key "=" value]*
+    /// preset := pcie | nvlink | dist
+    /// key := h2d-gbps | d2d-gbps | inter-gbps | h2d-us | d2d-us | inter-us
+    /// ```
+    ///
+    /// Bandwidths are GB/s, latencies µs. Setting `inter-gbps` on a
+    /// preset without an interconnect enables one; `inter-us` alone does
+    /// not (there is no bandwidth to attach it to).
+    pub fn parse(text: &str) -> anyhow::Result<HardwareTopology> {
+        let mut parts = text.trim().split(':');
+        let head = parts.next().unwrap_or("").trim();
+        let mut topo = HardwareTopology::preset(head)?;
+        let (mut inter_gbps, mut inter_us) = (None, None);
+        // duplicate keys are a hard error, same rule as duplicate spec
+        // params / CLI flags: last-wins would silently mask the value in
+        // effect
+        let mut seen: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
+        for opt in parts {
+            let opt = opt.trim();
+            let (key, value) = opt
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("topo option {opt:?} is not key=value"))?;
+            anyhow::ensure!(
+                seen.insert(key.trim()),
+                "duplicate topo option {:?}; each key may be given once",
+                key.trim()
+            );
+            let x: f64 = value.trim().parse().map_err(|_| {
+                anyhow::anyhow!("topo option {key}={value:?} is not a number")
+            })?;
+            anyhow::ensure!(
+                x.is_finite() && x >= 0.0,
+                "topo option {key}={value:?} must be finite and >= 0"
+            );
+            let key = key.trim();
+            if key.ends_with("-gbps") {
+                anyhow::ensure!(x > 0.0, "topo bandwidth {key} must be > 0");
+            }
+            match key {
+                "h2d-gbps" => topo.h2d.bytes_per_sec = x * 1e9,
+                "d2d-gbps" => topo.d2d.bytes_per_sec = x * 1e9,
+                "inter-gbps" => inter_gbps = Some(x),
+                "h2d-us" => topo.h2d.latency = Duration::from_secs_f64(x * 1e-6),
+                "d2d-us" => topo.d2d.latency = Duration::from_secs_f64(x * 1e-6),
+                "inter-us" => inter_us = Some(x),
+                other => anyhow::bail!(
+                    "unknown topo option {other:?} (valid: h2d-gbps d2d-gbps \
+                     inter-gbps h2d-us d2d-us inter-us)"
+                ),
+            }
+        }
+        if inter_gbps.is_some() || inter_us.is_some() {
+            topo.inter = match (topo.inter, inter_gbps, inter_us) {
+                (Some(mut l), g, u) => {
+                    if let Some(g) = g {
+                        l.bytes_per_sec = g * 1e9;
+                    }
+                    if let Some(u) = u {
+                        l.latency = Duration::from_secs_f64(u * 1e-6);
+                    }
+                    Some(l)
+                }
+                (None, Some(g), u) => Some(Link::new(
+                    g * 1e9,
+                    Duration::from_secs_f64(u.unwrap_or(0.0) * 1e-6),
+                )),
+                (None, None, _) => anyhow::bail!(
+                    "topo preset {head:?} has no interconnect link; set inter-gbps \
+                     to enable one"
+                ),
+            };
+        }
+        Ok(topo)
+    }
+}
+
+impl fmt::Display for HardwareTopology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let gbps = |l: &Link| l.bytes_per_sec / 1e9;
+        let us = |l: &Link| l.latency.as_secs_f64() * 1e6;
+        write!(
+            f,
+            "{} (h2d {:.1} GB/s +{:.0}µs, d2d {:.0} GB/s",
+            self.name,
+            gbps(&self.h2d),
+            us(&self.h2d),
+            gbps(&self.d2d),
+        )?;
+        match &self.inter {
+            Some(l) => write!(f, ", inter {:.1} GB/s +{:.0}µs)", gbps(l), us(l)),
+            None => write!(f, ", no interconnect)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcie_preset_carries_the_legacy_transfer_numbers() {
+        let t = HardwareTopology::pcie();
+        assert_eq!(t.h2d.bytes_per_sec, 12.0e9);
+        assert_eq!(t.h2d.latency, Duration::from_micros(10));
+        assert_eq!(t.d2d.bytes_per_sec, 200.0e9);
+        assert_eq!(t.d2d.latency, Duration::ZERO);
+        assert!(t.inter.is_none(), "single-box preset has no interconnect");
+        assert_eq!(HardwareTopology::default(), t);
+        assert_eq!(HardwareTopology::parse("pcie").unwrap(), t);
+    }
+
+    #[test]
+    fn link_time_is_latency_plus_bandwidth() {
+        // the exact arithmetic of the old TransferModel::h2d_time
+        let l = Link::new(1e9, Duration::from_micros(100));
+        let t = l.time(1_000_000_000);
+        assert!((t.as_secs_f64() - 1.0001).abs() < 1e-6);
+        // d2d-style zero-latency link
+        let d = Link::new(10e9, Duration::ZERO);
+        assert_eq!(d.time(0), Duration::ZERO);
+    }
+
+    #[test]
+    fn presets_differ_only_on_the_interconnect() {
+        let (p, n, d) = (
+            HardwareTopology::pcie(),
+            HardwareTopology::nvlink(),
+            HardwareTopology::dist(),
+        );
+        assert_eq!(p.h2d, n.h2d);
+        assert_eq!(p.h2d, d.h2d);
+        assert_eq!(p.d2d, n.d2d);
+        assert!(n.inter.unwrap().bytes_per_sec > d.inter.unwrap().bytes_per_sec);
+        // a remote fetch is free on pcie, cheap on nvlink, real on dist
+        let bytes = 1 << 20;
+        assert_eq!(p.time(LinkKind::Inter, bytes), Duration::ZERO);
+        assert!(n.time(LinkKind::Inter, bytes) < d.time(LinkKind::Inter, bytes));
+        assert!(d.time(LinkKind::Inter, bytes) > Duration::ZERO);
+    }
+
+    #[test]
+    fn parse_applies_overrides() {
+        let t = HardwareTopology::parse("dist:inter-gbps=25:inter-us=2").unwrap();
+        assert_eq!(t.name, "dist");
+        let inter = t.inter.unwrap();
+        assert_eq!(inter.bytes_per_sec, 25.0e9);
+        assert_eq!(inter.latency, Duration::from_secs_f64(2e-6));
+        let t = HardwareTopology::parse("pcie:h2d-gbps=24:h2d-us=5").unwrap();
+        assert_eq!(t.h2d.bytes_per_sec, 24.0e9);
+        assert_eq!(t.h2d.latency, Duration::from_secs_f64(5e-6));
+        // inter-gbps enables an interconnect on the single-box preset
+        let t = HardwareTopology::parse("pcie:inter-gbps=10").unwrap();
+        assert_eq!(t.inter.unwrap().bytes_per_sec, 10.0e9);
+    }
+
+    #[test]
+    fn parse_rejects_nonsense() {
+        for bad in [
+            "warp-drive",
+            "pcie:h2d-gbps",
+            "pcie:h2d-gbps=fast",
+            "pcie:h2d-gbps=0",
+            "pcie:h2d-gbps=-1",
+            "pcie:warp=9",
+            "pcie:inter-us=3", // latency without a bandwidth to attach to
+            "dist:inter-gbps=25:inter-gbps=2.5", // duplicate key: no last-wins
+            "",
+        ] {
+            assert!(HardwareTopology::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn display_names_every_link() {
+        let text = HardwareTopology::dist().to_string();
+        assert!(text.contains("dist"), "{text}");
+        assert!(text.contains("inter"), "{text}");
+        let text = HardwareTopology::pcie().to_string();
+        assert!(text.contains("no interconnect"), "{text}");
+    }
+}

@@ -160,6 +160,30 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Schema version of the `BENCH_*.json` documents the bench harnesses
+/// emit. Bump when a bench document's shape changes incompatibly, so the
+/// per-PR bench trajectory CI accumulates stays machine-comparable.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// Standard header every `BENCH_*.json` document starts with:
+/// `schema_version` + `bench` name + run metadata (crate version, unix
+/// timestamp), followed by the bench's own `fields`. Comparing runs
+/// across PRs starts by checking `schema_version` matches.
+pub fn bench_doc(bench: &str, fields: Vec<(&str, Json)>) -> Json {
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut pairs = vec![
+        ("schema_version", Json::Num(BENCH_SCHEMA_VERSION as f64)),
+        ("bench", Json::Str(bench.to_string())),
+        ("crate_version", Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+        ("unix_time", Json::Num(unix_time as f64)),
+    ];
+    pairs.extend(fields);
+    obj(pairs)
+}
+
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
@@ -405,5 +429,19 @@ mod tests {
         ]);
         let text = v.to_string_pretty();
         assert_eq!(Json::parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn bench_doc_carries_schema_version_and_metadata() {
+        let doc = bench_doc("unit_test", vec![("custom", num(7.0))]);
+        let parsed = Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.req_usize("schema_version").unwrap(),
+            BENCH_SCHEMA_VERSION as usize
+        );
+        assert_eq!(parsed.req_str("bench").unwrap(), "unit_test");
+        assert!(!parsed.req_str("crate_version").unwrap().is_empty());
+        assert!(parsed.get("unix_time").and_then(Json::as_f64).unwrap() >= 0.0);
+        assert_eq!(parsed.get("custom").and_then(Json::as_f64), Some(7.0));
     }
 }

@@ -16,7 +16,9 @@ pub enum Stage {
     Sample,
     /// Step 2: slicing node features out of CPU memory.
     Slice,
-    /// Step 3: CPU→GPU transfer (modeled PCIe + real marshalling).
+    /// Step 3: data movement onto the device — modeled h2d (PCIe
+    /// misses/uploads), d2d (cache hits), and cross-shard `inter`
+    /// fetches, all charged through `topology::LinkClock`.
     Copy,
     /// Steps 4–5: forward + backward on the device.
     Compute,

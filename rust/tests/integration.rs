@@ -5,12 +5,13 @@
 //! Every sampler is constructed through the `MethodRegistry` — the same
 //! path the CLI, experiments, and benches use.
 
-use gns::device::{DeviceFeatureCache, DeviceMemory, TransferModel, TransferStats};
+use gns::device::{DeviceFeatureCache, DeviceMemory};
 use gns::features::build_dataset;
 use gns::graph::subgraph::CacheSubgraph;
 use gns::graph::walk::walk_probs;
 use gns::sampling::spec::{BuildContext, MethodRegistry, MethodSpec};
 use gns::sampling::{first_layer_isolation, validate_batch, BlockShapes, Sampler};
+use gns::topology::{LinkClock, TransferStats};
 
 fn shapes(batch: usize) -> BlockShapes {
     BlockShapes::new(vec![batch * 24, batch * 6, batch], vec![4, 5])
@@ -66,17 +67,17 @@ fn device_accounting_tracks_sampler_cache_exactly() {
     let row_bytes = ds.features.row_bytes() as u64;
     let mut cache = DeviceFeatureCache::new(ds.graph.num_nodes(), row_bytes);
     let mut mem = DeviceMemory::t4();
-    let model = TransferModel::default();
+    let clock = LinkClock::pcie();
     let mut stats = TransferStats::default();
     let nodes = gns.cache_nodes().unwrap();
     cache
-        .upload(&nodes, gns.cache_generation(), &mut mem, &model, &mut stats)
+        .upload(&nodes, gns.cache_generation(), &mut mem, &clock, &mut stats)
         .unwrap();
     assert_eq!(mem.used(), nodes.len() as u64 * row_bytes);
 
     let mb = gns.sample_batch(&ds.train[..64], &ds.labels).unwrap();
     let before_saved = stats.bytes_saved_by_cache;
-    cache.serve_batch(&mb.input_nodes, &model, &mut stats);
+    cache.serve_batch(&mb.input_nodes, &clock, &mut stats);
     // device cache hits must agree exactly with the sampler's own flags
     let sampler_cached = mb.input_cached.iter().filter(|&&c| c).count() as u64;
     assert_eq!(

@@ -11,13 +11,13 @@
 //!    creates or loses bytes;
 //! 4. the `shards=` param is plumbed through every method spec.
 
-use gns::device::{TransferModel, TransferStats};
 use gns::features::build_dataset;
 use gns::sampling::spec::{BuildContext, MethodRegistry};
 use gns::sampling::{BlockShapes, MiniBatch};
 use gns::session::{Session, SessionBuilder};
 use gns::shard::{build_partitioner, ShardSpec};
 use gns::tiering::{NonePolicy, TieringEngine};
+use gns::topology::{LinkClock, TransferStats};
 
 const METHODS: [&str; 4] = ["ns", "ladies:s-layer=128", "lazygcn", "gns:cache-fraction=0.02"];
 
@@ -87,6 +87,7 @@ fn single_shard_is_metric_identical_to_unsharded_for_all_methods() {
         for variant in [
             with_param(method, "shards=1"),
             with_param(method, "shards=1:part=range"),
+            with_param(method, "shards=1:part=greedy"),
         ] {
             let got = run_metrics(tiny_session(&variant)).unwrap();
             assert_eq!(got, base, "{variant} diverged from {method}");
@@ -129,10 +130,16 @@ fn sharded_session_trains_and_rolls_up_per_shard_traffic() {
 #[test]
 fn partitioners_cover_every_node_exactly_once() {
     let n = 5000usize;
+    // ring topology for the locality-aware partitioner to stream
+    let mut b = gns::graph::GraphBuilder::new(n);
+    for v in 0..n as u32 {
+        b = b.add_undirected(v, ((v as usize + 1) % n) as u32);
+    }
+    let g = b.build();
     for k in [1usize, 2, 3, 8] {
-        for part in ["hash", "range"] {
+        for part in ["hash", "range", "greedy"] {
             let spec = ShardSpec::parse(&format!("{k}:part={part}")).unwrap();
-            let p = build_partitioner(&spec, n);
+            let p = build_partitioner(&spec, &g);
             let mut counts = vec![0u32; k];
             for v in 0..n as u32 {
                 let s = p.shard_of(v);
@@ -142,7 +149,7 @@ fn partitioners_cover_every_node_exactly_once() {
             // every node lands in exactly one shard
             assert_eq!(counts.iter().sum::<u32>() as usize, n, "{part}/{k}");
             // and the router's target split covers the same partition
-            let router = spec.router(n);
+            let router = spec.router(&g);
             let targets: Vec<u32> = (0..n as u32).rev().collect();
             let split = router.split_targets(&targets);
             assert_eq!(split.len(), k);
@@ -166,11 +173,11 @@ fn classified_bytes_equal_unsharded_h2d() {
     let row_bytes = ds.features.row_bytes() as u64;
     let shapes = BlockShapes::new(vec![64 * 24, 64 * 6, 64], vec![4, 5]);
     let reg = MethodRegistry::global();
-    let model = TransferModel::default();
+    let links = LinkClock::pcie();
 
-    for part in ["hash", "range"] {
+    for part in ["hash", "range", "greedy"] {
         let spec = ShardSpec::parse(&format!("4:part={part}")).unwrap();
-        let router = spec.router(n);
+        let router = spec.router(&ds.graph);
         let targets = ds.train_by_shard(&router);
         // two identically-seeded samplers: one drives the sharded
         // classification, one the unsharded cache=none reference
@@ -188,7 +195,7 @@ fn classified_bytes_equal_unsharded_h2d() {
                 assert_eq!(l + r, slot.input_nodes.len() as u64, "rows lost");
                 local += l;
                 remote += r;
-                unsharded.serve(&slot.input_nodes, &model, &mut stats);
+                unsharded.serve(&slot.input_nodes, &links, &mut stats);
             }
         }
         // the identity: classification never creates or loses traffic —
@@ -214,7 +221,7 @@ fn every_method_accepts_the_shards_param() {
     let reg = MethodRegistry::global();
     let ctx = BuildContext::new(&ds, shapes, 3);
     for method in METHODS {
-        for shards in ["1", "2", "4:part=range", "8:part=hash"] {
+        for shards in ["1", "2", "4:part=range", "8:part=hash", "4:part=greedy"] {
             let text = with_param(method, &format!("shards={shards}"));
             let spec = reg.parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
             reg.factory(&spec, &ctx)

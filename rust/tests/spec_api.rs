@@ -42,13 +42,28 @@ fn prop_spec_display_parse_round_trip() {
                         "degree:budget=64",
                         "presample:budget=256",
                     ];
-                    const SHARD_DOMAIN: &[&str] =
-                        &["1", "2", "4", "8:part=hash", "4:part=range"];
+                    const SHARD_DOMAIN: &[&str] = &[
+                        "1",
+                        "2",
+                        "4",
+                        "8:part=hash",
+                        "4:part=range",
+                        "4:part=greedy",
+                    ];
+                    const TOPO_DOMAIN: &[&str] = &[
+                        "pcie",
+                        "nvlink",
+                        "dist",
+                        "dist:inter-gbps=25",
+                        "nvlink:inter-us=3",
+                        "pcie:h2d-gbps=24:h2d-us=5",
+                    ];
                     const POLICY_DOMAIN: &[&str] =
                         &["auto", "degree", "random-walk", "uniform"];
                     let domain = match info.key {
                         "cache" => CACHE_DOMAIN,
                         "shards" => SHARD_DOMAIN,
+                        "topo" => TOPO_DOMAIN,
                         _ => POLICY_DOMAIN,
                     };
                     ParamValue::Str((*g.choose(domain)).to_string())
@@ -65,6 +80,47 @@ fn prop_spec_display_parse_round_trip() {
         let parsed = gns::util::json::Json::parse(&json_text)?;
         let from_json = reg.from_json(&parsed).map_err(|e| e.to_string())?;
         prop_assert_eq!(from_json, spec);
+        Ok(())
+    });
+}
+
+/// Property: duplicating any parameter key in a spec's parameter list is
+/// a hard `DuplicateParam` parse error (matching the CLI's
+/// duplicate-flag rule), no matter which method, key, or values are
+/// involved — last-wins must never silently mask a value.
+#[test]
+fn prop_duplicate_spec_params_are_rejected() {
+    let reg = MethodRegistry::global();
+    let builders: Vec<&str> = reg.builders().map(|b| b.name()).collect();
+    check(200, |g| {
+        let name = *g.choose(&builders);
+        let builder = reg.get(name).unwrap();
+        let params = builder.params();
+        let info = params[g.usize(0..params.len())];
+        let value = match info.kind {
+            ParamKind::Bool => "true".to_string(),
+            ParamKind::Int => g.usize(1..10_000).to_string(),
+            ParamKind::Float => format!("{}", g.f64(0.0001..0.9999)),
+            ParamKind::Str => info.default.to_string(),
+        };
+        // same key twice — with equal or differing values, both illegal
+        let second = if g.bool(0.5) {
+            value.clone()
+        } else {
+            match info.kind {
+                ParamKind::Int => g.usize(1..10_000).to_string(),
+                _ => value.clone(),
+            }
+        };
+        let text = format!("{name}:{}={value},{}={second}", info.key, info.key);
+        match reg.parse(&text) {
+            Err(SpecError::DuplicateParam { key, .. }) => {
+                prop_assert_eq!(key, info.key.to_string());
+            }
+            other => {
+                return Err(format!("{text}: expected DuplicateParam, got {other:?}"))
+            }
+        }
         Ok(())
     });
 }

@@ -9,7 +9,7 @@
 //!    legacy trainer path's hit/miss and savings numbers;
 //! 5. every method accepts `cache=none|gns|degree|presample[:budget=N]`.
 
-use gns::device::{DeviceFeatureCache, DeviceMemory, TransferModel, TransferStats};
+use gns::device::{DeviceFeatureCache, DeviceMemory};
 use gns::features::{build_dataset, Dataset};
 use gns::graph::NodeId;
 use gns::sampling::spec::{cache_policy_spec, BuildContext, MethodRegistry};
@@ -18,6 +18,7 @@ use gns::tiering::{
     build_policy, DegreePolicy, PolicyKind, PolicySpec, PresamplePolicy, SamplerPolicy,
     TierBuild, TieringEngine, PRESAMPLE_WORKER,
 };
+use gns::topology::{LinkClock, LinkKind, TransferStats};
 use std::collections::HashMap;
 
 fn shapes(batch: usize) -> BlockShapes {
@@ -47,11 +48,11 @@ fn plan_accounting_equals_uncached_minus_savings() {
     let policy = Box::new(SamplerPolicy);
     let mut engine = TieringEngine::new(policy, ds.graph.num_nodes(), row_bytes);
     let mut mem = DeviceMemory::t4();
-    let model = TransferModel::default();
+    let clock = LinkClock::pcie();
     let mut stats = TransferStats::default();
     s.begin_epoch(0);
     engine
-        .begin_epoch(0, s.as_ref(), &mut mem, &model, &mut stats)
+        .begin_epoch(0, s.as_ref(), &mut mem, &clock, &mut stats)
         .unwrap();
     let h2d_after_upload = stats.h2d_bytes;
 
@@ -60,7 +61,7 @@ fn plan_accounting_equals_uncached_minus_savings() {
         let chunk = &ds.train[i * 64..(i + 1) * 64];
         let mb = s.sample_batch(chunk, &ds.labels).unwrap();
         total_input_bytes += mb.input_nodes.len() as u64 * row_bytes;
-        engine.serve(&mb.input_nodes, &model, &mut stats);
+        engine.serve(&mb.input_nodes, &clock, &mut stats);
         // per-batch identity on the plan itself
         let plan = engine.last_plan();
         assert_eq!(
@@ -89,13 +90,13 @@ fn delta_upload_moves_exactly_the_nonresident_rows() {
     let mut engine =
         TieringEngine::new(Box::new(SamplerPolicy), ds.graph.num_nodes(), row_bytes);
     let mut mem = DeviceMemory::t4();
-    let model = TransferModel::default();
+    let clock = LinkClock::pcie();
     let mut stats = TransferStats::default();
 
     s.begin_epoch(0);
     let gen1: Vec<NodeId> = s.cache_nodes().unwrap().to_vec();
     engine
-        .begin_epoch(0, s.as_ref(), &mut mem, &model, &mut stats)
+        .begin_epoch(0, s.as_ref(), &mut mem, &clock, &mut stats)
         .unwrap();
     assert_eq!(stats.h2d_bytes, gen1.len() as u64 * row_bytes);
 
@@ -104,7 +105,7 @@ fn delta_upload_moves_exactly_the_nonresident_rows() {
     assert_ne!(gen1, gen2, "refresh must draw a new cache");
     let h2d_before = stats.h2d_bytes;
     engine
-        .begin_epoch(1, s.as_ref(), &mut mem, &model, &mut stats)
+        .begin_epoch(1, s.as_ref(), &mut mem, &clock, &mut stats)
         .unwrap();
 
     // expected delta: rows of gen2 not resident under gen1
@@ -155,7 +156,7 @@ impl HashMapCacheRef {
     fn serve_batch(
         &mut self,
         input_nodes: &[NodeId],
-        model: &TransferModel,
+        clock: &LinkClock,
         stats: &mut TransferStats,
     ) -> usize {
         let mut hit = 0u64;
@@ -169,8 +170,8 @@ impl HashMapCacheRef {
         }
         self.hits += hit;
         self.misses += miss;
-        stats.h2d(model, miss * self.row_bytes);
-        stats.d2d(model, hit * self.row_bytes);
+        stats.charge(clock, LinkKind::H2d, miss * self.row_bytes);
+        stats.charge(clock, LinkKind::D2d, hit * self.row_bytes);
         stats.record_cache_savings(hit * self.row_bytes);
         miss as usize
     }
@@ -181,7 +182,7 @@ fn dense_cache_serves_identically_to_hashmap_cache() {
     let ds = dataset();
     let sh = shapes(48);
     let row_bytes = ds.features.row_bytes() as u64;
-    let model = TransferModel::default();
+    let clock = LinkClock::pcie();
     let mut s = sampler_for("gns:cache-fraction=0.01", &ds, sh, 21);
 
     let mut dense = DeviceFeatureCache::new(ds.graph.num_nodes(), row_bytes);
@@ -195,7 +196,7 @@ fn dense_cache_serves_identically_to_hashmap_cache() {
         let nodes = s.cache_nodes().unwrap();
         let generation = s.cache_generation();
         dense
-            .upload(&nodes, generation, &mut mem, &model, &mut dense_stats)
+            .upload(&nodes, generation, &mut mem, &clock, &mut dense_stats)
             .unwrap();
         reference.upload(&nodes, generation);
         for i in 0..3 {
@@ -203,8 +204,8 @@ fn dense_cache_serves_identically_to_hashmap_cache() {
             let mb = s.sample_batch(chunk, &ds.labels).unwrap();
             let before_dense = (dense_stats.h2d_bytes, dense_stats.d2d_bytes);
             let before_ref = (ref_stats.h2d_bytes, ref_stats.d2d_bytes);
-            let (_t, dense_missed) = dense.serve_batch(&mb.input_nodes, &model, &mut dense_stats);
-            let ref_missed = reference.serve_batch(&mb.input_nodes, &model, &mut ref_stats);
+            let (_t, dense_missed) = dense.serve_batch(&mb.input_nodes, &clock, &mut dense_stats);
+            let ref_missed = reference.serve_batch(&mb.input_nodes, &clock, &mut ref_stats);
             assert_eq!(dense_missed, ref_missed, "epoch {epoch} batch {i}");
             assert_eq!(
                 dense_stats.h2d_bytes - before_dense.0,
@@ -235,7 +236,7 @@ fn gns_policy_reproduces_legacy_hit_miss_and_savings() {
     let ds = dataset();
     let sh = shapes(64);
     let row_bytes = ds.features.row_bytes() as u64;
-    let model = TransferModel::default();
+    let clock = LinkClock::pcie();
     // two identically-seeded samplers produce identical batch sequences
     let mut legacy_s = sampler_for("gns:cache-fraction=0.05", &ds, sh.clone(), 33);
     let mut engine_s = sampler_for("gns:cache-fraction=0.05", &ds, sh, 33);
@@ -258,15 +259,15 @@ fn gns_policy_reproduces_legacy_hit_miss_and_savings() {
         }
         reference.upload(&nodes, legacy_s.cache_generation());
         engine
-            .begin_epoch(epoch, engine_s.as_ref(), &mut mem, &model, &mut eng_stats)
+            .begin_epoch(epoch, engine_s.as_ref(), &mut mem, &clock, &mut eng_stats)
             .unwrap();
         for i in 0..4 {
             let chunk = &ds.train[i * 64..(i + 1) * 64];
             let a = legacy_s.sample_batch(chunk, &ds.labels).unwrap();
             let b = engine_s.sample_batch(chunk, &ds.labels).unwrap();
             assert_eq!(a.input_nodes, b.input_nodes, "sampler determinism");
-            reference.serve_batch(&a.input_nodes, &model, &mut ref_stats);
-            engine.serve(&b.input_nodes, &model, &mut eng_stats);
+            reference.serve_batch(&a.input_nodes, &clock, &mut ref_stats);
+            engine.serve(&b.input_nodes, &clock, &mut eng_stats);
         }
     }
     let (hits, misses) = engine.hits_misses();
@@ -374,18 +375,18 @@ fn degree_policy_pins_top_degree_rows_and_uploads_once() {
     let mut s = sampler_for("ns", &ds, sh, 2);
     let mut engine = TieringEngine::new(Box::new(policy), ds.graph.num_nodes(), row_bytes);
     let mut mem = DeviceMemory::t4();
-    let model = TransferModel::default();
+    let clock = LinkClock::pcie();
     let mut stats = TransferStats::default();
     s.begin_epoch(0);
-    engine.begin_epoch(0, s.as_ref(), &mut mem, &model, &mut stats).unwrap();
+    engine.begin_epoch(0, s.as_ref(), &mut mem, &clock, &mut stats).unwrap();
     assert_eq!(engine.cache().resident_rows(), budget);
     let after_first = stats.h2d_bytes;
     s.begin_epoch(1);
-    engine.begin_epoch(1, s.as_ref(), &mut mem, &model, &mut stats).unwrap();
+    engine.begin_epoch(1, s.as_ref(), &mut mem, &clock, &mut stats).unwrap();
     assert_eq!(stats.h2d_bytes, after_first, "static tier uploads exactly once");
     // a hub-heavy tier hits under plain NS
     let mb = s.sample_batch(&ds.train[..32], &ds.labels).unwrap();
-    engine.serve(&mb.input_nodes, &model, &mut stats);
+    engine.serve(&mb.input_nodes, &clock, &mut stats);
     let (hits, _) = engine.hits_misses();
     assert!(hits > 0, "top-degree tier should catch NS traffic");
 }
@@ -413,15 +414,15 @@ fn presample_policy_pins_warmup_frequent_rows_within_budget() {
     let mut s = sampler_for("ns", &ds, sh, 45);
     let mut engine = TieringEngine::new(Box::new(policy), ds.graph.num_nodes(), row_bytes);
     let mut mem = DeviceMemory::t4();
-    let model = TransferModel::default();
+    let clock = LinkClock::pcie();
     let mut stats = TransferStats::default();
     s.begin_epoch(0);
-    engine.begin_epoch(0, s.as_ref(), &mut mem, &model, &mut stats).unwrap();
+    engine.begin_epoch(0, s.as_ref(), &mut mem, &clock, &mut stats).unwrap();
     for i in 0..4 {
         let mb = s
             .sample_batch(&ds.train[i * 32..(i + 1) * 32], &ds.labels)
             .unwrap();
-        engine.serve(&mb.input_nodes, &model, &mut stats);
+        engine.serve(&mb.input_nodes, &clock, &mut stats);
     }
     let (hits, misses) = engine.hits_misses();
     assert!(hits > 0, "presampled tier should catch repeat traffic");
@@ -451,12 +452,12 @@ fn engine_plan_is_rebuilt_per_batch() {
     let mut engine =
         TieringEngine::new(Box::new(policy), ds.graph.num_nodes(), row_bytes);
     let mut mem = DeviceMemory::t4();
-    let model = TransferModel::default();
+    let clock = LinkClock::pcie();
     let mut stats = TransferStats::default();
     let sh = shapes(16);
     let mut s = sampler_for("ns", &ds, sh, 1);
     s.begin_epoch(0);
-    engine.begin_epoch(0, s.as_ref(), &mut mem, &model, &mut stats).unwrap();
+    engine.begin_epoch(0, s.as_ref(), &mut mem, &clock, &mut stats).unwrap();
     engine.plan_batch(&hot);
     assert_eq!(engine.last_plan().miss_rows(), 0);
     assert_eq!(engine.last_plan().runs().len(), 1);

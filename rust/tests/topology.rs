@@ -1,0 +1,243 @@
+//! Topology subsystem invariants (docs/TOPOLOGY.md):
+//!
+//! 1. **pcie identity**: `topo=pcie` — and omitting `topo=` entirely —
+//!    yields bit-identical `TransferStats` and modeled stage seconds to
+//!    the default pipeline for all four methods (the compatibility
+//!    anchor of the topology refactor; artifact-gated, skips when
+//!    `make artifacts` has not run);
+//! 2. **inter charging**: under `shards=K, topo=dist`, modeled
+//!    interconnect seconds equal `cross_shard_bytes / bw + fetches *
+//!    latency` (one fetch per batch with remote rows), and single-box
+//!    topologies charge those same bytes zero seconds;
+//! 3. the `topo=` param is plumbed through every method spec and bad
+//!    topologies are rejected at factory build time.
+
+use gns::features::build_dataset;
+use gns::sampling::spec::{BuildContext, MethodRegistry};
+use gns::sampling::{BlockShapes, MiniBatch};
+use gns::session::{Session, SessionBuilder};
+use gns::shard::ShardSpec;
+use gns::topology::{HardwareTopology, LinkClock, LinkKind, TransferStats};
+
+const METHODS: [&str; 4] = ["ns", "ladies:s-layer=128", "lazygcn", "gns:cache-fraction=0.02"];
+
+fn with_param(method: &str, param: &str) -> String {
+    let sep = if method.contains(':') { "," } else { ":" };
+    format!("{method}{sep}{param}")
+}
+
+/// The tiny-artifact session the e2e suites share.
+fn tiny_session(method: &str) -> SessionBuilder {
+    Session::builder("yelp-s", method)
+        .scale(0.03)
+        .seed(1)
+        .epochs(2)
+        .workers(1)
+        .eval_batches(2)
+        .artifact("tiny")
+        .refit_features(true)
+        .max_train_nodes(512)
+        .max_val_nodes(128)
+        .paranoid_validate(true)
+}
+
+// ---------------------------------------------------------------------------
+// 1. pcie identity: bit-identical TransferStats + modeled seconds
+
+/// Every deterministic transfer/time metric a run produces, per epoch,
+/// in bit-exact form.
+#[derive(Debug, PartialEq)]
+struct TransferMetrics {
+    per_epoch: Vec<(u64, u64, u64, u64, u128, u128, u128, u128)>,
+    test_f1: u64,
+}
+
+fn run_transfer_metrics(builder: SessionBuilder) -> Option<TransferMetrics> {
+    let mut session = builder.build_or_skip()?;
+    let r = session.run().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    Some(TransferMetrics {
+        per_epoch: r
+            .reports
+            .iter()
+            .map(|rep| {
+                (
+                    rep.transfer.h2d_bytes,
+                    rep.transfer.d2d_bytes,
+                    rep.transfer.h2d_transfers,
+                    rep.transfer.bytes_saved_by_delta,
+                    rep.transfer.modeled_h2d.as_nanos(),
+                    rep.transfer.modeled_d2d.as_nanos(),
+                    rep.transfer.modeled_inter.as_nanos(),
+                    rep.total_with_model.as_nanos() - rep.wall.as_nanos(),
+                )
+            })
+            .collect(),
+        test_f1: r.test_f1.to_bits(),
+    })
+}
+
+#[test]
+fn topo_pcie_is_bit_identical_to_omitting_it_for_all_methods() {
+    for method in METHODS {
+        let Some(base) = run_transfer_metrics(tiny_session(method)) else { return };
+        let explicit = run_transfer_metrics(tiny_session(&with_param(method, "topo=pcie")))
+            .unwrap();
+        assert_eq!(explicit, base, "topo=pcie diverged from default for {method}");
+        // the builder override path must anchor identically too
+        let via_builder = run_transfer_metrics(
+            tiny_session(method).topology(HardwareTopology::pcie()),
+        )
+        .unwrap();
+        assert_eq!(via_builder, base, "builder topology() diverged for {method}");
+    }
+}
+
+#[test]
+fn single_box_presets_charge_no_inter_seconds_even_when_sharded() {
+    let Some(m) = run_transfer_metrics(tiny_session("ns:shards=2")) else { return };
+    for (.., modeled_inter, _) in &m.per_epoch {
+        assert_eq!(*modeled_inter, 0, "pcie must not charge interconnect seconds");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. inter charging under dist (artifact-free replay + session level)
+
+/// Formula check against the recorded ledger:
+/// `modeled_inter == inter_bytes / bw + inter_transfers * latency`
+/// within per-fetch Duration rounding (≤ 1 ns each).
+fn assert_inter_formula(stats: &TransferStats, topo: &HardwareTopology) {
+    let inter = topo.inter.expect("topology under test needs an interconnect");
+    let want = stats.inter_bytes as f64 / inter.bytes_per_sec
+        + stats.inter_transfers as f64 * inter.latency.as_secs_f64();
+    let got = stats.modeled_inter.as_secs_f64();
+    let tol = 2e-9 * stats.inter_transfers as f64 + 1e-12;
+    assert!(
+        (got - want).abs() <= tol,
+        "inter seconds {got} != bytes/bw + fetches*latency = {want} (tol {tol})"
+    );
+}
+
+#[test]
+fn dist_inter_seconds_equal_bytes_over_bw_plus_fetch_latency() {
+    let ds = build_dataset("yelp-s", 0.05, 13);
+    let row_bytes = ds.features.row_bytes() as u64;
+    let shapes = BlockShapes::new(vec![64 * 24, 64 * 6, 64], vec![4, 5]);
+    let reg = MethodRegistry::global();
+    let topo = HardwareTopology::dist();
+    let links = LinkClock::new(topo.clone());
+
+    let spec = ShardSpec::parse("4:part=hash").unwrap();
+    let router = spec.router(&ds.graph);
+    let targets = ds.train_by_shard(&router);
+    let ctx = BuildContext::new(&ds, shapes, 21);
+    let mut sampler = reg.sampler(&reg.parse("ns").unwrap(), &ctx, 0).unwrap();
+    sampler.begin_epoch(0);
+    let mut stats = TransferStats::default();
+    let mut slot = MiniBatch::default();
+    let mut expected = std::time::Duration::ZERO;
+    let mut cross_bytes = 0u64;
+    let mut fetches = 0u64;
+    let inter = topo.inter.unwrap();
+    for (shard, own) in targets.iter().enumerate() {
+        for chunk in own.chunks(64).take(3) {
+            sampler.sample_batch_into(chunk, &ds.labels, &mut slot).unwrap();
+            let (_local, remote) = router.count(shard as u32, &slot.input_nodes);
+            if remote > 0 {
+                // the trainer's charging rule: one fetch per batch with
+                // remote rows, remote_rows * row_bytes over the inter link
+                let bytes = remote * row_bytes;
+                stats.charge(&links, LinkKind::Inter, bytes);
+                expected += inter.time(bytes);
+                cross_bytes += bytes;
+                fetches += 1;
+            }
+        }
+    }
+    assert!(fetches > 0, "4-way hash sharding must see remote batches");
+    // exact identity against a bit-faithful replay of the charging rule
+    assert_eq!(stats.modeled_inter, expected);
+    assert_eq!(stats.inter_bytes, cross_bytes);
+    assert_eq!(stats.inter_transfers, fetches);
+    // and the closed-form acceptance formula, within Duration rounding
+    assert_inter_formula(&stats, &topo);
+
+    // the same bytes over pcie: counted, never charged
+    let pcie = LinkClock::pcie();
+    let mut free = TransferStats::default();
+    free.charge(&pcie, LinkKind::Inter, cross_bytes);
+    assert_eq!(free.inter_bytes, cross_bytes);
+    assert_eq!(free.modeled_inter, std::time::Duration::ZERO);
+}
+
+#[test]
+fn sharded_dist_session_charges_inter_seconds_matching_the_ledger() {
+    let Some(mut session) =
+        tiny_session(&with_param("ns", "shards=2,topo=dist")).build_or_skip()
+    else {
+        return;
+    };
+    assert_eq!(session.topology().name, "dist");
+    let r = session.run().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    let totals = r.transfer_totals();
+    // the inter ledger is exactly the cross-shard roll-up
+    assert_eq!(totals.inter_bytes, r.cross_shard_bytes());
+    assert!(totals.inter_bytes > 0, "2-way hash sharding must cross shards");
+    assert!(r.modeled_inter_secs() > 0.0, "dist must charge remote fetches");
+    assert_inter_formula(&totals, session.topology());
+
+    // identical run on the single-box anchor: same bytes, zero seconds
+    let mut pcie_session = tiny_session("ns:shards=2").build_or_skip().unwrap();
+    let p = pcie_session.run().unwrap();
+    let pcie_totals = p.transfer_totals();
+    assert_eq!(pcie_totals.inter_bytes, totals.inter_bytes);
+    assert_eq!(pcie_totals.modeled_inter, std::time::Duration::ZERO);
+}
+
+// ---------------------------------------------------------------------------
+// 3. spec plumbing
+
+#[test]
+fn every_method_accepts_the_topo_param() {
+    let ds = build_dataset("yelp-s", 0.05, 13);
+    let shapes = BlockShapes::new(vec![16 * 24, 16 * 6, 16], vec![4, 5]);
+    let reg = MethodRegistry::global();
+    let ctx = BuildContext::new(&ds, shapes, 3);
+    for method in METHODS {
+        for topo in ["pcie", "nvlink", "dist", "dist:inter-gbps=25:inter-us=2"] {
+            let text = with_param(method, &format!("topo={topo}"));
+            let spec = reg.parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+            reg.factory(&spec, &ctx)
+                .unwrap_or_else(|e| panic!("{text}: {e}"));
+        }
+    }
+    // bad topologies are rejected at factory build time
+    for bad in [
+        "ns:topo=warp",
+        "ns:topo=pcie:h2d-gbps=0",
+        "ns:topo=pcie:inter-us=3",
+        "ns:topo=dist:latency=9",
+    ] {
+        let spec = reg.parse(bad).unwrap();
+        assert!(reg.factory(&spec, &ctx).is_err(), "{bad} should fail");
+    }
+}
+
+#[test]
+fn topo_param_round_trips_through_display_and_json() {
+    let reg = MethodRegistry::global();
+    for text in [
+        "ns:topo=dist",
+        "ns:shards=4:part=greedy,topo=nvlink",
+        "gns:cache-fraction=0.02,topo=dist:inter-gbps=25",
+    ] {
+        let spec = reg.parse(text).unwrap();
+        assert_eq!(spec.to_string(), text);
+        assert_eq!(reg.parse(&spec.to_string()).unwrap(), spec);
+        let j = spec.to_json().to_string_pretty();
+        let parsed = gns::util::json::Json::parse(&j).unwrap();
+        assert_eq!(reg.from_json(&parsed).unwrap(), spec);
+    }
+}
