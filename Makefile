@@ -9,7 +9,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build check ci test fmt clippy bench artifacts clean
+.PHONY: build check ci test fmt clippy bench serve-smoke artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -22,6 +22,12 @@ check:
 	$(CARGO) bench --bench micro_hotpath -- --scale 0.1 --smoke --json BENCH_hotpath.json
 	$(CARGO) bench --bench tiering_policies -- --scale 0.1 --smoke --json BENCH_tiering.json
 	$(CARGO) bench --bench shard_scaling -- --scale 0.1 --smoke --json BENCH_shard.json
+	$(MAKE) serve-smoke
+
+# Smoke the online inference lane (docs/SERVING.md): a short request
+# stream swept across three offered loads, emitting BENCH_serving.json.
+serve-smoke:
+	$(CARGO) bench --bench serving_latency -- --scale 0.1 --smoke --json BENCH_serving.json
 
 # The full local gate: everything CI runs (rust + python) in one target.
 ci: check
@@ -33,14 +39,15 @@ test:
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
-# Hot-path perf numbers: writes BENCH_hotpath.json, BENCH_tiering.json and
-# BENCH_shard.json at the repo root so the per-PR perf trajectory is
-# tracked (docs/PERF.md, docs/TIERING.md, docs/SHARDING.md). All are
-# gitignored.
+# Hot-path perf numbers: writes BENCH_hotpath.json, BENCH_tiering.json,
+# BENCH_shard.json and BENCH_serving.json at the repo root so the per-PR
+# perf trajectory is tracked (docs/PERF.md, docs/TIERING.md,
+# docs/SHARDING.md, docs/SERVING.md). All are gitignored.
 bench:
 	$(CARGO) bench --bench micro_hotpath -- --scale 0.5 --json BENCH_hotpath.json
 	$(CARGO) bench --bench tiering_policies -- --scale 0.5 --json BENCH_tiering.json
 	$(CARGO) bench --bench shard_scaling -- --scale 0.5 --json BENCH_shard.json
+	$(CARGO) bench --bench serving_latency -- --scale 0.5 --json BENCH_serving.json
 
 fmt:
 	$(CARGO) fmt

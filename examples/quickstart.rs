@@ -6,18 +6,21 @@
 //! `MethodRegistry`, the dataset analogue is generated and refitted to
 //! the `tiny` AOT artifact, and `run()` trains GraphSAGE with Global
 //! Neighbor Sampling and evaluates the test split. The spec shows all
-//! three cross-cutting parameters together: `cache=` (feature tier,
+//! four cross-cutting parameters together: `cache=` (feature tier,
 //! docs/TIERING.md), `shards=` (partitioned pipelines, docs/SHARDING.md
-//! — `part=greedy` is the locality-aware streaming partitioner), and
+//! — `part=greedy` is the locality-aware streaming partitioner),
 //! `topo=` (modeled hardware topology, docs/TOPOLOGY.md — `dist`
-//! charges cross-shard fetches IB seconds).
+//! charges cross-shard fetches IB seconds), and `serve=` (the online
+//! inference lane, docs/SERVING.md — after training, an open-loop
+//! request stream is micro-batched through the same hot path).
 
 use gns::session::Session;
 
 fn main() -> anyhow::Result<()> {
     let mut session = Session::builder(
         "yelp-s",
-        "gns:cache-fraction=0.02,cache=auto,shards=2:part=greedy,topo=dist",
+        "gns:cache-fraction=0.02,cache=auto,shards=2:part=greedy,topo=dist,\
+         serve=2000:max-batch=32:requests=256",
     )
         .scale(0.05)
         .seed(7)
@@ -60,5 +63,10 @@ fn main() -> anyhow::Result<()> {
         session.topology().name,
     );
     println!("{}", last.clock.render("stage breakdown (last epoch)"));
+
+    // the serving lane configured by `serve=`: 2000 req/s offered load,
+    // admission-queued micro-batches over the recycled hot path
+    let report = session.serve()?;
+    print!("\n{}", report.render());
     Ok(())
 }

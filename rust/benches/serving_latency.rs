@@ -1,0 +1,195 @@
+//! Serving-latency bench: the online inference lane swept across offered
+//! load. An open-loop request stream (docs/SERVING.md) is admission-
+//! queued into micro-batches and driven through the real hot path — the
+//! method's sampler into one recycled `BufferPool` slot, a `TieringEngine`
+//! feature tier as the serving cache, every byte charged through the
+//! modeled `--topo` link clock — and each load point reports exact
+//! p50/p95/p99 latency, sustained throughput, queue depth, cache hit
+//! rate and per-link bytes.
+//!
+//! Artifact-free by design (like the other benches): device compute is
+//! charged from `ComputeModel::eval_step_time` over a synthetic
+//! `ArtifactMeta` matching the bench shapes, so CI runs this without the
+//! AOT step. `--json <path>` emits machine-readable results (`make
+//! bench` writes BENCH_serving.json); `--smoke` shrinks the request
+//! stream so `make check` and CI keep this binary from rotting.
+
+use gns::device::{ComputeModel, DeviceMemory};
+use gns::features::build_dataset;
+use gns::pipeline::trainer::PAPER_SAMPLER_WORKERS;
+use gns::pipeline::BufferPool;
+use gns::runtime::ArtifactMeta;
+use gns::sampling::spec::{cache_policy_spec, BuildContext, MethodRegistry};
+use gns::sampling::BlockShapes;
+use gns::serving::{generate_requests, run_open_loop, ServeReport, ServeSpec};
+use gns::tiering::{build_policies, TierBuild, TieringEngine, PRESAMPLE_WORKER};
+use gns::topology::{HardwareTopology, LinkClock, TransferStats};
+use gns::util::cli::Args;
+use gns::util::json::{self, Json};
+use gns::util::timer::{Stage, StageClock};
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args = Args::parse_env();
+    if let Err(e) = args.check_known(&[
+        "scale", "method", "topo", "rps", "requests", "max-batch", "max-wait-us", "json",
+        "smoke",
+    ]) {
+        eprintln!("serving_latency: {e}");
+        std::process::exit(2);
+    }
+    let scale = args.f64_or("scale", 0.5);
+    let smoke = args.bool("smoke");
+    let method = args.str_or("method", "gns:cache-fraction=0.01").to_string();
+    let topo_text = args.str_or("topo", "pcie").to_string();
+    let max_batch = args.usize_or("max-batch", 64);
+    let max_wait_us = args.usize_or("max-wait-us", 1000) as u64;
+    let n_requests = args.usize_or("requests", if smoke { 64 } else { 512 });
+    let rates: Vec<f64> = args
+        .str_or("rps", "500,2000,8000")
+        .split(',')
+        .map(|r| r.trim().parse().unwrap_or_else(|_| panic!("--rps: bad rate {r:?}")))
+        .collect();
+
+    let ds = build_dataset("products-s", scale, 1);
+    let links = LinkClock::new(
+        HardwareTopology::parse(&topo_text).unwrap_or_else(|e| panic!("--topo: {e}")),
+    );
+    println!(
+        "workload: products-s x{scale} ({method}) — {}\ntopology: {}",
+        ds.graph.stats(),
+        links.topology()
+    );
+    let shapes = BlockShapes::new(vec![max_batch * 24, max_batch * 6, max_batch], vec![4, 5]);
+    // synthetic artifact meta matching the bench shapes: the modeled
+    // device frame needs a forward-pass cost, not real lowered HLO
+    let meta = ArtifactMeta {
+        name: "serving-bench".to_string(),
+        num_layers: 2,
+        feature_dim: ds.features.dim(),
+        hidden_dim: 128,
+        num_classes: ds.num_classes,
+        batch_size: max_batch,
+        level_sizes: shapes.level_sizes.clone(),
+        fanouts: shapes.fanouts.clone(),
+        train_num_outputs: 0,
+        dir: std::path::PathBuf::new(),
+    };
+    let compute = ComputeModel::default().eval_step_time(&meta);
+
+    let reg = MethodRegistry::global();
+    let spec = reg.parse(&method).unwrap_or_else(|e| panic!("--method: {e}"));
+    let ctx = BuildContext::new(&ds, shapes.clone(), 7);
+    let factory = reg.factory(&spec, &ctx).unwrap();
+    let tier_spec = cache_policy_spec(&spec).unwrap();
+    let mut leader = factory(0);
+    let policy = build_policies(
+        &tier_spec,
+        &TierBuild {
+            graph: &ds.graph,
+            train: &ds.train,
+            labels: &ds.labels,
+            chunk_size: max_batch,
+            warmup_batches: 2,
+        },
+        || factory(PRESAMPLE_WORKER),
+        1,
+    )
+    .unwrap()
+    .pop()
+    .unwrap();
+    let mut engine =
+        TieringEngine::new(policy, ds.graph.num_nodes(), ds.features.row_bytes() as u64);
+    let mut mem = DeviceMemory::t4();
+    // warm the serving tier once (the post-training upload); its h2d cost
+    // is setup, not part of any load point's ledger
+    let mut setup_stats = TransferStats::default();
+    leader.begin_epoch(0);
+    engine
+        .begin_epoch(0, leader.as_ref(), &mut mem, &links, &mut setup_stats)
+        .unwrap();
+
+    let dim = ds.features.dim();
+    let mut x0 = vec![0f32; shapes.level_sizes[0] * dim];
+    let buffers = BufferPool::new();
+
+    println!(
+        "{:>9} {:>6} {:>8} {:>10} {:>9} {:>9} {:>9} {:>11} {:>7} {:>7} {:>10}",
+        "rps", "reqs", "batches", "mean-batch", "p50 ms", "p95 ms", "p99 ms", "thr req/s",
+        "depth", "hit%", "h2d MB"
+    );
+    let mut entries: Vec<Json> = Vec::new();
+    for &rate in &rates {
+        let serve = ServeSpec {
+            rate,
+            max_batch,
+            max_wait: Duration::from_micros(max_wait_us),
+            requests: n_requests,
+        };
+        let requests = generate_requests(&serve, &ds.test, 1);
+        let mut transfer = TransferStats::default();
+        let mut clock = StageClock::new();
+        let (h0, m0) = engine.hits_misses();
+        let stats = run_open_loop(&serve, &requests, &buffers, |slot, chunk| {
+            let t0 = Instant::now();
+            leader.sample_batch_into(chunk, &ds.labels, slot)?;
+            let sample = t0.elapsed();
+            clock.add_measured(Stage::Sample, sample);
+            let t1 = Instant::now();
+            engine.plan_batch(&slot.input_nodes);
+            let n = slot.input_nodes.len() * dim;
+            ds.features
+                .slice_runs_into(&slot.input_nodes, engine.last_plan().runs(), &mut x0[..n]);
+            let slice = t1.elapsed();
+            clock.add_measured(Stage::Slice, slice);
+            let (copy, _missed) = engine.serve_planned(&links, &mut transfer);
+            clock.add_modeled(Stage::Copy, copy);
+            clock.add_modeled(Stage::Compute, compute);
+            // same device frame the trainer reports: sample spread over
+            // the paper's worker count + slice + modeled copy + compute
+            Ok(sample.as_secs_f64() / PAPER_SAMPLER_WORKERS
+                + slice.as_secs_f64()
+                + copy.as_secs_f64()
+                + compute.as_secs_f64())
+        })
+        .unwrap_or_else(|e| panic!("serve sweep @ {rate} req/s: {e:#}"));
+        let (h1, m1) = engine.hits_misses();
+        let report = ServeReport::new(serve, &stats, h1 - h0, m1 - m0, transfer, clock);
+        let ms = 1e3;
+        println!(
+            "{rate:>9.0} {:>6} {:>8} {:>10.1} {:>9.3} {:>9.3} {:>9.3} {:>11.1} {:>7.1} {:>6.1}% {:>10.2}",
+            report.requests,
+            report.batches,
+            report.mean_batch,
+            report.latency.p50 * ms,
+            report.latency.p95 * ms,
+            report.latency.p99 * ms,
+            report.throughput_rps,
+            report.mean_queue_depth,
+            100.0 * report.cache_hits as f64
+                / (report.cache_hits + report.cache_misses).max(1) as f64,
+            report.transfer.h2d_bytes as f64 / (1 << 20) as f64,
+        );
+        entries.push(report.to_json());
+    }
+    engine.release(&mut mem);
+
+    if let Some(path) = args.get("json") {
+        let doc = json::bench_doc(
+            "serving_latency",
+            vec![
+                ("workload", Json::Str(format!("products-s x{scale}"))),
+                ("method", Json::Str(method.clone())),
+                ("topo", Json::Str(topo_text.clone())),
+                ("max_batch", Json::Num(max_batch as f64)),
+                ("max_wait_us", Json::Num(max_wait_us as f64)),
+                ("tier_upload_bytes", Json::Num(setup_stats.h2d_bytes as f64)),
+                ("smoke", Json::Bool(smoke)),
+                ("configs", json::arr(entries)),
+            ],
+        );
+        std::fs::write(path, doc.to_string_pretty())
+            .unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
+    }
+}

@@ -21,6 +21,7 @@ pub mod experiments;
 pub mod pipeline;
 pub mod runtime;
 pub mod sampling;
+pub mod serving;
 pub mod session;
 pub mod shard;
 pub mod graph;

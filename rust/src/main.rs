@@ -25,6 +25,11 @@ const TRAIN_FLAGS: &[(&str, &str)] = &[
     ("cache-period", "gns shorthand for --method gns:update-period=P"),
     ("shards", "shorthand for the method param shards=K[:part=hash|range|greedy]"),
     ("topo", "shorthand for the method param topo=preset[:key=value...] (pcie|nvlink|dist)"),
+    (
+        "serve",
+        "shorthand for the method param serve=RPS[:max-batch=N][:max-wait-us=U][:requests=N] \
+         — run the online inference lane after training (docs/SERVING.md)",
+    ),
 ];
 
 fn main() {
@@ -77,13 +82,17 @@ fn run(args: &Args) -> Result<()> {
                     spec = spec.with(key, value);
                 }
             }
-            // every method accepts shards= and topo=, so the shorthands
-            // need no method check; validation happens at factory build
+            // every method accepts shards=, topo= and serve=, so the
+            // shorthands need no method check; validation happens at
+            // factory/session build
             if let Some(v) = args.get("shards") {
                 spec = spec.with("shards", v);
             }
             if let Some(v) = args.get("topo") {
                 spec = spec.with("topo", v);
+            }
+            if let Some(v) = args.get("serve") {
+                spec = spec.with("serve", v);
             }
             println!(
                 "training {} ({spec}) on {dataset} (scale {}, {} epochs, {} worker(s))",
@@ -92,7 +101,13 @@ fn run(args: &Args) -> Result<()> {
                 opts.epochs,
                 opts.workers
             );
-            let r = experiments::harness::run_method(&dataset, &spec, &opts)?;
+            // built directly (not via run_method) so the session handle
+            // survives training for the optional serving lane below
+            let mut session = opts
+                .session(&dataset, &spec)
+                .build()
+                .map_err(anyhow::Error::new)?;
+            let r = session.run()?;
             if let Some(e) = &r.error {
                 bail!("run failed: {e}");
             }
@@ -154,6 +169,11 @@ fn run(args: &Args) -> Result<()> {
                     100.0 * r.local_fraction(),
                     r.modeled_inter_secs(),
                 );
+            }
+            // the online inference lane, when configured (--serve / serve=)
+            if session.serving().is_some() {
+                let report = session.serve()?;
+                print!("{}", report.render());
             }
             Ok(())
         }

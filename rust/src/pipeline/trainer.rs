@@ -33,7 +33,8 @@ use super::worker::{run_epoch_sampling, EpochPlan};
 use crate::device::{ComputeModel, DeviceMemory};
 use crate::features::Dataset;
 use crate::runtime::{micro_f1, Runtime, TrainState};
-use crate::sampling::{MiniBatch, Sampler};
+use crate::sampling::{validate_batch, MiniBatch, Sampler};
+use crate::serving::{effective_spec, generate_requests, run_open_loop, ServeReport, ServeSpec};
 use crate::shard::{ShardReport, ShardRouter, ShardSpec};
 use crate::tiering::{CachePolicy, SamplerPolicy, TieringEngine};
 use crate::topology::{HardwareTopology, LinkClock, LinkKind, TransferStats};
@@ -580,6 +581,9 @@ impl Trainer {
     /// Host slice (step 2) + modeled transfer (step 3) for the input block.
     /// One `GatherPlan` per lane partitions the input nodes into hit/miss
     /// runs; both the host gather and the transfer accounting read it.
+    /// Returns (measured slice, modeled copy) so the serving lane can
+    /// charge per-batch latency from the same accounting the epoch report
+    /// uses — callers that only need the clock totals ignore the value.
     fn assemble_x0(
         &mut self,
         lane: usize,
@@ -587,7 +591,7 @@ impl Trainer {
         links: &LinkClock,
         clock: &mut StageClock,
         transfer: &mut TransferStats,
-    ) {
+    ) -> (Duration, Duration) {
         let dim = self.dataset.features.dim();
         let t0 = Instant::now();
         let n = mb.input_nodes.len();
@@ -601,7 +605,8 @@ impl Trainer {
         let dirty_end = self.x0_dirty_elems.max(n * dim);
         self.x0_scratch[n * dim..dirty_end].fill(0.0);
         self.x0_dirty_elems = n * dim;
-        clock.add_measured(Stage::Slice, t0.elapsed());
+        let slice = t0.elapsed();
+        clock.add_measured(Stage::Slice, slice);
 
         let (t_copy, _missed) = self.lanes[lane].tiering.serve_planned(links, transfer);
         // block metadata (idx/w/self/labels) also crosses PCIe
@@ -612,7 +617,9 @@ impl Trainer {
             .sum::<u64>()
             + (mb.labels.len() * 4 + mb.mask.len() * 4) as u64;
         let t_meta = transfer.charge(links, LinkKind::H2d, meta_bytes);
-        clock.add_modeled(Stage::Copy, t_copy + t_meta);
+        let copy = t_copy + t_meta;
+        clock.add_modeled(Stage::Copy, copy);
+        (slice, copy)
     }
 
     /// Micro-F1 over up to `max_batches` batches of `targets`, using the
@@ -631,11 +638,16 @@ impl Trainer {
         let dim = self.dataset.features.dim();
         let mut correct_weighted = 0.0f64;
         let mut total = 0usize;
-        // evaluation reuses one recycled slot across its batches (returned
-        // to the pool at the end; dropped only on the error path)
+        // evaluation reuses one recycled slot across its batches; like the
+        // train drain loop and the serving lane, a failed batch must still
+        // return the slot to the pool before the error propagates
         let mut mb = self.buffer_pool.take();
+        let mut failed: Option<anyhow::Error> = None;
         for chunk in targets.chunks(batch).take(max_batches.max(1)) {
-            sampler.sample_batch_into(chunk, &self.dataset.labels, &mut mb)?;
+            if let Err(e) = sampler.sample_batch_into(chunk, &self.dataset.labels, &mut mb) {
+                failed = Some(e);
+                break;
+            }
             let n = mb.input_nodes.len();
             self.dataset
                 .features
@@ -643,15 +655,78 @@ impl Trainer {
             let dirty_end = self.x0_dirty_elems.max(n * dim);
             self.x0_scratch[n * dim..dirty_end].fill(0.0);
             self.x0_dirty_elems = n * dim;
-            let logits = self
-                .runtime
-                .eval_step(&self.state, &mb, &self.x0_scratch)?;
+            let logits = match self.runtime.eval_step(&self.state, &mb, &self.x0_scratch) {
+                Ok(logits) => logits,
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            };
             let f1 = micro_f1(&logits, &mb.labels, &mb.mask, self.runtime.meta.num_classes);
             correct_weighted += f1 * chunk.len() as f64;
             total += chunk.len();
         }
         self.buffer_pool.put(mb);
+        if let Some(e) = failed {
+            return Err(e);
+        }
         Ok(correct_weighted / total.max(1) as f64)
+    }
+
+    /// Online inference over `targets`: generate an open-loop request
+    /// stream from [`ServeSpec`], micro-batch it through the admission
+    /// queue, and run every dispatched batch down the *training* hot path
+    /// — leader sampler into the recycled `BufferPool` slot, lane 0's
+    /// `TieringEngine` as the hot-embedding cache, every byte charged
+    /// through the `LinkClock`. Per-request latency is the device frame
+    /// (`EpochReport::device_frame_stages`): measured sample time divided
+    /// by the paper's worker count, measured slice, modeled copy, modeled
+    /// compute.
+    pub fn serve(
+        &mut self,
+        sampler: &mut dyn Sampler,
+        targets: &[crate::graph::NodeId],
+        spec: &ServeSpec,
+        opts: &TrainOptions,
+    ) -> Result<ServeReport> {
+        anyhow::ensure!(!targets.is_empty(), "serve: no target nodes");
+        let spec = effective_spec(spec, self.runtime.meta.batch_size);
+        let links = LinkClock::new(opts.topology.clone());
+        let mut clock = StageClock::new();
+        let mut transfer = TransferStats::default();
+        // warm the serving tier: the sampler publishes its cache for the
+        // post-training "epoch" and lane 0 delta-uploads it — the same
+        // device-resident rows that fed training now serve inference, and
+        // the (delta) upload lands in this report's h2d ledger
+        sampler.begin_epoch(opts.epochs);
+        self.sync_cache(0, opts.epochs, &*sampler, &links, &mut clock, &mut transfer)?;
+        let (h0, m0) = self.lanes[0].tiering.hits_misses();
+        let requests = generate_requests(&spec, targets, opts.seed);
+        let shapes = self.runtime.meta.block_shapes();
+        let pool = Arc::clone(&self.buffer_pool);
+        let stats = run_open_loop(&spec, &requests, &pool, |slot, chunk| {
+            let t0 = Instant::now();
+            sampler.sample_batch_into(chunk, &self.dataset.labels, slot)?;
+            let sample = t0.elapsed();
+            clock.add_measured(Stage::Sample, sample);
+            if opts.paranoid_validate {
+                validate_batch(slot, &shapes).map_err(anyhow::Error::msg)?;
+            }
+            let (slice, copy) = self.assemble_x0(0, slot, &links, &mut clock, &mut transfer);
+            let compute = opts.compute_model.eval_step_time(&self.runtime.meta);
+            clock.add_modeled(Stage::Compute, compute);
+            let t1 = Instant::now();
+            self.runtime.eval_step(&self.state, slot, &self.x0_scratch)?;
+            clock.add_measured(Stage::Compute, t1.elapsed());
+            Ok(sample.as_secs_f64() / PAPER_SAMPLER_WORKERS
+                + slice.as_secs_f64()
+                + copy.as_secs_f64()
+                + compute.as_secs_f64())
+        })?;
+        // hit/miss deltas: the engine's counters are cumulative across
+        // training, the report covers only the serving window
+        let (h1, m1) = self.lanes[0].tiering.hits_misses();
+        Ok(ServeReport::new(spec, &stats, h1 - h0, m1 - m0, transfer, clock))
     }
 
     /// Peak bytes on the most-loaded shard device (the binding device

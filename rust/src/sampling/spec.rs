@@ -462,7 +462,26 @@ pub fn topo_spec(spec: &MethodSpec) -> anyhow::Result<crate::topology::HardwareT
         .map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))
 }
 
-const NS_PARAMS: &[ParamInfo] = &[CACHE_PARAM, SHARD_PARAM, TOPO_PARAM];
+/// The `serve=` parameter every method accepts: the online inference lane
+/// (grammar in [`crate::serving::ServeSpec`]). `off` (the default) leaves
+/// the session training-only; a rate turns on `Session::serve()`'s
+/// admission-queued micro-batching after training.
+pub const SERVE_PARAM: ParamInfo = ParamInfo {
+    key: "serve",
+    kind: ParamKind::Str,
+    default: "off",
+    help: "online inference lane: off|RPS[:max-batch=N][:max-wait-us=U][:requests=N]",
+};
+
+/// Parse + validate a spec's `serve=` parameter. Shared by every builder
+/// (build-time rejection of bad serving configs) and by the session layer
+/// that stands up the serving lane. `None` means serving is off.
+pub fn serve_spec(spec: &MethodSpec) -> anyhow::Result<Option<crate::serving::ServeSpec>> {
+    crate::serving::ServeSpec::parse(spec.str_or("serve", SERVE_PARAM.default))
+        .map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))
+}
+
+const NS_PARAMS: &[ParamInfo] = &[CACHE_PARAM, SHARD_PARAM, TOPO_PARAM, SERVE_PARAM];
 
 struct NsBuilder;
 
@@ -491,6 +510,7 @@ impl MethodBuilder for NsBuilder {
         cache_policy_spec(spec)?;
         shard_spec(spec)?;
         topo_spec(spec)?;
+        serve_spec(spec)?;
         let graph = ctx.graph.clone();
         let shapes = ctx.shapes.clone();
         let seed = ctx.seed;
@@ -512,6 +532,7 @@ const LADIES_PARAMS: &[ParamInfo] = &[
     CACHE_PARAM,
     SHARD_PARAM,
     TOPO_PARAM,
+    SERVE_PARAM,
 ];
 
 impl MethodBuilder for LadiesBuilder {
@@ -552,6 +573,7 @@ impl MethodBuilder for LadiesBuilder {
         cache_policy_spec(spec)?;
         shard_spec(spec)?;
         topo_spec(spec)?;
+        serve_spec(spec)?;
         let s_layer = spec.usize_or("s-layer", 512);
         anyhow::ensure!(s_layer >= 1, "ladies: s-layer must be >= 1");
         let graph = ctx.graph.clone();
@@ -586,6 +608,7 @@ const LAZYGCN_PARAMS: &[ParamInfo] = &[
     CACHE_PARAM,
     SHARD_PARAM,
     TOPO_PARAM,
+    SERVE_PARAM,
 ];
 
 impl MethodBuilder for LazyGcnBuilder {
@@ -613,6 +636,7 @@ impl MethodBuilder for LazyGcnBuilder {
         cache_policy_spec(spec)?;
         shard_spec(spec)?;
         topo_spec(spec)?;
+        serve_spec(spec)?;
         let recycle_period = spec.usize_or("recycle-period", 2);
         let rho = spec.f64_or("rho", 1.1);
         anyhow::ensure!(recycle_period >= 1, "lazygcn: recycle-period must be >= 1");
@@ -669,6 +693,7 @@ const GNS_PARAMS: &[ParamInfo] = &[
     CACHE_PARAM,
     SHARD_PARAM,
     TOPO_PARAM,
+    SERVE_PARAM,
 ];
 
 impl MethodBuilder for GnsBuilder {
@@ -696,6 +721,7 @@ impl MethodBuilder for GnsBuilder {
         cache_policy_spec(spec)?;
         shard_spec(spec)?;
         topo_spec(spec)?;
+        serve_spec(spec)?;
         let cache_fraction = spec.f64_or("cache-fraction", 0.01);
         let update_period = spec.usize_or("update-period", 1);
         anyhow::ensure!(

@@ -1,0 +1,481 @@
+//! The open-loop serving engine: seeded request generation, the
+//! admission queue that micro-batches pending requests, and the
+//! latency/throughput roll-up (`ServeReport`).
+//!
+//! The engine is deliberately split from `Trainer::serve` (which owns the
+//! real sampler/tiering/runtime hot path): everything here is pure
+//! simulation over a virtual clock plus a `service` closure that returns
+//! how many *modeled* seconds one micro-batch took. That keeps the queue
+//! semantics unit-testable with hand-built arrival patterns and constant
+//! service times (see the tests below and docs/SERVING.md).
+//!
+//! Queue semantics (open loop, single serving lane):
+//!
+//! * requests arrive at their generated times regardless of completions
+//!   (open loop — arrivals never slow down when the server falls behind);
+//! * a dispatch happens when the server is free AND either `max_batch`
+//!   requests are pending or the oldest pending request has waited
+//!   `max_wait`;
+//! * a micro-batch's requests all complete together at
+//!   `dispatch + service`; per-request latency = completion − arrival.
+
+use anyhow::{ensure, Context, Result};
+
+use super::percentile::{summarize, LatencySummary};
+use super::spec::ServeSpec;
+use crate::graph::NodeId;
+use crate::pipeline::BufferPool;
+use crate::sampling::MiniBatch;
+use crate::topology::{LinkKind, TransferStats};
+use crate::util::fmt_bytes;
+use crate::util::json::{self, num, Json};
+use crate::util::rng::Pcg;
+use crate::util::timer::StageClock;
+
+/// The serving subsystem's own PRNG stream (per-subsystem seeded streams,
+/// ADR-003 style): `"SRVE"` in ASCII. Distinct from the trainer's epoch
+/// shuffle stream (0x7247), the runtime init stream (0x1417) and the
+/// `Pcg::new` default, so configuring a serving lane can never perturb a
+/// training run's draw sequences.
+pub const SERVE_STREAM: u64 = 0x5352_5645;
+
+/// One synthetic request: virtual arrival time (seconds) + target node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub arrival: f64,
+    pub target: NodeId,
+}
+
+/// Generate `spec.requests` open-loop requests: Poisson arrivals at
+/// `spec.rate` req/s (exponential inter-arrival times), targets drawn
+/// uniformly from `pool`. Deterministic in `seed` via [`SERVE_STREAM`].
+pub fn generate_requests(spec: &ServeSpec, pool: &[NodeId], seed: u64) -> Vec<Request> {
+    assert!(!pool.is_empty(), "serve: empty target pool");
+    let mut rng = Pcg::with_stream(seed, SERVE_STREAM);
+    let mut t = 0.0f64;
+    (0..spec.requests)
+        .map(|_| {
+            t += -(1.0 - rng.gen_f64()).ln() / spec.rate;
+            Request { arrival: t, target: pool[rng.gen_range(pool.len())] }
+        })
+        .collect()
+}
+
+/// What one [`run_open_loop`] pass observed, before the report roll-up.
+#[derive(Debug, Clone, Default)]
+pub struct OpenLoopStats {
+    /// Per-request latency (completion − arrival), virtual seconds, in
+    /// arrival order.
+    pub latencies: Vec<f64>,
+    /// Micro-batches dispatched.
+    pub batches: usize,
+    /// Σ over dispatches of the pending-request count at dispatch time.
+    pub depth_sum: u64,
+    /// Deepest the admission queue ever got at a dispatch.
+    pub max_queue_depth: usize,
+    /// Virtual completion time of the last micro-batch.
+    pub completion: f64,
+    /// Total service seconds across micro-batches (server busy time).
+    pub service_secs: f64,
+}
+
+impl OpenLoopStats {
+    pub fn mean_batch(&self) -> f64 {
+        self.latencies.len() as f64 / self.batches.max(1) as f64
+    }
+
+    pub fn mean_queue_depth(&self) -> f64 {
+        self.depth_sum as f64 / self.batches.max(1) as f64
+    }
+
+    /// Sustained rate: requests completed per virtual second of makespan.
+    pub fn throughput_rps(&self) -> f64 {
+        self.latencies.len() as f64 / self.completion.max(f64::MIN_POSITIVE)
+    }
+}
+
+/// Drive `requests` (arrival-sorted) through the admission queue. Each
+/// dispatched micro-batch calls `service(slot, targets)` with the one
+/// recycled [`BufferPool`] slot the lane owns; the closure does the real
+/// work (sample → plan → slice → charge links) and returns the modeled
+/// service seconds for the batch.
+///
+/// Hardening (PR 2's drain-loop rule, applied to the serve path): a
+/// failed micro-batch closes the queue — the slot goes **back to the
+/// pool** before the error propagates, so a serving error never leaks
+/// the recycled buffer.
+pub fn run_open_loop(
+    spec: &ServeSpec,
+    requests: &[Request],
+    buffers: &BufferPool,
+    mut service: impl FnMut(&mut MiniBatch, &[NodeId]) -> Result<f64>,
+) -> Result<OpenLoopStats> {
+    ensure!(spec.max_batch >= 1, "serve max-batch must be >= 1");
+    debug_assert!(requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    let n = requests.len();
+    let max_wait = spec.max_wait.as_secs_f64();
+    let mut stats = OpenLoopStats { latencies: Vec::with_capacity(n), ..Default::default() };
+    // the lane's single recycled slot — taken once, returned on every exit
+    let mut slot = buffers.take();
+    let mut chunk: Vec<NodeId> = Vec::with_capacity(spec.max_batch);
+    let mut now = 0.0f64; // when the server is next free
+    let mut i = 0usize;
+    while i < n {
+        let oldest = requests[i].arrival;
+        // dispatch once the server is free AND (the batch is full, or the
+        // oldest pending request has waited out max_wait)
+        let mut dispatch = now.max(oldest);
+        let full = i + spec.max_batch - 1;
+        let filled_by = |t: f64| full < n && requests[full].arrival <= t;
+        if !filled_by(dispatch) {
+            let deadline = oldest + max_wait;
+            if deadline > dispatch {
+                // idle until the batch fills or the oldest times out
+                dispatch = if filled_by(deadline) { requests[full].arrival } else { deadline };
+            }
+        }
+        let mut j = i;
+        chunk.clear();
+        while j < n && j - i < spec.max_batch && requests[j].arrival <= dispatch {
+            chunk.push(requests[j].target);
+            j += 1;
+        }
+        // queue depth at dispatch counts everything arrived-but-unserved,
+        // including overflow beyond this batch (the saturation signal)
+        let mut pending = j;
+        while pending < n && requests[pending].arrival <= dispatch {
+            pending += 1;
+        }
+        stats.depth_sum += (pending - i) as u64;
+        stats.max_queue_depth = stats.max_queue_depth.max(pending - i);
+        let secs = match service(&mut slot, &chunk) {
+            Ok(secs) => secs,
+            Err(e) => {
+                buffers.put(slot);
+                return Err(e).with_context(|| {
+                    format!("serve micro-batch {} failed; queue closed", stats.batches)
+                });
+            }
+        };
+        let done = dispatch + secs;
+        for r in &requests[i..j] {
+            stats.latencies.push(done - r.arrival);
+        }
+        stats.service_secs += secs;
+        stats.batches += 1;
+        now = done;
+        i = j;
+    }
+    buffers.put(slot);
+    stats.completion = now;
+    Ok(stats)
+}
+
+/// Everything `Session::serve()` reports: the latency distribution,
+/// sustained throughput, queue behavior, and — reusing the tiering and
+/// topology ledgers rather than a parallel accounting path — the serving
+/// cache hit rate plus per-link byte/seconds totals.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub spec: ServeSpec,
+    pub requests: usize,
+    pub batches: usize,
+    pub mean_batch: f64,
+    /// Latency roll-up in **seconds** (render/JSON convert to ms).
+    pub latency: LatencySummary,
+    pub throughput_rps: f64,
+    pub mean_queue_depth: f64,
+    pub max_queue_depth: usize,
+    /// Serving-window hits/misses of the reused `DeviceFeatureCache`.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Per-link bytes + modeled seconds, charged through `LinkClock`.
+    pub transfer: TransferStats,
+    /// Measured vs modeled stage breakdown of the serving window.
+    pub clock: StageClock,
+}
+
+impl ServeReport {
+    pub fn new(
+        spec: ServeSpec,
+        stats: &OpenLoopStats,
+        cache_hits: u64,
+        cache_misses: u64,
+        transfer: TransferStats,
+        clock: StageClock,
+    ) -> ServeReport {
+        ServeReport {
+            requests: stats.latencies.len(),
+            batches: stats.batches,
+            mean_batch: stats.mean_batch(),
+            latency: summarize(&stats.latencies),
+            throughput_rps: stats.throughput_rps(),
+            mean_queue_depth: stats.mean_queue_depth(),
+            max_queue_depth: stats.max_queue_depth,
+            spec,
+            cache_hits,
+            cache_misses,
+            transfer,
+            clock,
+        }
+    }
+
+    /// Fraction of feature rows served from the device-resident tier.
+    /// NaN when the window saw no rows (mirrors `RunResult`).
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache_hits as f64 / (self.cache_hits + self.cache_misses) as f64
+    }
+
+    /// One config entry for `BENCH_serving.json` / structured logs.
+    pub fn to_json(&self) -> Json {
+        let ms = 1e3;
+        let total = (self.cache_hits + self.cache_misses).max(1);
+        json::obj(vec![
+            ("offered_rps", num(self.spec.rate)),
+            ("max_batch", num(self.spec.max_batch as f64)),
+            ("max_wait_us", num(self.spec.max_wait.as_micros() as f64)),
+            ("requests", num(self.requests as f64)),
+            ("batches", num(self.batches as f64)),
+            ("mean_batch", num(self.mean_batch)),
+            ("p50_ms", num(self.latency.p50 * ms)),
+            ("p95_ms", num(self.latency.p95 * ms)),
+            ("p99_ms", num(self.latency.p99 * ms)),
+            ("mean_ms", num(self.latency.mean * ms)),
+            ("max_ms", num(self.latency.max * ms)),
+            ("throughput_rps", num(self.throughput_rps)),
+            ("mean_queue_depth", num(self.mean_queue_depth)),
+            ("max_queue_depth", num(self.max_queue_depth as f64)),
+            ("cache_hits", num(self.cache_hits as f64)),
+            ("cache_misses", num(self.cache_misses as f64)),
+            ("hit_rate", num(self.cache_hits as f64 / total as f64)),
+            ("h2d_bytes", num(self.transfer.h2d_bytes as f64)),
+            ("d2d_bytes", num(self.transfer.d2d_bytes as f64)),
+            ("inter_bytes", num(self.transfer.inter_bytes as f64)),
+            ("modeled_h2d_secs", num(self.transfer.modeled(LinkKind::H2d).as_secs_f64())),
+            ("modeled_d2d_secs", num(self.transfer.modeled(LinkKind::D2d).as_secs_f64())),
+            ("modeled_inter_secs", num(self.transfer.modeled(LinkKind::Inter).as_secs_f64())),
+        ])
+    }
+
+    /// The CLI block `--serve` prints after training.
+    pub fn render(&self) -> String {
+        let ms = 1e3;
+        let hit_pct = 100.0 * self.cache_hits as f64
+            / (self.cache_hits + self.cache_misses).max(1) as f64;
+        let mut out = format!(
+            "serving: {} req @ {} req/s offered — {} micro-batches (mean {:.1} req/batch)\n",
+            self.requests, self.spec.rate, self.batches, self.mean_batch
+        );
+        out.push_str(&format!(
+            "  latency p50 {:.3}ms  p95 {:.3}ms  p99 {:.3}ms  mean {:.3}ms  max {:.3}ms\n",
+            self.latency.p50 * ms,
+            self.latency.p95 * ms,
+            self.latency.p99 * ms,
+            self.latency.mean * ms,
+            self.latency.max * ms,
+        ));
+        out.push_str(&format!(
+            "  throughput {:.1} req/s · queue depth mean {:.1} / max {} · cache hit {:.1}%\n",
+            self.throughput_rps, self.mean_queue_depth, self.max_queue_depth, hit_pct,
+        ));
+        for (kind, bytes, modeled) in self.transfer.links() {
+            out.push_str(&format!(
+                "  {:<5} {:>12} modeled {:.4}s\n",
+                kind.name(),
+                fmt_bytes(bytes),
+                modeled.as_secs_f64(),
+            ));
+        }
+        out
+    }
+}
+
+/// Clamp helper used by the trainer and the bench: the effective spec a
+/// lane actually runs, with `max_batch` capped at the slot capacity.
+pub fn effective_spec(spec: &ServeSpec, batch_capacity: usize) -> ServeSpec {
+    ServeSpec { max_batch: spec.max_batch.min(batch_capacity.max(1)), ..spec.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Duration;
+
+    use super::*;
+
+    fn req(arrival: f64) -> Request {
+        Request { arrival, target: 0 }
+    }
+
+    fn spec(rate: f64, max_batch: usize, max_wait_us: u64, requests: usize) -> ServeSpec {
+        ServeSpec {
+            rate,
+            max_batch,
+            max_wait: Duration::from_micros(max_wait_us),
+            requests,
+        }
+    }
+
+    #[test]
+    fn generator_is_deterministic_and_stream_isolated() {
+        let pool: Vec<NodeId> = (0..100).collect();
+        let s = spec(1000.0, 8, 1000, 256);
+        let a = generate_requests(&s, &pool, 42);
+        let b = generate_requests(&s, &pool, 42);
+        assert_eq!(a, b);
+        let c = generate_requests(&s, &pool, 43);
+        assert_ne!(a, c);
+        // arrivals are sorted and strictly positive
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(a[0].arrival > 0.0);
+        // mean inter-arrival ≈ 1/rate for a long stream
+        let long = generate_requests(&spec(1000.0, 8, 1000, 20_000), &pool, 7);
+        let mean = long.last().unwrap().arrival / long.len() as f64;
+        assert!((mean - 1e-3).abs() < 1e-4, "mean inter-arrival {mean}");
+        // the serving stream is not the trainer's epoch-shuffle stream
+        let mut serve_rng = Pcg::with_stream(9, SERVE_STREAM);
+        let mut train_rng = Pcg::with_stream(9, 0x7247);
+        assert_ne!(
+            (0..8).map(|_| serve_rng.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| train_rng.next_u64()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn low_load_latency_is_exactly_wait_plus_service() {
+        // inter-arrivals (1s) dwarf max_wait + service, so every batch
+        // holds one request that waits out the full max_wait:
+        // latency = max_wait + service, exactly, for every request.
+        let requests: Vec<Request> = (0..64).map(|i| req(1.0 + i as f64)).collect();
+        let s = spec(1.0, 4, 500, 64);
+        let buffers = BufferPool::new();
+        let service = 2e-4;
+        let stats = run_open_loop(&s, &requests, &buffers, |_, chunk| {
+            assert_eq!(chunk.len(), 1);
+            Ok(service)
+        })
+        .unwrap();
+        let expect = 500e-6 + service;
+        assert_eq!(stats.batches, 64);
+        for &l in &stats.latencies {
+            assert!((l - expect).abs() < 1e-12, "latency {l} vs {expect}");
+        }
+        assert_eq!(buffers.idle(), 1);
+    }
+
+    #[test]
+    fn saturation_fills_batches_and_builds_queue() {
+        // all requests arrive (almost) immediately; service is the
+        // bottleneck → every batch is full and the queue drains linearly
+        let pool = [0u32];
+        let s = spec(1e9, 4, 1000, 32);
+        let requests = generate_requests(&s, &pool, 3);
+        let buffers = BufferPool::new();
+        let stats =
+            run_open_loop(&s, &requests, &buffers, |_, chunk| Ok(chunk.len() as f64 * 1e-3))
+                .unwrap();
+        assert_eq!(stats.batches, 8);
+        assert_eq!(stats.mean_batch(), 4.0);
+        assert!(stats.max_queue_depth >= 8, "depth {}", stats.max_queue_depth);
+        // open loop: later requests wait behind earlier service
+        let first = stats.latencies[0];
+        let last = *stats.latencies.last().unwrap();
+        assert!(last > first * 2.0, "{first} vs {last}");
+    }
+
+    #[test]
+    fn hand_built_arrivals_follow_the_dispatch_rule() {
+        // three at t=0 with max_batch=2: first batch dispatches full at 0,
+        // second waits for fill until the 1.0s deadline; the straggler at
+        // t=10 times out alone at 11.0.
+        let requests = [req(0.0), req(0.0), req(0.0), req(10.0)];
+        let s = spec(1.0, 2, 1_000_000, 4);
+        let buffers = BufferPool::new();
+        let stats = run_open_loop(&s, &requests, &buffers, |_, _| Ok(0.5)).unwrap();
+        assert_eq!(stats.batches, 3);
+        let want = [0.5, 0.5, 1.5, 1.5];
+        for (got, want) in stats.latencies.iter().zip(want) {
+            assert!((got - want).abs() < 1e-12, "{:?}", stats.latencies);
+        }
+        assert_eq!(stats.max_queue_depth, 3);
+        assert!((stats.completion - 11.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failed_micro_batch_closes_queue_and_returns_slot() {
+        // PR 2's hardening on the serve path: exhaust the pool into the
+        // lane, fail a batch, and the slot must come back — then a rerun
+        // recovers, reusing the same slot (the pool never grows).
+        let pool = [0u32];
+        let s = spec(1e6, 2, 100, 16);
+        let requests = generate_requests(&s, &pool, 1);
+        let buffers = BufferPool::new();
+        buffers.put(MiniBatch::default());
+        assert_eq!(buffers.idle(), 1);
+        let mut calls = 0;
+        let err = run_open_loop(&s, &requests, &buffers, |_, _| {
+            calls += 1;
+            if calls >= 2 {
+                anyhow::bail!("injected serve failure")
+            }
+            Ok(1e-4)
+        })
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("queue closed"), "{err:#}");
+        assert!(format!("{err:#}").contains("injected serve failure"), "{err:#}");
+        // the slot came back despite the error...
+        assert_eq!(buffers.idle(), 1);
+        // ...and the lane recovers on the next run without allocating a
+        // second slot
+        let stats = run_open_loop(&s, &requests, &buffers, |_, _| Ok(1e-4)).unwrap();
+        assert_eq!(stats.latencies.len(), 16);
+        assert_eq!(buffers.idle(), 1);
+    }
+
+    #[test]
+    fn higher_offered_load_never_lowers_mean_latency() {
+        let pool = [0u32];
+        let buffers = BufferPool::new();
+        let mut prev = 0.0f64;
+        for rate in [100.0, 1000.0, 10_000.0] {
+            let s = spec(rate, 8, 500, 512);
+            let requests = generate_requests(&s, &pool, 21);
+            let stats = run_open_loop(&s, &requests, &buffers, |_, chunk| {
+                Ok(1e-4 + chunk.len() as f64 * 1e-4)
+            })
+            .unwrap();
+            let mean = stats.latencies.iter().sum::<f64>() / stats.latencies.len() as f64;
+            assert!(mean >= prev * 0.99, "rate {rate}: mean {mean} < prev {prev}");
+            prev = mean;
+        }
+    }
+
+    #[test]
+    fn report_rolls_up_stats() {
+        let s = spec(1000.0, 4, 1000, 8);
+        let requests: Vec<Request> = (0..8).map(|i| req(i as f64 * 1e-3)).collect();
+        let buffers = BufferPool::new();
+        let stats = run_open_loop(&s, &requests, &buffers, |_, _| Ok(1e-3)).unwrap();
+        let report =
+            ServeReport::new(s, &stats, 30, 10, TransferStats::default(), StageClock::new());
+        assert_eq!(report.requests, 8);
+        assert!((report.cache_hit_rate() - 0.75).abs() < 1e-12);
+        assert!(report.latency.p50 <= report.latency.p95);
+        assert!(report.latency.p95 <= report.latency.p99);
+        assert!(report.throughput_rps > 0.0);
+        let j = report.to_json();
+        assert_eq!(j.get("requests").and_then(|v| v.as_f64()), Some(8.0));
+        assert!(j.get("p99_ms").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert_eq!(j.get("hit_rate").and_then(|v| v.as_f64()), Some(0.75));
+        let text = report.render();
+        assert!(text.contains("p99"), "{text}");
+        assert!(text.contains("req/s"), "{text}");
+    }
+
+    #[test]
+    fn effective_spec_clamps_max_batch() {
+        let s = spec(100.0, 64, 100, 8);
+        assert_eq!(effective_spec(&s, 16).max_batch, 16);
+        assert_eq!(effective_spec(&s, 256).max_batch, 64);
+        assert_eq!(effective_spec(&s, 0).max_batch, 1);
+    }
+}

@@ -1,0 +1,37 @@
+//! Online inference serving lane (docs/SERVING.md).
+//!
+//! The paper motivates GNS with serving-shaped workloads — social
+//! recommendation, fraud detection, graph search — where a trained model
+//! answers a stream of per-node queries, not an offline epoch loop. This
+//! subsystem turns a trained `Session` into that lane by *reusing* the
+//! training machinery rather than duplicating it:
+//!
+//! * requests come from an open-loop synthetic generator on the serving
+//!   subsystem's own seeded PRNG stream ([`SERVE_STREAM`]) — adding a
+//!   `serve=` config never perturbs training draw sequences;
+//! * an admission queue coalesces pending requests into micro-batches
+//!   (`max_batch` / `max_wait_us`) and drives each through the recycled
+//!   hot path: `Sampler::sample_batch_into` into the one
+//!   `pipeline::BufferPool` slot the lane owns;
+//! * the `tiering` `DeviceFeatureCache`/`GatherPlan` machinery is the
+//!   hot-embedding serving cache, and every feature byte is charged
+//!   through `topology::LinkClock` into the same `TransferStats` ledger
+//!   training uses — no parallel accounting path;
+//! * the result is a [`ServeReport`]: exact nearest-rank p50/p95/p99
+//!   latency ([`percentile`]), throughput, queue depth, cache hit rate
+//!   and per-link bytes, surfaced via `Session::serve()`, the `serve=`
+//!   method param, `SessionBuilder::serving` and the CLI `--serve` flag.
+//!
+//! `benches/serving_latency.rs` sweeps offered load over this engine and
+//! emits `BENCH_serving.json`.
+
+pub mod engine;
+pub mod percentile;
+pub mod spec;
+
+pub use engine::{
+    effective_spec, generate_requests, run_open_loop, OpenLoopStats, Request, ServeReport,
+    SERVE_STREAM,
+};
+pub use percentile::{percentile, summarize, LatencySummary};
+pub use spec::ServeSpec;

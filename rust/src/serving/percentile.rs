@@ -1,0 +1,143 @@
+//! Exact nearest-rank percentiles for the serving latency report.
+//!
+//! Definition: the q-th percentile of n samples is the smallest sample x
+//! such that at least `ceil(q/100 * n)` samples are `<= x` — i.e. the
+//! element at 1-indexed rank `ceil(q/100 * n)` of the sorted data. No
+//! interpolation, so small-sample behavior (n < 100) is well defined and
+//! every reported percentile is a latency that actually occurred: p99 of
+//! 10 samples is the maximum, p50 of `[a]` is `a`.
+
+/// 1-indexed nearest rank for `q` ∈ (0, 100] over `n` samples:
+/// `ceil(q/100 * n)`, clamped to `[1, n]` against float round-off.
+pub fn rank(n: usize, q: f64) -> usize {
+    debug_assert!(n > 0);
+    ((q / 100.0 * n as f64).ceil() as usize).clamp(1, n)
+}
+
+/// Exact nearest-rank percentile of `samples` (need not be sorted).
+/// `q` must be in (0, 100]. Returns NaN for an empty slice.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    assert!(q > 0.0 && q <= 100.0, "percentile q={q} outside (0, 100]");
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable_by(f64::total_cmp);
+    sorted[rank(samples.len(), q) - 1]
+}
+
+/// The latency roll-up every `ServeReport` carries, in one sort pass.
+/// All fields are in the unit of the input samples (seconds here).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+/// Summarize `samples`; NaN fields for an empty slice.
+pub fn summarize(samples: &[f64]) -> LatencySummary {
+    if samples.is_empty() {
+        return LatencySummary {
+            p50: f64::NAN,
+            p95: f64::NAN,
+            p99: f64::NAN,
+            mean: f64::NAN,
+            max: f64::NAN,
+        };
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable_by(f64::total_cmp);
+    let n = sorted.len();
+    LatencySummary {
+        p50: sorted[rank(n, 50.0) - 1],
+        p95: sorted[rank(n, 95.0) - 1],
+        p99: sorted[rank(n, 99.0) - 1],
+        mean: sorted.iter().sum::<f64>() / n as f64,
+        max: sorted[n - 1],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    /// Naive reference straight from the definition: the smallest sample
+    /// x such that at least ceil(q/100 * n) samples are <= x.
+    fn naive(samples: &[f64], q: f64) -> f64 {
+        let need = rank(samples.len(), q);
+        let mut sorted = samples.to_vec();
+        sorted.sort_unstable_by(f64::total_cmp);
+        *sorted
+            .iter()
+            .find(|&&x| samples.iter().filter(|&&y| y <= x).count() >= need)
+            .unwrap()
+    }
+
+    #[test]
+    fn closed_form_uniform_1_to_100() {
+        // 1..=100 shuffled: the q-th percentile is exactly q
+        let mut v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        Pcg::new(7).shuffle(&mut v);
+        for q in [1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile(&v, q), q, "q={q}");
+        }
+        let s = summarize(&v);
+        assert_eq!((s.p50, s.p95, s.p99, s.max), (50.0, 95.0, 99.0, 100.0));
+        assert!((s.mean - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn small_sample_edge_cases() {
+        // n=1: every percentile is the single sample
+        for q in [1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[42.0], q), 42.0);
+        }
+        // n=2: rank(2, 50) = ceil(1.0) = 1 → the minimum
+        assert_eq!(percentile(&[10.0, 20.0], 50.0), 10.0);
+        assert_eq!(percentile(&[10.0, 20.0], 51.0), 20.0);
+        // n=4: p50 → 2nd, p95/p99 → 4th (the max, since ceil(3.8)=4)
+        let v = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&v, 50.0), 2.0);
+        assert_eq!(percentile(&v, 95.0), 4.0);
+        assert_eq!(percentile(&v, 99.0), 4.0);
+        // n=99 (< 100): p99 → rank ceil(98.01) = 99 → the max
+        let v: Vec<f64> = (1..=99).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 99.0), 99.0);
+        assert_eq!(percentile(&v, 50.0), 50.0);
+    }
+
+    #[test]
+    fn matches_naive_reference_on_random_data() {
+        let mut rng = Pcg::new(123);
+        for n in [1usize, 2, 3, 5, 17, 64, 99, 100, 101, 1000] {
+            let v: Vec<f64> = (0..n).map(|_| rng.gen_f64() * 1e3).collect();
+            for q in [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+                assert_eq!(percentile(&v, q), naive(&v, q), "n={n} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_in_q_and_bounded_by_max() {
+        let mut rng = Pcg::new(5);
+        let v: Vec<f64> = (0..257).map(|_| rng.gen_f64()).collect();
+        let mut prev = f64::NEG_INFINITY;
+        for q in 1..=100 {
+            let p = percentile(&v, q as f64);
+            assert!(p >= prev, "q={q}");
+            prev = p;
+        }
+        assert_eq!(prev, v.iter().copied().fold(f64::NEG_INFINITY, f64::max));
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        assert!(percentile(&[], 50.0).is_nan());
+        let s = summarize(&[]);
+        assert!(s.p50.is_nan() && s.p99.is_nan() && s.mean.is_nan());
+    }
+}

@@ -1,0 +1,175 @@
+//! The `serve=` parameter: configuration of the online inference lane.
+//!
+//! Grammar (docs/SERVING.md, docs/API.md):
+//!
+//! ```text
+//! serve := off | RPS[:max-batch=N][:max-wait-us=U][:requests=N]
+//! ```
+//!
+//! `RPS` is the offered load of the open-loop request generator in
+//! requests/second against the modeled clock. `max-batch` caps how many
+//! pending requests one admission-queue dispatch may coalesce (clamped to
+//! the artifact's batch size at serve time), `max-wait-us` bounds how
+//! long the oldest admitted request may sit in the queue before the
+//! batch dispatches anyway, and `requests` sizes the synthetic request
+//! stream. `off` (the default) disables serving entirely.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Result};
+
+/// Parsed `serve=` configuration. See the module docs for the grammar.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSpec {
+    /// Offered load of the open-loop generator, requests/second.
+    pub rate: f64,
+    /// Admission-queue micro-batch cap (clamped to the artifact batch
+    /// size when the lane runs).
+    pub max_batch: usize,
+    /// Longest the oldest pending request may wait before its batch
+    /// dispatches regardless of fill.
+    pub max_wait: Duration,
+    /// Length of the synthetic request stream.
+    pub requests: usize,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            rate: 1000.0,
+            max_batch: 64,
+            max_wait: Duration::from_micros(1000),
+            requests: 512,
+        }
+    }
+}
+
+impl ServeSpec {
+    /// Parse the `serve=` grammar. `Ok(None)` means serving is off.
+    pub fn parse(text: &str) -> Result<Option<ServeSpec>> {
+        let text = text.trim();
+        if text == "off" {
+            return Ok(None);
+        }
+        let mut parts = text.split(':');
+        let head = parts.next().unwrap_or("").trim();
+        let rate: f64 = head.parse().map_err(|_| {
+            anyhow::anyhow!(
+                "serve rate {head:?} is not a number \
+                 (grammar: off | RPS[:max-batch=N][:max-wait-us=U][:requests=N])"
+            )
+        })?;
+        ensure!(rate.is_finite() && rate > 0.0, "serve rate must be > 0, got {rate}");
+        let mut spec = ServeSpec { rate, ..ServeSpec::default() };
+        let mut seen: BTreeSet<&str> = BTreeSet::new();
+        for opt in parts {
+            let opt = opt.trim();
+            let Some((key, value)) = opt.split_once('=') else {
+                bail!("serve option {opt:?} is not key=value");
+            };
+            let (key, value) = (key.trim(), value.trim());
+            ensure!(seen.insert(key), "duplicate serve option {key:?}");
+            match key {
+                "max-batch" => {
+                    let n: usize = value.parse().map_err(|_| {
+                        anyhow::anyhow!("serve max-batch {value:?} is not an integer")
+                    })?;
+                    ensure!(n >= 1, "serve max-batch must be >= 1");
+                    spec.max_batch = n;
+                }
+                "max-wait-us" => {
+                    let us: u64 = value.parse().map_err(|_| {
+                        anyhow::anyhow!("serve max-wait-us {value:?} is not an integer")
+                    })?;
+                    spec.max_wait = Duration::from_micros(us);
+                }
+                "requests" => {
+                    let n: usize = value.parse().map_err(|_| {
+                        anyhow::anyhow!("serve requests {value:?} is not an integer")
+                    })?;
+                    ensure!(n >= 1, "serve requests must be >= 1");
+                    spec.requests = n;
+                }
+                other => bail!(
+                    "unknown serve option {other:?} (valid: max-batch, max-wait-us, requests)"
+                ),
+            }
+        }
+        Ok(Some(spec))
+    }
+}
+
+impl fmt::Display for ServeSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:max-batch={}:max-wait-us={}:requests={}",
+            self.rate,
+            self.max_batch,
+            self.max_wait.as_micros(),
+            self.requests
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_means_none() {
+        assert_eq!(ServeSpec::parse("off").unwrap(), None);
+        assert_eq!(ServeSpec::parse("  off  ").unwrap(), None);
+    }
+
+    #[test]
+    fn bare_rate_uses_defaults() {
+        let s = ServeSpec::parse("2000").unwrap().unwrap();
+        assert_eq!(s.rate, 2000.0);
+        assert_eq!(s.max_batch, ServeSpec::default().max_batch);
+        assert_eq!(s.max_wait, ServeSpec::default().max_wait);
+        assert_eq!(s.requests, ServeSpec::default().requests);
+    }
+
+    #[test]
+    fn full_grammar_parses() {
+        let s = ServeSpec::parse("500.5:max-batch=16:max-wait-us=250:requests=64")
+            .unwrap()
+            .unwrap();
+        assert_eq!(s.rate, 500.5);
+        assert_eq!(s.max_batch, 16);
+        assert_eq!(s.max_wait, Duration::from_micros(250));
+        assert_eq!(s.requests, 64);
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for text in ["1000", "250:max-batch=8", "4000:max-wait-us=0:requests=32"] {
+            let s = ServeSpec::parse(text).unwrap().unwrap();
+            let again = ServeSpec::parse(&s.to_string()).unwrap().unwrap();
+            assert_eq!(again, s, "{text}");
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_serve_in_the_message() {
+        for bad in [
+            "fast",
+            "0",
+            "-5",
+            "inf",
+            "100:max-batch=0",
+            "100:max-batch=x",
+            "100:max-wait-us=-1",
+            "100:requests=0",
+            "100:burst=9",
+            "100:max-batch",
+            "100:max-batch=4:max-batch=8",
+        ] {
+            let err = ServeSpec::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("serve"), "{bad}: {err}");
+        }
+    }
+}

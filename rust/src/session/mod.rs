@@ -34,10 +34,11 @@ use crate::graph::{CsrGraph, NodeId};
 use crate::pipeline::{EpochReport, TrainOptions, Trainer};
 use crate::runtime::{artifacts_root, ArtifactMeta, Runtime};
 use crate::sampling::spec::{
-    cache_policy_spec, shard_spec, topo_spec, BuildContext, MethodRegistry, MethodSpec,
-    SamplerFactory, SpecError,
+    cache_policy_spec, serve_spec, shard_spec, topo_spec, BuildContext, MethodRegistry,
+    MethodSpec, SamplerFactory, SpecError,
 };
 use crate::sampling::BlockShapes;
+use crate::serving::{ServeReport, ServeSpec};
 use crate::shard::{ShardReport, ShardSpec};
 use crate::tiering::{build_policies, TierBuild, PRESAMPLE_WORKER, WARMUP_BATCHES};
 use crate::topology::{HardwareTopology, TransferStats};
@@ -214,6 +215,7 @@ pub struct SessionBuilder {
     max_val_nodes: Option<usize>,
     shards: Option<ShardSpec>,
     topology: Option<HardwareTopology>,
+    serving: Option<ServeSpec>,
 }
 
 impl SessionBuilder {
@@ -240,6 +242,7 @@ impl SessionBuilder {
             max_val_nodes: None,
             shards: None,
             topology: None,
+            serving: None,
         }
     }
 
@@ -368,6 +371,14 @@ impl SessionBuilder {
         self
     }
 
+    /// Online inference lane override (docs/SERVING.md). Takes precedence
+    /// over the method spec's `serve=` parameter; the default follows the
+    /// spec (itself defaulting to `off` — no serving lane).
+    pub fn serving(mut self, spec: ServeSpec) -> Self {
+        self.serving = Some(spec);
+        self
+    }
+
     /// Resolve the spec, build the dataset, load + validate the artifact,
     /// and stand up the trainer and sampler factories.
     pub fn build(self) -> Result<Session, BuildError> {
@@ -390,6 +401,10 @@ impl SessionBuilder {
         let topology = match &self.topology {
             Some(t) => t.clone(),
             None => topo_spec(&spec).map_err(BuildError::Runtime)?,
+        };
+        let serving = match &self.serving {
+            Some(s) => Some(s.clone()),
+            None => serve_spec(&spec).map_err(BuildError::Runtime)?,
         };
         // validate the dataset name up front (cheap) so a typo is reported
         // as such, not as a missing artifact for a nonsense name
@@ -520,6 +535,7 @@ impl SessionBuilder {
             test_eval_batches: self.test_eval_batches.unwrap_or(self.eval_batches.max(8)),
             topts,
             chunk_size,
+            serving,
         })
     }
 
@@ -549,6 +565,7 @@ pub struct Session {
     test_eval_batches: usize,
     topts: TrainOptions,
     chunk_size: usize,
+    serving: Option<ServeSpec>,
 }
 
 impl Session {
@@ -661,6 +678,35 @@ impl Session {
     pub fn cache_policy(&self) -> &'static str {
         self.trainer.tiering().policy_name()
     }
+
+    /// The serving lane configured for this session (`serve=` param or
+    /// builder override), if any.
+    pub fn serving(&self) -> Option<&ServeSpec> {
+        self.serving.as_ref()
+    }
+
+    /// Run the configured online inference lane (docs/SERVING.md): an
+    /// open-loop request stream over the **test split**, admission-queued
+    /// into micro-batches and driven through the recycled training hot
+    /// path with lane 0's feature tier as the serving cache. Errors if no
+    /// `serve=` config / builder override was given.
+    pub fn serve(&mut self) -> anyhow::Result<ServeReport> {
+        let spec = self
+            .serving
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("no serving lane configured (serve=off)"))?;
+        self.serve_with(&spec)
+    }
+
+    /// Run the serving lane with an explicit config (load sweeps reuse
+    /// one trained session across offered-load points this way).
+    pub fn serve_with(&mut self, spec: &ServeSpec) -> anyhow::Result<ServeReport> {
+        let ds = self.dataset.clone();
+        // requests hit the leader sampler — same neighborhoods training's
+        // lane 0 would draw, so the tier's hit rate is honest
+        let mut sampler = (self.factory)(0);
+        self.trainer.serve(sampler.as_mut(), &ds.test, spec, &self.topts)
+    }
 }
 
 /// Re-synthesize a dataset's features and collapse its labels onto an
@@ -764,6 +810,20 @@ mod tests {
         for bad in ["ns:shards=0", "ns:shards=4:part=metis", "ns:shards=lots"] {
             let err = Session::builder("yelp-s", bad).scale(0.03).build().unwrap_err();
             assert!(err.to_string().contains("shard"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn bad_serve_spec_fails_session_build() {
+        // `serve=` is validated before any artifact/dataset work too
+        for bad in [
+            "ns:serve=fast",
+            "ns:serve=0",
+            "ns:serve=100:max-batch=0",
+            "ns:serve=100:burst=2",
+        ] {
+            let err = Session::builder("yelp-s", bad).scale(0.03).build().unwrap_err();
+            assert!(err.to_string().contains("serve"), "{bad}: {err}");
         }
     }
 }

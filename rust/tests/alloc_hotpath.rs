@@ -2,14 +2,19 @@
 //!
 //! The arena refactor's contract (docs/PERF.md): once every recycled
 //! buffer has grown to its high-water capacity, `sample_batch_into`
-//! performs **zero** heap allocation per mini-batch for NS and GNS. This
-//! binary installs a counting global allocator and asserts it. A single
-//! `#[test]` lives here on purpose — parallel tests in the same binary
-//! would pollute the counter.
+//! performs **zero** heap allocation per mini-batch for NS and GNS. The
+//! serving lane (docs/SERVING.md) extends the same contract to its
+//! micro-batch loop: sample + tier plan + feature slice + modeled copy
+//! stay allocation-free in steady state. This binary installs a counting
+//! global allocator and asserts both. A single `#[test]` lives here on
+//! purpose — parallel tests in the same binary would pollute the counter.
 
+use gns::device::DeviceMemory;
 use gns::features::build_dataset;
 use gns::sampling::spec::{BuildContext, MethodRegistry};
 use gns::sampling::{validate_batch, BlockShapes, MiniBatch};
+use gns::tiering::{build_policies, PolicySpec, TierBuild, TieringEngine, PRESAMPLE_WORKER};
+use gns::topology::{LinkClock, TransferStats};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
@@ -93,4 +98,70 @@ fn sample_stage_is_allocation_free_in_steady_state() {
         // and the batches stay structurally valid on the recycled slot
         validate_batch(&slot, &shapes).unwrap();
     }
+
+    // --- serving micro-batch loop: the admission queue drives the same
+    // recycled slot through sample → tier plan → feature slice → modeled
+    // copy. After warmup the gather plan's run lists and the x0 scratch
+    // are at high-water capacity too, so the whole serve frame must stay
+    // allocation-free (docs/SERVING.md).
+    let spec = reg.parse("ns").unwrap();
+    let ctx = BuildContext::new(&ds, shapes.clone(), 3);
+    let mut sampler = reg.sampler(&spec, &ctx, 0).unwrap();
+    let policy = build_policies(
+        &PolicySpec::parse("degree:budget=2048").unwrap(),
+        &TierBuild {
+            graph: &ds.graph,
+            train: &ds.train,
+            labels: &ds.labels,
+            chunk_size: batch,
+            warmup_batches: 2,
+        },
+        || reg.sampler(&spec, &ctx, PRESAMPLE_WORKER).unwrap(),
+        1,
+    )
+    .unwrap()
+    .pop()
+    .unwrap();
+    let mut engine =
+        TieringEngine::new(policy, ds.graph.num_nodes(), ds.features.row_bytes() as u64);
+    let mut mem = DeviceMemory::t4();
+    let links = LinkClock::pcie();
+    let mut transfer = TransferStats::default();
+    sampler.begin_epoch(0);
+    engine
+        .begin_epoch(0, sampler.as_ref(), &mut mem, &links, &mut transfer)
+        .unwrap();
+    let dim = ds.features.dim();
+    let mut x0 = vec![0f32; shapes.level_sizes[0] * dim];
+    let mut slot = MiniBatch::default();
+    for chunk in ds.train.chunks(batch).take(8) {
+        sampler.sample_batch_into(chunk, &ds.labels, &mut slot).unwrap();
+        engine.plan_batch(&slot.input_nodes);
+        let n = slot.input_nodes.len() * dim;
+        ds.features
+            .slice_runs_into(&slot.input_nodes, engine.last_plan().runs(), &mut x0[..n]);
+        engine.serve_planned(&links, &mut transfer);
+    }
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    let mut served = 0usize;
+    for chunk in ds.train.chunks(batch).skip(8).take(32) {
+        sampler.sample_batch_into(chunk, &ds.labels, &mut slot).unwrap();
+        engine.plan_batch(&slot.input_nodes);
+        let n = slot.input_nodes.len() * dim;
+        ds.features
+            .slice_runs_into(&slot.input_nodes, engine.last_plan().runs(), &mut x0[..n]);
+        engine.serve_planned(&links, &mut transfer);
+        served += 1;
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+    engine.release(&mut mem);
+    assert!(served >= 8, "serve path: workload too small ({served} micro-batches)");
+    assert!(
+        allocs <= 4,
+        "serve path: {allocs} heap allocations across {served} steady-state micro-batches"
+    );
+    let (hits, misses) = engine.hits_misses();
+    assert!(hits + misses > 0, "tier never consulted on the serve path");
 }

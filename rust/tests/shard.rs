@@ -9,11 +9,15 @@
 //!    equal what the unsharded path serves over PCIe for the same
 //!    batches (`cache=none`) — sharding reclassifies traffic, it never
 //!    creates or loses bytes;
-//! 4. the `shards=` param is plumbed through every method spec.
+//! 4. the `shards=` param is plumbed through every method spec;
+//! 5. a configured serving lane (`serve=`, docs/SERVING.md) draws from
+//!    its own PRNG stream and runs after training, so its presence
+//!    leaves every training metric bit-identical.
 
 use gns::features::build_dataset;
 use gns::sampling::spec::{BuildContext, MethodRegistry};
 use gns::sampling::{BlockShapes, MiniBatch};
+use gns::serving::ServeSpec;
 use gns::session::{Session, SessionBuilder};
 use gns::shard::{build_partitioner, ShardSpec};
 use gns::tiering::{NonePolicy, TieringEngine};
@@ -88,6 +92,11 @@ fn single_shard_is_metric_identical_to_unsharded_for_all_methods() {
             with_param(method, "shards=1"),
             with_param(method, "shards=1:part=range"),
             with_param(method, "shards=1:part=greedy"),
+            // the serving lane generates its request stream from a
+            // dedicated PRNG stream (SERVE_STREAM) and only runs after
+            // training, so configuring it must not move a single bit of
+            // any training metric
+            with_param(method, "serve=500:requests=32"),
         ] {
             let got = run_metrics(tiny_session(&variant)).unwrap();
             assert_eq!(got, base, "{variant} diverged from {method}");
@@ -97,6 +106,12 @@ fn single_shard_is_metric_identical_to_unsharded_for_all_methods() {
         )
         .unwrap();
         assert_eq!(via_builder, base, "builder override diverged for {method}");
+        let via_serving = run_metrics(
+            tiny_session(method)
+                .serving(ServeSpec::parse("500:requests=32").unwrap().unwrap()),
+        )
+        .unwrap();
+        assert_eq!(via_serving, base, "serving override diverged for {method}");
     }
 }
 

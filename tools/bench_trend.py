@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Advisory bench-trend diff for CI (docs/PERF.md).
+
+Usage: bench_trend.py <prev-dir> <new-dir>
+
+Compares every BENCH_*.json in <new-dir> against the file of the same
+name in <prev-dir> (the previous successful CI run's artifact). Metrics
+whose direction is known and which regressed by more than THRESHOLD are
+surfaced as GitHub `::warning::` annotations.
+
+Deliberately advisory: bench smokes run on shared CI runners, so noise
+is expected — this script NEVER fails the build (always exits 0). It is
+schema-aware: when a file's `schema_version` changed between runs the
+comparison for that file is skipped instead of warning on renamed or
+re-scaled metrics.
+
+Pairing: documents are flattened to `path -> number`, with array
+elements paired by index — every bench emits its config sweep in a
+deterministic order, so index identity is stable across runs. Keys with
+no direction entry (config echoes, counts, timestamps) are ignored.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+THRESHOLD = 0.10  # warn when a metric moves >10% in the bad direction
+
+# metric direction by leaf key: False = lower is better, True = higher
+LOWER_SUFFIXES = ("_ms", "_secs", "_bytes", "_us")
+LOWER_KEYS = {"ns_per_batch", "ns_per_iter"}
+HIGHER_KEYS = {"hit_rate", "throughput_rps", "local_fraction"}
+# config echoes that match a lower-better suffix but are not metrics
+IGNORED_KEYS = {"max_wait_us", "unix_time", "schema_version"}
+
+
+def direction(key):
+    """True = higher is better, False = lower is better, None = skip."""
+    if key in IGNORED_KEYS:
+        return None
+    if key in HIGHER_KEYS:
+        return True
+    if key in LOWER_KEYS or key.endswith(LOWER_SUFFIXES):
+        return False
+    return None
+
+
+def flatten(value, path, out):
+    if isinstance(value, dict):
+        for k, v in value.items():
+            flatten(v, path + [k], out)
+    elif isinstance(value, list):
+        for i, v in enumerate(value):
+            flatten(v, path + [str(i)], out)
+    elif isinstance(value, (int, float)) and not isinstance(value, bool):
+        out["/".join(path)] = float(value)
+
+
+def compare(name, prev_doc, new_doc):
+    if prev_doc.get("schema_version") != new_doc.get("schema_version"):
+        print(
+            f"{name}: schema_version changed "
+            f"({prev_doc.get('schema_version')} -> {new_doc.get('schema_version')}), "
+            "skipping trend diff"
+        )
+        return 0
+    prev, new = {}, {}
+    flatten(prev_doc, [], prev)
+    flatten(new_doc, [], new)
+    regressions = 0
+    for path, new_val in sorted(new.items()):
+        key = path.rsplit("/", 1)[-1]
+        higher_is_better = direction(key)
+        if higher_is_better is None or path not in prev:
+            continue
+        prev_val = prev[path]
+        if prev_val == 0.0:
+            continue  # no baseline to express a ratio against
+        change = (new_val - prev_val) / abs(prev_val)
+        regressed = change < -THRESHOLD if higher_is_better else change > THRESHOLD
+        if regressed:
+            regressions += 1
+            print(
+                f"::warning title=bench trend ({name})::{path}: "
+                f"{prev_val:.6g} -> {new_val:.6g} "
+                f"({change:+.1%}, {'higher' if higher_is_better else 'lower'} is better)"
+            )
+    return regressions
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(f"usage: {sys.argv[0]} <prev-dir> <new-dir>")
+        return
+    prev_dir, new_dir = Path(sys.argv[1]), Path(sys.argv[2])
+    total = 0
+    compared = 0
+    for new_path in sorted(new_dir.glob("BENCH_*.json")):
+        prev_path = prev_dir / new_path.name
+        if not prev_path.exists():
+            print(f"{new_path.name}: no previous artifact, skipping")
+            continue
+        try:
+            prev_doc = json.loads(prev_path.read_text())
+            new_doc = json.loads(new_path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{new_path.name}: unreadable ({e}), skipping")
+            continue
+        compared += 1
+        total += compare(new_path.name, prev_doc, new_doc)
+    print(f"bench trend: {compared} file(s) compared, {total} metric(s) regressed >10%")
+    # advisory only — never fail the build on bench noise
+
+
+if __name__ == "__main__":
+    main()
