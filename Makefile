@@ -9,7 +9,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build check ci test fmt clippy bench serve-smoke artifacts clean
+.PHONY: build check ci test fmt clippy bench serve-smoke resume-smoke artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -23,11 +23,18 @@ check:
 	$(CARGO) bench --bench tiering_policies -- --scale 0.1 --smoke --json BENCH_tiering.json
 	$(CARGO) bench --bench shard_scaling -- --scale 0.1 --smoke --json BENCH_shard.json
 	$(MAKE) serve-smoke
+	$(MAKE) resume-smoke
 
 # Smoke the online inference lane (docs/SERVING.md): a short request
 # stream swept across three offered loads, emitting BENCH_serving.json.
 serve-smoke:
 	$(CARGO) bench --bench serving_latency -- --scale 0.1 --smoke --json BENCH_serving.json
+
+# Smoke the crash-safe checkpoint path (docs/SNAPSHOT.md): save/restore
+# round-trips through the retention ring at two sweep points, emitting
+# BENCH_snapshot.json.
+resume-smoke:
+	$(CARGO) bench --bench snapshot_cost -- --smoke --json BENCH_snapshot.json
 
 # The full local gate: everything CI runs (rust + python) in one target.
 ci: check
@@ -40,14 +47,16 @@ clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
 # Hot-path perf numbers: writes BENCH_hotpath.json, BENCH_tiering.json,
-# BENCH_shard.json and BENCH_serving.json at the repo root so the per-PR
-# perf trajectory is tracked (docs/PERF.md, docs/TIERING.md,
-# docs/SHARDING.md, docs/SERVING.md). All are gitignored.
+# BENCH_shard.json, BENCH_serving.json and BENCH_snapshot.json at the repo
+# root so the per-PR perf trajectory is tracked (docs/PERF.md,
+# docs/TIERING.md, docs/SHARDING.md, docs/SERVING.md, docs/SNAPSHOT.md).
+# All are gitignored.
 bench:
 	$(CARGO) bench --bench micro_hotpath -- --scale 0.5 --json BENCH_hotpath.json
 	$(CARGO) bench --bench tiering_policies -- --scale 0.5 --json BENCH_tiering.json
 	$(CARGO) bench --bench shard_scaling -- --scale 0.5 --json BENCH_shard.json
 	$(CARGO) bench --bench serving_latency -- --scale 0.5 --json BENCH_serving.json
+	$(CARGO) bench --bench snapshot_cost -- --json BENCH_snapshot.json
 
 fmt:
 	$(CARGO) fmt

@@ -1,0 +1,164 @@
+//! Snapshot-cost bench: what a crash-safe checkpoint actually costs at
+//! the epoch boundary (docs/SNAPSHOT.md). Builds run-snapshot documents
+//! shaped like the trainer's — rng streams, model parameter tensors as
+//! f32 bit patterns, per-lane resident-node sets, report history — and
+//! sweeps the two axes that dominate real checkpoints (model parameters,
+//! cache residency), timing each leg separately:
+//!
+//!   encode   render + MAGIC/checksum header
+//!   save     atomic tmp + fsync + rename through `SnapshotStore::save`
+//!            (retention ring included)
+//!   restore  `SnapshotStore::latest`: read + verify + parse
+//!
+//! Artifact-free (pure snapshot layer, no PJRT). `--json <path>` emits
+//! machine-readable results (`make bench` writes BENCH_snapshot.json);
+//! `--smoke` shrinks the sweep so `make check` and CI keep this binary
+//! from rotting.
+
+use gns::snapshot::{ser, SnapshotStore};
+use gns::util::cli::Args;
+use gns::util::json::{self, Json};
+use gns::util::rng::{streams, Pcg};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// A document shaped like `Trainer::run_snapshot` output: same keys, same
+/// encodings, synthetic contents sized by (params, resident, lanes).
+fn synthetic_snapshot(params: usize, resident: usize, lanes: usize, rng: &mut Pcg) -> Json {
+    let weights: Vec<f32> =
+        (0..params).map(|_| rng.next_u32() as f32 / u32::MAX as f32 - 0.5).collect();
+    let mut obj = BTreeMap::new();
+    obj.insert("version".to_string(), ser::u64s(1));
+    obj.insert("tag".to_string(), Json::Str("bench|scale=1|gns:cache-fraction=0.02".into()));
+    obj.insert("seed".to_string(), ser::u64s(7));
+    obj.insert("next_epoch".to_string(), Json::Num(3.0));
+    obj.insert("shuffle_rng".to_string(), ser::rng_to_json(rng));
+    obj.insert(
+        "samplers".to_string(),
+        json::arr(
+            (0..lanes + 1)
+                .map(|i| {
+                    let mut s = BTreeMap::new();
+                    s.insert(
+                        "rng".to_string(),
+                        ser::rng_to_json(&Pcg::with_stream(7, streams::SHUFFLE ^ i as u64)),
+                    );
+                    Json::Obj(s)
+                })
+                .collect(),
+        ),
+    );
+    obj.insert("model".to_string(), ser::f32_bits_arr(&weights));
+    obj.insert(
+        "lanes".to_string(),
+        json::arr(
+            (0..lanes)
+                .map(|l| {
+                    let nodes: Vec<u32> =
+                        (0..resident / lanes).map(|_| rng.gen_range(1 << 20) as u32).collect();
+                    let mut lane = BTreeMap::new();
+                    lane.insert("shard".to_string(), Json::Num(l as f64));
+                    lane.insert("resident".to_string(), ser::nodes_arr(&nodes));
+                    lane.insert("generation".to_string(), ser::u64s(3));
+                    lane.insert("hits".to_string(), ser::u64s(123_456));
+                    lane.insert("misses".to_string(), ser::u64s(7_890));
+                    Json::Obj(lane)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(obj)
+}
+
+fn main() {
+    let args = Args::parse_env();
+    if let Err(e) = args.check_known(&["params", "resident", "lanes", "iters", "json", "smoke"]) {
+        eprintln!("snapshot_cost: {e}");
+        std::process::exit(2);
+    }
+    let smoke = args.bool("smoke");
+    let lanes = args.usize_or("lanes", 2);
+    let iters = args.usize_or("iters", if smoke { 3 } else { 10 });
+    // sweep axes: model parameter count × cached-node residency
+    let default_params = if smoke { "4096,65536" } else { "4096,65536,1048576" };
+    let default_resident = if smoke { "1024,16384" } else { "1024,16384,262144" };
+    let parse_list = |key: &str, default: &str| -> Vec<usize> {
+        args.str_or(key, default)
+            .split(',')
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad count {s:?}")))
+            .collect()
+    };
+    let param_counts = parse_list("params", default_params);
+    let resident_counts = parse_list("resident", default_resident);
+
+    let dir = std::env::temp_dir().join(format!("gns-bench-snapshot-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = SnapshotStore::new(&dir, 2);
+    let mut rng = Pcg::with_stream(7, streams::SHUFFLE);
+
+    println!(
+        "{:>10} {:>9} {:>6} {:>11} {:>11} {:>11} {:>11} {:>9}",
+        "params", "resident", "lanes", "bytes", "encode ms", "save ms", "restore ms", "MB/s"
+    );
+    let mut entries: Vec<Json> = Vec::new();
+    for &params in &param_counts {
+        for &resident in &resident_counts {
+            let doc = synthetic_snapshot(params, resident, lanes, &mut rng);
+            let bytes = gns::snapshot::encode(&doc).len();
+            let (mut t_encode, mut t_save, mut t_restore) = (0f64, 0f64, 0f64);
+            for epoch in 0..iters {
+                let t0 = Instant::now();
+                let encoded = gns::snapshot::encode(&doc);
+                t_encode += t0.elapsed().as_secs_f64();
+                std::hint::black_box(&encoded);
+
+                let t1 = Instant::now();
+                store.save(epoch, &doc).unwrap_or_else(|e| panic!("save: {e:#}"));
+                t_save += t1.elapsed().as_secs_f64();
+
+                let t2 = Instant::now();
+                let (got_epoch, restored) = store
+                    .latest()
+                    .unwrap_or_else(|e| panic!("latest: {e:#}"))
+                    .expect("ring has a checkpoint");
+                t_restore += t2.elapsed().as_secs_f64();
+                assert_eq!(got_epoch, epoch);
+                std::hint::black_box(&restored);
+            }
+            let n = iters as f64;
+            let (encode_ms, save_ms, restore_ms) =
+                (1e3 * t_encode / n, 1e3 * t_save / n, 1e3 * t_restore / n);
+            let mbps = bytes as f64 / (1 << 20) as f64 / (t_save / n);
+            println!(
+                "{params:>10} {resident:>9} {lanes:>6} {bytes:>11} {encode_ms:>11.3} \
+                 {save_ms:>11.3} {restore_ms:>11.3} {mbps:>9.1}"
+            );
+            let mut e = BTreeMap::new();
+            e.insert("params".to_string(), Json::Num(params as f64));
+            e.insert("resident".to_string(), Json::Num(resident as f64));
+            e.insert("lanes".to_string(), Json::Num(lanes as f64));
+            e.insert("bytes".to_string(), Json::Num(bytes as f64));
+            e.insert("encode_ms".to_string(), Json::Num(encode_ms));
+            e.insert("save_ms".to_string(), Json::Num(save_ms));
+            e.insert("restore_ms".to_string(), Json::Num(restore_ms));
+            e.insert("save_mb_per_s".to_string(), Json::Num(mbps));
+            entries.push(Json::Obj(e));
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    if let Some(path) = args.get("json") {
+        let doc = json::bench_doc(
+            "snapshot_cost",
+            vec![
+                ("lanes", Json::Num(lanes as f64)),
+                ("iters", Json::Num(iters as f64)),
+                ("smoke", Json::Bool(smoke)),
+                ("configs", json::arr(entries)),
+            ],
+        );
+        std::fs::write(path, doc.to_string_pretty())
+            .unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
+    }
+}

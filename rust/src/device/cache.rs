@@ -20,6 +20,17 @@ use crate::tiering::plan::GatherPlan;
 use crate::topology::{LinkClock, LinkKind, TransferStats};
 use anyhow::Result;
 
+/// The cumulative telemetry counters of a [`DeviceFeatureCache`], bundled
+/// for checkpointing: a resumed run must report Table-4 hit/miss and
+/// delta-upload totals as if it never stopped.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub delta_uploaded_rows: u64,
+    pub delta_reused_rows: u64,
+}
+
 pub struct DeviceFeatureCache {
     /// policy generation currently resident (0 = nothing uploaded) — only
     /// used for the same-generation no-op check in `upload`.
@@ -225,6 +236,71 @@ impl DeviceFeatureCache {
         self.generation = 0;
         self.resident = 0;
     }
+
+    /// Resident node ids in device-row order (row 0 first) — the persisted
+    /// form of residency for checkpoints. Empty when nothing is resident.
+    pub fn resident_nodes(&self) -> Vec<NodeId> {
+        if self.generation == 0 {
+            return Vec::new();
+        }
+        let mut rows = vec![0 as NodeId; self.resident];
+        for (v, &st) in self.stamp.iter().enumerate() {
+            if st == self.seq {
+                rows[self.row_of[v] as usize] = v as NodeId;
+            }
+        }
+        rows
+    }
+
+    pub fn counters(&self) -> CacheCounters {
+        CacheCounters {
+            hits: self.hits,
+            misses: self.misses,
+            delta_uploaded_rows: self.delta_uploaded_rows,
+            delta_reused_rows: self.delta_reused_rows,
+        }
+    }
+
+    /// Reinstall a checkpointed residency set **without charging any
+    /// transfer**: those rows crossed PCIe before the snapshot was taken,
+    /// and a resume must not re-bill them (the headline bit-identity
+    /// invariant covers h2d/d2d byte totals). The device buffer is
+    /// re-allocated through the ledger so capacity is still enforced;
+    /// counters continue from the pre-crash totals.
+    pub fn restore_snapshot(
+        &mut self,
+        nodes: &[NodeId],
+        generation: u64,
+        counters: CacheCounters,
+        mem: &mut DeviceMemory,
+    ) -> Result<()> {
+        if let Some(buf) = self.buf.take() {
+            mem.free(buf);
+        }
+        self.generation = 0;
+        self.resident = 0;
+        self.hits = counters.hits;
+        self.misses = counters.misses;
+        self.delta_uploaded_rows = counters.delta_uploaded_rows;
+        self.delta_reused_rows = counters.delta_reused_rows;
+        if generation == 0 {
+            anyhow::ensure!(
+                nodes.is_empty(),
+                "snapshot: resident rows recorded under generation 0"
+            );
+            return Ok(());
+        }
+        let buf = mem.alloc(nodes.len() as u64 * self.row_bytes)?;
+        self.buf = Some(buf);
+        self.seq += 1;
+        for (i, &v) in nodes.iter().enumerate() {
+            self.stamp[v as usize] = self.seq;
+            self.row_of[v as usize] = i as u32;
+        }
+        self.generation = generation;
+        self.resident = nodes.len();
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -401,6 +477,60 @@ mod tests {
         // a real hit does charge the configured latency
         c.serve_batch(&[1], &clock, &mut stats);
         assert!(stats.modeled_d2d >= std::time::Duration::from_micros(5));
+    }
+
+    #[test]
+    fn snapshot_restore_round_trips_residency_without_new_transfer() {
+        let (mut c, mut mem, clock, mut stats) = setup();
+        c.upload(&[5, 1, 9], 3, &mut mem, &clock, &mut stats).unwrap();
+        c.serve_batch(&[5, 2], &clock, &mut stats);
+        let nodes = c.resident_nodes();
+        assert_eq!(nodes, vec![5, 1, 9], "row order must be preserved");
+        let counters = c.counters();
+        let h2d_before = stats.h2d_bytes;
+
+        let mut fresh = DeviceFeatureCache::new(64, 400);
+        let mut mem2 = DeviceMemory::new(1 << 20);
+        fresh
+            .restore_snapshot(&nodes, 3, counters, &mut mem2)
+            .unwrap();
+        assert_eq!(stats.h2d_bytes, h2d_before, "restore must not bill PCIe");
+        assert_eq!(mem2.used(), 1200, "but the ledger still holds the rows");
+        assert_eq!(fresh.generation(), 3);
+        assert_eq!(fresh.resident_nodes(), nodes);
+        assert_eq!(fresh.counters(), counters);
+        for (i, &v) in nodes.iter().enumerate() {
+            assert_eq!(fresh.row_of(v), Some(i as u32));
+        }
+        // same-generation publish after resume is still a no-op
+        let t = fresh.upload(&nodes, 3, &mut mem2, &clock, &mut stats).unwrap();
+        assert_eq!(t, std::time::Duration::ZERO);
+        assert_eq!(stats.h2d_bytes, h2d_before);
+    }
+
+    #[test]
+    fn restore_snapshot_of_empty_cache_only_reinstalls_counters() {
+        let mut c = DeviceFeatureCache::new(16, 100);
+        let mut mem = DeviceMemory::new(1 << 20);
+        let counters = CacheCounters { hits: 7, misses: 9, ..Default::default() };
+        c.restore_snapshot(&[], 0, counters, &mut mem).unwrap();
+        assert_eq!(c.counters(), counters);
+        assert_eq!(c.resident_rows(), 0);
+        assert_eq!(mem.used(), 0);
+        // resident rows under generation 0 is a corrupt snapshot
+        assert!(c.restore_snapshot(&[1], 0, counters, &mut mem).is_err());
+    }
+
+    #[test]
+    fn restore_snapshot_still_enforces_capacity() {
+        let mut c = DeviceFeatureCache::new(16, 400);
+        let mut mem = DeviceMemory::new(800);
+        let nodes: Vec<NodeId> = (0..4).collect();
+        assert!(c
+            .restore_snapshot(&nodes, 1, CacheCounters::default(), &mut mem)
+            .is_err());
+        assert_eq!(c.generation(), 0, "failed restore leaves the cache empty");
+        assert_eq!(mem.used(), 0);
     }
 
     #[test]

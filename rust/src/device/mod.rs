@@ -20,7 +20,7 @@
 pub mod cache;
 pub mod compute_model;
 
-pub use cache::DeviceFeatureCache;
+pub use cache::{CacheCounters, DeviceFeatureCache};
 pub use compute_model::ComputeModel;
 
 use anyhow::{bail, Result};
@@ -89,6 +89,13 @@ impl DeviceMemory {
 
     pub fn peak(&self) -> u64 {
         self.peak
+    }
+
+    /// Raise the high-water mark to a checkpointed value: a resumed run
+    /// reports the pre-crash peak even when its current allocations sit
+    /// below it. Never lowers the mark.
+    pub fn restore_peak(&mut self, peak: u64) {
+        self.peak = self.peak.max(peak);
     }
 
     pub fn capacity(&self) -> u64 {

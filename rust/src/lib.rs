@@ -24,6 +24,7 @@ pub mod sampling;
 pub mod serving;
 pub mod session;
 pub mod shard;
+pub mod snapshot;
 pub mod graph;
 pub mod tiering;
 pub mod topology;

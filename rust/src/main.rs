@@ -30,6 +30,16 @@ const TRAIN_FLAGS: &[(&str, &str)] = &[
         "shorthand for the method param serve=RPS[:max-batch=N][:max-wait-us=U][:requests=N] \
          — run the online inference lane after training (docs/SERVING.md)",
     ),
+    (
+        "ckpt",
+        "shorthand for the method param ckpt=every=N[:dir=PATH][:keep=K] — crash-safe \
+         checkpoints + automatic resume (docs/SNAPSHOT.md)",
+    ),
+    (
+        "faults",
+        "shorthand for the method param faults=crash@epoch=E[:batch=B] — deterministic \
+         crash injection (docs/SNAPSHOT.md)",
+    ),
 ];
 
 fn main() {
@@ -93,6 +103,12 @@ fn run(args: &Args) -> Result<()> {
             }
             if let Some(v) = args.get("serve") {
                 spec = spec.with("serve", v);
+            }
+            if let Some(v) = args.get("ckpt") {
+                spec = spec.with("ckpt", v);
+            }
+            if let Some(v) = args.get("faults") {
+                spec = spec.with("faults", v);
             }
             println!(
                 "training {} ({spec}) on {dataset} (scale {}, {} epochs, {} worker(s))",

@@ -36,9 +36,11 @@ use crate::runtime::{micro_f1, Runtime, TrainState};
 use crate::sampling::{validate_batch, MiniBatch, Sampler};
 use crate::serving::{effective_spec, generate_requests, run_open_loop, ServeReport, ServeSpec};
 use crate::shard::{ShardReport, ShardRouter, ShardSpec};
+use crate::snapshot::{CkptSpec, FaultSpec, SnapshotStore, SNAPSHOT_VERSION};
 use crate::tiering::{CachePolicy, SamplerPolicy, TieringEngine};
 use crate::topology::{HardwareTopology, LinkClock, LinkKind, TransferStats};
-use crate::util::rng::Pcg;
+use crate::util::json::Json;
+use crate::util::rng::{streams, Pcg};
 use crate::util::timer::{Stage, StageClock};
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -90,6 +92,52 @@ impl EpochReport {
     pub fn device_frame_secs(&self) -> f64 {
         self.device_frame_stages().iter().map(|(_, s)| s).sum()
     }
+
+    /// Serialize for a checkpoint. Metrics are stored as exact bit
+    /// patterns so the report history of a resumed run compares equal —
+    /// `to_bits`-equal, not approximately — to an uninterrupted one.
+    pub fn to_json(&self) -> Json {
+        use crate::snapshot::ser::{clock_to_json, duration, f64_bits, stats_to_json};
+        crate::util::json::obj(vec![
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("mean_loss", f64_bits(self.mean_loss)),
+            ("train_acc", f64_bits(self.train_acc)),
+            ("val_f1", f64_bits(self.val_f1)),
+            ("wall", duration(self.wall)),
+            ("total_with_model", duration(self.total_with_model)),
+            ("clock", clock_to_json(&self.clock)),
+            ("transfer", stats_to_json(&self.transfer)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("avg_input_nodes", f64_bits(self.avg_input_nodes)),
+            ("avg_cached_inputs", f64_bits(self.avg_cached_inputs)),
+            ("isolated_nodes", Json::Num(self.isolated_nodes as f64)),
+            ("truncated_neighbors", Json::Num(self.truncated_neighbors as f64)),
+        ])
+    }
+
+    /// Inverse of [`EpochReport::to_json`].
+    pub fn from_json(j: &Json) -> Result<EpochReport> {
+        use crate::snapshot::ser::{
+            clock_from_json, req_duration, req_f64_bits, req_usize, stats_from_json,
+        };
+        Ok(EpochReport {
+            epoch: req_usize(j, "epoch")?,
+            mean_loss: req_f64_bits(j, "mean_loss")?,
+            train_acc: req_f64_bits(j, "train_acc")?,
+            val_f1: req_f64_bits(j, "val_f1")?,
+            wall: req_duration(j, "wall")?,
+            total_with_model: req_duration(j, "total_with_model")?,
+            clock: clock_from_json(j.get("clock").context("snapshot: report missing clock")?)?,
+            transfer: stats_from_json(
+                j.get("transfer").context("snapshot: report missing transfer")?,
+            )?,
+            batches: req_usize(j, "batches")?,
+            avg_input_nodes: req_f64_bits(j, "avg_input_nodes")?,
+            avg_cached_inputs: req_f64_bits(j, "avg_cached_inputs")?,
+            isolated_nodes: req_usize(j, "isolated_nodes")?,
+            truncated_neighbors: req_usize(j, "truncated_neighbors")?,
+        })
+    }
 }
 
 /// Training-run configuration.
@@ -117,6 +165,15 @@ pub struct TrainOptions {
     /// + device tier) per shard. The default single shard is the
     /// unsharded pipeline.
     pub shards: ShardSpec,
+    /// crash-safe checkpointing (`ckpt=every=N[:dir=PATH][:keep=K]`,
+    /// docs/SNAPSHOT.md). `None` disables the snapshot subsystem.
+    pub ckpt: Option<CkptSpec>,
+    /// deterministic fault injection (`faults=crash@epoch=E[:batch=B]`):
+    /// abort training at an exact, reproducible point to exercise resume.
+    pub faults: Option<FaultSpec>,
+    /// run-configuration tag stamped into every checkpoint; resume
+    /// refuses a checkpoint whose tag differs (different dataset/method).
+    pub tag: String,
 }
 
 impl Default for TrainOptions {
@@ -133,6 +190,9 @@ impl Default for TrainOptions {
             compute_model: ComputeModel::default(),
             paranoid_validate: cfg!(debug_assertions),
             shards: ShardSpec::default(),
+            ckpt: None,
+            faults: None,
+            tag: String::new(),
         }
     }
 }
@@ -316,7 +376,7 @@ impl Trainer {
         chunk_size: usize,
     ) -> Result<Vec<EpochReport>> {
         let mut reports = Vec::with_capacity(opts.epochs);
-        let mut rng = Pcg::with_stream(opts.seed, 0x7247);
+        let mut rng = Pcg::with_stream(opts.seed, streams::SHUFFLE);
         // persistent leader sampler handles epoch lifecycle + eval sampling
         let mut leader = factory(0);
         // worker samplers are built once and recycled across epochs (each
@@ -324,11 +384,72 @@ impl Trainer {
         // more than the per-epoch clones this pipeline eliminates)
         let mut workers: Vec<Box<dyn Sampler>> =
             (1..=opts.workers.max(1)).map(|w| factory(w)).collect();
-        for epoch in 0..opts.epochs {
+        // crash safety: resume from the newest *valid* checkpoint in the
+        // retention ring (corrupt/torn files are skipped with a warning
+        // inside SnapshotStore::latest), then keep checkpointing every
+        // `every` epochs below
+        let store = opts.ckpt.as_ref().map(|c| SnapshotStore::new(&c.dir, c.keep));
+        let mut start_epoch = 0usize;
+        if let Some(store) = &store {
+            if let Some((ckpt_epoch, doc)) = store.latest()? {
+                match self.restore_run_snapshot(
+                    &doc,
+                    opts,
+                    chunk_size,
+                    leader.as_mut(),
+                    &mut workers,
+                    &mut rng,
+                    &mut reports,
+                ) {
+                    Ok(next) => {
+                        start_epoch = next;
+                        eprintln!(
+                            "snapshot: resumed from epoch-{ckpt_epoch} checkpoint in {} \
+                             (continuing at epoch {next})",
+                            store.dir().display()
+                        );
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "snapshot: WARNING: epoch-{ckpt_epoch} checkpoint does not match \
+                             this run ({e:#}); training from scratch"
+                        );
+                        // hard-reset anything a partial restore may have
+                        // touched so "from scratch" really is from scratch
+                        reports.clear();
+                        rng = Pcg::with_stream(opts.seed, streams::SHUFFLE);
+                        self.state = self.runtime.init_state(opts.seed);
+                        for l in &mut self.lanes {
+                            l.tiering.release(&mut l.device_mem);
+                            l.batches = 0;
+                            l.local_rows = 0;
+                            l.remote_rows = 0;
+                        }
+                        leader = factory(0);
+                        workers = (1..=opts.workers.max(1)).map(|w| factory(w)).collect();
+                    }
+                }
+            }
+        }
+        for epoch in start_epoch..opts.epochs {
             let (report, returned) =
                 self.train_epoch(leader.as_mut(), opts, epoch, &mut rng, chunk_size, workers)?;
             workers = returned;
             reports.push(report);
+            if let (Some(store), Some(ckpt)) = (&store, opts.ckpt.as_ref()) {
+                if (epoch + 1) % ckpt.every == 0 {
+                    let doc = self.run_snapshot(
+                        opts,
+                        chunk_size,
+                        epoch + 1,
+                        &rng,
+                        leader.as_ref(),
+                        &workers,
+                        &reports,
+                    )?;
+                    store.save(epoch, &doc).context("write checkpoint")?;
+                }
+            }
         }
         Ok(reports)
     }
@@ -344,12 +465,209 @@ impl Trainer {
         epoch: usize,
     ) -> Result<EpochReport> {
         let mut leader = factory(0);
-        let mut rng = Pcg::with_stream(opts.seed ^ (epoch as u64) << 32, 0x7247);
+        let mut rng = Pcg::with_stream(opts.seed ^ (epoch as u64) << 32, streams::SHUFFLE);
         let bs = self.runtime.meta.batch_size;
         let workers: Vec<Box<dyn Sampler>> =
             (1..=opts.workers.max(1)).map(|w| factory(w)).collect();
         self.train_epoch(leader.as_mut(), opts, epoch, &mut rng, bs, workers)
             .map(|(report, _workers)| report)
+    }
+
+    /// Serialize the complete run state at an epoch boundary: every live
+    /// RNG stream (epoch shuffle + all sampler streams, leader first),
+    /// model/optimizer tensors, each lane's device-resident feature tier
+    /// plus routing ledgers, and the full report history. Replaying the
+    /// remaining epochs from this document is bit-identical to never
+    /// having stopped (tests/snapshot.rs).
+    fn run_snapshot(
+        &self,
+        opts: &TrainOptions,
+        chunk_size: usize,
+        next_epoch: usize,
+        rng: &Pcg,
+        leader: &dyn Sampler,
+        workers: &[Box<dyn Sampler>],
+        reports: &[EpochReport],
+    ) -> Result<Json> {
+        use crate::snapshot::ser::{rng_to_json, u64s};
+        let mut samplers = vec![leader.snapshot_state()];
+        samplers.extend(workers.iter().map(|w| w.snapshot_state()));
+        let lanes: Vec<Json> = self
+            .lanes
+            .iter()
+            .map(|l| {
+                crate::util::json::obj(vec![
+                    ("shard", Json::Num(l.shard as f64)),
+                    ("tier", l.tiering.snapshot_json()),
+                    ("batches", u64s(l.batches)),
+                    ("local_rows", u64s(l.local_rows)),
+                    ("remote_rows", u64s(l.remote_rows)),
+                    ("device_peak", u64s(l.device_mem.peak())),
+                ])
+            })
+            .collect();
+        Ok(crate::util::json::obj(vec![
+            ("version", u64s(SNAPSHOT_VERSION)),
+            ("tag", Json::Str(opts.tag.clone())),
+            ("seed", u64s(opts.seed)),
+            ("chunk_size", Json::Num(chunk_size as f64)),
+            ("next_epoch", Json::Num(next_epoch as f64)),
+            ("shuffle_rng", rng_to_json(rng)),
+            ("samplers", Json::Arr(samplers)),
+            ("model", self.state.to_json()?),
+            ("lanes", Json::Arr(lanes)),
+            ("reports", Json::Arr(reports.iter().map(|r| r.to_json()).collect())),
+        ]))
+    }
+
+    /// Restore [`Trainer::run_snapshot`]. Run-configuration metadata is
+    /// validated and the whole payload parsed *before* anything mutates,
+    /// so a rejected checkpoint leaves the trainer untouched. When the
+    /// lane count differs from the checkpoint (**elastic resharding** —
+    /// resuming under a different `shards=K` or `topo=`), the union of
+    /// every checkpointed resident set is installed on every new lane
+    /// (each device can serve any row the old fleet held) and the routing
+    /// ledgers collapse onto lane 0 so run totals are conserved
+    /// (docs/SNAPSHOT.md §Elastic resharding). Returns the next epoch to
+    /// train.
+    fn restore_run_snapshot(
+        &mut self,
+        doc: &Json,
+        opts: &TrainOptions,
+        chunk_size: usize,
+        leader: &mut dyn Sampler,
+        workers: &mut [Box<dyn Sampler>],
+        rng: &mut Pcg,
+        reports: &mut Vec<EpochReport>,
+    ) -> Result<usize> {
+        use crate::snapshot::ser::{nodes_arr, nodes_from, req_u64, req_usize, rng_from_json, u64s};
+        let version = req_u64(doc, "version")?;
+        anyhow::ensure!(
+            version == SNAPSHOT_VERSION,
+            "snapshot: version {version} != supported {SNAPSHOT_VERSION}"
+        );
+        let tag = doc.get("tag").and_then(Json::as_str).unwrap_or("");
+        anyhow::ensure!(
+            tag == opts.tag,
+            "snapshot: run tag {tag:?} != current {:?}",
+            opts.tag
+        );
+        let seed = req_u64(doc, "seed")?;
+        anyhow::ensure!(seed == opts.seed, "snapshot: seed {seed} != current {}", opts.seed);
+        let ck = req_usize(doc, "chunk_size")?;
+        anyhow::ensure!(ck == chunk_size, "snapshot: chunk size {ck} != current {chunk_size}");
+        let next_epoch = req_usize(doc, "next_epoch")?;
+        anyhow::ensure!(
+            next_epoch <= opts.epochs,
+            "snapshot: checkpoint is ahead of this run ({next_epoch} > epochs {})",
+            opts.epochs
+        );
+
+        // parse the full payload into locals first so a malformed field
+        // cannot leave the trainer half-restored
+        let new_rng =
+            rng_from_json(doc.get("shuffle_rng").context("snapshot: missing shuffle_rng")?)?;
+        let new_state = TrainState::from_json(
+            doc.get("model").context("snapshot: missing model")?,
+            &self.runtime.meta,
+        )?;
+        let mut new_reports = Vec::new();
+        for r in doc
+            .get("reports")
+            .and_then(Json::as_arr)
+            .context("snapshot: missing reports")?
+        {
+            new_reports.push(EpochReport::from_json(r)?);
+        }
+        anyhow::ensure!(
+            new_reports.len() == next_epoch,
+            "snapshot: {} reports for {next_epoch} completed epochs",
+            new_reports.len()
+        );
+        let lanes_j = doc
+            .get("lanes")
+            .and_then(Json::as_arr)
+            .context("snapshot: missing lanes")?;
+        anyhow::ensure!(!lanes_j.is_empty(), "snapshot: no lanes");
+        let samplers = doc
+            .get("samplers")
+            .and_then(Json::as_arr)
+            .context("snapshot: missing samplers")?;
+        anyhow::ensure!(!samplers.is_empty(), "snapshot: no sampler states");
+
+        // apply
+        *rng = new_rng;
+        self.state = new_state;
+        if lanes_j.len() == self.lanes.len() {
+            for (l, lj) in self.lanes.iter_mut().zip(lanes_j) {
+                l.tiering.restore_json(
+                    lj.get("tier").context("snapshot: lane missing tier")?,
+                    &mut l.device_mem,
+                )?;
+                l.batches = req_u64(lj, "batches")?;
+                l.local_rows = req_u64(lj, "local_rows")?;
+                l.remote_rows = req_u64(lj, "remote_rows")?;
+                l.device_mem.restore_peak(req_u64(lj, "device_peak")?);
+            }
+        } else {
+            eprintln!(
+                "snapshot: elastic resume — {} checkpointed shard(s) onto {} lane(s)",
+                lanes_j.len(),
+                self.lanes.len()
+            );
+            let mut seen = std::collections::HashSet::new();
+            let mut union_nodes = Vec::new();
+            let mut generation = 0u64;
+            let mut hits = 0u64;
+            let mut misses = 0u64;
+            let mut delta_up = 0u64;
+            let mut delta_reused = 0u64;
+            let (mut batches, mut local, mut remote, mut peak) = (0u64, 0u64, 0u64, 0u64);
+            for lj in lanes_j {
+                let tier = lj.get("tier").context("snapshot: lane missing tier")?;
+                for v in nodes_from(tier.get("nodes").context("snapshot: tier missing nodes")?)? {
+                    if seen.insert(v) {
+                        union_nodes.push(v);
+                    }
+                }
+                generation = generation.max(req_u64(tier, "generation")?);
+                hits += req_u64(tier, "hits")?;
+                misses += req_u64(tier, "misses")?;
+                delta_up += req_u64(tier, "delta_uploaded_rows")?;
+                delta_reused += req_u64(tier, "delta_reused_rows")?;
+                batches += req_u64(lj, "batches")?;
+                local += req_u64(lj, "local_rows")?;
+                remote += req_u64(lj, "remote_rows")?;
+                peak = peak.max(req_u64(lj, "device_peak")?);
+            }
+            for (i, l) in self.lanes.iter_mut().enumerate() {
+                let tier_doc = crate::util::json::obj(vec![
+                    ("generation", u64s(generation)),
+                    ("nodes", nodes_arr(&union_nodes)),
+                    ("hits", u64s(if i == 0 { hits } else { 0 })),
+                    ("misses", u64s(if i == 0 { misses } else { 0 })),
+                    ("delta_uploaded_rows", u64s(if i == 0 { delta_up } else { 0 })),
+                    ("delta_reused_rows", u64s(if i == 0 { delta_reused } else { 0 })),
+                ]);
+                l.tiering.restore_json(&tier_doc, &mut l.device_mem)?;
+                if i == 0 {
+                    l.batches = batches;
+                    l.local_rows = local;
+                    l.remote_rows = remote;
+                } else {
+                    l.batches = 0;
+                    l.local_rows = 0;
+                    l.remote_rows = 0;
+                }
+                l.device_mem.restore_peak(peak);
+            }
+        }
+        leader.restore_state(&samplers[0])?;
+        for (w, st) in workers.iter_mut().zip(samplers[1..].iter()) {
+            w.restore_state(st)?;
+        }
+        *reports = new_reports;
+        Ok(next_epoch)
     }
 
     /// One epoch across every shard lane. Takes the worker samplers by
@@ -371,6 +689,14 @@ impl Trainer {
             chunk_size >= 1 && chunk_size <= self.runtime.meta.batch_size,
             "chunk size {chunk_size} out of range"
         );
+        // deterministic fault point #1: die at the start of the target
+        // epoch, before any state for it is touched — the newest
+        // checkpoint on disk is the previous epoch boundary
+        if let Some(f) = opts.faults.as_ref() {
+            if f.epoch == epoch && f.batch.is_none() {
+                anyhow::bail!("injected crash at start of epoch {epoch} (faults=crash@epoch)");
+            }
+        }
         let mut clock = StageClock::new();
         let mut transfer = TransferStats::default();
         // every modeled byte this epoch is charged through one link-typed
@@ -480,6 +806,19 @@ impl Trainer {
                 self.lanes[lane].batches += 1;
                 // return the drained slot to the workers (recycling channel)
                 self.buffer_pool.put(mb);
+                // deterministic fault point #2: die mid-epoch after an
+                // exact number of trained batches. The error takes the
+                // same cleanup path as a real batch failure (queue closed,
+                // workers joined), leaving the run as a crash would.
+                if let Some(f) = opts.faults.as_ref() {
+                    if f.epoch == epoch && f.batch == Some(batches) {
+                        epoch_err = Some(anyhow::anyhow!(
+                            "injected crash after batch {batches} of epoch {epoch} \
+                             (faults=crash@epoch:batch)"
+                        ));
+                        break;
+                    }
+                }
             }
             if let Some(e) = epoch_err {
                 rx.close(); // unblocks producers waiting on a full queue

@@ -17,7 +17,7 @@ pub mod reference;
 pub use artifacts::{artifacts_root, ArtifactMeta};
 
 use crate::sampling::MiniBatch;
-use crate::util::rng::Pcg;
+use crate::util::rng::{streams, Pcg};
 use anyhow::{Context, Result};
 use std::path::Path;
 
@@ -45,6 +45,77 @@ pub struct StepOutput {
     /// masked count of correct predictions within the batch.
     pub correct: f32,
     pub batch_real: usize,
+}
+
+impl TrainState {
+    /// Serialize for a checkpoint: every tensor as exact f32 bit patterns
+    /// (params and adam m/v, interleaved [W1, b1, …]) plus the step
+    /// counter. Shapes are not stored — they are re-derived from the
+    /// artifact meta on restore, which catches cross-artifact resume.
+    pub fn to_json(&self) -> Result<crate::util::json::Json> {
+        use crate::snapshot::ser::{f32_bits_arr, u64s};
+        use crate::util::json::Json;
+        let tensors = |lits: &[xla::Literal]| -> Result<Json> {
+            let mut arr = Vec::with_capacity(lits.len());
+            for lit in lits {
+                arr.push(f32_bits_arr(&lit.to_vec::<f32>()?));
+            }
+            Ok(Json::Arr(arr))
+        };
+        Ok(crate::util::json::obj(vec![
+            ("step", u64s(self.step)),
+            ("params", tensors(&self.params)?),
+            ("m", tensors(&self.m)?),
+            ("v", tensors(&self.v)?),
+        ]))
+    }
+
+    /// Restore [`TrainState::to_json`]. Tensor lengths are validated
+    /// against `meta.layer_dims()` so a checkpoint taken under a
+    /// different artifact fails loudly instead of training on garbage.
+    pub fn from_json(j: &crate::util::json::Json, meta: &ArtifactMeta) -> Result<TrainState> {
+        use crate::snapshot::ser::{f32_bits_from, req_u64};
+        let dims = meta.layer_dims();
+        let group = |key: &str| -> Result<Vec<xla::Literal>> {
+            let arr = j
+                .get(key)
+                .and_then(crate::util::json::Json::as_arr)
+                .with_context(|| format!("snapshot: model state missing {key:?}"))?;
+            anyhow::ensure!(
+                arr.len() == 2 * dims.len(),
+                "snapshot: {key} has {} tensors, artifact wants {}",
+                arr.len(),
+                2 * dims.len()
+            );
+            let mut lits = Vec::with_capacity(arr.len());
+            for (l, &(d_in, d_out)) in dims.iter().enumerate() {
+                let rows = 2 * d_in;
+                let w = f32_bits_from(&arr[2 * l])?;
+                anyhow::ensure!(
+                    w.len() == rows * d_out,
+                    "snapshot: {key} W{l} has {} elems, artifact wants {}",
+                    w.len(),
+                    rows * d_out
+                );
+                lits.push(xla::Literal::vec1(&w).reshape(&[rows as i64, d_out as i64])?);
+                let b = f32_bits_from(&arr[2 * l + 1])?;
+                anyhow::ensure!(
+                    b.len() == d_out,
+                    "snapshot: {key} b{l} has {} elems, artifact wants {}",
+                    b.len(),
+                    d_out
+                );
+                lits.push(xla::Literal::vec1(&b));
+            }
+            Ok(lits)
+        };
+        Ok(TrainState {
+            params: group("params")?,
+            m: group("m")?,
+            v: group("v")?,
+            step: req_u64(j, "step")?,
+        })
+    }
 }
 
 impl Runtime {
@@ -80,7 +151,7 @@ impl Runtime {
     /// Glorot-style init matching python/compile/model.py's scheme (exact
     /// values differ — only the scale matters for training).
     pub fn init_state(&self, seed: u64) -> TrainState {
-        let mut rng = Pcg::with_stream(seed, 0x1417);
+        let mut rng = Pcg::with_stream(seed, streams::MODEL_INIT);
         let mut params = Vec::new();
         let mut m = Vec::new();
         let mut v = Vec::new();
@@ -262,5 +333,78 @@ mod tests {
     #[test]
     fn micro_f1_empty_mask_is_zero() {
         assert_eq!(micro_f1(&[], &[], &[], 3), 0.0);
+    }
+
+    fn tiny_meta() -> ArtifactMeta {
+        ArtifactMeta {
+            name: "tiny".into(),
+            num_layers: 2,
+            feature_dim: 3,
+            hidden_dim: 4,
+            num_classes: 2,
+            batch_size: 8,
+            level_sizes: vec![64, 16, 8],
+            fanouts: vec![3, 3],
+            train_num_outputs: 0,
+            dir: std::path::PathBuf::from("unused"),
+        }
+    }
+
+    fn state_for(meta: &ArtifactMeta, fill: impl Fn(usize) -> f32) -> TrainState {
+        // same interleaving as Runtime::init_state, without a PJRT client
+        let mut params = Vec::new();
+        let (mut m, mut v) = (Vec::new(), Vec::new());
+        let mut i = 0usize;
+        for (d_in, d_out) in meta.layer_dims() {
+            let rows = 2 * d_in;
+            for group in [&mut params, &mut m, &mut v] {
+                let w: Vec<f32> = (0..rows * d_out)
+                    .map(|_| {
+                        i += 1;
+                        fill(i)
+                    })
+                    .collect();
+                group.push(
+                    xla::Literal::vec1(&w).reshape(&[rows as i64, d_out as i64]).unwrap(),
+                );
+                group.push(xla::Literal::vec1(&vec![fill(i + 1); d_out]));
+            }
+        }
+        TrainState { params, m, v, step: 41 }
+    }
+
+    #[test]
+    fn train_state_round_trips_bit_exact_through_json_text() {
+        let meta = tiny_meta();
+        // NaN + subnormal + negative zero stress the bit-exactness claim
+        let specials = [1.5f32, -0.0, f32::NAN, 1e-42, -3.25];
+        let state = state_for(&meta, |i| specials[i % specials.len()]);
+        let text = state.to_json().unwrap().to_string_pretty();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let back = TrainState::from_json(&parsed, &meta).unwrap();
+        assert_eq!(back.step, 41);
+        for (a, b) in [(&state.params, &back.params), (&state.m, &back.m), (&state.v, &back.v)]
+        {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b.iter()) {
+                let xs = x.to_vec::<f32>().unwrap();
+                let ys = y.to_vec::<f32>().unwrap();
+                assert_eq!(xs.len(), ys.len());
+                for (p, q) in xs.iter().zip(&ys) {
+                    assert_eq!(p.to_bits(), q.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn train_state_from_mismatched_artifact_fails_loudly() {
+        let meta = tiny_meta();
+        let state = state_for(&meta, |i| i as f32);
+        let doc = state.to_json().unwrap();
+        let mut bigger = tiny_meta();
+        bigger.hidden_dim = 9;
+        let err = TrainState::from_json(&doc, &bigger).unwrap_err().to_string();
+        assert!(err.contains("artifact wants"), "{err}");
     }
 }

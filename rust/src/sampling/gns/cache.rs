@@ -10,7 +10,7 @@
 use crate::graph::subgraph::CacheSubgraph;
 use crate::graph::walk::walk_probs;
 use crate::graph::{CsrGraph, NodeId};
-use crate::util::rng::{AliasTable, Pcg};
+use crate::util::rng::{streams, AliasTable, Pcg};
 use std::sync::Arc;
 
 /// How the cache sampling distribution 𝒫 is computed (renamed from
@@ -118,7 +118,7 @@ impl CacheSampler {
             cache_size,
             probs: Arc::new(probs),
             table,
-            rng: Pcg::with_stream(seed, 0xCAC4E),
+            rng: Pcg::with_stream(seed, streams::CACHE_REFRESH),
             generation: 0,
         }
     }
@@ -138,6 +138,19 @@ impl CacheSampler {
         self.generation += 1;
         let drawn = self.table.sample_distinct(&mut self.rng, self.cache_size);
         let nodes: Vec<NodeId> = drawn.into_iter().map(|v| v as NodeId).collect();
+        self.state_from_nodes(graph, nodes, self.generation)
+    }
+
+    /// Assemble a `CacheState` from an explicit node set — the restore
+    /// path: a checkpointed cache is rebuilt from its persisted node list
+    /// (pos/member/subgraph are derived, probs are recomputed by `new`),
+    /// not re-drawn, so resumed runs see the exact pre-crash cache.
+    pub fn state_from_nodes(
+        &self,
+        graph: &CsrGraph,
+        nodes: Vec<NodeId>,
+        generation: u64,
+    ) -> CacheState {
         let n = graph.num_nodes();
         let mut pos = vec![u32::MAX; n];
         let mut member = vec![0u64; n.div_ceil(64)];
@@ -152,8 +165,28 @@ impl CacheSampler {
             member,
             probs: self.probs.clone(),
             subgraph,
-            generation: self.generation,
+            generation,
         }
+    }
+
+    /// Snapshot the refresh stream: RNG state + generation counter.
+    pub fn snapshot_json(&self) -> crate::util::json::Json {
+        use crate::snapshot::ser::{rng_to_json, u64s};
+        crate::util::json::obj(vec![
+            ("rng", rng_to_json(&self.rng)),
+            ("generation", u64s(self.generation)),
+        ])
+    }
+
+    /// Restore [`CacheSampler::snapshot_json`]: future refresh draws
+    /// continue the snapshotted sequence.
+    pub fn restore_json(&mut self, j: &crate::util::json::Json) -> anyhow::Result<()> {
+        use crate::snapshot::ser::{req_u64, rng_from_json};
+        self.rng = rng_from_json(j.get("rng").ok_or_else(|| {
+            anyhow::anyhow!("snapshot: cache sampler missing rng")
+        })?)?;
+        self.generation = req_u64(j, "generation")?;
+        Ok(())
     }
 }
 

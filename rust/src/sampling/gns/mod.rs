@@ -23,7 +23,7 @@ pub use cache::{CacheDistribution, CacheSampler, CacheState};
 use super::arena::{pad_labels_into, InternTable, LevelBuilder};
 use super::*;
 use crate::graph::CsrGraph;
-use crate::util::rng::Pcg;
+use crate::util::rng::{streams, Pcg};
 use std::sync::Arc;
 
 /// Tunables (paper defaults: 1% cache, refresh every epoch, input layer
@@ -100,7 +100,7 @@ impl GnsSampler {
             sampler: std::sync::Mutex::new(cache_sampler),
             state: std::sync::RwLock::new(state.clone()),
         });
-        let rng = Pcg::with_stream(cfg.seed, 0x6E5);
+        let rng = Pcg::with_stream(cfg.seed, streams::GNS_TEMPLATE);
         let intern = InternTable::new(graph.num_nodes());
         let max_level = shapes.level_sizes[0];
         GnsSampler {
@@ -130,7 +130,7 @@ impl GnsSampler {
             shared: self.shared.clone(),
             is_leader,
             state: self.state.clone(),
-            rng: Pcg::with_stream(self.cfg.seed ^ worker_id, 0x6E50 + worker_id),
+            rng: Pcg::with_stream(self.cfg.seed ^ worker_id, streams::GNS_WORKER_BASE + worker_id),
             idx_scratch: Vec::with_capacity(64),
             scratch: Vec::with_capacity(64),
             intern: InternTable::new(self.graph.num_nodes()),
@@ -321,6 +321,53 @@ impl Sampler for GnsSampler {
     fn cache_nodes(&self) -> Option<Arc<Vec<NodeId>>> {
         Some(self.state.nodes.clone())
     }
+
+    /// Instances persist their own RNG; the leader additionally persists
+    /// the shared cache — refresh RNG + generation and the resident node
+    /// set — so a resumed run re-materializes the exact pre-crash cache
+    /// (pos/member/subgraph are derived, probs recomputed from config).
+    fn snapshot_state(&self) -> crate::util::json::Json {
+        use crate::snapshot::ser::{nodes_arr, rng_to_json, u64s};
+        let mut pairs = vec![("rng", rng_to_json(&self.rng))];
+        if self.is_leader {
+            let cs = self.shared.sampler.lock().unwrap();
+            let state = self.shared.state.read().unwrap();
+            pairs.push((
+                "shared",
+                crate::util::json::obj(vec![
+                    ("sampler", cs.snapshot_json()),
+                    ("nodes", nodes_arr(&state.nodes)),
+                    ("state_generation", u64s(state.generation)),
+                ]),
+            ));
+        }
+        crate::util::json::obj(pairs)
+    }
+
+    fn restore_state(&mut self, state: &crate::util::json::Json) -> anyhow::Result<()> {
+        use crate::snapshot::ser::{nodes_from, req_u64, rng_from_json};
+        self.rng = rng_from_json(
+            state.get("rng").ok_or_else(|| anyhow::anyhow!("snapshot: gns missing rng"))?,
+        )?;
+        if let Some(shared) = state.get("shared") {
+            anyhow::ensure!(
+                self.is_leader,
+                "snapshot: shared gns cache state restored into a non-leader instance"
+            );
+            let mut cs = self.shared.sampler.lock().unwrap();
+            cs.restore_json(shared.get("sampler").ok_or_else(|| {
+                anyhow::anyhow!("snapshot: gns shared missing sampler")
+            })?)?;
+            let nodes = nodes_from(shared.get("nodes").ok_or_else(|| {
+                anyhow::anyhow!("snapshot: gns shared missing nodes")
+            })?)?;
+            let generation = req_u64(shared, "state_generation")?;
+            let fresh = Arc::new(cs.state_from_nodes(&self.graph, nodes, generation));
+            *self.shared.state.write().unwrap() = fresh.clone();
+            self.state = fresh;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -454,6 +501,39 @@ mod tests {
             }
         }
         assert!(checked, "no comparable row found");
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_identical_batches() {
+        use crate::util::json::Json;
+        // run a sampler mid-stream, snapshot it through the JSON text
+        // representation, restore into a *fresh* sampler of the same
+        // config, and require bit-identical batches from both
+        let (ds, _shapes, mut a) = setup(32, 0.02);
+        a.begin_epoch(0);
+        let _ = a.sample_batch(&ds.train[..32], &ds.labels).unwrap();
+        let snap = a.snapshot_state().to_string_pretty();
+        let (_, _, mut b) = setup(32, 0.02);
+        b.restore_state(&Json::parse(&snap).unwrap()).unwrap();
+        assert_eq!(a.cache_generation(), b.cache_generation());
+        assert_eq!(a.cache_nodes().unwrap(), b.cache_nodes().unwrap());
+        for step in 0..3 {
+            let x = a.sample_batch(&ds.train[..32], &ds.labels).unwrap();
+            let y = b.sample_batch(&ds.train[..32], &ds.labels).unwrap();
+            assert_eq!(x.input_nodes, y.input_nodes, "step {step}");
+            for (bx, by) in x.layers.iter().zip(&y.layers) {
+                assert_eq!(bx.idx, by.idx, "step {step}");
+                assert_eq!(
+                    bx.w.iter().map(|w| w.to_bits()).collect::<Vec<_>>(),
+                    by.w.iter().map(|w| w.to_bits()).collect::<Vec<_>>(),
+                    "step {step}"
+                );
+            }
+        }
+        // ...and the next cache refresh draws the same nodes on both
+        a.begin_epoch(1);
+        b.begin_epoch(1);
+        assert_eq!(a.cache_nodes().unwrap(), b.cache_nodes().unwrap());
     }
 
     #[test]

@@ -18,7 +18,7 @@
 use super::arena::{pad_labels_into, InternTable, LevelBuilder, StampSet};
 use super::*;
 use crate::graph::CsrGraph;
-use crate::util::rng::Pcg;
+use crate::util::rng::{streams, Pcg};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -54,7 +54,7 @@ impl LadiesSampler {
             graph,
             shapes,
             s_layer,
-            rng: Pcg::with_stream(seed, 0x1AD1E5),
+            rng: Pcg::with_stream(seed, streams::LADIES),
             intern,
             sampled_mark,
             level_upper: Vec::with_capacity(max_level),
@@ -221,6 +221,17 @@ impl Sampler for LadiesSampler {
         out.input_cached.resize(level_upper.len(), false);
         out.targets.extend_from_slice(targets);
         pad_labels_into(targets, labels, &mut out.labels, &mut out.mask);
+        Ok(())
+    }
+
+    fn snapshot_state(&self) -> crate::util::json::Json {
+        crate::util::json::obj(vec![("rng", crate::snapshot::ser::rng_to_json(&self.rng))])
+    }
+
+    fn restore_state(&mut self, state: &crate::util::json::Json) -> anyhow::Result<()> {
+        self.rng = crate::snapshot::ser::rng_from_json(
+            state.get("rng").ok_or_else(|| anyhow::anyhow!("snapshot: ladies missing rng"))?,
+        )?;
         Ok(())
     }
 }

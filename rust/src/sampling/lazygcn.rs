@@ -16,7 +16,7 @@
 use super::arena::{pad_labels_into, InternTable, LevelBuilder};
 use super::*;
 use crate::graph::CsrGraph;
-use crate::util::rng::Pcg;
+use crate::util::rng::{streams, Pcg};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -77,7 +77,7 @@ pub struct LazyGcnSampler {
 
 impl LazyGcnSampler {
     pub fn new(graph: Arc<CsrGraph>, shapes: BlockShapes, cfg: LazyGcnConfig) -> Self {
-        let rng = Pcg::with_stream(cfg.seed, 0x1A27);
+        let rng = Pcg::with_stream(cfg.seed, streams::LAZYGCN);
         let intern = InternTable::new(graph.num_nodes());
         let max_level = shapes.level_sizes[0];
         LazyGcnSampler {
@@ -285,6 +285,20 @@ impl Sampler for LazyGcnSampler {
 
         out.targets.extend_from_slice(targets);
         pad_labels_into(targets, labels, &mut out.labels, &mut out.mask);
+        Ok(())
+    }
+
+    // The mega-batch itself is NOT persisted: checkpoints cut at epoch
+    // boundaries and begin_epoch discards it, so the RNG stream is the
+    // entire inter-epoch state.
+    fn snapshot_state(&self) -> crate::util::json::Json {
+        crate::util::json::obj(vec![("rng", crate::snapshot::ser::rng_to_json(&self.rng))])
+    }
+
+    fn restore_state(&mut self, state: &crate::util::json::Json) -> anyhow::Result<()> {
+        self.rng = crate::snapshot::ser::rng_from_json(
+            state.get("rng").ok_or_else(|| anyhow::anyhow!("snapshot: lazygcn missing rng"))?,
+        )?;
         Ok(())
     }
 }

@@ -230,6 +230,25 @@ pub trait Sampler: Send {
     fn cache_nodes(&self) -> Option<std::sync::Arc<Vec<crate::graph::NodeId>>> {
         None
     }
+
+    /// Serialize everything that determines this sampler's future draws —
+    /// RNG stream state at minimum; GNS leaders also persist the shared
+    /// cache (refresh RNG, generation, resident node set). Restoring the
+    /// returned document via [`Sampler::restore_state`] into a freshly
+    /// constructed sampler of the same method/seed must make its
+    /// subsequent batches bit-identical to the snapshotted one's.
+    /// Cache-less default: empty object (stateless between epochs beyond
+    /// what the constructor rebuilds).
+    fn snapshot_state(&self) -> crate::util::json::Json {
+        crate::util::json::Json::Obj(Default::default())
+    }
+
+    /// Restore the state captured by [`Sampler::snapshot_state`]. The
+    /// sampler must already be constructed with the same configuration
+    /// (method, seed, shapes) the snapshot was taken under.
+    fn restore_state(&mut self, _state: &crate::util::json::Json) -> anyhow::Result<()> {
+        Ok(())
+    }
 }
 
 /// Count first-layer isolation in a mini-batch: real rows of the

@@ -12,7 +12,7 @@
 use super::arena::{pad_labels_into, InternTable, LevelBuilder};
 use super::*;
 use crate::graph::CsrGraph;
-use crate::util::rng::Pcg;
+use crate::util::rng::{streams, Pcg};
 use std::sync::Arc;
 
 pub struct NeighborSampler {
@@ -36,7 +36,7 @@ impl NeighborSampler {
         NeighborSampler {
             graph,
             shapes,
-            rng: Pcg::with_stream(seed, 0x4E53),
+            rng: Pcg::with_stream(seed, streams::NEIGHBOR),
             idx_scratch: Vec::with_capacity(64),
             nbr_scratch: Vec::with_capacity(64),
             intern,
@@ -153,6 +153,17 @@ impl Sampler for NeighborSampler {
         out.input_cached.resize(level_upper.len(), false);
         out.targets.extend_from_slice(targets);
         pad_labels_into(targets, labels, &mut out.labels, &mut out.mask);
+        Ok(())
+    }
+
+    fn snapshot_state(&self) -> crate::util::json::Json {
+        crate::util::json::obj(vec![("rng", crate::snapshot::ser::rng_to_json(&self.rng))])
+    }
+
+    fn restore_state(&mut self, state: &crate::util::json::Json) -> anyhow::Result<()> {
+        self.rng = crate::snapshot::ser::rng_from_json(
+            state.get("rng").ok_or_else(|| anyhow::anyhow!("snapshot: ns missing rng"))?,
+        )?;
         Ok(())
     }
 }

@@ -481,7 +481,45 @@ pub fn serve_spec(spec: &MethodSpec) -> anyhow::Result<Option<crate::serving::Se
         .map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))
 }
 
-const NS_PARAMS: &[ParamInfo] = &[CACHE_PARAM, SHARD_PARAM, TOPO_PARAM, SERVE_PARAM];
+/// The `ckpt=` parameter every method accepts: crash-safe checkpointing
+/// (grammar in [`crate::snapshot::CkptSpec`]). `off` (the default) writes
+/// nothing; `every=N` snapshots full run state every N epoch boundaries.
+pub const CKPT_PARAM: ParamInfo = ParamInfo {
+    key: "ckpt",
+    kind: ParamKind::Str,
+    default: "off",
+    help: "crash-safe checkpoints: off|every=N[:dir=PATH][:keep=K]",
+};
+
+/// Parse + validate a spec's `ckpt=` parameter. Shared by every builder
+/// (build-time rejection of bad checkpoint configs) and by the session
+/// layer that stands up the snapshot store. `None` means checkpointing is
+/// off.
+pub fn ckpt_spec(spec: &MethodSpec) -> anyhow::Result<Option<crate::snapshot::CkptSpec>> {
+    crate::snapshot::CkptSpec::parse(spec.str_or("ckpt", CKPT_PARAM.default))
+        .map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))
+}
+
+/// The `faults=` parameter every method accepts: deterministic fault
+/// injection (grammar in [`crate::snapshot::FaultSpec`]). `off` (the
+/// default) injects nothing; `crash@epoch=E[:batch=B]` aborts the run at
+/// an exact, reproducible point so resume tests need no process killing.
+pub const FAULTS_PARAM: ParamInfo = ParamInfo {
+    key: "faults",
+    kind: ParamKind::Str,
+    default: "off",
+    help: "deterministic fault injection: off|crash@epoch=E[:batch=B]",
+};
+
+/// Parse + validate a spec's `faults=` parameter. `None` means fault
+/// injection is off.
+pub fn fault_spec(spec: &MethodSpec) -> anyhow::Result<Option<crate::snapshot::FaultSpec>> {
+    crate::snapshot::FaultSpec::parse(spec.str_or("faults", FAULTS_PARAM.default))
+        .map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))
+}
+
+const NS_PARAMS: &[ParamInfo] =
+    &[CACHE_PARAM, SHARD_PARAM, TOPO_PARAM, SERVE_PARAM, CKPT_PARAM, FAULTS_PARAM];
 
 struct NsBuilder;
 
@@ -511,6 +549,8 @@ impl MethodBuilder for NsBuilder {
         shard_spec(spec)?;
         topo_spec(spec)?;
         serve_spec(spec)?;
+        ckpt_spec(spec)?;
+        fault_spec(spec)?;
         let graph = ctx.graph.clone();
         let shapes = ctx.shapes.clone();
         let seed = ctx.seed;
@@ -533,6 +573,8 @@ const LADIES_PARAMS: &[ParamInfo] = &[
     SHARD_PARAM,
     TOPO_PARAM,
     SERVE_PARAM,
+    CKPT_PARAM,
+    FAULTS_PARAM,
 ];
 
 impl MethodBuilder for LadiesBuilder {
@@ -574,6 +616,8 @@ impl MethodBuilder for LadiesBuilder {
         shard_spec(spec)?;
         topo_spec(spec)?;
         serve_spec(spec)?;
+        ckpt_spec(spec)?;
+        fault_spec(spec)?;
         let s_layer = spec.usize_or("s-layer", 512);
         anyhow::ensure!(s_layer >= 1, "ladies: s-layer must be >= 1");
         let graph = ctx.graph.clone();
@@ -609,6 +653,8 @@ const LAZYGCN_PARAMS: &[ParamInfo] = &[
     SHARD_PARAM,
     TOPO_PARAM,
     SERVE_PARAM,
+    CKPT_PARAM,
+    FAULTS_PARAM,
 ];
 
 impl MethodBuilder for LazyGcnBuilder {
@@ -637,6 +683,8 @@ impl MethodBuilder for LazyGcnBuilder {
         shard_spec(spec)?;
         topo_spec(spec)?;
         serve_spec(spec)?;
+        ckpt_spec(spec)?;
+        fault_spec(spec)?;
         let recycle_period = spec.usize_or("recycle-period", 2);
         let rho = spec.f64_or("rho", 1.1);
         anyhow::ensure!(recycle_period >= 1, "lazygcn: recycle-period must be >= 1");
@@ -694,6 +742,8 @@ const GNS_PARAMS: &[ParamInfo] = &[
     SHARD_PARAM,
     TOPO_PARAM,
     SERVE_PARAM,
+    CKPT_PARAM,
+    FAULTS_PARAM,
 ];
 
 impl MethodBuilder for GnsBuilder {
@@ -722,6 +772,8 @@ impl MethodBuilder for GnsBuilder {
         shard_spec(spec)?;
         topo_spec(spec)?;
         serve_spec(spec)?;
+        ckpt_spec(spec)?;
+        fault_spec(spec)?;
         let cache_fraction = spec.f64_or("cache-fraction", 0.01);
         let update_period = spec.usize_or("update-period", 1);
         anyhow::ensure!(
@@ -1204,6 +1256,10 @@ mod tests {
             "gns:policy=magic",
             "ladies:s-layer=0",
             "lazygcn:rho=0.5",
+            "ns:ckpt=every=0",
+            "ns:ckpt=sometimes",
+            "ladies:faults=crash@epoch=x",
+            "gns:faults=oom@epoch=1",
         ] {
             let spec = r.parse(text).unwrap();
             assert!(r.factory(&spec, &ctx).is_err(), "{text} should fail");

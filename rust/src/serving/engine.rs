@@ -33,11 +33,10 @@ use crate::util::rng::Pcg;
 use crate::util::timer::StageClock;
 
 /// The serving subsystem's own PRNG stream (per-subsystem seeded streams,
-/// ADR-003 style): `"SRVE"` in ASCII. Distinct from the trainer's epoch
-/// shuffle stream (0x7247), the runtime init stream (0x1417) and the
-/// `Pcg::new` default, so configuring a serving lane can never perturb a
-/// training run's draw sequences.
-pub const SERVE_STREAM: u64 = 0x5352_5645;
+/// ADR-003 style): `"SRVE"` in ASCII. Now an alias of the named-stream
+/// registry entry (`util::rng::streams::SERVE`), which proves pairwise
+/// distinctness against every other subsystem's stream.
+pub const SERVE_STREAM: u64 = crate::util::rng::streams::SERVE;
 
 /// One synthetic request: virtual arrival time (seconds) + target node.
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -34,12 +34,13 @@ use crate::graph::{CsrGraph, NodeId};
 use crate::pipeline::{EpochReport, TrainOptions, Trainer};
 use crate::runtime::{artifacts_root, ArtifactMeta, Runtime};
 use crate::sampling::spec::{
-    cache_policy_spec, serve_spec, shard_spec, topo_spec, BuildContext, MethodRegistry,
-    MethodSpec, SamplerFactory, SpecError,
+    cache_policy_spec, ckpt_spec, fault_spec, serve_spec, shard_spec, topo_spec, BuildContext,
+    MethodRegistry, MethodSpec, SamplerFactory, SpecError,
 };
 use crate::sampling::BlockShapes;
 use crate::serving::{ServeReport, ServeSpec};
 use crate::shard::{ShardReport, ShardSpec};
+use crate::snapshot::{CkptSpec, FaultSpec};
 use crate::tiering::{build_policies, TierBuild, PRESAMPLE_WORKER, WARMUP_BATCHES};
 use crate::topology::{HardwareTopology, TransferStats};
 use std::fmt;
@@ -216,6 +217,8 @@ pub struct SessionBuilder {
     shards: Option<ShardSpec>,
     topology: Option<HardwareTopology>,
     serving: Option<ServeSpec>,
+    checkpoint: Option<CkptSpec>,
+    faults: Option<FaultSpec>,
 }
 
 impl SessionBuilder {
@@ -243,6 +246,8 @@ impl SessionBuilder {
             shards: None,
             topology: None,
             serving: None,
+            checkpoint: None,
+            faults: None,
         }
     }
 
@@ -379,6 +384,25 @@ impl SessionBuilder {
         self
     }
 
+    /// Crash-safe checkpointing override (docs/SNAPSHOT.md). Takes
+    /// precedence over the method spec's `ckpt=` parameter; the default
+    /// follows the spec (itself defaulting to `off`). When enabled, a
+    /// run resumes automatically from the newest valid checkpoint in the
+    /// configured directory.
+    pub fn checkpoint(mut self, spec: CkptSpec) -> Self {
+        self.checkpoint = Some(spec);
+        self
+    }
+
+    /// Deterministic fault-injection override (abort at an exact
+    /// epoch/batch). Takes precedence over the method spec's `faults=`
+    /// parameter; the default follows the spec (itself defaulting to
+    /// `off`).
+    pub fn faults(mut self, spec: FaultSpec) -> Self {
+        self.faults = Some(spec);
+        self
+    }
+
     /// Resolve the spec, build the dataset, load + validate the artifact,
     /// and stand up the trainer and sampler factories.
     pub fn build(self) -> Result<Session, BuildError> {
@@ -405,6 +429,14 @@ impl SessionBuilder {
         let serving = match &self.serving {
             Some(s) => Some(s.clone()),
             None => serve_spec(&spec).map_err(BuildError::Runtime)?,
+        };
+        let ckpt = match &self.checkpoint {
+            Some(c) => Some(c.clone()),
+            None => ckpt_spec(&spec).map_err(BuildError::Runtime)?,
+        };
+        let faults = match &self.faults {
+            Some(f) => Some(f.clone()),
+            None => fault_spec(&spec).map_err(BuildError::Runtime)?,
         };
         // validate the dataset name up front (cheap) so a typo is reported
         // as such, not as a missing artifact for a nonsense name
@@ -486,6 +518,17 @@ impl SessionBuilder {
             .factory(&MethodSpec::new("ns"), &eval_ctx)
             .map_err(BuildError::Runtime)?;
 
+        // checkpoint-compatibility tag: dataset + scale + the method spec
+        // *minus* the parameters a resume is allowed to change (elastic
+        // resharding/topology, the checkpoint/fault config itself, the
+        // serving lane). A checkpoint whose tag differs is refused.
+        let tag = {
+            let mut t = spec.clone();
+            for k in ["ckpt", "faults", "shards", "topo", "serve"] {
+                t.params.remove(k);
+            }
+            format!("{}|scale={}|{}", self.dataset, self.scale, t)
+        };
         let topts = TrainOptions {
             epochs: self.epochs,
             lr: self.lr,
@@ -498,6 +541,9 @@ impl SessionBuilder {
             compute_model: ComputeModel::default(),
             paranoid_validate: self.paranoid_validate,
             shards,
+            ckpt,
+            faults,
+            tag,
         };
         let label = registry.label(&spec);
         let mut trainer =
@@ -810,6 +856,24 @@ mod tests {
         for bad in ["ns:shards=0", "ns:shards=4:part=metis", "ns:shards=lots"] {
             let err = Session::builder("yelp-s", bad).scale(0.03).build().unwrap_err();
             assert!(err.to_string().contains("shard"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn bad_ckpt_spec_fails_session_build() {
+        // `ckpt=` is validated before any artifact/dataset work too
+        for bad in ["ns:ckpt=sometimes", "ns:ckpt=every=0", "ns:ckpt=every=2:keep=0"] {
+            let err = Session::builder("yelp-s", bad).scale(0.03).build().unwrap_err();
+            assert!(err.to_string().contains("ckpt"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn bad_fault_spec_fails_session_build() {
+        // `faults=` is validated before any artifact/dataset work too
+        for bad in ["ns:faults=now", "ns:faults=crash@epoch=x", "ns:faults=oom@epoch=1"] {
+            let err = Session::builder("yelp-s", bad).scale(0.03).build().unwrap_err();
+            assert!(err.to_string().contains("faults"), "{bad}: {err}");
         }
     }
 

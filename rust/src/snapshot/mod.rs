@@ -1,0 +1,41 @@
+//! Crash-safe training: full-run-state checkpoint/restore plus a
+//! deterministic fault-injection harness (docs/SNAPSHOT.md).
+//!
+//! A checkpoint, cut at an epoch boundary (after that epoch's validation
+//! eval), serializes everything that determines the rest of the run:
+//!
+//! * every live `Pcg` stream — the trainer's epoch-shuffle RNG, each
+//!   sampler instance's stream, GNS's shared cache-refresh stream;
+//! * the epoch cursor and run metadata (method spec, dataset, seed,
+//!   shard layout) so a mismatched resume is rejected loudly;
+//! * tiering-cache residency per shard lane — resident node list in row
+//!   order, generation + upload sequence stamps, hit/miss/delta
+//!   counters — so the warmed tier survives the restart;
+//! * model + Adam state as exact f32 bit patterns;
+//! * every completed `EpochReport` (loss/acc/val/transfer/clock), so
+//!   cumulative metrics after resume are **bit-identical** to an
+//!   uninterrupted run.
+//!
+//! Files are written atomically (tmp + fsync + rename) with a checksum
+//! header and a `keep=K` retention ring ([`store`]); a corrupt or torn
+//! checkpoint is detected by checksum and restore degrades gracefully to
+//! the previous good one. `faults=crash@epoch=E[:batch=B]` aborts a run
+//! at a deterministic point so the resume invariant is testable without
+//! killing processes.
+//!
+//! Elastic resharding: a checkpoint taken under `shards=J` may be
+//! resumed under `shards=K` — the router re-splits the target sets and
+//! every new lane re-derives its tier replica from the persisted
+//! residency set (see docs/SNAPSHOT.md for the semantics and limits).
+
+pub mod ser;
+pub mod spec;
+pub mod store;
+
+pub use spec::{CkptSpec, FaultSpec};
+pub use store::{decode, encode, fnv1a, SnapshotStore, WriteFault};
+
+/// Format version of the checkpoint payload (the JSON inside the
+/// checksummed envelope). Bump on incompatible payload changes; restore
+/// rejects mismatches instead of misinterpreting fields.
+pub const SNAPSHOT_VERSION: u64 = 1;

@@ -1,0 +1,287 @@
+//! JSON serialization helpers for checkpoint payloads.
+//!
+//! `util::json::Json` carries numbers as f64, which cannot represent
+//! every u64 (RNG state words, byte counters) or round-trip f64 metric
+//! bits exactly through the pretty-printer. Checkpoints therefore encode:
+//!
+//! * u64 values as **decimal strings** (`Json::Str`),
+//! * f64 values as **bit-pattern strings** (`u64` of `to_bits`, decimal),
+//! * f32 tensors as arrays of `Json::Num` holding the `u32` bit pattern
+//!   (< 2^32, exact in f64),
+//! * `Duration`s as nanosecond strings.
+//!
+//! This keeps resume **bit-identical**: restored metrics compare equal
+//! under `f{32,64}::to_bits`, not approximately.
+
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+
+/// u64 → decimal-string Json.
+pub fn u64s(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// f64 → bit-pattern string Json (exact round trip).
+pub fn f64_bits(v: f64) -> Json {
+    u64s(v.to_bits())
+}
+
+/// Duration → nanosecond-string Json.
+pub fn duration(d: Duration) -> Json {
+    Json::Str(d.as_nanos().to_string())
+}
+
+/// Required u64 field (decimal string).
+pub fn req_u64(j: &Json, key: &str) -> Result<u64> {
+    let s = j
+        .get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("snapshot: missing string field {key:?}"))?;
+    s.parse()
+        .with_context(|| format!("snapshot: field {key:?} is not a u64: {s:?}"))
+}
+
+/// Required f64 field stored as bits.
+pub fn req_f64_bits(j: &Json, key: &str) -> Result<f64> {
+    Ok(f64::from_bits(req_u64(j, key)?))
+}
+
+/// Required Duration field stored as nanos.
+pub fn req_duration(j: &Json, key: &str) -> Result<Duration> {
+    let s = j
+        .get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("snapshot: missing duration field {key:?}"))?;
+    let nanos: u128 = s
+        .parse()
+        .with_context(|| format!("snapshot: field {key:?} is not nanos: {s:?}"))?;
+    Ok(Duration::new((nanos / 1_000_000_000) as u64, (nanos % 1_000_000_000) as u32))
+}
+
+/// Required usize field (plain Json number).
+pub fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req_usize(key).map_err(|e| anyhow::anyhow!("snapshot: {e}"))
+}
+
+/// PRNG → `{state, inc}` (decimal strings).
+pub fn rng_to_json(rng: &Pcg) -> Json {
+    let (state, inc) = rng.state_parts();
+    crate::util::json::obj(vec![("state", u64s(state)), ("inc", u64s(inc))])
+}
+
+/// `{state, inc}` → PRNG resuming the snapshotted stream.
+pub fn rng_from_json(j: &Json) -> Result<Pcg> {
+    Ok(Pcg::from_parts(req_u64(j, "state")?, req_u64(j, "inc")?))
+}
+
+/// f32 slice → array of u32 bit patterns (exact).
+pub fn f32_bits_arr(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x.to_bits() as f64)).collect())
+}
+
+/// Array of u32 bit patterns → f32 vector.
+pub fn f32_bits_from(j: &Json) -> Result<Vec<f32>> {
+    let arr = j.as_arr().context("snapshot: f32 tensor is not an array")?;
+    arr.iter()
+        .map(|v| {
+            let bits = v.as_f64().context("snapshot: non-numeric f32 bits")?;
+            Ok(f32::from_bits(bits as u32))
+        })
+        .collect()
+}
+
+/// NodeId slice → array of plain numbers (node ids are u32, exact in f64).
+pub fn nodes_arr(xs: &[crate::graph::NodeId]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+/// Array of numbers → NodeId vector.
+pub fn nodes_from(j: &Json) -> Result<Vec<crate::graph::NodeId>> {
+    let arr = j.as_arr().context("snapshot: node list is not an array")?;
+    arr.iter()
+        .map(|v| {
+            let n = v.as_f64().context("snapshot: non-numeric node id")?;
+            Ok(n as crate::graph::NodeId)
+        })
+        .collect()
+}
+
+/// StageClock → `{stage: {measured, modeled, count}}` for every stage.
+pub fn clock_to_json(clock: &crate::util::timer::StageClock) -> Json {
+    use crate::util::timer::Stage;
+    let pairs = Stage::ALL
+        .iter()
+        .map(|&s| {
+            (
+                s.name(),
+                crate::util::json::obj(vec![
+                    ("measured", duration(clock.measured(s))),
+                    ("modeled", duration(clock.modeled(s))),
+                    ("count", u64s(clock.count(s))),
+                ]),
+            )
+        })
+        .collect();
+    crate::util::json::obj(pairs)
+}
+
+/// Inverse of [`clock_to_json`].
+pub fn clock_from_json(j: &Json) -> Result<crate::util::timer::StageClock> {
+    use crate::util::timer::{Stage, StageClock};
+    let mut clock = StageClock::new();
+    for &s in &Stage::ALL {
+        let e = j
+            .get(s.name())
+            .with_context(|| format!("snapshot: clock missing stage {:?}", s.name()))?;
+        clock.restore_stage(
+            s,
+            req_duration(e, "measured")?,
+            req_duration(e, "modeled")?,
+            req_u64(e, "count")?,
+        );
+    }
+    Ok(clock)
+}
+
+/// TransferStats → per-field object (byte/count fields as decimal
+/// strings, modeled link times as nanos).
+pub fn stats_to_json(t: &crate::topology::TransferStats) -> Json {
+    crate::util::json::obj(vec![
+        ("h2d_bytes", u64s(t.h2d_bytes)),
+        ("h2d_transfers", u64s(t.h2d_transfers)),
+        ("d2d_bytes", u64s(t.d2d_bytes)),
+        ("inter_bytes", u64s(t.inter_bytes)),
+        ("inter_transfers", u64s(t.inter_transfers)),
+        ("modeled_h2d", duration(t.modeled_h2d)),
+        ("modeled_d2d", duration(t.modeled_d2d)),
+        ("modeled_inter", duration(t.modeled_inter)),
+        ("bytes_saved_by_cache", u64s(t.bytes_saved_by_cache)),
+        ("bytes_saved_by_delta", u64s(t.bytes_saved_by_delta)),
+    ])
+}
+
+/// Inverse of [`stats_to_json`].
+pub fn stats_from_json(j: &Json) -> Result<crate::topology::TransferStats> {
+    Ok(crate::topology::TransferStats {
+        h2d_bytes: req_u64(j, "h2d_bytes")?,
+        h2d_transfers: req_u64(j, "h2d_transfers")?,
+        d2d_bytes: req_u64(j, "d2d_bytes")?,
+        inter_bytes: req_u64(j, "inter_bytes")?,
+        inter_transfers: req_u64(j, "inter_transfers")?,
+        modeled_h2d: req_duration(j, "modeled_h2d")?,
+        modeled_d2d: req_duration(j, "modeled_d2d")?,
+        modeled_inter: req_duration(j, "modeled_inter")?,
+        bytes_saved_by_cache: req_u64(j, "bytes_saved_by_cache")?,
+        bytes_saved_by_delta: req_u64(j, "bytes_saved_by_delta")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+    use crate::util::rng::streams;
+
+    #[test]
+    fn u64_and_f64_bits_round_trip_extremes() {
+        for v in [0u64, 1, u64::MAX, 1 << 63, (1 << 53) + 1] {
+            let j = obj(vec![("v", u64s(v))]);
+            let j = Json::parse(&j.to_string_pretty()).unwrap();
+            assert_eq!(req_u64(&j, "v").unwrap(), v);
+        }
+        for v in [0.0f64, -0.0, f64::NAN, f64::INFINITY, 1.0 / 3.0, f64::MIN_POSITIVE] {
+            let j = obj(vec![("v", f64_bits(v))]);
+            let j = Json::parse(&j.to_string_pretty()).unwrap();
+            assert_eq!(req_f64_bits(&j, "v").unwrap().to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn rng_round_trip_through_text_resumes_stream() {
+        let mut a = Pcg::with_stream(7, streams::SHUFFLE);
+        for _ in 0..5 {
+            a.next_u64();
+        }
+        let text = rng_to_json(&a).to_string_pretty();
+        let mut b = rng_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(a.next_u64(), b.next_u64());
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f32_bits_round_trip_including_specials() {
+        let xs = vec![0.0f32, -0.0, 1.5, f32::NAN, f32::INFINITY, -3.25e-20];
+        let text = f32_bits_arr(&xs).to_string_pretty();
+        let back = f32_bits_from(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.len(), xs.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn duration_round_trip_sub_nanosecond_exact() {
+        for d in [Duration::ZERO, Duration::new(3, 999_999_999), Duration::from_nanos(1)] {
+            let j = obj(vec![("d", duration(d))]);
+            let j = Json::parse(&j.to_string_pretty()).unwrap();
+            assert_eq!(req_duration(&j, "d").unwrap(), d);
+        }
+    }
+
+    #[test]
+    fn nodes_round_trip() {
+        let xs: Vec<crate::graph::NodeId> = vec![0, 7, u32::MAX - 1];
+        let text = nodes_arr(&xs).to_string_pretty();
+        assert_eq!(nodes_from(&Json::parse(&text).unwrap()).unwrap(), xs);
+    }
+
+    #[test]
+    fn clock_round_trips_every_stage() {
+        use crate::util::timer::{Stage, StageClock};
+        let mut c = StageClock::new();
+        c.add_measured(Stage::Sample, Duration::from_nanos(12_345));
+        c.add_measured(Stage::Sample, Duration::from_nanos(1));
+        c.add_modeled(Stage::Copy, Duration::from_millis(7));
+        c.add_measured(Stage::Compute, Duration::from_secs(2));
+        let text = clock_to_json(&c).to_string_pretty();
+        let back = clock_from_json(&Json::parse(&text).unwrap()).unwrap();
+        for &s in &Stage::ALL {
+            assert_eq!(back.measured(s), c.measured(s), "{}", s.name());
+            assert_eq!(back.modeled(s), c.modeled(s), "{}", s.name());
+            assert_eq!(back.count(s), c.count(s), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn transfer_stats_round_trip_all_fields() {
+        use crate::topology::TransferStats;
+        let t = TransferStats {
+            h2d_bytes: u64::MAX - 3,
+            h2d_transfers: 17,
+            d2d_bytes: 1 << 40,
+            inter_bytes: 5,
+            inter_transfers: 2,
+            modeled_h2d: Duration::from_nanos(999_999_999_999),
+            modeled_d2d: Duration::from_nanos(3),
+            modeled_inter: Duration::ZERO,
+            bytes_saved_by_cache: (1 << 53) + 1,
+            bytes_saved_by_delta: 42,
+        };
+        let text = stats_to_json(&t).to_string_pretty();
+        let back = stats_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.h2d_bytes, t.h2d_bytes);
+        assert_eq!(back.h2d_transfers, t.h2d_transfers);
+        assert_eq!(back.d2d_bytes, t.d2d_bytes);
+        assert_eq!(back.inter_bytes, t.inter_bytes);
+        assert_eq!(back.inter_transfers, t.inter_transfers);
+        assert_eq!(back.modeled_h2d, t.modeled_h2d);
+        assert_eq!(back.modeled_d2d, t.modeled_d2d);
+        assert_eq!(back.modeled_inter, t.modeled_inter);
+        assert_eq!(back.bytes_saved_by_cache, t.bytes_saved_by_cache);
+        assert_eq!(back.bytes_saved_by_delta, t.bytes_saved_by_delta);
+    }
+}

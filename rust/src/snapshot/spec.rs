@@ -1,0 +1,246 @@
+//! The `ckpt=` and `faults=` parameters: crash-safe training knobs.
+//!
+//! Grammar (docs/SNAPSHOT.md, docs/API.md):
+//!
+//! ```text
+//! ckpt   := off | every=N[:dir=PATH][:keep=K]
+//! faults := off | crash@epoch=E[:batch=B]
+//! ```
+//!
+//! `ckpt=every=N` writes a full-run-state checkpoint every N epoch
+//! boundaries into `dir` (default `ckpts`), retaining the newest `keep`
+//! files (default 2). `faults=crash@epoch=E` deterministically aborts the
+//! run at the start of epoch E — or, with `:batch=B`, after B batches of
+//! epoch E have been drained — so tests can prove resume == uninterrupted
+//! without OS-level process killing. `off` (both defaults) disables the
+//! respective subsystem.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::PathBuf;
+
+use anyhow::{bail, ensure, Result};
+
+/// Parsed `ckpt=` configuration. See the module docs for the grammar.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptSpec {
+    /// Checkpoint every `every` epoch boundaries (1 = after every epoch).
+    pub every: usize,
+    /// Directory the retention ring lives in.
+    pub dir: PathBuf,
+    /// How many checkpoints the ring retains (older ones are deleted).
+    pub keep: usize,
+}
+
+impl Default for CkptSpec {
+    fn default() -> Self {
+        CkptSpec { every: 1, dir: PathBuf::from("ckpts"), keep: 2 }
+    }
+}
+
+impl CkptSpec {
+    /// Parse the `ckpt=` grammar. `Ok(None)` means checkpointing is off.
+    pub fn parse(text: &str) -> Result<Option<CkptSpec>> {
+        let text = text.trim();
+        if text == "off" {
+            return Ok(None);
+        }
+        let mut spec = CkptSpec::default();
+        let mut seen: BTreeSet<&str> = BTreeSet::new();
+        let mut saw_every = false;
+        for opt in text.split(':') {
+            let opt = opt.trim();
+            let Some((key, value)) = opt.split_once('=') else {
+                bail!(
+                    "ckpt option {opt:?} is not key=value \
+                     (grammar: off | every=N[:dir=PATH][:keep=K])"
+                );
+            };
+            let (key, value) = (key.trim(), value.trim());
+            ensure!(seen.insert(key), "duplicate ckpt option {key:?}");
+            match key {
+                "every" => {
+                    let n: usize = value.parse().map_err(|_| {
+                        anyhow::anyhow!("ckpt every {value:?} is not an integer")
+                    })?;
+                    ensure!(n >= 1, "ckpt every must be >= 1");
+                    spec.every = n;
+                    saw_every = true;
+                }
+                "dir" => {
+                    ensure!(!value.is_empty(), "ckpt dir must be non-empty");
+                    spec.dir = PathBuf::from(value);
+                }
+                "keep" => {
+                    let k: usize = value.parse().map_err(|_| {
+                        anyhow::anyhow!("ckpt keep {value:?} is not an integer")
+                    })?;
+                    ensure!(k >= 1, "ckpt keep must be >= 1");
+                    spec.keep = k;
+                }
+                other => bail!("unknown ckpt option {other:?} (valid: every, dir, keep)"),
+            }
+        }
+        ensure!(saw_every, "ckpt spec must set every=N (or be \"off\")");
+        Ok(Some(spec))
+    }
+}
+
+impl fmt::Display for CkptSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "every={}:dir={}:keep={}",
+            self.every,
+            self.dir.display(),
+            self.keep
+        )
+    }
+}
+
+/// Parsed `faults=` configuration: one deterministic crash point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Crash at the start of this epoch (0-based)...
+    pub epoch: usize,
+    /// ...or, if set, after this many batches of that epoch have drained.
+    pub batch: Option<usize>,
+}
+
+impl FaultSpec {
+    /// Parse the `faults=` grammar. `Ok(None)` means fault injection is
+    /// off.
+    pub fn parse(text: &str) -> Result<Option<FaultSpec>> {
+        let text = text.trim();
+        if text == "off" {
+            return Ok(None);
+        }
+        let mut parts = text.split(':');
+        let head = parts.next().unwrap_or("").trim();
+        let Some(epoch_kv) = head.strip_prefix("crash@") else {
+            bail!(
+                "faults spec {head:?} must start with crash@ \
+                 (grammar: off | crash@epoch=E[:batch=B])"
+            );
+        };
+        let Some(("epoch", e)) = epoch_kv.split_once('=').map(|(k, v)| (k.trim(), v.trim()))
+        else {
+            bail!("faults crash point {epoch_kv:?} is not epoch=E");
+        };
+        let epoch: usize = e
+            .parse()
+            .map_err(|_| anyhow::anyhow!("faults epoch {e:?} is not an integer"))?;
+        let mut spec = FaultSpec { epoch, batch: None };
+        let mut seen: BTreeSet<&str> = BTreeSet::new();
+        for opt in parts {
+            let opt = opt.trim();
+            let Some((key, value)) = opt.split_once('=') else {
+                bail!("faults option {opt:?} is not key=value");
+            };
+            let (key, value) = (key.trim(), value.trim());
+            ensure!(seen.insert(key), "duplicate faults option {key:?}");
+            match key {
+                "batch" => {
+                    let b: usize = value.parse().map_err(|_| {
+                        anyhow::anyhow!("faults batch {value:?} is not an integer")
+                    })?;
+                    spec.batch = Some(b);
+                }
+                other => bail!("unknown faults option {other:?} (valid: batch)"),
+            }
+        }
+        Ok(Some(spec))
+    }
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "crash@epoch={}", self.epoch)?;
+        if let Some(b) = self.batch {
+            write!(f, ":batch={b}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_means_none() {
+        assert_eq!(CkptSpec::parse("off").unwrap(), None);
+        assert_eq!(CkptSpec::parse(" off ").unwrap(), None);
+        assert_eq!(FaultSpec::parse("off").unwrap(), None);
+        assert_eq!(FaultSpec::parse(" off ").unwrap(), None);
+    }
+
+    #[test]
+    fn ckpt_full_grammar_parses() {
+        let s = CkptSpec::parse("every=3:dir=/tmp/snaps:keep=5").unwrap().unwrap();
+        assert_eq!(s.every, 3);
+        assert_eq!(s.dir, PathBuf::from("/tmp/snaps"));
+        assert_eq!(s.keep, 5);
+        let s = CkptSpec::parse("every=1").unwrap().unwrap();
+        assert_eq!(s.dir, CkptSpec::default().dir);
+        assert_eq!(s.keep, CkptSpec::default().keep);
+    }
+
+    #[test]
+    fn faults_full_grammar_parses() {
+        let s = FaultSpec::parse("crash@epoch=4").unwrap().unwrap();
+        assert_eq!(s, FaultSpec { epoch: 4, batch: None });
+        let s = FaultSpec::parse("crash@epoch=2:batch=7").unwrap().unwrap();
+        assert_eq!(s, FaultSpec { epoch: 2, batch: Some(7) });
+    }
+
+    #[test]
+    fn displays_round_trip() {
+        for text in ["every=1", "every=4:keep=1", "every=2:dir=x/y:keep=9"] {
+            let s = CkptSpec::parse(text).unwrap().unwrap();
+            assert_eq!(CkptSpec::parse(&s.to_string()).unwrap().unwrap(), s, "{text}");
+        }
+        for text in ["crash@epoch=0", "crash@epoch=3:batch=0", "crash@epoch=1:batch=12"] {
+            let s = FaultSpec::parse(text).unwrap().unwrap();
+            assert_eq!(FaultSpec::parse(&s.to_string()).unwrap().unwrap(), s, "{text}");
+        }
+    }
+
+    #[test]
+    fn bad_ckpt_specs_are_rejected_with_ckpt_in_the_message() {
+        for bad in [
+            "every",
+            "every=0",
+            "every=x",
+            "every=1:keep=0",
+            "every=1:keep=-2",
+            "every=1:dir=",
+            "every=1:every=2",
+            "keep=3",
+            "every=1:burst=9",
+            "3",
+        ] {
+            let err = CkptSpec::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("ckpt"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn bad_fault_specs_are_rejected_with_faults_in_the_message() {
+        for bad in [
+            "crash",
+            "crash@",
+            "crash@epoch",
+            "crash@epoch=x",
+            "crash@batch=3",
+            "crash@epoch=1:batch=x",
+            "crash@epoch=1:batch=1:batch=2",
+            "crash@epoch=1:burst=9",
+            "oom@epoch=1",
+            "2",
+        ] {
+            let err = FaultSpec::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("faults"), "{bad}: {err}");
+        }
+    }
+}

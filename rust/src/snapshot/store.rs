@@ -1,0 +1,370 @@
+//! Checkpoint files on disk: atomic writes, checksum validation, and the
+//! `keep=K` retention ring.
+//!
+//! File format: a one-line ASCII header
+//!
+//! ```text
+//! GNSSNAP1 <payload_bytes> <fnv1a_hex16>\n
+//! ```
+//!
+//! followed by the pretty-printed JSON payload. The checksum covers the
+//! payload only, so a torn tail, a truncated header, or flipped payload
+//! bytes are all detected before the JSON parser ever runs. Writes go
+//! tmp file → fsync → rename (atomic on POSIX), so a crash at any point
+//! leaves either the previous complete checkpoint or the new complete
+//! one — never a torn file at the final path. [`WriteFault`] injects
+//! those crash points deterministically for the atomicity property test.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Magic + format version of the header line.
+pub const MAGIC: &str = "GNSSNAP1";
+
+/// FNV-1a 64-bit — tiny, dependency-free, and plenty for torn-write
+/// detection (this is integrity against partial IO, not an adversary).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize `doc` into the on-disk representation (header + payload).
+pub fn encode(doc: &Json) -> Vec<u8> {
+    let payload = doc.to_string_pretty();
+    let mut out =
+        format!("{MAGIC} {} {:016x}\n", payload.len(), fnv1a(payload.as_bytes())).into_bytes();
+    out.extend_from_slice(payload.as_bytes());
+    out
+}
+
+/// Parse + validate the on-disk representation. Any mismatch — bad magic,
+/// short payload, checksum failure, invalid JSON — is an error the
+/// restore path treats as "this checkpoint is corrupt, fall back".
+pub fn decode(bytes: &[u8]) -> Result<Json> {
+    let nl = bytes
+        .iter()
+        .position(|&b| b == b'\n')
+        .context("snapshot: missing header line")?;
+    let header = std::str::from_utf8(&bytes[..nl]).context("snapshot: non-utf8 header")?;
+    let mut parts = header.split_ascii_whitespace();
+    let magic = parts.next().unwrap_or("");
+    if magic != MAGIC {
+        bail!("snapshot: bad magic {magic:?} (want {MAGIC})");
+    }
+    let len: usize = parts
+        .next()
+        .context("snapshot: header missing payload length")?
+        .parse()
+        .context("snapshot: bad payload length")?;
+    let want: u64 = u64::from_str_radix(
+        parts.next().context("snapshot: header missing checksum")?,
+        16,
+    )
+    .context("snapshot: bad checksum field")?;
+    let payload = &bytes[nl + 1..];
+    if payload.len() != len {
+        bail!("snapshot: payload is {} bytes, header says {len} (torn write?)", payload.len());
+    }
+    let got = fnv1a(payload);
+    if got != want {
+        bail!("snapshot: checksum mismatch ({got:016x} != {want:016x})");
+    }
+    let text = std::str::from_utf8(payload).context("snapshot: non-utf8 payload")?;
+    Json::parse(text).map_err(|e| anyhow::anyhow!("snapshot: payload parse: {e}"))
+}
+
+/// Deterministic crash points inside [`SnapshotStore::save_with_fault`],
+/// for the crash-window atomicity property test.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WriteFault {
+    /// Crash after only `n` bytes of the *tmp* file hit disk — the rename
+    /// never happens, so restore must find the previous checkpoint.
+    TruncateTmpAt(usize),
+    /// Crash after the tmp file is complete but before the rename — same
+    /// visible outcome as `TruncateTmpAt`, different residue on disk.
+    AbortBeforeRename,
+    /// Bypass the atomic protocol and leave only the first `n` bytes at
+    /// the *final* path (a lying filesystem / bit rot). The checksum must
+    /// catch this and restore must fall back to an older checkpoint.
+    TornFinal(usize),
+}
+
+/// The retention ring of checkpoint files under one directory.
+#[derive(Debug, Clone)]
+pub struct SnapshotStore {
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl SnapshotStore {
+    pub fn new(dir: impl Into<PathBuf>, keep: usize) -> Self {
+        SnapshotStore { dir: dir.into(), keep: keep.max(1) }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_for(&self, epoch: usize) -> PathBuf {
+        self.dir.join(format!("ckpt-{epoch}.json"))
+    }
+
+    /// Epochs with a checkpoint file present (valid or not), ascending.
+    pub fn epochs(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = match fs::read_dir(&self.dir) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok())
+                .filter_map(|e| {
+                    let name = e.file_name();
+                    let name = name.to_str()?;
+                    name.strip_prefix("ckpt-")?.strip_suffix(".json")?.parse().ok()
+                })
+                .collect(),
+            Err(_) => Vec::new(),
+        };
+        out.sort_unstable();
+        out
+    }
+
+    /// Atomically write the checkpoint for `epoch` and prune the ring.
+    pub fn save(&self, epoch: usize, doc: &Json) -> Result<PathBuf> {
+        self.save_with_fault(epoch, doc, None)
+    }
+
+    /// [`SnapshotStore::save`] with an injectable crash point. Returns an
+    /// error describing the injected crash when `fault` fires; the disk
+    /// is left exactly as a real crash at that point would leave it.
+    pub fn save_with_fault(
+        &self,
+        epoch: usize,
+        doc: &Json,
+        fault: Option<WriteFault>,
+    ) -> Result<PathBuf> {
+        fs::create_dir_all(&self.dir)
+            .with_context(|| format!("snapshot: create dir {}", self.dir.display()))?;
+        let bytes = encode(doc);
+        let final_path = self.path_for(epoch);
+        if let Some(WriteFault::TornFinal(n)) = fault {
+            let n = n.min(bytes.len());
+            fs::write(&final_path, &bytes[..n])?;
+            bail!("injected crash: torn write of {n}/{} bytes at {}", bytes.len(), final_path.display());
+        }
+        let tmp = self.dir.join(format!(".ckpt-{epoch}.json.tmp"));
+        {
+            let mut f = fs::File::create(&tmp)
+                .with_context(|| format!("snapshot: create {}", tmp.display()))?;
+            if let Some(WriteFault::TruncateTmpAt(n)) = fault {
+                let n = n.min(bytes.len());
+                f.write_all(&bytes[..n])?;
+                f.sync_all().ok();
+                bail!("injected crash: tmp write stopped at {n}/{} bytes", bytes.len());
+            }
+            f.write_all(&bytes)
+                .with_context(|| format!("snapshot: write {}", tmp.display()))?;
+            f.sync_all()
+                .with_context(|| format!("snapshot: fsync {}", tmp.display()))?;
+        }
+        if let Some(WriteFault::AbortBeforeRename) = fault {
+            bail!("injected crash: before rename of {}", tmp.display());
+        }
+        fs::rename(&tmp, &final_path).with_context(|| {
+            format!("snapshot: rename {} -> {}", tmp.display(), final_path.display())
+        })?;
+        // directory fsync so the rename itself is durable (best effort —
+        // not all platforms allow opening a directory for sync)
+        if let Ok(d) = fs::File::open(&self.dir) {
+            d.sync_all().ok();
+        }
+        self.prune();
+        Ok(final_path)
+    }
+
+    /// Delete ring entries beyond `keep`, oldest first. Stale tmp files
+    /// (crash residue) are cleaned up too.
+    fn prune(&self) {
+        let epochs = self.epochs();
+        if epochs.len() > self.keep {
+            for &e in &epochs[..epochs.len() - self.keep] {
+                fs::remove_file(self.path_for(e)).ok();
+            }
+        }
+        if let Ok(rd) = fs::read_dir(&self.dir) {
+            for entry in rd.filter_map(|e| e.ok()) {
+                if let Some(name) = entry.file_name().to_str() {
+                    if name.starts_with(".ckpt-") && name.ends_with(".tmp") {
+                        fs::remove_file(entry.path()).ok();
+                    }
+                }
+            }
+        }
+    }
+
+    /// Newest *valid* checkpoint `(epoch, payload)`. A corrupt or torn
+    /// file is skipped with a logged warning and the next-older one is
+    /// tried — graceful degradation, never a panic. `Ok(None)` when no
+    /// valid checkpoint exists.
+    pub fn latest(&self) -> Result<Option<(usize, Json)>> {
+        for &epoch in self.epochs().iter().rev() {
+            let path = self.path_for(epoch);
+            let bytes = match fs::read(&path) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("snapshot: WARNING: read {} failed ({e}); trying older", path.display());
+                    continue;
+                }
+            };
+            match decode(&bytes) {
+                Ok(doc) => return Ok(Some((epoch, doc))),
+                Err(e) => {
+                    eprintln!(
+                        "snapshot: WARNING: {} is corrupt ({e:#}); falling back to previous",
+                        path.display()
+                    );
+                }
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj, s};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gns-snap-{tag}-{}", std::process::id()));
+        fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn doc(epoch: usize) -> Json {
+        obj(vec![("epoch", num(epoch as f64)), ("tag", s("store-test"))])
+    }
+
+    #[test]
+    fn encode_decode_round_trips() {
+        let d = doc(3);
+        let bytes = encode(&d);
+        assert!(bytes.starts_with(MAGIC.as_bytes()));
+        assert_eq!(decode(&bytes).unwrap(), d);
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let bytes = encode(&doc(1));
+        // torn tail
+        assert!(decode(&bytes[..bytes.len() - 4]).is_err());
+        // flipped payload byte
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x40;
+        assert!(decode(&flipped).is_err());
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).is_err());
+        // empty
+        assert!(decode(&[]).is_err());
+    }
+
+    #[test]
+    fn ring_retains_keep_newest() {
+        let dir = tmpdir("ring");
+        let store = SnapshotStore::new(&dir, 2);
+        for e in 0..5 {
+            store.save(e, &doc(e)).unwrap();
+        }
+        assert_eq!(store.epochs(), vec![3, 4]);
+        let (epoch, d) = store.latest().unwrap().unwrap();
+        assert_eq!(epoch, 4);
+        assert_eq!(d.req_usize("epoch").unwrap(), 4);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_previous_good() {
+        let dir = tmpdir("fallback");
+        let store = SnapshotStore::new(&dir, 3);
+        store.save(1, &doc(1)).unwrap();
+        let err = store
+            .save_with_fault(2, &doc(2), Some(WriteFault::TornFinal(20)))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("injected crash"), "{err:#}");
+        // epoch 2's file exists but is torn — latest() must skip it
+        assert_eq!(store.epochs(), vec![1, 2]);
+        let (epoch, d) = store.latest().unwrap().unwrap();
+        assert_eq!(epoch, 1);
+        assert_eq!(d.req_usize("epoch").unwrap(), 1);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crash_before_rename_leaves_previous_intact() {
+        let dir = tmpdir("rename");
+        let store = SnapshotStore::new(&dir, 3);
+        store.save(1, &doc(1)).unwrap();
+        for fault in [WriteFault::TruncateTmpAt(10), WriteFault::AbortBeforeRename] {
+            let err = store.save_with_fault(2, &doc(2), Some(fault)).unwrap_err();
+            assert!(format!("{err:#}").contains("injected crash"), "{err:#}");
+            assert_eq!(store.epochs(), vec![1], "{fault:?}");
+            assert_eq!(store.latest().unwrap().unwrap().0, 1, "{fault:?}");
+        }
+        // a later successful save cleans up the tmp residue
+        store.save(3, &doc(3)).unwrap();
+        let residue: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_str().is_some_and(|n| n.ends_with(".tmp")))
+            .collect();
+        assert!(residue.is_empty(), "{residue:?}");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_or_missing_dir_is_no_checkpoint() {
+        let dir = tmpdir("empty");
+        let store = SnapshotStore::new(&dir, 2);
+        assert_eq!(store.latest().unwrap(), None);
+        assert!(store.epochs().is_empty());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prop_crash_at_any_point_restores_previous_or_new_never_torn() {
+        use crate::util::proptest::check;
+        let dir = tmpdir("prop");
+        let full_len = encode(&doc(2)).len();
+        check(60, |g| {
+            let store = SnapshotStore::new(&dir, 4);
+            fs::remove_dir_all(&dir).ok();
+            store.save(1, &doc(1)).map_err(|e| e.to_string())?;
+            let fault = match g.usize(0..4) {
+                0 => Some(WriteFault::TruncateTmpAt(g.usize(0..full_len + 1))),
+                1 => Some(WriteFault::AbortBeforeRename),
+                2 => Some(WriteFault::TornFinal(g.usize(0..full_len))),
+                _ => None,
+            };
+            let saved = store.save_with_fault(2, &doc(2), fault).is_ok();
+            let (epoch, d) = store
+                .latest()
+                .map_err(|e| e.to_string())?
+                .ok_or("no checkpoint survived")?;
+            // the invariant: we always restore a *complete* checkpoint —
+            // the new one iff the save completed, else the previous one
+            crate::prop_assert!(epoch == if saved { 2 } else { 1 }, "fault {fault:?}: epoch {epoch}");
+            crate::prop_assert!(d.req_usize("epoch") == Ok(epoch));
+            Ok(())
+        });
+        fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -33,7 +33,7 @@ pub use policy::{
     PRESAMPLE_WORKER, WARMUP_BATCHES,
 };
 
-use crate::device::{DeviceFeatureCache, DeviceMemory};
+use crate::device::{CacheCounters, DeviceFeatureCache, DeviceMemory};
 use crate::graph::NodeId;
 use crate::sampling::Sampler;
 use crate::topology::{LinkClock, TransferStats};
@@ -132,6 +132,47 @@ impl TieringEngine {
     pub fn release(&mut self, mem: &mut DeviceMemory) {
         self.cache.release(mem);
     }
+
+    /// Serialize the device-resident tier for a checkpoint: policy
+    /// generation, resident rows in row order, cumulative counters. The
+    /// policy object itself is *not* persisted — it is rebuilt from the
+    /// method spec on resume (docs/SNAPSHOT.md lists the consequences for
+    /// stateful policies like `presample`).
+    pub fn snapshot_json(&self) -> crate::util::json::Json {
+        use crate::snapshot::ser::{nodes_arr, u64s};
+        let c = &self.cache;
+        crate::util::json::obj(vec![
+            ("generation", u64s(c.generation())),
+            ("nodes", nodes_arr(&c.resident_nodes())),
+            ("hits", u64s(c.hits)),
+            ("misses", u64s(c.misses)),
+            ("delta_uploaded_rows", u64s(c.delta_uploaded_rows)),
+            ("delta_reused_rows", u64s(c.delta_reused_rows)),
+        ])
+    }
+
+    /// Restore [`TieringEngine::snapshot_json`]: residency is reinstalled
+    /// through the memory ledger without charging any transfer (those
+    /// bytes moved before the snapshot).
+    pub fn restore_json(
+        &mut self,
+        j: &crate::util::json::Json,
+        mem: &mut DeviceMemory,
+    ) -> Result<()> {
+        use crate::snapshot::ser::{nodes_from, req_u64};
+        let nodes = nodes_from(
+            j.get("nodes")
+                .ok_or_else(|| anyhow::anyhow!("snapshot: tier missing nodes"))?,
+        )?;
+        let counters = CacheCounters {
+            hits: req_u64(j, "hits")?,
+            misses: req_u64(j, "misses")?,
+            delta_uploaded_rows: req_u64(j, "delta_uploaded_rows")?,
+            delta_reused_rows: req_u64(j, "delta_reused_rows")?,
+        };
+        self.cache
+            .restore_snapshot(&nodes, req_u64(j, "generation")?, counters, mem)
+    }
 }
 
 #[cfg(test)]
@@ -207,6 +248,33 @@ mod tests {
         assert_eq!(stats.bytes_saved_by_cache, 0);
         assert_eq!(engine.hits_misses(), (0, 3));
         assert_eq!(engine.last_plan().miss_rows(), 3);
+    }
+
+    #[test]
+    fn engine_snapshot_restore_round_trips_through_json_text() {
+        let mut engine = TieringEngine::new(Box::new(SamplerPolicy), 32, 100);
+        let mut mem = DeviceMemory::new(1 << 20);
+        let clock = LinkClock::pcie();
+        let mut stats = TransferStats::default();
+        let s = FakeCache { generation: 4, nodes: std::sync::Arc::new(vec![7, 3, 11]) };
+        engine.begin_epoch(0, &s, &mut mem, &clock, &mut stats).unwrap();
+        engine.serve(&[7, 8], &clock, &mut stats);
+        let doc = engine.snapshot_json();
+        let text = doc.to_string_pretty();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+
+        let mut engine2 = TieringEngine::new(Box::new(SamplerPolicy), 32, 100);
+        let mut mem2 = DeviceMemory::new(1 << 20);
+        let h2d_before = stats.h2d_bytes;
+        engine2.restore_json(&parsed, &mut mem2).unwrap();
+        assert_eq!(stats.h2d_bytes, h2d_before);
+        assert_eq!(engine2.cache().generation(), 4);
+        assert_eq!(engine2.cache().resident_nodes(), vec![7, 3, 11]);
+        assert_eq!(engine2.hits_misses(), engine.hits_misses());
+        assert_eq!(mem2.used(), 300);
+        // an unchanged-generation publish after resume stays a no-op
+        engine2.begin_epoch(1, &s, &mut mem2, &clock, &mut stats).unwrap();
+        assert_eq!(stats.h2d_bytes, h2d_before);
     }
 
     #[test]

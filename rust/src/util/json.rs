@@ -184,6 +184,22 @@ pub fn bench_doc(bench: &str, fields: Vec<(&str, Json)>) -> Json {
     obj(pairs)
 }
 
+/// Read and parse a JSON file. Errors carry the path (checkpoint
+/// manifests and bench fixtures read through this so their failure modes
+/// name the file, not just the byte offset).
+pub fn read_file(path: &std::path::Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))
+}
+
+/// Pretty-print `doc` to `path` (plain write; the checkpoint store layers
+/// its own tmp+fsync+rename atomicity on top — see `snapshot::store`).
+pub fn write_file(path: &std::path::Path, doc: &Json) -> Result<(), String> {
+    std::fs::write(path, doc.to_string_pretty())
+        .map_err(|e| format!("write {}: {e}", path.display()))
+}
+
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
@@ -429,6 +445,31 @@ mod tests {
         ]);
         let text = v.to_string_pretty();
         assert_eq!(Json::parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn file_round_trip_write_read_identical() {
+        let dir = std::env::temp_dir().join(format!("gns-json-rt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("doc.json");
+        let doc = obj(vec![
+            ("name", s("round trip ✓ \"quoted\"")),
+            ("nums", arr(vec![num(1.0), num(-2.5), num(1e15)])),
+            ("nested", obj(vec![("deep", arr(vec![Json::Null, Json::Bool(false)]))])),
+        ]);
+        write_file(&path, &doc).unwrap();
+        let back = read_file(&path).unwrap();
+        assert_eq!(back, doc);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn file_errors_name_the_path() {
+        let missing = std::path::Path::new("/nonexistent-gns/never.json");
+        let err = read_file(missing).unwrap_err();
+        assert!(err.contains("never.json"), "{err}");
+        let err = write_file(missing, &Json::Null).unwrap_err();
+        assert!(err.contains("never.json"), "{err}");
     }
 
     #[test]

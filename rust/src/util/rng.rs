@@ -6,6 +6,63 @@
 //! sampling (used by the GNS cache sampler and the graph generators), and
 //! a Zipf sampler for power-law degree workloads.
 
+/// Named PRNG stream constants — every subsystem draws from its own PCG
+/// stream so adding a new subsystem (or snapshotting an existing one)
+/// never perturbs another's draw sequence (the ADR-003 pattern). The
+/// values are frozen: they are the historical literals each call site
+/// used, so formalizing them here changed no seeded sequence, and a
+/// checkpoint written before this module existed would still restore the
+/// same streams.
+///
+/// `GNS_WORKER_BASE` is a *base*: worker `w` uses `GNS_WORKER_BASE + w`,
+/// reserving `GNS_WORKER_BASE..GNS_WORKER_BASE+MAX_WORKERS`. New
+/// constants must stay outside that window (checked by the
+/// `streams_are_pairwise_distinct` test).
+pub mod streams {
+    /// `Pcg::new`'s default stream.
+    pub const DEFAULT: u64 = 0xda3e_39cb_94b9_5bdb;
+    /// Trainer epoch-shuffle stream (EpochPlan target permutation).
+    pub const SHUFFLE: u64 = 0x7247;
+    /// Model parameter init (`Runtime::init_state`).
+    pub const MODEL_INIT: u64 = 0x1417;
+    /// Node-wise neighbor sampler (NS baseline).
+    pub const NEIGHBOR: u64 = 0x4E53;
+    /// LADIES layer-wise sampler.
+    pub const LADIES: u64 = 0x1AD1E5;
+    /// LazyGCN mega-batch sampler.
+    pub const LAZYGCN: u64 = 0x1A27;
+    /// GNS template instance (the factory prototype; never samples
+    /// batches itself).
+    pub const GNS_TEMPLATE: u64 = 0x6E5;
+    /// GNS per-worker instances: worker `w` draws from
+    /// `GNS_WORKER_BASE + w`.
+    pub const GNS_WORKER_BASE: u64 = 0x6E50;
+    /// Width of the per-worker window reserved above `GNS_WORKER_BASE`.
+    pub const MAX_WORKERS: u64 = 256;
+    /// GNS global-cache refresh draws (`CacheSampler`).
+    pub const CACHE_REFRESH: u64 = 0xCAC4E;
+    /// Serving-lane open-loop request generator (`"SRVE"` in ASCII).
+    pub const SERVE: u64 = 0x5352_5645;
+    /// Deterministic fault-injection harness (`snapshot::FaultSpec`).
+    pub const FAULT: u64 = 0xFA17;
+
+    /// Every named stream, with the per-worker window collapsed to its
+    /// base (tests iterate this to prove pairwise distinctness).
+    pub const ALL: &[(&str, u64)] = &[
+        ("DEFAULT", DEFAULT),
+        ("SHUFFLE", SHUFFLE),
+        ("MODEL_INIT", MODEL_INIT),
+        ("NEIGHBOR", NEIGHBOR),
+        ("LADIES", LADIES),
+        ("LAZYGCN", LAZYGCN),
+        ("GNS_TEMPLATE", GNS_TEMPLATE),
+        ("GNS_WORKER_BASE", GNS_WORKER_BASE),
+        ("CACHE_REFRESH", CACHE_REFRESH),
+        ("SERVE", SERVE),
+        ("FAULT", FAULT),
+    ];
+}
+
 /// PCG-XSH-RR 64/32 with 64-bit output composition. Deterministic, seedable,
 /// splittable enough for per-worker streams.
 #[derive(Debug, Clone)]
@@ -16,7 +73,7 @@ pub struct Pcg {
 
 impl Pcg {
     pub fn new(seed: u64) -> Self {
-        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+        Self::with_stream(seed, streams::DEFAULT)
     }
 
     /// Independent stream for parallel workers: distinct `stream` values
@@ -27,6 +84,18 @@ impl Pcg {
         rng.state = rng.state.wrapping_add(seed);
         rng.next_u32();
         rng
+    }
+
+    /// The generator's full internal state `(state, inc)` — everything a
+    /// checkpoint needs to resume the stream bit-identically.
+    pub fn state_parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Pcg::state_parts`]. The next draw equals
+    /// what the snapshotted generator would have produced.
+    pub fn from_parts(state: u64, inc: u64) -> Self {
+        Pcg { state, inc }
     }
 
     #[inline]
@@ -299,6 +368,79 @@ mod tests {
         let mut c = Pcg::with_stream(42, 7);
         let zs: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
         assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn pcg_state_parts_round_trip_resumes_the_stream() {
+        let mut a = Pcg::with_stream(99, streams::SHUFFLE);
+        for _ in 0..13 {
+            a.next_u64();
+        }
+        let (state, inc) = a.state_parts();
+        let mut b = Pcg::from_parts(state, inc);
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_eq!(xs, ys, "restored stream diverged");
+    }
+
+    #[test]
+    fn streams_are_pairwise_distinct() {
+        // all named streams, with the GNS per-worker window expanded, must
+        // be pairwise distinct — otherwise two subsystems share a sequence
+        let mut all: Vec<(String, u64)> = streams::ALL
+            .iter()
+            .map(|&(n, v)| (n.to_string(), v))
+            .collect();
+        for w in 1..streams::MAX_WORKERS {
+            all.push((format!("GNS_WORKER_BASE+{w}"), streams::GNS_WORKER_BASE + w));
+        }
+        for i in 0..all.len() {
+            for j in i + 1..all.len() {
+                assert_ne!(
+                    all[i].1, all[j].1,
+                    "streams {} and {} collide",
+                    all[i].0, all[j].0
+                );
+            }
+        }
+        // ...and (state, inc) init must differ too, i.e. no stream aliases
+        // another through the (stream << 1) | 1 increment map
+        for i in 0..all.len() {
+            for j in i + 1..all.len() {
+                let a = Pcg::with_stream(5, all[i].1).state_parts();
+                let b = Pcg::with_stream(5, all[j].1).state_parts();
+                assert_ne!(a, b, "{} aliases {}", all[i].0, all[j].0);
+            }
+        }
+    }
+
+    #[test]
+    fn adding_a_stream_never_perturbs_existing_sequences() {
+        // golden first draws per stream, captured when the registry was
+        // created. If renumbering a constant (or a Pcg seeding change)
+        // alters any of these, every historical seeded run — and every
+        // checkpoint — silently breaks. Extend this table when adding a
+        // stream; never edit an existing row.
+        let golden: &[(u64, u64)] = &[
+            (streams::DEFAULT, 0x713066ea3c7a0d56),
+            (streams::SHUFFLE, 0x8fc6e8458ad5d6a8),
+            (streams::MODEL_INIT, 0xe3f8549adf9211d2),
+            (streams::NEIGHBOR, 0x3b3f14a6aa07075d),
+            (streams::LADIES, 0x5a490e501019aed0),
+            (streams::LAZYGCN, 0xc5e8ab0b67501e27),
+            (streams::GNS_TEMPLATE, 0xd7c8dfd45002e388),
+            (streams::GNS_WORKER_BASE, 0x046b69c8b5f215d8),
+            (streams::CACHE_REFRESH, 0xf727641069c27bda),
+            (streams::SERVE, 0x366ae001d9b88c2b),
+            (streams::FAULT, 0xcd8141ace0e99b12),
+        ];
+        for &(stream, want) in golden {
+            let got = Pcg::with_stream(42, stream).next_u64();
+            assert_eq!(
+                got, want,
+                "stream {stream:#x}: first draw {got:#x} != golden {want:#x}"
+            );
+        }
     }
 
     #[test]

@@ -49,6 +49,11 @@ impl Stage {
             Stage::Other => "other",
         }
     }
+
+    /// Inverse of [`Stage::name`] — used when deserializing checkpoints.
+    pub fn from_name(name: &str) -> Option<Stage> {
+        Stage::ALL.iter().copied().find(|s| s.name() == name)
+    }
 }
 
 /// Accumulates measured and modeled time per stage.
@@ -102,6 +107,15 @@ impl StageClock {
 
     pub fn grand_total(&self) -> Duration {
         Stage::ALL.iter().map(|&s| self.total(s)).sum()
+    }
+
+    /// Install absolute per-stage totals from a checkpoint. Unlike
+    /// `merge`, this *sets* rather than adds: the restored report history
+    /// already owns these durations exactly.
+    pub fn restore_stage(&mut self, stage: Stage, measured: Duration, modeled: Duration, count: u64) {
+        self.measured.insert(stage, measured);
+        self.modeled.insert(stage, modeled);
+        self.counts.insert(stage, count);
     }
 
     pub fn merge(&mut self, other: &StageClock) {
@@ -203,6 +217,24 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.measured(Stage::Slice), Duration::from_millis(12));
         assert_eq!(a.modeled(Stage::Copy), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn stage_names_round_trip() {
+        for &s in &Stage::ALL {
+            assert_eq!(Stage::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Stage::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn restore_stage_sets_absolute_totals() {
+        let mut c = StageClock::new();
+        c.add_measured(Stage::Copy, Duration::from_millis(99));
+        c.restore_stage(Stage::Copy, Duration::from_millis(5), Duration::from_millis(3), 2);
+        assert_eq!(c.measured(Stage::Copy), Duration::from_millis(5));
+        assert_eq!(c.modeled(Stage::Copy), Duration::from_millis(3));
+        assert_eq!(c.count(Stage::Copy), 2);
     }
 
     #[test]

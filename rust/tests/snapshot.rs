@@ -1,0 +1,247 @@
+//! Crash-safe training invariants (docs/SNAPSHOT.md):
+//!
+//! 1. **resume == uninterrupted, bit-identical**: for all four methods, a
+//!    run that is crashed by deterministic fault injection and resumed
+//!    from its checkpoint produces exactly the metrics (loss / acc /
+//!    val-F1 / h2d / d2d / cache hit-miss / test-F1 bits) of a run that
+//!    never crashed — at epoch-start and mid-epoch crash points;
+//! 2. a corrupt newest checkpoint degrades gracefully: resume falls back
+//!    to the previous good ring entry and still matches uninterrupted;
+//! 3. a checkpoint from a different run config (seed) is refused and the
+//!    run trains from scratch, matching a scratch run bit-for-bit;
+//! 4. **elastic resharding**: a `shards=1` checkpoint resumes under
+//!    `shards=2` — the restored report history is bit-identical, train
+//!    targets stay a total partition, and the run completes.
+//!
+//! All artifact-gated (skip when `make artifacts` has not run). Identity
+//! requires workers=1: the sampling queue's drain order is
+//! nondeterministic with more workers.
+
+use std::path::PathBuf;
+
+use gns::session::{Session, SessionBuilder};
+
+const METHODS: [&str; 4] = ["ns", "ladies:s-layer=128", "lazygcn", "gns:cache-fraction=0.02"];
+
+fn with_param(method: &str, param: &str) -> String {
+    let sep = if method.contains(':') { "," } else { ":" };
+    format!("{method}{sep}{param}")
+}
+
+/// Fresh per-test checkpoint directory (stale rings would shadow the run
+/// under test).
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gns-ckpt-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+/// The tiny-artifact session the e2e suites share.
+fn tiny_session(method: &str) -> SessionBuilder {
+    Session::builder("yelp-s", method)
+        .scale(0.03)
+        .seed(1)
+        .epochs(3)
+        .workers(1)
+        .eval_batches(2)
+        .artifact("tiny")
+        .refit_features(true)
+        .max_train_nodes(512)
+        .max_val_nodes(128)
+        .paranoid_validate(true)
+}
+
+/// Every deterministic per-epoch + run-total metric a config produces.
+#[derive(Debug, PartialEq)]
+struct Metrics {
+    per_epoch: Vec<(u64, u64, u64, usize, u64, u64)>, // (loss, acc, val, batches, h2d, d2d)
+    cache_hits: u64,
+    cache_misses: u64,
+    test_f1: u64,
+}
+
+fn run_metrics(builder: SessionBuilder) -> Option<Metrics> {
+    let mut session = builder.build_or_skip()?;
+    let r = session.run().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    Some(Metrics {
+        per_epoch: r
+            .reports
+            .iter()
+            .map(|rep| {
+                (
+                    rep.mean_loss.to_bits(),
+                    rep.train_acc.to_bits(),
+                    rep.val_f1.to_bits(),
+                    rep.batches,
+                    rep.transfer.h2d_bytes,
+                    rep.transfer.d2d_bytes,
+                )
+            })
+            .collect(),
+        cache_hits: r.cache_hits,
+        cache_misses: r.cache_misses,
+        test_f1: r.test_f1.to_bits(),
+    })
+}
+
+/// Run a config that is expected to die on an injected fault; returns the
+/// crash message.
+fn run_to_crash(builder: SessionBuilder) -> Option<String> {
+    let mut session = builder.build_or_skip()?;
+    let r = session.run().unwrap();
+    let err = r.error.expect("fault-injected run should have crashed");
+    assert!(err.contains("injected crash"), "{err}");
+    Some(err)
+}
+
+// ---------------------------------------------------------------------------
+// 1. resume == uninterrupted, for all four methods
+
+#[test]
+fn resume_after_crash_is_bit_identical_for_all_methods() {
+    for (i, method) in METHODS.iter().enumerate() {
+        // the uninterrupted reference: same config, no snapshot subsystem
+        let Some(base) = run_metrics(tiny_session(method)) else { return };
+
+        let dir = ckpt_dir(&format!("identity-{i}"));
+        let ckpt = format!("ckpt=every=1:dir={}", dir.display());
+        // crash at the start of epoch 2 (of 3): epochs 0 and 1 complete
+        // and checkpoint, epoch 2 never starts
+        let crashed = with_param(&with_param(method, &ckpt), "faults=crash@epoch=2");
+        run_to_crash(tiny_session(&crashed)).unwrap();
+
+        // a fresh process picks the ring up and finishes the run
+        let resumed = run_metrics(tiny_session(&with_param(method, &ckpt))).unwrap();
+        assert_eq!(resumed, base, "{method}: resumed run diverged from uninterrupted");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn mid_epoch_crash_resumes_from_previous_boundary_bit_identical() {
+    let method = METHODS[0];
+    let Some(base) = run_metrics(tiny_session(method)) else { return };
+
+    let dir = ckpt_dir("mid-epoch");
+    let ckpt = format!("ckpt=every=1:dir={}", dir.display());
+    // die after 2 batches of epoch 1: the newest checkpoint is the end of
+    // epoch 0, so resume replays epoch 1 from its start
+    let crashed = with_param(&with_param(method, &ckpt), "faults=crash@epoch=1:batch=2");
+    let err = run_to_crash(tiny_session(&crashed)).unwrap();
+    assert!(err.contains("batch 2"), "{err}");
+
+    let resumed = run_metrics(tiny_session(&with_param(method, &ckpt))).unwrap();
+    assert_eq!(resumed, base, "mid-epoch resume diverged from uninterrupted");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 2. corrupt newest checkpoint → graceful fallback to the previous one
+
+#[test]
+fn corrupt_newest_checkpoint_falls_back_and_still_matches() {
+    let method = METHODS[0];
+    let Some(base) = run_metrics(tiny_session(method)) else { return };
+
+    let dir = ckpt_dir("corrupt");
+    let ckpt = format!("ckpt=every=1:dir={}", dir.display());
+    let crashed = with_param(&with_param(method, &ckpt), "faults=crash@epoch=2");
+    run_to_crash(tiny_session(&crashed)).unwrap();
+
+    // bit-rot the newest ring entry (epoch 1); the epoch-0 checkpoint
+    // behind it stays good
+    let newest = dir.join("ckpt-1.json");
+    let mut bytes = std::fs::read(&newest).unwrap();
+    let n = bytes.len();
+    bytes[n / 2] ^= 0x40;
+    std::fs::write(&newest, &bytes).unwrap();
+
+    // resume must skip the corrupt file, restore epoch 0, replay epochs
+    // 1 and 2 — and still land on the uninterrupted metrics exactly
+    let resumed = run_metrics(tiny_session(&with_param(method, &ckpt))).unwrap();
+    assert_eq!(resumed, base, "fallback resume diverged from uninterrupted");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 3. mismatched run config is refused → scratch training, loudly
+
+#[test]
+fn checkpoint_from_different_seed_is_refused_and_run_starts_fresh() {
+    let method = METHODS[0];
+    let dir = ckpt_dir("mismatch");
+    let ckpt = format!("ckpt=every=1:dir={}", dir.display());
+    // populate the ring under seed 1
+    if run_metrics(tiny_session(&with_param(method, &ckpt))).is_none() {
+        return;
+    }
+
+    // the same ring under seed 2 must be rejected (tag/seed mismatch) and
+    // the run must equal a clean seed-2 run, not a half-restored hybrid
+    let fresh = run_metrics(tiny_session(method).seed(2)).unwrap();
+    let refused = run_metrics(tiny_session(&with_param(method, &ckpt)).seed(2)).unwrap();
+    assert_eq!(refused, fresh, "refused checkpoint still leaked state into the run");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 4. elastic resharding: shards=1 checkpoint resumed under shards=2
+
+#[test]
+fn elastic_resume_from_one_shard_to_two_conserves_coverage() {
+    let method = METHODS[3]; // gns — the method with real tier residency
+    let dir = ckpt_dir("elastic");
+    let ckpt = format!("ckpt=every=1:dir={}", dir.display());
+
+    // phase 1: one epoch under shards=1, checkpointed
+    let Some(mut one) = tiny_session(&with_param(method, &ckpt)).epochs(1).build_or_skip()
+    else {
+        return;
+    };
+    let r1 = one.run().unwrap();
+    assert!(r1.error.is_none(), "{:?}", r1.error);
+    assert_eq!(r1.reports.len(), 1);
+    let epoch0 = (
+        r1.reports[0].mean_loss.to_bits(),
+        r1.reports[0].train_acc.to_bits(),
+        r1.reports[0].val_f1.to_bits(),
+        r1.reports[0].batches,
+    );
+    let (h1, m1) = (r1.cache_hits, r1.cache_misses);
+    drop(one);
+
+    // phase 2: scale out mid-training — same run, now shards=2
+    let mut two = tiny_session(&with_param(&with_param(method, &ckpt), "shards=2"))
+        .epochs(2)
+        .build_or_skip()
+        .unwrap();
+    assert_eq!(two.num_shards(), 2);
+    let n_train = two.dataset().train.len();
+    let r2 = two.run().unwrap();
+    assert!(r2.error.is_none(), "{:?}", r2.error);
+
+    // the restored epoch-0 report is the shards=1 one, bit-for-bit —
+    // proof this resumed rather than restarted
+    assert_eq!(r2.reports.len(), 2);
+    assert_eq!(
+        (
+            r2.reports[0].mean_loss.to_bits(),
+            r2.reports[0].train_acc.to_bits(),
+            r2.reports[0].val_f1.to_bits(),
+            r2.reports[0].batches,
+        ),
+        epoch0,
+        "elastic resume lost the checkpointed epoch history"
+    );
+    // run totals carry the pre-reshard counters forward (collapsed onto
+    // lane 0) plus whatever epoch 1 adds
+    assert!(r2.cache_hits >= h1, "{} < {h1}", r2.cache_hits);
+    assert!(r2.cache_misses >= m1, "{} < {m1}", r2.cache_misses);
+    // the re-split train targets stay a total partition of the train set
+    assert_eq!(r2.shards.len(), 2);
+    let owned: usize = r2.shards.iter().map(|s| s.train_targets).sum();
+    assert_eq!(owned, n_train, "elastic reshard lost/duplicated train targets");
+    assert!(r2.test_f1.is_finite());
+    std::fs::remove_dir_all(&dir).ok();
+}

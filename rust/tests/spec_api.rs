@@ -58,12 +58,26 @@ fn prop_spec_display_parse_round_trip() {
                         "nvlink:inter-us=3",
                         "pcie:h2d-gbps=24:h2d-us=5",
                     ];
+                    const CKPT_DOMAIN: &[&str] = &[
+                        "off",
+                        "every=1",
+                        "every=2:keep=1",
+                        "every=1:dir=ckpts:keep=4",
+                    ];
+                    const FAULTS_DOMAIN: &[&str] = &[
+                        "off",
+                        "crash@epoch=0",
+                        "crash@epoch=1",
+                        "crash@epoch=2:batch=3",
+                    ];
                     const POLICY_DOMAIN: &[&str] =
                         &["auto", "degree", "random-walk", "uniform"];
                     let domain = match info.key {
                         "cache" => CACHE_DOMAIN,
                         "shards" => SHARD_DOMAIN,
                         "topo" => TOPO_DOMAIN,
+                        "ckpt" => CKPT_DOMAIN,
+                        "faults" => FAULTS_DOMAIN,
                         _ => POLICY_DOMAIN,
                     };
                     ParamValue::Str((*g.choose(domain)).to_string())
