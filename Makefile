@@ -9,7 +9,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build check ci test fmt clippy bench serve-smoke resume-smoke artifacts clean
+.PHONY: build check ci test fmt clippy bench serve-smoke resume-smoke overlap-smoke artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -24,6 +24,7 @@ check:
 	$(CARGO) bench --bench shard_scaling -- --scale 0.1 --smoke --json BENCH_shard.json
 	$(MAKE) serve-smoke
 	$(MAKE) resume-smoke
+	$(MAKE) overlap-smoke
 
 # Smoke the online inference lane (docs/SERVING.md): a short request
 # stream swept across three offered loads, emitting BENCH_serving.json.
@@ -36,6 +37,12 @@ serve-smoke:
 resume-smoke:
 	$(CARGO) bench --bench snapshot_cost -- --smoke --json BENCH_snapshot.json
 
+# Smoke the async-timeline overlap pipeline (docs/TOPOLOGY.md §Overlap &
+# prefetch): a short prefetch-depth × topology sweep, emitting
+# BENCH_overlap.json.
+overlap-smoke:
+	$(CARGO) bench --bench overlap_pipeline -- --scale 0.1 --smoke --json BENCH_overlap.json
+
 # The full local gate: everything CI runs (rust + python) in one target.
 ci: check
 	cd python && $(PYTHON) -m pytest tests -q
@@ -47,16 +54,17 @@ clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
 # Hot-path perf numbers: writes BENCH_hotpath.json, BENCH_tiering.json,
-# BENCH_shard.json, BENCH_serving.json and BENCH_snapshot.json at the repo
-# root so the per-PR perf trajectory is tracked (docs/PERF.md,
-# docs/TIERING.md, docs/SHARDING.md, docs/SERVING.md, docs/SNAPSHOT.md).
-# All are gitignored.
+# BENCH_shard.json, BENCH_serving.json, BENCH_snapshot.json and
+# BENCH_overlap.json at the repo root so the per-PR perf trajectory is
+# tracked (docs/PERF.md, docs/TIERING.md, docs/SHARDING.md,
+# docs/SERVING.md, docs/SNAPSHOT.md, docs/TOPOLOGY.md). All are gitignored.
 bench:
 	$(CARGO) bench --bench micro_hotpath -- --scale 0.5 --json BENCH_hotpath.json
 	$(CARGO) bench --bench tiering_policies -- --scale 0.5 --json BENCH_tiering.json
 	$(CARGO) bench --bench shard_scaling -- --scale 0.5 --json BENCH_shard.json
 	$(CARGO) bench --bench serving_latency -- --scale 0.5 --json BENCH_serving.json
 	$(CARGO) bench --bench snapshot_cost -- --json BENCH_snapshot.json
+	$(CARGO) bench --bench overlap_pipeline -- --scale 0.5 --json BENCH_overlap.json
 
 fmt:
 	$(CARGO) fmt

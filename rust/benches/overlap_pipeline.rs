@@ -1,0 +1,216 @@
+//! Overlap-pipeline bench: the modeled async-timeline schedule of a
+//! shard-parallel gather/compute pipeline swept over the prefetch depth
+//! K ∈ {0, 1, 2, 4} and the hardware topology ∈ {pcie, dist}
+//! (docs/TOPOLOGY.md §Overlap & prefetch).
+//!
+//! The workload replays the trainer's charging rules artifact-free: each
+//! batch's tier gather (miss h2d + hit d2d), cross-shard inter fetch, and
+//! a modeled compute step are reserved on per-lane occupancy timelines
+//! with batch i's transfer chain released by batch i-1-K's compute — so
+//! the sweep isolates exactly what `prefetch=K` buys: the makespan
+//! (critical path) shrinks while the per-link busy seconds stay fixed.
+//!
+//! `--json <path>` emits machine-readable results (`make bench` writes
+//! BENCH_overlap.json); `--smoke` shrinks the sweep so `make check` and
+//! CI keep this binary from rotting.
+
+use gns::device::DeviceMemory;
+use gns::features::build_dataset;
+use gns::sampling::spec::{cache_policy_spec, BuildContext, MethodRegistry};
+use gns::sampling::{BlockShapes, MiniBatch};
+use gns::shard::ShardSpec;
+use gns::tiering::{build_policies, TierBuild, TieringEngine, PRESAMPLE_WORKER};
+use gns::topology::{HardwareTopology, Lane, LinkClock, LinkKind, Timeline, TransferStats};
+use gns::util::cli::Args;
+use gns::util::json::{self, Json};
+use std::time::Duration;
+
+/// Modeled compute charge per batch: a flops-shaped per-input-row cost,
+/// so compute scales with the gather exactly like the trainer's
+/// ComputeModel does.
+fn compute_time(input_rows: usize) -> Duration {
+    Duration::from_micros(50) + Duration::from_nanos(25 * input_rows as u64)
+}
+
+fn main() {
+    let args = Args::parse_env();
+    if let Err(e) =
+        args.check_known(&["scale", "epochs", "batches", "shards", "method", "json", "smoke"])
+    {
+        eprintln!("overlap_pipeline: {e}");
+        std::process::exit(2);
+    }
+    let scale = args.f64_or("scale", 0.5);
+    let smoke = args.bool("smoke");
+    let epochs = if smoke { 1 } else { args.usize_or("epochs", 2) };
+    let shards = args.usize_or("shards", 4);
+    let method = args.str_or("method", "gns:cache-fraction=0.01").to_string();
+    let depths: &[usize] = if smoke { &[0, 1] } else { &[0, 1, 2, 4] };
+    let topos = ["pcie", "dist"];
+    let total_batches = if smoke { 8 } else { args.usize_or("batches", 32) };
+
+    let ds = build_dataset("products-s", scale, 1);
+    println!("workload: products-s x{scale} ({method}, {shards} shard lanes) — {}", ds.graph.stats());
+    let batch = 256usize;
+    let shapes = BlockShapes::new(vec![20000, 12000, 2048, batch], vec![5, 10, 15]);
+    let reg = MethodRegistry::global();
+    let row_bytes = ds.features.row_bytes() as u64;
+    let dim = ds.features.dim();
+    let num_nodes = ds.graph.num_nodes();
+    let mut x0 = vec![0f32; shapes.level_sizes[0] * dim];
+
+    let shard_spec = ShardSpec::parse(&format!("{shards}:part=hash"))
+        .unwrap_or_else(|e| panic!("shard spec: {e}"));
+    let router = shard_spec.router(&ds.graph);
+    let targets = ds.train_by_shard(&router);
+    let per_shard = (total_batches / shards).max(2);
+
+    println!(
+        "{:>5} {:>9} {:>12} {:>12} {:>9} {:>10} {:>10}",
+        "topo", "prefetch", "makespan s", "serial s", "overlap%", "h2d MB", "inter MB"
+    );
+    let mut entries: Vec<Json> = Vec::new();
+    for topo_name in topos {
+        let topo = HardwareTopology::parse(topo_name).unwrap();
+        let links = LinkClock::new(topo);
+        for &prefetch in depths {
+            let spec = reg.parse(&method).unwrap();
+            let ctx = BuildContext::new(&ds, shapes.clone(), 7);
+            let factory = reg.factory(&spec, &ctx).unwrap();
+            let tier_spec = cache_policy_spec(&spec).unwrap();
+            let mut leader = factory(0);
+            let policies = build_policies(
+                &tier_spec,
+                &TierBuild {
+                    graph: &ds.graph,
+                    train: &ds.train,
+                    labels: &ds.labels,
+                    chunk_size: batch,
+                    warmup_batches: 2,
+                },
+                || factory(PRESAMPLE_WORKER),
+                shards,
+            )
+            .unwrap();
+            let mut lanes: Vec<(TieringEngine, DeviceMemory, Timeline)> = policies
+                .into_iter()
+                .map(|policy| {
+                    (
+                        TieringEngine::new(policy, num_nodes, row_bytes),
+                        DeviceMemory::t4(),
+                        Timeline::default(),
+                    )
+                })
+                .collect();
+            let mut stats = TransferStats::default();
+            let mut slot = MiniBatch::default();
+            for epoch in 0..epochs {
+                // epoch barrier: all lanes sync to the slowest frontier,
+                // exactly like the trainer
+                let epoch_base =
+                    lanes.iter().map(|(.., t)| t.frontier()).max().unwrap_or_default();
+                leader.begin_epoch(epoch);
+                let mut tier_ends = Vec::with_capacity(lanes.len());
+                for (engine, mem, timeline) in &mut lanes {
+                    timeline.advance_to(epoch_base);
+                    let (_t, end) = engine
+                        .begin_epoch_at(
+                            epoch,
+                            leader.as_ref(),
+                            mem,
+                            &links,
+                            &mut stats,
+                            timeline,
+                            epoch_base,
+                        )
+                        .unwrap();
+                    tier_ends.push(end);
+                }
+                for (shard, (engine, _mem, timeline)) in lanes.iter_mut().enumerate() {
+                    let own = &targets[shard];
+                    let mut compute_ends: Vec<Duration> = Vec::new();
+                    for chunk in own.chunks(batch).take(per_shard) {
+                        leader.sample_batch_into(chunk, &ds.labels, &mut slot).unwrap();
+                        engine.plan_batch(&slot.input_nodes);
+                        let n = slot.input_nodes.len() * dim;
+                        ds.features.slice_runs_into(
+                            &slot.input_nodes,
+                            engine.last_plan().runs(),
+                            &mut x0[..n],
+                        );
+                        // batch i's transfer chain is released by batch
+                        // i-1-K's compute (the trainer's dependency rule)
+                        let dep = if compute_ends.len() > prefetch {
+                            compute_ends[compute_ends.len() - 1 - prefetch]
+                        } else {
+                            tier_ends[shard]
+                        };
+                        let (_t, _missed, mut chain_end) =
+                            engine.serve_planned_at(&links, &mut stats, timeline, dep);
+                        let (_local, remote) = router.count(shard as u32, &slot.input_nodes);
+                        if remote > 0 {
+                            let before = stats.modeled(LinkKind::Inter);
+                            stats.charge(&links, LinkKind::Inter, remote * row_bytes);
+                            let d = stats.modeled(LinkKind::Inter).saturating_sub(before);
+                            if d > Duration::ZERO {
+                                chain_end = timeline.reserve(Lane::Inter, chain_end, d);
+                            }
+                        }
+                        let compute_end = timeline.reserve(
+                            Lane::Compute,
+                            chain_end,
+                            compute_time(slot.input_nodes.len()),
+                        );
+                        compute_ends.push(compute_end);
+                    }
+                }
+            }
+            let makespan = lanes.iter().map(|(.., t)| t.frontier()).max().unwrap_or_default();
+            let serial: Duration = lanes.iter().map(|(.., t)| t.serial_sum()).sum();
+            let efficiency = if serial > Duration::ZERO {
+                1.0 - makespan.as_secs_f64() / serial.as_secs_f64()
+            } else {
+                0.0
+            };
+            let mb = |b: u64| b as f64 / (1 << 20) as f64;
+            println!(
+                "{topo_name:>5} {prefetch:>9} {:>12.4} {:>12.4} {:>8.1}% {:>10.1} {:>10.1}",
+                makespan.as_secs_f64(),
+                serial.as_secs_f64(),
+                100.0 * efficiency,
+                mb(stats.h2d_bytes),
+                mb(stats.inter_bytes),
+            );
+            entries.push(json::obj(vec![
+                ("topo", Json::Str(topo_name.to_string())),
+                ("prefetch", Json::Num(prefetch as f64)),
+                ("makespan_secs", Json::Num(makespan.as_secs_f64())),
+                ("serial_secs", Json::Num(serial.as_secs_f64())),
+                ("overlap_efficiency", Json::Num(efficiency)),
+                ("h2d_bytes", Json::Num(stats.h2d_bytes as f64)),
+                ("inter_bytes", Json::Num(stats.inter_bytes as f64)),
+                ("inter_secs", Json::Num(stats.modeled_inter.as_secs_f64())),
+            ]));
+            for (engine, mem, _) in &mut lanes {
+                engine.release(mem);
+            }
+        }
+    }
+
+    if let Some(path) = args.get("json") {
+        let doc = json::bench_doc(
+            "overlap_pipeline",
+            vec![
+                ("workload", Json::Str(format!("products-s x{scale}"))),
+                ("method", Json::Str(method.clone())),
+                ("shards", Json::Num(shards as f64)),
+                ("smoke", Json::Bool(smoke)),
+                ("epochs", Json::Num(epochs as f64)),
+                ("configs", json::arr(entries)),
+            ],
+        );
+        std::fs::write(path, doc.to_string_pretty())
+            .unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
+    }
+}

@@ -40,6 +40,12 @@ const TRAIN_FLAGS: &[(&str, &str)] = &[
         "shorthand for the method param faults=crash@epoch=E[:batch=B] — deterministic \
          crash injection (docs/SNAPSHOT.md)",
     ),
+    (
+        "prefetch",
+        "shorthand for the method param prefetch=K — async pipeline depth: 0 = serial \
+         modeled schedule, K >= 1 overlaps batch N+K's transfers with batch N's compute \
+         (docs/TOPOLOGY.md)",
+    ),
 ];
 
 fn main() {
@@ -110,6 +116,17 @@ fn run(args: &Args) -> Result<()> {
             if let Some(v) = args.get("faults") {
                 spec = spec.with("faults", v);
             }
+            // prefetch= is an Int param, so the shorthand goes through the
+            // registry's typed parse like the gns shorthands above
+            if let Some(v) = args.get("prefetch") {
+                let builder = registry.get(&spec.name).map_err(anyhow::Error::new)?;
+                let info = gns::sampling::spec::param_info(builder, "prefetch")
+                    .map_err(anyhow::Error::new)?;
+                let value = ParamValue::parse_as(info.kind, v).ok_or_else(|| {
+                    anyhow::anyhow!("--prefetch expects a {}, got {v:?}", info.kind)
+                })?;
+                spec = spec.with("prefetch", value);
+            }
             println!(
                 "training {} ({spec}) on {dataset} (scale {}, {} epochs, {} worker(s))",
                 registry.label(&spec),
@@ -149,20 +166,34 @@ fn run(args: &Args) -> Result<()> {
                     gns::util::fmt_bytes(last.transfer.d2d_bytes),
                     gns::util::fmt_bytes(last.transfer.bytes_saved_by_cache),
                 );
-                // per-link run totals against the modeled topology
+                // per-link run totals against the modeled topology, with
+                // each link's occupancy on the async timeline (busy vs
+                // idle relative to the critical-path makespan)
                 let totals = r.transfer_totals();
+                let tl = r.timeline_totals();
                 let link_line: Vec<String> = totals
                     .links()
                     .iter()
                     .map(|(link, bytes, modeled)| {
+                        let lane = gns::topology::Lane::from(*link);
                         format!(
-                            "{link} {} / {:.3}s",
+                            "{link} {} / {:.3}s (busy {:.3}s · idle {:.3}s)",
                             gns::util::fmt_bytes(*bytes),
-                            modeled.as_secs_f64()
+                            modeled.as_secs_f64(),
+                            tl.busy_for(lane).as_secs_f64(),
+                            tl.idle_for(lane).as_secs_f64(),
                         )
                     })
                     .collect();
                 println!("links: {}", link_line.join("  ·  "));
+                println!(
+                    "overlap: compute busy {:.3}s · makespan {:.3}s vs serial {:.3}s — \
+                     {:.1}% overlapped",
+                    tl.busy_for(gns::topology::Lane::Compute).as_secs_f64(),
+                    r.modeled_makespan_secs(),
+                    r.modeled_serial_secs(),
+                    100.0 * tl.overlap_efficiency(),
+                );
             }
             if r.shards.len() > 1 {
                 for s in &r.shards {

@@ -38,7 +38,9 @@ use crate::serving::{effective_spec, generate_requests, run_open_loop, ServeRepo
 use crate::shard::{ShardReport, ShardRouter, ShardSpec};
 use crate::snapshot::{CkptSpec, FaultSpec, SnapshotStore, SNAPSHOT_VERSION};
 use crate::tiering::{CachePolicy, SamplerPolicy, TieringEngine};
-use crate::topology::{HardwareTopology, LinkClock, LinkKind, TransferStats};
+use crate::topology::{
+    HardwareTopology, Lane, LinkClock, LinkKind, Timeline, TimelineStats, TransferStats,
+};
 use crate::util::json::Json;
 use crate::util::rng::{streams, Pcg};
 use crate::util::timer::{Stage, StageClock};
@@ -60,6 +62,12 @@ pub struct EpochReport {
     pub total_with_model: Duration,
     pub clock: StageClock,
     pub transfer: TransferStats,
+    /// Occupancy roll-up of the epoch's modeled schedule: per-lane busy
+    /// seconds (summed across shard devices) plus the critical-path
+    /// **makespan**. Under `prefetch=0` the makespan equals the serial
+    /// sum per device; `prefetch=K` overlaps transfer chains with
+    /// compute and shrinks it (docs/TOPOLOGY.md §Overlap & prefetch).
+    pub timeline: TimelineStats,
     pub batches: usize,
     /// Table 4 telemetry (averages per mini-batch).
     pub avg_input_nodes: f64,
@@ -97,7 +105,9 @@ impl EpochReport {
     /// patterns so the report history of a resumed run compares equal —
     /// `to_bits`-equal, not approximately — to an uninterrupted one.
     pub fn to_json(&self) -> Json {
-        use crate::snapshot::ser::{clock_to_json, duration, f64_bits, stats_to_json};
+        use crate::snapshot::ser::{
+            clock_to_json, duration, f64_bits, stats_to_json, timeline_stats_to_json,
+        };
         crate::util::json::obj(vec![
             ("epoch", Json::Num(self.epoch as f64)),
             ("mean_loss", f64_bits(self.mean_loss)),
@@ -107,6 +117,7 @@ impl EpochReport {
             ("total_with_model", duration(self.total_with_model)),
             ("clock", clock_to_json(&self.clock)),
             ("transfer", stats_to_json(&self.transfer)),
+            ("timeline", timeline_stats_to_json(&self.timeline)),
             ("batches", Json::Num(self.batches as f64)),
             ("avg_input_nodes", f64_bits(self.avg_input_nodes)),
             ("avg_cached_inputs", f64_bits(self.avg_cached_inputs)),
@@ -119,6 +130,7 @@ impl EpochReport {
     pub fn from_json(j: &Json) -> Result<EpochReport> {
         use crate::snapshot::ser::{
             clock_from_json, req_duration, req_f64_bits, req_usize, stats_from_json,
+            timeline_stats_from_json,
         };
         Ok(EpochReport {
             epoch: req_usize(j, "epoch")?,
@@ -130,6 +142,9 @@ impl EpochReport {
             clock: clock_from_json(j.get("clock").context("snapshot: report missing clock")?)?,
             transfer: stats_from_json(
                 j.get("transfer").context("snapshot: report missing transfer")?,
+            )?,
+            timeline: timeline_stats_from_json(
+                j.get("timeline").context("snapshot: report missing timeline")?,
             )?,
             batches: req_usize(j, "batches")?,
             avg_input_nodes: req_f64_bits(j, "avg_input_nodes")?,
@@ -165,6 +180,15 @@ pub struct TrainOptions {
     /// + device tier) per shard. The default single shard is the
     /// unsharded pipeline.
     pub shards: ShardSpec,
+    /// transfer pipeline depth (`prefetch=K`, docs/TOPOLOGY.md §Overlap
+    /// & prefetch): batch `i`'s modeled transfer chain may start as soon
+    /// as batch `i-1-K`'s modeled compute finished, so up to K batches
+    /// of gather-miss h2d / cross-shard inter traffic overlap compute on
+    /// the occupancy timeline. `0` (the default) chains every charge
+    /// serially — the epoch makespan equals the serial sum exactly, and
+    /// every byte/second ledger is identical for *any* K (overlap moves
+    /// seconds, never creates or destroys them).
+    pub prefetch: usize,
     /// crash-safe checkpointing (`ckpt=every=N[:dir=PATH][:keep=K]`,
     /// docs/SNAPSHOT.md). `None` disables the snapshot subsystem.
     pub ckpt: Option<CkptSpec>,
@@ -190,6 +214,7 @@ impl Default for TrainOptions {
             compute_model: ComputeModel::default(),
             paranoid_validate: cfg!(debug_assertions),
             shards: ShardSpec::default(),
+            prefetch: 0,
             ckpt: None,
             faults: None,
             tag: String::new(),
@@ -219,6 +244,11 @@ struct ShardLane {
     batches: u64,
     local_rows: u64,
     remote_rows: u64,
+    /// this device's occupancy timeline (h2d/d2d/inter links + compute
+    /// lane): every modeled charge reserves an interval here so epoch
+    /// wall time can be the critical-path makespan under `prefetch=K`.
+    /// Cumulative across the run and snapshotted with the lane.
+    timeline: Timeline,
 }
 
 pub struct Trainer {
@@ -288,6 +318,7 @@ impl Trainer {
                 batches: 0,
                 local_rows: 0,
                 remote_rows: 0,
+                timeline: Timeline::default(),
             });
         }
         Ok(Trainer {
@@ -424,6 +455,7 @@ impl Trainer {
                             l.batches = 0;
                             l.local_rows = 0;
                             l.remote_rows = 0;
+                            l.timeline = Timeline::default();
                         }
                         leader = factory(0);
                         workers = (1..=opts.workers.max(1)).map(|w| factory(w)).collect();
@@ -489,7 +521,7 @@ impl Trainer {
         workers: &[Box<dyn Sampler>],
         reports: &[EpochReport],
     ) -> Result<Json> {
-        use crate::snapshot::ser::{rng_to_json, u64s};
+        use crate::snapshot::ser::{rng_to_json, timeline_to_json, u64s};
         let mut samplers = vec![leader.snapshot_state()];
         samplers.extend(workers.iter().map(|w| w.snapshot_state()));
         let lanes: Vec<Json> = self
@@ -503,6 +535,10 @@ impl Trainer {
                     ("local_rows", u64s(l.local_rows)),
                     ("remote_rows", u64s(l.remote_rows)),
                     ("device_peak", u64s(l.device_mem.peak())),
+                    // busy-until/occupancy frontier: a resumed schedule
+                    // continues from the exact instant the crash left,
+                    // so makespans stay bit-identical with prefetch>0
+                    ("timeline", timeline_to_json(&l.timeline)),
                 ])
             })
             .collect();
@@ -540,7 +576,9 @@ impl Trainer {
         rng: &mut Pcg,
         reports: &mut Vec<EpochReport>,
     ) -> Result<usize> {
-        use crate::snapshot::ser::{nodes_arr, nodes_from, req_u64, req_usize, rng_from_json, u64s};
+        use crate::snapshot::ser::{
+            nodes_arr, nodes_from, req_u64, req_usize, rng_from_json, timeline_from_json, u64s,
+        };
         let version = req_u64(doc, "version")?;
         anyhow::ensure!(
             version == SNAPSHOT_VERSION,
@@ -608,6 +646,9 @@ impl Trainer {
                 l.local_rows = req_u64(lj, "local_rows")?;
                 l.remote_rows = req_u64(lj, "remote_rows")?;
                 l.device_mem.restore_peak(req_u64(lj, "device_peak")?);
+                l.timeline = timeline_from_json(
+                    lj.get("timeline").context("snapshot: lane missing timeline")?,
+                )?;
             }
         } else {
             eprintln!(
@@ -623,7 +664,19 @@ impl Trainer {
             let mut delta_up = 0u64;
             let mut delta_reused = 0u64;
             let (mut batches, mut local, mut remote, mut peak) = (0u64, 0u64, 0u64, 0u64);
+            // occupancy collapses like the other ledgers: busy seconds
+            // sum onto lane 0 (run totals conserved), every new lane
+            // restarts from the old fleet's latest frontier
+            let mut frontier = Duration::ZERO;
+            let mut busy = [Duration::ZERO; 4];
             for lj in lanes_j {
+                let tl = timeline_from_json(
+                    lj.get("timeline").context("snapshot: lane missing timeline")?,
+                )?;
+                frontier = frontier.max(tl.frontier());
+                for lane in Lane::ALL {
+                    busy[lane.index()] += tl.busy(lane);
+                }
                 let tier = lj.get("tier").context("snapshot: lane missing tier")?;
                 for v in nodes_from(tier.get("nodes").context("snapshot: tier missing nodes")?)? {
                     if seen.insert(v) {
@@ -660,6 +713,10 @@ impl Trainer {
                     l.remote_rows = 0;
                 }
                 l.device_mem.restore_peak(peak);
+                l.timeline = Timeline::from_raw(
+                    [frontier; 4],
+                    if i == 0 { busy } else { [Duration::ZERO; 4] },
+                );
             }
         }
         leader.restore_state(&samplers[0])?;
@@ -704,12 +761,38 @@ impl Trainer {
         let links = LinkClock::new(opts.topology.clone());
         let epoch_start = Instant::now();
 
+        // occupancy epoch base: every device starts this epoch's schedule
+        // from one common frontier (epoch boundaries are barriers — the
+        // leader republishes the tier and validation syncs the devices)
+        let epoch_base = self
+            .lanes
+            .iter()
+            .map(|l| l.timeline.frontier())
+            .max()
+            .unwrap_or_default();
+        for l in &mut self.lanes {
+            l.timeline.advance_to(epoch_base);
+        }
+        let timeline_base: Vec<Timeline> =
+            self.lanes.iter().map(|l| l.timeline.clone()).collect();
+
         // leader first (it refreshes the shared GNS cache), then every
         // lane uploads its own device replica of the published tier, then
-        // the workers re-snapshot the fresh epoch state
+        // the workers re-snapshot the fresh epoch state. The upload is
+        // each device's first reservation of the epoch: batch 0's
+        // transfer chain depends on it.
         leader.begin_epoch(epoch);
+        let mut tier_ends = Vec::with_capacity(self.lanes.len());
         for lane in 0..self.lanes.len() {
-            self.sync_cache(lane, epoch, &*leader, &links, &mut clock, &mut transfer)?;
+            tier_ends.push(self.sync_cache(
+                lane,
+                epoch,
+                &*leader,
+                &links,
+                &mut clock,
+                &mut transfer,
+                epoch_base,
+            )?);
         }
         for s in &mut workers {
             s.begin_epoch(epoch);
@@ -723,7 +806,6 @@ impl Trainer {
         let mut sum_cached = 0usize;
         let mut isolated = 0usize;
         let mut truncated = 0usize;
-        let multi_shard = self.router.num_shards() > 1;
 
         for lane in 0..self.lanes.len() {
             // each lane shuffles its own targets; with one lane this is
@@ -743,6 +825,12 @@ impl Trainer {
             );
 
             let mut lane_batches = 0usize;
+            // pipeline dependency edges: batch i's transfer chain may
+            // start once batch i-1-prefetch's modeled compute finished
+            // (prefetch=0 ⇒ strictly serial chain). The first 1+K
+            // batches depend only on this lane's tier upload.
+            let tier_end = tier_ends[lane];
+            let mut compute_ends: Vec<Duration> = Vec::new();
             // Any failure inside the drain loop must close the queue and
             // join the workers — otherwise producers blocked on a full
             // queue would outlive the epoch as zombie threads.
@@ -765,10 +853,18 @@ impl Trainer {
                         break;
                     }
                 }
-                let out =
-                    match self.run_train_batch(lane, &mb, opts, &links, &mut clock, &mut transfer)
-                    {
-                    Ok(out) => out,
+                let dep = if lane_batches > opts.prefetch {
+                    compute_ends[lane_batches - 1 - opts.prefetch]
+                } else {
+                    tier_end
+                };
+                let out = match self
+                    .run_train_batch(lane, &mb, opts, &links, &mut clock, &mut transfer, dep)
+                {
+                    Ok((out, compute_end)) => {
+                        compute_ends.push(compute_end);
+                        out
+                    }
                     Err(e) => {
                         self.buffer_pool.put(mb);
                         epoch_err = Some(e);
@@ -784,25 +880,6 @@ impl Trainer {
                 sum_cached += mb.stats.cached_inputs;
                 isolated += mb.stats.isolated_nodes;
                 truncated += mb.stats.truncated_neighbors;
-                // shard ledger: rows owned by this lane's shard are
-                // local, the rest are remote fetches from their owner —
-                // charged as one batched fetch on the `inter` link (zero
-                // modeled seconds on single-box topologies; see
-                // docs/TOPOLOGY.md). The single-shard path skips the
-                // per-row probe.
-                if multi_shard {
-                    let (local, remote) =
-                        self.router.count(self.lanes[lane].shard, &mb.input_nodes);
-                    self.lanes[lane].local_rows += local;
-                    self.lanes[lane].remote_rows += remote;
-                    if remote > 0 {
-                        let t =
-                            transfer.charge(&links, LinkKind::Inter, remote * self.row_bytes);
-                        clock.add_modeled(Stage::Copy, t);
-                    }
-                } else {
-                    self.lanes[lane].local_rows += mb.input_nodes.len() as u64;
-                }
                 self.lanes[lane].batches += 1;
                 // return the drained slot to the workers (recycling channel)
                 self.buffer_pool.put(mb);
@@ -847,6 +924,29 @@ impl Trainer {
             self.evaluate(leader, &dataset.val, opts.eval_batches)
         })?;
 
+        // epoch-end barrier: shard devices ran in parallel, so the
+        // epoch's modeled wall time is the slowest device's schedule;
+        // every lane then syncs to that frontier for the next epoch.
+        let epoch_end = self
+            .lanes
+            .iter()
+            .map(|l| l.timeline.frontier())
+            .max()
+            .unwrap_or(epoch_base);
+        for l in &mut self.lanes {
+            l.timeline.advance_to(epoch_end);
+        }
+        let mut timeline = TimelineStats {
+            busy: [Duration::ZERO; 4],
+            makespan: epoch_end.saturating_sub(epoch_base),
+        };
+        for (l, base) in self.lanes.iter().zip(&timeline_base) {
+            let s = l.timeline.stats_since(base);
+            for lane in Lane::ALL {
+                timeline.busy[lane.index()] += s.busy_for(lane);
+            }
+        }
+
         let wall = epoch_start.elapsed();
         let modeled = transfer.modeled_total();
         let report = EpochReport {
@@ -858,6 +958,7 @@ impl Trainer {
             total_with_model: wall + modeled,
             clock,
             transfer,
+            timeline,
             batches,
             avg_input_nodes: sum_inputs as f64 / batches.max(1) as f64,
             avg_cached_inputs: sum_cached as f64 / batches.max(1) as f64,
@@ -869,7 +970,10 @@ impl Trainer {
 
     /// Consult one lane's cache policy and (delta-)upload the epoch's
     /// resident feature rows to that lane's device if the tier generation
-    /// changed.
+    /// changed. The upload is reserved on the lane's occupancy timeline
+    /// chained from `ready` (the epoch base); returns the chain end —
+    /// the earliest instant the lane's first batches may start moving.
+    #[allow(clippy::too_many_arguments)]
     fn sync_cache(
         &mut self,
         lane: usize,
@@ -878,17 +982,31 @@ impl Trainer {
         links: &LinkClock,
         clock: &mut StageClock,
         transfer: &mut TransferStats,
-    ) -> Result<()> {
+        ready: Duration,
+    ) -> Result<Duration> {
         let l = &mut self.lanes[lane];
-        let t = l
+        let (t, end) = l
             .tiering
-            .begin_epoch(epoch, sampler, &mut l.device_mem, links, transfer)
+            .begin_epoch_at(
+                epoch,
+                sampler,
+                &mut l.device_mem,
+                links,
+                transfer,
+                &mut l.timeline,
+                ready,
+            )
             .context("upload feature tier to device")?;
         clock.add_modeled(Stage::Copy, t);
-        Ok(())
+        Ok(end)
     }
 
-    /// Steps 2–6 for one sampled batch, against one lane's device.
+    /// Steps 2–6 for one sampled batch, against one lane's device. The
+    /// batch's transfer chain is reserved on the lane's timeline starting
+    /// at `xfer_ready` (its `prefetch=K` dependency edge) and its modeled
+    /// compute after the chain; returns the step output plus the compute
+    /// finish — the dependency handle for batch `i+1+K`.
+    #[allow(clippy::too_many_arguments)]
     fn run_train_batch(
         &mut self,
         lane: usize,
@@ -897,8 +1015,30 @@ impl Trainer {
         links: &LinkClock,
         clock: &mut StageClock,
         transfer: &mut TransferStats,
-    ) -> Result<crate::runtime::StepOutput> {
-        self.assemble_x0(lane, mb, links, clock, transfer);
+        xfer_ready: Duration,
+    ) -> Result<(crate::runtime::StepOutput, Duration)> {
+        let (_slice, _copy, mut chain_end) =
+            self.assemble_x0(lane, mb, links, clock, transfer, xfer_ready);
+        // shard ledger: rows owned by this lane's shard are local, the
+        // rest are remote fetches from their owner — charged as one
+        // batched fetch on the `inter` link riding the same transfer
+        // chain (zero modeled seconds on single-box topologies; see
+        // docs/TOPOLOGY.md). The single-shard path skips the per-row
+        // probe.
+        if self.router.num_shards() > 1 {
+            let (local, remote) = self.router.count(self.lanes[lane].shard, &mb.input_nodes);
+            self.lanes[lane].local_rows += local;
+            self.lanes[lane].remote_rows += remote;
+            if remote > 0 {
+                let t = transfer.charge(links, LinkKind::Inter, remote * self.row_bytes);
+                clock.add_modeled(Stage::Copy, t);
+                if t > Duration::ZERO {
+                    chain_end = self.lanes[lane].timeline.reserve(Lane::Inter, chain_end, t);
+                }
+            }
+        } else {
+            self.lanes[lane].local_rows += mb.input_nodes.len() as u64;
+        }
         let t0 = Instant::now();
         let out = self
             .runtime
@@ -908,21 +1048,24 @@ impl Trainer {
         // measurable separately, so Update counts the bookkeeping only.
         clock.add_measured(Stage::Compute, t0.elapsed());
         // device-frame compute estimate (as-if-T4; see ComputeModel docs)
-        clock.add_modeled(
-            Stage::Compute,
-            opts.compute_model.train_step_time(&self.runtime.meta),
-        );
+        let t_compute = opts.compute_model.train_step_time(&self.runtime.meta);
+        clock.add_modeled(Stage::Compute, t_compute);
+        // compute occupies the device once its own transfers are in
+        let compute_end = self.lanes[lane].timeline.reserve(Lane::Compute, chain_end, t_compute);
         let t1 = Instant::now();
         clock.add_measured(Stage::Update, t1.elapsed());
-        Ok(out)
+        Ok((out, compute_end))
     }
 
     /// Host slice (step 2) + modeled transfer (step 3) for the input block.
     /// One `GatherPlan` per lane partitions the input nodes into hit/miss
     /// runs; both the host gather and the transfer accounting read it.
-    /// Returns (measured slice, modeled copy) so the serving lane can
-    /// charge per-batch latency from the same accounting the epoch report
-    /// uses — callers that only need the clock totals ignore the value.
+    /// The miss/hit/metadata charges are reserved on the lane's timeline
+    /// as a chain starting at `xfer_ready` (the batch's `prefetch=K`
+    /// dependency edge). Returns (measured slice, modeled copy, chain
+    /// end) so the serving lane can charge per-batch latency from the
+    /// same accounting the epoch report uses — callers that only need
+    /// the clock totals ignore the value.
     fn assemble_x0(
         &mut self,
         lane: usize,
@@ -930,7 +1073,8 @@ impl Trainer {
         links: &LinkClock,
         clock: &mut StageClock,
         transfer: &mut TransferStats,
-    ) -> (Duration, Duration) {
+        xfer_ready: Duration,
+    ) -> (Duration, Duration, Duration) {
         let dim = self.dataset.features.dim();
         let t0 = Instant::now();
         let n = mb.input_nodes.len();
@@ -947,7 +1091,10 @@ impl Trainer {
         let slice = t0.elapsed();
         clock.add_measured(Stage::Slice, slice);
 
-        let (t_copy, _missed) = self.lanes[lane].tiering.serve_planned(links, transfer);
+        let (t_copy, _missed, mut chain_end) = {
+            let l = &mut self.lanes[lane];
+            l.tiering.serve_planned_at(links, transfer, &mut l.timeline, xfer_ready)
+        };
         // block metadata (idx/w/self/labels) also crosses PCIe
         let meta_bytes: u64 = mb
             .layers
@@ -956,9 +1103,12 @@ impl Trainer {
             .sum::<u64>()
             + (mb.labels.len() * 4 + mb.mask.len() * 4) as u64;
         let t_meta = transfer.charge(links, LinkKind::H2d, meta_bytes);
+        if t_meta > Duration::ZERO {
+            chain_end = self.lanes[lane].timeline.reserve(Lane::H2d, chain_end, t_meta);
+        }
         let copy = t_copy + t_meta;
         clock.add_modeled(Stage::Copy, copy);
-        (slice, copy)
+        (slice, copy, chain_end)
     }
 
     /// Micro-F1 over up to `max_batches` batches of `targets`, using the
@@ -1038,11 +1188,25 @@ impl Trainer {
         // device-resident rows that fed training now serve inference, and
         // the (delta) upload lands in this report's h2d ledger
         sampler.begin_epoch(opts.epochs);
-        self.sync_cache(0, opts.epochs, &*sampler, &links, &mut clock, &mut transfer)?;
+        // the admission queue dispatches against the same occupancy
+        // timeline training used: lane 0's schedule continues from its
+        // training frontier and the warm-up upload is its first serving
+        // reservation, so queueing delay reflects real link occupancy
+        let serve_base = self.lanes[0].timeline.frontier();
+        let tier_end = self.sync_cache(
+            0,
+            opts.epochs,
+            &*sampler,
+            &links,
+            &mut clock,
+            &mut transfer,
+            serve_base,
+        )?;
         let (h0, m0) = self.lanes[0].tiering.hits_misses();
         let requests = generate_requests(&spec, targets, opts.seed);
         let shapes = self.runtime.meta.block_shapes();
         let pool = Arc::clone(&self.buffer_pool);
+        let mut compute_ends: Vec<Duration> = Vec::new();
         let stats = run_open_loop(&spec, &requests, &pool, |slot, chunk| {
             let t0 = Instant::now();
             sampler.sample_batch_into(chunk, &self.dataset.labels, slot)?;
@@ -1051,16 +1215,34 @@ impl Trainer {
             if opts.paranoid_validate {
                 validate_batch(slot, &shapes).map_err(anyhow::Error::msg)?;
             }
-            let (slice, copy) = self.assemble_x0(0, slot, &links, &mut clock, &mut transfer);
+            // same prefetch=K dependency rule as the train loop: this
+            // batch's transfers may start once batch i-1-K's compute
+            // finished (the first 1+K batches wait only for the tier)
+            let dep = if compute_ends.len() > opts.prefetch {
+                compute_ends[compute_ends.len() - 1 - opts.prefetch]
+            } else {
+                tier_end
+            };
+            let (slice, copy, chain_end) =
+                self.assemble_x0(0, slot, &links, &mut clock, &mut transfer, dep);
             let compute = opts.compute_model.eval_step_time(&self.runtime.meta);
             clock.add_modeled(Stage::Compute, compute);
+            let prev_end = self.lanes[0].timeline.busy_until(Lane::Compute).max(tier_end);
+            let compute_end = self.lanes[0].timeline.reserve(Lane::Compute, chain_end, compute);
+            compute_ends.push(compute_end);
             let t1 = Instant::now();
             self.runtime.eval_step(&self.state, slot, &self.x0_scratch)?;
             clock.add_measured(Stage::Compute, t1.elapsed());
-            Ok(sample.as_secs_f64() / PAPER_SAMPLER_WORKERS
-                + slice.as_secs_f64()
-                + copy.as_secs_f64()
-                + compute.as_secs_f64())
+            // prefetch=0 keeps the exact legacy serial accounting;
+            // prefetch>0 charges the device frame the batch actually
+            // occupies on the timeline — transfer seconds hidden under
+            // an earlier batch's compute come off the service time
+            let device = if opts.prefetch == 0 {
+                copy.as_secs_f64() + compute.as_secs_f64()
+            } else {
+                compute_end.saturating_sub(prev_end).as_secs_f64()
+            };
+            Ok(sample.as_secs_f64() / PAPER_SAMPLER_WORKERS + slice.as_secs_f64() + device)
         })?;
         // hit/miss deltas: the engine's counters are cumulative across
         // training, the report covers only the serving window

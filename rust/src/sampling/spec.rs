@@ -518,8 +518,42 @@ pub fn fault_spec(spec: &MethodSpec) -> anyhow::Result<Option<crate::snapshot::F
         .map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))
 }
 
-const NS_PARAMS: &[ParamInfo] =
-    &[CACHE_PARAM, SHARD_PARAM, TOPO_PARAM, SERVE_PARAM, CKPT_PARAM, FAULTS_PARAM];
+/// The `prefetch=` parameter every method accepts: the pipeline depth of
+/// the async timeline clock ([`crate::topology::Timeline`]). `0` (the
+/// default) keeps the strictly serial schedule — every modeled charge
+/// chains behind the previous one, and the epoch makespan equals the
+/// serial sum exactly. `K >= 1` lets batch N+K's transfers start while
+/// batch N computes, overlapping communication with compute.
+pub const PREFETCH_PARAM: ParamInfo = ParamInfo {
+    key: "prefetch",
+    kind: ParamKind::Int,
+    default: "0",
+    help: "async pipeline depth: 0 = serial modeled schedule, K >= 1 overlaps \
+           batch N+K's transfers with batch N's compute",
+};
+
+/// Parse + validate a spec's `prefetch=` parameter. Shared by every
+/// builder (build-time rejection of bad depths) and by the session layer
+/// that hands the depth to the trainer.
+pub fn prefetch_spec(spec: &MethodSpec) -> anyhow::Result<usize> {
+    match spec.get("prefetch") {
+        None => Ok(0),
+        Some(v) => match v.as_u64() {
+            Some(k) => Ok(k as usize),
+            None => anyhow::bail!("{}: prefetch must be a non-negative integer", spec.name),
+        },
+    }
+}
+
+const NS_PARAMS: &[ParamInfo] = &[
+    CACHE_PARAM,
+    SHARD_PARAM,
+    TOPO_PARAM,
+    SERVE_PARAM,
+    CKPT_PARAM,
+    FAULTS_PARAM,
+    PREFETCH_PARAM,
+];
 
 struct NsBuilder;
 
@@ -551,6 +585,7 @@ impl MethodBuilder for NsBuilder {
         serve_spec(spec)?;
         ckpt_spec(spec)?;
         fault_spec(spec)?;
+        prefetch_spec(spec)?;
         let graph = ctx.graph.clone();
         let shapes = ctx.shapes.clone();
         let seed = ctx.seed;
@@ -575,6 +610,7 @@ const LADIES_PARAMS: &[ParamInfo] = &[
     SERVE_PARAM,
     CKPT_PARAM,
     FAULTS_PARAM,
+    PREFETCH_PARAM,
 ];
 
 impl MethodBuilder for LadiesBuilder {
@@ -618,6 +654,7 @@ impl MethodBuilder for LadiesBuilder {
         serve_spec(spec)?;
         ckpt_spec(spec)?;
         fault_spec(spec)?;
+        prefetch_spec(spec)?;
         let s_layer = spec.usize_or("s-layer", 512);
         anyhow::ensure!(s_layer >= 1, "ladies: s-layer must be >= 1");
         let graph = ctx.graph.clone();
@@ -655,6 +692,7 @@ const LAZYGCN_PARAMS: &[ParamInfo] = &[
     SERVE_PARAM,
     CKPT_PARAM,
     FAULTS_PARAM,
+    PREFETCH_PARAM,
 ];
 
 impl MethodBuilder for LazyGcnBuilder {
@@ -685,6 +723,7 @@ impl MethodBuilder for LazyGcnBuilder {
         serve_spec(spec)?;
         ckpt_spec(spec)?;
         fault_spec(spec)?;
+        prefetch_spec(spec)?;
         let recycle_period = spec.usize_or("recycle-period", 2);
         let rho = spec.f64_or("rho", 1.1);
         anyhow::ensure!(recycle_period >= 1, "lazygcn: recycle-period must be >= 1");
@@ -744,6 +783,7 @@ const GNS_PARAMS: &[ParamInfo] = &[
     SERVE_PARAM,
     CKPT_PARAM,
     FAULTS_PARAM,
+    PREFETCH_PARAM,
 ];
 
 impl MethodBuilder for GnsBuilder {
@@ -774,6 +814,7 @@ impl MethodBuilder for GnsBuilder {
         serve_spec(spec)?;
         ckpt_spec(spec)?;
         fault_spec(spec)?;
+        prefetch_spec(spec)?;
         let cache_fraction = spec.f64_or("cache-fraction", 0.01);
         let update_period = spec.usize_or("update-period", 1);
         anyhow::ensure!(

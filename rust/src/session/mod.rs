@@ -34,15 +34,15 @@ use crate::graph::{CsrGraph, NodeId};
 use crate::pipeline::{EpochReport, TrainOptions, Trainer};
 use crate::runtime::{artifacts_root, ArtifactMeta, Runtime};
 use crate::sampling::spec::{
-    cache_policy_spec, ckpt_spec, fault_spec, serve_spec, shard_spec, topo_spec, BuildContext,
-    MethodRegistry, MethodSpec, SamplerFactory, SpecError,
+    cache_policy_spec, ckpt_spec, fault_spec, prefetch_spec, serve_spec, shard_spec, topo_spec,
+    BuildContext, MethodRegistry, MethodSpec, SamplerFactory, SpecError,
 };
 use crate::sampling::BlockShapes;
 use crate::serving::{ServeReport, ServeSpec};
 use crate::shard::{ShardReport, ShardSpec};
 use crate::snapshot::{CkptSpec, FaultSpec};
 use crate::tiering::{build_policies, TierBuild, PRESAMPLE_WORKER, WARMUP_BATCHES};
-use crate::topology::{HardwareTopology, TransferStats};
+use crate::topology::{HardwareTopology, TimelineStats, TransferStats};
 use std::fmt;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -152,6 +152,33 @@ impl RunResult {
         self.transfer_totals().modeled_inter.as_secs_f64()
     }
 
+    /// Async-timeline occupancy summed over every epoch: per-lane busy
+    /// seconds plus the critical-path makespan (docs/TOPOLOGY.md
+    /// §Overlap & prefetch). Busy seconds are invariant under the
+    /// `prefetch=` depth; only the makespan shrinks with overlap.
+    pub fn timeline_totals(&self) -> TimelineStats {
+        let mut t = TimelineStats::default();
+        for r in &self.reports {
+            t.merge(&r.timeline);
+        }
+        t
+    }
+
+    /// Modeled critical-path epoch wall time summed over the run: the
+    /// makespan of the per-lane occupancy schedule. Equals
+    /// [`RunResult::modeled_serial_secs`] exactly when `prefetch=0` and
+    /// `shards=1`; strictly ≤ it otherwise.
+    pub fn modeled_makespan_secs(&self) -> f64 {
+        self.timeline_totals().makespan.as_secs_f64()
+    }
+
+    /// Sum of every modeled charge as if executed back-to-back (the
+    /// pre-overlap accounting). The overlap-efficiency headline is
+    /// `1 - makespan / serial`.
+    pub fn modeled_serial_secs(&self) -> f64 {
+        self.timeline_totals().serial_sum().as_secs_f64()
+    }
+
     /// Fraction of all served input rows that were shard-local (NaN when
     /// nothing was served; 1.0 for unsharded runs).
     pub fn local_fraction(&self) -> f64 {
@@ -219,6 +246,7 @@ pub struct SessionBuilder {
     serving: Option<ServeSpec>,
     checkpoint: Option<CkptSpec>,
     faults: Option<FaultSpec>,
+    prefetch: Option<usize>,
 }
 
 impl SessionBuilder {
@@ -248,6 +276,7 @@ impl SessionBuilder {
             serving: None,
             checkpoint: None,
             faults: None,
+            prefetch: None,
         }
     }
 
@@ -403,6 +432,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Async-pipeline depth override (docs/TOPOLOGY.md §Overlap &
+    /// prefetch). Takes precedence over the method spec's `prefetch=`
+    /// parameter; the default follows the spec (itself defaulting to `0`
+    /// — the strictly serial modeled schedule, bit-identical to the
+    /// pre-overlap accounting).
+    pub fn prefetch(mut self, k: usize) -> Self {
+        self.prefetch = Some(k);
+        self
+    }
+
     /// Resolve the spec, build the dataset, load + validate the artifact,
     /// and stand up the trainer and sampler factories.
     pub fn build(self) -> Result<Session, BuildError> {
@@ -437,6 +476,10 @@ impl SessionBuilder {
         let faults = match &self.faults {
             Some(f) => Some(f.clone()),
             None => fault_spec(&spec).map_err(BuildError::Runtime)?,
+        };
+        let prefetch = match self.prefetch {
+            Some(k) => k,
+            None => prefetch_spec(&spec).map_err(BuildError::Runtime)?,
         };
         // validate the dataset name up front (cheap) so a typo is reported
         // as such, not as a missing artifact for a nonsense name
@@ -521,10 +564,11 @@ impl SessionBuilder {
         // checkpoint-compatibility tag: dataset + scale + the method spec
         // *minus* the parameters a resume is allowed to change (elastic
         // resharding/topology, the checkpoint/fault config itself, the
-        // serving lane). A checkpoint whose tag differs is refused.
+        // serving lane, the prefetch depth). A checkpoint whose tag
+        // differs is refused.
         let tag = {
             let mut t = spec.clone();
-            for k in ["ckpt", "faults", "shards", "topo", "serve"] {
+            for k in ["ckpt", "faults", "shards", "topo", "serve", "prefetch"] {
                 t.params.remove(k);
             }
             format!("{}|scale={}|{}", self.dataset, self.scale, t)
@@ -541,6 +585,7 @@ impl SessionBuilder {
             compute_model: ComputeModel::default(),
             paranoid_validate: self.paranoid_validate,
             shards,
+            prefetch,
             ckpt,
             faults,
             tag,
@@ -874,6 +919,15 @@ mod tests {
         for bad in ["ns:faults=now", "ns:faults=crash@epoch=x", "ns:faults=oom@epoch=1"] {
             let err = Session::builder("yelp-s", bad).scale(0.03).build().unwrap_err();
             assert!(err.to_string().contains("faults"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn bad_prefetch_spec_fails_session_build() {
+        // `prefetch=` is validated before any artifact/dataset work too
+        for bad in ["ns:prefetch=deep", "ns:prefetch=-1", "ns:prefetch=1.5"] {
+            let err = Session::builder("yelp-s", bad).scale(0.03).build().unwrap_err();
+            assert!(err.to_string().contains("prefetch"), "{bad}: {err}");
         }
     }
 

@@ -38,4 +38,6 @@ pub use store::{decode, encode, fnv1a, SnapshotStore, WriteFault};
 /// Format version of the checkpoint payload (the JSON inside the
 /// checksummed envelope). Bump on incompatible payload changes; restore
 /// rejects mismatches instead of misinterpreting fields.
-pub const SNAPSHOT_VERSION: u64 = 1;
+/// v2: lanes and epoch reports carry async-timeline occupancy state
+/// (docs/TOPOLOGY.md §Overlap & prefetch).
+pub const SNAPSHOT_VERSION: u64 = 2;

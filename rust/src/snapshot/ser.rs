@@ -164,6 +164,65 @@ pub fn stats_to_json(t: &crate::topology::TransferStats) -> Json {
     ])
 }
 
+/// Timeline (occupancy) → `{lane: {busy_until, busy}}` for every lane,
+/// nanos strings — the async-clock state a resumed run needs so its
+/// schedule continues from the exact frontier the crash left
+/// (docs/TOPOLOGY.md §Overlap & prefetch).
+pub fn timeline_to_json(t: &crate::topology::Timeline) -> Json {
+    use crate::topology::Lane;
+    let (busy_until, busy) = t.raw();
+    let pairs = Lane::ALL
+        .iter()
+        .map(|&l| {
+            (
+                l.name(),
+                crate::util::json::obj(vec![
+                    ("busy_until", duration(busy_until[l.index()])),
+                    ("busy", duration(busy[l.index()])),
+                ]),
+            )
+        })
+        .collect();
+    crate::util::json::obj(pairs)
+}
+
+/// Inverse of [`timeline_to_json`].
+pub fn timeline_from_json(j: &Json) -> Result<crate::topology::Timeline> {
+    use crate::topology::{Lane, Timeline};
+    let mut busy_until = [Duration::ZERO; 4];
+    let mut busy = [Duration::ZERO; 4];
+    for &l in &Lane::ALL {
+        let e = j
+            .get(l.name())
+            .with_context(|| format!("snapshot: timeline missing lane {:?}", l.name()))?;
+        busy_until[l.index()] = req_duration(e, "busy_until")?;
+        busy[l.index()] = req_duration(e, "busy")?;
+    }
+    Ok(Timeline::from_raw(busy_until, busy))
+}
+
+/// TimelineStats (one epoch's occupancy roll-up) → `{makespan, busy:
+/// {lane: nanos}}`.
+pub fn timeline_stats_to_json(s: &crate::topology::TimelineStats) -> Json {
+    use crate::topology::Lane;
+    let busy = Lane::ALL.iter().map(|&l| (l.name(), duration(s.busy_for(l)))).collect();
+    crate::util::json::obj(vec![
+        ("makespan", duration(s.makespan)),
+        ("busy", crate::util::json::obj(busy)),
+    ])
+}
+
+/// Inverse of [`timeline_stats_to_json`].
+pub fn timeline_stats_from_json(j: &Json) -> Result<crate::topology::TimelineStats> {
+    use crate::topology::{Lane, TimelineStats};
+    let busy_j = j.get("busy").context("snapshot: timeline stats missing busy")?;
+    let mut busy = [Duration::ZERO; 4];
+    for &l in &Lane::ALL {
+        busy[l.index()] = req_duration(busy_j, l.name())?;
+    }
+    Ok(TimelineStats { busy, makespan: req_duration(j, "makespan")? })
+}
+
 /// Inverse of [`stats_to_json`].
 pub fn stats_from_json(j: &Json) -> Result<crate::topology::TransferStats> {
     Ok(crate::topology::TransferStats {
@@ -254,6 +313,27 @@ mod tests {
             assert_eq!(back.modeled(s), c.modeled(s), "{}", s.name());
             assert_eq!(back.count(s), c.count(s), "{}", s.name());
         }
+    }
+
+    #[test]
+    fn timeline_round_trips_schedule_and_stats() {
+        use crate::topology::{Lane, Timeline};
+        let mut tl = Timeline::default();
+        let base = tl.clone();
+        let e = tl.reserve(Lane::H2d, Duration::from_nanos(3), Duration::from_micros(11));
+        let e = tl.reserve(Lane::Inter, e, Duration::from_nanos(999_999_999_999));
+        tl.reserve(Lane::Compute, e, Duration::from_micros(40));
+
+        let text = timeline_to_json(&tl).to_string_pretty();
+        let back = timeline_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, tl);
+        assert_eq!(back.frontier(), tl.frontier());
+
+        let stats = tl.stats_since(&base);
+        let text = timeline_stats_to_json(&stats).to_string_pretty();
+        let back = timeline_stats_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, stats);
+        assert_eq!(back.serial_sum(), stats.serial_sum());
     }
 
     #[test]

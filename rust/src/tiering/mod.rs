@@ -36,9 +36,38 @@ pub use policy::{
 use crate::device::{CacheCounters, DeviceFeatureCache, DeviceMemory};
 use crate::graph::NodeId;
 use crate::sampling::Sampler;
-use crate::topology::{LinkClock, TransferStats};
+use crate::topology::{Lane, LinkClock, LinkKind, Timeline, TransferStats};
 use anyhow::Result;
 use std::time::Duration;
+
+/// Reserve the per-link modeled seconds charged between `before` and
+/// `stats`'s current state as a chained sequence on `timeline`, starting
+/// at `ready`. Links are reserved in the order the cache charges them
+/// (h2d before d2d; inter never moves inside the cache). Returns the
+/// chain's end — the ready-time the charges carry downstream.
+fn reserve_charged(
+    stats: &TransferStats,
+    before: [Duration; 3],
+    timeline: &mut Timeline,
+    mut ready: Duration,
+) -> Duration {
+    for (kind, b) in LinkKind::ALL.into_iter().zip(before) {
+        let d = stats.modeled(kind).saturating_sub(b);
+        if d > Duration::ZERO {
+            ready = timeline.reserve(Lane::from(kind), ready, d);
+        }
+    }
+    ready
+}
+
+/// Per-link modeled seconds snapshot (the `before` of [`reserve_charged`]).
+fn modeled_now(stats: &TransferStats) -> [Duration; 3] {
+    [
+        stats.modeled(LinkKind::H2d),
+        stats.modeled(LinkKind::D2d),
+        stats.modeled(LinkKind::Inter),
+    ]
+}
 
 /// The trainer-facing tiering facade: one policy, one device cache, one
 /// recycled gather plan. All feature movement routes through here.
@@ -96,6 +125,29 @@ impl TieringEngine {
             .upload(&tier.nodes, tier.generation, mem, clock, stats)
     }
 
+    /// [`TieringEngine::begin_epoch`] whose charges carry a ready-time:
+    /// the upload's per-link intervals are additionally reserved on
+    /// `timeline`, chained from `ready` (fresh rows on h2d, then delta
+    /// reuse on d2d — the order the cache charges them). The byte/second
+    /// ledger is identical to the untimed call; only occupancy is added.
+    /// Returns (modeled upload time, chain end).
+    #[allow(clippy::too_many_arguments)]
+    pub fn begin_epoch_at(
+        &mut self,
+        epoch: usize,
+        sampler: &dyn Sampler,
+        mem: &mut DeviceMemory,
+        clock: &LinkClock,
+        stats: &mut TransferStats,
+        timeline: &mut Timeline,
+        ready: Duration,
+    ) -> Result<(Duration, Duration)> {
+        let before = modeled_now(stats);
+        let t = self.begin_epoch(epoch, sampler, mem, clock, stats)?;
+        let end = reserve_charged(stats, before, timeline, ready);
+        Ok((t, end))
+    }
+
     /// Partition one batch's input nodes into hit/miss runs — the single
     /// residency pass that slicing, accounting, and compute read.
     pub fn plan_batch(&mut self, input_nodes: &[NodeId]) {
@@ -110,6 +162,25 @@ impl TieringEngine {
         stats: &mut TransferStats,
     ) -> (Duration, usize) {
         self.cache.serve_plan(&self.plan, clock, stats)
+    }
+
+    /// [`TieringEngine::serve_planned`] whose charges carry a ready-time:
+    /// the batch's miss (h2d) and hit (d2d) intervals are reserved on
+    /// `timeline` as a chain starting at `ready` — under `prefetch=K`
+    /// that ready-time is the compute finish of batch `i-1-K`, which is
+    /// how gather traffic overlaps compute (docs/TOPOLOGY.md). Returns
+    /// (modeled copy time, missed node count, chain end).
+    pub fn serve_planned_at(
+        &mut self,
+        clock: &LinkClock,
+        stats: &mut TransferStats,
+        timeline: &mut Timeline,
+        ready: Duration,
+    ) -> (Duration, usize, Duration) {
+        let before = modeled_now(stats);
+        let (t, missed) = self.serve_planned(clock, stats);
+        let end = reserve_charged(stats, before, timeline, ready);
+        (t, missed, end)
     }
 
     /// `plan_batch` + `serve_planned` in one call.
@@ -275,6 +346,34 @@ mod tests {
         // an unchanged-generation publish after resume stays a no-op
         engine2.begin_epoch(1, &s, &mut mem2, &clock, &mut stats).unwrap();
         assert_eq!(stats.h2d_bytes, h2d_before);
+    }
+
+    #[test]
+    fn timed_variants_reserve_exactly_the_charged_seconds() {
+        let mut engine = TieringEngine::new(Box::new(SamplerPolicy), 32, 100);
+        let mut mem = DeviceMemory::new(1 << 20);
+        let clock = LinkClock::pcie();
+        let mut stats = TransferStats::default();
+        let mut tl = Timeline::default();
+        let ready = Duration::from_micros(5);
+        let s = FakeCache { generation: 1, nodes: std::sync::Arc::new(vec![1, 2, 3]) };
+        let (t, end) = engine
+            .begin_epoch_at(0, &s, &mut mem, &clock, &mut stats, &mut tl, ready)
+            .unwrap();
+        // an all-fresh upload is pure h2d, chained right after `ready`
+        assert_eq!(end, ready + t);
+        assert_eq!(tl.busy(Lane::H2d), t);
+        assert_eq!(tl.busy(Lane::D2d), Duration::ZERO);
+
+        // one hit + one miss: h2d then d2d, chained after the upload
+        engine.plan_batch(&[1, 9]);
+        let (tc, missed, end2) = engine.serve_planned_at(&clock, &mut stats, &mut tl, end);
+        assert_eq!(missed, 1);
+        assert_eq!(end2, end + tc);
+        assert_eq!(tl.frontier(), end2);
+        // occupancy mirrors the ledger exactly: busy == modeled, per link
+        assert_eq!(tl.busy(Lane::H2d), stats.modeled(LinkKind::H2d));
+        assert_eq!(tl.busy(Lane::D2d), stats.modeled(LinkKind::D2d));
     }
 
     #[test]

@@ -22,6 +22,11 @@
 //! - [`TransferStats`] (clock.rs) — the per-link byte/second/transfer
 //!   ledger every modeled byte flows through via
 //!   [`TransferStats::charge`].
+//! - [`Timeline`] (timeline.rs) — per-lane busy-until occupancy: each
+//!   charge additionally *reserves* an interval on its lane, so modeled
+//!   epoch wall time can be the critical-path **makespan** under
+//!   `prefetch=K` instead of the serial sum
+//!   (docs/TOPOLOGY.md §Overlap & prefetch).
 //!
 //! **Compatibility anchor**: the default `pcie` preset carries the exact
 //! pre-refactor numbers (12 GB/s + 10 µs PCIe, 200 GB/s d2d, no
@@ -31,8 +36,10 @@
 //! accounting invariants are documented in docs/TOPOLOGY.md.
 
 pub mod clock;
+pub mod timeline;
 
 pub use clock::{LinkClock, TransferStats};
+pub use timeline::{Lane, Timeline, TimelineStats};
 
 use std::fmt;
 use std::time::Duration;

@@ -1,0 +1,402 @@
+//! Critical-path occupancy: per-lane busy-until timelines over the
+//! modeled links, so epoch wall time can be the **makespan** of the
+//! transfer/compute schedule instead of the sum of charges.
+//!
+//! [`super::clock::TransferStats::charge`] stays the single byte/seconds
+//! ledger — this module never changes what a transfer *costs*, only
+//! *when* it happens. A [`Timeline`] holds one lane per link kind
+//! (h2d / d2d / inter) plus a compute lane; each charge additionally
+//! *reserves* an interval on its lane starting at
+//! `max(lane_free, dependency_ready)`:
+//!
+//! - `lane_free` — a link moves one transfer at a time, so reservations
+//!   on the same lane serialize;
+//! - `dependency_ready` — a batch's transfer chain cannot start before
+//!   its pipeline dependency (under `prefetch=K`, the compute finish of
+//!   batch `i-1-K`) and its compute cannot start before its own
+//!   transfers finish.
+//!
+//! Two identities make the schedule auditable (asserted by the property
+//! tests below and rust/tests/overlap.rs):
+//!
+//! 1. **makespan ≤ serial sum** — reservations can overlap across lanes
+//!    but never shrink; overlap moves seconds, it cannot destroy them.
+//! 2. **makespan == serial sum when every reservation is chained**
+//!    (each `ready` = the previous reservation's end) — which is exactly
+//!    the `prefetch=0` schedule, making serial accounting the anchor.
+//!
+//! Per-lane **busy** seconds are invariant under the dependency
+//! structure: `busy[lane]` is the sum of reserved durations, so sweeping
+//! `prefetch=K` changes the makespan but never any lane's busy time.
+//! All arithmetic is integer-nanosecond `Duration` math, so the
+//! identities hold exactly (`==`, not approximately).
+
+use super::LinkKind;
+use std::fmt;
+use std::time::Duration;
+
+/// One occupancy lane: the three modeled links plus the device compute
+/// unit. `Lane::from(LinkKind)` maps a charge onto its lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lane {
+    H2d,
+    D2d,
+    Inter,
+    Compute,
+}
+
+impl Lane {
+    pub const ALL: [Lane; 4] = [Lane::H2d, Lane::D2d, Lane::Inter, Lane::Compute];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Lane::H2d => "h2d",
+            Lane::D2d => "d2d",
+            Lane::Inter => "inter",
+            Lane::Compute => "compute",
+        }
+    }
+
+    /// Stable array index (also the snapshot encoding order).
+    pub fn index(self) -> usize {
+        match self {
+            Lane::H2d => 0,
+            Lane::D2d => 1,
+            Lane::Inter => 2,
+            Lane::Compute => 3,
+        }
+    }
+}
+
+impl From<LinkKind> for Lane {
+    fn from(kind: LinkKind) -> Lane {
+        match kind {
+            LinkKind::H2d => Lane::H2d,
+            LinkKind::D2d => Lane::D2d,
+            LinkKind::Inter => Lane::Inter,
+        }
+    }
+}
+
+impl fmt::Display for Lane {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-device occupancy timeline: a busy-until frontier and a cumulative
+/// busy-seconds counter per lane. Time zero is the start of the run;
+/// the trainer advances every lane to a common frontier at each epoch
+/// boundary (epochs are barriers: the leader republishes the tier and
+/// validation syncs the device).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Timeline {
+    busy_until: [Duration; 4],
+    busy: [Duration; 4],
+}
+
+impl Timeline {
+    /// Reserve `dur` on `lane`, starting no earlier than `ready` and no
+    /// earlier than the lane's current frontier. Returns the end of the
+    /// reservation (the dependency handle for downstream work).
+    pub fn reserve(&mut self, lane: Lane, ready: Duration, dur: Duration) -> Duration {
+        let i = lane.index();
+        let start = self.busy_until[i].max(ready);
+        self.busy_until[i] = start + dur;
+        self.busy[i] += dur;
+        self.busy_until[i]
+    }
+
+    /// The schedule frontier: max busy-until over every lane — the
+    /// makespan when measured from time zero.
+    pub fn frontier(&self) -> Duration {
+        self.busy_until.iter().copied().max().unwrap_or_default()
+    }
+
+    /// Cumulative busy seconds reserved on one lane.
+    pub fn busy(&self, lane: Lane) -> Duration {
+        self.busy[lane.index()]
+    }
+
+    /// One lane's busy-until frontier.
+    pub fn busy_until(&self, lane: Lane) -> Duration {
+        self.busy_until[lane.index()]
+    }
+
+    /// Sum of busy seconds over every lane — what a fully serial
+    /// schedule of the same reservations would take.
+    pub fn serial_sum(&self) -> Duration {
+        self.busy.iter().sum()
+    }
+
+    /// Barrier: advance every lane's frontier to at least `t` (no busy
+    /// seconds are added — the gap is idle time).
+    pub fn advance_to(&mut self, t: Duration) {
+        for b in &mut self.busy_until {
+            *b = (*b).max(t);
+        }
+    }
+
+    /// Occupancy deltas accumulated since `base` (a clone taken earlier
+    /// from this same timeline), with the makespan measured against
+    /// `base`'s frontier. The snapshot codec round-trips the raw state
+    /// via [`Timeline::raw`]/[`Timeline::from_raw`].
+    pub fn stats_since(&self, base: &Timeline) -> TimelineStats {
+        let mut busy = [Duration::ZERO; 4];
+        for (i, b) in busy.iter_mut().enumerate() {
+            *b = self.busy[i].saturating_sub(base.busy[i]);
+        }
+        TimelineStats {
+            busy,
+            makespan: self.frontier().saturating_sub(base.frontier()),
+        }
+    }
+
+    /// Raw state `(busy_until, busy)` for the snapshot codec.
+    pub fn raw(&self) -> ([Duration; 4], [Duration; 4]) {
+        (self.busy_until, self.busy)
+    }
+
+    /// Rebuild from [`Timeline::raw`] state (snapshot restore).
+    pub fn from_raw(busy_until: [Duration; 4], busy: [Duration; 4]) -> Timeline {
+        Timeline { busy_until, busy }
+    }
+}
+
+/// Occupancy roll-up of one scheduling window (an epoch, or a whole
+/// run when merged across epochs): per-lane busy seconds plus the
+/// window's makespan. Stored per epoch in `EpochReport` and summed by
+/// `RunResult::timeline_totals`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TimelineStats {
+    /// Busy seconds per lane, indexed by [`Lane::index`]. Under
+    /// `shards=K` this sums over every lane's device (four h2d links
+    /// can be busy at once, so summed busy may exceed the makespan).
+    pub busy: [Duration; 4],
+    /// Critical-path length of the window's schedule.
+    pub makespan: Duration,
+}
+
+impl TimelineStats {
+    pub fn busy_for(&self, lane: Lane) -> Duration {
+        self.busy[lane.index()]
+    }
+
+    /// Idle seconds on one lane: window length minus busy (saturating —
+    /// under `shards=K` a link class can be busier than the makespan).
+    pub fn idle_for(&self, lane: Lane) -> Duration {
+        self.makespan.saturating_sub(self.busy[lane.index()])
+    }
+
+    /// What a fully serial schedule of the same work would take.
+    pub fn serial_sum(&self) -> Duration {
+        self.busy.iter().sum()
+    }
+
+    /// `1 - makespan/serial_sum`: the fraction of serial seconds hidden
+    /// by overlap (0 = fully serial; → 1 as everything overlaps).
+    pub fn overlap_efficiency(&self) -> f64 {
+        let serial = self.serial_sum().as_secs_f64();
+        if serial <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.makespan.as_secs_f64() / serial
+    }
+
+    /// Accumulate another window (epochs are barriers, so run makespan
+    /// is the sum of epoch makespans).
+    pub fn merge(&mut self, other: &TimelineStats) {
+        for (b, o) in self.busy.iter_mut().zip(other.busy.iter()) {
+            *b += *o;
+        }
+        self.makespan += other.makespan;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn us(n: u64) -> Duration {
+        Duration::from_micros(n)
+    }
+
+    #[test]
+    fn chained_reservations_make_makespan_equal_serial_sum() {
+        // the prefetch=0 schedule: every ready = previous end
+        let mut tl = Timeline::default();
+        let mut ready = Duration::ZERO;
+        for (lane, d) in [
+            (Lane::H2d, us(30)),
+            (Lane::D2d, us(5)),
+            (Lane::H2d, us(12)),
+            (Lane::Inter, us(40)),
+            (Lane::Compute, us(100)),
+            (Lane::H2d, us(7)),
+            (Lane::Compute, us(90)),
+        ] {
+            ready = tl.reserve(lane, ready, d);
+        }
+        assert_eq!(tl.frontier(), tl.serial_sum());
+        assert_eq!(tl.serial_sum(), us(30 + 5 + 12 + 40 + 100 + 7 + 90));
+    }
+
+    #[test]
+    fn overlap_shrinks_makespan_but_not_busy() {
+        let mut serial = Timeline::default();
+        let mut e = serial.reserve(Lane::H2d, Duration::ZERO, us(50));
+        e = serial.reserve(Lane::Compute, e, us(100));
+        e = serial.reserve(Lane::H2d, e, us(50));
+        serial.reserve(Lane::Compute, e, us(100));
+
+        // same work, second transfer prefetched during the first compute
+        let mut pipe = Timeline::default();
+        let e0 = pipe.reserve(Lane::H2d, Duration::ZERO, us(50));
+        let c0 = pipe.reserve(Lane::Compute, e0, us(100));
+        let e1 = pipe.reserve(Lane::H2d, e0, us(50)); // overlaps c0
+        pipe.reserve(Lane::Compute, c0.max(e1), us(100));
+
+        assert_eq!(serial.frontier(), us(300));
+        assert_eq!(pipe.frontier(), us(250));
+        // busy seconds moved, none created or destroyed
+        for lane in Lane::ALL {
+            assert_eq!(serial.busy(lane), pipe.busy(lane), "{lane}");
+        }
+        assert_eq!(pipe.serial_sum(), serial.frontier());
+    }
+
+    #[test]
+    fn makespan_never_exceeds_serial_sum_on_random_schedules() {
+        let mut rng = Pcg::new(0xA51C);
+        for case in 0..200 {
+            let mut tl = Timeline::default();
+            let mut ends = vec![Duration::ZERO];
+            for _ in 0..50 {
+                let lane = Lane::ALL[rng.gen_range(4)];
+                let dur = us(rng.gen_range(500) as u64);
+                // ready times only ever come from earlier reservation
+                // ends (a dependency), never from thin air
+                let ready = ends[rng.gen_range(ends.len())];
+                ends.push(tl.reserve(lane, ready, dur));
+            }
+            assert!(
+                tl.frontier() <= tl.serial_sum(),
+                "case {case}: makespan {:?} > serial {:?}",
+                tl.frontier(),
+                tl.serial_sum()
+            );
+        }
+    }
+
+    #[test]
+    fn busy_is_invariant_under_dependency_structure() {
+        // reserve the same (lane, duration) multiset under three
+        // different dependency patterns; busy must not move
+        let work: Vec<(Lane, Duration)> = (0..40)
+            .map(|i| (Lane::ALL[i % 4], us((i * 13 + 7) as u64)))
+            .collect();
+        let mut chained = Timeline::default();
+        let mut ready = Duration::ZERO;
+        for &(lane, d) in &work {
+            ready = chained.reserve(lane, ready, d);
+        }
+        let mut eager = Timeline::default();
+        for &(lane, d) in &work {
+            eager.reserve(lane, Duration::ZERO, d);
+        }
+        let mut windowed = Timeline::default();
+        let mut ends = vec![Duration::ZERO; 3];
+        for (i, &(lane, d)) in work.iter().enumerate() {
+            let dep = ends[i % 3];
+            ends[i % 3] = windowed.reserve(lane, dep, d);
+        }
+        for lane in Lane::ALL {
+            assert_eq!(chained.busy(lane), eager.busy(lane));
+            assert_eq!(chained.busy(lane), windowed.busy(lane));
+        }
+        assert!(eager.frontier() <= windowed.frontier());
+        assert!(windowed.frontier() <= chained.frontier());
+        assert_eq!(chained.frontier(), chained.serial_sum());
+    }
+
+    #[test]
+    fn deeper_prefetch_never_slows_the_pipeline() {
+        // simulate N batches of (h2d, compute) pairs under prefetch=K:
+        // batch i's transfer is ready when batch i-1-K's compute ends
+        let xfer: Vec<Duration> = (0..30).map(|i| us(20 + (i * 7) % 50)).collect();
+        let comp: Vec<Duration> = (0..30).map(|i| us(35 + (i * 11) % 40)).collect();
+        let run = |k: usize| -> Timeline {
+            let mut tl = Timeline::default();
+            let mut compute_ends: Vec<Duration> = Vec::new();
+            for i in 0..xfer.len() {
+                let dep = if i > k { compute_ends[i - 1 - k] } else { Duration::ZERO };
+                let x_end = tl.reserve(Lane::H2d, dep, xfer[i]);
+                compute_ends.push(tl.reserve(Lane::Compute, x_end, comp[i]));
+            }
+            tl
+        };
+        let spans: Vec<Duration> = [0usize, 1, 2, 4, 30].iter().map(|&k| run(k).frontier()).collect();
+        for w in spans.windows(2) {
+            assert!(w[1] <= w[0], "deeper prefetch regressed: {spans:?}");
+        }
+        // K=0 is the serial anchor; K>=1 strictly overlaps this workload
+        assert_eq!(run(0).frontier(), run(0).serial_sum());
+        assert!(spans[1] < spans[0]);
+        // busy never moves with K
+        for lane in Lane::ALL {
+            assert_eq!(run(0).busy(lane), run(4).busy(lane), "{lane}");
+        }
+    }
+
+    #[test]
+    fn stats_and_barriers_roll_up_per_window() {
+        let mut tl = Timeline::default();
+        let base = tl.clone();
+        let e = tl.reserve(Lane::H2d, Duration::ZERO, us(10));
+        tl.reserve(Lane::Compute, e, us(20));
+        let s1 = tl.stats_since(&base);
+        assert_eq!(s1.makespan, us(30));
+        assert_eq!(s1.busy_for(Lane::H2d), us(10));
+        assert_eq!(s1.busy_for(Lane::Compute), us(20));
+        assert_eq!(s1.idle_for(Lane::H2d), us(20));
+        assert_eq!(s1.serial_sum(), us(30));
+        assert_eq!(s1.overlap_efficiency(), 0.0);
+
+        // epoch barrier, then a second window
+        tl.advance_to(tl.frontier() + us(5));
+        let base2 = tl.clone();
+        tl.reserve(Lane::H2d, Duration::ZERO, us(40));
+        tl.reserve(Lane::Compute, Duration::ZERO, us(40));
+        let s2 = tl.stats_since(&base2);
+        assert_eq!(s2.makespan, us(40), "parallel lanes overlap fully");
+        assert_eq!(s2.serial_sum(), us(80));
+        assert!((s2.overlap_efficiency() - 0.5).abs() < 1e-12);
+
+        let mut total = s1;
+        total.merge(&s2);
+        assert_eq!(total.makespan, us(70));
+        assert_eq!(total.serial_sum(), us(110));
+    }
+
+    #[test]
+    fn raw_round_trip_preserves_the_schedule() {
+        let mut tl = Timeline::default();
+        let e = tl.reserve(Lane::Inter, us(3), us(9));
+        tl.reserve(Lane::Compute, e, us(2));
+        let (bu, b) = tl.raw();
+        let back = Timeline::from_raw(bu, b);
+        assert_eq!(back, tl);
+        assert_eq!(back.frontier(), tl.frontier());
+    }
+
+    #[test]
+    fn lane_maps_from_link_kind() {
+        assert_eq!(Lane::from(LinkKind::H2d), Lane::H2d);
+        assert_eq!(Lane::from(LinkKind::D2d), Lane::D2d);
+        assert_eq!(Lane::from(LinkKind::Inter), Lane::Inter);
+        for (i, lane) in Lane::ALL.iter().enumerate() {
+            assert_eq!(lane.index(), i);
+        }
+    }
+}

@@ -1,0 +1,323 @@
+//! Async-timeline overlap invariants (docs/TOPOLOGY.md §Overlap &
+//! prefetch):
+//!
+//! 1. **prefetch=0 identity**: `prefetch=0` — and omitting `prefetch=`
+//!    entirely, and the `SessionBuilder::prefetch(0)` override — yields
+//!    bit-identical results on every `TransferStats` counter, every
+//!    modeled stage second, and the per-epoch timeline (makespan + busy)
+//!    for all four methods (the compatibility anchor of the overlap
+//!    refactor; artifact-gated, skips when `make artifacts` has not run);
+//! 2. **serial anchor**: with `prefetch=0` and `shards=1` the per-epoch
+//!    makespan equals the serial sum of every reserved charge exactly;
+//! 3. **overlap wins**: `prefetch>=1` under `topo=dist, shards=4`
+//!    strictly reduces the modeled epoch wall time (makespan) while the
+//!    per-link byte ledgers and per-lane busy seconds stay unchanged —
+//!    overlap hides time, it never hides traffic; deeper prefetch never
+//!    slows the pipeline;
+//! 4. **crash-safe**: a run crashed by fault injection and resumed from
+//!    its checkpoint reproduces the uninterrupted timeline bit-for-bit
+//!    with `prefetch>0` (the busy-until state rides in the snapshot);
+//! 5. the `prefetch=` param is plumbed through every method spec, bad
+//!    depths are rejected at parse/build time, and the serving lane
+//!    dispatches against the same timeline (`prefetch=0` keeps the exact
+//!    legacy service times).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use gns::features::build_dataset;
+use gns::sampling::spec::{prefetch_spec, BuildContext, MethodRegistry};
+use gns::sampling::BlockShapes;
+use gns::session::{Session, SessionBuilder};
+use gns::util::timer::Stage;
+
+const METHODS: [&str; 4] = ["ns", "ladies:s-layer=128", "lazygcn", "gns:cache-fraction=0.02"];
+
+fn with_param(method: &str, param: &str) -> String {
+    let sep = if method.contains(':') { "," } else { ":" };
+    format!("{method}{sep}{param}")
+}
+
+/// The tiny-artifact session the e2e suites share.
+fn tiny_session(method: &str) -> SessionBuilder {
+    Session::builder("yelp-s", method)
+        .scale(0.03)
+        .seed(1)
+        .epochs(2)
+        .workers(1)
+        .eval_batches(2)
+        .artifact("tiny")
+        .refit_features(true)
+        .max_train_nodes(512)
+        .max_val_nodes(128)
+        .paranoid_validate(true)
+}
+
+/// Every deterministic transfer/time/timeline metric a run produces,
+/// per epoch, in bit-exact form.
+#[derive(Debug, PartialEq)]
+struct OverlapMetrics {
+    // (every TransferStats counter, as (bytes..., transfers..., nanos...))
+    transfer_per_epoch: Vec<[u128; 10]>,
+    // modeled seconds per pipeline stage, per epoch, in nanos
+    stage_modeled_per_epoch: Vec<Vec<u128>>,
+    // (makespan nanos, per-lane busy nanos) per epoch
+    timeline_per_epoch: Vec<(u128, [u128; 4])>,
+    test_f1: u64,
+}
+
+fn run_overlap_metrics(builder: SessionBuilder) -> Option<(OverlapMetrics, gns::session::RunResult)> {
+    let mut session = builder.build_or_skip()?;
+    let r = session.run().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    let m = OverlapMetrics {
+        transfer_per_epoch: r
+            .reports
+            .iter()
+            .map(|rep| {
+                let t = &rep.transfer;
+                [
+                    t.h2d_bytes as u128,
+                    t.h2d_transfers as u128,
+                    t.d2d_bytes as u128,
+                    t.inter_bytes as u128,
+                    t.inter_transfers as u128,
+                    t.bytes_saved_by_cache as u128,
+                    t.bytes_saved_by_delta as u128,
+                    t.modeled_h2d.as_nanos(),
+                    t.modeled_d2d.as_nanos(),
+                    t.modeled_inter.as_nanos(),
+                ]
+            })
+            .collect(),
+        stage_modeled_per_epoch: r
+            .reports
+            .iter()
+            .map(|rep| Stage::ALL.iter().map(|&s| rep.clock.modeled(s).as_nanos()).collect())
+            .collect(),
+        timeline_per_epoch: r
+            .reports
+            .iter()
+            .map(|rep| {
+                let mut busy = [0u128; 4];
+                for (i, lane) in gns::topology::Lane::ALL.into_iter().enumerate() {
+                    busy[i] = rep.timeline.busy_for(lane).as_nanos();
+                }
+                (rep.timeline.makespan.as_nanos(), busy)
+            })
+            .collect(),
+        test_f1: r.test_f1.to_bits(),
+    };
+    Some((m, r))
+}
+
+// ---------------------------------------------------------------------------
+// 1. prefetch=0 identity: bit-identical counters, stage seconds, timeline
+
+#[test]
+fn prefetch_zero_is_bit_identical_to_omitting_it_for_all_methods() {
+    for method in METHODS {
+        let Some((base, _)) = run_overlap_metrics(tiny_session(method)) else { return };
+        let explicit =
+            run_overlap_metrics(tiny_session(&with_param(method, "prefetch=0"))).unwrap().0;
+        assert_eq!(explicit, base, "prefetch=0 diverged from default for {method}");
+        // the builder override path must anchor identically too
+        let via_builder = run_overlap_metrics(tiny_session(method).prefetch(0)).unwrap().0;
+        assert_eq!(via_builder, base, "builder prefetch(0) diverged for {method}");
+    }
+}
+
+#[test]
+fn prefetch_zero_makespan_equals_serial_sum_unsharded() {
+    // with prefetch=0 and a single device every reservation chains
+    // back-to-back, so the critical path *is* the serial sum — exactly,
+    // in integer nanos, per epoch and over the whole run
+    for method in METHODS {
+        let Some((m, r)) = run_overlap_metrics(tiny_session(method)) else { return };
+        for (epoch, (makespan, busy)) in m.timeline_per_epoch.iter().enumerate() {
+            let serial: u128 = busy.iter().sum();
+            assert_eq!(
+                *makespan, serial,
+                "{method} epoch {epoch}: prefetch=0 makespan must equal the serial sum"
+            );
+        }
+        let totals = r.timeline_totals();
+        assert_eq!(totals.makespan, totals.serial_sum());
+        assert_eq!(r.modeled_makespan_secs(), r.modeled_serial_secs());
+        assert_eq!(totals.overlap_efficiency(), 0.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. overlap wins under dist + shards, without touching the ledgers
+
+#[test]
+fn prefetch_reduces_makespan_under_dist_shards_with_unchanged_ledgers() {
+    // chunk_size(32) keeps several batches per shard lane (512 targets /
+    // 4 shards / 32 ≈ 4) so every lane actually pipelines
+    let method = with_param("gns:cache-fraction=0.02", "shards=4,topo=dist");
+    let Some((serial, rs)) = run_overlap_metrics(tiny_session(&method).chunk_size(32)) else {
+        return;
+    };
+    let (overlapped, ro) =
+        run_overlap_metrics(tiny_session(&with_param(&method, "prefetch=2")).chunk_size(32))
+            .unwrap();
+
+    // traffic is invariant: every byte/transfer counter and modeled
+    // per-link second is bit-identical under any prefetch depth
+    assert_eq!(
+        overlapped.transfer_per_epoch, serial.transfer_per_epoch,
+        "prefetch must never change what is charged, only when it runs"
+    );
+    assert_eq!(overlapped.stage_modeled_per_epoch, serial.stage_modeled_per_epoch);
+    assert_eq!(overlapped.test_f1, serial.test_f1, "prefetch must not touch training math");
+    // per-lane busy seconds are invariant too — only the makespan moves
+    for (k, (s, o)) in serial
+        .timeline_per_epoch
+        .iter()
+        .zip(&overlapped.timeline_per_epoch)
+        .enumerate()
+    {
+        assert_eq!(o.1, s.1, "epoch {k}: busy seconds changed under prefetch");
+        assert!(
+            o.0 <= s.0,
+            "epoch {k}: prefetch=2 makespan {} > serial {}",
+            o.0,
+            s.0
+        );
+    }
+    // ...and over the run it strictly shrinks: dist charges real h2d +
+    // inter seconds every epoch, so there is always something to hide
+    assert!(
+        ro.modeled_makespan_secs() < rs.modeled_makespan_secs(),
+        "prefetch=2 must strictly reduce the modeled epoch wall time \
+         ({} !< {})",
+        ro.modeled_makespan_secs(),
+        rs.modeled_makespan_secs()
+    );
+    assert!(ro.timeline_totals().overlap_efficiency() > 0.0);
+
+    // deeper prefetch never slows the pipeline
+    let (_, r4) =
+        run_overlap_metrics(tiny_session(&with_param(&method, "prefetch=4")).chunk_size(32))
+            .unwrap();
+    assert!(r4.modeled_makespan_secs() <= ro.modeled_makespan_secs() + 1e-12);
+}
+
+// ---------------------------------------------------------------------------
+// 4. crash-safe: the timeline rides in the snapshot
+
+#[test]
+fn resume_with_prefetch_reproduces_the_timeline_bit_identical() {
+    let dir: PathBuf =
+        std::env::temp_dir().join(format!("gns-ckpt-overlap-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let method = with_param("gns:cache-fraction=0.02", "topo=dist,prefetch=2");
+    let Some((base, _)) = run_overlap_metrics(tiny_session(&method).epochs(3)) else { return };
+
+    let ckpt = format!("ckpt=every=1:dir={}", dir.display());
+    let crashed = with_param(&with_param(&method, &ckpt), "faults=crash@epoch=2");
+    let mut session = tiny_session(&crashed).epochs(3).build_or_skip().unwrap();
+    let r = session.run().unwrap();
+    assert!(r.error.expect("fault-injected run should crash").contains("injected crash"));
+
+    let (resumed, _) =
+        run_overlap_metrics(tiny_session(&with_param(&method, &ckpt)).epochs(3)).unwrap();
+    assert_eq!(resumed, base, "resumed timeline diverged from uninterrupted");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 5. spec plumbing + serving
+
+#[test]
+fn every_method_accepts_the_prefetch_param() {
+    let ds = build_dataset("yelp-s", 0.05, 13);
+    let shapes = BlockShapes::new(vec![16 * 24, 16 * 6, 16], vec![4, 5]);
+    let reg = MethodRegistry::global();
+    let ctx = BuildContext::new(&ds, shapes, 3);
+    for method in METHODS {
+        for k in [0usize, 1, 2, 4] {
+            let text = with_param(method, &format!("prefetch={k}"));
+            let spec = reg.parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+            assert_eq!(prefetch_spec(&spec).unwrap(), k, "{text}");
+            reg.factory(&spec, &ctx).unwrap_or_else(|e| panic!("{text}: {e}"));
+        }
+    }
+    // omitting the param means a serial schedule
+    assert_eq!(prefetch_spec(&reg.parse("ns").unwrap()).unwrap(), 0);
+    // bad depths are rejected at parse time (prefetch= is a typed Int)
+    for bad in ["ns:prefetch=deep", "ns:prefetch=-1", "ns:prefetch=1.5"] {
+        assert!(reg.parse(bad).is_err(), "{bad} should fail to parse");
+    }
+}
+
+#[test]
+fn prefetch_param_round_trips_through_display_and_json() {
+    let reg = MethodRegistry::global();
+    for text in [
+        "ns:prefetch=2",
+        "gns:cache-fraction=0.02,prefetch=4,topo=dist",
+        "lazygcn:prefetch=1,shards=2",
+    ] {
+        let spec = reg.parse(text).unwrap();
+        assert_eq!(reg.parse(&spec.to_string()).unwrap(), spec);
+        let j = spec.to_json().to_string_pretty();
+        let parsed = gns::util::json::Json::parse(&j).unwrap();
+        assert_eq!(reg.from_json(&parsed).unwrap(), spec);
+    }
+}
+
+#[test]
+fn serving_lane_dispatches_against_the_timeline() {
+    // prefetch=0 keeps the exact legacy service-time accounting
+    let serve = "serve=200:requests=40";
+    let Some(mut base) = tiny_session(&with_param("ns", serve)).build_or_skip() else {
+        return;
+    };
+    base.run().unwrap();
+    let b = base.serve().unwrap();
+
+    let mut same =
+        tiny_session(&with_param(&with_param("ns", serve), "prefetch=0")).build_or_skip().unwrap();
+    same.run().unwrap();
+    let s = same.serve().unwrap();
+    assert_eq!(s.latency.p50.to_bits(), b.latency.p50.to_bits());
+    assert_eq!(s.latency.p99.to_bits(), b.latency.p99.to_bits());
+    assert_eq!(s.latency.mean.to_bits(), b.latency.mean.to_bits());
+    assert_eq!(s.transfer.h2d_bytes, b.transfer.h2d_bytes);
+
+    // prefetch>0 dispatches the same requests against the overlapped
+    // timeline: identical traffic, finite latencies, and the modeled
+    // service seconds can only shrink (transfers hide under compute)
+    let mut deep =
+        tiny_session(&with_param(&with_param("ns", serve), "prefetch=2")).build_or_skip().unwrap();
+    deep.run().unwrap();
+    let d = deep.serve().unwrap();
+    assert_eq!(d.requests, b.requests);
+    assert_eq!(d.transfer.h2d_bytes, b.transfer.h2d_bytes);
+    assert!(d.latency.mean.is_finite() && d.latency.mean >= 0.0);
+    assert!(
+        d.latency.mean <= b.latency.mean + 1e-9,
+        "overlap must not slow serving: {} > {}",
+        d.latency.mean,
+        b.latency.mean
+    );
+}
+
+// ---------------------------------------------------------------------------
+// timeline algebra at the session boundary (artifact-free)
+
+#[test]
+fn timeline_stats_merge_is_additive() {
+    use gns::topology::{Lane, Timeline, TimelineStats};
+    let mut t = Timeline::default();
+    t.reserve(Lane::H2d, Duration::ZERO, Duration::from_millis(3));
+    t.reserve(Lane::Compute, Duration::ZERO, Duration::from_millis(5));
+    let a = t.stats_since(&Timeline::default());
+    let mut merged = TimelineStats::default();
+    merged.merge(&a);
+    merged.merge(&a);
+    assert_eq!(merged.busy_for(Lane::H2d), Duration::from_millis(6));
+    assert_eq!(merged.serial_sum(), a.serial_sum() * 2);
+}

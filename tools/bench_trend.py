@@ -26,10 +26,14 @@ from pathlib import Path
 
 THRESHOLD = 0.10  # warn when a metric moves >10% in the bad direction
 
-# metric direction by leaf key: False = lower is better, True = higher
+# metric direction by leaf key: False = lower is better, True = higher.
+# makespan_secs / serial_secs are covered by the _secs suffix (lower is
+# better), so a shrinking makespan is an improvement, never a regression;
+# overlap_efficiency is the inverse view of the same ratio and is
+# higher-better.
 LOWER_SUFFIXES = ("_ms", "_secs", "_bytes", "_us")
 LOWER_KEYS = {"ns_per_batch", "ns_per_iter"}
-HIGHER_KEYS = {"hit_rate", "throughput_rps", "local_fraction"}
+HIGHER_KEYS = {"hit_rate", "throughput_rps", "local_fraction", "overlap_efficiency"}
 # config echoes that match a lower-better suffix but are not metrics
 IGNORED_KEYS = {"max_wait_us", "unix_time", "schema_version"}
 
