@@ -9,7 +9,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build check ci test fmt clippy bench serve-smoke resume-smoke overlap-smoke artifacts clean
+.PHONY: build check ci test fmt clippy bench serve-smoke resume-smoke overlap-smoke stream-smoke artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -25,6 +25,7 @@ check:
 	$(MAKE) serve-smoke
 	$(MAKE) resume-smoke
 	$(MAKE) overlap-smoke
+	$(MAKE) stream-smoke
 
 # Smoke the online inference lane (docs/SERVING.md): a short request
 # stream swept across three offered loads, emitting BENCH_serving.json.
@@ -43,6 +44,12 @@ resume-smoke:
 overlap-smoke:
 	$(CARGO) bench --bench overlap_pipeline -- --scale 0.1 --smoke --json BENCH_overlap.json
 
+# Smoke the streaming-ingestion path (docs/STREAMING.md): a short
+# edge-churn-rate sweep through ingest/merge/invalidate, emitting
+# BENCH_stream.json.
+stream-smoke:
+	$(CARGO) bench --bench stream_churn -- --scale 0.1 --smoke --json BENCH_stream.json
+
 # The full local gate: everything CI runs (rust + python) in one target.
 ci: check
 	cd python && $(PYTHON) -m pytest tests -q
@@ -54,10 +61,11 @@ clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
 # Hot-path perf numbers: writes BENCH_hotpath.json, BENCH_tiering.json,
-# BENCH_shard.json, BENCH_serving.json, BENCH_snapshot.json and
-# BENCH_overlap.json at the repo root so the per-PR perf trajectory is
-# tracked (docs/PERF.md, docs/TIERING.md, docs/SHARDING.md,
-# docs/SERVING.md, docs/SNAPSHOT.md, docs/TOPOLOGY.md). All are gitignored.
+# BENCH_shard.json, BENCH_serving.json, BENCH_snapshot.json,
+# BENCH_overlap.json and BENCH_stream.json at the repo root so the per-PR
+# perf trajectory is tracked (docs/PERF.md, docs/TIERING.md,
+# docs/SHARDING.md, docs/SERVING.md, docs/SNAPSHOT.md, docs/TOPOLOGY.md,
+# docs/STREAMING.md). All are gitignored.
 bench:
 	$(CARGO) bench --bench micro_hotpath -- --scale 0.5 --json BENCH_hotpath.json
 	$(CARGO) bench --bench tiering_policies -- --scale 0.5 --json BENCH_tiering.json
@@ -65,6 +73,7 @@ bench:
 	$(CARGO) bench --bench serving_latency -- --scale 0.5 --json BENCH_serving.json
 	$(CARGO) bench --bench snapshot_cost -- --json BENCH_snapshot.json
 	$(CARGO) bench --bench overlap_pipeline -- --scale 0.5 --json BENCH_overlap.json
+	$(CARGO) bench --bench stream_churn -- --scale 0.5 --json BENCH_stream.json
 
 fmt:
 	$(CARGO) fmt

@@ -1,0 +1,216 @@
+//! Stream-churn bench: the streaming-ingestion subsystem swept over the
+//! edge-churn rate (docs/STREAMING.md). Each config replays the trainer's
+//! epoch-boundary protocol — ingest churn into the pending `DeltaOverlay`,
+//! merge it into a fresh CSR at the next epoch start, hand the sampler the
+//! merged view, invalidate the touched resident tier rows — and reports
+//! what churn costs: merge wall time, invalidation PCIe bytes, tier hit
+//! rate, and sampling throughput.
+//!
+//! Artifact-free by design (like the other benches): there is no model in
+//! the loop, so "accuracy under churn" is covered by the artifact-gated
+//! session tests (rust/tests/stream.rs); this binary isolates the data
+//! path. `--json <path>` emits machine-readable results (`make bench`
+//! writes BENCH_stream.json); `--smoke` shrinks the sweep so `make check`
+//! and CI keep this binary from rotting.
+
+use gns::device::DeviceMemory;
+use gns::features::build_dataset;
+use gns::graph::{DeltaOverlay, EdgeStream, StreamSpec};
+use gns::sampling::spec::{cache_policy_spec, BuildContext, MethodRegistry};
+use gns::sampling::{BlockShapes, MiniBatch};
+use gns::tiering::{build_policies, TierBuild, TieringEngine, PRESAMPLE_WORKER};
+use gns::topology::{HardwareTopology, LinkClock, TransferStats};
+use gns::util::cli::Args;
+use gns::util::json::{self, Json};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse_env();
+    if let Err(e) = args.check_known(&[
+        "scale", "epochs", "batches", "method", "topo", "rates", "grow", "drop", "json", "smoke",
+    ]) {
+        eprintln!("stream_churn: {e}");
+        std::process::exit(2);
+    }
+    let scale = args.f64_or("scale", 0.5);
+    let smoke = args.bool("smoke");
+    let epochs = if smoke { 2 } else { args.usize_or("epochs", 4) };
+    let method = args.str_or("method", "gns:cache-fraction=0.01").to_string();
+    let topo_text = args.str_or("topo", "pcie").to_string();
+    let grow = args.f64_or("grow", 1.0);
+    let drop_w = args.f64_or("drop", 1.0);
+    let default_rates = if smoke { "0,64" } else { "0,64,256,1024" };
+    let rates: Vec<usize> = args
+        .str_or("rates", default_rates)
+        .split(',')
+        .map(|r| r.trim().parse().unwrap_or_else(|_| panic!("--rates: bad rate {r:?}")))
+        .collect();
+    let per_epoch = args.usize_or("batches", if smoke { 8 } else { 32 });
+
+    let ds = build_dataset("products-s", scale, 1);
+    let links = LinkClock::new(
+        HardwareTopology::parse(&topo_text).unwrap_or_else(|e| panic!("--topo: {e}")),
+    );
+    println!(
+        "workload: products-s x{scale} ({method}, grow={grow} drop={drop_w}) — {}",
+        ds.graph.stats()
+    );
+    let batch = 256usize;
+    let shapes = BlockShapes::new(vec![20000, 12000, 2048, batch], vec![5, 10, 15]);
+    let reg = MethodRegistry::global();
+    let row_bytes = ds.features.row_bytes() as u64;
+    let dim = ds.features.dim();
+    let num_nodes = ds.graph.num_nodes();
+    let mut x0 = vec![0f32; shapes.level_sizes[0] * dim];
+
+    println!(
+        "{:>6} {:>9} {:>9} {:>11} {:>9} {:>10} {:>8} {:>10} {:>10}",
+        "rate", "inserted", "dropped", "inval rows", "inval MB", "merge ms", "hit%", "batch/s",
+        "h2d MB"
+    );
+    let mut entries: Vec<Json> = Vec::new();
+    for &rate in &rates {
+        // rate 0 = the static anchor: no stream, no overlay, no merges —
+        // its row must show zero invalidation traffic
+        let mut stream = if rate == 0 {
+            None
+        } else {
+            let text = format!("{rate}:grow={grow}:drop={drop_w}");
+            let spec: StreamSpec = StreamSpec::parse(&text)
+                .unwrap_or_else(|e| panic!("--rates: {e}"))
+                .expect("nonzero rate is never off");
+            Some(EdgeStream::new(spec, 7))
+        };
+        let base = Arc::new(ds.graph.clone());
+        let mut graph = base.clone();
+        let mut applied = DeltaOverlay::new();
+        let mut pending = DeltaOverlay::new();
+
+        let spec = reg.parse(&method).unwrap_or_else(|e| panic!("--method: {e}"));
+        let ctx = BuildContext::new(&ds, shapes.clone(), 7);
+        let factory = reg.factory(&spec, &ctx).unwrap();
+        let tier_spec = cache_policy_spec(&spec).unwrap();
+        let mut leader = factory(0);
+        let policy = build_policies(
+            &tier_spec,
+            &TierBuild {
+                graph: &ds.graph,
+                train: &ds.train,
+                labels: &ds.labels,
+                chunk_size: batch,
+                warmup_batches: 2,
+            },
+            || factory(PRESAMPLE_WORKER),
+            1,
+        )
+        .unwrap()
+        .pop()
+        .unwrap();
+        let mut engine = TieringEngine::new(policy, num_nodes, row_bytes);
+        let mut mem = DeviceMemory::t4();
+        let mut stats = TransferStats::default();
+        let mut slot = MiniBatch::default();
+
+        let (mut inserted, mut dropped) = (0u64, 0u64);
+        let mut merge_secs = 0f64;
+        let mut merged_edges = 0u64;
+        let mut serve_secs = 0f64;
+        let mut batches = 0usize;
+        for epoch in 0..epochs {
+            // epoch boundary: merge last epoch's churn into a fresh CSR,
+            // repoint the sampler, re-upload the touched resident rows —
+            // the exact protocol the trainer runs (docs/STREAMING.md)
+            if !pending.is_empty() {
+                let touched = pending.touched_nodes();
+                let t0 = Instant::now();
+                applied.absorb(&pending);
+                pending = DeltaOverlay::new();
+                graph = Arc::new(applied.merge(&base));
+                merge_secs += t0.elapsed().as_secs_f64();
+                merged_edges += graph.num_edges() as u64;
+                graph.validate().unwrap_or_else(|e| panic!("merged CSR invalid: {e}"));
+                leader.set_graph(graph.clone());
+                engine.on_topology_delta(&touched, &links, &mut stats);
+            }
+            leader.begin_epoch(epoch);
+            engine
+                .begin_epoch(epoch, leader.as_ref(), &mut mem, &links, &mut stats)
+                .unwrap();
+            let t0 = Instant::now();
+            for chunk in ds.train.chunks(batch).take(per_epoch) {
+                leader.sample_batch_into(chunk, &ds.labels, &mut slot).unwrap();
+                engine.plan_batch(&slot.input_nodes);
+                let n = slot.input_nodes.len() * dim;
+                ds.features.slice_runs_into(
+                    &slot.input_nodes,
+                    engine.last_plan().runs(),
+                    &mut x0[..n],
+                );
+                engine.serve_planned(&links, &mut stats);
+                batches += 1;
+            }
+            serve_secs += t0.elapsed().as_secs_f64();
+            if let Some(es) = stream.as_mut() {
+                let s = es.ingest_epoch(&graph, &mut pending);
+                inserted += s.inserted;
+                dropped += s.dropped;
+            }
+        }
+        engine.release(&mut mem);
+
+        let invalidated_rows = engine.cache().invalidated_rows;
+        if rate == 0 {
+            assert_eq!(invalidated_rows, 0, "static run must not invalidate");
+        }
+        let invalidation_bytes = invalidated_rows * row_bytes;
+        let (hits, misses) = engine.hits_misses();
+        let hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+        let batches_per_sec = batches as f64 / serve_secs.max(1e-9);
+        let merge_ms = 1e3 * merge_secs;
+        // 0/eps = 0 for the static rate, where no merge ever runs
+        let merge_edges_per_sec = merged_edges as f64 / merge_secs.max(1e-9);
+        let mb = |b: u64| b as f64 / (1 << 20) as f64;
+        println!(
+            "{rate:>6} {inserted:>9} {dropped:>9} {invalidated_rows:>11} {:>9.2} {merge_ms:>10.2} \
+             {:>7.1}% {batches_per_sec:>10.1} {:>10.1}",
+            mb(invalidation_bytes),
+            100.0 * hit_rate,
+            mb(stats.h2d_bytes),
+        );
+        entries.push(json::obj(vec![
+            ("rate", Json::Num(rate as f64)),
+            ("inserted", Json::Num(inserted as f64)),
+            ("dropped", Json::Num(dropped as f64)),
+            ("final_edges", Json::Num(graph.num_edges() as f64)),
+            ("invalidated_rows", Json::Num(invalidated_rows as f64)),
+            ("invalidation_bytes", Json::Num(invalidation_bytes as f64)),
+            ("h2d_bytes", Json::Num(stats.h2d_bytes as f64)),
+            ("d2d_bytes", Json::Num(stats.d2d_bytes as f64)),
+            ("saved_by_delta_bytes", Json::Num(stats.bytes_saved_by_delta as f64)),
+            ("hit_rate", Json::Num(hit_rate)),
+            ("merge_ms", Json::Num(merge_ms)),
+            ("merge_edges_per_sec", Json::Num(merge_edges_per_sec)),
+            ("batches_per_sec", Json::Num(batches_per_sec)),
+        ]));
+    }
+
+    if let Some(path) = args.get("json") {
+        let doc = json::bench_doc(
+            "stream_churn",
+            vec![
+                ("workload", Json::Str(format!("products-s x{scale}"))),
+                ("method", Json::Str(method.clone())),
+                ("topo", Json::Str(topo_text.clone())),
+                ("grow", Json::Num(grow)),
+                ("drop", Json::Num(drop_w)),
+                ("epochs", Json::Num(epochs as f64)),
+                ("smoke", Json::Bool(smoke)),
+                ("configs", json::arr(entries)),
+            ],
+        );
+        std::fs::write(path, doc.to_string_pretty())
+            .unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
+    }
+}

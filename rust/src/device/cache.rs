@@ -29,6 +29,7 @@ pub struct CacheCounters {
     pub misses: u64,
     pub delta_uploaded_rows: u64,
     pub delta_reused_rows: u64,
+    pub invalidated_rows: u64,
 }
 
 pub struct DeviceFeatureCache {
@@ -59,6 +60,9 @@ pub struct DeviceFeatureCache {
     /// reused from the previous generation.
     pub delta_uploaded_rows: u64,
     pub delta_reused_rows: u64,
+    /// streaming telemetry: resident rows re-uploaded in place because an
+    /// edge-churn merge touched their neighborhood (`invalidate_rows`).
+    pub invalidated_rows: u64,
 }
 
 impl DeviceFeatureCache {
@@ -76,6 +80,7 @@ impl DeviceFeatureCache {
             misses: 0,
             delta_uploaded_rows: 0,
             delta_reused_rows: 0,
+            invalidated_rows: 0,
         }
     }
 
@@ -178,6 +183,32 @@ impl DeviceFeatureCache {
         Ok(t)
     }
 
+    /// Re-upload the resident rows among `touched` (sorted, distinct
+    /// node ids whose neighborhoods changed in an edge-churn merge): the
+    /// device copies are stale, so each touched ∩ resident row re-crosses
+    /// PCIe **in place** — residency, layout, and generation are all
+    /// unchanged. Deliberately *not* counted in `bytes_saved_by_delta`
+    /// (nothing was saved — these bytes moved), so the tiering identity
+    /// `h2d == uncached − saved_by_cache − saved_by_delta` keeps
+    /// balancing under churn. Returns (modeled time, rows re-uploaded).
+    pub fn invalidate_rows(
+        &mut self,
+        touched: &[NodeId],
+        clock: &LinkClock,
+        stats: &mut TransferStats,
+    ) -> (std::time::Duration, u64) {
+        if self.generation == 0 {
+            return (std::time::Duration::ZERO, 0);
+        }
+        let stale = touched.iter().filter(|&&v| self.contains(v)).count() as u64;
+        if stale == 0 {
+            return (std::time::Duration::ZERO, 0);
+        }
+        self.invalidated_rows += stale;
+        let t = stats.charge(clock, LinkKind::H2d, stale * self.row_bytes);
+        (t, stale)
+    }
+
     /// Partition one mini-batch's input rows into hit/miss runs — the one
     /// residency probe per batch; slicing, transfer accounting, and
     /// compute all read the resulting plan.
@@ -258,6 +289,7 @@ impl DeviceFeatureCache {
             misses: self.misses,
             delta_uploaded_rows: self.delta_uploaded_rows,
             delta_reused_rows: self.delta_reused_rows,
+            invalidated_rows: self.invalidated_rows,
         }
     }
 
@@ -283,6 +315,7 @@ impl DeviceFeatureCache {
         self.misses = counters.misses;
         self.delta_uploaded_rows = counters.delta_uploaded_rows;
         self.delta_reused_rows = counters.delta_reused_rows;
+        self.invalidated_rows = counters.invalidated_rows;
         if generation == 0 {
             anyhow::ensure!(
                 nodes.is_empty(),
@@ -414,6 +447,52 @@ mod tests {
         // and the post-release upload is all-fresh (no phantom delta reuse)
         assert_eq!(c.delta_reused_rows, 0);
         assert_eq!(stats.bytes_saved_by_delta, 0);
+    }
+
+    #[test]
+    fn invalidate_reuploads_only_touched_resident_rows() {
+        let (mut c, mut mem, clock, mut stats) = setup();
+        c.upload(&[1, 2, 3, 4], 1, &mut mem, &clock, &mut stats).unwrap();
+        let h2d_before = stats.h2d_bytes;
+        // {2, 3} are resident, {9, 10} are not: 2 rows re-cross PCIe
+        let (t, n) = c.invalidate_rows(&[2, 3, 9, 10], &clock, &mut stats);
+        assert_eq!(n, 2);
+        assert!(t > std::time::Duration::ZERO);
+        assert_eq!(stats.h2d_bytes, h2d_before + 2 * 400);
+        assert_eq!(c.invalidated_rows, 2);
+        // the re-upload is in place: residency, rows, generation unchanged
+        assert_eq!(c.generation(), 1);
+        assert_eq!(c.resident_rows(), 4);
+        assert_eq!(c.row_of(2), Some(1));
+        assert_eq!(c.row_of(3), Some(2));
+        // and nothing is booked as a saving — these bytes really moved
+        assert_eq!(stats.bytes_saved_by_delta, 0);
+        assert_eq!(stats.bytes_saved_by_cache, 0);
+    }
+
+    #[test]
+    fn invalidate_on_empty_cache_is_free() {
+        let (mut c, _mem, clock, mut stats) = setup();
+        let (t, n) = c.invalidate_rows(&[1, 2, 3], &clock, &mut stats);
+        assert_eq!((t, n), (std::time::Duration::ZERO, 0));
+        assert_eq!(stats.h2d_bytes, 0);
+        assert_eq!(stats.h2d_transfers, 0, "no phantom zero-byte transfer");
+        assert_eq!(c.invalidated_rows, 0);
+    }
+
+    #[test]
+    fn invalidated_rows_survive_counter_round_trip() {
+        let (mut c, mut mem, clock, mut stats) = setup();
+        c.upload(&[5, 6], 1, &mut mem, &clock, &mut stats).unwrap();
+        c.invalidate_rows(&[5], &clock, &mut stats);
+        let counters = c.counters();
+        assert_eq!(counters.invalidated_rows, 1);
+        let mut c2 = DeviceFeatureCache::new(64, 400);
+        let mut mem2 = DeviceMemory::new(1 << 20);
+        c2.restore_snapshot(&c.resident_nodes(), c.generation(), counters, &mut mem2)
+            .unwrap();
+        assert_eq!(c2.invalidated_rows, 1);
+        assert_eq!(c2.counters(), counters);
     }
 
     #[test]

@@ -1,0 +1,390 @@
+//! `DeltaOverlay`: append-friendly edge edits layered over the immutable
+//! CSR.
+//!
+//! The CSR stays the frozen, cache-friendly structure every sampler
+//! reads; churn accumulates here as per-node insertion buffers plus a
+//! tombstone set, and is folded into a *fresh* CSR at the next epoch
+//! boundary ([`DeltaOverlay::merge`]). The merge is defined to be
+//! indistinguishable from never having streamed at all: applying an edit
+//! script through an overlay and merging must equal building the final
+//! edge set directly with [`GraphBuilder`] (property-tested below and in
+//! tests/stream.rs).
+//!
+//! Edits use set semantics per directed half-edge: the overlay records,
+//! for each `(u, v)`, the *latest* intent (present or absent), so
+//! duplicate inserts collapse and drop-then-reinsert is exactly an
+//! insert. Self-loops are ignored, matching `GraphBuilder`'s default
+//! policy. The node set is fixed — streaming churns edges over the
+//! existing `0..num_nodes` universe, which keeps every O(|V|) structure
+//! (feature rows, tier stamps, intern arenas) valid across merges.
+
+use super::{CsrGraph, GraphBuilder, NodeId};
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Pending edge edits over a base CSR. Cheap to append to, deterministic
+/// to serialize, and merged into a new CSR at epoch boundaries.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeltaOverlay {
+    /// Per-node insertion buffers: directed half-edges `u -> v`, in
+    /// arrival order (deduplicated on append, sorted only at merge).
+    inserts: BTreeMap<NodeId, Vec<NodeId>>,
+    /// Directed half-edges removed from the base (or cancelled inserts).
+    tombstones: BTreeSet<(NodeId, NodeId)>,
+}
+
+impl DeltaOverlay {
+    pub fn new() -> DeltaOverlay {
+        DeltaOverlay::default()
+    }
+
+    /// True when the overlay holds no pending edits.
+    pub fn is_empty(&self) -> bool {
+        self.inserts.values().all(|v| v.is_empty()) && self.tombstones.is_empty()
+    }
+
+    /// Pending directed half-edge insertions.
+    pub fn inserted_half_edges(&self) -> usize {
+        self.inserts.values().map(|v| v.len()).sum()
+    }
+
+    /// Pending directed half-edge tombstones.
+    pub fn tombstoned_half_edges(&self) -> usize {
+        self.tombstones.len()
+    }
+
+    /// Record an undirected edge insertion (both directions). A matching
+    /// tombstone is cancelled first, so drop-then-reinsert nets out to
+    /// "present". Self-loops are ignored.
+    pub fn insert_edge(&mut self, u: NodeId, v: NodeId) {
+        if u == v {
+            return;
+        }
+        self.insert_half(u, v);
+        self.insert_half(v, u);
+    }
+
+    /// Record an undirected edge removal (both directions). A matching
+    /// pending insert is cancelled first, so insert-then-drop nets out to
+    /// "absent".
+    pub fn drop_edge(&mut self, u: NodeId, v: NodeId) {
+        if u == v {
+            return;
+        }
+        self.drop_half(u, v);
+        self.drop_half(v, u);
+    }
+
+    fn insert_half(&mut self, u: NodeId, v: NodeId) {
+        self.tombstones.remove(&(u, v));
+        let buf = self.inserts.entry(u).or_default();
+        if !buf.contains(&v) {
+            buf.push(v);
+        }
+    }
+
+    fn drop_half(&mut self, u: NodeId, v: NodeId) {
+        if let Some(buf) = self.inserts.get_mut(&u) {
+            buf.retain(|&x| x != v);
+        }
+        self.tombstones.insert((u, v));
+    }
+
+    /// Fold `pending`'s edits on top of this overlay — the epoch-boundary
+    /// absorb of the just-merged batch into the cumulative edit set.
+    /// Within one overlay a half-edge is never both inserted and
+    /// tombstoned, so replay order inside `pending` is immaterial.
+    pub fn absorb(&mut self, pending: &DeltaOverlay) {
+        for &(u, v) in &pending.tombstones {
+            self.drop_half(u, v);
+        }
+        for (&u, vs) in &pending.inserts {
+            for &v in vs {
+                self.insert_half(u, v);
+            }
+        }
+    }
+
+    /// Nodes whose neighbor lists this overlay changes, sorted and
+    /// deduplicated — the invalidation set handed to
+    /// `TieringEngine::on_topology_delta`. Because undirected edits record
+    /// both half-edges, both endpoints of every edit appear as sources.
+    pub fn touched_nodes(&self) -> Vec<NodeId> {
+        let mut touched: BTreeSet<NodeId> = BTreeSet::new();
+        for (&u, vs) in &self.inserts {
+            if !vs.is_empty() {
+                touched.insert(u);
+            }
+        }
+        for &(u, _) in &self.tombstones {
+            touched.insert(u);
+        }
+        touched.into_iter().collect()
+    }
+
+    /// Apply the overlay to `base`, producing a fresh CSR: per node, the
+    /// base neighbors minus tombstoned entries plus inserted ones, passed
+    /// through the same sort/dedup/self-loop pipeline as a direct
+    /// [`GraphBuilder::build`] — so merge-of-overlay ≡ direct build of the
+    /// final edge set.
+    pub fn merge(&self, base: &CsrGraph) -> CsrGraph {
+        let n = base.num_nodes();
+        let mut b =
+            GraphBuilder::with_capacity(n, base.num_edges() + self.inserted_half_edges());
+        for u in 0..n as NodeId {
+            for &v in base.neighbors(u) {
+                if !self.tombstones.contains(&(u, v)) {
+                    b.push_edge(u, v);
+                }
+            }
+            if let Some(vs) = self.inserts.get(&u) {
+                for &v in vs {
+                    b.push_edge(u, v);
+                }
+            }
+        }
+        b.build()
+    }
+
+    /// Checkpoint form: flat `[u, v, ...]` pair arrays in deterministic
+    /// order (insert buffers in arrival order, tombstones sorted), via the
+    /// exact-value conventions of `snapshot::ser`. Node ids are u32 —
+    /// exact in f64 — so plain Json numbers suffice.
+    pub fn to_json(&self) -> Json {
+        let mut ins: Vec<NodeId> = Vec::with_capacity(2 * self.inserted_half_edges());
+        for (&u, vs) in &self.inserts {
+            for &v in vs {
+                ins.push(u);
+                ins.push(v);
+            }
+        }
+        let mut tomb: Vec<NodeId> = Vec::with_capacity(2 * self.tombstones.len());
+        for &(u, v) in &self.tombstones {
+            tomb.push(u);
+            tomb.push(v);
+        }
+        crate::util::json::obj(vec![
+            ("inserts", crate::snapshot::ser::nodes_arr(&ins)),
+            ("tombstones", crate::snapshot::ser::nodes_arr(&tomb)),
+        ])
+    }
+
+    /// Inverse of [`DeltaOverlay::to_json`] — restores the exact pending
+    /// edit set, including insert-buffer arrival order.
+    pub fn from_json(j: &Json) -> anyhow::Result<DeltaOverlay> {
+        use anyhow::Context;
+        let ins = crate::snapshot::ser::nodes_from(
+            j.get("inserts").context("snapshot: overlay missing inserts")?,
+        )?;
+        let tomb = crate::snapshot::ser::nodes_from(
+            j.get("tombstones").context("snapshot: overlay missing tombstones")?,
+        )?;
+        anyhow::ensure!(
+            ins.len() % 2 == 0 && tomb.len() % 2 == 0,
+            "snapshot: overlay pair arrays must have even length"
+        );
+        let mut o = DeltaOverlay::new();
+        for p in ins.chunks_exact(2) {
+            o.inserts.entry(p[0]).or_default().push(p[1]);
+        }
+        for p in tomb.chunks_exact(2) {
+            o.tombstones.insert((p[0], p[1]));
+        }
+        Ok(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+    use crate::{prop_assert, prop_assert_eq};
+
+    fn ring(n: usize) -> CsrGraph {
+        let mut b = GraphBuilder::new(n);
+        for i in 0..n {
+            b.push_undirected(i as NodeId, ((i + 1) % n) as NodeId);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn empty_overlay_merge_is_identity() {
+        let g = ring(8);
+        let o = DeltaOverlay::new();
+        assert!(o.is_empty());
+        assert_eq!(o.merge(&g), g);
+        assert!(o.touched_nodes().is_empty());
+    }
+
+    #[test]
+    fn insert_and_drop_change_neighbor_lists() {
+        let g = ring(6); // 0-1-2-3-4-5-0
+        let mut o = DeltaOverlay::new();
+        o.insert_edge(0, 3);
+        o.drop_edge(1, 2);
+        let m = o.merge(&g);
+        assert_eq!(m.neighbors(0), &[1, 3, 5]);
+        assert_eq!(m.neighbors(1), &[0]);
+        assert_eq!(m.neighbors(2), &[3]);
+        assert_eq!(o.touched_nodes(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn duplicate_insert_collapses() {
+        let g = ring(4);
+        let mut o = DeltaOverlay::new();
+        o.insert_edge(0, 2);
+        o.insert_edge(0, 2);
+        o.insert_edge(2, 0); // same undirected edge, other orientation
+        assert_eq!(o.inserted_half_edges(), 2);
+        let m = o.merge(&g);
+        assert_eq!(m.neighbors(0), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn drop_then_reinsert_nets_to_present() {
+        let g = ring(4);
+        let mut o = DeltaOverlay::new();
+        o.drop_edge(0, 1);
+        o.insert_edge(0, 1);
+        assert_eq!(o.tombstoned_half_edges(), 0);
+        assert_eq!(o.merge(&g), g);
+    }
+
+    #[test]
+    fn insert_then_drop_nets_to_absent() {
+        let g = ring(4);
+        let mut o = DeltaOverlay::new();
+        o.insert_edge(0, 2);
+        o.drop_edge(0, 2);
+        assert_eq!(o.inserted_half_edges(), 0);
+        let m = o.merge(&g);
+        assert_eq!(m.neighbors(0), &[1, 3]);
+    }
+
+    #[test]
+    fn self_loops_are_ignored() {
+        let g = ring(4);
+        let mut o = DeltaOverlay::new();
+        o.insert_edge(2, 2);
+        o.drop_edge(3, 3);
+        assert!(o.is_empty());
+    }
+
+    #[test]
+    fn absorb_replays_pending_edits() {
+        let g = ring(6);
+        let mut applied = DeltaOverlay::new();
+        applied.insert_edge(0, 3);
+        let mut pending = DeltaOverlay::new();
+        pending.drop_edge(0, 3); // cancels the applied insert
+        pending.insert_edge(1, 4);
+        applied.absorb(&pending);
+        let m = applied.merge(&g);
+        assert!(!m.neighbors(0).contains(&3));
+        assert!(m.neighbors(1).contains(&4));
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let mut o = DeltaOverlay::new();
+        o.insert_edge(0, 5);
+        o.insert_edge(0, 2);
+        o.drop_edge(3, 4);
+        let text = o.to_json().to_string_pretty();
+        let back = DeltaOverlay::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, o);
+        // and serialization itself is deterministic
+        assert_eq!(back.to_json().to_string_pretty(), text);
+    }
+
+    /// The tentpole identity: applying a random edit script (duplicate
+    /// inserts and drop-then-reinsert included) through an overlay and
+    /// merging equals building the final edge set directly.
+    #[test]
+    fn prop_overlay_merge_equals_direct_build() {
+        check(40, |g: &mut Gen| {
+            let n = g.usize(2..40);
+            // base graph: random undirected edges, tracked as a set
+            let mut base_edges: BTreeSet<(NodeId, NodeId)> = BTreeSet::new();
+            let mut b = GraphBuilder::new(n);
+            for _ in 0..g.usize(0..80) {
+                let u = g.usize(0..n) as NodeId;
+                let v = g.usize(0..n) as NodeId;
+                if u != v {
+                    base_edges.insert((u, v));
+                    base_edges.insert((v, u));
+                    b.push_undirected(u, v);
+                }
+            }
+            let base = b.build();
+
+            // random edit script over the same universe; the model is the
+            // final half-edge set maintained directly
+            let mut want = base_edges.clone();
+            let mut o = DeltaOverlay::new();
+            for _ in 0..g.usize(0..60) {
+                let u = g.usize(0..n) as NodeId;
+                let v = g.usize(0..n) as NodeId;
+                if u == v {
+                    continue;
+                }
+                if g.usize(0..2) == 0 {
+                    o.insert_edge(u, v);
+                    want.insert((u, v));
+                    want.insert((v, u));
+                } else {
+                    o.drop_edge(u, v);
+                    want.remove(&(u, v));
+                    want.remove(&(v, u));
+                }
+            }
+
+            let merged = o.merge(&base);
+            prop_assert!(merged.validate().is_ok());
+
+            // direct build of the final edge set
+            let mut direct = GraphBuilder::new(n);
+            for &(u, v) in &want {
+                direct.push_edge(u, v);
+            }
+            let direct = direct.build();
+            prop_assert_eq!(merged, direct);
+            Ok(())
+        });
+    }
+
+    /// Merging then absorbing is associative with a second merge: applying
+    /// two batches through absorb equals applying them sequentially.
+    #[test]
+    fn prop_absorb_commutes_with_sequential_merge() {
+        check(25, |g: &mut Gen| {
+            let n = g.usize(3..30);
+            let base = ring(n);
+            let mut script = |o: &mut DeltaOverlay, g: &mut Gen| {
+                for _ in 0..g.usize(0..30) {
+                    let u = g.usize(0..n) as NodeId;
+                    let v = g.usize(0..n) as NodeId;
+                    if g.usize(0..2) == 0 {
+                        o.insert_edge(u, v);
+                    } else {
+                        o.drop_edge(u, v);
+                    }
+                }
+            };
+            let mut first = DeltaOverlay::new();
+            script(&mut first, g);
+            let mut second = DeltaOverlay::new();
+            script(&mut second, g);
+
+            // path A: merge first, then merge second on the result
+            let sequential = second.merge(&first.merge(&base));
+            // path B: absorb second into first, merge once
+            let mut folded = first.clone();
+            folded.absorb(&second);
+            prop_assert_eq!(folded.merge(&base), sequential);
+            Ok(())
+        });
+    }
+}

@@ -6,13 +6,24 @@
 //! only the builder writes it.
 
 pub mod builder;
+pub mod delta;
 pub mod generate;
 pub mod io;
+pub mod stream;
 pub mod subgraph;
 pub mod walk;
 
 pub use builder::GraphBuilder;
+pub use delta::DeltaOverlay;
+pub use stream::{EdgeStream, StreamSpec};
 pub use subgraph::CacheSubgraph;
+
+/// Shared read-only handle to the *current* CSR snapshot. Under streaming
+/// ingestion the trainer re-merges the overlay at epoch boundaries and
+/// hands every sampler a fresh view via `Sampler::set_graph`; with
+/// `stream=off` the view built at session construction lives for the
+/// whole run.
+pub type GraphView = std::sync::Arc<CsrGraph>;
 
 /// Node id type. u32 bounds graphs at ~4.2B nodes — beyond the paper's
 /// largest (111M nodes) with room to spare, and halves index memory vs u64.

@@ -1,0 +1,329 @@
+//! Streaming edge ingestion: the `stream=` spec grammar plus the
+//! deterministic churn generator that feeds a [`DeltaOverlay`].
+//!
+//! `EdgeStream` draws from its own named PRNG stream
+//! (`util::rng::streams::EDGE_STREAM`), so turning streaming on never
+//! perturbs any existing seeded sequence — shuffles, samplers, the cache
+//! refresh, serving, and fault injection all keep their draws bit-for-bit
+//! (the golden-draw registry test in `util::rng` pins this). Events are
+//! generated against the *current merged* CSR: edits already pending in
+//! the overlay are invisible until the next epoch-boundary merge, which
+//! makes a generated script a pure function of (seed, spec, merge
+//! history) — exactly what crash/resume bit-identity needs.
+
+use super::delta::DeltaOverlay;
+use super::{CsrGraph, NodeId};
+use crate::util::rng::{streams, Pcg};
+use std::fmt;
+
+/// Parsed `stream=` parameter: `off | RATE[:grow=W][:drop=W]`.
+///
+/// `RATE` is the number of edge events per epoch (positive, finite;
+/// rounded to the nearest integer when generating). `grow`/`drop` are the
+/// relative weights of insert vs removal events (default 1 each, must be
+/// >= 0 and not both zero).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSpec {
+    pub rate: f64,
+    pub grow: f64,
+    pub drop: f64,
+}
+
+impl StreamSpec {
+    /// Parse `off|RATE[:grow=W][:drop=W]`. `Ok(None)` means streaming is
+    /// off. Every error message names the `stream` grammar so session
+    /// builds surface the offending parameter.
+    pub fn parse(text: &str) -> Result<Option<StreamSpec>, String> {
+        let text = text.trim();
+        if text == "off" {
+            return Ok(None);
+        }
+        let mut parts = text.split(':');
+        let head = parts.next().unwrap_or("").trim();
+        let rate: f64 = head.parse().map_err(|_| {
+            format!("stream spec must be off|RATE[:grow=W][:drop=W], got {text:?}")
+        })?;
+        if !rate.is_finite() || rate <= 0.0 {
+            return Err(format!("stream rate must be a positive number, got {head:?}"));
+        }
+        let (mut grow, mut drop) = (1.0f64, 1.0f64);
+        let mut seen: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+        for opt in parts {
+            let opt = opt.trim();
+            let (key, value) = opt
+                .split_once('=')
+                .ok_or_else(|| format!("stream option {opt:?} is not key=value"))?;
+            let (key, value) = (key.trim(), value.trim());
+            if !seen.insert(key.to_string()) {
+                return Err(format!("duplicate stream option {key:?}"));
+            }
+            let w: f64 = value
+                .parse()
+                .map_err(|_| format!("stream option {key}={value:?} is not a number"))?;
+            if !w.is_finite() || w < 0.0 {
+                return Err(format!("stream option {key}= must be >= 0, got {value:?}"));
+            }
+            match key {
+                "grow" => grow = w,
+                "drop" => drop = w,
+                other => {
+                    return Err(format!(
+                        "unknown stream option {other:?}; valid options: grow, drop"
+                    ))
+                }
+            }
+        }
+        if grow + drop <= 0.0 {
+            return Err("stream weights grow and drop must not both be zero".to_string());
+        }
+        Ok(Some(StreamSpec { rate, grow, drop }))
+    }
+
+    /// Edge events generated per epoch.
+    pub fn events_per_epoch(&self) -> usize {
+        self.rate.round() as usize
+    }
+
+    /// Probability that an event is an insert (vs a drop).
+    pub fn grow_probability(&self) -> f64 {
+        self.grow / (self.grow + self.drop)
+    }
+}
+
+impl fmt::Display for StreamSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.rate)?;
+        if self.grow != 1.0 {
+            write!(f, ":grow={}", self.grow)?;
+        }
+        if self.drop != 1.0 {
+            write!(f, ":drop={}", self.drop)?;
+        }
+        Ok(())
+    }
+}
+
+/// What one epoch of ingestion did (bench + report surface).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamEpochStats {
+    pub inserted: u64,
+    pub dropped: u64,
+}
+
+/// Deterministic edge-churn generator. One per run, owned by the trainer;
+/// its RNG state rides checkpoints so a resumed run ingests the identical
+/// event sequence.
+#[derive(Debug, Clone)]
+pub struct EdgeStream {
+    spec: StreamSpec,
+    rng: Pcg,
+}
+
+impl EdgeStream {
+    pub fn new(spec: StreamSpec, seed: u64) -> EdgeStream {
+        EdgeStream { spec, rng: Pcg::with_stream(seed, streams::EDGE_STREAM) }
+    }
+
+    pub fn spec(&self) -> &StreamSpec {
+        &self.spec
+    }
+
+    /// Generate one epoch's worth of events against `graph` (the current
+    /// merged CSR), recording them into `overlay`. Inserts pick two
+    /// distinct uniform nodes; drops pick a uniform *directed CSR slot*,
+    /// i.e. a degree-proportional source and a uniform neighbor — the
+    /// preferential-detachment analogue of how real churn concentrates on
+    /// hot nodes. On a graph with fewer than 2 nodes (or no edges, for
+    /// drops) the event is skipped; the draws still advance so the stream
+    /// stays aligned.
+    pub fn ingest_epoch(
+        &mut self,
+        graph: &CsrGraph,
+        overlay: &mut DeltaOverlay,
+    ) -> StreamEpochStats {
+        let mut stats = StreamEpochStats::default();
+        let n = graph.num_nodes();
+        let p_grow = self.spec.grow_probability();
+        for _ in 0..self.spec.events_per_epoch() {
+            if self.rng.gen_bool(p_grow) {
+                if n < 2 {
+                    continue;
+                }
+                let u = self.rng.gen_range(n) as NodeId;
+                let mut v = self.rng.gen_range(n - 1) as NodeId;
+                if v >= u {
+                    v += 1;
+                }
+                overlay.insert_edge(u, v);
+                stats.inserted += 1;
+            } else {
+                if graph.num_edges() == 0 {
+                    continue;
+                }
+                let slot = self.rng.gen_range(graph.num_edges());
+                let u = source_of_slot(graph, slot);
+                let v = graph.adj[slot];
+                overlay.drop_edge(u, v);
+                stats.dropped += 1;
+            }
+        }
+        stats
+    }
+
+    /// Checkpoint form: the spec is derivable from the method tag, so only
+    /// the RNG cursor is state.
+    pub fn rng(&self) -> &Pcg {
+        &self.rng
+    }
+
+    /// Rebuild from a checkpointed RNG cursor (inverse of [`EdgeStream::rng`]).
+    pub fn from_rng(spec: StreamSpec, rng: Pcg) -> EdgeStream {
+        EdgeStream { spec, rng }
+    }
+}
+
+/// Source node owning directed CSR slot `slot`: the last node whose
+/// offset is <= slot.
+fn source_of_slot(graph: &CsrGraph, slot: usize) -> NodeId {
+    let slot = slot as u64;
+    (graph.offsets.partition_point(|&o| o <= slot) - 1) as NodeId
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn ring(n: usize) -> CsrGraph {
+        let mut b = GraphBuilder::new(n);
+        for i in 0..n {
+            b.push_undirected(i as NodeId, ((i + 1) % n) as NodeId);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn parse_accepts_the_grammar() {
+        assert_eq!(StreamSpec::parse("off").unwrap(), None);
+        assert_eq!(StreamSpec::parse(" off ").unwrap(), None);
+        let s = StreamSpec::parse("32").unwrap().unwrap();
+        assert_eq!((s.rate, s.grow, s.drop), (32.0, 1.0, 1.0));
+        assert_eq!(s.events_per_epoch(), 32);
+        let s = StreamSpec::parse("8:grow=3:drop=0.5").unwrap().unwrap();
+        assert_eq!((s.rate, s.grow, s.drop), (8.0, 3.0, 0.5));
+        // one-sided churn is allowed
+        assert!(StreamSpec::parse("4:grow=0").unwrap().is_some());
+        assert!(StreamSpec::parse("4:drop=0").unwrap().is_some());
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_stream_in_the_message() {
+        for text in [
+            "fast",
+            "0",
+            "-3",
+            "inf",
+            "4:grow=0:drop=0",
+            "4:grow=-1",
+            "4:grow=lots",
+            "4:burst=2",
+            "4:grow=1:grow=2",
+            "4:grow",
+        ] {
+            let err = StreamSpec::parse(text).unwrap_err();
+            assert!(err.contains("stream"), "{text:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for text in ["12", "12:grow=3", "0.5:drop=0.25", "7:grow=2:drop=0"] {
+            let s = StreamSpec::parse(text).unwrap().unwrap();
+            assert_eq!(s.to_string(), text);
+            assert_eq!(StreamSpec::parse(&s.to_string()).unwrap().unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn ingestion_is_deterministic_per_seed() {
+        let g = ring(32);
+        let spec = StreamSpec::parse("24").unwrap().unwrap();
+        let run = |seed: u64| {
+            let mut es = EdgeStream::new(spec.clone(), seed);
+            let mut o = DeltaOverlay::new();
+            let stats = es.ingest_epoch(&g, &mut o);
+            (o, stats)
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7).0, run(8).0);
+    }
+
+    #[test]
+    fn grow_only_stream_never_drops() {
+        let g = ring(16);
+        let spec = StreamSpec::parse("50:drop=0").unwrap().unwrap();
+        let mut es = EdgeStream::new(spec, 3);
+        let mut o = DeltaOverlay::new();
+        let stats = es.ingest_epoch(&g, &mut o);
+        assert_eq!(stats.dropped, 0);
+        assert_eq!(stats.inserted, 50);
+        assert_eq!(o.tombstoned_half_edges(), 0);
+        let m = o.merge(&g);
+        assert!(m.num_edges() >= g.num_edges());
+    }
+
+    #[test]
+    fn drop_only_stream_shrinks_the_graph() {
+        let g = ring(16);
+        let spec = StreamSpec::parse("10:grow=0").unwrap().unwrap();
+        let mut es = EdgeStream::new(spec, 3);
+        let mut o = DeltaOverlay::new();
+        let stats = es.ingest_epoch(&g, &mut o);
+        assert_eq!(stats.inserted, 0);
+        assert!(stats.dropped > 0);
+        let m = o.merge(&g);
+        assert!(m.num_edges() < g.num_edges());
+    }
+
+    #[test]
+    fn merged_graph_always_validates_under_sustained_churn() {
+        let mut g = ring(24);
+        let spec = StreamSpec::parse("16").unwrap().unwrap();
+        let mut es = EdgeStream::new(spec, 11);
+        for _ in 0..8 {
+            let mut o = DeltaOverlay::new();
+            es.ingest_epoch(&g, &mut o);
+            g = o.merge(&g);
+            g.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn rng_cursor_round_trip_resumes_the_event_sequence() {
+        let g = ring(20);
+        let spec = StreamSpec::parse("12").unwrap().unwrap();
+        let mut a = EdgeStream::new(spec.clone(), 5);
+        let mut o = DeltaOverlay::new();
+        a.ingest_epoch(&g, &mut o);
+        // resume a copy from the cursor; both must generate identical
+        // second epochs
+        let mut b = EdgeStream::from_rng(spec, a.rng().clone());
+        let mut oa = DeltaOverlay::new();
+        let mut ob = DeltaOverlay::new();
+        a.ingest_epoch(&g, &mut oa);
+        b.ingest_epoch(&g, &mut ob);
+        assert_eq!(oa, ob);
+    }
+
+    #[test]
+    fn source_of_slot_inverts_offsets() {
+        let g = ring(5);
+        for v in 0..5u32 {
+            let s = g.offsets[v as usize] as usize;
+            let e = g.offsets[v as usize + 1] as usize;
+            for slot in s..e {
+                assert_eq!(source_of_slot(&g, slot), v);
+            }
+        }
+    }
+}

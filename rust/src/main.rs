@@ -46,6 +46,12 @@ const TRAIN_FLAGS: &[(&str, &str)] = &[
          modeled schedule, K >= 1 overlaps batch N+K's transfers with batch N's compute \
          (docs/TOPOLOGY.md)",
     ),
+    (
+        "stream",
+        "shorthand for the method param stream=RATE[:grow=W][:drop=W] — streaming edge \
+         ingestion: RATE edge events per epoch, merged into the CSR at the next epoch \
+         boundary with tier invalidation (docs/STREAMING.md)",
+    ),
 ];
 
 fn main() {
@@ -115,6 +121,9 @@ fn run(args: &Args) -> Result<()> {
             }
             if let Some(v) = args.get("faults") {
                 spec = spec.with("faults", v);
+            }
+            if let Some(v) = args.get("stream") {
+                spec = spec.with("stream", v);
             }
             // prefetch= is an Int param, so the shorthand goes through the
             // registry's typed parse like the gns shorthands above

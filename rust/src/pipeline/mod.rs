@@ -11,5 +11,5 @@ pub mod worker;
 
 pub use queue::{bounded, QueueStats, Receiver, Sender};
 pub use recycle::BufferPool;
-pub use trainer::{EpochReport, TrainOptions, Trainer};
+pub use trainer::{EpochReport, StreamState, TrainOptions, Trainer};
 pub use worker::{EpochPlan, SampledBatch};

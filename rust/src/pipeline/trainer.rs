@@ -32,6 +32,8 @@ use super::recycle::BufferPool;
 use super::worker::{run_epoch_sampling, EpochPlan};
 use crate::device::{ComputeModel, DeviceMemory};
 use crate::features::Dataset;
+use crate::graph::stream::StreamEpochStats;
+use crate::graph::{CsrGraph, DeltaOverlay, EdgeStream, GraphView, NodeId, StreamSpec};
 use crate::runtime::{micro_f1, Runtime, TrainState};
 use crate::sampling::{validate_batch, MiniBatch, Sampler};
 use crate::serving::{effective_spec, generate_requests, run_open_loop, ServeReport, ServeSpec};
@@ -195,6 +197,12 @@ pub struct TrainOptions {
     /// deterministic fault injection (`faults=crash@epoch=E[:batch=B]`):
     /// abort training at an exact, reproducible point to exercise resume.
     pub faults: Option<FaultSpec>,
+    /// streaming edge ingestion (`stream=RATE[:grow=W][:drop=W]`,
+    /// docs/STREAMING.md): edge events generated during each epoch are
+    /// merged into the sampling CSR at the next epoch boundary, with
+    /// touched device-resident feature rows re-uploaded. `None`
+    /// (`stream=off`) runs the static-graph pipeline bit-identically.
+    pub stream: Option<StreamSpec>,
     /// run-configuration tag stamped into every checkpoint; resume
     /// refuses a checkpoint whose tag differs (different dataset/method).
     pub tag: String,
@@ -217,8 +225,103 @@ impl Default for TrainOptions {
             prefetch: 0,
             ckpt: None,
             faults: None,
+            stream: None,
             tag: String::new(),
         }
+    }
+}
+
+/// Trainer-owned streaming-ingestion state (`stream=RATE`): the base CSR
+/// the run started from, the cumulative **applied** overlay (every edit
+/// merged so far), the **pending** overlay (edits ingested since the last
+/// merge, invisible to sampling), and the deterministic event generator.
+/// Events generated during epoch `e` land in `pending` and are merged
+/// into the sampling graph at the start of epoch `e+1` — so a checkpoint
+/// cut at the epoch boundary carries the unmerged overlay and a resumed
+/// run replays the merge identically (docs/STREAMING.md).
+pub struct StreamState {
+    stream: EdgeStream,
+    base: Arc<CsrGraph>,
+    applied: DeltaOverlay,
+    pending: DeltaOverlay,
+    /// current merged sampling graph (= `applied.merge(&base)`).
+    graph: Arc<CsrGraph>,
+}
+
+impl StreamState {
+    pub fn new(spec: StreamSpec, seed: u64, base: Arc<CsrGraph>) -> StreamState {
+        StreamState {
+            stream: EdgeStream::new(spec, seed),
+            graph: base.clone(),
+            base,
+            applied: DeltaOverlay::new(),
+            pending: DeltaOverlay::new(),
+        }
+    }
+
+    /// The current merged sampling graph (an `Arc` bump, never a copy).
+    pub fn graph(&self) -> GraphView {
+        self.graph.clone()
+    }
+
+    /// Epoch-boundary merge: absorb the pending edits into the applied
+    /// overlay and rebuild the merged CSR. Returns the touched source
+    /// nodes (sorted, distinct) when anything changed, `None` otherwise.
+    pub fn merge_pending(&mut self) -> Option<Vec<NodeId>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let touched = self.pending.touched_nodes();
+        self.applied.absorb(&self.pending);
+        self.pending = DeltaOverlay::new();
+        self.graph = Arc::new(self.applied.merge(&self.base));
+        Some(touched)
+    }
+
+    /// Generate one epoch of edge events against the current merged graph
+    /// into the pending overlay (merged at the next epoch boundary).
+    pub fn ingest_epoch(&mut self) -> StreamEpochStats {
+        self.stream.ingest_epoch(&self.graph, &mut self.pending)
+    }
+
+    /// Back to the as-constructed state (the from-scratch path after a
+    /// rejected checkpoint).
+    fn reset(&mut self, seed: u64) {
+        self.stream = EdgeStream::new(self.stream.spec().clone(), seed);
+        self.applied = DeltaOverlay::new();
+        self.pending = DeltaOverlay::new();
+        self.graph = self.base.clone();
+    }
+
+    /// Checkpoint form: the spec is derivable from the run tag, so the
+    /// state is the RNG cursor plus the two overlays (edits against the
+    /// base CSR — never the merged graph itself).
+    fn to_json(&self) -> Json {
+        crate::util::json::obj(vec![
+            ("rng", crate::snapshot::ser::rng_to_json(self.stream.rng())),
+            ("applied", self.applied.to_json()),
+            ("pending", self.pending.to_json()),
+        ])
+    }
+
+    /// Inverse of [`StreamState::to_json`]: parses everything before
+    /// assigning, then rebuilds the merged graph from the base CSR.
+    fn restore_json(&mut self, j: &Json) -> Result<()> {
+        use crate::snapshot::ser::rng_from_json;
+        let rng = rng_from_json(j.get("rng").context("snapshot: stream missing rng")?)?;
+        let applied =
+            DeltaOverlay::from_json(j.get("applied").context("snapshot: stream missing applied")?)?;
+        let pending =
+            DeltaOverlay::from_json(j.get("pending").context("snapshot: stream missing pending")?)?;
+        self.stream = EdgeStream::from_rng(self.stream.spec().clone(), rng);
+        self.graph = if applied.is_empty() {
+            self.base.clone()
+        } else {
+            Arc::new(applied.merge(&self.base))
+        };
+        self.applied = applied;
+        self.pending = pending;
+        Ok(())
     }
 }
 
@@ -415,6 +518,13 @@ impl Trainer {
         // more than the per-epoch clones this pipeline eliminates)
         let mut workers: Vec<Box<dyn Sampler>> =
             (1..=opts.workers.max(1)).map(|w| factory(w)).collect();
+        // streaming edge churn (`stream=RATE`): trainer-owned overlay
+        // state. `stream=off` builds none of this, so the epoch loop
+        // below stays bit-identical to the static-graph pipeline.
+        let mut stream = opts
+            .stream
+            .clone()
+            .map(|s| StreamState::new(s, opts.seed, Arc::new(self.dataset.graph.clone())));
         // crash safety: resume from the newest *valid* checkpoint in the
         // retention ring (corrupt/torn files are skipped with a warning
         // inside SnapshotStore::latest), then keep checkpointing every
@@ -431,6 +541,7 @@ impl Trainer {
                     &mut workers,
                     &mut rng,
                     &mut reports,
+                    stream.as_mut(),
                 ) {
                     Ok(next) => {
                         start_epoch = next;
@@ -459,15 +570,32 @@ impl Trainer {
                         }
                         leader = factory(0);
                         workers = (1..=opts.workers.max(1)).map(|w| factory(w)).collect();
+                        if let Some(ss) = stream.as_mut() {
+                            ss.reset(opts.seed);
+                        }
                     }
                 }
             }
         }
         for epoch in start_epoch..opts.epochs {
-            let (report, returned) =
-                self.train_epoch(leader.as_mut(), opts, epoch, &mut rng, chunk_size, workers)?;
+            let (report, returned) = self.train_epoch(
+                leader.as_mut(),
+                opts,
+                epoch,
+                &mut rng,
+                chunk_size,
+                workers,
+                stream.as_mut(),
+            )?;
             workers = returned;
             reports.push(report);
+            // ingest this epoch's edge events *before* the checkpoint is
+            // cut: the snapshot carries the unmerged pending overlay, so
+            // a crash between ingestion and the next epoch's merge
+            // resumes bit-identically (tests/snapshot.rs).
+            if let Some(ss) = stream.as_mut() {
+                ss.ingest_epoch();
+            }
             if let (Some(store), Some(ckpt)) = (&store, opts.ckpt.as_ref()) {
                 if (epoch + 1) % ckpt.every == 0 {
                     let doc = self.run_snapshot(
@@ -478,6 +606,7 @@ impl Trainer {
                         leader.as_ref(),
                         &workers,
                         &reports,
+                        stream.as_ref(),
                     )?;
                     store.save(epoch, &doc).context("write checkpoint")?;
                 }
@@ -501,7 +630,7 @@ impl Trainer {
         let bs = self.runtime.meta.batch_size;
         let workers: Vec<Box<dyn Sampler>> =
             (1..=opts.workers.max(1)).map(|w| factory(w)).collect();
-        self.train_epoch(leader.as_mut(), opts, epoch, &mut rng, bs, workers)
+        self.train_epoch(leader.as_mut(), opts, epoch, &mut rng, bs, workers, None)
             .map(|(report, _workers)| report)
     }
 
@@ -511,6 +640,7 @@ impl Trainer {
     /// plus routing ledgers, and the full report history. Replaying the
     /// remaining epochs from this document is bit-identical to never
     /// having stopped (tests/snapshot.rs).
+    #[allow(clippy::too_many_arguments)]
     fn run_snapshot(
         &self,
         opts: &TrainOptions,
@@ -520,6 +650,7 @@ impl Trainer {
         leader: &dyn Sampler,
         workers: &[Box<dyn Sampler>],
         reports: &[EpochReport],
+        stream: Option<&StreamState>,
     ) -> Result<Json> {
         use crate::snapshot::ser::{rng_to_json, timeline_to_json, u64s};
         let mut samplers = vec![leader.snapshot_state()];
@@ -542,7 +673,7 @@ impl Trainer {
                 ])
             })
             .collect();
-        Ok(crate::util::json::obj(vec![
+        let mut fields = vec![
             ("version", u64s(SNAPSHOT_VERSION)),
             ("tag", Json::Str(opts.tag.clone())),
             ("seed", u64s(opts.seed)),
@@ -553,7 +684,13 @@ impl Trainer {
             ("model", self.state.to_json()?),
             ("lanes", Json::Arr(lanes)),
             ("reports", Json::Arr(reports.iter().map(|r| r.to_json()).collect())),
-        ]))
+        ];
+        // streaming runs additionally persist the churn cursor + overlays
+        // (v3); static runs keep the exact pre-streaming payload
+        if let Some(ss) = stream {
+            fields.push(("stream", ss.to_json()));
+        }
+        Ok(crate::util::json::obj(fields))
     }
 
     /// Restore [`Trainer::run_snapshot`]. Run-configuration metadata is
@@ -566,6 +703,7 @@ impl Trainer {
     /// ledgers collapse onto lane 0 so run totals are conserved
     /// (docs/SNAPSHOT.md §Elastic resharding). Returns the next epoch to
     /// train.
+    #[allow(clippy::too_many_arguments)]
     fn restore_run_snapshot(
         &mut self,
         doc: &Json,
@@ -575,6 +713,7 @@ impl Trainer {
         workers: &mut [Box<dyn Sampler>],
         rng: &mut Pcg,
         reports: &mut Vec<EpochReport>,
+        stream: Option<&mut StreamState>,
     ) -> Result<usize> {
         use crate::snapshot::ser::{
             nodes_arr, nodes_from, req_u64, req_usize, rng_from_json, timeline_from_json, u64s,
@@ -632,10 +771,27 @@ impl Trainer {
             .and_then(Json::as_arr)
             .context("snapshot: missing samplers")?;
         anyhow::ensure!(!samplers.is_empty(), "snapshot: no sampler states");
+        // the run tag carries `stream=`, so a mismatch here means a
+        // hand-edited checkpoint — reject it loudly all the same
+        let stream_j = doc.get("stream");
+        anyhow::ensure!(
+            stream_j.is_some() == stream.is_some(),
+            "snapshot: checkpoint and run disagree on streaming state"
+        );
 
         // apply
         *rng = new_rng;
         self.state = new_state;
+        // overlays first, and the merged graph handed to every sampler
+        // *before* sampler state restore: the GNS leader rebuilds its
+        // shared cache state against the graph it currently holds
+        if let (Some(ss), Some(j)) = (stream, stream_j) {
+            ss.restore_json(j)?;
+            leader.set_graph(ss.graph());
+            for w in workers.iter_mut() {
+                w.set_graph(ss.graph());
+            }
+        }
         if lanes_j.len() == self.lanes.len() {
             for (l, lj) in self.lanes.iter_mut().zip(lanes_j) {
                 l.tiering.restore_json(
@@ -663,6 +819,7 @@ impl Trainer {
             let mut misses = 0u64;
             let mut delta_up = 0u64;
             let mut delta_reused = 0u64;
+            let mut invalidated = 0u64;
             let (mut batches, mut local, mut remote, mut peak) = (0u64, 0u64, 0u64, 0u64);
             // occupancy collapses like the other ledgers: busy seconds
             // sum onto lane 0 (run totals conserved), every new lane
@@ -688,6 +845,7 @@ impl Trainer {
                 misses += req_u64(tier, "misses")?;
                 delta_up += req_u64(tier, "delta_uploaded_rows")?;
                 delta_reused += req_u64(tier, "delta_reused_rows")?;
+                invalidated += req_u64(tier, "invalidated_rows")?;
                 batches += req_u64(lj, "batches")?;
                 local += req_u64(lj, "local_rows")?;
                 remote += req_u64(lj, "remote_rows")?;
@@ -701,6 +859,7 @@ impl Trainer {
                     ("misses", u64s(if i == 0 { misses } else { 0 })),
                     ("delta_uploaded_rows", u64s(if i == 0 { delta_up } else { 0 })),
                     ("delta_reused_rows", u64s(if i == 0 { delta_reused } else { 0 })),
+                    ("invalidated_rows", u64s(if i == 0 { invalidated } else { 0 })),
                 ]);
                 l.tiering.restore_json(&tier_doc, &mut l.device_mem)?;
                 if i == 0 {
@@ -733,6 +892,7 @@ impl Trainer {
     /// Lanes run sequentially with the same worker pool — each lane's
     /// `EpochPlan` covers only the targets its shard owns, and its
     /// batches are tiered/accounted against the lane's own device.
+    #[allow(clippy::too_many_arguments)]
     fn train_epoch(
         &mut self,
         leader: &mut dyn Sampler,
@@ -741,6 +901,7 @@ impl Trainer {
         rng: &mut Pcg,
         chunk_size: usize,
         mut workers: Vec<Box<dyn Sampler>>,
+        stream: Option<&mut StreamState>,
     ) -> Result<(EpochReport, Vec<Box<dyn Sampler>>)> {
         anyhow::ensure!(
             chunk_size >= 1 && chunk_size <= self.runtime.meta.batch_size,
@@ -776,6 +937,36 @@ impl Trainer {
         let timeline_base: Vec<Timeline> =
             self.lanes.iter().map(|l| l.timeline.clone()).collect();
 
+        // streaming epoch boundary: merge the edges ingested during the
+        // previous epoch into the CSR, hand every sampler the merged
+        // view (the GNS leader re-weights its cache distribution), and
+        // re-upload the touched device-resident rows — their cached
+        // features are stale once the neighborhoods changed. The
+        // invalidation is each lane's first reservation of the epoch, so
+        // the tier refresh and batch 0's transfers chain after it.
+        let mut delta_ends: Option<Vec<Duration>> = None;
+        if let Some(ss) = stream {
+            if let Some(touched) = ss.merge_pending() {
+                leader.set_graph(ss.graph());
+                for s in &mut workers {
+                    s.set_graph(ss.graph());
+                }
+                let mut ends = Vec::with_capacity(self.lanes.len());
+                for l in &mut self.lanes {
+                    let (t, _rows, end) = l.tiering.on_topology_delta_at(
+                        &touched,
+                        &links,
+                        &mut transfer,
+                        &mut l.timeline,
+                        epoch_base,
+                    );
+                    clock.add_modeled(Stage::Copy, t);
+                    ends.push(end);
+                }
+                delta_ends = Some(ends);
+            }
+        }
+
         // leader first (it refreshes the shared GNS cache), then every
         // lane uploads its own device replica of the published tier, then
         // the workers re-snapshot the fresh epoch state. The upload is
@@ -791,7 +982,7 @@ impl Trainer {
                 &links,
                 &mut clock,
                 &mut transfer,
-                epoch_base,
+                delta_ends.as_ref().map_or(epoch_base, |e| e[lane]),
             )?);
         }
         for s in &mut workers {
@@ -1254,6 +1445,19 @@ impl Trainer {
     /// for capacity planning; lane 0's peak for single-shard trainers).
     pub fn device_peak_bytes(&self) -> u64 {
         self.lanes.iter().map(|l| l.device_mem.peak()).max().unwrap_or(0)
+    }
+
+    /// Rows re-uploaded by streaming topology invalidation, summed across
+    /// every shard lane (docs/STREAMING.md). 0 when `stream=off` or no
+    /// touched row was resident.
+    pub fn invalidated_rows(&self) -> u64 {
+        self.lanes.iter().map(|l| l.tiering.cache().invalidated_rows).sum()
+    }
+
+    /// [`Trainer::invalidated_rows`] in bytes (rows × feature row size) —
+    /// the churn bench's invalidation-traffic headline.
+    pub fn invalidated_bytes(&self) -> u64 {
+        self.invalidated_rows() * self.row_bytes
     }
 
     /// Device feature-cache (hits, misses) summed across every shard lane.

@@ -85,6 +85,9 @@ impl CacheState {
 pub struct CacheSampler {
     policy: CacheDistribution,
     cache_size: usize,
+    /// Training node set the walk distribution is rooted at — kept so
+    /// [`CacheSampler::reweight`] can recompute 𝒫 after a topology merge.
+    train: Vec<NodeId>,
     /// `Arc`-shared with every `CacheState` drawn from it.
     probs: Arc<Vec<f64>>,
     table: AliasTable,
@@ -104,11 +107,7 @@ impl CacheSampler {
         let n = graph.num_nodes();
         let cache_size = ((n as f64 * cache_fraction).round() as usize)
             .clamp(1, n);
-        let probs = match &policy {
-            CacheDistribution::Degree => graph.degree_probs(),
-            CacheDistribution::RandomWalk { fanouts } => walk_probs(graph, train_set, fanouts),
-            CacheDistribution::Uniform => vec![1.0 / n as f64; n],
-        };
+        let probs = compute_probs(graph, train_set, &policy);
         // nodes with zero probability can never be sampled; AliasTable
         // needs a positive total, which degree/walk probs guarantee on any
         // non-empty graph with ≥1 edge or ≥1 training node.
@@ -116,11 +115,25 @@ impl CacheSampler {
         CacheSampler {
             policy,
             cache_size,
+            train: train_set.to_vec(),
             probs: Arc::new(probs),
             table,
             rng: Pcg::with_stream(seed, streams::CACHE_REFRESH),
             generation: 0,
         }
+    }
+
+    /// Recompute the sampling distribution 𝒫 against a merged graph —
+    /// streaming ingestion shifted degrees (and walk reachability), so the
+    /// importance probabilities of eq. 6 / eqs. 7–9 must follow. The
+    /// refresh RNG and generation counter are deliberately untouched:
+    /// reweighting changes which nodes future refreshes *prefer*, not the
+    /// draw sequence's alignment, so `stream=off` runs (which never call
+    /// this) are bit-identical to pre-streaming builds.
+    pub fn reweight(&mut self, graph: &CsrGraph) {
+        let probs = compute_probs(graph, &self.train, &self.policy);
+        self.table = AliasTable::new(&probs);
+        self.probs = Arc::new(probs);
     }
 
     pub fn cache_size(&self) -> usize {
@@ -187,6 +200,21 @@ impl CacheSampler {
         })?)?;
         self.generation = req_u64(j, "generation")?;
         Ok(())
+    }
+}
+
+/// The distribution 𝒫 for a (graph, train set, policy) triple — shared by
+/// construction and [`CacheSampler::reweight`].
+fn compute_probs(
+    graph: &CsrGraph,
+    train_set: &[NodeId],
+    policy: &CacheDistribution,
+) -> Vec<f64> {
+    let n = graph.num_nodes();
+    match policy {
+        CacheDistribution::Degree => graph.degree_probs(),
+        CacheDistribution::RandomWalk { fanouts } => walk_probs(graph, train_set, fanouts),
+        CacheDistribution::Uniform => vec![1.0 / n as f64; n],
     }
 }
 
@@ -268,6 +296,34 @@ mod tests {
         let c = cs.sample(&g);
         // every cached node must be reachable (nonzero walk prob)
         assert!(c.nodes.iter().all(|&v| c.probs[v as usize] > 0.0));
+    }
+
+    #[test]
+    fn reweight_follows_degree_changes_without_touching_the_draw_stream() {
+        let g = graph();
+        let train: Vec<NodeId> = (0..500).collect();
+        let mut a = CacheSampler::new(&g, &train, CacheDistribution::Degree, 0.02, 9);
+        let mut b = CacheSampler::new(&g, &train, CacheDistribution::Degree, 0.02, 9);
+
+        // grow node 0's neighborhood substantially, merge
+        let mut o = crate::graph::DeltaOverlay::new();
+        for v in 1..200u32 {
+            o.insert_edge(0, v);
+        }
+        let merged = o.merge(&g);
+        a.reweight(&merged);
+        assert_eq!(a.probs[0], merged.degree(0) as f64 / merged.num_edges() as f64);
+
+        // the refresh draw sequence is untouched: both samplers draw the
+        // same positions from their alias tables' underlying RNG
+        let ca = a.sample(&merged);
+        let cb = b.sample(&g);
+        assert_eq!(ca.generation, cb.generation);
+        // ...and a reweighted sampler still produces a valid cache over
+        // the merged graph
+        for (i, &v) in ca.nodes.iter().enumerate() {
+            assert_eq!(ca.pos(v), Some(i as u32));
+        }
     }
 
     #[test]

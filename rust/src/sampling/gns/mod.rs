@@ -217,6 +217,29 @@ impl Sampler for GnsSampler {
         self.state = self.shared.state.read().unwrap().clone();
     }
 
+    fn set_graph(&mut self, graph: crate::graph::GraphView) {
+        self.graph = graph;
+        if self.is_leader {
+            // touched-node degrees shifted, so the importance distribution
+            // (eq. 6 / eqs. 7–9) must be re-weighted and the induced cache
+            // subgraph rebuilt over the merged CSR. The resident node set
+            // and generation are preserved — the device tier must not see
+            // a phantom refresh from a topology merge alone.
+            let mut cs = self.shared.sampler.lock().unwrap();
+            cs.reweight(&self.graph);
+            let cur = self.shared.state.read().unwrap().clone();
+            let fresh = Arc::new(cs.state_from_nodes(
+                &self.graph,
+                cur.nodes.as_ref().clone(),
+                cur.generation,
+            ));
+            *self.shared.state.write().unwrap() = fresh;
+        }
+        // re-snapshot; the trainer updates the leader before the workers,
+        // so everyone samples the rebuilt state from here on
+        self.state = self.shared.state.read().unwrap().clone();
+    }
+
     fn sample_batch_into(
         &mut self,
         targets: &[NodeId],
@@ -437,6 +460,36 @@ mod tests {
         assert_eq!(s.cache_state().generation, g0 + 1, "epoch 2 refreshes");
         s.begin_epoch(4);
         assert_eq!(s.cache_state().generation, g0 + 2);
+    }
+
+    #[test]
+    fn set_graph_reweights_without_a_phantom_refresh() {
+        let (ds, shapes, mut s) = setup(32, 0.02);
+        s.begin_epoch(0);
+        let before = s.cache_state();
+
+        // merge a churn batch and hand the sampler the fresh view
+        let mut o = crate::graph::DeltaOverlay::new();
+        let hub = before.nodes[0];
+        for v in 0..64u32 {
+            o.insert_edge(hub, v);
+        }
+        let merged: crate::graph::GraphView = Arc::new(o.merge(&ds.graph));
+        s.set_graph(merged.clone());
+
+        let after = s.cache_state();
+        // node set + generation preserved: the device tier must not see a
+        // refresh from a topology merge alone
+        assert_eq!(after.generation, before.generation);
+        assert_eq!(after.nodes, before.nodes);
+        // ...but the distribution followed the merged degrees
+        assert_eq!(
+            after.probs[hub as usize],
+            merged.degree(hub) as f64 / merged.num_edges() as f64
+        );
+        // and batches against the merged view still validate
+        let mb = s.sample_batch(&ds.train[..32], &ds.labels).unwrap();
+        validate_batch(&mb, &shapes).unwrap();
     }
 
     #[test]

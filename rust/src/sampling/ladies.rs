@@ -114,6 +114,12 @@ impl Sampler for LadiesSampler {
 
     fn begin_epoch(&mut self, _epoch: usize) {}
 
+    fn set_graph(&mut self, graph: crate::graph::GraphView) {
+        // fixed node universe: per-node scratch sizes stay valid; layer
+        // probabilities are recomputed per batch from the live graph
+        self.graph = graph;
+    }
+
     fn sample_batch_into(
         &mut self,
         targets: &[NodeId],

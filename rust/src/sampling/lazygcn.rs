@@ -184,6 +184,13 @@ impl Sampler for LazyGcnSampler {
         self.mega = None; // fresh mega-batch at epoch start
     }
 
+    fn set_graph(&mut self, graph: crate::graph::GraphView) {
+        self.graph = graph;
+        // a frozen mega-batch references the old adjacency; drop it so the
+        // next batch re-expands against the merged graph
+        self.mega = None;
+    }
+
     fn sample_batch_into(
         &mut self,
         targets: &[NodeId],

@@ -218,6 +218,16 @@ pub trait Sampler: Send {
         Ok(out)
     }
 
+    /// Swap in a fresh CSR snapshot — called by the trainer at an epoch
+    /// boundary after a streaming-overlay merge, *before* `begin_epoch`.
+    /// Implementations replace their graph handle (an `Arc` clone, never a
+    /// CSR copy); GNS additionally re-weights its global cache
+    /// distribution, since touched-node degrees shift the importance
+    /// probabilities (paper eq. 6). The node universe is fixed under
+    /// streaming, so per-node scratch (intern tables, stamp sets) stays
+    /// valid. Default: no-op, for samplers built outside the trainer.
+    fn set_graph(&mut self, _graph: crate::graph::GraphView) {}
+
     /// Generation counter of the device-resident cache (GNS); 0 when the
     /// method has no cache. The trainer re-uploads cache features when it
     /// observes a new generation.

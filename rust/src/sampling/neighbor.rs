@@ -79,6 +79,11 @@ impl Sampler for NeighborSampler {
 
     fn begin_epoch(&mut self, _epoch: usize) {}
 
+    fn set_graph(&mut self, graph: crate::graph::GraphView) {
+        // fixed node universe: the intern table and scratch stay valid
+        self.graph = graph;
+    }
+
     fn sample_batch_into(
         &mut self,
         targets: &[NodeId],

@@ -545,15 +545,75 @@ pub fn prefetch_spec(spec: &MethodSpec) -> anyhow::Result<usize> {
     }
 }
 
-const NS_PARAMS: &[ParamInfo] = &[
-    CACHE_PARAM,
-    SHARD_PARAM,
-    TOPO_PARAM,
-    SERVE_PARAM,
-    CKPT_PARAM,
-    FAULTS_PARAM,
-    PREFETCH_PARAM,
-];
+/// The `stream=` parameter every method accepts: streaming edge ingestion
+/// (grammar in [`crate::graph::stream::StreamSpec`]). `off` (the default)
+/// trains on the frozen snapshot and is required to be metric-identical
+/// to omitting the parameter entirely (tests/stream.rs — the same anchor
+/// pattern as `shards=1` and `prefetch=0`).
+pub const STREAM_PARAM: ParamInfo = ParamInfo {
+    key: "stream",
+    kind: ParamKind::Str,
+    default: "off",
+    help: "streaming edge ingestion: off|RATE[:grow=W][:drop=W] — RATE edge \
+           events per epoch, merged into the CSR at the next epoch boundary",
+};
+
+/// Parse + validate a spec's `stream=` parameter. Shared by every builder
+/// (build-time rejection of bad churn configs) and by the session layer
+/// that hands the stream to the trainer. `None` means streaming is off.
+pub fn stream_spec(
+    spec: &MethodSpec,
+) -> anyhow::Result<Option<crate::graph::stream::StreamSpec>> {
+    crate::graph::stream::StreamSpec::parse(spec.str_or("stream", STREAM_PARAM.default))
+        .map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))
+}
+
+/// Declare a method's `params()` slice: method-specific parameters first,
+/// then the shared runtime tail. The tail is spelled exactly once — here —
+/// so a future shared parameter is added in this macro (plus its
+/// `*_PARAM` const and `*_spec` helper, and a line in
+/// [`validate_runtime_params`]) and every registered method picks it up.
+macro_rules! with_runtime_params {
+    ($($method_param:expr),* $(,)?) => {
+        &[
+            $($method_param,)*
+            CACHE_PARAM,
+            SHARD_PARAM,
+            TOPO_PARAM,
+            SERVE_PARAM,
+            CKPT_PARAM,
+            FAULTS_PARAM,
+            PREFETCH_PARAM,
+            STREAM_PARAM,
+        ]
+    };
+}
+
+/// The shared runtime parameters every method accepts (`cache=`,
+/// `shards=`, `topo=`, `serve=`, `ckpt=`, `faults=`, `prefetch=`,
+/// `stream=`), declared in exactly one place. Methods without parameters
+/// of their own use this slice directly as their `params()`.
+pub fn runtime_params() -> &'static [ParamInfo] {
+    RUNTIME_PARAMS
+}
+
+const RUNTIME_PARAMS: &[ParamInfo] = with_runtime_params![];
+
+/// Validate every shared runtime parameter of a spec in one call — the
+/// preamble each builder's `build()` starts with. Delegates to the
+/// individual `*_spec` helpers, so error text is identical to validating
+/// them one by one.
+pub fn validate_runtime_params(spec: &MethodSpec) -> anyhow::Result<()> {
+    cache_policy_spec(spec)?;
+    shard_spec(spec)?;
+    topo_spec(spec)?;
+    serve_spec(spec)?;
+    ckpt_spec(spec)?;
+    fault_spec(spec)?;
+    prefetch_spec(spec)?;
+    stream_spec(spec)?;
+    Ok(())
+}
 
 struct NsBuilder;
 
@@ -567,7 +627,7 @@ impl MethodBuilder for NsBuilder {
     }
 
     fn params(&self) -> &'static [ParamInfo] {
-        NS_PARAMS
+        runtime_params()
     }
 
     fn label(&self, _spec: &MethodSpec) -> String {
@@ -579,13 +639,7 @@ impl MethodBuilder for NsBuilder {
     }
 
     fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
-        cache_policy_spec(spec)?;
-        shard_spec(spec)?;
-        topo_spec(spec)?;
-        serve_spec(spec)?;
-        ckpt_spec(spec)?;
-        fault_spec(spec)?;
-        prefetch_spec(spec)?;
+        validate_runtime_params(spec)?;
         let graph = ctx.graph.clone();
         let shapes = ctx.shapes.clone();
         let seed = ctx.seed;
@@ -597,21 +651,12 @@ impl MethodBuilder for NsBuilder {
 
 struct LadiesBuilder;
 
-const LADIES_PARAMS: &[ParamInfo] = &[
-    ParamInfo {
-        key: "s-layer",
-        kind: ParamKind::Int,
-        default: "512",
-        help: "nodes sampled per layer (Table 3 uses 512 and 5000)",
-    },
-    CACHE_PARAM,
-    SHARD_PARAM,
-    TOPO_PARAM,
-    SERVE_PARAM,
-    CKPT_PARAM,
-    FAULTS_PARAM,
-    PREFETCH_PARAM,
-];
+const LADIES_PARAMS: &[ParamInfo] = with_runtime_params![ParamInfo {
+    key: "s-layer",
+    kind: ParamKind::Int,
+    default: "512",
+    help: "nodes sampled per layer (Table 3 uses 512 and 5000)",
+}];
 
 impl MethodBuilder for LadiesBuilder {
     fn name(&self) -> &'static str {
@@ -648,13 +693,7 @@ impl MethodBuilder for LadiesBuilder {
     }
 
     fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
-        cache_policy_spec(spec)?;
-        shard_spec(spec)?;
-        topo_spec(spec)?;
-        serve_spec(spec)?;
-        ckpt_spec(spec)?;
-        fault_spec(spec)?;
-        prefetch_spec(spec)?;
+        validate_runtime_params(spec)?;
         let s_layer = spec.usize_or("s-layer", 512);
         anyhow::ensure!(s_layer >= 1, "ladies: s-layer must be >= 1");
         let graph = ctx.graph.clone();
@@ -673,7 +712,7 @@ impl MethodBuilder for LadiesBuilder {
 
 struct LazyGcnBuilder;
 
-const LAZYGCN_PARAMS: &[ParamInfo] = &[
+const LAZYGCN_PARAMS: &[ParamInfo] = with_runtime_params![
     ParamInfo {
         key: "recycle-period",
         kind: ParamKind::Int,
@@ -686,13 +725,6 @@ const LAZYGCN_PARAMS: &[ParamInfo] = &[
         default: "1.1",
         help: "recycling growth rate per epoch",
     },
-    CACHE_PARAM,
-    SHARD_PARAM,
-    TOPO_PARAM,
-    SERVE_PARAM,
-    CKPT_PARAM,
-    FAULTS_PARAM,
-    PREFETCH_PARAM,
 ];
 
 impl MethodBuilder for LazyGcnBuilder {
@@ -717,13 +749,7 @@ impl MethodBuilder for LazyGcnBuilder {
     }
 
     fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
-        cache_policy_spec(spec)?;
-        shard_spec(spec)?;
-        topo_spec(spec)?;
-        serve_spec(spec)?;
-        ckpt_spec(spec)?;
-        fault_spec(spec)?;
-        prefetch_spec(spec)?;
+        validate_runtime_params(spec)?;
         let recycle_period = spec.usize_or("recycle-period", 2);
         let rho = spec.f64_or("rho", 1.1);
         anyhow::ensure!(recycle_period >= 1, "lazygcn: recycle-period must be >= 1");
@@ -751,7 +777,7 @@ impl MethodBuilder for LazyGcnBuilder {
 
 struct GnsBuilder;
 
-const GNS_PARAMS: &[ParamInfo] = &[
+const GNS_PARAMS: &[ParamInfo] = with_runtime_params![
     ParamInfo {
         key: "cache-fraction",
         kind: ParamKind::Float,
@@ -777,13 +803,6 @@ const GNS_PARAMS: &[ParamInfo] = &[
         default: "true",
         help: "sample the input layer exclusively from the cache (paper setting)",
     },
-    CACHE_PARAM,
-    SHARD_PARAM,
-    TOPO_PARAM,
-    SERVE_PARAM,
-    CKPT_PARAM,
-    FAULTS_PARAM,
-    PREFETCH_PARAM,
 ];
 
 impl MethodBuilder for GnsBuilder {
@@ -808,13 +827,7 @@ impl MethodBuilder for GnsBuilder {
     }
 
     fn build(&self, spec: &MethodSpec, ctx: &BuildContext<'_>) -> anyhow::Result<SamplerFactory> {
-        cache_policy_spec(spec)?;
-        shard_spec(spec)?;
-        topo_spec(spec)?;
-        serve_spec(spec)?;
-        ckpt_spec(spec)?;
-        fault_spec(spec)?;
-        prefetch_spec(spec)?;
+        validate_runtime_params(spec)?;
         let cache_fraction = spec.f64_or("cache-fraction", 0.01);
         let update_period = spec.usize_or("update-period", 1);
         anyhow::ensure!(
@@ -1301,6 +1314,10 @@ mod tests {
             "ns:ckpt=sometimes",
             "ladies:faults=crash@epoch=x",
             "gns:faults=oom@epoch=1",
+            "ns:stream=fast",
+            "ladies:stream=0",
+            "gns:stream=5:grow=0:drop=0,cache-fraction=0.02",
+            "lazygcn:stream=5:burst=2",
         ] {
             let spec = r.parse(text).unwrap();
             assert!(r.factory(&spec, &ctx).is_err(), "{text} should fail");
@@ -1312,6 +1329,26 @@ mod tests {
         let r = reg();
         let spec = MethodSpec::new("ns").with("bogus", 1u64);
         assert!(matches!(r.validate(&spec), Err(SpecError::UnknownParam { .. })));
+    }
+
+    #[test]
+    fn every_builder_ends_with_the_shared_runtime_tail() {
+        // the shared run params are declared once (with_runtime_params!);
+        // this pins every builder to that tail so a new shared param can
+        // never be picked up by three methods and missed by the fourth
+        let r = reg();
+        let tail = runtime_params();
+        assert!(tail.iter().any(|p| p.key == "stream"));
+        for b in r.builders() {
+            let params = b.params();
+            assert!(params.len() >= tail.len(), "{}: missing runtime tail", b.name());
+            let got: Vec<&str> = params[params.len() - tail.len()..]
+                .iter()
+                .map(|p| p.key)
+                .collect();
+            let want: Vec<&str> = tail.iter().map(|p| p.key).collect();
+            assert_eq!(got, want, "{}: runtime tail drifted", b.name());
+        }
     }
 
     #[test]

@@ -30,12 +30,12 @@
 use crate::device::ComputeModel;
 use crate::features::{build_dataset, synthesize_features, Dataset, FeatureParams};
 use crate::graph::generate::{LabeledGraph, DATASET_NAMES};
-use crate::graph::{CsrGraph, NodeId};
+use crate::graph::{CsrGraph, NodeId, StreamSpec};
 use crate::pipeline::{EpochReport, TrainOptions, Trainer};
 use crate::runtime::{artifacts_root, ArtifactMeta, Runtime};
 use crate::sampling::spec::{
-    cache_policy_spec, ckpt_spec, fault_spec, prefetch_spec, serve_spec, shard_spec, topo_spec,
-    BuildContext, MethodRegistry, MethodSpec, SamplerFactory, SpecError,
+    cache_policy_spec, ckpt_spec, fault_spec, prefetch_spec, serve_spec, shard_spec, stream_spec,
+    topo_spec, BuildContext, MethodRegistry, MethodSpec, SamplerFactory, SpecError,
 };
 use crate::sampling::BlockShapes;
 use crate::serving::{ServeReport, ServeSpec};
@@ -247,6 +247,7 @@ pub struct SessionBuilder {
     checkpoint: Option<CkptSpec>,
     faults: Option<FaultSpec>,
     prefetch: Option<usize>,
+    stream: Option<StreamSpec>,
 }
 
 impl SessionBuilder {
@@ -277,6 +278,7 @@ impl SessionBuilder {
             checkpoint: None,
             faults: None,
             prefetch: None,
+            stream: None,
         }
     }
 
@@ -442,6 +444,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Streaming edge-ingestion override (docs/STREAMING.md). Takes
+    /// precedence over the method spec's `stream=` parameter; the default
+    /// follows the spec (itself defaulting to `off` — the static-graph
+    /// pipeline, bit-identical to runs that omit the parameter).
+    pub fn stream(mut self, spec: StreamSpec) -> Self {
+        self.stream = Some(spec);
+        self
+    }
+
     /// Resolve the spec, build the dataset, load + validate the artifact,
     /// and stand up the trainer and sampler factories.
     pub fn build(self) -> Result<Session, BuildError> {
@@ -480,6 +491,10 @@ impl SessionBuilder {
         let prefetch = match self.prefetch {
             Some(k) => k,
             None => prefetch_spec(&spec).map_err(BuildError::Runtime)?,
+        };
+        let stream = match &self.stream {
+            Some(s) => Some(s.clone()),
+            None => stream_spec(&spec).map_err(BuildError::Runtime)?,
         };
         // validate the dataset name up front (cheap) so a typo is reported
         // as such, not as a missing artifact for a nonsense name
@@ -588,6 +603,7 @@ impl SessionBuilder {
             prefetch,
             ckpt,
             faults,
+            stream,
             tag,
         };
         let label = registry.label(&spec);
@@ -776,6 +792,26 @@ impl Session {
         self.serving.as_ref()
     }
 
+    /// The streaming edge-ingestion config (`stream=` param or builder
+    /// override), if any. Note the serving lane and `evaluate_split`'s
+    /// fresh NS samplers read the **base** graph — only the training-loop
+    /// samplers follow the merged view (docs/STREAMING.md).
+    pub fn stream(&self) -> Option<&StreamSpec> {
+        self.topts.stream.as_ref()
+    }
+
+    /// Feature-cache rows re-uploaded by streaming topology invalidation
+    /// (summed across shard lanes; 0 when `stream=off`).
+    pub fn invalidated_rows(&self) -> u64 {
+        self.trainer.invalidated_rows()
+    }
+
+    /// [`Session::invalidated_rows`] in bytes — the churn bench's
+    /// invalidation-traffic headline.
+    pub fn invalidated_bytes(&self) -> u64 {
+        self.trainer.invalidated_bytes()
+    }
+
     /// Run the configured online inference lane (docs/SERVING.md): an
     /// open-loop request stream over the **test split**, admission-queued
     /// into micro-batches and driven through the recycled training hot
@@ -928,6 +964,20 @@ mod tests {
         for bad in ["ns:prefetch=deep", "ns:prefetch=-1", "ns:prefetch=1.5"] {
             let err = Session::builder("yelp-s", bad).scale(0.03).build().unwrap_err();
             assert!(err.to_string().contains("prefetch"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn bad_stream_spec_fails_session_build() {
+        // `stream=` is validated before any artifact/dataset work too
+        for bad in [
+            "ns:stream=fast",
+            "ns:stream=0",
+            "ns:stream=4:grow=0:drop=0",
+            "ns:stream=4:burst=2",
+        ] {
+            let err = Session::builder("yelp-s", bad).scale(0.03).build().unwrap_err();
+            assert!(err.to_string().contains("stream"), "{bad}: {err}");
         }
     }
 

@@ -40,4 +40,7 @@ pub use store::{decode, encode, fnv1a, SnapshotStore, WriteFault};
 /// rejects mismatches instead of misinterpreting fields.
 /// v2: lanes and epoch reports carry async-timeline occupancy state
 /// (docs/TOPOLOGY.md §Overlap & prefetch).
-pub const SNAPSHOT_VERSION: u64 = 2;
+/// v3: tier counters gained `invalidated_rows`, and streaming runs
+/// (`stream=RATE`) persist a `stream` payload — churn RNG cursor plus
+/// the applied/pending edge overlays (docs/STREAMING.md).
+pub const SNAPSHOT_VERSION: u64 = 3;

@@ -148,6 +148,41 @@ impl TieringEngine {
         Ok((t, end))
     }
 
+    /// Streaming hook: an edge-churn merge changed the neighborhoods of
+    /// `touched` (sorted, distinct source ids). The policy is notified
+    /// first (it may re-rank its pinned set for the *next* refresh); then
+    /// every touched row that is currently resident re-crosses PCIe in
+    /// place — the device copy is stale against the merged graph. Returns
+    /// (modeled re-upload time, rows re-uploaded).
+    pub fn on_topology_delta(
+        &mut self,
+        touched: &[NodeId],
+        clock: &LinkClock,
+        stats: &mut TransferStats,
+    ) -> (Duration, u64) {
+        self.policy.on_topology_delta(touched);
+        self.cache.invalidate_rows(touched, clock, stats)
+    }
+
+    /// [`TieringEngine::on_topology_delta`] whose charges carry a
+    /// ready-time: the re-upload's h2d interval is reserved on `timeline`
+    /// chained from `ready`, so invalidation traffic shows up on the
+    /// timeline's h2d lane like any other epoch-boundary transfer.
+    /// Returns (modeled re-upload time, rows re-uploaded, chain end).
+    pub fn on_topology_delta_at(
+        &mut self,
+        touched: &[NodeId],
+        clock: &LinkClock,
+        stats: &mut TransferStats,
+        timeline: &mut Timeline,
+        ready: Duration,
+    ) -> (Duration, u64, Duration) {
+        let before = modeled_now(stats);
+        let (t, rows) = self.on_topology_delta(touched, clock, stats);
+        let end = reserve_charged(stats, before, timeline, ready);
+        (t, rows, end)
+    }
+
     /// Partition one batch's input nodes into hit/miss runs — the single
     /// residency pass that slicing, accounting, and compute read.
     pub fn plan_batch(&mut self, input_nodes: &[NodeId]) {
@@ -219,6 +254,7 @@ impl TieringEngine {
             ("misses", u64s(c.misses)),
             ("delta_uploaded_rows", u64s(c.delta_uploaded_rows)),
             ("delta_reused_rows", u64s(c.delta_reused_rows)),
+            ("invalidated_rows", u64s(c.invalidated_rows)),
         ])
     }
 
@@ -240,6 +276,7 @@ impl TieringEngine {
             misses: req_u64(j, "misses")?,
             delta_uploaded_rows: req_u64(j, "delta_uploaded_rows")?,
             delta_reused_rows: req_u64(j, "delta_reused_rows")?,
+            invalidated_rows: req_u64(j, "invalidated_rows")?,
         };
         self.cache
             .restore_snapshot(&nodes, req_u64(j, "generation")?, counters, mem)
@@ -374,6 +411,40 @@ mod tests {
         // occupancy mirrors the ledger exactly: busy == modeled, per link
         assert_eq!(tl.busy(Lane::H2d), stats.modeled(LinkKind::H2d));
         assert_eq!(tl.busy(Lane::D2d), stats.modeled(LinkKind::D2d));
+    }
+
+    #[test]
+    fn topology_delta_reuploads_stale_rows_on_the_h2d_lane() {
+        let mut engine = TieringEngine::new(Box::new(SamplerPolicy), 32, 100);
+        let mut mem = DeviceMemory::new(1 << 20);
+        let clock = LinkClock::pcie();
+        let mut stats = TransferStats::default();
+        let mut tl = Timeline::default();
+        let s = FakeCache { generation: 1, nodes: std::sync::Arc::new(vec![1, 2, 3]) };
+        let (_, end) = engine
+            .begin_epoch_at(0, &s, &mut mem, &clock, &mut stats, &mut tl, Duration::ZERO)
+            .unwrap();
+        let h2d_before = stats.h2d_bytes;
+        // {2, 3} resident + touched, {9} not resident: 2 rows re-upload
+        let (t, rows, end2) =
+            engine.on_topology_delta_at(&[2, 3, 9], &clock, &mut stats, &mut tl, end);
+        assert_eq!(rows, 2);
+        assert_eq!(stats.h2d_bytes, h2d_before + 200);
+        // charges land on the timeline's h2d lane, chained after `ready`
+        assert_eq!(end2, end + t);
+        assert_eq!(tl.busy(Lane::H2d), stats.modeled(LinkKind::H2d));
+        // in-place: residency and generation unchanged, served as hits
+        assert_eq!(engine.cache().generation(), 1);
+        let (_t, missed) = engine.serve(&[2, 3], &clock, &mut stats);
+        assert_eq!(missed, 0);
+        // nothing booked as a saving by the invalidation itself
+        assert_eq!(stats.bytes_saved_by_delta, 0);
+        // and the counter rides the snapshot round trip
+        let doc = engine.snapshot_json();
+        let mut engine2 = TieringEngine::new(Box::new(SamplerPolicy), 32, 100);
+        let mut mem2 = DeviceMemory::new(1 << 20);
+        engine2.restore_json(&doc, &mut mem2).unwrap();
+        assert_eq!(engine2.cache().invalidated_rows, 2);
     }
 
     #[test]

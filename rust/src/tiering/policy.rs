@@ -43,6 +43,15 @@ pub trait CachePolicy: Send {
     /// policies read their tier from it, static policies ignore it.
     /// `None` means "no device cache".
     fn epoch_tier(&mut self, epoch: usize, sampler: &dyn Sampler) -> Option<TierSnapshot>;
+
+    /// Streaming hook: the graph topology changed around `touched` nodes
+    /// (sorted, distinct — the sources of inserted/dropped edges). Called
+    /// at the epoch boundary *before* the resident rows are invalidated,
+    /// so a policy may adjust its pinned set (e.g. re-rank) first. The
+    /// default keeps the tier as-is; the engine then re-uploads any
+    /// touched resident rows regardless (their feature rows are stale
+    /// once the neighborhood that justified pinning them changed).
+    fn on_topology_delta(&mut self, _touched: &[NodeId]) {}
 }
 
 /// No device cache: every input row crosses PCIe (the NS baseline).

@@ -45,6 +45,8 @@ pub mod streams {
     pub const SERVE: u64 = 0x5352_5645;
     /// Deterministic fault-injection harness (`snapshot::FaultSpec`).
     pub const FAULT: u64 = 0xFA17;
+    /// Streaming edge-churn generator (`graph::stream::EdgeStream`).
+    pub const EDGE_STREAM: u64 = 0xED6E;
 
     /// Every named stream, with the per-worker window collapsed to its
     /// base (tests iterate this to prove pairwise distinctness).
@@ -60,6 +62,7 @@ pub mod streams {
         ("CACHE_REFRESH", CACHE_REFRESH),
         ("SERVE", SERVE),
         ("FAULT", FAULT),
+        ("EDGE_STREAM", EDGE_STREAM),
     ];
 }
 
@@ -433,6 +436,7 @@ mod tests {
             (streams::CACHE_REFRESH, 0xf727641069c27bda),
             (streams::SERVE, 0x366ae001d9b88c2b),
             (streams::FAULT, 0xcd8141ace0e99b12),
+            (streams::EDGE_STREAM, 0x314493696bd6bee8),
         ];
         for &(stream, want) in golden {
             let got = Pcg::with_stream(42, stream).next_u64();

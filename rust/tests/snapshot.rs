@@ -11,7 +11,12 @@
 //!    run trains from scratch, matching a scratch run bit-for-bit;
 //! 4. **elastic resharding**: a `shards=1` checkpoint resumes under
 //!    `shards=2` — the restored report history is bit-identical, train
-//!    targets stay a total partition, and the run completes.
+//!    targets stay a total partition, and the run completes;
+//! 5. **churn rides checkpoints** (docs/STREAMING.md): under `stream=RATE`
+//!    a checkpoint is cut *after* ingestion but *before* the next epoch's
+//!    merge, so a crash in that window resumes with the pending overlay
+//!    and the churn RNG cursor intact — resume == uninterrupted stays
+//!    bit-identical, at epoch-start and mid-epoch crash points.
 //!
 //! All artifact-gated (skip when `make artifacts` has not run). Identity
 //! requires workers=1: the sampling queue's drain order is
@@ -243,5 +248,62 @@ fn elastic_resume_from_one_shard_to_two_conserves_coverage() {
     let owned: usize = r2.shards.iter().map(|s| s.train_targets).sum();
     assert_eq!(owned, n_train, "elastic reshard lost/duplicated train targets");
     assert!(r2.test_f1.is_finite());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 5. streaming churn rides checkpoints (docs/STREAMING.md)
+
+#[test]
+fn crash_between_ingestion_and_merge_resumes_bit_identical_under_churn() {
+    // gns — the method whose tier invalidation and cache re-weighting
+    // both depend on the restored overlay being exactly right
+    let method = with_param(METHODS[3], "stream=16");
+    let Some(base) = run_metrics(tiny_session(&method)) else { return };
+
+    let dir = ckpt_dir("churn");
+    let ckpt = format!("ckpt=every=1:dir={}", dir.display());
+    // crash at the start of epoch 2: the newest checkpoint was cut after
+    // epoch 1's ingestion but before epoch 2's merge, so the pending
+    // overlay and the churn RNG cursor must ride it
+    let crashed = with_param(&with_param(&method, &ckpt), "faults=crash@epoch=2");
+    run_to_crash(tiny_session(&crashed)).unwrap();
+
+    let resumed = run_metrics(tiny_session(&with_param(&method, &ckpt))).unwrap();
+    assert_eq!(resumed, base, "churned resume diverged from uninterrupted");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mid_epoch_crash_under_churn_replays_the_merge_bit_identical() {
+    let method = with_param(METHODS[0], "stream=16");
+    let Some(base) = run_metrics(tiny_session(&method)) else { return };
+
+    let dir = ckpt_dir("churn-mid");
+    let ckpt = format!("ckpt=every=1:dir={}", dir.display());
+    // die mid-epoch-1: resume restores the end-of-epoch-0 checkpoint and
+    // must replay epoch 1's merge of the restored overlay identically
+    let crashed = with_param(&with_param(&method, &ckpt), "faults=crash@epoch=1:batch=2");
+    run_to_crash(tiny_session(&crashed)).unwrap();
+
+    let resumed = run_metrics(tiny_session(&with_param(&method, &ckpt))).unwrap();
+    assert_eq!(resumed, base, "mid-epoch churned resume diverged from uninterrupted");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn streamed_checkpoint_is_refused_by_a_static_resume() {
+    let method = with_param(METHODS[0], "stream=16");
+    let dir = ckpt_dir("churn-tag");
+    let ckpt = format!("ckpt=every=1:dir={}", dir.display());
+    // populate the ring under stream=16
+    if run_metrics(tiny_session(&with_param(&method, &ckpt))).is_none() {
+        return;
+    }
+    // the same ring without streaming must be refused (the method tag
+    // includes stream=) and train from scratch, matching a clean run
+    let fresh = run_metrics(tiny_session(METHODS[0])).unwrap();
+    let refused = run_metrics(tiny_session(&with_param(METHODS[0], &ckpt))).unwrap();
+    assert_eq!(refused, fresh, "streamed checkpoint leaked into a static run");
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -30,11 +30,21 @@ THRESHOLD = 0.10  # warn when a metric moves >10% in the bad direction
 # makespan_secs / serial_secs are covered by the _secs suffix (lower is
 # better), so a shrinking makespan is an improvement, never a regression;
 # overlap_efficiency is the inverse view of the same ratio and is
-# higher-better.
+# higher-better. BENCH_stream.json's invalidation_bytes / merge_ms ride
+# the lower-better suffixes; its throughput rates are listed explicitly.
 LOWER_SUFFIXES = ("_ms", "_secs", "_bytes", "_us")
 LOWER_KEYS = {"ns_per_batch", "ns_per_iter"}
-HIGHER_KEYS = {"hit_rate", "throughput_rps", "local_fraction", "overlap_efficiency"}
-# config echoes that match a lower-better suffix but are not metrics
+HIGHER_KEYS = {
+    "hit_rate",
+    "throughput_rps",
+    "local_fraction",
+    "overlap_efficiency",
+    "batches_per_sec",
+    "merge_edges_per_sec",
+    "save_mb_per_s",
+}
+# config echoes that match a lower-better suffix but are not metrics;
+# inserted/dropped/final_edges/rate are unsuffixed and skip by default
 IGNORED_KEYS = {"max_wait_us", "unix_time", "schema_version"}
 
 
