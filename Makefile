@@ -9,7 +9,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build check ci test fmt clippy bench serve-smoke resume-smoke overlap-smoke stream-smoke artifacts clean
+.PHONY: build check ci test fmt clippy bench shard-smoke serve-smoke resume-smoke overlap-smoke stream-smoke artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -21,11 +21,17 @@ check:
 	$(CARGO) fmt --check
 	$(CARGO) bench --bench micro_hotpath -- --scale 0.1 --smoke --json BENCH_hotpath.json
 	$(CARGO) bench --bench tiering_policies -- --scale 0.1 --smoke --json BENCH_tiering.json
-	$(CARGO) bench --bench shard_scaling -- --scale 0.1 --smoke --json BENCH_shard.json
+	$(MAKE) shard-smoke
 	$(MAKE) serve-smoke
 	$(MAKE) resume-smoke
 	$(MAKE) overlap-smoke
 	$(MAKE) stream-smoke
+
+# Smoke the shard-scaling sweep (docs/SHARDING.md), including the
+# lane-thread seq-vs-parallel sampling comparison (§Threading model),
+# emitting BENCH_shard.json.
+shard-smoke:
+	$(CARGO) bench --bench shard_scaling -- --scale 0.1 --smoke --json BENCH_shard.json
 
 # Smoke the online inference lane (docs/SERVING.md): a short request
 # stream swept across three offered loads, emitting BENCH_serving.json.

@@ -16,7 +16,6 @@
 
 use gns::device::{ComputeModel, DeviceMemory};
 use gns::features::build_dataset;
-use gns::pipeline::trainer::PAPER_SAMPLER_WORKERS;
 use gns::pipeline::BufferPool;
 use gns::runtime::ArtifactMeta;
 use gns::sampling::spec::{cache_policy_spec, BuildContext, MethodRegistry};
@@ -146,8 +145,11 @@ fn main() {
             clock.add_modeled(Stage::Copy, copy);
             clock.add_modeled(Stage::Compute, compute);
             // same device frame the trainer reports: sample spread over
-            // the paper's worker count + slice + modeled copy + compute
-            Ok(sample.as_secs_f64() / PAPER_SAMPLER_WORKERS
+            // the sweep's fixed 4-worker frame (the paper's setting —
+            // this standalone bench has no `workers=` knob) + slice +
+            // modeled copy + compute
+            const FRAME_WORKERS: f64 = 4.0;
+            Ok(sample.as_secs_f64() / FRAME_WORKERS
                 + slice.as_secs_f64()
                 + copy.as_secs_f64()
                 + compute.as_secs_f64())

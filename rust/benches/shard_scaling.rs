@@ -6,6 +6,12 @@
 //! (default `dist` — the cross-shard link is the point of this sweep),
 //! and the edge cut of the partition (docs/SHARDING.md, docs/TOPOLOGY.md).
 //!
+//! A second sweep measures what the trainer's lane threads buy on the
+//! CPU-bound sampling path: the same per-lane sampling workload run
+//! sequentially vs on one OS thread per lane (docs/SHARDING.md
+//! §Threading model), reported as wall-clock `batches_per_sec` and
+//! `lane_parallel_speedup` per K.
+//!
 //! `--json <path>` emits machine-readable results (`make bench` writes
 //! BENCH_shard.json); `--smoke` shrinks the sweep so `make check` and CI
 //! keep this binary from rotting.
@@ -58,8 +64,9 @@ fn main() {
     let total_batches = if smoke { 4 } else { args.usize_or("batches", 32) };
 
     println!(
-        "{:>3} {:>12} {:>8} {:>12} {:>10} {:>12} {:>8} {:>9}",
-        "K", "ns/batch", "local%", "x-shard MB", "inter s", "h2d MB", "hit%", "edge-cut"
+        "{:>3} {:>12} {:>9} {:>8} {:>12} {:>10} {:>12} {:>8} {:>9}",
+        "K", "ns/batch", "batch/s", "local%", "x-shard MB", "inter s", "h2d MB", "hit%",
+        "edge-cut"
     );
     let mut entries: Vec<Json> = Vec::new();
     for &k in sweep {
@@ -137,7 +144,9 @@ fn main() {
                 }
             }
         }
-        let ns_per_batch = t0.elapsed().as_secs_f64() * 1e9 / served.max(1) as f64;
+        let wall_secs = t0.elapsed().as_secs_f64();
+        let ns_per_batch = wall_secs * 1e9 / served.max(1) as f64;
+        let batches_per_sec = served as f64 / wall_secs.max(1e-9);
         let cross_shard_bytes = remote_rows * row_bytes;
         let local_frac = local_rows as f64 / (local_rows + remote_rows).max(1) as f64;
         let (hits, misses): (u64, u64) = lanes.iter().fold((0, 0), |(h, m), (e, _)| {
@@ -153,7 +162,7 @@ fn main() {
         let inter_secs = stats.modeled_inter.as_secs_f64();
         let mb = |b: u64| b as f64 / (1 << 20) as f64;
         println!(
-            "{k:>3} {ns_per_batch:>12.0} {:>7.1}% {:>12.1} {:>10.4} {:>12.1} {:>7.1}% {:>8.1}%",
+            "{k:>3} {ns_per_batch:>12.0} {batches_per_sec:>9.1} {:>7.1}% {:>12.1} {:>10.4} {:>12.1} {:>7.1}% {:>8.1}%",
             100.0 * local_frac,
             mb(cross_shard_bytes),
             inter_secs,
@@ -165,6 +174,7 @@ fn main() {
             ("shards", Json::Num(k as f64)),
             ("part", Json::Str(part.clone())),
             ("ns_per_batch", Json::Num(ns_per_batch)),
+            ("batches_per_sec", Json::Num(batches_per_sec)),
             ("batches", Json::Num(served as f64)),
             ("local_fraction", Json::Num(local_frac)),
             ("cross_shard_bytes", Json::Num(cross_shard_bytes as f64)),
@@ -180,6 +190,77 @@ fn main() {
         }
     }
 
+    // --- lane-parallel speedup: the exact same per-lane sampling
+    // workload, run sequentially vs on one scoped OS thread per lane.
+    // Two identically-seeded sampler sets do identical work, so the
+    // ratio isolates what the trainer's lane threads buy wall-clock.
+    let lane_sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let per_lane = if smoke { 2 } else { 8 };
+    let mut lane_entries: Vec<Json> = Vec::new();
+    println!(
+        "\nlane threads (sampling only, {per_lane} batches/lane):\n{:>3} {:>12} {:>12} {:>9}",
+        "K", "seq batch/s", "par batch/s", "speedup"
+    );
+    for &k in lane_sweep {
+        let shard_spec = ShardSpec::parse(&format!("{k}:part={part}"))
+            .unwrap_or_else(|e| panic!("shard spec: {e}"));
+        let router = shard_spec.router(&ds.graph);
+        let targets = ds.train_by_shard(&router);
+        let spec = reg.parse(&method).unwrap();
+        let ctx = BuildContext::new(&ds, shapes.clone(), 7);
+        let factory = reg.factory(&spec, &ctx).unwrap();
+        let served: usize = targets
+            .iter()
+            .map(|own| own.chunks(batch).take(per_lane).count())
+            .sum();
+
+        let mut seq_samplers: Vec<_> = (0..k).map(|l| factory(1 + l)).collect();
+        for s in seq_samplers.iter_mut() {
+            s.begin_epoch(0);
+        }
+        let t0 = Instant::now();
+        let mut slot = MiniBatch::default();
+        for (l, s) in seq_samplers.iter_mut().enumerate() {
+            for chunk in targets[l].chunks(batch).take(per_lane) {
+                s.sample_batch_into(chunk, &ds.labels, &mut slot)
+                    .unwrap_or_else(|e| panic!("lane {l}: {e:#}"));
+            }
+        }
+        let seq_secs = t0.elapsed().as_secs_f64().max(1e-9);
+
+        let mut par_samplers: Vec<_> = (0..k).map(|l| factory(1 + l)).collect();
+        for s in par_samplers.iter_mut() {
+            s.begin_epoch(0);
+        }
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for (l, s) in par_samplers.iter_mut().enumerate() {
+                let own = &targets[l];
+                let labels = &ds.labels;
+                scope.spawn(move || {
+                    let mut slot = MiniBatch::default();
+                    for chunk in own.chunks(batch).take(per_lane) {
+                        s.sample_batch_into(chunk, labels, &mut slot)
+                            .unwrap_or_else(|e| panic!("lane {l}: {e:#}"));
+                    }
+                });
+            }
+        });
+        let par_secs = t0.elapsed().as_secs_f64().max(1e-9);
+
+        let speedup = seq_secs / par_secs;
+        let seq_bps = served as f64 / seq_secs;
+        let par_bps = served as f64 / par_secs;
+        println!("{k:>3} {seq_bps:>12.1} {par_bps:>12.1} {speedup:>8.2}x");
+        lane_entries.push(json::obj(vec![
+            ("shards", Json::Num(k as f64)),
+            ("batches", Json::Num(served as f64)),
+            ("seq_batches_per_sec", Json::Num(seq_bps)),
+            ("par_batches_per_sec", Json::Num(par_bps)),
+            ("lane_parallel_speedup", Json::Num(speedup)),
+        ]));
+    }
+
     if let Some(path) = args.get("json") {
         let doc = json::bench_doc(
             "shard_scaling",
@@ -190,6 +271,7 @@ fn main() {
                 ("smoke", Json::Bool(smoke)),
                 ("epochs", Json::Num(epochs as f64)),
                 ("configs", json::arr(entries)),
+                ("lane_parallel", json::arr(lane_entries)),
             ],
         );
         std::fs::write(path, doc.to_string_pretty())

@@ -23,7 +23,10 @@ pub struct ExpOptions {
     pub scale: f64,
     pub epochs: usize,
     pub seed: u64,
-    pub workers: usize,
+    /// sampling worker threads per shard lane; `None` defers to the
+    /// method spec's `workers=` runtime param (default 1), `Some` (the
+    /// `--workers` flag) overrides it.
+    pub workers: Option<usize>,
     pub lr: f32,
     /// restrict to these datasets (None = experiment's own default list).
     pub datasets: Option<Vec<String>>,
@@ -44,7 +47,7 @@ impl Default for ExpOptions {
             scale: 0.3,
             epochs: 3,
             seed: 1,
-            workers: 1,
+            workers: None,
             lr: 3e-3,
             datasets: None,
             results_dir: std::path::PathBuf::from("results"),
@@ -62,7 +65,7 @@ pub const EXP_FLAGS: &[(&str, &str)] = &[
     ("scale", "node-count multiplier on the dataset analogues"),
     ("epochs", "training epochs"),
     ("seed", "base RNG seed"),
-    ("workers", "sampling worker threads"),
+    ("workers", "sampling worker threads (overrides the spec's workers= param)"),
     ("lr", "Adam learning rate"),
     ("datasets", "comma-separated dataset filter (yelp-s,amazon-s,...)"),
     ("results-dir", "directory for results/*.{txt,json}"),
@@ -87,7 +90,9 @@ impl ExpOptions {
             scale: args.f64_or("scale", defaults.scale),
             epochs: args.usize_or("epochs", defaults.epochs),
             seed: args.u64_or("seed", defaults.seed),
-            workers: args.usize_or("workers", defaults.workers),
+            workers: args
+                .get("workers")
+                .map(|v| v.parse().expect("--workers expects an integer >= 1")),
             lr: args.f64_or("lr", defaults.lr as f64) as f32,
             datasets: args.list("datasets"),
             results_dir: std::path::PathBuf::from(args.str_or("results-dir", "results")),
@@ -106,17 +111,22 @@ impl ExpOptions {
     }
 
     /// A `SessionBuilder` carrying these options for (dataset, spec).
+    /// `--workers` is applied only when given, so a `workers=` param in
+    /// the method spec keeps effect through the CLI path.
     pub fn session(&self, dataset: &str, spec: &MethodSpec) -> SessionBuilder {
-        Session::builder(dataset, &spec.name)
+        let builder = Session::builder(dataset, &spec.name)
             .spec(spec.clone())
             .scale(self.scale)
             .epochs(self.epochs)
             .seed(self.seed)
-            .workers(self.workers)
             .lr(self.lr)
             .device_capacity(self.device_capacity)
             .lazy_budget(self.lazy_budget)
-            .eval_batches(self.eval_batches)
+            .eval_batches(self.eval_batches);
+        match self.workers {
+            Some(w) => builder.workers(w),
+            None => builder,
+        }
     }
 }
 
@@ -184,7 +194,10 @@ mod tests {
         assert_eq!(o.scale, 0.5);
         assert_eq!(o.epochs, 7);
         assert_eq!(o.seed, 9);
-        assert_eq!(o.workers, 2);
+        assert_eq!(o.workers, Some(2));
+        // without the flag, the spec's workers= param keeps effect
+        let none = ExpOptions::from_args(&Args::parse(std::iter::empty::<String>()));
+        assert_eq!(none.workers, None);
         assert_eq!(o.datasets.as_deref().unwrap().len(), 2);
         assert_eq!(o.results_dir, std::path::PathBuf::from("out"));
         assert_eq!(o.device_capacity, 8 << 30);

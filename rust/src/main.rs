@@ -14,7 +14,7 @@
 
 use anyhow::{bail, Result};
 use gns::experiments::{self, harness::EXP_FLAGS, ExpOptions};
-use gns::sampling::spec::{MethodRegistry, ParamValue};
+use gns::sampling::spec::{workers_spec, MethodRegistry, ParamValue};
 use gns::util::cli::Args;
 
 /// Flags specific to `train` (on top of [`EXP_FLAGS`]).
@@ -52,6 +52,16 @@ const TRAIN_FLAGS: &[(&str, &str)] = &[
          ingestion: RATE edge events per epoch, merged into the CSR at the next epoch \
          boundary with tier invalidation (docs/STREAMING.md)",
     ),
+    (
+        "lane-threads",
+        "on|off — run shard lanes on parallel OS threads (default on; off is the \
+         sequential escape hatch, bit-identical metrics either way — docs/SHARDING.md)",
+    ),
+    (
+        "sample-lane",
+        "on|off — model CPU sampling as a fifth `sample` timeline lane so prefetch>=1 \
+         hides it under the previous batch's compute (default off — docs/TOPOLOGY.md)",
+    ),
 ];
 
 fn main() {
@@ -64,6 +74,15 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// Parse an `on|off` flag value (also accepts true/false and 1/0).
+fn on_off(flag: &str, v: &str) -> Result<bool> {
+    match v {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        _ => bail!("--{flag} expects on|off, got {v:?}"),
+    }
 }
 
 /// Reject typo'd flags: every command declares its accepted keys and the
@@ -136,19 +155,29 @@ fn run(args: &Args) -> Result<()> {
                 })?;
                 spec = spec.with("prefetch", value);
             }
+            // the banner reports the resolved worker count: the --workers
+            // flag when given, else the spec's workers= param (default 1)
+            let workers = match opts.workers {
+                Some(w) => w,
+                None => workers_spec(&spec)?,
+            };
             println!(
                 "training {} ({spec}) on {dataset} (scale {}, {} epochs, {} worker(s))",
                 registry.label(&spec),
                 opts.scale,
                 opts.epochs,
-                opts.workers
+                workers
             );
             // built directly (not via run_method) so the session handle
             // survives training for the optional serving lane below
-            let mut session = opts
-                .session(&dataset, &spec)
-                .build()
-                .map_err(anyhow::Error::new)?;
+            let mut builder = opts.session(&dataset, &spec);
+            if let Some(v) = args.get("lane-threads") {
+                builder = builder.lane_threads(on_off("lane-threads", v)?);
+            }
+            if let Some(v) = args.get("sample-lane") {
+                builder = builder.sample_lane(on_off("sample-lane", v)?);
+            }
+            let mut session = builder.build().map_err(anyhow::Error::new)?;
             let r = session.run()?;
             if let Some(e) = &r.error {
                 bail!("run failed: {e}");

@@ -19,17 +19,23 @@
 //! (`GatherPlan`) and both the host slice and the transfer accounting
 //! read that single partition.
 //!
-//! **Shard-parallel execution** (docs/SHARDING.md): the trainer holds one
-//! *lane* per shard — the shard's own train targets, `TieringEngine`, and
-//! simulated device (`DeviceMemory`), i.e. one GPU per shard. Each epoch
-//! runs every lane's own `EpochPlan` + worker pool and classifies each
-//! batch's input rows as shard-local vs remote via the `ShardRouter`
-//! (cross-shard bytes are the `ShardReport` roll-up in `RunResult`).
-//! `shards=1` builds exactly one lane and is metric-identical to the
-//! pre-sharding pipeline (tests/shard.rs).
+//! **Shard-parallel execution** (docs/SHARDING.md §Threading model): the
+//! trainer holds one *lane* per shard — the shard's own train targets,
+//! `TieringEngine`, and simulated device (`DeviceMemory`), i.e. one GPU
+//! per shard. Each epoch pre-draws every lane's `EpochPlan` from the
+//! shared RNG in lane index order, then runs the lanes on scoped OS
+//! threads (`lane-threads=on`, the default), each with its own worker
+//! pool, bounded queue, and private ledgers; all shared mutation is
+//! serialized through a lane-ordered baton so the parallel run is
+//! bit-identical to `lane-threads=off`. Each batch's input rows are
+//! classified shard-local vs remote via the `ShardRouter` (cross-shard
+//! bytes are the `ShardReport` roll-up in `RunResult`). `shards=1`
+//! builds exactly one lane and is metric-identical to the pre-sharding
+//! pipeline (tests/shard.rs).
 
+use super::queue::Receiver;
 use super::recycle::BufferPool;
-use super::worker::{run_epoch_sampling, EpochPlan};
+use super::worker::{run_epoch_sampling, EpochPlan, SampledBatch};
 use crate::device::{ComputeModel, DeviceMemory};
 use crate::features::Dataset;
 use crate::graph::stream::StreamEpochStats;
@@ -76,21 +82,23 @@ pub struct EpochReport {
     pub avg_cached_inputs: f64,
     pub isolated_nodes: usize,
     pub truncated_neighbors: usize,
+    /// The sampling worker-thread count this epoch actually ran with
+    /// (`opts.workers`, min 1): the device-frame breakdown divides the
+    /// measured sample seconds across these threads, mirroring how the
+    /// paper parallelizes sampling over worker processes.
+    pub sample_workers: f64,
 }
-
-/// The paper parallelizes sampling over this many worker processes; the
-/// device-frame breakdown divides measured sample time accordingly.
-pub const PAPER_SAMPLER_WORKERS: f64 = 4.0;
 
 impl EpochReport {
     /// Per-stage seconds in the **device frame** (as-if the paper's T4
-    /// testbed): sample = measured / 4 workers, slice = measured host
-    /// gather, copy = modeled PCIe/d2d, compute = modeled device step.
+    /// testbed): sample = measured / the configured worker count, slice
+    /// = measured host gather, copy = modeled PCIe/d2d, compute =
+    /// modeled device step.
     pub fn device_frame_stages(&self) -> Vec<(Stage, f64)> {
         vec![
             (
                 Stage::Sample,
-                self.clock.measured(Stage::Sample).as_secs_f64() / PAPER_SAMPLER_WORKERS,
+                self.clock.measured(Stage::Sample).as_secs_f64() / self.sample_workers.max(1.0),
             ),
             (Stage::Slice, self.clock.measured(Stage::Slice).as_secs_f64()),
             (Stage::Copy, self.clock.modeled(Stage::Copy).as_secs_f64()),
@@ -125,6 +133,7 @@ impl EpochReport {
             ("avg_cached_inputs", f64_bits(self.avg_cached_inputs)),
             ("isolated_nodes", Json::Num(self.isolated_nodes as f64)),
             ("truncated_neighbors", Json::Num(self.truncated_neighbors as f64)),
+            ("sample_workers", f64_bits(self.sample_workers)),
         ])
     }
 
@@ -153,6 +162,7 @@ impl EpochReport {
             avg_cached_inputs: req_f64_bits(j, "avg_cached_inputs")?,
             isolated_nodes: req_usize(j, "isolated_nodes")?,
             truncated_neighbors: req_usize(j, "truncated_neighbors")?,
+            sample_workers: req_f64_bits(j, "sample_workers")?,
         })
     }
 }
@@ -203,6 +213,18 @@ pub struct TrainOptions {
     /// touched device-resident feature rows re-uploaded. `None`
     /// (`stream=off`) runs the static-graph pipeline bit-identically.
     pub stream: Option<StreamSpec>,
+    /// run shard lanes on real OS threads (docs/SHARDING.md §Threading
+    /// model). `false` is the sequential escape hatch — bit-identical to
+    /// the threaded run on every reported metric, because the threaded
+    /// path serializes all shared mutation through a lane-ordered baton.
+    pub lane_threads: bool,
+    /// reserve each batch's measured sampling time (divided across the
+    /// worker threads) on the timeline's `sample` lane, ahead of the
+    /// batch's transfer chain, so `prefetch>=1` hides CPU sampling under
+    /// the previous batch's compute (docs/TOPOLOGY.md §Overlap &
+    /// prefetch). Off by default: measured sample times are wall-clock,
+    /// so enabling this makes makespans machine-dependent.
+    pub sample_lane: bool,
     /// run-configuration tag stamped into every checkpoint; resume
     /// refuses a checkpoint whose tag differs (different dataset/method).
     pub tag: String,
@@ -226,6 +248,8 @@ impl Default for TrainOptions {
             ckpt: None,
             faults: None,
             stream: None,
+            lane_threads: true,
+            sample_lane: false,
             tag: String::new(),
         }
     }
@@ -330,6 +354,12 @@ impl StreamState {
 /// `sampling::spec::SamplerFactory`, produced by `MethodRegistry`.
 pub type SamplerFactory = dyn Fn(usize) -> Box<dyn Sampler> + Send + Sync;
 
+/// One shard lane's sampling-worker set: `opts.workers` sampler
+/// instances. Lane `l`'s worker `i` is seeded `factory(1 + l*W + i)`,
+/// so a single-lane run reproduces the unsharded `factory(1..=W)`
+/// sequence exactly.
+type WorkerSet = Vec<Box<dyn Sampler>>;
+
 /// One shard's slice of the pipeline: its train targets, its simulated
 /// device, its feature tier, and its traffic ledger. `shards=1` builds
 /// exactly one lane, which *is* the unsharded pipeline.
@@ -348,10 +378,17 @@ struct ShardLane {
     local_rows: u64,
     remote_rows: u64,
     /// this device's occupancy timeline (h2d/d2d/inter links + compute
-    /// lane): every modeled charge reserves an interval here so epoch
-    /// wall time can be the critical-path makespan under `prefetch=K`.
-    /// Cumulative across the run and snapshotted with the lane.
+    /// and sample lanes): every modeled charge reserves an interval here
+    /// so epoch wall time can be the critical-path makespan under
+    /// `prefetch=K`. Cumulative across the run and snapshotted with the
+    /// lane.
     timeline: Timeline,
+    /// this lane's padded x0 assembly buffer — per lane so lane threads
+    /// never share a scratch block.
+    x0_scratch: Vec<f32>,
+    /// high-water mark of filled rows in x0_scratch (§Perf: zero only the
+    /// previously-dirtied tail instead of the whole padded block).
+    x0_dirty_elems: usize,
 }
 
 pub struct Trainer {
@@ -360,15 +397,14 @@ pub struct Trainer {
     pub state: TrainState,
     /// node→shard ownership map shared by every lane (trivial for 1 shard).
     router: ShardRouter,
-    /// one pipeline lane per shard; lanes run their epochs sequentially
-    /// on this single-host testbed, each against its own device model.
+    /// one pipeline lane per shard, each against its own device model.
+    /// Lanes run on real OS threads (`lane_threads`, the default) with
+    /// all shared mutation serialized through a lane-ordered baton, or
+    /// sequentially on the main thread (`lane-threads=off`) — the two
+    /// modes are bit-identical (docs/SHARDING.md §Threading model).
     lanes: Vec<ShardLane>,
     /// feature row size (cross-shard byte accounting).
     row_bytes: u64,
-    x0_scratch: Vec<f32>,
-    /// high-water mark of filled rows in x0_scratch (§Perf: zero only the
-    /// previously-dirtied tail instead of the whole padded block).
-    x0_dirty_elems: usize,
     /// recycled batch slots shared with the sampling workers: drained
     /// batches return here instead of being dropped, bounding live batch
     /// memory at queue_capacity + workers (+1) slots across all epochs.
@@ -422,6 +458,8 @@ impl Trainer {
                 local_rows: 0,
                 remote_rows: 0,
                 timeline: Timeline::default(),
+                x0_scratch: vec![0.0; x0_len],
+                x0_dirty_elems: 0,
             });
         }
         Ok(Trainer {
@@ -431,8 +469,6 @@ impl Trainer {
             router,
             lanes,
             row_bytes,
-            x0_scratch: vec![0.0; x0_len],
-            x0_dirty_elems: 0,
             buffer_pool: Arc::new(BufferPool::new()),
         })
     }
@@ -513,11 +549,16 @@ impl Trainer {
         let mut rng = Pcg::with_stream(opts.seed, streams::SHUFFLE);
         // persistent leader sampler handles epoch lifecycle + eval sampling
         let mut leader = factory(0);
-        // worker samplers are built once and recycled across epochs (each
-        // owns O(|V|) intern tables — rebuilding them per epoch would cost
-        // more than the per-epoch clones this pipeline eliminates)
-        let mut workers: Vec<Box<dyn Sampler>> =
-            (1..=opts.workers.max(1)).map(|w| factory(w)).collect();
+        // one worker-sampler set per shard lane, built once and recycled
+        // across epochs (each owns O(|V|) intern tables — rebuilding them
+        // per epoch would cost more than the per-epoch clones this
+        // pipeline eliminates). Lane `l`'s worker `i` is
+        // `factory(1 + l*W + i)`: with one lane this is exactly the
+        // `factory(1..=W)` sequence of the unsharded pipeline.
+        let w = opts.workers.max(1);
+        let mut workers: Vec<WorkerSet> = (0..self.lanes.len())
+            .map(|l| (0..w).map(|i| factory(1 + l * w + i)).collect())
+            .collect();
         // streaming edge churn (`stream=RATE`): trainer-owned overlay
         // state. `stream=off` builds none of this, so the epoch loop
         // below stays bit-identical to the static-graph pipeline.
@@ -569,7 +610,9 @@ impl Trainer {
                             l.timeline = Timeline::default();
                         }
                         leader = factory(0);
-                        workers = (1..=opts.workers.max(1)).map(|w| factory(w)).collect();
+                        workers = (0..self.lanes.len())
+                            .map(|l| (0..w).map(|i| factory(1 + l * w + i)).collect())
+                            .collect();
                         if let Some(ss) = stream.as_mut() {
                             ss.reset(opts.seed);
                         }
@@ -628,18 +671,21 @@ impl Trainer {
         let mut leader = factory(0);
         let mut rng = Pcg::with_stream(opts.seed ^ (epoch as u64) << 32, streams::SHUFFLE);
         let bs = self.runtime.meta.batch_size;
-        let workers: Vec<Box<dyn Sampler>> =
-            (1..=opts.workers.max(1)).map(|w| factory(w)).collect();
+        let w = opts.workers.max(1);
+        let workers: Vec<WorkerSet> = (0..self.lanes.len())
+            .map(|l| (0..w).map(|i| factory(1 + l * w + i)).collect())
+            .collect();
         self.train_epoch(leader.as_mut(), opts, epoch, &mut rng, bs, workers, None)
             .map(|(report, _workers)| report)
     }
 
     /// Serialize the complete run state at an epoch boundary: every live
-    /// RNG stream (epoch shuffle + all sampler streams, leader first),
-    /// model/optimizer tensors, each lane's device-resident feature tier
-    /// plus routing ledgers, and the full report history. Replaying the
-    /// remaining epochs from this document is bit-identical to never
-    /// having stopped (tests/snapshot.rs).
+    /// RNG stream (epoch shuffle + all sampler streams — leader first,
+    /// then each lane's worker set in lane-major order), model/optimizer
+    /// tensors, each lane's device-resident feature tier plus routing
+    /// ledgers, and the full report history. Replaying the remaining
+    /// epochs from this document is bit-identical to never having
+    /// stopped (tests/snapshot.rs).
     #[allow(clippy::too_many_arguments)]
     fn run_snapshot(
         &self,
@@ -648,13 +694,15 @@ impl Trainer {
         next_epoch: usize,
         rng: &Pcg,
         leader: &dyn Sampler,
-        workers: &[Box<dyn Sampler>],
+        workers: &[WorkerSet],
         reports: &[EpochReport],
         stream: Option<&StreamState>,
     ) -> Result<Json> {
         use crate::snapshot::ser::{rng_to_json, timeline_to_json, u64s};
         let mut samplers = vec![leader.snapshot_state()];
-        samplers.extend(workers.iter().map(|w| w.snapshot_state()));
+        for set in workers {
+            samplers.extend(set.iter().map(|w| w.snapshot_state()));
+        }
         let lanes: Vec<Json> = self
             .lanes
             .iter()
@@ -710,7 +758,7 @@ impl Trainer {
         opts: &TrainOptions,
         chunk_size: usize,
         leader: &mut dyn Sampler,
-        workers: &mut [Box<dyn Sampler>],
+        workers: &mut [WorkerSet],
         rng: &mut Pcg,
         reports: &mut Vec<EpochReport>,
         stream: Option<&mut StreamState>,
@@ -788,7 +836,7 @@ impl Trainer {
         if let (Some(ss), Some(j)) = (stream, stream_j) {
             ss.restore_json(j)?;
             leader.set_graph(ss.graph());
-            for w in workers.iter_mut() {
+            for w in workers.iter_mut().flatten() {
                 w.set_graph(ss.graph());
             }
         }
@@ -825,7 +873,7 @@ impl Trainer {
             // sum onto lane 0 (run totals conserved), every new lane
             // restarts from the old fleet's latest frontier
             let mut frontier = Duration::ZERO;
-            let mut busy = [Duration::ZERO; 4];
+            let mut busy = [Duration::ZERO; Lane::COUNT];
             for lj in lanes_j {
                 let tl = timeline_from_json(
                     lj.get("timeline").context("snapshot: lane missing timeline")?,
@@ -873,25 +921,34 @@ impl Trainer {
                 }
                 l.device_mem.restore_peak(peak);
                 l.timeline = Timeline::from_raw(
-                    [frontier; 4],
-                    if i == 0 { busy } else { [Duration::ZERO; 4] },
+                    [frontier; Lane::COUNT],
+                    if i == 0 { busy } else { [Duration::ZERO; Lane::COUNT] },
                 );
             }
         }
         leader.restore_state(&samplers[0])?;
-        for (w, st) in workers.iter_mut().zip(samplers[1..].iter()) {
+        // lane-major flattened worker states; an elastic resume under a
+        // different lane count restores the overlapping prefix and keeps
+        // the remaining fresh samplers (their draws are deterministic)
+        for (w, st) in workers.iter_mut().flatten().zip(samplers[1..].iter()) {
             w.restore_state(st)?;
         }
         *reports = new_reports;
         Ok(next_epoch)
     }
 
-    /// One epoch across every shard lane. Takes the worker samplers by
-    /// value and returns them so multi-epoch callers reuse the instances
-    /// (on error the samplers are dropped; the caller rebuilds on retry).
-    /// Lanes run sequentially with the same worker pool — each lane's
-    /// `EpochPlan` covers only the targets its shard owns, and its
-    /// batches are tiered/accounted against the lane's own device.
+    /// One epoch across every shard lane (docs/SHARDING.md §Threading
+    /// model). Takes each lane's worker-sampler set by value and returns
+    /// them so multi-epoch callers reuse the instances (on error they
+    /// are dropped; the caller rebuilds on retry). Every lane's shuffled
+    /// `EpochPlan` is pre-drawn from the shared RNG in lane index order
+    /// — the exact draw sequence of the sequential loop — then lanes run
+    /// on scoped OS threads (`opts.lane_threads`): each lane starts
+    /// sampling into its own bounded queue immediately, while the
+    /// *baton* (model state + global batch counter + f64 metric sums)
+    /// travels lane 0 → lane K-1, so train steps and ledger commits
+    /// apply in exactly the sequential order and `lane-threads=off` is
+    /// bit-identical on every reported metric.
     #[allow(clippy::too_many_arguments)]
     fn train_epoch(
         &mut self,
@@ -900,9 +957,9 @@ impl Trainer {
         epoch: usize,
         rng: &mut Pcg,
         chunk_size: usize,
-        mut workers: Vec<Box<dyn Sampler>>,
+        mut worker_sets: Vec<WorkerSet>,
         stream: Option<&mut StreamState>,
-    ) -> Result<(EpochReport, Vec<Box<dyn Sampler>>)> {
+    ) -> Result<(EpochReport, Vec<WorkerSet>)> {
         anyhow::ensure!(
             chunk_size >= 1 && chunk_size <= self.runtime.meta.batch_size,
             "chunk size {chunk_size} out of range"
@@ -948,7 +1005,7 @@ impl Trainer {
         if let Some(ss) = stream {
             if let Some(touched) = ss.merge_pending() {
                 leader.set_graph(ss.graph());
-                for s in &mut workers {
+                for s in worker_sets.iter_mut().flatten() {
                     s.set_graph(ss.graph());
                 }
                 let mut ends = Vec::with_capacity(self.lanes.len());
@@ -985,127 +1042,193 @@ impl Trainer {
                 delta_ends.as_ref().map_or(epoch_base, |e| e[lane]),
             )?);
         }
-        for s in &mut workers {
+        for s in worker_sets.iter_mut().flatten() {
             s.begin_epoch(epoch);
         }
 
-        let mut total_loss = 0.0f64;
-        let mut total_correct = 0.0f64;
-        let mut total_targets = 0usize;
-        let mut batches = 0usize;
+        // every lane's plan is pre-drawn from the shared RNG in lane
+        // index order — exactly the sequential draw sequence — before
+        // any lane thread exists (with one lane this is the same single
+        // draw sequence as the unsharded pipeline)
+        let plans: Vec<EpochPlan> = self
+            .lanes
+            .iter()
+            .map(|l| EpochPlan::shuffled(&l.targets, chunk_size, rng))
+            .collect();
+        // per-lane ledgers: each lane accumulates into its own
+        // StageClock/TransferStats/counters; the epoch roll-up below
+        // merges them in lane index order
+        let mut outcomes: Vec<LaneOutcome> = plans
+            .iter()
+            .map(|p| LaneOutcome { n_chunks: p.num_chunks(), ..Default::default() })
+            .collect();
+        let ctx = EpochCtx {
+            runtime: &self.runtime,
+            dataset: &self.dataset,
+            router: &self.router,
+            links: &links,
+            opts,
+            pool: &self.buffer_pool,
+            row_bytes: self.row_bytes,
+            epoch,
+        };
+        let state = &mut self.state;
+        let n_lanes = self.lanes.len();
+        let mut recovered: Vec<WorkerSet> = Vec::with_capacity(n_lanes);
+        let total_loss: f64;
+        let total_correct: f64;
+        let total_targets: usize;
+        let batches: usize;
+        let epoch_err: Option<anyhow::Error>;
+        if opts.lane_threads && n_lanes > 1 {
+            // Parallel mode: every lane thread starts sampling into its
+            // own bounded queue immediately (K lanes sample concurrently
+            // — the wall-clock win; lookahead bounded by queue_capacity),
+            // but drains — train steps, ledger commits, fault points —
+            // only while holding the *baton*, which visits lanes in
+            // index order. Shared-state mutation therefore applies in
+            // exactly the sequential order, and `lane-threads=off` is
+            // bit-identical on every reported metric.
+            let mut final_acc = (0.0f64, 0.0f64, 0usize, 0usize);
+            let mut final_err: Option<anyhow::Error> = None;
+            std::thread::scope(|s| {
+                let mut handles = Vec::with_capacity(n_lanes);
+                let (head_tx, head_rx) = std::sync::mpsc::channel();
+                let mut prev_rx = head_rx;
+                for (i, (((lane, plan), set), out)) in self
+                    .lanes
+                    .iter_mut()
+                    .zip(plans)
+                    .zip(worker_sets.drain(..))
+                    .zip(outcomes.iter_mut())
+                    .enumerate()
+                {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    let my_rx = std::mem::replace(&mut prev_rx, rx);
+                    let tier_end = tier_ends[i];
+                    let ctx = &ctx;
+                    // workers read labels straight from the shared
+                    // dataset (one Arc bump per lane)
+                    let dataset = ctx.dataset.clone();
+                    let pool = ctx.pool.clone();
+                    handles.push(s.spawn(move || {
+                        let (brx, bhandles, sampler_return) = run_epoch_sampling(
+                            set,
+                            plan,
+                            dataset,
+                            ctx.opts.queue_capacity,
+                            pool,
+                        );
+                        let mut baton = my_rx.recv().expect("lane baton chain broken");
+                        if baton.err.is_none() {
+                            if let Err(e) =
+                                drain_lane(ctx, lane, &brx, tier_end, &mut baton, out)
+                            {
+                                baton.err = Some(e);
+                            }
+                        }
+                        // closing unblocks producers stuck on a full
+                        // queue (error/skip path); it is a no-op after a
+                        // complete drain
+                        brx.close();
+                        for h in bhandles {
+                            let _ = h.join();
+                        }
+                        let set = std::mem::take(&mut *sampler_return.lock().unwrap());
+                        tx.send(baton).expect("lane baton chain broken");
+                        set
+                    }));
+                }
+                head_tx
+                    .send(Baton {
+                        state,
+                        total_loss: 0.0,
+                        total_correct: 0.0,
+                        total_targets: 0,
+                        batches: 0,
+                        err: None,
+                    })
+                    .expect("lane baton chain broken");
+                let baton = prev_rx.recv().expect("lane baton chain broken");
+                final_acc =
+                    (baton.total_loss, baton.total_correct, baton.total_targets, baton.batches);
+                final_err = baton.err;
+                for h in handles {
+                    recovered.push(h.join().expect("lane thread panicked"));
+                }
+            });
+            total_loss = final_acc.0;
+            total_correct = final_acc.1;
+            total_targets = final_acc.2;
+            batches = final_acc.3;
+            epoch_err = final_err;
+        } else {
+            // `lane-threads=off` (or a single lane): identical code path
+            // on the main thread, one lane at a time — the determinism
+            // anchor the parallel mode is asserted against
+            // (tests/shard.rs). After an upstream error, later lanes
+            // still spawn-and-close their pools so every sampler thread
+            // is joined before the error propagates.
+            let mut baton = Baton {
+                state,
+                total_loss: 0.0,
+                total_correct: 0.0,
+                total_targets: 0,
+                batches: 0,
+                err: None,
+            };
+            for (i, (((lane, plan), set), out)) in self
+                .lanes
+                .iter_mut()
+                .zip(plans)
+                .zip(worker_sets.drain(..))
+                .zip(outcomes.iter_mut())
+                .enumerate()
+            {
+                let (brx, bhandles, sampler_return) = run_epoch_sampling(
+                    set,
+                    plan,
+                    ctx.dataset.clone(),
+                    ctx.opts.queue_capacity,
+                    ctx.pool.clone(),
+                );
+                if baton.err.is_none() {
+                    if let Err(e) = drain_lane(&ctx, lane, &brx, tier_ends[i], &mut baton, out)
+                    {
+                        baton.err = Some(e);
+                    }
+                }
+                brx.close();
+                for h in bhandles {
+                    let _ = h.join();
+                }
+                recovered.push(std::mem::take(&mut *sampler_return.lock().unwrap()));
+            }
+            total_loss = baton.total_loss;
+            total_correct = baton.total_correct;
+            total_targets = baton.total_targets;
+            batches = baton.batches;
+            epoch_err = baton.err;
+        }
+        if let Some(e) = epoch_err {
+            return Err(e);
+        }
+
+        // merge the per-lane ledgers in lane index order. Every sum is
+        // integer nanoseconds or integer bytes/counts, so the merge is
+        // exact and independent of the wall-clock order lanes finished
+        // in — the roll-up below is bit-identical to the sequential run.
         let mut sum_inputs = 0usize;
         let mut sum_cached = 0usize;
         let mut isolated = 0usize;
         let mut truncated = 0usize;
-
-        for lane in 0..self.lanes.len() {
-            // each lane shuffles its own targets; with one lane this is
-            // the same single draw sequence as the unsharded pipeline
-            let plan = EpochPlan::shuffled(&self.lanes[lane].targets, chunk_size, rng);
-            let n_chunks = plan.num_chunks();
-
-            // workers read labels straight from the shared dataset (one
-            // Arc bump — the per-epoch `labels.clone()` used to copy |V|
-            // u16s)
-            let (rx, handles, sampler_return) = run_epoch_sampling(
-                workers,
-                plan,
-                self.dataset.clone(),
-                opts.queue_capacity,
-                self.buffer_pool.clone(),
-            );
-
-            let mut lane_batches = 0usize;
-            // pipeline dependency edges: batch i's transfer chain may
-            // start once batch i-1-prefetch's modeled compute finished
-            // (prefetch=0 ⇒ strictly serial chain). The first 1+K
-            // batches depend only on this lane's tier upload.
-            let tier_end = tier_ends[lane];
-            let mut compute_ends: Vec<Duration> = Vec::new();
-            // Any failure inside the drain loop must close the queue and
-            // join the workers — otherwise producers blocked on a full
-            // queue would outlive the epoch as zombie threads.
-            let mut epoch_err: Option<anyhow::Error> = None;
-            while let Some(sb) = rx.pop() {
-                let mb = match sb.batch {
-                    Ok(mb) => mb,
-                    Err(e) => {
-                        epoch_err = Some(e.context("sampler failed"));
-                        break;
-                    }
-                };
-                clock.add_measured(Stage::Sample, sb.sample_time);
-                if opts.paranoid_validate {
-                    if let Err(msg) =
-                        crate::sampling::validate_batch(&mb, &self.runtime.meta.block_shapes())
-                    {
-                        self.buffer_pool.put(mb);
-                        epoch_err = Some(anyhow::Error::msg(msg));
-                        break;
-                    }
-                }
-                let dep = if lane_batches > opts.prefetch {
-                    compute_ends[lane_batches - 1 - opts.prefetch]
-                } else {
-                    tier_end
-                };
-                let out = match self
-                    .run_train_batch(lane, &mb, opts, &links, &mut clock, &mut transfer, dep)
-                {
-                    Ok((out, compute_end)) => {
-                        compute_ends.push(compute_end);
-                        out
-                    }
-                    Err(e) => {
-                        self.buffer_pool.put(mb);
-                        epoch_err = Some(e);
-                        break;
-                    }
-                };
-                total_loss += out.loss as f64 * out.batch_real as f64;
-                total_correct += out.correct as f64;
-                total_targets += out.batch_real;
-                batches += 1;
-                lane_batches += 1;
-                sum_inputs += mb.num_input_nodes();
-                sum_cached += mb.stats.cached_inputs;
-                isolated += mb.stats.isolated_nodes;
-                truncated += mb.stats.truncated_neighbors;
-                self.lanes[lane].batches += 1;
-                // return the drained slot to the workers (recycling channel)
-                self.buffer_pool.put(mb);
-                // deterministic fault point #2: die mid-epoch after an
-                // exact number of trained batches. The error takes the
-                // same cleanup path as a real batch failure (queue closed,
-                // workers joined), leaving the run as a crash would.
-                if let Some(f) = opts.faults.as_ref() {
-                    if f.epoch == epoch && f.batch == Some(batches) {
-                        epoch_err = Some(anyhow::anyhow!(
-                            "injected crash after batch {batches} of epoch {epoch} \
-                             (faults=crash@epoch:batch)"
-                        ));
-                        break;
-                    }
-                }
-            }
-            if let Some(e) = epoch_err {
-                rx.close(); // unblocks producers waiting on a full queue
-                for h in handles {
-                    let _ = h.join();
-                }
-                return Err(e);
-            }
-            for h in handles {
-                h.join().ok();
-            }
-            // all workers exited: collect their samplers for the next
-            // lane (and the next epoch)
-            workers = std::mem::take(&mut *sampler_return.lock().unwrap());
-            anyhow::ensure!(
-                lane_batches == n_chunks,
-                "shard {}: lost batches: {lane_batches} != {n_chunks}",
-                self.lanes[lane].shard
-            );
+        for out in &outcomes {
+            clock.merge(&out.clock);
+            transfer.merge(&out.transfer);
+            sum_inputs += out.sum_inputs;
+            sum_cached += out.sum_cached;
+            isolated += out.isolated;
+            truncated += out.truncated;
         }
 
         // validation F1 with the leader sampler's topology-free NS pass
@@ -1128,7 +1251,7 @@ impl Trainer {
             l.timeline.advance_to(epoch_end);
         }
         let mut timeline = TimelineStats {
-            busy: [Duration::ZERO; 4],
+            busy: [Duration::ZERO; Lane::COUNT],
             makespan: epoch_end.saturating_sub(epoch_base),
         };
         for (l, base) in self.lanes.iter().zip(&timeline_base) {
@@ -1155,8 +1278,9 @@ impl Trainer {
             avg_cached_inputs: sum_cached as f64 / batches.max(1) as f64,
             isolated_nodes: isolated,
             truncated_neighbors: truncated,
+            sample_workers: opts.workers.max(1) as f64,
         };
-        Ok((report, workers))
+        Ok((report, recovered))
     }
 
     /// Consult one lane's cache policy and (delta-)upload the epoch's
@@ -1192,116 +1316,6 @@ impl Trainer {
         Ok(end)
     }
 
-    /// Steps 2–6 for one sampled batch, against one lane's device. The
-    /// batch's transfer chain is reserved on the lane's timeline starting
-    /// at `xfer_ready` (its `prefetch=K` dependency edge) and its modeled
-    /// compute after the chain; returns the step output plus the compute
-    /// finish — the dependency handle for batch `i+1+K`.
-    #[allow(clippy::too_many_arguments)]
-    fn run_train_batch(
-        &mut self,
-        lane: usize,
-        mb: &MiniBatch,
-        opts: &TrainOptions,
-        links: &LinkClock,
-        clock: &mut StageClock,
-        transfer: &mut TransferStats,
-        xfer_ready: Duration,
-    ) -> Result<(crate::runtime::StepOutput, Duration)> {
-        let (_slice, _copy, mut chain_end) =
-            self.assemble_x0(lane, mb, links, clock, transfer, xfer_ready);
-        // shard ledger: rows owned by this lane's shard are local, the
-        // rest are remote fetches from their owner — charged as one
-        // batched fetch on the `inter` link riding the same transfer
-        // chain (zero modeled seconds on single-box topologies; see
-        // docs/TOPOLOGY.md). The single-shard path skips the per-row
-        // probe.
-        if self.router.num_shards() > 1 {
-            let (local, remote) = self.router.count(self.lanes[lane].shard, &mb.input_nodes);
-            self.lanes[lane].local_rows += local;
-            self.lanes[lane].remote_rows += remote;
-            if remote > 0 {
-                let t = transfer.charge(links, LinkKind::Inter, remote * self.row_bytes);
-                clock.add_modeled(Stage::Copy, t);
-                if t > Duration::ZERO {
-                    chain_end = self.lanes[lane].timeline.reserve(Lane::Inter, chain_end, t);
-                }
-            }
-        } else {
-            self.lanes[lane].local_rows += mb.input_nodes.len() as u64;
-        }
-        let t0 = Instant::now();
-        let out = self
-            .runtime
-            .train_step(&mut self.state, mb, &self.x0_scratch, opts.lr)?;
-        // compute covers fwd+bwd+adam; Update stage gets the (tiny) state
-        // readback, which train_step folds in — split by proportion is not
-        // measurable separately, so Update counts the bookkeeping only.
-        clock.add_measured(Stage::Compute, t0.elapsed());
-        // device-frame compute estimate (as-if-T4; see ComputeModel docs)
-        let t_compute = opts.compute_model.train_step_time(&self.runtime.meta);
-        clock.add_modeled(Stage::Compute, t_compute);
-        // compute occupies the device once its own transfers are in
-        let compute_end = self.lanes[lane].timeline.reserve(Lane::Compute, chain_end, t_compute);
-        let t1 = Instant::now();
-        clock.add_measured(Stage::Update, t1.elapsed());
-        Ok((out, compute_end))
-    }
-
-    /// Host slice (step 2) + modeled transfer (step 3) for the input block.
-    /// One `GatherPlan` per lane partitions the input nodes into hit/miss
-    /// runs; both the host gather and the transfer accounting read it.
-    /// The miss/hit/metadata charges are reserved on the lane's timeline
-    /// as a chain starting at `xfer_ready` (the batch's `prefetch=K`
-    /// dependency edge). Returns (measured slice, modeled copy, chain
-    /// end) so the serving lane can charge per-batch latency from the
-    /// same accounting the epoch report uses — callers that only need
-    /// the clock totals ignore the value.
-    fn assemble_x0(
-        &mut self,
-        lane: usize,
-        mb: &MiniBatch,
-        links: &LinkClock,
-        clock: &mut StageClock,
-        transfer: &mut TransferStats,
-        xfer_ready: Duration,
-    ) -> (Duration, Duration, Duration) {
-        let dim = self.dataset.features.dim();
-        let t0 = Instant::now();
-        let n = mb.input_nodes.len();
-        self.lanes[lane].tiering.plan_batch(&mb.input_nodes);
-        self.dataset.features.slice_runs_into(
-            &mb.input_nodes,
-            self.lanes[lane].tiering.last_plan().runs(),
-            &mut self.x0_scratch[..n * dim],
-        );
-        // zero only the tail the previous batch dirtied (§Perf iteration 2)
-        let dirty_end = self.x0_dirty_elems.max(n * dim);
-        self.x0_scratch[n * dim..dirty_end].fill(0.0);
-        self.x0_dirty_elems = n * dim;
-        let slice = t0.elapsed();
-        clock.add_measured(Stage::Slice, slice);
-
-        let (t_copy, _missed, mut chain_end) = {
-            let l = &mut self.lanes[lane];
-            l.tiering.serve_planned_at(links, transfer, &mut l.timeline, xfer_ready)
-        };
-        // block metadata (idx/w/self/labels) also crosses PCIe
-        let meta_bytes: u64 = mb
-            .layers
-            .iter()
-            .map(|b| (b.idx.len() * 4 + b.w.len() * 4 + b.self_idx.len() * 4) as u64)
-            .sum::<u64>()
-            + (mb.labels.len() * 4 + mb.mask.len() * 4) as u64;
-        let t_meta = transfer.charge(links, LinkKind::H2d, meta_bytes);
-        if t_meta > Duration::ZERO {
-            chain_end = self.lanes[lane].timeline.reserve(Lane::H2d, chain_end, t_meta);
-        }
-        let copy = t_copy + t_meta;
-        clock.add_modeled(Stage::Copy, copy);
-        (slice, copy, chain_end)
-    }
-
     /// Micro-F1 over up to `max_batches` batches of `targets`, using the
     /// given sampler for neighborhood construction. Evaluation runs on
     /// the leader device (lane 0) and bypasses the feature tiers.
@@ -1329,13 +1343,19 @@ impl Trainer {
                 break;
             }
             let n = mb.input_nodes.len();
-            self.dataset
-                .features
-                .slice_into(&mb.input_nodes, &mut self.x0_scratch[..n * dim]);
-            let dirty_end = self.x0_dirty_elems.max(n * dim);
-            self.x0_scratch[n * dim..dirty_end].fill(0.0);
-            self.x0_dirty_elems = n * dim;
-            let logits = match self.runtime.eval_step(&self.state, &mb, &self.x0_scratch) {
+            // evaluation runs on lane 0's device, so it borrows lane 0's
+            // scratch block (never contended: lanes are joined by now)
+            {
+                let lane0 = &mut self.lanes[0];
+                self.dataset
+                    .features
+                    .slice_into(&mb.input_nodes, &mut lane0.x0_scratch[..n * dim]);
+                let dirty_end = lane0.x0_dirty_elems.max(n * dim);
+                lane0.x0_scratch[n * dim..dirty_end].fill(0.0);
+                lane0.x0_dirty_elems = n * dim;
+            }
+            let logits = match self.runtime.eval_step(&self.state, &mb, &self.lanes[0].x0_scratch)
+            {
                 Ok(logits) => logits,
                 Err(e) => {
                     failed = Some(e);
@@ -1360,8 +1380,10 @@ impl Trainer {
     /// `TieringEngine` as the hot-embedding cache, every byte charged
     /// through the `LinkClock`. Per-request latency is the device frame
     /// (`EpochReport::device_frame_stages`): measured sample time divided
-    /// by the paper's worker count, measured slice, modeled copy, modeled
-    /// compute.
+    /// by the configured `opts.workers`, measured slice, modeled copy,
+    /// modeled compute. With `sample-lane=on`, dispatch also reserves
+    /// the measured sampling on lane 0's `sample` track, so a prefetched
+    /// serving pipeline hides it exactly like training does.
     pub fn serve(
         &mut self,
         sampler: &mut dyn Sampler,
@@ -1397,10 +1419,25 @@ impl Trainer {
         let requests = generate_requests(&spec, targets, opts.seed);
         let shapes = self.runtime.meta.block_shapes();
         let pool = Arc::clone(&self.buffer_pool);
+        let sample_div = opts.workers.max(1) as u32;
+        let sample_workers = opts.workers.max(1) as f64;
+        let ctx = EpochCtx {
+            runtime: &self.runtime,
+            dataset: &self.dataset,
+            router: &self.router,
+            links: &links,
+            opts,
+            pool: &self.buffer_pool,
+            row_bytes: self.row_bytes,
+            epoch: opts.epochs,
+        };
+        let runtime = &self.runtime;
+        let state = &self.state;
+        let lane0 = &mut self.lanes[0];
         let mut compute_ends: Vec<Duration> = Vec::new();
         let stats = run_open_loop(&spec, &requests, &pool, |slot, chunk| {
             let t0 = Instant::now();
-            sampler.sample_batch_into(chunk, &self.dataset.labels, slot)?;
+            sampler.sample_batch_into(chunk, &ctx.dataset.labels, slot)?;
             let sample = t0.elapsed();
             clock.add_measured(Stage::Sample, sample);
             if opts.paranoid_validate {
@@ -1409,20 +1446,25 @@ impl Trainer {
             // same prefetch=K dependency rule as the train loop: this
             // batch's transfers may start once batch i-1-K's compute
             // finished (the first 1+K batches wait only for the tier)
-            let dep = if compute_ends.len() > opts.prefetch {
+            let mut dep = if compute_ends.len() > opts.prefetch {
                 compute_ends[compute_ends.len() - 1 - opts.prefetch]
             } else {
                 tier_end
             };
+            // dispatch reserves measured sampling on the `sample` lane
+            // too (opt-in), ahead of the batch's transfer chain
+            if opts.sample_lane {
+                dep = lane0.timeline.reserve(Lane::Sample, dep, sample / sample_div);
+            }
             let (slice, copy, chain_end) =
-                self.assemble_x0(0, slot, &links, &mut clock, &mut transfer, dep);
-            let compute = opts.compute_model.eval_step_time(&self.runtime.meta);
+                assemble_x0(&ctx, lane0, slot, &mut clock, &mut transfer, dep);
+            let compute = opts.compute_model.eval_step_time(&runtime.meta);
             clock.add_modeled(Stage::Compute, compute);
-            let prev_end = self.lanes[0].timeline.busy_until(Lane::Compute).max(tier_end);
-            let compute_end = self.lanes[0].timeline.reserve(Lane::Compute, chain_end, compute);
+            let prev_end = lane0.timeline.busy_until(Lane::Compute).max(tier_end);
+            let compute_end = lane0.timeline.reserve(Lane::Compute, chain_end, compute);
             compute_ends.push(compute_end);
             let t1 = Instant::now();
-            self.runtime.eval_step(&self.state, slot, &self.x0_scratch)?;
+            runtime.eval_step(state, slot, &lane0.x0_scratch)?;
             clock.add_measured(Stage::Compute, t1.elapsed());
             // prefetch=0 keeps the exact legacy serial accounting;
             // prefetch>0 charges the device frame the batch actually
@@ -1433,7 +1475,7 @@ impl Trainer {
             } else {
                 compute_end.saturating_sub(prev_end).as_secs_f64()
             };
-            Ok(sample.as_secs_f64() / PAPER_SAMPLER_WORKERS + slice.as_secs_f64() + device)
+            Ok(sample.as_secs_f64() / sample_workers + slice.as_secs_f64() + device)
         })?;
         // hit/miss deltas: the engine's counters are cumulative across
         // training, the report covers only the serving window
@@ -1470,5 +1512,363 @@ impl Trainer {
             misses += m;
         }
         (hits, misses)
+    }
+}
+
+/// Everything a lane needs read-only during one epoch's drain: the
+/// shared immutable pipeline state plus the epoch's option set. One
+/// instance is shared by reference across all lane threads
+/// (docs/SHARDING.md §Threading model).
+struct EpochCtx<'a> {
+    runtime: &'a Runtime,
+    dataset: &'a Arc<Dataset>,
+    router: &'a ShardRouter,
+    links: &'a LinkClock,
+    opts: &'a TrainOptions,
+    pool: &'a Arc<BufferPool>,
+    row_bytes: u64,
+    epoch: usize,
+}
+
+/// The serialization token for everything lanes share mutably. It
+/// travels main → lane 0 → … → lane K-1 → main over an mpsc chain; a
+/// lane drains its queue only while holding it, so model updates and
+/// the global batch counter apply in exact lane-index order. The f64
+/// metric sums ride here rather than in the per-lane ledgers because
+/// f64 addition is not associative — only this ordering keeps the
+/// parallel run bit-identical to the sequential one.
+struct Baton<'a> {
+    state: &'a mut TrainState,
+    total_loss: f64,
+    total_correct: f64,
+    total_targets: usize,
+    /// global trained-batch counter across lanes — fault point #2's
+    /// index, so `faults=crash@E:B` fires at the same batch in both
+    /// execution modes.
+    batches: usize,
+    /// set by the first failing lane; downstream lanes skip their drain
+    /// and forward the baton, so every worker thread still gets joined
+    /// before the error propagates.
+    err: Option<anyhow::Error>,
+}
+
+/// One lane's private epoch ledger, merged into the epoch report in
+/// lane index order after every lane finishes. All fields are integer
+/// nanoseconds/bytes/counts, so the merge is exact and independent of
+/// the wall-clock order lanes finished in.
+#[derive(Default)]
+struct LaneOutcome {
+    clock: StageClock,
+    transfer: TransferStats,
+    lane_batches: usize,
+    n_chunks: usize,
+    sum_inputs: usize,
+    sum_cached: usize,
+    isolated: usize,
+    truncated: usize,
+}
+
+/// Drain one lane's sampled-batch queue. Called only while the lane
+/// holds the baton: every train step, ledger commit, and fault check in
+/// here is globally ordered by lane index. Timeline reservations touch
+/// only this lane's own `Timeline`, and measured/modeled stage charges
+/// land in the lane-private `LaneOutcome`.
+fn drain_lane(
+    ctx: &EpochCtx<'_>,
+    lane: &mut ShardLane,
+    rx: &Receiver<SampledBatch>,
+    tier_end: Duration,
+    baton: &mut Baton<'_>,
+    out: &mut LaneOutcome,
+) -> Result<()> {
+    // pipeline dependency edges: batch i's transfer chain may start
+    // once batch i-1-prefetch's modeled compute finished (prefetch=0 ⇒
+    // strictly serial chain). The first 1+K batches depend only on this
+    // lane's tier upload.
+    let mut compute_ends: Vec<Duration> = Vec::new();
+    let sample_div = ctx.opts.workers.max(1) as u32;
+    while let Some(sb) = rx.pop() {
+        let mb = match sb.batch {
+            Ok(mb) => mb,
+            Err(e) => return Err(e.context("sampler failed")),
+        };
+        out.clock.add_measured(Stage::Sample, sb.sample_time);
+        if ctx.opts.paranoid_validate {
+            if let Err(msg) =
+                crate::sampling::validate_batch(&mb, &ctx.runtime.meta.block_shapes())
+            {
+                ctx.pool.put(mb);
+                return Err(anyhow::Error::msg(msg));
+            }
+        }
+        let mut dep = if out.lane_batches > ctx.opts.prefetch {
+            compute_ends[out.lane_batches - 1 - ctx.opts.prefetch]
+        } else {
+            tier_end
+        };
+        // modeled sampling lane (`sample-lane=on`): the measured sample
+        // cost, divided across the worker threads, occupies this lane's
+        // `sample` track ahead of the batch's transfer chain. With
+        // prefetch>=1 the reservation lands under the previous batch's
+        // compute (FastGL-style hiding); with prefetch=0 it extends the
+        // serial chain, keeping makespan == serial sum in integer nanos.
+        if ctx.opts.sample_lane {
+            dep = lane.timeline.reserve(Lane::Sample, dep, sb.sample_time / sample_div);
+        }
+        let step = match run_train_batch(
+            ctx,
+            lane,
+            &mb,
+            baton.state,
+            &mut out.clock,
+            &mut out.transfer,
+            dep,
+        ) {
+            Ok((step, compute_end)) => {
+                compute_ends.push(compute_end);
+                step
+            }
+            Err(e) => {
+                ctx.pool.put(mb);
+                return Err(e);
+            }
+        };
+        baton.total_loss += step.loss as f64 * step.batch_real as f64;
+        baton.total_correct += step.correct as f64;
+        baton.total_targets += step.batch_real;
+        baton.batches += 1;
+        out.lane_batches += 1;
+        out.sum_inputs += mb.num_input_nodes();
+        out.sum_cached += mb.stats.cached_inputs;
+        out.isolated += mb.stats.isolated_nodes;
+        out.truncated += mb.stats.truncated_neighbors;
+        lane.batches += 1;
+        // return the drained slot to the workers (recycling channel)
+        ctx.pool.put(mb);
+        // deterministic fault point #2: die mid-epoch after an exact
+        // number of globally-ordered trained batches. The error takes
+        // the same cleanup path as a real batch failure (queue closed,
+        // workers joined by the caller), leaving the run as a crash
+        // would.
+        if let Some(f) = ctx.opts.faults.as_ref() {
+            if f.epoch == ctx.epoch && f.batch == Some(baton.batches) {
+                anyhow::bail!(
+                    "injected crash after batch {} of epoch {} (faults=crash@epoch:batch)",
+                    baton.batches,
+                    ctx.epoch
+                );
+            }
+        }
+    }
+    anyhow::ensure!(
+        out.lane_batches == out.n_chunks,
+        "shard {}: lost batches: {} != {}",
+        lane.shard,
+        out.lane_batches,
+        out.n_chunks
+    );
+    Ok(())
+}
+
+/// Steps 2–6 for one sampled batch, against one lane's device. The
+/// batch's transfer chain is reserved on the lane's timeline starting
+/// at `xfer_ready` (its `prefetch=K` dependency edge) and its modeled
+/// compute after the chain; returns the step output plus the compute
+/// finish — the dependency handle for batch `i+1+K`.
+fn run_train_batch(
+    ctx: &EpochCtx<'_>,
+    lane: &mut ShardLane,
+    mb: &MiniBatch,
+    state: &mut TrainState,
+    clock: &mut StageClock,
+    transfer: &mut TransferStats,
+    xfer_ready: Duration,
+) -> Result<(crate::runtime::StepOutput, Duration)> {
+    let (_slice, _copy, mut chain_end) = assemble_x0(ctx, lane, mb, clock, transfer, xfer_ready);
+    // shard ledger: rows owned by this lane's shard are local, the
+    // rest are remote fetches from their owner — charged as one
+    // batched fetch on the `inter` link riding the same transfer
+    // chain (zero modeled seconds on single-box topologies; see
+    // docs/TOPOLOGY.md). The single-shard path skips the per-row
+    // probe.
+    if ctx.router.num_shards() > 1 {
+        let (local, remote) = ctx.router.count(lane.shard, &mb.input_nodes);
+        lane.local_rows += local;
+        lane.remote_rows += remote;
+        if remote > 0 {
+            let t = transfer.charge(ctx.links, LinkKind::Inter, remote * ctx.row_bytes);
+            clock.add_modeled(Stage::Copy, t);
+            if t > Duration::ZERO {
+                chain_end = lane.timeline.reserve(Lane::Inter, chain_end, t);
+            }
+        }
+    } else {
+        lane.local_rows += mb.input_nodes.len() as u64;
+    }
+    let t0 = Instant::now();
+    let out = ctx.runtime.train_step(state, mb, &lane.x0_scratch, ctx.opts.lr)?;
+    // compute covers fwd+bwd+adam; Update stage gets the (tiny) state
+    // readback, which train_step folds in — split by proportion is not
+    // measurable separately, so Update counts the bookkeeping only.
+    clock.add_measured(Stage::Compute, t0.elapsed());
+    // device-frame compute estimate (as-if-T4; see ComputeModel docs)
+    let t_compute = ctx.opts.compute_model.train_step_time(&ctx.runtime.meta);
+    clock.add_modeled(Stage::Compute, t_compute);
+    // compute occupies the device once its own transfers are in
+    let compute_end = lane.timeline.reserve(Lane::Compute, chain_end, t_compute);
+    let t1 = Instant::now();
+    clock.add_measured(Stage::Update, t1.elapsed());
+    Ok((out, compute_end))
+}
+
+/// Host slice (step 2) + modeled transfer (step 3) for the input block.
+/// One `GatherPlan` per lane partitions the input nodes into hit/miss
+/// runs; both the host gather and the transfer accounting read it.
+/// The miss/hit/metadata charges are reserved on the lane's timeline
+/// as a chain starting at `xfer_ready` (the batch's `prefetch=K`
+/// dependency edge). Returns (measured slice, modeled copy, chain
+/// end) so the serving lane can charge per-batch latency from the
+/// same accounting the epoch report uses — callers that only need
+/// the clock totals ignore the value.
+fn assemble_x0(
+    ctx: &EpochCtx<'_>,
+    lane: &mut ShardLane,
+    mb: &MiniBatch,
+    clock: &mut StageClock,
+    transfer: &mut TransferStats,
+    xfer_ready: Duration,
+) -> (Duration, Duration, Duration) {
+    let dim = ctx.dataset.features.dim();
+    let t0 = Instant::now();
+    let n = mb.input_nodes.len();
+    lane.tiering.plan_batch(&mb.input_nodes);
+    ctx.dataset.features.slice_runs_into(
+        &mb.input_nodes,
+        lane.tiering.last_plan().runs(),
+        &mut lane.x0_scratch[..n * dim],
+    );
+    // zero only the tail the previous batch dirtied (§Perf iteration 2)
+    let dirty_end = lane.x0_dirty_elems.max(n * dim);
+    lane.x0_scratch[n * dim..dirty_end].fill(0.0);
+    lane.x0_dirty_elems = n * dim;
+    let slice = t0.elapsed();
+    clock.add_measured(Stage::Slice, slice);
+
+    let (t_copy, _missed, mut chain_end) =
+        lane.tiering
+            .serve_planned_at(ctx.links, transfer, &mut lane.timeline, xfer_ready);
+    // block metadata (idx/w/self/labels) also crosses PCIe
+    let meta_bytes: u64 = mb
+        .layers
+        .iter()
+        .map(|b| (b.idx.len() * 4 + b.w.len() * 4 + b.self_idx.len() * 4) as u64)
+        .sum::<u64>()
+        + (mb.labels.len() * 4 + mb.mask.len() * 4) as u64;
+    let t_meta = transfer.charge(ctx.links, LinkKind::H2d, meta_bytes);
+    if t_meta > Duration::ZERO {
+        chain_end = lane.timeline.reserve(Lane::H2d, chain_end, t_meta);
+    }
+    let copy = t_copy + t_meta;
+    clock.add_modeled(Stage::Copy, copy);
+    (slice, copy, chain_end)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(sample: Duration, workers: f64) -> EpochReport {
+        let mut clock = StageClock::new();
+        clock.add_measured(Stage::Sample, sample);
+        EpochReport {
+            epoch: 3,
+            mean_loss: 0.5,
+            train_acc: 0.25,
+            val_f1: 0.125,
+            wall: Duration::from_millis(7),
+            total_with_model: Duration::from_millis(9),
+            clock,
+            transfer: TransferStats::default(),
+            timeline: TimelineStats::default(),
+            batches: 1,
+            avg_input_nodes: 2.0,
+            avg_cached_inputs: 1.0,
+            isolated_nodes: 0,
+            truncated_neighbors: 0,
+            sample_workers: workers,
+        }
+    }
+
+    // regression: the device frame used to divide the measured sample
+    // seconds by a hard-coded 4.0 regardless of `opts.workers`
+    #[test]
+    fn device_frame_divides_sample_by_configured_workers() {
+        let sample = Duration::from_secs(8);
+        let secs = |r: &EpochReport| {
+            r.device_frame_stages()
+                .iter()
+                .find(|(s, _)| *s == Stage::Sample)
+                .unwrap()
+                .1
+        };
+        assert!((secs(&report_with(sample, 1.0)) - 8.0).abs() < 1e-12);
+        assert!((secs(&report_with(sample, 4.0)) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_round_trips_sample_workers() {
+        let r = report_with(Duration::from_millis(12), 3.0);
+        let back = EpochReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.sample_workers.to_bits(), 3.0f64.to_bits());
+        assert_eq!(back.clock.measured(Stage::Sample), Duration::from_millis(12));
+    }
+
+    // the epoch roll-up merges per-lane ledgers in lane index order;
+    // all sums are integers, so any order must give the same totals
+    #[test]
+    fn lane_ledger_merge_is_order_independent() {
+        let mk = |i: u64| {
+            let mut clock = StageClock::new();
+            clock.add_measured(Stage::Sample, Duration::from_nanos(13 * i + 1));
+            clock.add_modeled(Stage::Copy, Duration::from_nanos(29 * i + 2));
+            LaneOutcome {
+                clock,
+                transfer: TransferStats {
+                    h2d_bytes: 100 * i + 3,
+                    d2d_bytes: 7 * i,
+                    inter_bytes: 3 * i,
+                    h2d_transfers: i,
+                    modeled_h2d: Duration::from_nanos(17 * i),
+                    ..Default::default()
+                },
+                sum_inputs: 11 * i as usize,
+                ..Default::default()
+            }
+        };
+        let lanes: Vec<LaneOutcome> = (1..=3).map(mk).collect();
+        let merge = |order: &[usize]| {
+            let mut clock = StageClock::new();
+            let mut transfer = TransferStats::default();
+            let mut inputs = 0usize;
+            for &i in order {
+                clock.merge(&lanes[i].clock);
+                transfer.merge(&lanes[i].transfer);
+                inputs += lanes[i].sum_inputs;
+            }
+            (clock, transfer, inputs)
+        };
+        let (ca, ta, ia) = merge(&[0, 1, 2]);
+        let (cb, tb, ib) = merge(&[2, 0, 1]);
+        for s in Stage::ALL {
+            assert_eq!(ca.measured(s), cb.measured(s));
+            assert_eq!(ca.modeled(s), cb.modeled(s));
+            assert_eq!(ca.count(s), cb.count(s));
+        }
+        assert_eq!(ta.h2d_bytes, tb.h2d_bytes);
+        assert_eq!(ta.d2d_bytes, tb.d2d_bytes);
+        assert_eq!(ta.inter_bytes, tb.inter_bytes);
+        assert_eq!(ta.h2d_transfers, tb.h2d_transfers);
+        assert_eq!(ta.modeled_h2d, tb.modeled_h2d);
+        assert_eq!(ia, ib);
     }
 }

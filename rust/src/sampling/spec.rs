@@ -568,6 +568,33 @@ pub fn stream_spec(
         .map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))
 }
 
+/// The `workers=` parameter every method accepts: the sampling
+/// worker-thread count per shard lane ([`crate::pipeline`]). `1` (the
+/// default) keeps the single-worker deterministic drain order the
+/// identity tests anchor on; `N >= 2` samples batches concurrently and
+/// the device-frame breakdown divides measured sample seconds by `N`
+/// (docs/API.md §workers).
+pub const WORKERS_PARAM: ParamInfo = ParamInfo {
+    key: "workers",
+    kind: ParamKind::Int,
+    default: "1",
+    help: "sampling worker threads per shard lane (>= 1); the device frame \
+           divides measured sample time by this count",
+};
+
+/// Parse + validate a spec's `workers=` parameter. Shared by every
+/// builder (build-time rejection of `workers=0` or garbage) and by the
+/// session layer that sizes the worker pools.
+pub fn workers_spec(spec: &MethodSpec) -> anyhow::Result<usize> {
+    match spec.get("workers") {
+        None => Ok(1),
+        Some(v) => match v.as_u64() {
+            Some(n) if n >= 1 => Ok(n as usize),
+            _ => anyhow::bail!("{}: workers must be an integer >= 1", spec.name),
+        },
+    }
+}
+
 /// Declare a method's `params()` slice: method-specific parameters first,
 /// then the shared runtime tail. The tail is spelled exactly once — here —
 /// so a future shared parameter is added in this macro (plus its
@@ -585,14 +612,16 @@ macro_rules! with_runtime_params {
             FAULTS_PARAM,
             PREFETCH_PARAM,
             STREAM_PARAM,
+            WORKERS_PARAM,
         ]
     };
 }
 
 /// The shared runtime parameters every method accepts (`cache=`,
 /// `shards=`, `topo=`, `serve=`, `ckpt=`, `faults=`, `prefetch=`,
-/// `stream=`), declared in exactly one place. Methods without parameters
-/// of their own use this slice directly as their `params()`.
+/// `stream=`, `workers=`), declared in exactly one place. Methods
+/// without parameters of their own use this slice directly as their
+/// `params()`.
 pub fn runtime_params() -> &'static [ParamInfo] {
     RUNTIME_PARAMS
 }
@@ -612,6 +641,7 @@ pub fn validate_runtime_params(spec: &MethodSpec) -> anyhow::Result<()> {
     fault_spec(spec)?;
     prefetch_spec(spec)?;
     stream_spec(spec)?;
+    workers_spec(spec)?;
     Ok(())
 }
 
@@ -1332,6 +1362,13 @@ mod tests {
     }
 
     #[test]
+    fn workers_param_validates() {
+        assert_eq!(workers_spec(&MethodSpec::new("ns")).unwrap(), 1);
+        assert_eq!(workers_spec(&MethodSpec::new("ns").with("workers", 4u64)).unwrap(), 4);
+        assert!(workers_spec(&MethodSpec::new("ns").with("workers", 0u64)).is_err());
+    }
+
+    #[test]
     fn every_builder_ends_with_the_shared_runtime_tail() {
         // the shared run params are declared once (with_runtime_params!);
         // this pins every builder to that tail so a new shared param can
@@ -1339,6 +1376,7 @@ mod tests {
         let r = reg();
         let tail = runtime_params();
         assert!(tail.iter().any(|p| p.key == "stream"));
+        assert!(tail.iter().any(|p| p.key == "workers"));
         for b in r.builders() {
             let params = b.params();
             assert!(params.len() >= tail.len(), "{}: missing runtime tail", b.name());

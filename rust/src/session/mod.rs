@@ -35,7 +35,7 @@ use crate::pipeline::{EpochReport, TrainOptions, Trainer};
 use crate::runtime::{artifacts_root, ArtifactMeta, Runtime};
 use crate::sampling::spec::{
     cache_policy_spec, ckpt_spec, fault_spec, prefetch_spec, serve_spec, shard_spec, stream_spec,
-    topo_spec, BuildContext, MethodRegistry, MethodSpec, SamplerFactory, SpecError,
+    topo_spec, workers_spec, BuildContext, MethodRegistry, MethodSpec, SamplerFactory, SpecError,
 };
 use crate::sampling::BlockShapes;
 use crate::serving::{ServeReport, ServeSpec};
@@ -227,7 +227,9 @@ pub struct SessionBuilder {
     scale: f64,
     epochs: usize,
     seed: u64,
-    workers: usize,
+    workers: Option<usize>,
+    lane_threads: bool,
+    sample_lane: bool,
     lr: f32,
     device_capacity: u64,
     lazy_budget: Option<u64>,
@@ -258,7 +260,9 @@ impl SessionBuilder {
             scale: 0.3,
             epochs: 3,
             seed: 1,
-            workers: 1,
+            workers: None,
+            lane_threads: true,
+            sample_lane: false,
             lr: 3e-3,
             device_capacity: 16 * (1 << 30),
             lazy_budget: None,
@@ -303,8 +307,29 @@ impl SessionBuilder {
         self
     }
 
+    /// Sampling worker threads per shard lane. Takes precedence over the
+    /// method spec's `workers=` parameter; the default follows the spec
+    /// (itself defaulting to `1` — the deterministic single-worker drain
+    /// order the identity tests anchor on).
     pub fn workers(mut self, workers: usize) -> Self {
-        self.workers = workers;
+        self.workers = Some(workers);
+        self
+    }
+
+    /// Run shard lanes on real OS threads (default `true`). `false` is
+    /// the sequential escape hatch the parallel mode is asserted
+    /// bit-identical against (docs/SHARDING.md §Threading model).
+    pub fn lane_threads(mut self, on: bool) -> Self {
+        self.lane_threads = on;
+        self
+    }
+
+    /// Model CPU sampling as a fifth `sample` lane on each device's
+    /// occupancy timeline (default `false`; docs/TOPOLOGY.md §Overlap &
+    /// prefetch). Off keeps makespans bit-identical to the pre-sample-
+    /// lane accounting.
+    pub fn sample_lane(mut self, on: bool) -> Self {
+        self.sample_lane = on;
         self
     }
 
@@ -496,6 +521,10 @@ impl SessionBuilder {
             Some(s) => Some(s.clone()),
             None => stream_spec(&spec).map_err(BuildError::Runtime)?,
         };
+        let workers = match self.workers {
+            Some(w) => w,
+            None => workers_spec(&spec).map_err(BuildError::Runtime)?,
+        };
         // validate the dataset name up front (cheap) so a typo is reported
         // as such, not as a missing artifact for a nonsense name
         if !DATASET_NAMES.contains(&self.dataset.as_str()) {
@@ -591,7 +620,9 @@ impl SessionBuilder {
         let topts = TrainOptions {
             epochs: self.epochs,
             lr: self.lr,
-            workers: self.workers,
+            workers,
+            lane_threads: self.lane_threads,
+            sample_lane: self.sample_lane,
             queue_capacity: self.queue_capacity,
             eval_batches: self.eval_batches,
             seed: self.seed,
@@ -964,6 +995,15 @@ mod tests {
         for bad in ["ns:prefetch=deep", "ns:prefetch=-1", "ns:prefetch=1.5"] {
             let err = Session::builder("yelp-s", bad).scale(0.03).build().unwrap_err();
             assert!(err.to_string().contains("prefetch"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn bad_workers_spec_fails_session_build() {
+        // `workers=` is validated before any artifact/dataset work too
+        for bad in ["ns:workers=many", "ns:workers=0", "ns:workers=1.5"] {
+            let err = Session::builder("yelp-s", bad).scale(0.03).build().unwrap_err();
+            assert!(err.to_string().contains("workers"), "{bad}: {err}");
         }
     }
 

@@ -43,4 +43,8 @@ pub use store::{decode, encode, fnv1a, SnapshotStore, WriteFault};
 /// v3: tier counters gained `invalidated_rows`, and streaming runs
 /// (`stream=RATE`) persist a `stream` payload — churn RNG cursor plus
 /// the applied/pending edge overlays (docs/STREAMING.md).
-pub const SNAPSHOT_VERSION: u64 = 3;
+/// v4: timelines encode the fifth `sample` lane, epoch reports carry
+/// `sample_workers`, and the sampler-state array holds per-lane worker
+/// sets — leader first, then lane-major flattened workers
+/// (docs/SHARDING.md §Threading model).
+pub const SNAPSHOT_VERSION: u64 = 4;

@@ -189,8 +189,8 @@ pub fn timeline_to_json(t: &crate::topology::Timeline) -> Json {
 /// Inverse of [`timeline_to_json`].
 pub fn timeline_from_json(j: &Json) -> Result<crate::topology::Timeline> {
     use crate::topology::{Lane, Timeline};
-    let mut busy_until = [Duration::ZERO; 4];
-    let mut busy = [Duration::ZERO; 4];
+    let mut busy_until = [Duration::ZERO; Lane::COUNT];
+    let mut busy = [Duration::ZERO; Lane::COUNT];
     for &l in &Lane::ALL {
         let e = j
             .get(l.name())
@@ -216,7 +216,7 @@ pub fn timeline_stats_to_json(s: &crate::topology::TimelineStats) -> Json {
 pub fn timeline_stats_from_json(j: &Json) -> Result<crate::topology::TimelineStats> {
     use crate::topology::{Lane, TimelineStats};
     let busy_j = j.get("busy").context("snapshot: timeline stats missing busy")?;
-    let mut busy = [Duration::ZERO; 4];
+    let mut busy = [Duration::ZERO; Lane::COUNT];
     for &l in &Lane::ALL {
         busy[l.index()] = req_duration(busy_j, l.name())?;
     }

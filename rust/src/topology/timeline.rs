@@ -36,17 +36,27 @@ use std::fmt;
 use std::time::Duration;
 
 /// One occupancy lane: the three modeled links plus the device compute
-/// unit. `Lane::from(LinkKind)` maps a charge onto its lane.
+/// unit and the CPU-side sampling stage. `Lane::from(LinkKind)` maps a
+/// charge onto its lane; `Lane::Sample` is fed by the measured per-batch
+/// sample time divided by the worker count (docs/TOPOLOGY.md §Overlap &
+/// prefetch), reserved ahead of each batch's transfer chain so
+/// `prefetch>=1` can hide sampling under the previous batch's compute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Lane {
     H2d,
     D2d,
     Inter,
     Compute,
+    Sample,
 }
 
 impl Lane {
-    pub const ALL: [Lane; 4] = [Lane::H2d, Lane::D2d, Lane::Inter, Lane::Compute];
+    /// Number of lanes — the width of every per-lane array (timelines,
+    /// stats, snapshot encodings).
+    pub const COUNT: usize = 5;
+
+    pub const ALL: [Lane; Lane::COUNT] =
+        [Lane::H2d, Lane::D2d, Lane::Inter, Lane::Compute, Lane::Sample];
 
     pub fn name(&self) -> &'static str {
         match self {
@@ -54,6 +64,7 @@ impl Lane {
             Lane::D2d => "d2d",
             Lane::Inter => "inter",
             Lane::Compute => "compute",
+            Lane::Sample => "sample",
         }
     }
 
@@ -64,6 +75,7 @@ impl Lane {
             Lane::D2d => 1,
             Lane::Inter => 2,
             Lane::Compute => 3,
+            Lane::Sample => 4,
         }
     }
 }
@@ -91,8 +103,8 @@ impl fmt::Display for Lane {
 /// validation syncs the device).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Timeline {
-    busy_until: [Duration; 4],
-    busy: [Duration; 4],
+    busy_until: [Duration; Lane::COUNT],
+    busy: [Duration; Lane::COUNT],
 }
 
 impl Timeline {
@@ -142,7 +154,7 @@ impl Timeline {
     /// `base`'s frontier. The snapshot codec round-trips the raw state
     /// via [`Timeline::raw`]/[`Timeline::from_raw`].
     pub fn stats_since(&self, base: &Timeline) -> TimelineStats {
-        let mut busy = [Duration::ZERO; 4];
+        let mut busy = [Duration::ZERO; Lane::COUNT];
         for (i, b) in busy.iter_mut().enumerate() {
             *b = self.busy[i].saturating_sub(base.busy[i]);
         }
@@ -153,12 +165,15 @@ impl Timeline {
     }
 
     /// Raw state `(busy_until, busy)` for the snapshot codec.
-    pub fn raw(&self) -> ([Duration; 4], [Duration; 4]) {
+    pub fn raw(&self) -> ([Duration; Lane::COUNT], [Duration; Lane::COUNT]) {
         (self.busy_until, self.busy)
     }
 
     /// Rebuild from [`Timeline::raw`] state (snapshot restore).
-    pub fn from_raw(busy_until: [Duration; 4], busy: [Duration; 4]) -> Timeline {
+    pub fn from_raw(
+        busy_until: [Duration; Lane::COUNT],
+        busy: [Duration; Lane::COUNT],
+    ) -> Timeline {
         Timeline { busy_until, busy }
     }
 }
@@ -172,7 +187,7 @@ pub struct TimelineStats {
     /// Busy seconds per lane, indexed by [`Lane::index`]. Under
     /// `shards=K` this sums over every lane's device (four h2d links
     /// can be busy at once, so summed busy may exceed the makespan).
-    pub busy: [Duration; 4],
+    pub busy: [Duration; Lane::COUNT],
     /// Critical-path length of the window's schedule.
     pub makespan: Duration,
 }
@@ -273,7 +288,7 @@ mod tests {
             let mut tl = Timeline::default();
             let mut ends = vec![Duration::ZERO];
             for _ in 0..50 {
-                let lane = Lane::ALL[rng.gen_range(4)];
+                let lane = Lane::ALL[rng.gen_range(Lane::COUNT)];
                 let dur = us(rng.gen_range(500) as u64);
                 // ready times only ever come from earlier reservation
                 // ends (a dependency), never from thin air
@@ -294,7 +309,7 @@ mod tests {
         // reserve the same (lane, duration) multiset under three
         // different dependency patterns; busy must not move
         let work: Vec<(Lane, Duration)> = (0..40)
-            .map(|i| (Lane::ALL[i % 4], us((i * 13 + 7) as u64)))
+            .map(|i| (Lane::ALL[i % Lane::COUNT], us((i * 13 + 7) as u64)))
             .collect();
         let mut chained = Timeline::default();
         let mut ready = Duration::ZERO;
@@ -388,6 +403,35 @@ mod tests {
         let back = Timeline::from_raw(bu, b);
         assert_eq!(back, tl);
         assert_eq!(back.frontier(), tl.frontier());
+    }
+
+    #[test]
+    fn sample_lane_chains_at_prefetch_zero_and_hides_under_prefetch() {
+        // N batches of (sample, h2d, compute) under prefetch=K: the
+        // sample reservation heads each batch's chain. K=0 keeps every
+        // reservation chained (makespan == serial sum, the anchor);
+        // K>=1 hides sampling + transfers under the previous compute.
+        let samp: Vec<Duration> = (0..24).map(|i| us(15 + (i * 5) % 20)).collect();
+        let xfer: Vec<Duration> = (0..24).map(|i| us(20 + (i * 7) % 50)).collect();
+        let comp: Vec<Duration> = (0..24).map(|i| us(35 + (i * 11) % 40)).collect();
+        let run = |k: usize| -> Timeline {
+            let mut tl = Timeline::default();
+            let mut compute_ends: Vec<Duration> = Vec::new();
+            for i in 0..samp.len() {
+                let dep = if i > k { compute_ends[i - 1 - k] } else { Duration::ZERO };
+                let s_end = tl.reserve(Lane::Sample, dep, samp[i]);
+                let x_end = tl.reserve(Lane::H2d, s_end, xfer[i]);
+                compute_ends.push(tl.reserve(Lane::Compute, x_end, comp[i]));
+            }
+            tl
+        };
+        assert_eq!(run(0).frontier(), run(0).serial_sum());
+        assert!(run(1).frontier() < run(0).frontier());
+        // busy seconds (sample included) never move with K
+        for lane in Lane::ALL {
+            assert_eq!(run(0).busy(lane), run(2).busy(lane), "{lane}");
+        }
+        assert_eq!(run(0).busy(Lane::Sample), samp.iter().sum());
     }
 
     #[test]

@@ -29,6 +29,7 @@ use gns::features::build_dataset;
 use gns::sampling::spec::{prefetch_spec, BuildContext, MethodRegistry};
 use gns::sampling::BlockShapes;
 use gns::session::{Session, SessionBuilder};
+use gns::topology::Lane;
 use gns::util::timer::Stage;
 
 const METHODS: [&str; 4] = ["ns", "ladies:s-layer=128", "lazygcn", "gns:cache-fraction=0.02"];
@@ -62,7 +63,7 @@ struct OverlapMetrics {
     // modeled seconds per pipeline stage, per epoch, in nanos
     stage_modeled_per_epoch: Vec<Vec<u128>>,
     // (makespan nanos, per-lane busy nanos) per epoch
-    timeline_per_epoch: Vec<(u128, [u128; 4])>,
+    timeline_per_epoch: Vec<(u128, [u128; Lane::COUNT])>,
     test_f1: u64,
 }
 
@@ -99,8 +100,8 @@ fn run_overlap_metrics(builder: SessionBuilder) -> Option<(OverlapMetrics, gns::
             .reports
             .iter()
             .map(|rep| {
-                let mut busy = [0u128; 4];
-                for (i, lane) in gns::topology::Lane::ALL.into_iter().enumerate() {
+                let mut busy = [0u128; Lane::COUNT];
+                for (i, lane) in Lane::ALL.into_iter().enumerate() {
                     busy[i] = rep.timeline.busy_for(lane).as_nanos();
                 }
                 (rep.timeline.makespan.as_nanos(), busy)
@@ -202,6 +203,61 @@ fn prefetch_reduces_makespan_under_dist_shards_with_unchanged_ledgers() {
         run_overlap_metrics(tiny_session(&with_param(&method, "prefetch=4")).chunk_size(32))
             .unwrap();
     assert!(r4.modeled_makespan_secs() <= ro.modeled_makespan_secs() + 1e-12);
+}
+
+// ---------------------------------------------------------------------------
+// 3b. the modeled sampling lane (docs/TOPOLOGY.md §Overlap & prefetch)
+
+#[test]
+fn sample_lane_serial_at_prefetch_zero_and_hidden_at_prefetch_one() {
+    // `SessionBuilder::sample_lane(true)` reserves each batch's measured
+    // sample_time / workers on `Lane::Sample` ahead of its transfer
+    // chain. The sample charge is *measured* (wall-clock), so timelines
+    // are not bit-comparable across runs — but the byte ledgers and
+    // modeled stage seconds stay deterministic, and the structural
+    // invariants hold exactly within each run.
+    let method = with_param("gns:cache-fraction=0.02", "topo=dist");
+    let Some((serial, rs)) =
+        run_overlap_metrics(tiny_session(&method).chunk_size(32).sample_lane(true))
+    else {
+        return;
+    };
+    let sample_idx = Lane::Sample.index();
+    for (epoch, (makespan, busy)) in serial.timeline_per_epoch.iter().enumerate() {
+        // prefetch=0: the sample charge chains like everything else, so
+        // the makespan is still exactly the serial sum — now including
+        // the (non-zero) sample lane — in integer nanos
+        assert!(busy[sample_idx] > 0, "epoch {epoch}: sample lane carried no charge");
+        assert_eq!(
+            *makespan,
+            busy.iter().sum::<u128>(),
+            "epoch {epoch}: sample-lane prefetch=0 makespan must equal the serial sum"
+        );
+    }
+
+    // prefetch=1 hides sampling (and transfers) under the previous
+    // batch's compute: strictly smaller modeled wall time, while every
+    // byte/transfer counter, modeled stage second, and the training
+    // math are unchanged
+    let (overlapped, ro) = run_overlap_metrics(
+        tiny_session(&with_param(&method, "prefetch=1")).chunk_size(32).sample_lane(true),
+    )
+    .unwrap();
+    assert_eq!(overlapped.transfer_per_epoch, serial.transfer_per_epoch);
+    assert_eq!(overlapped.stage_modeled_per_epoch, serial.stage_modeled_per_epoch);
+    assert_eq!(overlapped.test_f1, serial.test_f1);
+    assert!(
+        ro.modeled_makespan_secs() < rs.modeled_makespan_secs(),
+        "sample lane + prefetch=1 must strictly reduce the modeled wall time ({} !< {})",
+        ro.modeled_makespan_secs(),
+        rs.modeled_makespan_secs()
+    );
+
+    // with the lane off (the default) nothing is ever reserved on it
+    let (off, _) = run_overlap_metrics(tiny_session(&method).chunk_size(32)).unwrap();
+    for (epoch, (_, busy)) in off.timeline_per_epoch.iter().enumerate() {
+        assert_eq!(busy[sample_idx], 0, "epoch {epoch}: sample lane busy without opt-in");
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -310,7 +366,7 @@ fn serving_lane_dispatches_against_the_timeline() {
 
 #[test]
 fn timeline_stats_merge_is_additive() {
-    use gns::topology::{Lane, Timeline, TimelineStats};
+    use gns::topology::{Timeline, TimelineStats};
     let mut t = Timeline::default();
     t.reserve(Lane::H2d, Duration::ZERO, Duration::from_millis(3));
     t.reserve(Lane::Compute, Duration::ZERO, Duration::from_millis(5));

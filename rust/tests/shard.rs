@@ -3,7 +3,9 @@
 //! 1. `shards=1` reproduces the unsharded pipeline batch-for-batch:
 //!    identical loss / accuracy / hit / miss / transfer metrics for all
 //!    four methods, with either partitioner (artifact-gated, skips when
-//!    `make artifacts` has not run);
+//!    `make artifacts` has not run); parallel lane threads (the default)
+//!    are bit-identical to the `lane_threads(false)` sequential escape
+//!    hatch for every method at `shards ∈ {2,4}` (§Threading model);
 //! 2. partitioners cover every node exactly once (total partition);
 //! 3. cross-shard byte accounting: classified `local + remote` bytes
 //!    equal what the unsharded path serves over PCIe for the same
@@ -51,7 +53,8 @@ fn tiny_session(method: &str) -> SessionBuilder {
 /// Every deterministic per-epoch + run-total metric a config produces.
 #[derive(Debug, PartialEq)]
 struct Metrics {
-    per_epoch: Vec<(u64, u64, u64, usize, u64, u64)>, // (loss, acc, val, batches, h2d, d2d)
+    // (loss, acc, val, batches, h2d, d2d, makespan nanos)
+    per_epoch: Vec<(u64, u64, u64, usize, u64, u64, u128)>,
     cache_hits: u64,
     cache_misses: u64,
     test_f1: u64,
@@ -73,6 +76,7 @@ fn run_metrics(builder: SessionBuilder) -> Option<Metrics> {
                     rep.batches,
                     rep.transfer.h2d_bytes,
                     rep.transfer.d2d_bytes,
+                    rep.timeline.makespan.as_nanos(),
                 )
             })
             .collect(),
@@ -137,6 +141,29 @@ fn sharded_session_trains_and_rolls_up_per_shard_traffic() {
     let lf = r.local_fraction();
     assert!(lf > 0.0 && lf < 1.0, "local fraction {lf}");
     assert!(r.test_f1.is_finite());
+}
+
+// ---------------------------------------------------------------------------
+// 1b. parallel shard lanes ≡ sequential (docs/SHARDING.md §Threading model)
+
+#[test]
+fn parallel_lanes_are_bit_identical_to_sequential_for_all_methods() {
+    // lane threads are on by default; `.lane_threads(false)` is the
+    // sequential escape hatch. Pre-drawn epoch plans + the lane-ordered
+    // baton make the two produce the same bits on every reported metric
+    // (loss/acc/bytes/hits/makespan). workers=1 keeps each lane's queue
+    // drain order deterministic.
+    for method in METHODS {
+        for shards in [2usize, 4] {
+            let spec = with_param(method, &format!("shards={shards}"));
+            let Some(parallel) = run_metrics(tiny_session(&spec)) else { return };
+            let sequential = run_metrics(tiny_session(&spec).lane_threads(false)).unwrap();
+            assert_eq!(
+                parallel, sequential,
+                "{spec}: parallel lanes diverged from lane_threads(false)"
+            );
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------

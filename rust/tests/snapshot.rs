@@ -16,7 +16,11 @@
 //!    a checkpoint is cut *after* ingestion but *before* the next epoch's
 //!    merge, so a crash in that window resumes with the pending overlay
 //!    and the churn RNG cursor intact — resume == uninterrupted stays
-//!    bit-identical, at epoch-start and mid-epoch crash points.
+//!    bit-identical, at epoch-start and mid-epoch crash points;
+//! 6. **parallel lanes**: a mid-epoch crash under `shards=2` lane
+//!    threads (docs/SHARDING.md §Threading model) resumes bit-identical
+//!    too — the fault counts batches in baton order, so the crash point
+//!    is deterministic even with lanes on OS threads.
 //!
 //! All artifact-gated (skip when `make artifacts` has not run). Identity
 //! requires workers=1: the sampling queue's drain order is
@@ -288,6 +292,29 @@ fn mid_epoch_crash_under_churn_replays_the_merge_bit_identical() {
 
     let resumed = run_metrics(tiny_session(&with_param(&method, &ckpt))).unwrap();
     assert_eq!(resumed, base, "mid-epoch churned resume diverged from uninterrupted");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 6. parallel shard lanes: mid-epoch crash under lane threads
+
+#[test]
+fn mid_epoch_crash_under_parallel_lanes_resumes_bit_identical() {
+    // shards=2 runs its lanes on OS threads by default (docs/SHARDING.md
+    // §Threading model); the injected fault counts batches in baton
+    // order, so the crash point — and everything after resume — stays
+    // deterministic
+    let method = with_param(METHODS[3], "shards=2");
+    let Some(base) = run_metrics(tiny_session(&method)) else { return };
+
+    let dir = ckpt_dir("parallel-mid");
+    let ckpt = format!("ckpt=every=1:dir={}", dir.display());
+    let crashed = with_param(&with_param(&method, &ckpt), "faults=crash@epoch=1:batch=2");
+    let err = run_to_crash(tiny_session(&crashed)).unwrap();
+    assert!(err.contains("batch 2"), "{err}");
+
+    let resumed = run_metrics(tiny_session(&with_param(&method, &ckpt))).unwrap();
+    assert_eq!(resumed, base, "parallel-lane mid-epoch resume diverged from uninterrupted");
     std::fs::remove_dir_all(&dir).ok();
 }
 

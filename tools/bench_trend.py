@@ -40,6 +40,7 @@ HIGHER_KEYS = {
     "local_fraction",
     "overlap_efficiency",
     "batches_per_sec",
+    "lane_parallel_speedup",
     "merge_edges_per_sec",
     "save_mb_per_s",
 }
